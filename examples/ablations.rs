@@ -1,0 +1,129 @@
+//! Design-choice ablations the paper calls out but does not sweep —
+//! DESIGN.md §5.3: γ (the consensus coefficient), the outer-step cadence
+//! m, and the gossip group size n, all on the real LM training stack.
+//!
+//! ```sh
+//! cargo run --release --example ablations -- --out results/ablations [--steps N]
+//! ```
+//!
+//! * **γ sweep** — Eq. 74 predicts a stability window
+//!   `sqrt(n/2(n-1))·α < γ < sqrt(n/2(n-1)·(2+α²))`; outside it the
+//!   ensemble variance grows. Swept across the window on the LM.
+//! * **m sweep** — outer cadence: the paper uses 50 (NoLoCo) vs 100
+//!   (DiLoCo). More frequent gossip → tighter ensemble, more comm.
+//! * **n sweep** — gossip group size (§3.2's general form): larger
+//!   groups interpolate toward DiLoCo's all-reduce.
+
+use noloco::cli::Args;
+use noloco::config::{presets, OuterConfig};
+use noloco::metrics::Table;
+use noloco::runtime::{find_build, Engine};
+use noloco::train::SimTrainer;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let out = args.opt("out").unwrap_or("results/ablations").to_string();
+    let steps = args
+        .opt_usize("steps")
+        .map_err(anyhow::Error::msg)?
+        .unwrap_or(120);
+    std::fs::create_dir_all(&out)?;
+
+    let mut base = presets::preset("tiny").expect("preset");
+    base.steps = steps;
+    base.warmup = steps / 8;
+    base.eval_every = 0;
+    base.outer.inner_steps = 10;
+    base.topology.dp = 4;
+    base.topology.pp = 2;
+    // dp=4 needs 4 x mb=2 seqs per step.
+    base.model.batch_tokens = 4 * 2 * base.model.seq_len;
+
+    let dir = find_build(&base.artifacts_dir, &base.model.name, 2)?;
+    let mut eng = Engine::new(dir)?;
+
+    // ---- γ sweep (within the Eq. 74 window; the out-of-window failure
+    // mode is demonstrated on the quadratic harness, where the config
+    // validator does not apply — see examples/quadratic_convergence.rs) ----
+    let (lo, hi) = OuterConfig::gamma_window(base.outer.alpha, 2);
+    println!("## γ sweep (window: {lo:.3} .. {hi:.3})\n");
+    let mut t = Table::new(&["γ", "val ppl", "final weight σ"]);
+    let mut csv = String::from("gamma,ppl,sigma\n");
+    for &g in &[lo * 1.02, lo + 0.25 * (hi - lo), 0.5 * (lo + hi), hi * 0.98] {
+        let mut cfg = base.clone();
+        cfg.outer.gamma = g;
+        let mut trainer = SimTrainer::new(cfg, &mut eng)?;
+        let report = trainer.run()?;
+        let sigma = trainer.weight_std();
+        println!("γ={g:.3}: ppl {:.2}, σ {:.5}", report.final_val_ppl, sigma);
+        t.row(&[
+            format!("{g:.3}"),
+            format!("{:.2}", report.final_val_ppl),
+            format!("{sigma:.5}"),
+        ]);
+        csv.push_str(&format!("{g:.4},{:.4},{sigma:.6}\n", report.final_val_ppl));
+    }
+    std::fs::write(format!("{out}/gamma_sweep.md"), t.to_markdown())?;
+    std::fs::write(format!("{out}/gamma_sweep.csv"), csv)?;
+
+    // ---- m (outer cadence) sweep ----
+    println!("\n## outer-cadence sweep (m = inner steps per outer step)\n");
+    let mut t = Table::new(&["m", "val ppl", "final weight σ", "gossip pairs"]);
+    let mut csv = String::from("m,ppl,sigma,pairs\n");
+    for &m in &[5usize, 10, 20, 40] {
+        let mut cfg = base.clone();
+        cfg.outer.inner_steps = m;
+        let mut trainer = SimTrainer::new(cfg, &mut eng)?;
+        let report = trainer.run()?;
+        let sigma = trainer.weight_std();
+        println!(
+            "m={m}: ppl {:.2}, σ {:.5}, pairs {}",
+            report.final_val_ppl, sigma, report.comm.pair_exchanges
+        );
+        t.row(&[
+            m.to_string(),
+            format!("{:.2}", report.final_val_ppl),
+            format!("{sigma:.5}"),
+            report.comm.pair_exchanges.to_string(),
+        ]);
+        csv.push_str(&format!(
+            "{m},{:.4},{sigma:.6},{}\n",
+            report.final_val_ppl, report.comm.pair_exchanges
+        ));
+    }
+    std::fs::write(format!("{out}/cadence_sweep.md"), t.to_markdown())?;
+    std::fs::write(format!("{out}/cadence_sweep.csv"), csv)?;
+
+    // ---- n (group size) sweep ----
+    println!("\n## gossip group-size sweep (n = 4 ≙ whole row = DiLoCo-like)\n");
+    let mut t = Table::new(&["n", "val ppl", "final weight σ", "floats/outer-step"]);
+    let mut csv = String::from("n,ppl,sigma,floats\n");
+    for &n in &[2usize, 4] {
+        let mut cfg = base.clone();
+        cfg.outer.group = n;
+        cfg.outer.gamma = OuterConfig::default_gamma(cfg.outer.alpha, n);
+        let mut trainer = SimTrainer::new(cfg, &mut eng)?;
+        let report = trainer.run()?;
+        let sigma = trainer.weight_std();
+        // Total payload per outer step (activations included; the sync
+        // share scales as n(n-1) within each group).
+        let outer_steps = (steps / base.outer.inner_steps) as u64;
+        let floats = report.comm.floats_sent / outer_steps.max(1);
+        println!(
+            "n={n}: ppl {:.2}, σ {:.5}, pairs {}",
+            report.final_val_ppl, sigma, report.comm.pair_exchanges
+        );
+        t.row(&[
+            n.to_string(),
+            format!("{:.2}", report.final_val_ppl),
+            format!("{sigma:.5}"),
+            floats.to_string(),
+        ]);
+        csv.push_str(&format!("{n},{:.4},{sigma:.6},{floats}\n", report.final_val_ppl));
+    }
+    std::fs::write(format!("{out}/group_sweep.md"), t.to_markdown())?;
+    std::fs::write(format!("{out}/group_sweep.csv"), csv)?;
+
+    println!("\nwritten to {out}/");
+    Ok(())
+}

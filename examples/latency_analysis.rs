@@ -1,0 +1,172 @@
+//! Fig. 5 driver — the paper's §5.3 latency analysis.
+//!
+//! * **Fig. 5A**: expected tree-all-reduce time over expected local
+//!   (pair) averaging time as a function of world size `n` and message
+//!   latency spread σ (log-normal). Both the analytic forms (Eq. 5: tree ≈
+//!   2·t_c·log2 n; Eq. 7: E(max of 2 iid log-normals)) and the
+//!   discrete-event simulation ([`SimClock`]) are reported — the sim
+//!   validates the closed forms.
+//! * **Fig. 5B**: ratio of *total training time* DiLoCo / NoLoCo from the
+//!   global-blocking effect alone (communication itself excluded, as in
+//!   the paper): DiLoCo's outer step barriers all n workers; NoLoCo's
+//!   gossip only barriers pairs. Inner-step latency ~ LogNormal(μ=1,
+//!   σ²=0.5), the paper's setting.
+//!
+//! ```sh
+//! cargo run --release --example latency_analysis -- --out results/fig5
+//! ```
+
+use noloco::cli::Args;
+use noloco::collective::{pair_average_time, tree_all_reduce_time};
+use noloco::metrics::Table;
+use noloco::net::{erf, LatencyModel, SimClock};
+use noloco::rngx::Pcg64;
+
+/// Analytic Eq. 7: E(max(t1,t2)) for iid LogNormal(mu, sigma^2).
+fn expected_max2(mu: f64, sigma: f64) -> f64 {
+    (1.0 + erf(sigma / 2.0)) * (mu + sigma * sigma / 2.0).exp()
+}
+
+fn fig5a(out: &str) -> anyhow::Result<()> {
+    let mut table = Table::new(&[
+        "n", "σ", "tree (sim)", "pair (sim)", "ratio (sim)", "ratio (analytic)",
+    ]);
+    let mut csv = String::from("n,sigma,ratio_sim,ratio_analytic\n");
+    let trials = 200;
+    for &sigma in &[0.125f64, 0.5, 1.0] {
+        for &n in &[4usize, 8, 16, 32, 64, 128, 256, 512, 1024] {
+            let model = LatencyModel::LogNormal { mu: 0.0, sigma };
+            let (mut tree, mut pair) = (0.0, 0.0);
+            let reps = if n > 256 { trials / 4 } else { trials };
+            for seed in 0..reps {
+                let mut clock = SimClock::new(n, model.clone(), seed as u64);
+                tree += tree_all_reduce_time(&mut clock);
+                let mut clock = SimClock::new(n, model.clone(), 10_000 + seed as u64);
+                pair += pair_average_time(&mut clock, None);
+            }
+            let (tree, pair) = (tree / reps as f64, pair / reps as f64);
+            let ratio_sim = tree / pair;
+            // Analytic: tree ≈ 2·log2(n) generations each costing
+            // E(max over contending children) ~ Eq. 7's pairwise max;
+            // local averaging = 2·E(t_local) (§5.3).
+            let t_c = (0.0f64 + sigma * sigma / 2.0).exp();
+            let tree_analytic = 2.0 * (n as f64).log2() * expected_max2(0.0, sigma) / 2.0
+                + t_c * (n as f64).log2();
+            let pair_analytic = 2.0 * expected_max2(0.0, sigma) / 2.0 + t_c;
+            let ratio_analytic = tree_analytic / pair_analytic;
+            table.row(&[
+                n.to_string(),
+                format!("{sigma}"),
+                format!("{tree:.2}"),
+                format!("{pair:.2}"),
+                format!("{ratio_sim:.2}"),
+                format!("{ratio_analytic:.2}"),
+            ]);
+            csv.push_str(&format!("{n},{sigma},{ratio_sim:.3},{ratio_analytic:.3}\n"));
+        }
+    }
+    let md = table.to_markdown();
+    println!("## Fig. 5A — tree-reduce vs local-averaging expected time\n\n{md}");
+    std::fs::write(format!("{out}/fig5a.md"), &md)?;
+    std::fs::write(format!("{out}/fig5a.csv"), csv)?;
+    Ok(())
+}
+
+/// Fig. 5B: makespan of `outer_rounds` outer steps where each inner phase
+/// costs the sum of `m` LogNormal(mu, sigma) draws, under the two blocking
+/// disciplines. Communication time itself excluded.
+fn blocking_ratio(
+    n: usize,
+    m: usize,
+    outer_rounds: usize,
+    mu: f64,
+    sigma: f64,
+    seed: u64,
+) -> f64 {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    // DiLoCo: a global barrier per outer round — the makespan is
+    // sum over rounds of max_i(inner phase time).
+    let mut diloco = 0.0f64;
+    // NoLoCo: pairwise barriers — per-worker clocks, paired each round.
+    let mut clocks = vec![0.0f64; n];
+    for _round in 0..outer_rounds {
+        let mut round_max = 0.0f64;
+        let phases: Vec<f64> = (0..n)
+            .map(|_| (0..m).map(|_| rng.log_normal(mu, sigma)).sum::<f64>())
+            .collect();
+        for &p in &phases {
+            round_max = round_max.max(p);
+        }
+        diloco += round_max;
+        let pairs = rng.random_pairs(n);
+        for (a, b) in pairs {
+            match b {
+                Some(b) => {
+                    let t = (clocks[a] + phases[a]).max(clocks[b] + phases[b]);
+                    clocks[a] = t;
+                    clocks[b] = t;
+                }
+                None => clocks[a] += phases[a],
+            }
+        }
+    }
+    let noloco = clocks.iter().fold(0.0f64, |acc, &t| acc.max(t));
+    diloco / noloco
+}
+
+fn fig5b(out: &str) -> anyhow::Result<()> {
+    // Paper setting: inner-step latency LogNormal(mu=1, sigma^2=0.5);
+    // NoLoCo at 2x outer frequency (50 vs 100 inner steps) — we sweep m.
+    let (mu, sigma2) = (1.0f64, 0.5f64);
+    let sigma = sigma2.sqrt();
+    let rounds = 250;
+    let mut table = Table::new(&["n", "m=25", "m=50", "m=100"]);
+    let mut csv = String::from("n,m,ratio\n");
+    for &n in &[16usize, 64, 256, 1024] {
+        let mut cells = vec![n.to_string()];
+        for &m in &[25usize, 50, 100] {
+            // Average a few seeds for stability.
+            let reps = 5;
+            let r: f64 = (0..reps)
+                .map(|s| blocking_ratio(n, m, rounds, mu, sigma, 100 + s))
+                .sum::<f64>()
+                / reps as f64;
+            cells.push(format!("{r:.3}"));
+            csv.push_str(&format!("{n},{m},{r:.4}\n"));
+        }
+        table.row(&cells);
+    }
+    let md = table.to_markdown();
+    println!("\n## Fig. 5B — total-time ratio DiLoCo / NoLoCo (blocking only)\n\n{md}");
+    println!(
+        "paper: ratio grows with world size; ~1.2 at n=1024, m=100. \
+         More frequent outer steps (smaller m) increase the overhead."
+    );
+    std::fs::write(format!("{out}/fig5b.md"), &md)?;
+    std::fs::write(format!("{out}/fig5b.csv"), csv)?;
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let out = args.opt("out").unwrap_or("results/fig5").to_string();
+    std::fs::create_dir_all(&out)?;
+
+    // Eq. 7 self-check: closed form vs Monte Carlo.
+    let (mu, sigma) = (0.0, 0.7);
+    let mut rng = Pcg64::seed_from_u64(1);
+    let mc: f64 = (0..200_000)
+        .map(|_| rng.log_normal(mu, sigma).max(rng.log_normal(mu, sigma)))
+        .sum::<f64>()
+        / 200_000.0;
+    let analytic = expected_max2(mu, sigma);
+    println!(
+        "Eq. 7 check: E(max of two LogNormal({mu},{sigma}²)) analytic {analytic:.4} vs MC {mc:.4}\n"
+    );
+    assert!((analytic - mc).abs() / analytic < 0.02);
+
+    fig5a(&out)?;
+    fig5b(&out)?;
+    println!("\nwritten to {out}/fig5a.* and {out}/fig5b.*");
+    Ok(())
+}

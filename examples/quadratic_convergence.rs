@@ -1,0 +1,121 @@
+//! Theorem 1 driver — convergence of the modified Nesterov outer
+//! optimizer on the stochastic quadratic loss (App. A setup):
+//! `L(θ) = ½(θ−c)ᵀA(θ−c)`, `c ~ N(0, Σ)`.
+//!
+//! Regenerates the three theoretical claims:
+//!
+//! 1. `E(φ_t) → 0` as outer steps grow (Theorem 2);
+//! 2. `V(φ_t) ∝ ω²` — replica variance at convergence scales with the
+//!    *square* of the inner learning rate (Theorem 3), the property that
+//!    makes LR schedules an eventual-consistency knob (§5.1, Fig. 3B);
+//! 3. the γ stability window of Eq. 74.
+//!
+//! ```sh
+//! cargo run --release --example quadratic_convergence -- --out results/thm1
+//! ```
+
+use noloco::cli::Args;
+use noloco::config::{Method, OuterConfig};
+use noloco::metrics::Table;
+use noloco::quad::{run_noloco, QuadSim, Quadratic};
+use noloco::rngx::Pcg64;
+
+fn sim(omega: f64, gamma: f64, replicas: usize, outer_steps: usize) -> QuadSim {
+    QuadSim {
+        replicas,
+        inner_steps: 10,
+        outer_steps,
+        omega,
+        outer: OuterConfig {
+            method: Method::NoLoCo,
+            alpha: 0.5,
+            beta: 0.7,
+            gamma,
+            group: 2,
+            inner_steps: 10,
+        },
+        init_scale: 2.0,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let out = args.opt("out").unwrap_or("results/thm1").to_string();
+    std::fs::create_dir_all(&out)?;
+
+    let mut rng = Pcg64::seed_from_u64(42);
+    let problem = Quadratic::new(10, 0.2, 1.0, 0.5, &mut rng);
+    let gamma = OuterConfig::default_gamma(0.5, 2);
+
+    // ---- Claim 1: E(phi) -> 0 ----
+    println!("## Theorem 2 — E(φ_t) → 0\n");
+    let res = run_noloco(&problem, &sim(0.05, gamma, 16, 300), 7);
+    let mut csv = String::from("outer_step,mean_norm,replica_var\n");
+    for (i, (mn, rv)) in res.mean_norm.iter().zip(&res.replica_var).enumerate() {
+        csv.push_str(&format!("{i},{mn:.6e},{rv:.6e}\n"));
+    }
+    std::fs::write(format!("{out}/trajectory.csv"), csv)?;
+    for &t in &[0usize, 10, 50, 100, 200, 299] {
+        println!("  t={t:>4}  ‖E(φ)‖ = {:.4e}  V(φ) = {:.4e}", res.mean_norm[t], res.replica_var[t]);
+    }
+    // With a *stochastic* loss and finitely many replicas, ‖mean φ‖
+    // floors at the sampling noise ~ sqrt(V/N) rather than exactly 0;
+    // measure the decay from the initial distance.
+    let decay = res.mean_norm[299] / res.mean_norm[0];
+    let noise_floor =
+        (res.replica_var[299] * problem.dim as f64 / 16.0).sqrt();
+    println!(
+        "  decay from init: {decay:.2e} (must be << 1); final ‖E(φ)‖ {:.3e} vs sampling floor {:.3e}",
+        res.mean_norm[299], noise_floor
+    );
+    assert!(decay < 0.02);
+    assert!(res.mean_norm[299] < 6.0 * noise_floor);
+
+    // ---- Claim 2: V(phi) ∝ ω² ----
+    println!("\n## Theorem 3 — V(φ) ∝ ω²\n");
+    let mut table = Table::new(&["ω", "V(φ) tail mean", "V/ω²"]);
+    let mut csv = String::from("omega,variance,v_over_omega_sq\n");
+    for &omega in &[0.02f64, 0.04, 0.08, 0.16] {
+        let res = run_noloco(&problem, &sim(omega, gamma, 16, 400), 11);
+        let tail = &res.replica_var[320..];
+        let v = tail.iter().sum::<f64>() / tail.len() as f64;
+        table.row(&[
+            format!("{omega}"),
+            format!("{v:.4e}"),
+            format!("{:.4}", v / (omega * omega)),
+        ]);
+        csv.push_str(&format!("{omega},{v:.6e},{:.4}\n", v / (omega * omega)));
+    }
+    println!("{}", table.to_markdown());
+    println!("(V/ω² roughly constant across a 8x ω range ⇒ V ∝ ω².)");
+    std::fs::write(format!("{out}/variance_scaling.csv"), csv)?;
+
+    // ---- Claim 3: the Eq. 74 γ window ----
+    println!("\n## Eq. 74 — γ stability window (α=0.5, n=2: 0.5 < γ < 1.5)\n");
+    let (lo, hi) = OuterConfig::gamma_window(0.5, 2);
+    let mut table = Table::new(&["γ", "position", "final V(φ)", "final loss"]);
+    let mut csv = String::from("gamma,variance,loss\n");
+    for &(g, pos) in &[
+        (lo * 0.1, "far below"),
+        (lo * 0.9, "just below"),
+        (0.5 * (lo + hi), "inside"),
+        (hi * 0.98, "near top"),
+    ] {
+        let res = run_noloco(&problem, &sim(0.08, g, 16, 250), 3);
+        let tail = &res.replica_var[200..];
+        let v = tail.iter().sum::<f64>() / tail.len() as f64;
+        table.row(&[
+            format!("{g:.3}"),
+            pos.to_string(),
+            format!("{v:.4e}"),
+            format!("{:.4e}", res.final_loss),
+        ]);
+        csv.push_str(&format!("{g:.4},{v:.6e},{:.6e}\n", res.final_loss));
+    }
+    println!("{}", table.to_markdown());
+    println!("(γ below the window loses the consensus contraction → larger ensemble variance.)");
+    std::fs::write(format!("{out}/gamma_window.csv"), csv)?;
+
+    println!("\nwritten to {out}/");
+    Ok(())
+}

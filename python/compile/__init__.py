@@ -1,0 +1,6 @@
+"""Build-time compile path: Layer-2 JAX model + Layer-1 Pallas kernels.
+
+Nothing in this package runs at training time — ``aot.py`` lowers the
+jitted stage functions to HLO text once (``make artifacts``), and the Rust
+coordinator executes the compiled artifacts through PJRT.
+"""

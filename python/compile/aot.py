@@ -1,0 +1,327 @@
+"""AOT lowering: Layer-2 JAX stages -> HLO text artifacts for the Rust runtime.
+
+Every function the Rust coordinator executes at training time is lowered
+here, once, at build time (``make artifacts``). The interchange format is
+**HLO text** (not a serialized ``HloModuleProto``): jax >= 0.5 emits protos
+with 64-bit instruction ids which the pinned xla_extension 0.5.1 rejects;
+the HLO text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifact layout (one directory per build)::
+
+    artifacts/<model>-pp<P>-mb<B>/
+        manifest.toml          # shapes + param counts, parsed by rust/src/config/toml.rs
+        <kind>.<fn>.hlo.txt    # kind in {first, mid, last, full}
+
+Functions per stage kind (all lowered with ``return_tuple=True``; the Rust
+runtime unpacks the tuple):
+
+    init   (seed i32[])                            -> (flat,)
+    fwd    first: (flat, tokens)                   -> (h,)
+           mid:   (flat, x)                        -> (h,)
+           last:  (flat, x)                        -> (logits,)   [not used on hot path]
+    loss   last:  (flat, x, tokens)                -> (loss,)
+           full:  (flat, tokens)                   -> (loss,)
+    bwd    first: (flat, tokens, g_out)            -> (gflat,)
+           mid:   (flat, x, g_out)                 -> (gflat, gx)
+           last:  (flat, x, tokens)                -> (loss, gflat, gx)
+           full:  (flat, tokens)                   -> (loss, gflat)
+    adam   (flat, m, v, g, scalars[6])             -> (flat, m, v)
+    outer_noloco (phi, delta, dsum, psum, s[4])    -> (phi, delta)
+    outer_diloco (phi, delta, dmean, s[4])         -> (phi, delta)
+
+The CPU-scale presets here mirror ``rust/src/config/presets.rs`` exactly;
+``rust/tests/integration.rs`` cross-checks the manifest against the Rust
+presets so the two cannot drift silently.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import outer_update
+
+# CPU-scale presets (mirror of rust/src/config/presets.rs). Paper-scale
+# presets exist on the Rust side for config/latency math but are never
+# lowered here — compiling a 6.8B-parameter stage on a 1-core CPU image is
+# not useful.
+PRESETS = {
+    "tiny": dict(hidden=64, layers=4, intermediate=256, heads=4, vocab=512, seq_len=64),
+    "small": dict(hidden=128, layers=4, intermediate=512, heads=4, vocab=1024, seq_len=128),
+    "e2e": dict(hidden=256, layers=8, intermediate=1024, heads=8, vocab=4096, seq_len=128),
+}
+
+#: Default builds for ``make artifacts``: (preset, pp, microbatch-seqs).
+DEFAULT_BUILDS = [
+    ("tiny", 1, 2),
+    ("tiny", 2, 2),
+    ("small", 2, 4),
+    ("e2e", 2, 4),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to(path, fn, *args):
+    """jit + lower ``fn`` at the given abstract args and write HLO text."""
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def stage_kinds(pp: int):
+    if pp == 1:
+        return ["full"]
+    if pp == 2:
+        return ["first", "last"]
+    return ["first", "mid", "last"]
+
+
+def adam_fn(flat, m, v, g, scalars):
+    return model.adam_update(flat, m, v, g, scalars)
+
+
+def build(preset: str, pp: int, mb: int, out_root: str, use_kernels: bool = True):
+    """Lower every artifact for one (preset, pp, mb) build. Returns dir."""
+    cfg = dict(PRESETS[preset])
+    assert cfg["layers"] % pp == 0, (preset, pp)
+    cfg["layers_per_stage"] = cfg["layers"] // pp
+
+    name = f"{preset}-pp{pp}-mb{mb}"
+    out_dir = os.path.join(out_root, name)
+    os.makedirs(out_dir, exist_ok=True)
+
+    s, h, v = cfg["seq_len"], cfg["hidden"], cfg["vocab"]
+    tok = spec((mb, s), jnp.int32)
+    hid = spec((mb, s, h))
+    kinds = stage_kinds(pp)
+    counts = {}
+    total_bytes = 0
+
+    for kind in kinds:
+        n_params = model.stage_param_count(cfg, kind)
+        counts[kind] = n_params
+        flat = spec((n_params,))
+        p = os.path.join(out_dir, kind)
+
+        # --- init ---
+        total_bytes += lower_to(
+            f"{p}.init.hlo.txt",
+            lambda seed, kind=kind: (model.init_stage_traced(cfg, kind, seed),),
+            spec((), jnp.int32),
+        )
+
+        # --- forward / loss / backward ---
+        if kind == "first":
+            total_bytes += lower_to(
+                f"{p}.fwd.hlo.txt",
+                lambda fl, t: (model.stage_fwd(cfg, "first", fl, t, use_kernels),),
+                flat, tok,
+            )
+            total_bytes += lower_to(
+                f"{p}.bwd.hlo.txt",
+                lambda fl, t, g: (model.stage_bwd_first(cfg, fl, t, g, use_kernels),),
+                flat, tok, hid,
+            )
+        elif kind == "mid":
+            total_bytes += lower_to(
+                f"{p}.fwd.hlo.txt",
+                lambda fl, x: (model.stage_fwd(cfg, "mid", fl, x, use_kernels),),
+                flat, hid,
+            )
+            total_bytes += lower_to(
+                f"{p}.bwd.hlo.txt",
+                lambda fl, x, g: model.stage_bwd_mid(cfg, fl, x, g, use_kernels),
+                flat, hid, hid,
+            )
+        elif kind == "last":
+            total_bytes += lower_to(
+                f"{p}.loss.hlo.txt",
+                lambda fl, x, t: (model.stage_loss(cfg, "last", fl, x, t, use_kernels),),
+                flat, hid, tok,
+            )
+            total_bytes += lower_to(
+                f"{p}.bwd.hlo.txt",
+                lambda fl, x, t: model.stage_bwd_last(cfg, fl, x, t, use_kernels),
+                flat, hid, tok,
+            )
+        else:  # full
+            total_bytes += lower_to(
+                f"{p}.loss.hlo.txt",
+                lambda fl, t: (model.stage_loss(cfg, "full", fl, t, t, use_kernels),),
+                flat, tok,
+            )
+            total_bytes += lower_to(
+                f"{p}.bwd.hlo.txt",
+                lambda fl, t: model.stage_bwd_full(cfg, fl, t, use_kernels),
+                flat, tok,
+            )
+
+        # --- optimizer updates on this stage's flat vector ---
+        total_bytes += lower_to(
+            f"{p}.adam.hlo.txt", adam_fn, flat, flat, flat, flat, spec((6,))
+        )
+        total_bytes += lower_to(
+            f"{p}.outer_noloco.hlo.txt",
+            lambda phi, d, ds, ps, sc: outer_update.noloco_outer(phi, d, ds, ps, sc),
+            flat, flat, flat, flat, spec((4,)),
+        )
+        total_bytes += lower_to(
+            f"{p}.outer_diloco.hlo.txt",
+            lambda phi, d, dm, sc: outer_update.diloco_outer(phi, d, dm, sc),
+            flat, flat, flat, spec((4,)),
+        )
+
+    write_manifest(out_dir, preset, cfg, pp, mb, counts)
+    write_golden(out_dir, cfg, pp, mb)
+    return out_dir, total_bytes
+
+
+def _stat_lines(prefix, arr):
+    a = jnp.asarray(arr, jnp.float32).ravel()
+    return [
+        f"{prefix}_mean = {float(a.mean()):.9e}",
+        f"{prefix}_std = {float(a.std()):.9e}",
+        f"{prefix}_first = {float(a[0]):.9e}",
+        f"{prefix}_last = {float(a[-1]):.9e}",
+    ]
+
+
+def write_golden(out_dir, cfg, pp, mb):
+    """Golden values for the Rust runtime's cross-language test.
+
+    The Rust side (rust/tests/runtime_e2e.rs) executes the same artifact
+    chain through PJRT with the same deterministic inputs and asserts these
+    statistics match — catching interchange bugs (argument order, layout,
+    tuple unpacking) that same-language tests cannot see.
+    """
+    s, v = cfg["seq_len"], cfg["vocab"]
+    tokens = (jnp.arange(mb * s, dtype=jnp.int32) * 7919 + 13) % v
+    tokens = tokens.reshape(mb, s)
+
+    kinds = stage_kinds(pp)
+    lines = [f"# golden values, deterministic tokens = (i*7919+13) % vocab"]
+    if pp == 1:
+        flat = model.init_stage(cfg, "full", 42)
+        lines += _stat_lines("full_init", flat)
+        loss, gflat = model.stage_bwd_full(cfg, flat, tokens)
+        lines.append(f"loss = {float(loss):.9e}")
+        lines += _stat_lines("full_grad", gflat)
+        tail = (flat, gflat)
+    else:
+        first = model.init_stage(cfg, "first", 42)
+        last = model.init_stage(cfg, "last", 43)
+        lines += _stat_lines("first_init", first)
+        lines += _stat_lines("last_init", last)
+        h = model.stage_fwd(cfg, "first", first, tokens)
+        if "mid" in kinds:
+            mid = model.init_stage(cfg, "mid", 44)
+            lines += _stat_lines("mid_init", mid)
+            h = model.stage_fwd(cfg, "mid", mid, h)
+        lines += _stat_lines("hidden", h)
+        loss, glast, gx = model.stage_bwd_last(cfg, last, h, tokens)
+        lines.append(f"loss = {float(loss):.9e}")
+        lines += _stat_lines("last_grad", glast)
+        lines += _stat_lines("gx", gx)
+        tail = (first, None)
+
+    # Optimizer artifacts on the first-listed stage's vector.
+    flat = tail[0]
+    g = 0.01 * flat + 0.005
+    m = jnp.zeros_like(flat)
+    vv = jnp.zeros_like(flat)
+    scalars = jnp.array([1e-3, 1.0, 0.9, 0.999, 1e-8, 1.0], jnp.float32)
+    f2, m2, v2 = model.adam_update(flat, m, vv, g, scalars)
+    lines += _stat_lines("adam_flat", f2)
+    lines += _stat_lines("adam_m", m2)
+
+    phi = flat
+    delta = 0.001 * flat
+    dsum = 0.02 * flat + 0.01
+    psum = 2.0 * flat + 0.1
+    osc = jnp.array([0.5, 0.7, 0.9, 0.5], jnp.float32)
+    phi2, delta2 = outer_update.noloco_outer(phi, delta, dsum, psum, osc)
+    lines += _stat_lines("outer_phi", phi2)
+    lines += _stat_lines("outer_delta", delta2)
+
+    with open(os.path.join(out_dir, "golden.toml"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def write_manifest(out_dir, preset, cfg, pp, mb, counts):
+    """Manifest in the TOML subset rust/src/config/toml.rs parses."""
+    lines = [
+        "# generated by python/compile/aot.py — do not edit",
+        "[build]",
+        f'model = "{preset}"',
+        f"pp = {pp}",
+        f"mb = {mb}",
+        "[model]",
+        f"hidden = {cfg['hidden']}",
+        f"layers = {cfg['layers']}",
+        f"layers_per_stage = {cfg['layers_per_stage']}",
+        f"intermediate = {cfg['intermediate']}",
+        f"heads = {cfg['heads']}",
+        f"vocab = {cfg['vocab']}",
+        f"seq_len = {cfg['seq_len']}",
+        "[params]",
+    ]
+    for kind, n in counts.items():
+        lines.append(f"{kind} = {n}")
+    with open(os.path.join(out_dir, "manifest.toml"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def parse_build(s: str):
+    """``preset:pp:mb`` -> tuple."""
+    preset, pp, mb = s.split(":")
+    return preset, int(pp), int(mb)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact root")
+    ap.add_argument(
+        "--build",
+        action="append",
+        default=None,
+        metavar="PRESET:PP:MB",
+        help="build spec (repeatable); default: the standard set",
+    )
+    ap.add_argument(
+        "--no-kernels",
+        action="store_true",
+        help="lower with the pure-jnp reference instead of Pallas kernels "
+        "(debugging aid; artifacts are numerically equivalent)",
+    )
+    args = ap.parse_args(argv)
+    builds = [parse_build(b) for b in args.build] if args.build else DEFAULT_BUILDS
+    for preset, pp, mb in builds:
+        out_dir, nbytes = build(
+            preset, pp, mb, args.out_dir, use_kernels=not args.no_kernels
+        )
+        print(f"built {out_dir} ({nbytes / 1e6:.1f} MB of HLO text)", flush=True)
+    # Stamp for the Makefile staleness check.
+    with open(os.path.join(args.out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels.
+
+Two kernels back the paper's compute hot-spots:
+
+* :mod:`.attention` — fused causal attention with online softmax
+  (flash-attention style; §4 of the paper trains with flash-attention).
+* :mod:`.outer_update` — the fused NoLoCo modified-Nesterov outer step
+  (Eq. 2-3), one elementwise pass producing (phi', delta').
+
+Both run under ``interpret=True`` (the CPU PJRT plugin cannot execute
+Mosaic custom-calls); kernel *structure* is TPU-shaped — BlockSpec tiling
+expresses the HBM->VMEM schedule. Correctness oracles live in
+:mod:`.ref`.
+"""
+
+from . import attention, outer_update, ref  # noqa: F401

@@ -1,0 +1,144 @@
+"""Fused causal attention as a Pallas kernel (flash-attention style).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the CUDA
+flash-attention the paper trains with keeps K/V tiles in shared memory and
+iterates query blocks per threadblock. The TPU rethink here:
+
+* the grid is ``(batch*heads, q_tiles)`` — each grid step owns one query
+  tile resident in VMEM (BlockSpec), the role CUDA gives a threadblock;
+* the KV sequence is walked in VMEM-sized tiles with an online-softmax
+  carry (running max ``m``, normalizer ``l``, accumulator ``acc``) — warp
+  registers in the CUDA version, kernel-local values here;
+* both matmuls (``q k^T`` and ``p v``) are expressed so the MXU sees
+  ``[bq, d] x [d, bk]`` / ``[bq, bk] x [bk, d]`` contractions with f32
+  accumulation (``preferred_element_type``).
+
+``interpret=True`` everywhere: CPU PJRT cannot run Mosaic custom-calls, so
+the kernel lowers to plain HLO and the same artifact runs under the Rust
+PJRT client. VMEM footprint per grid step is
+``bq*d + 2*bk*d + bq*bk + 3*bq`` floats — reported by
+:func:`vmem_floats` and tracked in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Default query-tile length.
+DEFAULT_BQ = 32
+#: Default key/value-tile length.
+DEFAULT_BK = 32
+
+#: Large-negative logit for masked positions (safer than -inf inside the
+#: online-softmax recurrence: keeps `m` finite on fully-masked tiles).
+NEG_INF = -1e30
+
+
+def vmem_floats(bq: int, bk: int, d: int) -> int:
+    """Floats resident in VMEM per grid step (tiles + carries)."""
+    return bq * d + 2 * bk * d + bq * bk + 3 * bq
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, bk, seq_len, q_tile):
+    """One grid step: query tile `q_tile` attends over all causal KV tiles."""
+    qi = pl.program_id(1)
+    q = q_ref[...] * scale  # [bq, d]
+    bq = q.shape[0]
+    d = q.shape[1]
+
+    q_start = qi * q_tile
+    # Causality: KV tiles strictly after this query tile never contribute.
+    num_k = (q_start + bq + bk - 1) // bk
+
+    def body(ki, carry):
+        acc, m, l = carry
+        k = pl.load(k_ref, (pl.ds(ki * bk, bk), slice(None)))  # [bk, d]
+        v = pl.load(v_ref, (pl.ds(ki * bk, bk), slice(None)))  # [bk, d]
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [bq, bk]
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        logits = jnp.where(k_pos <= q_pos, logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=1))  # [bq]
+        p = jnp.exp(logits - m_new[:, None])  # [bq, bk]
+        corr = jnp.exp(m - m_new)  # [bq]
+        l_new = l * corr + p.sum(axis=1)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [bq, d]
+        acc_new = acc * corr[:, None] + pv
+        return acc_new, m_new, l_new
+
+    init = (
+        jnp.zeros((bq, d), jnp.float32),
+        jnp.full((bq,), NEG_INF, jnp.float32),
+        jnp.zeros((bq,), jnp.float32),
+    )
+    acc, _, l = jax.lax.fori_loop(0, num_k, body, init)
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+    del seq_len  # shape bookkeeping only
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def causal_attention(q, k, v, bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK):
+    """Causal attention over ``[B, H, S, D]`` via the Pallas kernel.
+
+    ``S`` must be divisible by both tile sizes (the model picks tiles that
+    divide its sequence length).
+
+    Differentiation: the forward is the fused Pallas kernel; the backward
+    recomputes attention through the pure-jnp reference under ``jax.vjp``
+    (flash-attention-style recompute — no probability matrix is saved
+    between passes). On real TPUs the backward would be a second Pallas
+    kernel (dq/dk/dv tiles); under interpret-mode CPU lowering both paths
+    emit plain HLO, so the XLA-fused reference backward is the faithful
+    stand-in. See DESIGN.md §Hardware-Adaptation.
+    """
+    b, h, s, d = q.shape
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    scale = 1.0 / (d**0.5)
+
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+
+    grid = (b * h, s // bq)
+    out = pl.pallas_call(
+        functools.partial(
+            _attn_kernel, scale=scale, bk=bk, seq_len=s, q_tile=bq
+        ),
+        grid=grid,
+        in_specs=[
+            # Query tile: one [bq, d] block per grid step.
+            pl.BlockSpec((None, bq, d), lambda bh, qi: (bh, qi, 0)),
+            # Full K/V for the current head stay resident; the kernel
+            # walks them in bk-tiles (VMEM schedule).
+            pl.BlockSpec((None, s, d), lambda bh, qi: (bh, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda bh, qi: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, d), lambda bh, qi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)
+
+
+def _causal_attention_fwd(q, k, v, bq, bk):
+    return causal_attention(q, k, v, bq, bk), (q, k, v)
+
+
+def _causal_attention_bwd(bq, bk, res, g):
+    del bq, bk
+    q, k, v = res
+    from . import ref  # local import to avoid a cycle at module load
+
+    _, vjp = jax.vjp(ref.causal_attention, q, k, v)
+    return vjp(g)
+
+
+causal_attention.defvjp(_causal_attention_fwd, _causal_attention_bwd)

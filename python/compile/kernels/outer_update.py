@@ -1,0 +1,109 @@
+"""Fused NoLoCo outer update as a Pallas kernel (Eq. 2-3).
+
+One elementwise pass over the flattened parameter vector computes
+
+```
+delta' = alpha*delta + (beta/n)*sum_j Delta_j - gamma*(phi - (1/n) sum_j phi_j)
+phi'   = phi + delta'
+```
+
+Fusing the five reads and two writes matters because the outer step runs
+over the *entire* replica state (every parameter) and is memory-bound: the
+naive jnp expression materializes three temporaries; this kernel streams
+each VMEM tile exactly once. Scalars (alpha, beta, gamma, 1/n) arrive via
+scalar prefetch so one compiled artifact serves any hyper-parameter
+setting.
+
+TPU shape: grid over 1-D tiles of ``BLOCK`` floats; BlockSpec moves one
+tile of each operand HBM->VMEM per step (double-buffered by the compiler
+on real hardware). ``interpret=True`` for CPU-PJRT execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Tile length in elements (f32). 6 streams (4 in + 2 out) x 256 KiB
+#: tiles = 1.5 MiB of VMEM per grid step — comfortably inside a 16 MiB
+#: budget with room for double-buffering. Perf note (EXPERIMENTS.md
+#: §Perf): under interpret-mode CPU lowering each grid step carries fixed
+#: emulation overhead, so going 4096 -> 65536 cut the tiny-model outer
+#: artifact latency ~5x while keeping multi-tile grids for real stages
+#: (tiny.first = 164k params = 3 tiles). Tests sweep the block-boundary
+#: cases explicitly.
+BLOCK = 65536
+
+
+def _outer_kernel(scalars_ref, phi_ref, delta_ref, dsum_ref, psum_ref,
+                  phi_out_ref, delta_out_ref):
+    """One tile of the fused update. ``scalars = [alpha, beta, gamma, inv_n]``."""
+    alpha = scalars_ref[0]
+    beta = scalars_ref[1]
+    gamma = scalars_ref[2]
+    inv_n = scalars_ref[3]
+    phi = phi_ref[...]
+    delta_new = (
+        alpha * delta_ref[...]
+        + (beta * inv_n) * dsum_ref[...]
+        - gamma * (phi - inv_n * psum_ref[...])
+    )
+    delta_out_ref[...] = delta_new
+    phi_out_ref[...] = phi + delta_new
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def noloco_outer(phi, delta, delta_sum, phi_sum, scalars, block: int = BLOCK):
+    """Fused outer update over flat f32 vectors.
+
+    Args:
+      phi, delta, delta_sum, phi_sum: ``[L]`` f32 — slow weights, momentum,
+        group-sum of outer gradients, group-sum of slow weights.
+      scalars: ``[4]`` f32 — ``[alpha, beta, gamma, 1/n]``.
+      block: tile length.
+
+    Returns:
+      ``(phi_new, delta_new)``, both ``[L]``.
+    """
+    (n,) = phi.shape
+    block = min(block, n)
+    pad = (-n) % block
+    if pad:
+        z = jnp.zeros((pad,), phi.dtype)
+        phi_p = jnp.concatenate([phi, z])
+        delta_p = jnp.concatenate([delta, z])
+        dsum_p = jnp.concatenate([delta_sum, z])
+        psum_p = jnp.concatenate([phi_sum, z])
+    else:
+        phi_p, delta_p, dsum_p, psum_p = phi, delta, delta_sum, phi_sum
+    total = n + pad
+    grid = (total // block,)
+    tile = pl.BlockSpec((block,), lambda i: (i,))
+    phi_new, delta_new = pl.pallas_call(
+        _outer_kernel,
+        grid=grid,
+        in_specs=[
+            # Scalars replicated to every grid step.
+            pl.BlockSpec((4,), lambda i: (0,)),
+            tile, tile, tile, tile,
+        ],
+        out_specs=(tile, tile),
+        out_shape=(
+            jax.ShapeDtypeStruct((total,), phi.dtype),
+            jax.ShapeDtypeStruct((total,), phi.dtype),
+        ),
+        interpret=True,
+    )(scalars, phi_p, delta_p, dsum_p, psum_p)
+    return phi_new[:n], delta_new[:n]
+
+
+@jax.jit
+def diloco_outer(phi, delta, delta_mean, scalars):
+    """DiLoCo Nesterov outer update on flat vectors.
+
+    ``scalars = [alpha, beta]``. Reuses the fused kernel with
+    ``gamma = 0`` and the group mean passed as a size-1 "sum".
+    """
+    four = jnp.stack([scalars[0], scalars[1], jnp.float32(0.0), jnp.float32(1.0)])
+    return noloco_outer(phi, delta, delta_mean, phi, four)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness anchors: ``pytest python/tests`` asserts the
+kernels match these references across shape/dtype sweeps (hypothesis), and
+the Layer-2 model can be flipped onto the references with
+``use_kernels=False`` to isolate kernel bugs from model bugs.
+"""
+
+import jax.numpy as jnp
+
+
+def causal_attention(q, k, v, scale=None):
+    """Reference causal attention.
+
+    Args:
+      q, k, v: ``[B, H, S, D]`` arrays.
+      scale: softmax scale; defaults to ``1/sqrt(D)``.
+
+    Returns:
+      ``[B, H, S, D]`` attention output.
+    """
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    s = q.shape[-2]
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def noloco_outer(phi, delta, delta_sum, phi_sum, alpha, beta, gamma, n):
+    """Reference NoLoCo modified-Nesterov outer update (Eq. 2-3).
+
+    ``delta_sum``/``phi_sum`` are the *sums* over the gossip group
+    (including this replica); ``n`` is the group size. Sign convention per
+    the paper's appendix (see rust/src/optim/outer.rs).
+
+    Returns ``(phi_new, delta_new)``.
+    """
+    delta_new = (
+        alpha * delta
+        + (beta / n) * delta_sum
+        - gamma * (phi - phi_sum / n)
+    )
+    return phi + delta_new, delta_new
+
+
+def diloco_outer(phi, delta, delta_mean, alpha, beta):
+    """Reference DiLoCo Nesterov outer update (n = world, gamma = 0)."""
+    delta_new = alpha * delta + beta * delta_mean
+    return phi + delta_new, delta_new

@@ -1,0 +1,261 @@
+"""Layer-2: staged Llama-style transformer in JAX.
+
+The model is written *stage-first*: the unit of compilation is one
+pipeline stage, because the Rust coordinator owns the pipeline (§3.1
+random routing happens between stage executions, outside XLA). Stage
+kinds:
+
+* ``first`` — token embedding + ``layers_per_stage`` decoder layers
+* ``mid``   — ``layers_per_stage`` decoder layers (reused for every
+  interior stage; all interior stages share one artifact)
+* ``last``  — ``layers_per_stage`` layers + final RMSNorm + LM head +
+  shifted softmax cross-entropy
+* ``full``  — the whole model in one stage (pp = 1 runs)
+
+Every stage function takes the stage's parameters as ONE flat f32 vector
+(the wire/optimizer format of the Rust side) and unflattens with static
+slices — XLA folds these away. Backward passes are recompute-based
+(``jax.vjp`` over the stage forward), so no activation stash crosses the
+Rust<->XLA boundary; this is the deliberate per-stage rematerialization
+noted in DESIGN.md §Perf.
+
+Architecture: RMSNorm -> RoPE causal attention (Layer-1 Pallas kernel) ->
+residual -> RMSNorm -> SwiGLU MLP -> residual. Decoder conventions follow
+Llama; hyper-parameters come from rust/src/config presets (Table 1).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_kernel
+from .kernels import ref as kernels_ref
+
+STAGE_KINDS = ("first", "mid", "last", "full")
+
+
+# ---------------------------------------------------------------------------
+# Parameter bookkeeping (flat vector <-> named tensors)
+# ---------------------------------------------------------------------------
+
+def layer_shapes(cfg):
+    """Ordered (name, shape) for one decoder layer."""
+    h, i = cfg["hidden"], cfg["intermediate"]
+    return [
+        ("attn_norm", (h,)),
+        ("wq", (h, h)),
+        ("wk", (h, h)),
+        ("wv", (h, h)),
+        ("wo", (h, h)),
+        ("mlp_norm", (h,)),
+        ("w_gate", (h, i)),
+        ("w_up", (h, i)),
+        ("w_down", (i, h)),
+    ]
+
+
+def stage_shapes(cfg, kind):
+    """Ordered (name, shape) list for a stage kind."""
+    assert kind in STAGE_KINDS, kind
+    h, v = cfg["hidden"], cfg["vocab"]
+    n_layers = cfg["layers"] if kind == "full" else cfg["layers_per_stage"]
+    shapes = []
+    if kind in ("first", "full"):
+        shapes.append(("embed", (v, h)))
+    for li in range(n_layers):
+        shapes += [(f"l{li}.{n}", s) for n, s in layer_shapes(cfg)]
+    if kind in ("last", "full"):
+        shapes.append(("final_norm", (h,)))
+        shapes.append(("head", (h, v)))
+    return shapes
+
+
+def stage_param_count(cfg, kind):
+    """Total scalar parameter count of a stage."""
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in stage_shapes(cfg, kind))
+
+
+def unflatten(flat, shapes):
+    """Static-slice a flat vector into a {name: array} dict."""
+    out = {}
+    off = 0
+    for name, shape in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        out[name] = flat[off:off + n].reshape(shape)
+        off += n
+    assert off == flat.shape[0], (off, flat.shape)
+    return out
+
+
+def init_stage(cfg, kind, seed):
+    """Initialize a stage's flat parameter vector (GPT-2-style scaled
+    normal init; all replicas share this, matching phi_{0,i} = phi_0)."""
+    return init_stage_traced(cfg, kind, jnp.int32(seed))
+
+
+def init_stage_traced(cfg, kind, seed):
+    """[`init_stage`] with a traced i32 seed — the AOT-lowered form, so
+    parameter initialization also runs through XLA on the Rust side."""
+    key = jax.random.key(seed)
+    parts = []
+    for i, (name, shape) in enumerate(stage_shapes(cfg, kind)):
+        k = jax.random.fold_in(key, i)
+        if name.endswith("norm"):
+            parts.append(jnp.ones(shape, jnp.float32).ravel())
+        else:
+            std = 0.02 if name in ("embed", "head") else (2.0 / (shape[0] + shape[-1])) ** 0.5
+            # Residual-output projections get the depth-scaled init.
+            if name.endswith(("wo", "w_down")):
+                std = std / (2.0 * cfg["layers"]) ** 0.5
+            parts.append((jax.random.normal(k, shape, jnp.float32) * std).ravel())
+    return jnp.concatenate(parts)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps=1e-5):
+    """RMSNorm."""
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x):
+    """Rotary position embedding over ``[B, H, S, D]`` (D even)."""
+    b, h, s, d = x.shape
+    half = d // 2
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    inv = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos * inv  # [S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def decoder_layer(p, x, cfg, use_kernels):
+    """One pre-norm decoder layer. ``x``: [B, S, H]."""
+    bsz, s, h = x.shape
+    nh = cfg["heads"]
+    hd = h // nh
+
+    y = rms_norm(x, p["attn_norm"])
+    q = (y @ p["wq"]).reshape(bsz, s, nh, hd).transpose(0, 2, 1, 3)
+    k = (y @ p["wk"]).reshape(bsz, s, nh, hd).transpose(0, 2, 1, 3)
+    v = (y @ p["wv"]).reshape(bsz, s, nh, hd).transpose(0, 2, 1, 3)
+    q, k = rope(q), rope(k)
+    if use_kernels:
+        o = attn_kernel.causal_attention(q, k, v)
+    else:
+        o = kernels_ref.causal_attention(q, k, v)
+    o = o.transpose(0, 2, 1, 3).reshape(bsz, s, h)
+    x = x + o @ p["wo"]
+
+    y = rms_norm(x, p["mlp_norm"])
+    gate = jax.nn.silu(y @ p["w_gate"])
+    x = x + (gate * (y @ p["w_up"])) @ p["w_down"]
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Stage forwards
+# ---------------------------------------------------------------------------
+
+def stage_fwd(cfg, kind, flat, x, use_kernels=True):
+    """Forward one stage.
+
+    ``first``/``full`` take int32 tokens ``[B, S]``; others take hidden
+    states ``[B, S, H]``. ``last`` and ``full`` return logits ``[B, S, V]``;
+    others return hidden states.
+    """
+    p = unflatten(flat, stage_shapes(cfg, kind))
+    n_layers = cfg["layers"] if kind == "full" else cfg["layers_per_stage"]
+    if kind in ("first", "full"):
+        x = p["embed"][x]
+    for li in range(n_layers):
+        lp = {n.split(".", 1)[1]: p[n] for n in p if n.startswith(f"l{li}.")}
+        x = decoder_layer(lp, x, cfg, use_kernels)
+    if kind in ("last", "full"):
+        x = rms_norm(x, p["final_norm"])
+        x = x @ p["head"]
+    return x
+
+
+def shifted_ce_loss(logits, tokens):
+    """Mean next-token cross-entropy in nats.
+
+    ``logits``: [B, S, V]; ``tokens``: [B, S]. Position t predicts token
+    t+1; the final position has no target.
+    """
+    lg = logits[:, :-1]
+    tg = tokens[:, 1:]
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, tg[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - picked)
+
+
+def stage_loss(cfg, kind, flat, x, tokens, use_kernels=True):
+    """Stage forward + loss (``last`` / ``full`` kinds only)."""
+    logits = stage_fwd(cfg, kind, flat, x, use_kernels)
+    return shifted_ce_loss(logits, tokens)
+
+
+# ---------------------------------------------------------------------------
+# Stage backwards (recompute-based)
+# ---------------------------------------------------------------------------
+
+def stage_bwd_first(cfg, flat, tokens, g_out, use_kernels=True):
+    """Backward the first stage: returns flat param grads."""
+    f = lambda fl: stage_fwd(cfg, "first", fl, tokens, use_kernels)
+    _, vjp = jax.vjp(f, flat)
+    (gflat,) = vjp(g_out)
+    return gflat
+
+
+def stage_bwd_mid(cfg, flat, x_in, g_out, use_kernels=True):
+    """Backward an interior stage: returns (flat param grads, g_in)."""
+    f = lambda fl, x: stage_fwd(cfg, "mid", fl, x, use_kernels)
+    _, vjp = jax.vjp(f, flat, x_in)
+    gflat, gx = vjp(g_out)
+    return gflat, gx
+
+
+def stage_bwd_last(cfg, flat, x_in, tokens, use_kernels=True):
+    """Backward the last stage: returns (loss, flat param grads, g_in)."""
+    f = lambda fl, x: stage_loss(cfg, "last", fl, x, tokens, use_kernels)
+    loss, vjp = jax.vjp(f, flat, x_in)
+    gflat, gx = vjp(jnp.float32(1.0))
+    return loss, gflat, gx
+
+
+def stage_bwd_full(cfg, flat, tokens, use_kernels=True):
+    """Backward the pp=1 full model: returns (loss, flat param grads)."""
+    f = lambda fl: stage_loss(cfg, "full", fl, tokens, tokens, use_kernels)
+    loss, vjp = jax.vjp(f, flat)
+    (gflat,) = vjp(jnp.float32(1.0))
+    return loss, gflat
+
+
+# ---------------------------------------------------------------------------
+# Optimizer updates on flat vectors
+# ---------------------------------------------------------------------------
+
+def adam_update(flat, m, v, g, scalars):
+    """Adam with bias correction on flat vectors.
+
+    ``scalars``: [lr, t, beta1, beta2, eps, clip] — ``t`` the 1-based step
+    as f32; ``clip`` a global-norm threshold applied to ``g`` first
+    (paper: 1.0; pass a huge value to disable).
+    """
+    lr, t, b1, b2, eps, clip = (scalars[i] for i in range(6))
+    norm = jnp.sqrt(jnp.sum(g * g))
+    g = g * jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12))
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * g * g
+    mhat = m_new / (1.0 - b1**t)
+    vhat = v_new / (1.0 - b2**t)
+    flat_new = flat - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return flat_new, m_new, v_new

@@ -1,0 +1,7 @@
+"""Shared pytest config: make `compile` importable and pin JAX to CPU."""
+
+import os
+import sys
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -1,0 +1,209 @@
+"""Layer-1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/tile sizes; every case asserts allclose
+against ``kernels.ref``. These tests are the numerical anchor for the whole
+stack — the AOT artifacts embed exactly these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, outer_update, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused causal attention
+# ---------------------------------------------------------------------------
+
+class TestCausalAttention:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        h=st.integers(1, 4),
+        s_tiles=st.integers(1, 4),
+        d=st.sampled_from([4, 8, 16, 32]),
+        bq=st.sampled_from([8, 16, 32]),
+        bk=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_reference_across_shapes(self, b, h, s_tiles, d, bq, bk, seed):
+        # S is a multiple of both tile sizes (model contract).
+        s = s_tiles * max(bq, bk)
+        key = jax.random.key(seed)
+        kq, kk, kv = jax.random.split(key, 3)
+        q, k, v = rand(kq, (b, h, s, d)), rand(kk, (b, h, s, d)), rand(kv, (b, h, s, d))
+        got = attention.causal_attention(q, k, v, bq, bk)
+        want = ref.causal_attention(q, k, v)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        s=st.sampled_from([32, 64]),
+        d=st.sampled_from([8, 16]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_gradients_match_reference(self, s, d, seed):
+        key = jax.random.key(seed)
+        kq, kk, kv, kg = jax.random.split(key, 4)
+        q, k, v = rand(kq, (1, 2, s, d)), rand(kk, (1, 2, s, d)), rand(kv, (1, 2, s, d))
+        g = rand(kg, (1, 2, s, d))
+
+        def loss_kernel(q, k, v):
+            return jnp.sum(attention.causal_attention(q, k, v) * g)
+
+        def loss_ref(q, k, v):
+            return jnp.sum(ref.causal_attention(q, k, v) * g)
+
+        gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b_ in zip(gk, gr):
+            np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)
+
+    def test_causality_no_future_leakage(self):
+        # Perturbing position t must not change outputs at positions < t.
+        key = jax.random.key(0)
+        kq, kk, kv = jax.random.split(key, 3)
+        s, d = 64, 16
+        q, k, v = rand(kq, (1, 1, s, d)), rand(kk, (1, 1, s, d)), rand(kv, (1, 1, s, d))
+        base = attention.causal_attention(q, k, v)
+        t = 40
+        k2 = k.at[:, :, t:].add(100.0)
+        v2 = v.at[:, :, t:].add(-50.0)
+        pert = attention.causal_attention(q, k2, v2)
+        np.testing.assert_allclose(base[:, :, :t], pert[:, :, :t], rtol=1e-6, atol=1e-6)
+        # ... and must change something at/after t.
+        assert not np.allclose(base[:, :, t:], pert[:, :, t:])
+
+    def test_first_position_attends_only_itself(self):
+        key = jax.random.key(1)
+        kq, kk, kv = jax.random.split(key, 3)
+        s, d = 32, 8
+        q, k, v = rand(kq, (1, 1, s, d)), rand(kk, (1, 1, s, d)), rand(kv, (1, 1, s, d))
+        out = attention.causal_attention(q, k, v)
+        np.testing.assert_allclose(out[0, 0, 0], v[0, 0, 0], rtol=1e-5, atol=1e-5)
+
+    def test_uniform_values_are_preserved(self):
+        # If V is constant, softmax-weighted averages equal that constant.
+        s, d = 64, 16
+        key = jax.random.key(2)
+        kq, kk = jax.random.split(key)
+        q, k = rand(kq, (2, 2, s, d)), rand(kk, (2, 2, s, d))
+        v = jnp.full((2, 2, s, d), 3.25, jnp.float32)
+        out = attention.causal_attention(q, k, v)
+        np.testing.assert_allclose(out, v, rtol=1e-5, atol=1e-5)
+
+    def test_large_logits_stay_finite(self):
+        # Online softmax must not overflow with huge logits.
+        s, d = 32, 8
+        q = jnp.full((1, 1, s, d), 30.0, jnp.float32)
+        k = jnp.full((1, 1, s, d), 30.0, jnp.float32)
+        v = rand(jax.random.key(3), (1, 1, s, d))
+        out = attention.causal_attention(q, k, v)
+        assert bool(jnp.isfinite(out).all())
+
+    def test_tile_sizes_do_not_change_result(self):
+        s, d = 64, 16
+        key = jax.random.key(4)
+        kq, kk, kv = jax.random.split(key, 3)
+        q, k, v = rand(kq, (1, 2, s, d)), rand(kk, (1, 2, s, d)), rand(kv, (1, 2, s, d))
+        a = attention.causal_attention(q, k, v, 16, 16)
+        b = attention.causal_attention(q, k, v, 32, 8)
+        c = attention.causal_attention(q, k, v, 64, 64)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(a, c, rtol=1e-5, atol=1e-5)
+
+    def test_vmem_budget_for_paper_shapes(self):
+        # DESIGN.md §Perf: default tiles stay far under a 16 MiB VMEM budget
+        # even at the paper's head dim (128).
+        floats = attention.vmem_floats(attention.DEFAULT_BQ, attention.DEFAULT_BK, 128)
+        assert floats * 4 < 16 * 2**20
+
+
+# ---------------------------------------------------------------------------
+# Fused NoLoCo / DiLoCo outer updates
+# ---------------------------------------------------------------------------
+
+class TestOuterUpdate:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        n_elems=st.integers(1, 3 * outer_update.BLOCK + 7),
+        alpha=st.floats(0.0, 0.95),
+        beta=st.floats(0.05, 1.0),
+        gamma=st.floats(0.0, 1.5),
+        n=st.integers(1, 8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_reference(self, n_elems, alpha, beta, gamma, n, seed):
+        key = jax.random.key(seed)
+        ks = jax.random.split(key, 4)
+        phi, delta, dsum, psum = (rand(k, (n_elems,)) for k in ks)
+        scalars = jnp.array([alpha, beta, gamma, 1.0 / n], jnp.float32)
+        got_phi, got_delta = outer_update.noloco_outer(phi, delta, dsum, psum, scalars)
+        want_phi, want_delta = ref.noloco_outer(
+            phi, delta, dsum, psum, alpha, beta, gamma, n
+        )
+        np.testing.assert_allclose(got_delta, want_delta, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(got_phi, want_phi, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n_elems=st.integers(1, 2 * outer_update.BLOCK),
+        alpha=st.floats(0.0, 0.95),
+        beta=st.floats(0.05, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_diloco_matches_reference(self, n_elems, alpha, beta, seed):
+        key = jax.random.key(seed)
+        k1, k2, k3 = jax.random.split(key, 3)
+        phi, delta, dmean = rand(k1, (n_elems,)), rand(k2, (n_elems,)), rand(k3, (n_elems,))
+        scalars = jnp.array([alpha, beta, 0.0, 1.0], jnp.float32)
+        got_phi, got_delta = outer_update.diloco_outer(phi, delta, dmean, scalars)
+        want_phi, want_delta = ref.diloco_outer(phi, delta, dmean, alpha, beta)
+        np.testing.assert_allclose(got_delta, want_delta, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(got_phi, want_phi, rtol=1e-5, atol=1e-6)
+
+    def test_block_boundary_sizes(self):
+        # Exactly BLOCK, BLOCK±1 — the padding path edge cases.
+        for n_elems in (outer_update.BLOCK - 1, outer_update.BLOCK, outer_update.BLOCK + 1):
+            key = jax.random.key(n_elems)
+            ks = jax.random.split(key, 4)
+            phi, delta, dsum, psum = (rand(k, (n_elems,)) for k in ks)
+            scalars = jnp.array([0.5, 0.7, 0.9, 0.5], jnp.float32)
+            got_phi, got_delta = outer_update.noloco_outer(phi, delta, dsum, psum, scalars)
+            want_phi, want_delta = ref.noloco_outer(phi, delta, dsum, psum, 0.5, 0.7, 0.9, 2)
+            np.testing.assert_allclose(got_phi, want_phi, rtol=1e-5, atol=1e-6)
+            np.testing.assert_allclose(got_delta, want_delta, rtol=1e-5, atol=1e-6)
+
+    def test_identical_group_gamma_inert(self):
+        # phi == group mean -> the gamma term must vanish exactly.
+        n_elems = 513
+        phi = rand(jax.random.key(5), (n_elems,))
+        delta = jnp.zeros_like(phi)
+        dsum = jnp.zeros_like(phi)
+        psum = 2.0 * phi  # n=2 group of identical replicas
+        lo = outer_update.noloco_outer(
+            phi, delta, dsum, psum, jnp.array([0.3, 0.7, 0.0, 0.5], jnp.float32)
+        )
+        hi = outer_update.noloco_outer(
+            phi, delta, dsum, psum, jnp.array([0.3, 0.7, 1.2, 0.5], jnp.float32)
+        )
+        np.testing.assert_allclose(lo[0], hi[0], rtol=0, atol=1e-7)
+
+    def test_lookahead_degenerate_case(self):
+        # alpha=0, beta=1, gamma=0, n=1: phi' = phi + Delta = theta.
+        n_elems = 100
+        phi = rand(jax.random.key(6), (n_elems,))
+        theta = rand(jax.random.key(7), (n_elems,))
+        delta0 = jnp.zeros_like(phi)
+        scalars = jnp.array([0.0, 1.0, 0.0, 1.0], jnp.float32)
+        phi_new, _ = outer_update.noloco_outer(phi, delta0, theta - phi, phi, scalars)
+        np.testing.assert_allclose(phi_new, theta, rtol=1e-6, atol=1e-6)

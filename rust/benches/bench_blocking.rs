@@ -1,0 +1,98 @@
+//! Fig. 5B benchmark — the cost of *global blocking* in outer steps.
+//!
+//! Simulates training makespans under straggler-prone inner phases
+//! (log-normal per-step latency, the paper's μ=1, σ²=0.5 setting):
+//! DiLoCo barriers the whole world each outer round, NoLoCo only pairs.
+//! Also measures the same effect in wall-clock on the real fabric with
+//! latency injection.
+//!
+//! `cargo bench --bench bench_blocking`
+
+use noloco::bench::{bench_row, section};
+use noloco::collective::all_reduce_mean;
+use noloco::net::Fabric;
+use noloco::rngx::Pcg64;
+use noloco::tensor::Tensor;
+
+/// Simulated makespan ratio DiLoCo / NoLoCo (see examples/latency_analysis).
+fn makespan_ratio(n: usize, m: usize, rounds: usize, seed: u64) -> f64 {
+    let (mu, sigma) = (1.0, 0.5f64.sqrt());
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut diloco = 0.0f64;
+    let mut clocks = vec![0.0f64; n];
+    for _ in 0..rounds {
+        let phases: Vec<f64> = (0..n)
+            .map(|_| (0..m).map(|_| rng.log_normal(mu, sigma)).sum::<f64>())
+            .collect();
+        diloco += phases.iter().cloned().fold(0.0, f64::max);
+        for (a, b) in rng.random_pairs(n) {
+            match b {
+                Some(b) => {
+                    let t = (clocks[a] + phases[a]).max(clocks[b] + phases[b]);
+                    clocks[a] = t;
+                    clocks[b] = t;
+                }
+                None => clocks[a] += phases[a],
+            }
+        }
+    }
+    diloco / clocks.iter().cloned().fold(0.0, f64::max)
+}
+
+fn main() {
+    println!("bench_blocking — global barrier vs gossip pairing (Fig. 5B)");
+
+    section("simulated makespan ratio DiLoCo/NoLoCo (250 outer rounds)");
+    for &n in &[16usize, 64, 256, 1024] {
+        for &m in &[25usize, 50, 100] {
+            let r: f64 =
+                (0..5).map(|s| makespan_ratio(n, m, 250, s)).sum::<f64>() / 5.0;
+            println!("  n={n:<5} m={m:<4} ratio={r:.3}");
+        }
+    }
+
+    section("wall-clock: barriered all-reduce vs gossip under latency injection");
+    // 8 ranks, ~2 ms log-normal latency with fat tail.
+    let (mu, sigma) = ((-6.5f64), 0.8f64); // ~1.5-2ms median
+    for &world in &[4usize, 8] {
+        bench_row(&format!("all-reduce barrier, {world} ranks, latency-injected"), || {
+            let mut fabric = Fabric::new(world);
+            let eps = fabric.take_endpoints();
+            let group: Vec<usize> = (0..world).collect();
+            let handles: Vec<_> = eps
+                .into_iter()
+                .enumerate()
+                .map(|(rank, mut ep)| {
+                    ep.set_latency_log_normal(mu, sigma);
+                    let group = group.clone();
+                    std::thread::spawn(move || {
+                        let mut t = Tensor::full(&[256], rank as f32);
+                        all_reduce_mean(&mut ep, &group, 0, &mut t);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        bench_row(&format!("gossip pairs,       {world} ranks, latency-injected"), || {
+            let mut fabric = Fabric::new(world);
+            let eps = fabric.take_endpoints();
+            let handles: Vec<_> = eps
+                .into_iter()
+                .enumerate()
+                .map(|(rank, mut ep)| {
+                    ep.set_latency_log_normal(mu, sigma);
+                    std::thread::spawn(move || {
+                        let peer = rank ^ 1; // disjoint pairs (2k, 2k+1)
+                        let t = Tensor::full(&[256], rank as f32);
+                        noloco::collective::pair_exchange(&mut ep, peer, 0, &t);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+    }
+}

@@ -1,0 +1,111 @@
+//! Collective benchmarks (Fig. 5A counterpart, measured): virtual-time
+//! cost models across world sizes/σ, and *wall-clock* collectives over the
+//! real in-process fabric across payload sizes.
+//!
+//! `cargo bench --bench bench_collective`
+
+use noloco::bench::{bench_row, section};
+use noloco::collective::{
+    all_reduce_mean, pair_average_time, pair_exchange, reduce_scatter_gather,
+    ring_all_reduce_time, tree_all_reduce_time,
+};
+use noloco::net::{Fabric, LatencyModel, SimClock};
+use noloco::tensor::Tensor;
+
+fn virtual_costs() {
+    section("virtual-time cost models (Fig. 5A inputs)");
+    for &sigma in &[0.125f64, 0.5, 1.0] {
+        for &n in &[8usize, 64, 512] {
+            let model = LatencyModel::LogNormal { mu: 0.0, sigma };
+            let reps = 400;
+            let (mut tree, mut ring, mut pair) = (0.0, 0.0, 0.0);
+            for seed in 0..reps {
+                let mut c = SimClock::new(n, model.clone(), seed);
+                tree += tree_all_reduce_time(&mut c);
+                let mut c = SimClock::new(n, model.clone(), seed + 5000);
+                ring += ring_all_reduce_time(&mut c);
+                let mut c = SimClock::new(n, model.clone(), seed + 9000);
+                pair += pair_average_time(&mut c, None);
+            }
+            println!(
+                "  n={n:<5} σ={sigma:<6} E[tree]={:<8.2} E[ring]={:<9.2} E[pair]={:<6.2} tree/pair={:.1}",
+                tree / reps as f64,
+                ring / reps as f64,
+                pair / reps as f64,
+                tree / pair
+            );
+        }
+    }
+}
+
+fn wallclock_collectives() {
+    section("wall-clock collectives over the fabric (4 ranks)");
+    for &len in &[1usize << 10, 1 << 14, 1 << 18] {
+        // Tree all-reduce.
+        bench_row(&format!("tree all-reduce mean, {len} f32"), || {
+            let mut fabric = Fabric::new(4);
+            let eps = fabric.take_endpoints();
+            let group: Vec<usize> = (0..4).collect();
+            let handles: Vec<_> = eps
+                .into_iter()
+                .enumerate()
+                .map(|(rank, mut ep)| {
+                    let group = group.clone();
+                    std::thread::spawn(move || {
+                        let mut t = Tensor::full(&[len], rank as f32);
+                        all_reduce_mean(&mut ep, &group, 0, &mut t);
+                        t.as_slice()[0]
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        // Ring all-reduce.
+        bench_row(&format!("ring all-reduce mean, {len} f32"), || {
+            let mut fabric = Fabric::new(4);
+            let eps = fabric.take_endpoints();
+            let group: Vec<usize> = (0..4).collect();
+            let handles: Vec<_> = eps
+                .into_iter()
+                .enumerate()
+                .map(|(rank, mut ep)| {
+                    let group = group.clone();
+                    std::thread::spawn(move || {
+                        let mut t = Tensor::full(&[len], rank as f32);
+                        reduce_scatter_gather(&mut ep, &group, 0, &mut t);
+                        t.as_slice()[0]
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        // Gossip pair exchange (the NoLoCo primitive).
+        bench_row(&format!("gossip pair exchange,  {len} f32"), || {
+            let mut fabric = Fabric::new(2);
+            let eps = fabric.take_endpoints();
+            let handles: Vec<_> = eps
+                .into_iter()
+                .enumerate()
+                .map(|(rank, mut ep)| {
+                    std::thread::spawn(move || {
+                        let t = Tensor::full(&[len], rank as f32);
+                        pair_exchange(&mut ep, 1 - rank, 0, &t).as_slice()[0]
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+    }
+}
+
+fn main() {
+    println!("bench_collective — tree/ring vs gossip (paper Fig. 5A / Table-2 comm columns)");
+    virtual_costs();
+    wallclock_collectives();
+}

@@ -1,0 +1,81 @@
+//! Outer-optimizer benchmarks: the host-side reference implementations
+//! (Eq. 2–3) across parameter counts, plus the fused XLA artifact when
+//! artifacts are present — the actual hot path of the outer step.
+//!
+//! `cargo bench --bench bench_outer_step`
+
+use noloco::bench::{bench_row, section};
+use noloco::optim::{DilocoOuter, NolocoOuter, OuterState};
+use noloco::rngx::Pcg64;
+use noloco::runtime::{find_build, Engine};
+use noloco::tensor::Tensor;
+use noloco::train::outer_noloco;
+
+fn host_side() {
+    section("host-side outer optimizers (reference implementation)");
+    let mut rng = Pcg64::seed_from_u64(3);
+    for &n in &[1usize << 14, 1 << 18, 1 << 22] {
+        let phi = vec![Tensor::randn(&[n], 0.1, &mut rng)];
+        let theta = vec![Tensor::randn(&[n], 0.1, &mut rng)];
+        let peer_phi = vec![Tensor::randn(&[n], 0.1, &mut rng)];
+
+        let noloco = NolocoOuter { alpha: 0.5, beta: 0.7, gamma: 0.9 };
+        let mut st = OuterState::new(&phi);
+        let d = st.outer_grad(&theta);
+        let pd = d.clone();
+        bench_row(&format!("NoLoCo pair step (host), {n} params"), || {
+            noloco.step_pair(&mut st, &theta, &d, &pd, &peer_phi);
+        });
+
+        let diloco = DilocoOuter { alpha: 0.3, beta: 0.7 };
+        let mut st = OuterState::new(&phi);
+        let mean = st.outer_grad(&theta);
+        bench_row(&format!("DiLoCo step (host),      {n} params"), || {
+            diloco.step(&mut st, &mean);
+        });
+    }
+}
+
+fn artifact_side() {
+    let Ok(dir) = find_build("artifacts", "tiny", 2) else {
+        println!("  (skipping artifact benches — run `make artifacts`)");
+        return;
+    };
+    section("fused XLA outer-update artifact (the deployed hot path)");
+    let mut eng = Engine::new(dir).expect("engine");
+    let man = eng.manifest().unwrap();
+    let n = man.param_count("first").unwrap();
+    let mut rng = Pcg64::seed_from_u64(4);
+    let mk = |rng: &mut Pcg64| -> Vec<f32> { (0..n).map(|_| rng.next_f32()).collect() };
+    let mut phi = mk(&mut rng);
+    let mut delta = mk(&mut rng);
+    let dsum = mk(&mut rng);
+    let psum = mk(&mut rng);
+    // Warm the compile cache outside the timing loop.
+    outer_noloco(
+        &mut eng, noloco::model::StageKind::First, &mut phi, &mut delta, &dsum, &psum, 0.5,
+        0.7, 0.9, 0.5,
+    )
+    .unwrap();
+    bench_row(&format!("NoLoCo outer artifact, {n} params (tiny.first)"), || {
+        outer_noloco(
+            &mut eng,
+            noloco::model::StageKind::First,
+            &mut phi,
+            &mut delta,
+            &dsum,
+            &psum,
+            0.5,
+            0.7,
+            0.9,
+            0.5,
+        )
+        .unwrap();
+    });
+}
+
+fn main() {
+    println!("bench_outer_step — Eq. 2-3 update throughput");
+    host_side();
+    artifact_side();
+}

@@ -1,0 +1,46 @@
+//! Routing benchmarks: per-wave route-plan generation and path queries —
+//! the L3 coordinator work that runs on every microbatch. DESIGN.md §Perf
+//! target: O(DP) per boundary, microseconds at paper-scale topologies.
+//!
+//! `cargo bench --bench bench_routing`
+
+use noloco::bench::{bench_row, section};
+use noloco::config::Routing;
+use noloco::routing::{pair_histogram, RoutePlan};
+
+fn main() {
+    println!("bench_routing — §3.1 dynamic pipeline routing");
+
+    section("route-plan generation (one per microbatch wave)");
+    for &(dp, pp) in &[(8usize, 2usize), (16, 4), (64, 8), (256, 8)] {
+        let mut step = 0u64;
+        bench_row(&format!("RoutePlan::random dp={dp} pp={pp}"), || {
+            step += 1;
+            let plan = RoutePlan::for_step(Routing::Random, dp, pp, 1, step);
+            std::hint::black_box(plan.next_of(0, 0));
+        });
+    }
+    for &(dp, pp) in &[(16usize, 4usize), (256, 8)] {
+        bench_row(&format!("RoutePlan::fixed  dp={dp} pp={pp}"), || {
+            let plan = RoutePlan::for_step(Routing::Fixed, dp, pp, 1, 1);
+            std::hint::black_box(plan.next_of(0, 0));
+        });
+    }
+
+    section("path queries on a built plan");
+    let plan = RoutePlan::for_step(Routing::Random, 256, 8, 7, 9);
+    bench_row("path_from (full 8-stage path, dp=256)", || {
+        std::hint::black_box(plan.path_from(17));
+    });
+    let mut i = 0usize;
+    bench_row("next_of/prev_of pair (one boundary)", || {
+        i = (i + 1) % 256;
+        let j = plan.next_of(3, i);
+        std::hint::black_box(plan.prev_of(4, j));
+    });
+
+    section("pairing statistics (offline analysis helper)");
+    bench_row("pair_histogram dp=16 pp=2 x100 steps", || {
+        std::hint::black_box(pair_histogram(16, 2, 3, 100));
+    });
+}

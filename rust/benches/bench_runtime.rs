@@ -1,0 +1,134 @@
+//! PJRT runtime benchmarks — per-artifact execution latency of every
+//! function on the training hot path (fwd, bwd, adam, outer updates) plus
+//! the end-to-end inner step, for the tiny and small builds.
+//!
+//! These are the numbers behind EXPERIMENTS.md §Perf: the coordinator's
+//! own overhead (literal packing, routing, bookkeeping) must be small
+//! against these execution times (≥90% of wall inside PJRT per DESIGN).
+//!
+//! `cargo bench --bench bench_runtime`  (requires `make artifacts`)
+
+use noloco::bench::{bench, bench_row, format_row, section};
+use noloco::config::presets;
+use noloco::runtime::{find_build, lit_f32, lit_i32, Engine};
+use noloco::train::{self, AdamScalars, SimTrainer};
+
+fn tokens(n: usize, vocab: usize) -> Vec<i32> {
+    (0..n).map(|i| ((i * 7919 + 13) % vocab) as i32).collect()
+}
+
+fn per_artifact(model: &str) {
+    let Ok(dir) = find_build("artifacts", model, 2) else {
+        println!("  (no {model}-pp2 artifacts)");
+        return;
+    };
+    section(&format!("{model} build — per-artifact execution latency"));
+    let mut eng = Engine::new(dir).unwrap();
+    let man = eng.manifest().unwrap();
+    let (mb, s, h, v) = (man.mb, man.seq_len, man.hidden, man.vocab);
+    let n_first = man.param_count("first").unwrap();
+    let n_last = man.param_count("last").unwrap();
+
+    let first = train::init_stage(&mut eng, noloco::model::StageKind::First, 1).unwrap();
+    let last = train::init_stage(&mut eng, noloco::model::StageKind::Last, 2).unwrap();
+    let toks = tokens(mb * s, v);
+    let hidden = train::fwd_first(&mut eng, &man, &first, &toks).unwrap();
+
+    bench_row(&format!("first.fwd   ({n_first} params, {mb}x{s} toks)"), || {
+        train::fwd_first(&mut eng, &man, &first, &toks).unwrap();
+    });
+    bench_row(&format!("last.bwd    ({n_last} params)"), || {
+        train::bwd_last(&mut eng, &man, &last, &hidden, &toks).unwrap();
+    });
+    bench_row(&format!("first.bwd   ({n_first} params)"), || {
+        train::bwd_first(&mut eng, &man, &first, &toks, &hidden).unwrap();
+    });
+    bench_row("last.loss   (validation path)", || {
+        train::loss_last(&mut eng, &man, &last, &hidden, &toks).unwrap();
+    });
+
+    let mut flat = first.clone();
+    let mut m = vec![0.0f32; n_first];
+    let mut vv = vec![0.0f32; n_first];
+    let g: Vec<f32> = first.iter().map(|x| x * 0.01).collect();
+    bench_row(&format!("first.adam  ({n_first} params, fused clip+update)"), || {
+        train::adam_step(
+            &mut eng,
+            noloco::model::StageKind::First,
+            &mut flat,
+            &mut m,
+            &mut vv,
+            &g,
+            AdamScalars::at(1e-3, 1, 1.0),
+        )
+        .unwrap();
+    });
+
+    let mut phi = first.clone();
+    let mut delta = vec![0.0f32; n_first];
+    bench_row(&format!("first.outer_noloco ({n_first} params)"), || {
+        train::outer_noloco(
+            &mut eng,
+            noloco::model::StageKind::First,
+            &mut phi,
+            &mut delta,
+            &g,
+            &first,
+            0.5,
+            0.7,
+            0.9,
+            0.5,
+        )
+        .unwrap();
+    });
+
+    // Literal packing overhead in isolation (coordinator-side cost).
+    // §Perf: `lit_f32` was switched from vec1+reshape (two copies) to
+    // create_from_shape_and_untyped_data (one copy); both are measured
+    // here so the EXPERIMENTS.md before/after is regenerable.
+    bench_row(&format!("literal pack/unpack, single-copy ({n_first} f32)"), || {
+        let l = lit_f32(&first, &[n_first]).unwrap();
+        std::hint::black_box(noloco::runtime::to_vec_f32(&l).unwrap());
+    });
+    bench_row(&format!("literal pack/unpack, vec1+reshape ({n_first} f32)"), || {
+        let l = xla::Literal::vec1(&first).reshape(&[n_first as i64]).unwrap();
+        std::hint::black_box(noloco::runtime::to_vec_f32(&l).unwrap());
+    });
+    let _ = lit_i32(&toks, &[mb, s]).unwrap();
+    let _ = h;
+}
+
+fn end_to_end_step() {
+    let Ok(dir) = find_build("artifacts", "tiny", 2) else { return };
+    section("end-to-end inner step (tiny, dp=2 pp=2; Table-2 hot loop)");
+    let mut eng = Engine::new(dir).unwrap();
+    let mut cfg = presets::preset("tiny").unwrap();
+    cfg.steps = 8;
+    cfg.eval_every = 0;
+    let mut trainer = SimTrainer::new(cfg, &mut eng).unwrap();
+    let mut step = 0usize;
+    // Warm: compile all artifacts.
+    trainer.inner_step(step).unwrap();
+    let s = bench(
+        "SimTrainer::inner_step (route+fwd+bwd+adam, all workers)",
+        std::time::Duration::from_millis(100),
+        std::time::Duration::from_secs(3),
+        || {
+            step += 1;
+            trainer.inner_step(step).unwrap();
+        },
+    );
+    println!("{}", format_row(&s));
+    println!(
+        "  ({} XLA executions total across {} timed steps)",
+        trainer.manifest().mb,
+        s.iters_ns.len()
+    );
+}
+
+fn main() {
+    println!("bench_runtime — PJRT execution latency (EXPERIMENTS.md §Perf)");
+    per_artifact("tiny");
+    per_artifact("small");
+    end_to_end_step();
+}

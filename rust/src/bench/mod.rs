@@ -1,0 +1,150 @@
+//! Measurement helpers shared by the `cargo bench` targets.
+//!
+//! Criterion is unavailable offline, so the bench binaries are
+//! `harness = false` and use this small, deterministic-enough measurement
+//! core: warm-up phase, timed phase, robust statistics (median/p95), and
+//! aligned table output.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's raw measurements.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    /// Benchmark label.
+    pub name: String,
+    /// Per-iteration wall time in nanoseconds.
+    pub iters_ns: Vec<f64>,
+}
+
+impl Sample {
+    /// Median iteration time.
+    pub fn median_ns(&self) -> f64 {
+        percentile(&self.iters_ns, 50.0)
+    }
+
+    /// 95th-percentile iteration time.
+    pub fn p95_ns(&self) -> f64 {
+        percentile(&self.iters_ns, 95.0)
+    }
+
+    /// Mean iteration time.
+    pub fn mean_ns(&self) -> f64 {
+        if self.iters_ns.is_empty() {
+            return 0.0;
+        }
+        self.iters_ns.iter().sum::<f64>() / self.iters_ns.len() as f64
+    }
+}
+
+/// Percentile (linear interpolation) of an unsorted slice.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = rank - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+/// Run `f` repeatedly: `warmup` of untimed iterations, then timed
+/// iterations until `measure` elapses (at least 5).
+pub fn bench<F: FnMut()>(name: &str, warmup: Duration, measure: Duration, mut f: F) -> Sample {
+    let warm_start = Instant::now();
+    while warm_start.elapsed() < warmup {
+        f();
+    }
+    let mut iters_ns = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < measure || iters_ns.len() < 5 {
+        let t = Instant::now();
+        f();
+        iters_ns.push(t.elapsed().as_nanos() as f64);
+        if iters_ns.len() >= 100_000 {
+            break;
+        }
+    }
+    Sample { name: name.to_string(), iters_ns }
+}
+
+/// [`bench`] with default timing (0.2 s warm-up, 1 s measure) that also
+/// prints the formatted row.
+pub fn bench_row<F: FnMut()>(name: &str, f: F) -> Sample {
+    let s = bench(name, Duration::from_millis(200), Duration::from_secs(1), f);
+    println!("{}", format_row(&s));
+    s
+}
+
+/// One aligned output row: name, median, p95, iteration count.
+pub fn format_row(s: &Sample) -> String {
+    format!(
+        "  {:<44} median {:>10}  p95 {:>10}  (n={})",
+        s.name,
+        fmt_ns(s.median_ns()),
+        fmt_ns(s.p95_ns()),
+        s.iters_ns.len()
+    )
+}
+
+/// Human-format nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Print a section header (visual grouping in bench output).
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn bench_collects_at_least_five_iters() {
+        let s = bench("noop", Duration::ZERO, Duration::ZERO, || {});
+        assert!(s.iters_ns.len() >= 5);
+        assert!(s.median_ns() >= 0.0);
+        assert!(s.p95_ns() >= s.median_ns());
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(1.5e9), "1.500 s");
+    }
+
+    #[test]
+    fn sample_stats_on_known_data() {
+        let s = Sample { name: "x".into(), iters_ns: vec![10.0, 20.0, 30.0] };
+        assert!((s.mean_ns() - 20.0).abs() < 1e-12);
+        assert_eq!(s.median_ns(), 20.0);
+    }
+}

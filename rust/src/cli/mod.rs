@@ -1,0 +1,238 @@
+//! Zero-dependency command-line parsing.
+//!
+//! `clap` is not available offline; this is the small substrate standing
+//! in for it. Grammar: `prog <subcommand> [--flag] [--key value]...
+//! [positional]...`. Flags may also be written `--key=value`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First non-flag token (subcommand), if any.
+    pub command: Option<String>,
+    /// `--key value` / `--key=value` options (last occurrence wins), except
+    /// repeatable keys collected in [`Args::multi`].
+    pub options: BTreeMap<String, String>,
+    /// Repeated `--set path=value` overrides, in order.
+    pub sets: Vec<(String, String)>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+    /// Remaining positionals after the subcommand.
+    pub positionals: Vec<String>,
+}
+
+/// Keys that take a value. Anything else starting `--` is a boolean flag.
+const VALUE_KEYS: &[&str] = &[
+    "preset", "config", "method", "dataset", "routing", "steps", "dp", "pp", "seed",
+    "out", "artifacts", "set", "eval-every", "inner-steps", "group", "alpha", "beta",
+    "gamma", "warmup", "world", "sigma", "mu", "iters", "dim", "omega", "outer-steps",
+    "batch-tokens", "csv",
+];
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if VALUE_KEYS.contains(&key.as_str()) {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{key} expects a value"))?,
+                    };
+                    if key == "set" {
+                        let (p, v) = val
+                            .split_once('=')
+                            .ok_or_else(|| format!("--set expects path=value, got `{val}`"))?;
+                        out.sets.push((p.to_string(), v.to_string()));
+                    } else {
+                        out.options.insert(key, val);
+                    }
+                } else if let Some(v) = inline_val {
+                    // Unknown-but-valued key: accept as option (forward
+                    // compatibility for example-specific knobs).
+                    out.options.insert(key, v);
+                } else {
+                    out.flags.push(key);
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the real process arguments.
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Option value as string.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Option parsed as `usize`.
+    pub fn opt_usize(&self, key: &str) -> Result<Option<usize>, String> {
+        self.opt(key)
+            .map(|v| v.parse().map_err(|_| format!("--{key} expects an integer, got `{v}`")))
+            .transpose()
+    }
+
+    /// Option parsed as `f64`.
+    pub fn opt_f64(&self, key: &str) -> Result<Option<f64>, String> {
+        self.opt(key)
+            .map(|v| v.parse().map_err(|_| format!("--{key} expects a number, got `{v}`")))
+            .transpose()
+    }
+
+    /// Option parsed as `u64`.
+    pub fn opt_u64(&self, key: &str) -> Result<Option<u64>, String> {
+        self.opt(key)
+            .map(|v| v.parse().map_err(|_| format!("--{key} expects an integer, got `{v}`")))
+            .transpose()
+    }
+
+    /// Whether a bare flag was passed.
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+/// Build a [`crate::config::TrainConfig`] from preset + file + overrides,
+/// shared by the binary and the examples.
+pub fn train_config_from(args: &Args) -> Result<crate::config::TrainConfig, String> {
+    use crate::config::{presets, toml::Doc, Dataset, Method, Routing};
+    let preset_name = args.opt("preset").unwrap_or("tiny");
+    let mut cfg = presets::preset(preset_name)
+        .ok_or_else(|| format!("unknown preset `{preset_name}` (try: {:?})", presets::PRESET_NAMES))?;
+    if let Some(path) = args.opt("config") {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        let doc = Doc::parse(&text).map_err(|e| e.to_string())?;
+        cfg.apply_doc(&doc)?;
+    }
+    if let Some(m) = args.opt("method") {
+        match Method::parse(m) {
+            Some(Method::DiLoCo) => cfg = presets::as_diloco(cfg),
+            Some(Method::Fsdp) => cfg = presets::as_fsdp(cfg),
+            Some(Method::NoLoCo) => cfg.outer.method = Method::NoLoCo,
+            None => return Err(format!("unknown method `{m}`")),
+        }
+    }
+    if let Some(d) = args.opt("dataset") {
+        cfg.dataset = Dataset::parse(d).ok_or_else(|| format!("unknown dataset `{d}`"))?;
+    }
+    if let Some(r) = args.opt("routing") {
+        cfg.routing = Routing::parse(r).ok_or_else(|| format!("unknown routing `{r}`"))?;
+    }
+    if let Some(v) = args.opt_usize("steps")? {
+        cfg.steps = v;
+    }
+    if let Some(v) = args.opt_usize("dp")? {
+        cfg.topology.dp = v;
+    }
+    if let Some(v) = args.opt_usize("pp")? {
+        cfg.topology.pp = v;
+    }
+    if let Some(v) = args.opt_u64("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = args.opt_usize("inner-steps")? {
+        cfg.outer.inner_steps = v;
+    }
+    if let Some(v) = args.opt_f64("gamma")? {
+        cfg.outer.gamma = v;
+    }
+    if let Some(v) = args.opt_usize("eval-every")? {
+        cfg.eval_every = v;
+    }
+    if let Some(v) = args.opt_usize("batch-tokens")? {
+        cfg.model.batch_tokens = v;
+    }
+    if let Some(a) = args.opt("artifacts") {
+        cfg.artifacts_dir = a.to_string();
+    }
+    // --set model.hidden=128 style overrides, applied last.
+    if !args.sets.is_empty() {
+        let mut text = String::new();
+        for (p, v) in &args.sets {
+            text.push_str(&format!("{p} = {v}\n"));
+        }
+        let doc = Doc::parse(&text).map_err(|e| e.to_string())?;
+        cfg.apply_doc(&doc)?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_flags_positionals() {
+        let a = parse(&["train", "--preset", "small", "--verbose", "extra"]);
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.opt("preset"), Some("small"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positionals, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_syntax_and_sets() {
+        let a = parse(&["train", "--steps=42", "--set", "model.hidden=96", "--set=outer.alpha=0.4"]);
+        assert_eq!(a.opt_usize("steps").unwrap(), Some(42));
+        assert_eq!(a.sets.len(), 2);
+        assert_eq!(a.sets[0], ("model.hidden".into(), "96".into()));
+        assert_eq!(a.sets[1], ("outer.alpha".into(), "0.4".into()));
+    }
+
+    #[test]
+    fn missing_value_is_an_error() {
+        assert!(Args::parse(["--preset".to_string()]).is_err());
+    }
+
+    #[test]
+    fn train_config_pipeline_applies_overrides() {
+        let a = parse(&[
+            "train",
+            "--preset",
+            "tiny",
+            "--method",
+            "diloco",
+            "--dp",
+            "4",
+            "--steps",
+            "10",
+            "--set",
+            "model.hidden=96",
+        ]);
+        let cfg = train_config_from(&a).unwrap();
+        assert_eq!(cfg.outer.method, crate::config::Method::DiLoCo);
+        assert_eq!(cfg.topology.dp, 4);
+        assert_eq!(cfg.steps, 10);
+        assert_eq!(cfg.model.hidden, 96);
+        // heads=4 divides 96, layers=4 divide pp=2 — still valid.
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn train_config_rejects_bad_method() {
+        let a = parse(&["train", "--method", "sgd"]);
+        assert!(train_config_from(&a).is_err());
+    }
+}

@@ -1,0 +1,155 @@
+//! Virtual-time cost models of the collectives (Fig. 5A machinery).
+//!
+//! Each function walks the collective's communication DAG against a
+//! [`SimClock`], returning the completion (virtual) time. Latencies are
+//! drawn per message from the clock's model; compute inside the
+//! collective is treated as free, matching the paper's analysis which
+//! isolates message time.
+
+use crate::net::SimClock;
+
+use super::{tree_children, tree_parent};
+
+/// Completion time of a binary-tree all-reduce over all `clock.world()`
+/// workers: reduce to the root, then broadcast back (Eq. 5 of the paper:
+/// ≈ `2 t_c log2(n)` for constant latency).
+pub fn tree_all_reduce_time(clock: &mut SimClock) -> f64 {
+    let n = clock.world();
+    if n <= 1 {
+        return clock.makespan();
+    }
+    // Reduce phase: process nodes bottom-up. A parent's ready time becomes
+    // max(own ready, each child's ready + message latency).
+    for rank in (0..n).rev() {
+        for c in tree_children(rank, n) {
+            clock.send(c, rank);
+        }
+    }
+    // Broadcast phase: top-down.
+    for rank in 0..n {
+        if tree_parent(rank).is_some() {
+            // Parent's ready time already includes the reduce; message
+            // from parent to this node.
+            let p = tree_parent(rank).unwrap();
+            clock.send(p, rank);
+        }
+    }
+    clock.barrier()
+}
+
+/// Completion time of a ring all-reduce (reduce-scatter + all-gather):
+/// `2(n-1)` message generations, each a full ring hop.
+pub fn ring_all_reduce_time(clock: &mut SimClock) -> f64 {
+    let n = clock.world();
+    if n <= 1 {
+        return clock.makespan();
+    }
+    for _phase in 0..2 * (n - 1) {
+        // Every worker sends to its successor *simultaneously*: arrivals
+        // are computed from the pre-generation ready times (snapshot), not
+        // chained within the generation.
+        let start: Vec<f64> = (0..n).map(|r| clock.ready_at(r)).collect();
+        let arrive: Vec<f64> = (0..n).map(|r| start[r] + clock.draw_latency()).collect();
+        for r in 0..n {
+            let to = (r + 1) % n;
+            let t = start[to].max(arrive[r]);
+            // Receiver becomes ready once its predecessor's chunk lands.
+            clock.compute(to, t - clock.ready_at(to));
+        }
+    }
+    clock.barrier()
+}
+
+/// Completion time of NoLoCo's local pair averaging: the world is split
+/// into disjoint pairs (given, or implicitly (2k, 2k+1)); each pair does a
+/// symmetric exchange. Returns the *mean pair completion time* — there is
+/// no global barrier in NoLoCo, so the interesting quantity is how long a
+/// pair takes, not the straggler max (§5.3: "2·E(t_local)" as a single
+/// leaf-level step of the tree).
+pub fn pair_average_time(clock: &mut SimClock, pairs: Option<&[(usize, usize)]>) -> f64 {
+    let n = clock.world();
+    let default: Vec<(usize, usize)> = (0..n / 2).map(|k| (2 * k, 2 * k + 1)).collect();
+    let pairs = pairs.unwrap_or(&default);
+    if pairs.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0;
+    for &(a, b) in pairs {
+        acc += clock.exchange(a, b);
+    }
+    acc / pairs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::LatencyModel;
+
+    #[test]
+    fn tree_time_matches_eq5_for_constant_latency() {
+        // Constant t_c: completion ≈ 2 t_c ceil(log2 n) (depth generations
+        // up + down). For a complete binary tree of n=8, depth 3 → 6 t_c.
+        let mut c = SimClock::new(8, LatencyModel::Constant(1.0), 0);
+        let t = tree_all_reduce_time(&mut c);
+        assert_eq!(t, 6.0);
+        let mut c = SimClock::new(2, LatencyModel::Constant(1.0), 0);
+        assert_eq!(tree_all_reduce_time(&mut c), 2.0);
+    }
+
+    #[test]
+    fn ring_time_matches_2n_minus_2_hops() {
+        let n = 6;
+        let mut c = SimClock::new(n, LatencyModel::Constant(0.5), 0);
+        let t = ring_all_reduce_time(&mut c);
+        assert_eq!(t, 0.5 * 2.0 * (n as f64 - 1.0));
+    }
+
+    #[test]
+    fn pair_time_is_one_exchange_for_constant_latency() {
+        let mut c = SimClock::new(16, LatencyModel::Constant(0.7), 0);
+        let t = pair_average_time(&mut c, None);
+        assert!((t - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pair_mean_matches_eq7_for_log_normal() {
+        // E[pair completion] = E[max(t1,t2)] — Eq. 7.
+        let m = LatencyModel::LogNormal { mu: 0.0, sigma: 0.8 };
+        let analytic = m.expected_max2();
+        let mut acc = 0.0;
+        let reps = 4000;
+        for seed in 0..reps {
+            let mut c = SimClock::new(64, m.clone(), seed);
+            acc += pair_average_time(&mut c, None);
+        }
+        let mc = acc / reps as f64;
+        assert!(
+            (mc - analytic).abs() / analytic < 0.02,
+            "mc={mc} analytic={analytic}"
+        );
+    }
+
+    #[test]
+    fn tree_slows_with_latency_variance_pair_does_not() {
+        // The qualitative Fig. 5A claim: raising sigma (holding the mean
+        // E[t] fixed) hurts tree all-reduce much more than pair averaging.
+        let ratio = |sigma: f64| {
+            // Fix E[t] = 1 → mu = -sigma^2/2.
+            let m = LatencyModel::LogNormal { mu: -sigma * sigma / 2.0, sigma };
+            let reps = 600;
+            let (mut tree, mut pair) = (0.0, 0.0);
+            for seed in 0..reps {
+                let mut c = SimClock::new(64, m.clone(), seed);
+                tree += tree_all_reduce_time(&mut c);
+                let mut c = SimClock::new(64, m.clone(), seed + 10_000);
+                pair += pair_average_time(&mut c, None);
+            }
+            tree / pair
+        };
+        let low = ratio(0.1);
+        let high = ratio(1.2);
+        assert!(high > low * 1.5, "low={low} high={high}");
+        // And even at low variance the tree pays ~2 log2(64) vs ~1.
+        assert!(low > 6.0, "low={low}");
+    }
+}

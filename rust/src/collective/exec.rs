@@ -1,0 +1,323 @@
+//! Executable collectives over fabric endpoints.
+//!
+//! Every rank in the participating group calls the same function with its
+//! own endpoint; the functions are SPMD and deadlock-free for any group
+//! that is consistent across ranks. Tags carry `(kind, step, slot)` so
+//! concurrent collectives at different steps never cross-match.
+
+use crate::net::{Endpoint, Payload, Tag};
+use crate::tensor::Tensor;
+
+use super::{tree_children, tree_parent};
+
+/// Tag kinds reserved by the collectives (train-side tags start at 100).
+const K_REDUCE: u16 = 1;
+const K_BCAST: u16 = 2;
+const K_PAIR: u16 = 3;
+const K_RING: u16 = 4;
+
+/// Binary-tree all-reduce **mean** over `group` (absolute ranks, must be
+/// identical on all callers). `my` is this rank's contribution and is
+/// overwritten with the mean. `step` namespaces the tags.
+///
+/// This is the DiLoCo outer-step collective (and the FSDP gradient
+/// collective) of the paper's baselines.
+pub fn all_reduce_mean(ep: &mut Endpoint, group: &[usize], step: u32, my: &mut Tensor) {
+    let n = group.len();
+    if n <= 1 {
+        return;
+    }
+    let me = group
+        .iter()
+        .position(|&r| r == ep.rank())
+        .expect("caller not in group");
+    // Reduce up the tree: children send partial sums to parents.
+    for &c in &tree_children(me, n) {
+        let m = ep.recv(Tag::new(K_REDUCE, step, c as u32));
+        let child = Tensor::from_vec(m.payload.into_f32(), &[my.len()]);
+        my.add_assign(&child);
+    }
+    if let Some(p) = tree_parent(me) {
+        ep.send(
+            group[p],
+            Tag::new(K_REDUCE, step, me as u32),
+            Payload::F32(my.as_slice().to_vec()),
+        );
+        // Wait for the broadcast of the final mean.
+        let m = ep.recv(Tag::new(K_BCAST, step, me as u32));
+        my.as_mut_slice().copy_from_slice(m.payload.f32());
+    } else {
+        // Root: finish the mean, then broadcast down.
+        my.scale(1.0 / n as f32);
+    }
+    for &c in &tree_children(me, n) {
+        ep.send(
+            group[c],
+            Tag::new(K_BCAST, step, c as u32),
+            Payload::F32(my.as_slice().to_vec()),
+        );
+    }
+}
+
+/// Broadcast `buf` from `group[0]` to the rest of the group (binary tree).
+pub fn broadcast(ep: &mut Endpoint, group: &[usize], step: u32, buf: &mut Tensor) {
+    let n = group.len();
+    if n <= 1 {
+        return;
+    }
+    let me = group
+        .iter()
+        .position(|&r| r == ep.rank())
+        .expect("caller not in group");
+    if tree_parent(me).is_some() {
+        let m = ep.recv(Tag::new(K_BCAST, step, me as u32));
+        buf.as_mut_slice().copy_from_slice(m.payload.f32());
+    }
+    for &c in &tree_children(me, n) {
+        ep.send(
+            group[c],
+            Tag::new(K_BCAST, step, c as u32),
+            Payload::F32(buf.as_slice().to_vec()),
+        );
+    }
+}
+
+/// Symmetric pair exchange: send `mine` to `peer`, receive theirs, return
+/// it. The NoLoCo gossip primitive — exactly two messages, no collective.
+pub fn pair_exchange(ep: &mut Endpoint, peer: usize, step: u32, mine: &Tensor) -> Tensor {
+    ep.send(
+        peer,
+        Tag::new(K_PAIR, step, ep.rank() as u32),
+        Payload::F32(mine.as_slice().to_vec()),
+    );
+    let m = ep.recv(Tag::new(K_PAIR, step, peer as u32));
+    Tensor::from_vec(m.payload.into_f32(), &[mine.len()])
+}
+
+/// Ring all-reduce mean (reduce-scatter + all-gather), the
+/// bandwidth-optimal collective large clusters actually deploy; included
+/// as a second baseline topology for the latency study and tested for
+/// numerical agreement with the tree.
+pub fn reduce_scatter_gather(ep: &mut Endpoint, group: &[usize], step: u32, my: &mut Tensor) {
+    let n = group.len();
+    if n <= 1 {
+        return;
+    }
+    let me = group
+        .iter()
+        .position(|&r| r == ep.rank())
+        .expect("caller not in group");
+    let len = my.len();
+    // Chunk boundaries (chunk c covers [off[c], off[c+1])).
+    let off: Vec<usize> = (0..=n).map(|c| c * len / n).collect();
+    let next = group[(me + 1) % n];
+    let prev_idx = (me + n - 1) % n;
+    // Phase 1: reduce-scatter. After n-1 hops, rank me owns the full sum
+    // of chunk (me+1) % n.
+    for hop in 0..n - 1 {
+        let send_c = (me + n - hop) % n;
+        let recv_c = (me + n - hop - 1) % n;
+        let seg = my.as_slice()[off[send_c]..off[send_c + 1]].to_vec();
+        ep.send(
+            next,
+            Tag::new(K_RING, step, (hop * n + send_c) as u32),
+            Payload::F32(seg),
+        );
+        let m = ep.recv(Tag::new(K_RING, step, (hop * n + recv_c) as u32));
+        debug_assert_eq!(m.from, group[prev_idx]);
+        let data = m.payload.f32();
+        for (dst, src) in my.as_mut_slice()[off[recv_c]..off[recv_c + 1]]
+            .iter_mut()
+            .zip(data)
+        {
+            *dst += src;
+        }
+    }
+    // Finish the mean on the owned chunk.
+    let own_c = (me + 1) % n;
+    for v in &mut my.as_mut_slice()[off[own_c]..off[own_c + 1]] {
+        *v /= n as f32;
+    }
+    // Phase 2: all-gather the reduced chunks around the ring.
+    for hop in 0..n - 1 {
+        let send_c = (me + 1 + n - hop) % n;
+        let recv_c = (me + n - hop) % n;
+        let seg = my.as_slice()[off[send_c]..off[send_c + 1]].to_vec();
+        ep.send(
+            next,
+            Tag::new(K_RING, step, ((n + hop) * n + send_c) as u32),
+            Payload::F32(seg),
+        );
+        let m = ep.recv(Tag::new(K_RING, step, ((n + hop) * n + recv_c) as u32));
+        my.as_mut_slice()[off[recv_c]..off[recv_c + 1]].copy_from_slice(m.payload.f32());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::Fabric;
+    use std::thread;
+
+    /// Run `f(rank, endpoint)` on every rank in its own thread.
+    fn spmd<F>(n: usize, f: F) -> Vec<Tensor>
+    where
+        F: Fn(usize, &mut Endpoint) -> Tensor + Send + Sync + 'static,
+    {
+        let mut fabric = Fabric::new(n);
+        let eps = fabric.take_endpoints();
+        let f = std::sync::Arc::new(f);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut ep)| {
+                let f = f.clone();
+                thread::spawn(move || f(rank, &mut ep))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    fn contribution(rank: usize, len: usize) -> Tensor {
+        Tensor::from_vec(
+            (0..len).map(|i| (rank * len + i) as f32).collect(),
+            &[len],
+        )
+    }
+
+    fn expected_mean(n: usize, len: usize) -> Vec<f32> {
+        let mut acc = vec![0.0f32; len];
+        for r in 0..n {
+            for (a, b) in acc.iter_mut().zip(contribution(r, len).as_slice()) {
+                *a += b;
+            }
+        }
+        acc.iter().map(|x| x / n as f32).collect()
+    }
+
+    #[test]
+    fn tree_all_reduce_mean_matches_direct_sum() {
+        for n in [2usize, 3, 4, 7, 8] {
+            let len = 33;
+            let group: Vec<usize> = (0..n).collect();
+            let out = spmd(n, move |rank, ep| {
+                let mut t = contribution(rank, len);
+                all_reduce_mean(ep, &group, 5, &mut t);
+                t
+            });
+            let want = expected_mean(n, len);
+            for (r, t) in out.iter().enumerate() {
+                for (a, b) in t.as_slice().iter().zip(&want) {
+                    assert!((a - b).abs() < 1e-4, "n={n} rank={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_matches_tree() {
+        for n in [2usize, 3, 5, 8] {
+            let len = 40; // not divisible by all n — exercises ragged chunks
+            let group: Vec<usize> = (0..n).collect();
+            let out = spmd(n, move |rank, ep| {
+                let mut t = contribution(rank, len);
+                reduce_scatter_gather(ep, &group, 9, &mut t);
+                t
+            });
+            let want = expected_mean(n, len);
+            for (r, t) in out.iter().enumerate() {
+                for (i, (a, b)) in t.as_slice().iter().zip(&want).enumerate() {
+                    assert!((a - b).abs() < 1e-3, "n={n} rank={r} i={i} {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_from_root() {
+        let n = 6;
+        let group: Vec<usize> = (0..n).collect();
+        let out = spmd(n, move |rank, ep| {
+            let mut t = if rank == 0 {
+                Tensor::from_slice(&[1.0, 2.0, 3.0])
+            } else {
+                Tensor::zeros(&[3])
+            };
+            broadcast(ep, &group, 0, &mut t);
+            t
+        });
+        for t in out {
+            assert_eq!(t.as_slice(), &[1.0, 2.0, 3.0]);
+        }
+    }
+
+    #[test]
+    fn pair_exchange_swaps() {
+        let out = spmd(2, |rank, ep| {
+            let mine = Tensor::from_slice(&[rank as f32 * 10.0]);
+            pair_exchange(ep, 1 - rank, 0, &mine)
+        });
+        assert_eq!(out[0].as_slice(), &[10.0]);
+        assert_eq!(out[1].as_slice(), &[0.0]);
+    }
+
+    #[test]
+    fn subgroup_collective_leaves_outsiders_alone() {
+        // Ranks 0 and 2 all-reduce; rank 1 does not participate.
+        let out = spmd(3, |rank, ep| {
+            let mut t = Tensor::from_slice(&[rank as f32]);
+            if rank != 1 {
+                all_reduce_mean(ep, &[0, 2], 3, &mut t);
+            }
+            t
+        });
+        assert_eq!(out[0].as_slice(), &[1.0]);
+        assert_eq!(out[1].as_slice(), &[1.0]); // untouched
+        assert_eq!(out[2].as_slice(), &[1.0]);
+    }
+
+    #[test]
+    fn all_reduce_is_deterministic_across_runs() {
+        let run = || {
+            let group: Vec<usize> = (0..4).collect();
+            spmd(4, move |rank, ep| {
+                let mut t = contribution(rank, 8);
+                all_reduce_mean(ep, &group, 1, &mut t);
+                t
+            })
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn property_tree_reduce_preserves_mean() {
+        crate::prop::run("tree all-reduce preserves elementwise mean", 12, |g| {
+            let n = g.usize_in(2, 6);
+            let len = g.usize_in(1, 50);
+            let inputs: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal(len, 2.0)).collect();
+            let mut want = vec![0.0f64; len];
+            for row in &inputs {
+                for (w, x) in want.iter_mut().zip(row) {
+                    *w += *x as f64;
+                }
+            }
+            for w in &mut want {
+                *w /= n as f64;
+            }
+            let group: Vec<usize> = (0..n).collect();
+            let inputs2 = inputs.clone();
+            let out = spmd(n, move |rank, ep| {
+                let mut t = Tensor::from_vec(inputs2[rank].clone(), &[len]);
+                all_reduce_mean(ep, &group, 2, &mut t);
+                t
+            });
+            for t in out {
+                for (a, b) in t.as_slice().iter().zip(&want) {
+                    assert!((*a as f64 - b).abs() < 1e-3);
+                }
+            }
+        });
+    }
+}

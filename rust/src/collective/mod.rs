@@ -1,0 +1,81 @@
+//! Collective communication.
+//!
+//! Two faces of the same algorithms:
+//!
+//! * **Executable collectives** over a [`Fabric`](crate::net::Fabric)
+//!   endpoint — used by the FSDP and DiLoCo baselines on the real training
+//!   path (tree all-reduce of gradients / outer gradients) and by the
+//!   NoLoCo gossip step (pair exchange).
+//! * **Cost models** over a [`SimClock`](crate::net::SimClock) — virtual-
+//!   time schedules of the same communication DAGs, used by the latency
+//!   studies (Fig. 5A).
+//!
+//! Tree all-reduce follows the paper's §5.3 description: reduce up a
+//! binary tree to rank 0, then broadcast back down, `2·log2(n)` sequential
+//! message generations in total (Eq. 5).
+
+pub mod cost;
+mod exec;
+
+pub use cost::{pair_average_time, tree_all_reduce_time, ring_all_reduce_time};
+pub use exec::{all_reduce_mean, broadcast, pair_exchange, reduce_scatter_gather};
+
+/// Children of `rank` in a binary reduction tree over `0..n` (rank 0 root).
+pub(crate) fn tree_children(rank: usize, n: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let l = 2 * rank + 1;
+    let r = 2 * rank + 2;
+    if l < n {
+        out.push(l);
+    }
+    if r < n {
+        out.push(r);
+    }
+    out
+}
+
+/// Parent of `rank` in the binary tree (none for the root).
+pub(crate) fn tree_parent(rank: usize) -> Option<usize> {
+    if rank == 0 {
+        None
+    } else {
+        Some((rank - 1) / 2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tree_shape_is_consistent() {
+        // Every non-root has a parent that lists it as a child.
+        for n in [1usize, 2, 3, 7, 8, 13] {
+            for r in 1..n {
+                let p = tree_parent(r).unwrap();
+                assert!(tree_children(p, n).contains(&r), "n={n} r={r}");
+            }
+            // Root has no parent; every node has <= 2 children.
+            assert!(tree_parent(0).is_none());
+            for r in 0..n {
+                assert!(tree_children(r, n).len() <= 2);
+            }
+        }
+    }
+
+    #[test]
+    fn tree_depth_is_log2() {
+        let depth = |mut r: usize| {
+            let mut d = 0;
+            while let Some(p) = tree_parent(r) {
+                r = p;
+                d += 1;
+            }
+            d
+        };
+        assert_eq!(depth(0), 0);
+        assert_eq!(depth(1), 1);
+        assert_eq!(depth(6), 2);
+        assert_eq!(depth(62), 5);
+    }
+}

@@ -1,0 +1,300 @@
+//! TOML-subset parser.
+//!
+//! No `serde`/`toml` crates are available offline, so the config system
+//! rests on this small parser. Supported grammar (the subset our config
+//! files use):
+//!
+//! * `[section]` and `[section.subsection]` headers
+//! * `key = value` with value ∈ {string "…", integer, float, bool}
+//! * inline arrays of scalars `[1, 2, 3]`
+//! * `#` comments and blank lines
+//!
+//! Keys are flattened to dotted paths (`section.key`) into an ordered map.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed scalar or array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    /// String content, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Integer content (ints only; floats are not silently truncated).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Float content; integers widen to float.
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// Boolean content.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with 1-based line number.
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Ordered dotted-path → value document.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Doc {
+    map: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    /// Parse a document from text.
+    pub fn parse(text: &str) -> Result<Doc, ParseError> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let lineno = ln + 1;
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| ParseError {
+                    line: lineno,
+                    msg: "unterminated section header".into(),
+                })?;
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(ParseError {
+                        line: lineno,
+                        msg: "empty section name".into(),
+                    });
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| ParseError {
+                line: lineno,
+                msg: format!("expected `key = value`, got `{line}`"),
+            })?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(ParseError {
+                    line: lineno,
+                    msg: "empty key".into(),
+                });
+            }
+            let val = parse_value(line[eq + 1..].trim(), lineno)?;
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            map.insert(path, val);
+        }
+        Ok(Doc { map })
+    }
+
+    /// Look up a dotted path.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.map.get(path)
+    }
+
+    /// String at path.
+    pub fn str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(Value::as_str)
+    }
+
+    /// Integer at path.
+    pub fn int(&self, path: &str) -> Option<i64> {
+        self.get(path).and_then(Value::as_int)
+    }
+
+    /// Float at path (ints widen).
+    pub fn float(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(Value::as_float)
+    }
+
+    /// Bool at path.
+    pub fn bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(Value::as_bool)
+    }
+
+    /// All `(path, value)` pairs in order.
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Value)> {
+        self.map.iter()
+    }
+
+    /// Insert / override a value (used by CLI `--set section.key=value`).
+    pub fn set(&mut self, path: &str, v: Value) {
+        self.map.insert(path.to_string(), v);
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, ParseError> {
+    let err = |msg: String| ParseError { line, msg };
+    if s.is_empty() {
+        return Err(err("missing value".into()));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| err("unterminated string".into()))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err("unterminated array".into()))?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in trimmed.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue; // trailing comma
+                }
+                items.push(parse_value(part, line)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(format!("cannot parse value `{s}`")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let d = Doc::parse(
+            r#"
+            # top comment
+            name = "noloco"
+            [model]
+            hidden = 768
+            lr = 6e-4            # inline comment
+            tied = false
+            [outer.noloco]
+            alpha = 0.5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(d.str("name"), Some("noloco"));
+        assert_eq!(d.int("model.hidden"), Some(768));
+        assert!((d.float("model.lr").unwrap() - 6e-4).abs() < 1e-12);
+        assert_eq!(d.bool("model.tied"), Some(false));
+        assert!((d.float("outer.noloco.alpha").unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ints_widen_to_float_not_vice_versa() {
+        let d = Doc::parse("a = 3\nb = 3.5\n").unwrap();
+        assert_eq!(d.float("a"), Some(3.0));
+        assert_eq!(d.int("b"), None);
+    }
+
+    #[test]
+    fn arrays() {
+        let d = Doc::parse("xs = [1, 2, 3]\nys = [0.5, 1.5,]\nzs = []\n").unwrap();
+        match d.get("xs").unwrap() {
+            Value::Array(v) => assert_eq!(v.len(), 3),
+            _ => panic!(),
+        }
+        match d.get("ys").unwrap() {
+            Value::Array(v) => assert_eq!(v.len(), 2),
+            _ => panic!(),
+        }
+        match d.get("zs").unwrap() {
+            Value::Array(v) => assert!(v.is_empty()),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let d = Doc::parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(d.str("s"), Some("a#b"));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let d = Doc::parse("big = 128_000\n").unwrap();
+        assert_eq!(d.int("big"), Some(128_000));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = Doc::parse("ok = 1\nbroken line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = Doc::parse("[unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = Doc::parse("k = \"oops\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut d = Doc::parse("a = 1\n").unwrap();
+        d.set("a", Value::Int(2));
+        assert_eq!(d.int("a"), Some(2));
+    }
+}

@@ -1,0 +1,55 @@
+//! # NoLoCo — No-all-reduce Low Communication Training
+//!
+//! Production-shaped reproduction of *NoLoCo: No-all-reduce Low
+//! Communication Training Method for Large Models* (Kolehmainen et al.,
+//! 2025) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! * **Layer 3 (this crate)** — the coordinator: topology, random pipeline
+//!   routing, gossip outer steps, collectives, worker threads, data
+//!   pipelines, metrics, CLI and config. Owns the event loop; Python never
+//!   runs on the training path.
+//! * **Layer 2** — `python/compile/model.py`: staged Llama-style
+//!   transformer fwd/bwd + Adam + outer updates, AOT-lowered to HLO text.
+//! * **Layer 1** — `python/compile/kernels/`: Pallas kernels (fused causal
+//!   attention, fused NoLoCo outer update) called from Layer 2.
+//!
+//! The [`runtime`] module loads `artifacts/*.hlo.txt` through the PJRT C
+//! API (`xla` crate) and executes them from the hot path.
+//!
+//! ## Crate map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`cli`] | zero-dependency argument parsing |
+//! | [`config`] | TOML-subset parser, typed configs, paper presets (Table 1) |
+//! | [`rngx`] | PCG64 RNG, normal / log-normal draws, permutations |
+//! | [`tensor`] | host-side flat tensors + stats used by collectives |
+//! | [`prop`] | minimal property-testing harness |
+//! | [`net`] | discrete-event latency simulator + in-process message fabric |
+//! | [`collective`] | tree / ring all-reduce, broadcast, pair exchange |
+//! | [`routing`] | random-permutation pipeline routing (§3.1) |
+//! | [`optim`] | Adam, LR schedules, DiLoCo Nesterov, NoLoCo modified Nesterov (Eq. 2) |
+//! | [`quad`] | Theorem-1 quadratic-loss convergence harness |
+//! | [`data`] | synthetic corpora, tokenizer, sharded loaders |
+//! | [`metrics`] | perplexity, cross-replica weight σ, Pearson r, CSV |
+//! | [`model`] | Rust mirror of Layer-2 stage parameter shapes |
+//! | [`runtime`] | PJRT engine: artifact loading, compile cache, execution |
+//! | [`train`] | distributed training driver: FSDP / DiLoCo / NoLoCo modes |
+//! | [`bench`] | measurement helpers for `cargo bench` targets |
+
+pub mod bench;
+pub mod cli;
+pub mod collective;
+pub mod config;
+pub mod data;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod optim;
+pub mod prop;
+pub mod quad;
+pub mod rngx;
+pub mod routing;
+pub mod runtime;
+pub mod tensor;
+pub mod train;

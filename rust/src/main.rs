@@ -1,0 +1,219 @@
+//! `noloco` — leader binary for the NoLoCo training stack.
+//!
+//! Subcommands:
+//!
+//! * `train`            — run the single-process trainer (default)
+//! * `train-threaded`   — run the threaded trainer over the message fabric
+//! * `presets`          — list configuration presets (Table 1 + CPU-scale)
+//! * `artifacts`        — inventory the compiled artifact builds
+//! * `check`            — validate a config + artifact pairing, no training
+//!
+//! Common options: `--preset NAME`, `--method fsdp|diloco|noloco`,
+//! `--dataset reddit|c4`, `--routing random|fixed`, `--steps N`, `--dp N`,
+//! `--pp N`, `--seed N`, `--config FILE`, `--set path=value`, `--csv OUT`.
+
+use noloco::cli::{self, Args};
+use noloco::config::presets;
+use noloco::runtime::{find_build, Engine, Manifest};
+use noloco::train::{SimTrainer, ThreadedTrainer};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.command.clone().unwrap_or_else(|| "train".to_string());
+    let result = match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "train-threaded" => cmd_train_threaded(&args),
+        "presets" => cmd_presets(),
+        "artifacts" => cmd_artifacts(&args),
+        "check" => cmd_check(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "noloco — no-all-reduce low-communication training\n\n\
+         USAGE: noloco [COMMAND] [OPTIONS]\n\n\
+         COMMANDS:\n\
+           train            run the single-process trainer (default)\n\
+           train-threaded   run the threaded trainer over the message fabric\n\
+           presets          list configuration presets\n\
+           artifacts        inventory compiled artifact builds\n\
+           check            validate config + artifacts without training\n\n\
+         OPTIONS:\n\
+           --preset NAME        preset (default: tiny); see `noloco presets`\n\
+           --method M           fsdp | diloco | noloco\n\
+           --dataset D          reddit | c4\n\
+           --routing R          random | fixed\n\
+           --steps N            total inner steps\n\
+           --dp N / --pp N      topology\n\
+           --inner-steps N      inner steps per outer step\n\
+           --gamma X            NoLoCo consensus coefficient\n\
+           --eval-every N       validation cadence\n\
+           --seed N             RNG seed\n\
+           --config FILE        TOML config overlay\n\
+           --set path=value     targeted config override (repeatable)\n\
+           --artifacts DIR      artifact root (default: artifacts)\n\
+           --csv FILE           write the run trace as CSV\n\
+           --latency-mu X       threaded: log-normal latency mu (seconds)\n\
+           --latency-sigma X    threaded: log-normal latency sigma"
+    );
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = cli::train_config_from(args).map_err(anyhow::Error::msg)?;
+    println!(
+        "run: {} | {} | dp={} pp={} | {} steps | routing {:?} | seed {}",
+        cfg.model.name,
+        cfg.outer.method,
+        cfg.topology.dp,
+        cfg.topology.pp,
+        cfg.steps,
+        cfg.routing,
+        cfg.seed
+    );
+    let dir = find_build(&cfg.artifacts_dir, &cfg.model.name, cfg.topology.pp)?;
+    println!("artifacts: {}", dir.display());
+    let mut eng = Engine::new(dir)?;
+    let mut trainer = SimTrainer::new(cfg.clone(), &mut eng)?;
+    let report = trainer.run()?;
+    println!(
+        "done in {:.1}s | {} executions | final val nll {:.4} (ppl {:.2})",
+        report.wall_secs, report.executions, report.final_val_nll, report.final_val_ppl
+    );
+    println!(
+        "comm: {:.1} MiB payload | {} activation hops | {} blocking collectives | {} gossip pairs",
+        report.comm.mib_sent(),
+        report.comm.activation_hops,
+        report.comm.blocking_collectives,
+        report.comm.pair_exchanges
+    );
+    if let Some(csv) = args.opt("csv") {
+        report.trace.write_csv(csv)?;
+        println!("trace written to {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_train_threaded(args: &Args) -> anyhow::Result<()> {
+    let cfg = cli::train_config_from(args).map_err(anyhow::Error::msg)?;
+    println!(
+        "threaded run: {} | {} | dp={} pp={} ({} worker threads) | {} steps",
+        cfg.model.name,
+        cfg.outer.method,
+        cfg.topology.dp,
+        cfg.topology.pp,
+        cfg.topology.world(),
+        cfg.steps
+    );
+    let mut t = ThreadedTrainer::new(cfg);
+    let mu = args.opt_f64("latency-mu").map_err(anyhow::Error::msg)?;
+    let sigma = args.opt_f64("latency-sigma").map_err(anyhow::Error::msg)?;
+    if let (Some(mu), Some(sigma)) = (mu, sigma) {
+        t = t.with_latency(mu, sigma);
+        println!("latency injection: LogNormal(mu={mu}, sigma={sigma}) seconds");
+    }
+    let report = t.run()?;
+    println!(
+        "done in {:.1}s | final val nll {:.4} (ppl {:.2}) | {:.1} MiB / {} msgs over the fabric",
+        report.wall_secs,
+        report.final_val_nll,
+        report.final_val_ppl,
+        report.bytes_sent as f64 / (1024.0 * 1024.0),
+        report.msgs_sent
+    );
+    let show = report.step_train_loss.len().min(5);
+    println!("first {show} step losses: {:?}", &report.step_train_loss[..show]);
+    Ok(())
+}
+
+fn cmd_presets() -> anyhow::Result<()> {
+    println!(
+        "{:<14} {:>7} {:>7} {:>12} {:>6} {:>9} {:>11} {:>8}",
+        "preset", "hidden", "layers", "intermediate", "heads", "vocab", "params", "steps"
+    );
+    for name in presets::PRESET_NAMES {
+        let c = presets::preset(name).unwrap();
+        println!(
+            "{:<14} {:>7} {:>7} {:>12} {:>6} {:>9} {:>11} {:>8}",
+            name,
+            c.model.hidden,
+            c.model.layers,
+            c.model.intermediate,
+            c.model.heads,
+            c.model.vocab,
+            human_count(c.model.transformer_params()),
+            c.steps
+        );
+    }
+    Ok(())
+}
+
+fn human_count(n: usize) -> String {
+    if n >= 1_000_000_000 {
+        format!("{:.1}B", n as f64 / 1e9)
+    } else if n >= 1_000_000 {
+        format!("{:.1}M", n as f64 / 1e6)
+    } else {
+        format!("{:.1}K", n as f64 / 1e3)
+    }
+}
+
+fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
+    let root = args.opt("artifacts").unwrap_or("artifacts");
+    let mut found = 0;
+    if let Ok(entries) = std::fs::read_dir(root) {
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if !path.join("manifest.toml").is_file() {
+                continue;
+            }
+            let man = Manifest::load(&path)?;
+            found += 1;
+            println!(
+                "{:<24} model={} pp={} mb={} seq={} vocab={} params={:?}",
+                path.file_name().unwrap().to_string_lossy(),
+                man.model,
+                man.pp,
+                man.mb,
+                man.seq_len,
+                man.vocab,
+                man.params
+            );
+        }
+    }
+    if found == 0 {
+        println!("no artifact builds under `{root}` — run `make artifacts`");
+    }
+    Ok(())
+}
+
+fn cmd_check(args: &Args) -> anyhow::Result<()> {
+    let cfg = cli::train_config_from(args).map_err(anyhow::Error::msg)?;
+    let dir = find_build(&cfg.artifacts_dir, &cfg.model.name, cfg.topology.pp)?;
+    let man = Manifest::load(&dir)?;
+    man.check_against(&cfg.model, cfg.topology.pp)?;
+    let (lo, hi) = noloco::config::OuterConfig::gamma_window(cfg.outer.alpha, cfg.outer.group);
+    println!("config OK: {} ({})", cfg.model.name, cfg.outer.method);
+    println!("artifacts OK: {}", dir.display());
+    println!("gamma window (Eq. 74): ({lo:.4}, {hi:.4}); gamma = {}", cfg.outer.gamma);
+    Ok(())
+}

@@ -1,0 +1,236 @@
+//! Run metrics: loss / perplexity tracking, cross-replica weight σ,
+//! Pearson correlation against the LR schedule, and CSV/Markdown output.
+//!
+//! These are the quantities the paper's tables and figures report:
+//! Table 2/3 (final validation perplexity), Fig. 2 (PPL curves), Fig. 3A
+//! (relative PPL difference, Eq. 4), Fig. 3B (normalized weight σ and its
+//! Pearson r with the learning rate), Fig. 4 (σ and PPL ratios between
+//! routing modes).
+
+use crate::tensor::{pearson, replica_std, Tensor};
+use std::fmt::Write as _;
+use std::io::Write as _;
+
+/// Perplexity from a mean cross-entropy (nats per token).
+pub fn perplexity(mean_nll: f64) -> f64 {
+    mean_nll.exp()
+}
+
+/// Eq. 4: relative perplexity difference, normalized by the FSDP anchor.
+pub fn rel_ppl_diff(diloco: f64, noloco: f64, fsdp: f64) -> f64 {
+    (diloco - noloco) / fsdp
+}
+
+/// Time series of one run's observables.
+#[derive(Clone, Debug, Default)]
+pub struct RunTrace {
+    /// Inner-step indices where observations were taken.
+    pub steps: Vec<usize>,
+    /// Training loss (nats) per observation.
+    pub train_loss: Vec<f64>,
+    /// Validation loss (nats) per observation (NaN when not evaluated).
+    pub val_loss: Vec<f64>,
+    /// Cross-replica weight σ per observation (NaN when not measured).
+    pub weight_std: Vec<f64>,
+    /// Learning rate per observation.
+    pub lr: Vec<f64>,
+}
+
+impl RunTrace {
+    /// Append one observation row.
+    pub fn push(&mut self, step: usize, train_loss: f64, val_loss: f64, weight_std: f64, lr: f64) {
+        self.steps.push(step);
+        self.train_loss.push(train_loss);
+        self.val_loss.push(val_loss);
+        self.weight_std.push(weight_std);
+        self.lr.push(lr);
+    }
+
+    /// Final validation perplexity (last non-NaN val loss).
+    pub fn final_val_ppl(&self) -> f64 {
+        self.val_loss
+            .iter()
+            .rev()
+            .find(|v| v.is_finite())
+            .map(|v| perplexity(*v))
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Pearson correlation between weight σ and LR over observations where
+    /// both exist — the Fig. 3B statistic (paper: 0.91–0.97).
+    pub fn std_lr_pearson(&self) -> f64 {
+        let pairs: Vec<(f64, f64)> = self
+            .weight_std
+            .iter()
+            .zip(&self.lr)
+            .filter(|(s, _)| s.is_finite())
+            .map(|(s, l)| (*s, *l))
+            .collect();
+        let xs: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+        let ys: Vec<f64> = pairs.iter().map(|p| p.1).collect();
+        pearson(&xs, &ys)
+    }
+
+    /// Weight-σ series normalized by its max (Fig. 3B's y-axis).
+    pub fn normalized_weight_std(&self) -> Vec<f64> {
+        let max = self
+            .weight_std
+            .iter()
+            .cloned()
+            .filter(|v| v.is_finite())
+            .fold(0.0, f64::max);
+        if max == 0.0 {
+            return self.weight_std.clone();
+        }
+        self.weight_std.iter().map(|s| s / max).collect()
+    }
+
+    /// Serialize to CSV.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("step,train_loss,val_loss,weight_std,lr\n");
+        for i in 0..self.steps.len() {
+            let _ = writeln!(
+                out,
+                "{},{},{},{},{}",
+                self.steps[i], self.train_loss[i], self.val_loss[i], self.weight_std[i], self.lr[i]
+            );
+        }
+        out
+    }
+
+    /// Write CSV to a file, creating parent directories.
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+}
+
+/// Cross-replica σ from per-replica flattened parameter tensors — wrapper
+/// over [`replica_std`] taking owned parameter lists.
+pub fn weight_std_of(replicas: &[Vec<Tensor>]) -> f64 {
+    if replicas.len() < 2 {
+        return 0.0;
+    }
+    let flats: Vec<Tensor> = replicas
+        .iter()
+        .map(|ps| Tensor::from_vec(crate::tensor::flatten(ps), &[ps.iter().map(|p| p.len()).sum()]))
+        .collect();
+    let refs: Vec<&Tensor> = flats.iter().collect();
+    replica_std(&refs)
+}
+
+/// Minimal Markdown table builder for experiment reports.
+#[derive(Clone, Debug)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with column headers.
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match the header width).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "table width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render as GitHub-flavoured Markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "| {} |", self.header.join(" | "));
+        let _ = writeln!(
+            out,
+            "|{}|",
+            self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for r in &self.rows {
+            let _ = writeln!(out, "| {} |", r.join(" | "));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perplexity_of_uniform_distribution() {
+        let v = 512f64;
+        assert!((perplexity(v.ln()) - v).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rel_ppl_diff_sign_convention() {
+        // Positive = NoLoCo better (lower PPL), matching Fig. 3A's
+        // "positive indicates faster convergence compared to DiLoCo".
+        assert!(rel_ppl_diff(30.0, 29.0, 25.0) > 0.0);
+        assert!(rel_ppl_diff(29.0, 30.0, 25.0) < 0.0);
+    }
+
+    #[test]
+    fn trace_final_ppl_skips_nan() {
+        let mut t = RunTrace::default();
+        t.push(0, 5.0, 3.0f64.ln(), 0.1, 1e-3);
+        t.push(1, 4.0, f64::NAN, 0.2, 1e-3);
+        assert!((t.final_val_ppl() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_pearson_tracks_lr_correlated_std() {
+        let mut t = RunTrace::default();
+        for i in 0..50 {
+            let lr = 1.0 - i as f64 / 50.0;
+            t.push(i, 0.0, f64::NAN, 0.5 * lr + 0.01, lr);
+        }
+        assert!(t.std_lr_pearson() > 0.99);
+    }
+
+    #[test]
+    fn normalized_std_peaks_at_one() {
+        let mut t = RunTrace::default();
+        t.push(0, 0.0, f64::NAN, 0.2, 1.0);
+        t.push(1, 0.0, f64::NAN, 0.4, 1.0);
+        t.push(2, 0.0, f64::NAN, 0.1, 1.0);
+        let n = t.normalized_weight_std();
+        assert_eq!(n, vec![0.5, 1.0, 0.25]);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut t = RunTrace::default();
+        t.push(10, 2.5, 2.4, 0.1, 5e-4);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("step,"));
+        assert!(csv.lines().count() == 2);
+        assert!(csv.contains("10,2.5,2.4,0.1,0.0005"));
+    }
+
+    #[test]
+    fn weight_std_of_replicas() {
+        let a = vec![Tensor::from_slice(&[0.0, 0.0])];
+        let b = vec![Tensor::from_slice(&[2.0, 4.0])];
+        let s = weight_std_of(&[a, b]);
+        assert!((s - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn markdown_table_renders() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("|---|---|"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+}

@@ -1,0 +1,241 @@
+//! Rust-side mirror of the Layer-2 stage parameter layout.
+//!
+//! The coordinator treats stage parameters as flat `f32` vectors (that is
+//! the artifact wire format), but several subsystems need the *structure*:
+//! manifest validation cross-checks parameter counts, metrics can report
+//! per-tensor statistics, and checkpoints record named shapes. This module
+//! re-derives the exact `(name, shape)` ordering of
+//! `python/compile/model.py::stage_shapes` — any drift is caught by
+//! `rust/tests/integration.rs` comparing against the generated manifests.
+
+use crate::config::ModelConfig;
+
+/// Pipeline stage kinds, matching the artifact naming.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StageKind {
+    /// Embedding + first block of layers (pp > 1).
+    First,
+    /// Interior block of layers (pp > 2).
+    Mid,
+    /// Final block + norm + LM head + loss (pp > 1).
+    Last,
+    /// Whole model in one stage (pp = 1).
+    Full,
+}
+
+impl StageKind {
+    /// Artifact file-name component.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StageKind::First => "first",
+            StageKind::Mid => "mid",
+            StageKind::Last => "last",
+            StageKind::Full => "full",
+        }
+    }
+
+    /// The kind of pipeline stage `s` out of `pp`.
+    pub fn of_stage(s: usize, pp: usize) -> StageKind {
+        assert!(s < pp, "stage {s} out of range for pp={pp}");
+        if pp == 1 {
+            StageKind::Full
+        } else if s == 0 {
+            StageKind::First
+        } else if s == pp - 1 {
+            StageKind::Last
+        } else {
+            StageKind::Mid
+        }
+    }
+
+    /// All kinds present in a `pp`-stage pipeline, in stage order.
+    pub fn kinds_for(pp: usize) -> Vec<StageKind> {
+        (0..pp).map(|s| StageKind::of_stage(s, pp)).collect()
+    }
+
+    /// Whether this stage consumes tokens (vs hidden states) as input.
+    pub fn takes_tokens(&self) -> bool {
+        matches!(self, StageKind::First | StageKind::Full)
+    }
+
+    /// Whether this stage produces the loss.
+    pub fn produces_loss(&self) -> bool {
+        matches!(self, StageKind::Last | StageKind::Full)
+    }
+}
+
+/// One named parameter tensor in a stage's flat vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    /// Dotted name, e.g. `l0.wq`.
+    pub name: String,
+    /// Logical shape.
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// True for zero-element specs (never produced in practice).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Ordered `(name, shape)` list of one decoder layer — mirrors
+/// `model.layer_shapes`.
+pub fn layer_shapes(cfg: &ModelConfig) -> Vec<ParamSpec> {
+    let (h, i) = (cfg.hidden, cfg.intermediate);
+    let spec = |name: &str, shape: &[usize]| ParamSpec { name: name.into(), shape: shape.to_vec() };
+    vec![
+        spec("attn_norm", &[h]),
+        spec("wq", &[h, h]),
+        spec("wk", &[h, h]),
+        spec("wv", &[h, h]),
+        spec("wo", &[h, h]),
+        spec("mlp_norm", &[h]),
+        spec("w_gate", &[h, i]),
+        spec("w_up", &[h, i]),
+        spec("w_down", &[i, h]),
+    ]
+}
+
+/// Ordered parameter specs of a stage kind — mirrors `model.stage_shapes`.
+pub fn stage_shapes(cfg: &ModelConfig, kind: StageKind, pp: usize) -> Vec<ParamSpec> {
+    let (h, v) = (cfg.hidden, cfg.vocab);
+    let n_layers = match kind {
+        StageKind::Full => cfg.layers,
+        _ => cfg.layers / pp,
+    };
+    let mut out = Vec::new();
+    if matches!(kind, StageKind::First | StageKind::Full) {
+        out.push(ParamSpec { name: "embed".into(), shape: vec![v, h] });
+    }
+    for li in 0..n_layers {
+        for s in layer_shapes(cfg) {
+            out.push(ParamSpec { name: format!("l{li}.{}", s.name), shape: s.shape });
+        }
+    }
+    if matches!(kind, StageKind::Last | StageKind::Full) {
+        out.push(ParamSpec { name: "final_norm".into(), shape: vec![h] });
+        out.push(ParamSpec { name: "head".into(), shape: vec![h, v] });
+    }
+    out
+}
+
+/// Flat parameter count of a stage kind — must equal the manifest's.
+pub fn stage_param_count(cfg: &ModelConfig, kind: StageKind, pp: usize) -> usize {
+    stage_shapes(cfg, kind, pp).iter().map(|s| s.len()).sum()
+}
+
+/// Byte offset table: name -> (offset, len) into the flat vector.
+pub fn offsets(cfg: &ModelConfig, kind: StageKind, pp: usize) -> Vec<(String, usize, usize)> {
+    let mut out = Vec::new();
+    let mut off = 0;
+    for s in stage_shapes(cfg, kind, pp) {
+        let n = s.len();
+        out.push((s.name, off, n));
+        off += n;
+    }
+    out
+}
+
+/// Slice one named parameter out of a stage's flat vector.
+pub fn param_of<'a>(
+    flat: &'a [f32],
+    cfg: &ModelConfig,
+    kind: StageKind,
+    pp: usize,
+    name: &str,
+) -> Option<&'a [f32]> {
+    offsets(cfg, kind, pp)
+        .into_iter()
+        .find(|(n, _, _)| n == name)
+        .map(|(_, off, len)| &flat[off..off + len])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn tiny() -> ModelConfig {
+        presets::preset("tiny").unwrap().model
+    }
+
+    #[test]
+    fn kind_of_stage_layouts() {
+        assert_eq!(StageKind::of_stage(0, 1), StageKind::Full);
+        assert_eq!(StageKind::of_stage(0, 2), StageKind::First);
+        assert_eq!(StageKind::of_stage(1, 2), StageKind::Last);
+        assert_eq!(StageKind::of_stage(1, 4), StageKind::Mid);
+        assert_eq!(StageKind::of_stage(2, 4), StageKind::Mid);
+        assert_eq!(StageKind::of_stage(3, 4), StageKind::Last);
+        assert_eq!(
+            StageKind::kinds_for(3),
+            vec![StageKind::First, StageKind::Mid, StageKind::Last]
+        );
+    }
+
+    #[test]
+    fn full_equals_sum_of_stages() {
+        // Splitting must conserve parameters: first + (pp-2)*mid + last ==
+        // full for every divisor pp.
+        let cfg = tiny();
+        for pp in [2, 4] {
+            let first = stage_param_count(&cfg, StageKind::First, pp);
+            let mid = stage_param_count(&cfg, StageKind::Mid, pp);
+            let last = stage_param_count(&cfg, StageKind::Last, pp);
+            let full = stage_param_count(&cfg, StageKind::Full, 1);
+            assert_eq!(first + mid * (pp - 2) + last, full, "pp={pp}");
+        }
+    }
+
+    #[test]
+    fn param_count_formula_matches_config() {
+        // stage shapes must agree with ModelConfig::total_params
+        // (embedding + head + transformer body).
+        let cfg = tiny();
+        let full = stage_param_count(&cfg, StageKind::Full, 1);
+        assert_eq!(full, cfg.total_params());
+    }
+
+    #[test]
+    fn offsets_are_contiguous() {
+        let cfg = tiny();
+        let offs = offsets(&cfg, StageKind::Last, 2);
+        let mut expect = 0;
+        for (_, off, len) in &offs {
+            assert_eq!(*off, expect);
+            expect += len;
+        }
+        assert_eq!(expect, stage_param_count(&cfg, StageKind::Last, 2));
+    }
+
+    #[test]
+    fn param_of_slices_named_tensor() {
+        let cfg = tiny();
+        let n = stage_param_count(&cfg, StageKind::First, 2);
+        let flat: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let embed = param_of(&flat, &cfg, StageKind::First, 2, "embed").unwrap();
+        assert_eq!(embed.len(), cfg.vocab * cfg.hidden);
+        assert_eq!(embed[0], 0.0);
+        let wq = param_of(&flat, &cfg, StageKind::First, 2, "l0.wq").unwrap();
+        assert_eq!(wq.len(), cfg.hidden * cfg.hidden);
+        assert_eq!(wq[0], (cfg.vocab * cfg.hidden + cfg.hidden) as f32);
+        assert!(param_of(&flat, &cfg, StageKind::First, 2, "head").is_none());
+    }
+
+    #[test]
+    fn takes_tokens_and_loss_flags() {
+        assert!(StageKind::First.takes_tokens());
+        assert!(StageKind::Full.takes_tokens());
+        assert!(!StageKind::Mid.takes_tokens());
+        assert!(StageKind::Last.produces_loss());
+        assert!(StageKind::Full.produces_loss());
+        assert!(!StageKind::First.produces_loss());
+    }
+}

@@ -1,0 +1,413 @@
+//! In-process message fabric.
+//!
+//! One [`Endpoint`] per worker thread. Messages are tagged so a worker
+//! can wait for *the* activation of microbatch `k` at stage boundary `s`
+//! while gossip traffic arrives interleaved — out-of-order arrivals are
+//! stashed per-endpoint and matched later, which is what makes the random
+//! pipeline routing and the asynchronous gossip step composable on one
+//! channel per worker.
+//!
+//! Latency injection: a message may carry a `deliver_at` instant; `recv`
+//! waits until then, modelling link latency without occupying the sender
+//! thread. Fault injection ([`FaultPlan`]) drops or duplicates messages
+//! deterministically for robustness tests.
+
+use crate::rngx::Pcg64;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Message kind + coordinates. `Ord` so stashes can be searched cheaply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Tag {
+    /// Kind discriminator (see the `tags` constants in [`crate::train`]).
+    pub kind: u16,
+    /// Outer coordinate (e.g. step or microbatch id).
+    pub a: u32,
+    /// Inner coordinate (e.g. stage boundary or slot).
+    pub b: u32,
+}
+
+impl Tag {
+    /// Construct a tag.
+    pub fn new(kind: u16, a: u32, b: u32) -> Tag {
+        Tag { kind, a, b }
+    }
+}
+
+/// Message body.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// Dense activations / gradients / parameters.
+    F32(Vec<f32>),
+    /// Token ids.
+    U32(Vec<u32>),
+    /// Pure control signal.
+    Control,
+}
+
+impl Payload {
+    /// Borrow as f32 slice (panics on wrong variant — tags define types).
+    pub fn f32(&self) -> &[f32] {
+        match self {
+            Payload::F32(v) => v,
+            other => panic!("expected F32 payload, got {other:?}"),
+        }
+    }
+
+    /// Take the f32 vector.
+    pub fn into_f32(self) -> Vec<f32> {
+        match self {
+            Payload::F32(v) => v,
+            other => panic!("expected F32 payload, got {other:?}"),
+        }
+    }
+
+    /// Borrow as u32 slice.
+    pub fn u32(&self) -> &[u32] {
+        match self {
+            Payload::U32(v) => v,
+            other => panic!("expected U32 payload, got {other:?}"),
+        }
+    }
+
+    /// Approximate wire size in bytes (for traffic accounting).
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Payload::F32(v) => v.len() * 4,
+            Payload::U32(v) => v.len() * 4,
+            Payload::Control => 8,
+        }
+    }
+}
+
+/// A routed message.
+#[derive(Debug)]
+pub struct Message {
+    /// Sender rank.
+    pub from: usize,
+    /// Matching tag.
+    pub tag: Tag,
+    /// Body.
+    pub payload: Payload,
+    /// Earliest delivery instant (latency injection), if any.
+    deliver_at: Option<Instant>,
+}
+
+/// Deterministic fault injection for tests.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Probability a message is silently dropped.
+    pub drop_prob: f64,
+    /// Probability a message is delivered twice.
+    pub dup_prob: f64,
+}
+
+struct Shared {
+    senders: Vec<Sender<Message>>,
+    bytes_sent: Mutex<Vec<u64>>,
+    msgs_sent: Mutex<Vec<u64>>,
+}
+
+/// The fabric: construct once, then [`Fabric::take_endpoints`] and hand
+/// one endpoint to each worker thread.
+pub struct Fabric {
+    shared: Arc<Shared>,
+    endpoints: Vec<Option<Endpoint>>,
+}
+
+impl Fabric {
+    /// Build a fully connected fabric over `n` ranks.
+    pub fn new(n: usize) -> Fabric {
+        Self::with_faults(n, FaultPlan::default(), 0)
+    }
+
+    /// Build with fault injection (seeded per-endpoint).
+    pub fn with_faults(n: usize, faults: FaultPlan, seed: u64) -> Fabric {
+        let mut senders = Vec::with_capacity(n);
+        let mut receivers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        let shared = Arc::new(Shared {
+            senders,
+            bytes_sent: Mutex::new(vec![0; n]),
+            msgs_sent: Mutex::new(vec![0; n]),
+        });
+        let endpoints = receivers
+            .into_iter()
+            .enumerate()
+            .map(|(rank, rx)| {
+                Some(Endpoint {
+                    rank,
+                    shared: shared.clone(),
+                    rx,
+                    stash: Vec::new(),
+                    latency: None,
+                    faults: faults.clone(),
+                    rng: Pcg64::seed_from_u64(seed ^ (rank as u64).wrapping_mul(0x9e3779b97f4a7c15)),
+                })
+            })
+            .collect();
+        Fabric { shared, endpoints }
+    }
+
+    /// World size.
+    pub fn world(&self) -> usize {
+        self.endpoints.len()
+    }
+
+    /// Move all endpoints out (each worker thread owns one).
+    pub fn take_endpoints(&mut self) -> Vec<Endpoint> {
+        self.endpoints
+            .iter_mut()
+            .map(|e| e.take().expect("endpoints already taken"))
+            .collect()
+    }
+
+    /// Total bytes put on the wire per rank so far (traffic accounting for
+    /// the communication-volume comparisons).
+    pub fn bytes_sent(&self) -> Vec<u64> {
+        self.shared.bytes_sent.lock().unwrap().clone()
+    }
+
+    /// Total messages sent per rank.
+    pub fn msgs_sent(&self) -> Vec<u64> {
+        self.shared.msgs_sent.lock().unwrap().clone()
+    }
+}
+
+/// One worker's handle on the fabric.
+pub struct Endpoint {
+    rank: usize,
+    shared: Arc<Shared>,
+    rx: Receiver<Message>,
+    stash: Vec<Message>,
+    latency: Option<(f64, f64)>, // (mu, sigma) log-normal seconds
+    faults: FaultPlan,
+    rng: Pcg64,
+}
+
+impl Endpoint {
+    /// This endpoint's rank.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// World size.
+    pub fn world(&self) -> usize {
+        self.shared.senders.len()
+    }
+
+    /// Enable log-normal latency injection on *outgoing* messages,
+    /// parameterized in seconds.
+    pub fn set_latency_log_normal(&mut self, mu: f64, sigma: f64) {
+        self.latency = Some((mu, sigma));
+    }
+
+    /// Send `payload` to `to` under `tag`.
+    pub fn send(&mut self, to: usize, tag: Tag, payload: Payload) {
+        {
+            let mut b = self.shared.bytes_sent.lock().unwrap();
+            b[self.rank] += payload.wire_bytes() as u64;
+            let mut m = self.shared.msgs_sent.lock().unwrap();
+            m[self.rank] += 1;
+        }
+        if self.faults.drop_prob > 0.0 && self.rng.next_f64() < self.faults.drop_prob {
+            return; // dropped on the floor
+        }
+        let deliver_at = self.latency.map(|(mu, sigma)| {
+            Instant::now() + Duration::from_secs_f64(self.rng.log_normal(mu, sigma))
+        });
+        let msg = Message {
+            from: self.rank,
+            tag,
+            payload: payload.clone(),
+            deliver_at,
+        };
+        let dup = self.faults.dup_prob > 0.0 && self.rng.next_f64() < self.faults.dup_prob;
+        // A send to a hung-up receiver is not an error for the sender —
+        // that worker has already finished (e.g. trailing gossip traffic).
+        let _ = self.shared.senders[to].send(msg);
+        if dup {
+            let _ = self.shared.senders[to].send(Message {
+                from: self.rank,
+                tag,
+                payload,
+                deliver_at,
+            });
+        }
+    }
+
+    fn honor_latency(msg: &Message) {
+        if let Some(at) = msg.deliver_at {
+            let now = Instant::now();
+            if at > now {
+                std::thread::sleep(at - now);
+            }
+        }
+    }
+
+    /// Blocking receive of the first message matching `tag` (out-of-order
+    /// arrivals under other tags are stashed).
+    pub fn recv(&mut self, tag: Tag) -> Message {
+        if let Some(i) = self.stash.iter().position(|m| m.tag == tag) {
+            let msg = self.stash.swap_remove(i);
+            Self::honor_latency(&msg);
+            return msg;
+        }
+        loop {
+            let msg = self
+                .rx
+                .recv()
+                .expect("fabric hung up while a recv was outstanding");
+            if msg.tag == tag {
+                Self::honor_latency(&msg);
+                return msg;
+            }
+            self.stash.push(msg);
+        }
+    }
+
+    /// Receive matching `tag` with a timeout; `None` on expiry (used by
+    /// fault-injection tests).
+    pub fn recv_timeout(&mut self, tag: Tag, timeout: Duration) -> Option<Message> {
+        if let Some(i) = self.stash.iter().position(|m| m.tag == tag) {
+            let msg = self.stash.swap_remove(i);
+            Self::honor_latency(&msg);
+            return Some(msg);
+        }
+        let deadline = Instant::now() + timeout;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match self.rx.recv_timeout(left) {
+                Ok(msg) if msg.tag == tag => {
+                    Self::honor_latency(&msg);
+                    return Some(msg);
+                }
+                Ok(msg) => self.stash.push(msg),
+                Err(RecvTimeoutError::Timeout) => return None,
+                Err(RecvTimeoutError::Disconnected) => return None,
+            }
+        }
+    }
+
+    /// Receive any message (FIFO across stash + channel).
+    pub fn recv_any(&mut self) -> Message {
+        if !self.stash.is_empty() {
+            let msg = self.stash.remove(0);
+            Self::honor_latency(&msg);
+            return msg;
+        }
+        let msg = self.rx.recv().expect("fabric hung up");
+        Self::honor_latency(&msg);
+        msg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn point_to_point_roundtrip() {
+        let mut f = Fabric::new(2);
+        let mut eps = f.take_endpoints();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let t = thread::spawn(move || {
+            e1.send(0, Tag::new(1, 0, 0), Payload::F32(vec![1.0, 2.0]));
+            let m = e1.recv(Tag::new(2, 0, 0));
+            assert_eq!(m.payload.u32(), &[7, 8, 9]);
+        });
+        let m = e0.recv(Tag::new(1, 0, 0));
+        assert_eq!(m.from, 1);
+        assert_eq!(m.payload.f32(), &[1.0, 2.0]);
+        e0.send(1, Tag::new(2, 0, 0), Payload::U32(vec![7, 8, 9]));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn out_of_order_tags_are_stashed() {
+        let mut f = Fabric::new(2);
+        let mut eps = f.take_endpoints();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e1.send(0, Tag::new(9, 0, 0), Payload::Control); // noise first
+        e1.send(0, Tag::new(5, 1, 2), Payload::F32(vec![3.0]));
+        let m = e0.recv(Tag::new(5, 1, 2));
+        assert_eq!(m.payload.f32(), &[3.0]);
+        let n = e0.recv(Tag::new(9, 0, 0));
+        assert_eq!(n.payload, Payload::Control);
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let mut f = Fabric::new(2);
+        let mut eps = f.take_endpoints();
+        let mut e1 = eps.pop().unwrap();
+        let _e0 = eps.pop().unwrap();
+        e1.send(0, Tag::new(1, 0, 0), Payload::F32(vec![0.0; 100]));
+        assert_eq!(f.bytes_sent()[1], 400);
+        assert_eq!(f.msgs_sent()[1], 1);
+        assert_eq!(f.bytes_sent()[0], 0);
+    }
+
+    #[test]
+    fn drops_cause_timeouts() {
+        let mut f = Fabric::with_faults(
+            2,
+            FaultPlan {
+                drop_prob: 1.0,
+                dup_prob: 0.0,
+            },
+            3,
+        );
+        let mut eps = f.take_endpoints();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e1.send(0, Tag::new(1, 0, 0), Payload::Control);
+        assert!(e0
+            .recv_timeout(Tag::new(1, 0, 0), Duration::from_millis(20))
+            .is_none());
+    }
+
+    #[test]
+    fn duplicates_are_observable_and_matchable() {
+        let mut f = Fabric::with_faults(
+            2,
+            FaultPlan {
+                drop_prob: 0.0,
+                dup_prob: 1.0,
+            },
+            4,
+        );
+        let mut eps = f.take_endpoints();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e1.send(0, Tag::new(1, 0, 0), Payload::Control);
+        assert!(e0
+            .recv_timeout(Tag::new(1, 0, 0), Duration::from_millis(20))
+            .is_some());
+        assert!(e0
+            .recv_timeout(Tag::new(1, 0, 0), Duration::from_millis(20))
+            .is_some());
+    }
+
+    #[test]
+    fn latency_injection_delays_delivery() {
+        let mut f = Fabric::new(2);
+        let mut eps = f.take_endpoints();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        // LogNormal(ln(0.03), ~0) ≈ constant 30 ms.
+        e1.set_latency_log_normal((0.03f64).ln(), 1e-6);
+        let t0 = Instant::now();
+        e1.send(0, Tag::new(1, 0, 0), Payload::Control);
+        e0.recv(Tag::new(1, 0, 0));
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+}

@@ -1,0 +1,23 @@
+//! Network substrate: a discrete-event latency simulator and an
+//! in-process message fabric.
+//!
+//! The paper's latency analysis (§5.3) models message send times as
+//! log-normal random variables and compares tree all-reduce against
+//! NoLoCo's pair averaging analytically and by simulation. Two tools live
+//! here:
+//!
+//! * [`SimClock`] / [`LatencyModel`] — a deterministic discrete-event
+//!   simulator over *virtual* time. Collectives are expressed as event
+//!   DAGs; we measure completion times without sleeping. Regenerates
+//!   Fig. 5A/5B exactly as the paper computes them.
+//! * [`Fabric`] — a real in-process message network: one endpoint per
+//!   worker thread, typed tensor messages over `std::sync::mpsc`
+//!   channels, with optional injected latency and fault injection for
+//!   tests. The distributed training driver ([`crate::train`]) runs on
+//!   this.
+
+mod fabric;
+mod simclock;
+
+pub use fabric::{Endpoint, Fabric, FaultPlan, Message, Payload, Tag};
+pub use simclock::{erf, LatencyModel, SimClock};

@@ -1,0 +1,236 @@
+//! Discrete-event simulation of communication schedules.
+//!
+//! Virtual time, no sleeping: each worker has a "ready" time, and a
+//! message from `a` to `b` completes at `max(ready_a, start) + latency`,
+//! with latencies drawn from a configurable model. The collectives cost
+//! models in [`crate::collective`] walk their communication DAGs against
+//! this clock. This is exactly the machinery behind the paper's Fig. 5A
+//! (tree-reduce vs local averaging expected time) and Fig. 5B (global
+//! blocking overhead of DiLoCo vs NoLoCo).
+
+use crate::rngx::Pcg64;
+
+/// Message latency model.
+#[derive(Clone, Debug)]
+pub enum LatencyModel {
+    /// Every message takes exactly `t`.
+    Constant(f64),
+    /// `t ~ LogNormal(mu, sigma^2)` — the paper's §5.3 model. Expected
+    /// value `exp(mu + sigma^2/2)`.
+    LogNormal { mu: f64, sigma: f64 },
+}
+
+impl LatencyModel {
+    /// Draw one message latency.
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        match self {
+            LatencyModel::Constant(t) => *t,
+            LatencyModel::LogNormal { mu, sigma } => rng.log_normal(*mu, *sigma),
+        }
+    }
+
+    /// Analytic expected value.
+    pub fn expected(&self) -> f64 {
+        match self {
+            LatencyModel::Constant(t) => *t,
+            LatencyModel::LogNormal { mu, sigma } => (mu + sigma * sigma / 2.0).exp(),
+        }
+    }
+
+    /// Analytic `E[max(t1, t2)]` of two iid draws — Eq. 7 of the paper:
+    /// `(1 + erf(sigma/2)) exp(mu + sigma^2/2)` for the log-normal case.
+    pub fn expected_max2(&self) -> f64 {
+        match self {
+            LatencyModel::Constant(t) => *t,
+            LatencyModel::LogNormal { mu, sigma } => {
+                (1.0 + erf(sigma / 2.0)) * (mu + sigma * sigma / 2.0).exp()
+            }
+        }
+    }
+}
+
+/// Error function via the Abramowitz–Stegun 7.1.26 rational approximation
+/// (|ε| < 1.5e-7 — far below the simulation noise it feeds).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Virtual-time simulator over a set of workers.
+#[derive(Clone, Debug)]
+pub struct SimClock {
+    /// Per-worker time at which the worker becomes free.
+    ready: Vec<f64>,
+    latency: LatencyModel,
+    rng: Pcg64,
+}
+
+impl SimClock {
+    /// `n` workers, all ready at t = 0.
+    pub fn new(n: usize, latency: LatencyModel, seed: u64) -> Self {
+        SimClock {
+            ready: vec![0.0; n],
+            latency,
+            rng: Pcg64::seed_from_u64(seed),
+        }
+    }
+
+    /// Number of workers.
+    pub fn world(&self) -> usize {
+        self.ready.len()
+    }
+
+    /// Worker `w`'s current ready time.
+    pub fn ready_at(&self, w: usize) -> f64 {
+        self.ready[w]
+    }
+
+    /// Advance worker `w` by local compute of duration `dt`.
+    pub fn compute(&mut self, w: usize, dt: f64) {
+        self.ready[w] += dt;
+    }
+
+    /// Simulate a message `from → to`: the receiver becomes ready no
+    /// earlier than sender-ready + latency. Returns the arrival time.
+    pub fn send(&mut self, from: usize, to: usize) -> f64 {
+        let lat = self.latency.sample(&mut self.rng);
+        let arrive = self.ready[from] + lat;
+        self.ready[to] = self.ready[to].max(arrive);
+        arrive
+    }
+
+    /// Symmetric exchange between two workers (both send, both wait):
+    /// afterwards both are ready at `max(arrival_a, arrival_b)`. This is
+    /// one NoLoCo gossip hop.
+    pub fn exchange(&mut self, a: usize, b: usize) -> f64 {
+        let la = self.latency.sample(&mut self.rng);
+        let lb = self.latency.sample(&mut self.rng);
+        let t = (self.ready[a] + la).max(self.ready[b] + lb);
+        self.ready[a] = t;
+        self.ready[b] = t;
+        t
+    }
+
+    /// Barrier: all workers wait for the slowest.
+    pub fn barrier(&mut self) -> f64 {
+        let t = self.ready.iter().cloned().fold(0.0, f64::max);
+        for r in &mut self.ready {
+            *r = t;
+        }
+        t
+    }
+
+    /// Largest ready time (current makespan).
+    pub fn makespan(&self) -> f64 {
+        self.ready.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Draw a latency from the model without attributing it to a link
+    /// (used by cost models that roll their own schedules).
+    pub fn draw_latency(&mut self) -> f64 {
+        self.latency.sample(&mut self.rng)
+    }
+
+    /// Draw from an arbitrary log-normal (e.g. inner-step compute times in
+    /// the Fig. 5B study).
+    pub fn draw_log_normal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.rng.log_normal(mu, sigma)
+    }
+
+    /// Reset all workers to t = 0 (keeps the RNG stream).
+    pub fn reset(&mut self) {
+        for r in &mut self.ready {
+            *r = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_reference_values() {
+        // erf(0)=0, erf(1)=0.8427008, erf(-1)=-erf(1), erf(2)=0.9953223.
+        assert!(erf(0.0).abs() < 1e-9);
+        assert!((erf(1.0) - 0.8427008).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427008).abs() < 1e-6);
+        assert!((erf(2.0) - 0.9953223).abs() < 1e-6);
+    }
+
+    #[test]
+    fn expected_max2_matches_monte_carlo() {
+        // Eq. 7 check: analytic E[max(t1,t2)] vs simulation.
+        let (mu, sigma) = (0.0, 0.7);
+        let m = LatencyModel::LogNormal { mu, sigma };
+        let analytic = m.expected_max2();
+        let mut rng = Pcg64::seed_from_u64(77);
+        let n = 300_000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            let a = rng.log_normal(mu, sigma);
+            let b = rng.log_normal(mu, sigma);
+            acc += a.max(b);
+        }
+        let mc = acc / n as f64;
+        assert!(
+            (mc - analytic).abs() / analytic < 0.01,
+            "mc={mc} analytic={analytic}"
+        );
+    }
+
+    #[test]
+    fn constant_model_send_is_deterministic() {
+        let mut c = SimClock::new(3, LatencyModel::Constant(2.0), 0);
+        c.compute(0, 1.0);
+        let arr = c.send(0, 1);
+        assert_eq!(arr, 3.0);
+        assert_eq!(c.ready_at(1), 3.0);
+        assert_eq!(c.ready_at(2), 0.0);
+    }
+
+    #[test]
+    fn receiver_not_rewound_by_early_message() {
+        let mut c = SimClock::new(2, LatencyModel::Constant(1.0), 0);
+        c.compute(1, 10.0);
+        c.send(0, 1);
+        assert_eq!(c.ready_at(1), 10.0); // already later than arrival
+    }
+
+    #[test]
+    fn exchange_synchronizes_pair() {
+        let mut c = SimClock::new(4, LatencyModel::Constant(0.5), 0);
+        c.compute(0, 2.0);
+        let t = c.exchange(0, 1);
+        assert_eq!(t, 2.5);
+        assert_eq!(c.ready_at(0), 2.5);
+        assert_eq!(c.ready_at(1), 2.5);
+        // Untouched workers unaffected — no global blocking.
+        assert_eq!(c.ready_at(2), 0.0);
+        assert_eq!(c.ready_at(3), 0.0);
+    }
+
+    #[test]
+    fn barrier_blocks_on_slowest() {
+        let mut c = SimClock::new(3, LatencyModel::Constant(1.0), 0);
+        c.compute(2, 5.0);
+        assert_eq!(c.barrier(), 5.0);
+        assert!(c.ready.iter().all(|&r| r == 5.0));
+    }
+
+    #[test]
+    fn makespan_tracks_max() {
+        let mut c = SimClock::new(2, LatencyModel::Constant(1.0), 0);
+        c.compute(0, 3.0);
+        assert_eq!(c.makespan(), 3.0);
+        c.reset();
+        assert_eq!(c.makespan(), 0.0);
+    }
+}

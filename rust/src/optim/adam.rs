@@ -1,0 +1,146 @@
+//! Adam (Kingma & Ba) — the paper's inner optimizer for all LM
+//! experiments (§4), with bias correction.
+
+use crate::tensor::Tensor;
+
+/// Adam state over a parameter list.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    /// First-moment EMA coefficient.
+    pub beta1: f64,
+    /// Second-moment EMA coefficient.
+    pub beta2: f64,
+    /// Denominator fuzz.
+    pub eps: f64,
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+    t: u64,
+}
+
+impl Adam {
+    /// Fresh state shaped like `params`, default (0.9, 0.95) betas — the
+    /// usual LLM setting.
+    pub fn new(params: &[Tensor]) -> Adam {
+        Adam::with_betas(params, 0.9, 0.95, 1e-8)
+    }
+
+    /// Fresh state with explicit hyper-parameters.
+    pub fn with_betas(params: &[Tensor], beta1: f64, beta2: f64, eps: f64) -> Adam {
+        Adam {
+            beta1,
+            beta2,
+            eps,
+            m: params.iter().map(|p| Tensor::zeros(p.shape())).collect(),
+            v: params.iter().map(|p| Tensor::zeros(p.shape())).collect(),
+            t: 0,
+        }
+    }
+
+    /// Steps taken so far.
+    pub fn steps(&self) -> u64 {
+        self.t
+    }
+
+    /// Borrow the moment buffers (shipped to the XLA adam artifact).
+    pub fn moments(&self) -> (&[Tensor], &[Tensor]) {
+        (&self.m, &self.v)
+    }
+
+    /// Mutable moment buffers (written back from the XLA adam artifact).
+    pub fn moments_mut(&mut self) -> (&mut [Tensor], &mut [Tensor]) {
+        (&mut self.m, &mut self.v)
+    }
+
+    /// Record that one external (artifact-side) step happened.
+    pub fn bump(&mut self) {
+        self.t += 1;
+    }
+
+    /// One host-side update with learning rate `lr`.
+    pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f64) {
+        assert_eq!(params.len(), grads.len());
+        self.t += 1;
+        let b1 = self.beta1;
+        let b2 = self.beta2;
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        for ((p, g), (m, v)) in params
+            .iter_mut()
+            .zip(grads)
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            let (ps, gs) = (p.as_mut_slice(), g.as_slice());
+            let (ms, vs) = (m.as_mut_slice(), v.as_mut_slice());
+            for i in 0..ps.len() {
+                let gi = gs[i] as f64;
+                let mi = b1 * ms[i] as f64 + (1.0 - b1) * gi;
+                let vi = b2 * vs[i] as f64 + (1.0 - b2) * gi * gi;
+                ms[i] = mi as f32;
+                vs[i] = vi as f32;
+                let mhat = mi / bc1;
+                let vhat = vi / bc2;
+                ps[i] -= (lr * mhat / (vhat.sqrt() + self.eps)) as f32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_moves_by_about_lr() {
+        // With bias correction, |Δp| ≈ lr for any gradient scale on step 1.
+        for scale in [1e-3f32, 1.0, 1e3] {
+            let mut p = vec![Tensor::from_slice(&[0.0])];
+            let g = vec![Tensor::from_slice(&[scale])];
+            let mut opt = Adam::new(&p);
+            opt.step(&mut p, &g, 0.01);
+            let d = p[0].as_slice()[0].abs();
+            assert!((d - 0.01).abs() < 1e-4, "scale={scale} d={d}");
+        }
+    }
+
+    #[test]
+    fn converges_on_quadratic_bowl() {
+        let mut p = vec![Tensor::from_slice(&[5.0, -3.0])];
+        let mut opt = Adam::new(&p);
+        for _ in 0..800 {
+            let g = vec![Tensor::from_vec(
+                p[0].as_slice().iter().map(|x| 2.0 * x).collect(),
+                &[2],
+            )];
+            opt.step(&mut p, &g, 0.05);
+        }
+        assert!(p[0].norm() < 1e-2, "norm={}", p[0].norm());
+    }
+
+    #[test]
+    fn moment_buffers_track_state() {
+        let mut p = vec![Tensor::from_slice(&[1.0])];
+        let g = vec![Tensor::from_slice(&[2.0])];
+        let mut opt = Adam::new(&p);
+        opt.step(&mut p, &g, 0.1);
+        let (m, v) = opt.moments();
+        assert!((m[0].as_slice()[0] - 0.2).abs() < 1e-6); // (1-0.9)*2
+        assert!((v[0].as_slice()[0] - 0.2).abs() < 1e-6); // (1-0.95)*4
+        assert_eq!(opt.steps(), 1);
+    }
+
+    #[test]
+    fn direction_is_descent_for_fresh_state() {
+        crate::prop::run("adam step opposes the gradient (step 1)", 60, |gn| {
+            let n = gn.usize_in(1, 16).max(1);
+            let g = Tensor::from_slice(&gn.vec_normal(n, 1.0));
+            let mut p = vec![Tensor::zeros(&[n])];
+            let mut opt = Adam::new(&p);
+            opt.step(&mut p, std::slice::from_ref(&g), 0.01);
+            // Δp · g < 0 unless g == 0.
+            let dot = p[0].dot(&g);
+            if g.norm() > 1e-6 {
+                assert!(dot < 0.0, "dot={dot}");
+            }
+        });
+    }
+}

@@ -1,0 +1,80 @@
+//! Optimizers — inner (Adam, SGD) and outer (DiLoCo Nesterov, NoLoCo
+//! modified Nesterov, Eq. 2).
+//!
+//! These are the *host-side* reference implementations: the quadratic
+//! convergence harness ([`crate::quad`]), the pure-Rust simulation paths
+//! and the property tests run on them. On the PJRT hot path the same
+//! updates execute as XLA artifacts (`adam.hlo.txt`,
+//! `outer_noloco.hlo.txt`) compiled from `python/compile/model.py`; the
+//! integration tests cross-check artifact output against these
+//! implementations.
+
+mod adam;
+mod lr;
+mod outer;
+mod sgd;
+
+pub use adam::Adam;
+pub use lr::LrSchedule;
+pub use outer::{DilocoOuter, NolocoOuter, OuterState};
+pub use sgd::Sgd;
+
+use crate::tensor::Tensor;
+
+/// Clip a gradient set to a global L2 norm (paper §4: "gradient clipping
+/// for gradients larger than unity"). Returns the pre-clip norm.
+pub fn clip_global_norm(grads: &mut [Tensor], max_norm: f64) -> f64 {
+    let norm_sq: f64 = grads.iter().map(|g| g.norm_sq()).sum();
+    let norm = norm_sq.sqrt();
+    if norm > max_norm && norm > 0.0 {
+        let s = (max_norm / norm) as f32;
+        for g in grads.iter_mut() {
+            g.scale(s);
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clip_leaves_small_gradients_alone() {
+        let mut gs = vec![Tensor::from_slice(&[0.3, 0.4])]; // norm 0.5
+        let n = clip_global_norm(&mut gs, 1.0);
+        assert!((n - 0.5).abs() < 1e-6);
+        assert_eq!(gs[0].as_slice(), &[0.3, 0.4]);
+    }
+
+    #[test]
+    fn clip_rescales_large_gradients_to_threshold() {
+        let mut gs = vec![
+            Tensor::from_slice(&[3.0, 0.0]),
+            Tensor::from_slice(&[0.0, 4.0]),
+        ]; // global norm 5
+        let n = clip_global_norm(&mut gs, 1.0);
+        assert!((n - 5.0).abs() < 1e-6);
+        let new_norm: f64 = gs.iter().map(|g| g.norm_sq()).sum::<f64>().sqrt();
+        assert!((new_norm - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn property_clip_never_increases_norm() {
+        crate::prop::run("clip never increases global norm", 100, |g| {
+            let k = g.usize_in(1, 4);
+            let mut gs: Vec<Tensor> = (0..k)
+                .map(|_| {
+                    let n = g.usize_in(1, 20).max(1);
+                    Tensor::from_slice(&g.vec_normal(n, 3.0))
+                })
+                .collect();
+            let before: f64 = gs.iter().map(|t| t.norm_sq()).sum::<f64>().sqrt();
+            let max = g.f64_in(0.1, 2.0);
+            clip_global_norm(&mut gs, max);
+            let after: f64 = gs.iter().map(|t| t.norm_sq()).sum::<f64>().sqrt();
+            assert!(after <= before + 1e-6);
+            assert!(after <= max + 1e-4);
+        });
+    }
+}

@@ -1,0 +1,303 @@
+//! Outer optimizers: DiLoCo Nesterov and the NoLoCo modified Nesterov
+//! momentum of Eq. 2.
+//!
+//! ## Sign convention
+//!
+//! The paper defines the outer gradient as `Δ_{t,i} = θ_{t+1,i} − φ_{t,i}`
+//! (Eq. 1, pointing from slow weights toward the improved fast weights)
+//! and writes Eq. 2 with `−β/n · ΣΔ`. Its own convergence appendix,
+//! however, uses `E(δ_t) = α E(δ_{t−1}) + β E(Δ_t)` (Eq. 32) — and only
+//! that sign makes `φ += δ` move *toward* the optimum (with α = γ = 0,
+//! β = 1, the update must reduce to lookahead's `φ ← mean(θ)`). We follow
+//! the appendix / working sign:
+//!
+//! ```text
+//! δ_{t,i} = α δ_{t−1,i} + (β/n) Σ_j Δ_{t,j} − γ (φ_{t,i} − (1/n) Σ_j φ_{t,j})
+//! φ_{t+1,i} = φ_{t,i} + δ_{t,i}                                  (Eq. 3)
+//! ```
+//!
+//! DiLoCo is the n = N, γ = 0 special case, with the mean over Δ computed
+//! by all-reduce instead of a random subgroup.
+
+use crate::tensor::Tensor;
+
+/// Per-replica slow-weight state shared by both outer optimizers.
+#[derive(Clone, Debug)]
+pub struct OuterState {
+    /// Slow weights φ.
+    pub phi: Vec<Tensor>,
+    /// Momentum δ (zero-initialized; App. B assumes δ₀ ≡ 0).
+    pub delta: Vec<Tensor>,
+}
+
+impl OuterState {
+    /// Initialize from the starting weights (φ₀ = initial params).
+    pub fn new(initial: &[Tensor]) -> OuterState {
+        OuterState {
+            phi: initial.to_vec(),
+            delta: initial.iter().map(|t| Tensor::zeros(t.shape())).collect(),
+        }
+    }
+
+    /// The outer gradient Δ = θ − φ for this replica (Eq. 1).
+    pub fn outer_grad(&self, theta: &[Tensor]) -> Vec<Tensor> {
+        assert_eq!(theta.len(), self.phi.len());
+        theta
+            .iter()
+            .zip(&self.phi)
+            .map(|(t, p)| {
+                let mut d = t.clone();
+                d.sub_assign(p);
+                d
+            })
+            .collect()
+    }
+}
+
+/// DiLoCo outer optimizer (Douillard et al. 2023): Nesterov momentum over
+/// the all-reduced mean outer gradient. Paper setting: α = 0.3, β = 0.7,
+/// outer step every 100 inner steps.
+#[derive(Clone, Copy, Debug)]
+pub struct DilocoOuter {
+    /// Momentum α.
+    pub alpha: f64,
+    /// Outer learning rate β.
+    pub beta: f64,
+}
+
+impl DilocoOuter {
+    /// Apply one outer step given the *already all-reduced* mean outer
+    /// gradient. After this, fast weights should be reset to `state.phi`.
+    pub fn step(&self, state: &mut OuterState, mean_outer_grad: &[Tensor]) {
+        assert_eq!(state.phi.len(), mean_outer_grad.len());
+        let (a, b) = (self.alpha as f32, self.beta as f32);
+        for (k, d) in mean_outer_grad.iter().enumerate() {
+            state.delta[k].scale(a);
+            state.delta[k].axpy(b, d);
+            let dk = state.delta[k].clone();
+            state.phi[k].add_assign(&dk);
+        }
+    }
+}
+
+/// NoLoCo outer optimizer (§3.2): the modified Nesterov update over a
+/// random subgroup (minimum size n = 2 in all paper experiments), with the
+/// weight-consensus term −γ(φ_i − φ̄). Paper setting: α = 0.5, β = 0.7,
+/// outer step every 50 inner steps.
+#[derive(Clone, Copy, Debug)]
+pub struct NolocoOuter {
+    /// Momentum α.
+    pub alpha: f64,
+    /// Outer learning rate β.
+    pub beta: f64,
+    /// Consensus coefficient γ; must satisfy the Eq. 74 window
+    /// (see [`crate::config::OuterConfig::gamma_window`]).
+    pub gamma: f64,
+}
+
+impl NolocoOuter {
+    /// One gossip outer step for this replica, given
+    ///
+    /// * `theta` — this replica's fast weights after m inner steps,
+    /// * `group_deltas` — outer gradients Δ of *every* group member
+    ///   (including this replica's own, in any order),
+    /// * `group_phis` — slow weights φ of every group member (ditto).
+    ///
+    /// For the paper's n = 2 this is one peer exchange: each side ships
+    /// (Δ_j, φ_j) — the φ can be sent early, overlapping communication
+    /// with compute, as §3.2 notes.
+    pub fn step_group(
+        &self,
+        state: &mut OuterState,
+        theta: &[Tensor],
+        group_deltas: &[Vec<Tensor>],
+        group_phis: &[Vec<Tensor>],
+    ) {
+        let n = group_deltas.len();
+        assert!(n >= 1);
+        assert_eq!(n, group_phis.len());
+        let _ = theta;
+        let (a, b, g) = (self.alpha as f32, self.beta as f32, self.gamma as f32);
+        let inv_n = 1.0 / n as f32;
+        // Split-borrow φ and δ (disjoint fields) so the update runs
+        // clone-free — the old per-tensor clones dominated this path at
+        // multi-million-parameter sizes (EXPERIMENTS.md §Perf).
+        let OuterState { phi, delta } = state;
+        for k in 0..phi.len() {
+            // δ ← α δ
+            delta[k].scale(a);
+            // δ += (β/n) Σ_j Δ_j
+            for dj in group_deltas {
+                delta[k].axpy(b * inv_n, &dj[k]);
+            }
+            // δ −= γ (φ_i − mean_j φ_j)
+            delta[k].axpy(-g, &phi[k]);
+            for pj in group_phis {
+                delta[k].axpy(g * inv_n, &pj[k]);
+            }
+            // φ += δ
+            phi[k].add_assign(&delta[k]);
+        }
+    }
+
+    /// Convenience for the n = 2 case: this replica + one peer.
+    pub fn step_pair(
+        &self,
+        state: &mut OuterState,
+        theta: &[Tensor],
+        my_delta: &[Tensor],
+        peer_delta: &[Tensor],
+        peer_phi: &[Tensor],
+    ) {
+        let my_phi = state.phi.clone();
+        self.step_group(
+            state,
+            theta,
+            &[my_delta.to_vec(), peer_delta.to_vec()],
+            &[my_phi, peer_phi.to_vec()],
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Pcg64;
+
+    fn randp(rng: &mut Pcg64, shapes: &[&[usize]]) -> Vec<Tensor> {
+        shapes.iter().map(|s| Tensor::randn(s, 1.0, rng)).collect()
+    }
+
+    #[test]
+    fn diloco_with_zero_momentum_is_lookahead() {
+        // α=0, β=1: φ ← φ + mean(θ−φ) = mean(θ).
+        let phi = vec![Tensor::from_slice(&[1.0, 2.0])];
+        let theta = vec![Tensor::from_slice(&[3.0, 6.0])];
+        let mut st = OuterState::new(&phi);
+        let d = st.outer_grad(&theta);
+        DilocoOuter { alpha: 0.0, beta: 1.0 }.step(&mut st, &d);
+        assert_eq!(st.phi[0].as_slice(), &[3.0, 6.0]);
+    }
+
+    #[test]
+    fn diloco_momentum_accumulates() {
+        let phi = vec![Tensor::from_slice(&[0.0])];
+        let mut st = OuterState::new(&phi);
+        let opt = DilocoOuter { alpha: 0.5, beta: 1.0 };
+        let d = vec![Tensor::from_slice(&[1.0])];
+        opt.step(&mut st, &d); // δ=1, φ=1
+        assert_eq!(st.phi[0].as_slice(), &[1.0]);
+        opt.step(&mut st, &d); // δ=1.5, φ=2.5
+        assert_eq!(st.phi[0].as_slice(), &[2.5]);
+    }
+
+    #[test]
+    fn noloco_full_group_gamma_zero_matches_diloco() {
+        // With the group = all replicas and γ = 0, Eq. 2 degenerates to
+        // the DiLoCo momentum (the paper notes this below Eq. 2).
+        let mut rng = Pcg64::seed_from_u64(21);
+        let shapes: &[&[usize]] = &[&[4], &[2, 3]];
+        let phi = randp(&mut rng, shapes);
+        let thetas: Vec<Vec<Tensor>> = (0..3).map(|_| randp(&mut rng, shapes)).collect();
+
+        // DiLoCo on the mean outer grad.
+        let mut st_d = OuterState::new(&phi);
+        let mut mean_d: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+        for th in &thetas {
+            for (m, d) in mean_d.iter_mut().zip(st_d.outer_grad(th)) {
+                m.axpy(1.0 / 3.0, &d);
+            }
+        }
+        DilocoOuter { alpha: 0.4, beta: 0.7 }.step(&mut st_d, &mean_d);
+
+        // NoLoCo with the whole world as the group (all φ identical).
+        let mut st_n = OuterState::new(&phi);
+        let deltas: Vec<Vec<Tensor>> = thetas.iter().map(|th| st_n.outer_grad(th)).collect();
+        let phis: Vec<Vec<Tensor>> = (0..3).map(|_| phi.clone()).collect();
+        NolocoOuter { alpha: 0.4, beta: 0.7, gamma: 0.9 } // γ inert: φ's equal
+            .step_group(&mut st_n, &thetas[0], &deltas, &phis);
+
+        for (a, b) in st_d.phi.iter().zip(&st_n.phi) {
+            for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+                assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn consensus_term_pulls_replicas_together() {
+        // β = 0 isolates the γ term: repeated pair steps must shrink the
+        // gap between two replicas' φ.
+        let opt = NolocoOuter { alpha: 0.0, beta: 0.0, gamma: 0.8 };
+        let mut a = OuterState::new(&[Tensor::from_slice(&[0.0])]);
+        let mut b = OuterState::new(&[Tensor::from_slice(&[10.0])]);
+        let zero = vec![Tensor::from_slice(&[0.0])];
+        for _ in 0..6 {
+            let pa = a.phi.clone();
+            let pb = b.phi.clone();
+            opt.step_pair(&mut a, &zero, &zero, &zero, &pb);
+            opt.step_pair(&mut b, &zero, &zero, &zero, &pa);
+        }
+        let gap = (a.phi[0].as_slice()[0] - b.phi[0].as_slice()[0]).abs();
+        assert!(gap < 1.0, "gap={gap}");
+    }
+
+    #[test]
+    fn identical_replicas_make_gamma_term_vanish() {
+        // If φ_i = φ_j the consensus term is exactly zero: γ must not
+        // perturb a converged ensemble.
+        let mut rng = Pcg64::seed_from_u64(22);
+        let phi = randp(&mut rng, &[&[8]]);
+        let theta = randp(&mut rng, &[&[8]]);
+        let run = |gamma: f64| {
+            let mut st = OuterState::new(&phi);
+            let d = st.outer_grad(&theta);
+            let opt = NolocoOuter { alpha: 0.3, beta: 0.7, gamma };
+            opt.step_pair(&mut st, &theta, &d, &d, &phi.clone());
+            st.phi[0].as_slice().to_vec()
+        };
+        let lo = run(0.0);
+        let hi = run(1.2);
+        for (x, y) in lo.iter().zip(&hi) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn phi_can_move_toward_fast_weights() {
+        // One NoLoCo pair step with positive β moves φ toward the fast
+        // weights (descent direction for the outer problem).
+        let phi = vec![Tensor::from_slice(&[0.0, 0.0])];
+        let theta = vec![Tensor::from_slice(&[1.0, -2.0])];
+        let mut st = OuterState::new(&phi);
+        let d = st.outer_grad(&theta);
+        let opt = NolocoOuter { alpha: 0.5, beta: 0.7, gamma: 0.9 };
+        opt.step_pair(&mut st, &theta, &d, &d, &phi.clone());
+        let p = st.phi[0].as_slice();
+        assert!(p[0] > 0.0 && p[0] < 1.0);
+        assert!(p[1] < 0.0 && p[1] > -2.0);
+    }
+
+    #[test]
+    fn property_average_phi_is_invariant_under_pure_consensus() {
+        // With β = 0 and any α=0 gossip pairing, the *mean* of the group's
+        // slow weights is preserved by a simultaneous pair update: the γ
+        // term is antisymmetric within the pair.
+        crate::prop::run("gossip consensus preserves pair mean", 80, |g| {
+            let n = g.usize_in(2, 24).max(2);
+            let opt = NolocoOuter { alpha: 0.0, beta: 0.0, gamma: g.f64_in(0.1, 1.3) };
+            let mut states: Vec<OuterState> = (0..2)
+                .map(|_| OuterState::new(&[Tensor::from_slice(&g.vec_normal(n, 2.0))]))
+                .collect();
+            let zero = vec![Tensor::zeros(&[n])];
+            let before: f64 =
+                states.iter().map(|s| s.phi[0].mean()).sum::<f64>() / 2.0;
+            let (a_phi, b_phi) = (states[0].phi.clone(), states[1].phi.clone());
+            opt.step_pair(&mut states[0], &zero, &zero, &zero, &b_phi);
+            opt.step_pair(&mut states[1], &zero, &zero, &zero, &a_phi);
+            let after: f64 =
+                states.iter().map(|s| s.phi[0].mean()).sum::<f64>() / 2.0;
+            assert!((before - after).abs() < 1e-5, "{before} vs {after}");
+        });
+    }
+}

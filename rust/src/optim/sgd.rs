@@ -1,0 +1,48 @@
+//! Plain stochastic gradient descent.
+//!
+//! The convergence analysis (App. A.1) assumes the inner optimizer is SGD
+//! with a constant learning rate ω; the Theorem-1 harness uses this
+//! implementation so the empirical variance law V(φ) ∝ ω² is tested
+//! against exactly the optimizer the proof assumes.
+
+use crate::tensor::Tensor;
+
+/// Constant-rate SGD over a parameter list.
+#[derive(Clone, Debug)]
+pub struct Sgd {
+    /// Learning rate ω.
+    pub lr: f64,
+}
+
+impl Sgd {
+    /// New optimizer with rate `lr`.
+    pub fn new(lr: f64) -> Sgd {
+        Sgd { lr }
+    }
+
+    /// `params -= lr * grads`.
+    pub fn step(&self, params: &mut [Tensor], grads: &[Tensor]) {
+        assert_eq!(params.len(), grads.len());
+        for (p, g) in params.iter_mut().zip(grads) {
+            p.axpy(-(self.lr as f32), g);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn descends_a_quadratic() {
+        // f(x) = x², grad 2x, from x0=1 with lr 0.1: x_{k+1} = 0.8 x_k.
+        let mut p = vec![Tensor::from_slice(&[1.0])];
+        let opt = Sgd::new(0.1);
+        for _ in 0..10 {
+            let g = vec![Tensor::from_slice(&[2.0 * p[0].as_slice()[0]])];
+            opt.step(&mut p, &g);
+        }
+        let want = 0.8f32.powi(10);
+        assert!((p[0].as_slice()[0] - want).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,256 @@
+//! Deterministic pseudo-random substrate.
+//!
+//! The image has no `rand` crate offline, so we carry our own: a PCG64
+//! generator (O'Neill 2014, `pcg_xsl_rr_128_64` variant) plus the
+//! distributions the paper's experiments need — uniform, standard normal
+//! (Box–Muller), log-normal (Fig. 5 latency model), Zipf (synthetic
+//! corpora) — and Fisher–Yates permutations (random pipeline routing,
+//! gossip pair sampling).
+//!
+//! Everything is deterministic given a seed so experiments are exactly
+//! reproducible; parallel workers derive independent streams with
+//! [`Pcg64::split`].
+
+mod pcg;
+mod zipf;
+
+pub use pcg::Pcg64;
+pub use zipf::Zipf;
+
+impl Pcg64 {
+    /// Uniform `f64` in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 mantissa bits of the next u64.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, bound)` via Lemire's multiply-shift with
+    /// rejection (unbiased).
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "next_below(0)");
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (bound as u128);
+            let lo = m as u64;
+            if lo >= bound || lo >= (u64::MAX - bound + 1) % bound {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Standard normal draw via Box–Muller (single value; the second is
+    /// discarded for simplicity — this is not a throughput hot path).
+    pub fn next_normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Normal with the given mean and standard deviation.
+    #[inline]
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.next_normal()
+    }
+
+    /// Log-normal draw: `exp(N(mu, sigma^2))`. This is the paper's message
+    /// latency model (§5.3): `t ~ LogNormal(mu, sigma^2)` with expected
+    /// value `exp(mu + sigma^2/2)`.
+    #[inline]
+    pub fn log_normal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal(mu, sigma).exp()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut p);
+        p
+    }
+
+    /// Partition `0..n` into disjoint pairs uniformly at random. When `n`
+    /// is odd the leftover index is returned in the second slot of the
+    /// final "pair" as `None`. This is the gossip-group sampler for the
+    /// NoLoCo outer step with group size n = 2 (§3.2).
+    pub fn random_pairs(&mut self, n: usize) -> Vec<(usize, Option<usize>)> {
+        let p = self.permutation(n);
+        let mut out = Vec::with_capacity(n.div_ceil(2));
+        let mut it = p.chunks(2);
+        for c in &mut it {
+            if c.len() == 2 {
+                out.push((c[0], Some(c[1])));
+            } else {
+                out.push((c[0], None));
+            }
+        }
+        out
+    }
+
+    /// Partition `0..n` into disjoint groups of `size` uniformly at
+    /// random — the general-n gossip-group sampler of §3.2 (the paper's
+    /// experiments use the minimum, `size` = 2 = [`Pcg64::random_pairs`]).
+    /// The final group holds the `n % size` leftovers when `size ∤ n`.
+    pub fn random_groups(&mut self, n: usize, size: usize) -> Vec<Vec<usize>> {
+        assert!(size >= 1);
+        let p = self.permutation(n);
+        p.chunks(size).map(|c| c.to_vec()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Pcg64::seed_from_u64(7);
+        let mut b = Pcg64::seed_from_u64(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::seed_from_u64(1);
+        let mut b = Pcg64::seed_from_u64(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut a = Pcg64::seed_from_u64(42);
+        let mut c = a.split();
+        let xs: Vec<u64> = (0..32).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..32).map(|_| c.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut r = Pcg64::seed_from_u64(3);
+        let n = 20_000;
+        let s: f64 = (0..n).map(|_| r.next_f64()).sum();
+        let mean = s / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn next_below_is_in_range_and_covers() {
+        let mut r = Pcg64::seed_from_u64(4);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.next_below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::seed_from_u64(5);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn log_normal_expected_value_matches_formula() {
+        // E[LogNormal(mu, sigma^2)] = exp(mu + sigma^2 / 2) — the paper's
+        // t_c in §5.3.
+        let (mu, sigma) = (0.3, 0.8);
+        let mut r = Pcg64::seed_from_u64(6);
+        let n = 200_000;
+        let s: f64 = (0..n).map(|_| r.log_normal(mu, sigma)).sum();
+        let mean = s / n as f64;
+        let expect = (mu + sigma * sigma / 2.0f64).exp();
+        assert!(
+            (mean - expect).abs() / expect < 0.03,
+            "mean={mean} expect={expect}"
+        );
+    }
+
+    #[test]
+    fn permutation_is_a_permutation() {
+        let mut r = Pcg64::seed_from_u64(8);
+        for n in [1usize, 2, 3, 17, 64] {
+            let mut p = r.permutation(n);
+            p.sort_unstable();
+            assert_eq!(p, (0..n).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn random_pairs_partition_everyone() {
+        let mut r = Pcg64::seed_from_u64(9);
+        for n in [2usize, 4, 5, 16, 33] {
+            let pairs = r.random_pairs(n);
+            let mut seen: Vec<usize> = pairs
+                .iter()
+                .flat_map(|(a, b)| std::iter::once(*a).chain(b.iter().copied()))
+                .collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..n).collect::<Vec<_>>());
+            let lonely = pairs.iter().filter(|(_, b)| b.is_none()).count();
+            assert_eq!(lonely, n % 2);
+        }
+    }
+
+    #[test]
+    fn random_pairs_are_uniformish() {
+        // Every ordered pair (i, j) should be matched with roughly equal
+        // frequency across many draws.
+        let mut r = Pcg64::seed_from_u64(10);
+        let n = 4;
+        let mut counts = vec![0u32; n * n];
+        let trials = 6000;
+        for _ in 0..trials {
+            for (a, b) in r.random_pairs(n) {
+                let b = b.unwrap();
+                counts[a * n + b] += 1;
+                counts[b * n + a] += 1;
+            }
+        }
+        // 4 workers -> 3 possible partners each; each worker matched every
+        // trial, so each cell expects trials/3.
+        let expect = trials as f64 / 3.0;
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    assert_eq!(counts[i * n + j], 0);
+                } else {
+                    let c = counts[i * n + j] as f64;
+                    assert!(
+                        (c - expect).abs() / expect < 0.15,
+                        "pair ({i},{j}) count {c} vs {expect}"
+                    );
+                }
+            }
+        }
+    }
+}

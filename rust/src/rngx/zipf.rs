@@ -1,0 +1,82 @@
+//! Zipf-distributed sampler for synthetic corpora.
+//!
+//! Natural-language token frequencies are approximately Zipfian; the
+//! synthetic Reddit-like / C4-like corpora in [`crate::data`] draw token
+//! ids from `P(k) ∝ 1 / (k+1)^s` over a bounded vocabulary. We use the
+//! inverse-CDF method with a precomputed cumulative table — O(log V) per
+//! draw, exact (no rejection), deterministic given the RNG stream.
+
+use super::Pcg64;
+
+/// Bounded Zipf distribution over `0..n` with exponent `s`.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// Build the sampler. `n` is the support size (vocabulary), `s > 0`
+    /// the Zipf exponent (≈1.0–1.3 for natural text).
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0 && s > 0.0, "Zipf requires n > 0, s > 0");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 0..n {
+            acc += 1.0 / ((k + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    /// Support size.
+    pub fn n(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Draw one rank in `0..n` (0 = most frequent).
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let u = rng.next_f64();
+        // First index whose cdf >= u.
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_in_range() {
+        let z = Zipf::new(100, 1.2);
+        let mut r = Pcg64::seed_from_u64(1);
+        for _ in 0..1000 {
+            assert!(z.sample(&mut r) < 100);
+        }
+    }
+
+    #[test]
+    fn rank_frequencies_decay() {
+        let z = Zipf::new(50, 1.1);
+        let mut r = Pcg64::seed_from_u64(2);
+        let mut counts = vec![0u32; 50];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut r)] += 1;
+        }
+        // Monotone-ish decay: rank 0 >> rank 10 >> rank 40.
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[40]);
+        // Rank-0 frequency matches the normalized weight within 5%.
+        let h: f64 = (1..=50).map(|k| 1.0 / (k as f64).powf(1.1)).sum();
+        let p0 = 1.0 / h;
+        let f0 = counts[0] as f64 / 100_000.0;
+        assert!((f0 - p0).abs() / p0 < 0.05, "f0={f0} p0={p0}");
+    }
+}

@@ -1,0 +1,202 @@
+//! Dynamic pipeline routing (§3.1).
+//!
+//! The model is split into `pp` consecutive stages, each replicated `dp`
+//! times. NoLoCo routes every iteration's microbatches through a *fresh
+//! random permutation* at each stage boundary: replica `i` of stage `s`
+//! sends its activations to replica `perm_s[i]` of stage `s+1`. The
+//! backward pass retraces the forward route. This samples the SWARM-style
+//! message-queue routing under equal workers and uniform topology, which
+//! the paper argues it is a good proxy for.
+//!
+//! A [`RoutePlan`] is computed by the leader (deterministically from the
+//! step index and seed, so workers can recompute it independently without
+//! a control message) and answers both directions:
+//! forward `next_of(s, i)` and backward `prev_of(s+1, j)`.
+
+use crate::config::Routing;
+use crate::rngx::Pcg64;
+
+/// The wiring of one training iteration across stage boundaries.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RoutePlan {
+    dp: usize,
+    /// `perms[s][i]` = DP index at stage `s+1` receiving stage `s`,
+    /// replica `i`'s output. `perms.len() == pp - 1`.
+    perms: Vec<Vec<usize>>,
+}
+
+impl RoutePlan {
+    /// Identity (fixed) routing: replica `i` always feeds replica `i`.
+    pub fn fixed(dp: usize, pp: usize) -> RoutePlan {
+        RoutePlan {
+            dp,
+            perms: vec![(0..dp).collect(); pp.saturating_sub(1)],
+        }
+    }
+
+    /// Fresh random permutations at every boundary.
+    pub fn random(dp: usize, pp: usize, rng: &mut Pcg64) -> RoutePlan {
+        RoutePlan {
+            dp,
+            perms: (0..pp.saturating_sub(1)).map(|_| rng.permutation(dp)).collect(),
+        }
+    }
+
+    /// Deterministic per-step plan: every worker can derive the same plan
+    /// from `(seed, step)` with no coordination traffic.
+    pub fn for_step(routing: Routing, dp: usize, pp: usize, seed: u64, step: u64) -> RoutePlan {
+        match routing {
+            Routing::Fixed => RoutePlan::fixed(dp, pp),
+            Routing::Random => {
+                let mut rng = Pcg64::new(
+                    (seed as u128) << 64 | step as u128,
+                    0x5eed_0000_0000_0000u128 | step as u128,
+                );
+                RoutePlan::random(dp, pp, &mut rng)
+            }
+        }
+    }
+
+    /// DP index at stage `stage+1` that consumes stage `stage`, replica
+    /// `i`'s output.
+    pub fn next_of(&self, stage: usize, i: usize) -> usize {
+        self.perms[stage][i]
+    }
+
+    /// Inverse: DP index at stage `stage-1` that produced the input of
+    /// stage `stage`, replica `j` — the backward-pass route.
+    pub fn prev_of(&self, stage: usize, j: usize) -> usize {
+        self.perms[stage - 1]
+            .iter()
+            .position(|&x| x == j)
+            .expect("permutation inverse")
+    }
+
+    /// DP width.
+    pub fn dp(&self) -> usize {
+        self.dp
+    }
+
+    /// Stage-boundary count (pp − 1).
+    pub fn boundaries(&self) -> usize {
+        self.perms.len()
+    }
+
+    /// Full path of the data that *starts* at stage 0, replica `i`:
+    /// the DP index it visits at each stage.
+    pub fn path_from(&self, i: usize) -> Vec<usize> {
+        let mut path = Vec::with_capacity(self.perms.len() + 1);
+        let mut cur = i;
+        path.push(cur);
+        for p in &self.perms {
+            cur = p[cur];
+            path.push(cur);
+        }
+        path
+    }
+}
+
+/// How often each ordered replica pair `(i at s, j at s+1)` is wired
+/// together over `steps` random plans — used by tests and the routing
+/// ablation to verify load balance (each pair should be hit `steps / dp`
+/// times in expectation, i.e. routing is doubly stochastic).
+pub fn pair_histogram(dp: usize, pp: usize, seed: u64, steps: u64) -> Vec<Vec<u64>> {
+    let mut hist = vec![vec![0u64; dp * dp]; pp.saturating_sub(1)];
+    for step in 0..steps {
+        let plan = RoutePlan::for_step(Routing::Random, dp, pp, seed, step);
+        for s in 0..plan.boundaries() {
+            for i in 0..dp {
+                hist[s][i * dp + plan.next_of(s, i)] += 1;
+            }
+        }
+    }
+    hist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_plan_is_identity() {
+        let p = RoutePlan::fixed(4, 3);
+        for s in 0..2 {
+            for i in 0..4 {
+                assert_eq!(p.next_of(s, i), i);
+                assert_eq!(p.prev_of(s + 1, i), i);
+            }
+        }
+    }
+
+    #[test]
+    fn prev_inverts_next() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        for _ in 0..20 {
+            let p = RoutePlan::random(6, 4, &mut rng);
+            for s in 0..p.boundaries() {
+                for i in 0..6 {
+                    assert_eq!(p.prev_of(s + 1, p.next_of(s, i)), i);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn for_step_is_deterministic_and_varies_by_step() {
+        let a = RoutePlan::for_step(Routing::Random, 8, 4, 42, 7);
+        let b = RoutePlan::for_step(Routing::Random, 8, 4, 42, 7);
+        assert_eq!(a, b);
+        let c = RoutePlan::for_step(Routing::Random, 8, 4, 42, 8);
+        assert_ne!(a, c);
+        let d = RoutePlan::for_step(Routing::Random, 8, 4, 43, 7);
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn single_stage_has_no_boundaries() {
+        let p = RoutePlan::for_step(Routing::Random, 4, 1, 0, 0);
+        assert_eq!(p.boundaries(), 0);
+        assert_eq!(p.path_from(2), vec![2]);
+    }
+
+    #[test]
+    fn paths_cover_each_stage_once() {
+        let p = RoutePlan::for_step(Routing::Random, 5, 4, 9, 3);
+        // The 5 paths at each stage form a permutation (no replica is
+        // used twice in the same stage) — this is the load-balancing
+        // guarantee of permutation routing vs independent random choice.
+        for s in 0..4 {
+            let mut used: Vec<usize> = (0..5).map(|i| p.path_from(i)[s]).collect();
+            used.sort_unstable();
+            assert_eq!(used, vec![0, 1, 2, 3, 4]);
+        }
+    }
+
+    #[test]
+    fn histogram_is_doubly_stochastic_uniform() {
+        let dp = 4;
+        let steps = 8000;
+        let hist = pair_histogram(dp, 2, 1, steps);
+        let expect = steps as f64 / dp as f64;
+        for c in &hist[0] {
+            let c = *c as f64;
+            assert!((c - expect).abs() / expect < 0.1, "count {c} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn property_routing_is_permutation() {
+        crate::prop::run("route plans are stage-wise permutations", 200, |g| {
+            let dp = g.usize_in(1, 12).max(1);
+            let pp = g.usize_in(1, 6).max(1);
+            let seed = g.rng().next_u64();
+            let step = g.rng().next_u64();
+            let p = RoutePlan::for_step(Routing::Random, dp, pp, seed, step);
+            for s in 0..p.boundaries() {
+                let mut tgt: Vec<usize> = (0..dp).map(|i| p.next_of(s, i)).collect();
+                tgt.sort_unstable();
+                assert_eq!(tgt, (0..dp).collect::<Vec<_>>());
+            }
+        });
+    }
+}

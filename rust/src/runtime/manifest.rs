@@ -1,0 +1,224 @@
+//! Artifact build manifests — the contract between `python/compile/aot.py`
+//! and the Rust runtime.
+//!
+//! Each build directory carries a `manifest.toml` (model dimensions, pp,
+//! microbatch, per-stage-kind parameter counts) written in the TOML subset
+//! [`crate::config::toml`] parses, and a `golden.toml` of reference
+//! statistics the cross-language tests assert against.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::toml::Doc;
+use crate::config::ModelConfig;
+
+/// Parsed `manifest.toml` of one artifact build.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    /// Preset name the build was lowered from.
+    pub model: String,
+    /// Pipeline stage count the stages were split for.
+    pub pp: usize,
+    /// Microbatch size (sequences) baked into fwd/bwd/loss shapes.
+    pub mb: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub layers_per_stage: usize,
+    pub intermediate: usize,
+    pub heads: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    /// Flat parameter count per stage kind (`first`/`mid`/`last`/`full`).
+    pub params: BTreeMap<String, usize>,
+}
+
+impl Manifest {
+    /// Load and parse `dir/manifest.toml`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let path = dir.as_ref().join("manifest.toml");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let doc = Doc::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let get = |k: &str| -> Result<i64> {
+            doc.get(k)
+                .and_then(|v| v.as_int())
+                .ok_or_else(|| anyhow!("manifest missing integer key `{k}`"))
+        };
+        let model = doc
+            .get("build.model")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("manifest missing `build.model`"))?
+            .to_string();
+        let mut params = BTreeMap::new();
+        for (k, v) in doc.iter() {
+            if let Some(kind) = k.strip_prefix("params.") {
+                let n = v
+                    .as_int()
+                    .ok_or_else(|| anyhow!("bad param count for `{k}`"))?;
+                params.insert(kind.to_string(), n as usize);
+            }
+        }
+        if params.is_empty() {
+            bail!("manifest has no [params] section");
+        }
+        Ok(Manifest {
+            model,
+            pp: get("build.pp")? as usize,
+            mb: get("build.mb")? as usize,
+            hidden: get("model.hidden")? as usize,
+            layers: get("model.layers")? as usize,
+            layers_per_stage: get("model.layers_per_stage")? as usize,
+            intermediate: get("model.intermediate")? as usize,
+            heads: get("model.heads")? as usize,
+            vocab: get("model.vocab")? as usize,
+            seq_len: get("model.seq_len")? as usize,
+            params,
+        })
+    }
+
+    /// Parameter count for a stage kind.
+    pub fn param_count(&self, kind: &str) -> Result<usize> {
+        self.params
+            .get(kind)
+            .copied()
+            .ok_or_else(|| anyhow!("build has no `{kind}` stage (pp = {})", self.pp))
+    }
+
+    /// Check the manifest's model dimensions against a Rust-side config —
+    /// the guard against preset drift between Python and Rust.
+    pub fn check_against(&self, cfg: &ModelConfig, pp: usize) -> Result<()> {
+        let pairs = [
+            ("hidden", self.hidden, cfg.hidden),
+            ("layers", self.layers, cfg.layers),
+            ("intermediate", self.intermediate, cfg.intermediate),
+            ("heads", self.heads, cfg.heads),
+            ("vocab", self.vocab, cfg.vocab),
+            ("seq_len", self.seq_len, cfg.seq_len),
+        ];
+        for (name, got, want) in pairs {
+            if got != want {
+                bail!("manifest {name}={got} != config {name}={want} (preset drift? re-run `make artifacts`)");
+            }
+        }
+        if self.pp != pp {
+            bail!("manifest pp={} != requested pp={pp}", self.pp);
+        }
+        if self.layers_per_stage * pp != self.layers {
+            bail!("manifest inconsistent: {} layers/stage x {pp} != {}", self.layers_per_stage, self.layers);
+        }
+        Ok(())
+    }
+}
+
+/// Locate the artifact build directory for `(model, pp)` under the
+/// artifact root, e.g. `artifacts/tiny-pp2-mb2`. When several microbatch
+/// variants exist, prefers the largest `mb` (fewest executions per batch).
+pub fn find_build(root: impl AsRef<Path>, model: &str, pp: usize) -> Result<PathBuf> {
+    let root = root.as_ref();
+    let prefix = format!("{model}-pp{pp}-mb");
+    let mut best: Option<(usize, PathBuf)> = None;
+    let entries = std::fs::read_dir(root)
+        .with_context(|| format!("listing artifact root {}", root.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        let name = match path.file_name().and_then(|n| n.to_str()) {
+            Some(n) => n.to_string(),
+            None => continue,
+        };
+        if let Some(mb_str) = name.strip_prefix(&prefix) {
+            if let Ok(mb) = mb_str.parse::<usize>() {
+                if path.join("manifest.toml").is_file()
+                    && best.as_ref().map_or(true, |(b, _)| mb > *b)
+                {
+                    best = Some((mb, path));
+                }
+            }
+        }
+    }
+    best.map(|(_, p)| p).ok_or_else(|| {
+        anyhow!(
+            "no artifact build `{prefix}*` under {} — run `make artifacts` \
+             (or add `--build {model}:{pp}:<mb>` to aot.py)",
+            root.display()
+        )
+    })
+}
+
+/// Parse a build's `golden.toml` into name -> value.
+pub fn golden(dir: impl AsRef<Path>) -> Result<BTreeMap<String, f64>> {
+    let path = dir.as_ref().join("golden.toml");
+    let text =
+        std::fs::read_to_string(&path).with_context(|| format!("reading {}", path.display()))?;
+    let mut out = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (k, v) = line
+            .split_once(" = ")
+            .ok_or_else(|| anyhow!("bad golden line `{line}`"))?;
+        out.insert(k.to_string(), v.parse::<f64>().with_context(|| format!("`{line}`"))?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[build]
+model = "tiny"
+pp = 2
+mb = 2
+[model]
+hidden = 64
+layers = 4
+layers_per_stage = 2
+intermediate = 256
+heads = 4
+vocab = 512
+seq_len = 64
+[params]
+first = 164096
+last = 164160
+"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.model, "tiny");
+        assert_eq!(m.pp, 2);
+        assert_eq!(m.mb, 2);
+        assert_eq!(m.hidden, 64);
+        assert_eq!(m.param_count("first").unwrap(), 164_096);
+        assert_eq!(m.param_count("last").unwrap(), 164_160);
+        assert!(m.param_count("mid").is_err());
+    }
+
+    #[test]
+    fn check_against_detects_drift() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let mut cfg = crate::config::presets::preset("tiny").unwrap().model;
+        m.check_against(&cfg, 2).unwrap();
+        cfg.hidden = 128;
+        let err = m.check_against(&cfg, 2).unwrap_err().to_string();
+        assert!(err.contains("hidden"), "{err}");
+        let cfg = crate::config::presets::preset("tiny").unwrap().model;
+        assert!(m.check_against(&cfg, 4).is_err());
+    }
+
+    #[test]
+    fn missing_sections_rejected() {
+        assert!(Manifest::parse("[build]\npp = 2\n").is_err());
+        assert!(Manifest::parse("nonsense").is_err());
+    }
+}

@@ -1,0 +1,227 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only module that touches the `xla` crate. The Python side
+//! (`python/compile/aot.py`) lowers every training-time function to HLO
+//! *text* — the id-safe interchange format for the pinned xla_extension
+//! 0.5.1 (see /opt/xla-example/README.md) — into one directory per
+//! `(model, pp, microbatch)` build. [`Engine`] compiles those files on the
+//! PJRT CPU client once and caches the loaded executables; the training
+//! hot path then only converts host buffers to/from [`xla::Literal`]s and
+//! calls [`Engine::execute`].
+//!
+//! Python never runs here: after `make artifacts` the Rust binary is
+//! self-contained.
+
+mod manifest;
+
+pub use manifest::{find_build, golden, Manifest};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Artifact function names (the `<kind>.<fn>.hlo.txt` middle component).
+pub mod funcs {
+    pub const INIT: &str = "init";
+    pub const FWD: &str = "fwd";
+    pub const LOSS: &str = "loss";
+    pub const BWD: &str = "bwd";
+    pub const ADAM: &str = "adam";
+    pub const OUTER_NOLOCO: &str = "outer_noloco";
+    pub const OUTER_DILOCO: &str = "outer_diloco";
+}
+
+/// A compiled-artifact execution engine bound to one PJRT client.
+///
+/// Not `Send`: PJRT client handles are thread-local by construction here.
+/// The threaded trainer builds one `Engine` per worker thread; the
+/// single-threaded simulator shares one across all logical workers.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative number of `execute` calls (hot-path telemetry).
+    executions: u64,
+}
+
+impl Engine {
+    /// Create an engine over a PJRT CPU client rooted at an artifact
+    /// directory (one `(model, pp, mb)` build).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = dir.as_ref().to_path_buf();
+        if !dir.join("manifest.toml").is_file() {
+            bail!(
+                "{} is not an artifact build dir (no manifest.toml); run `make artifacts`",
+                dir.display()
+            );
+        }
+        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+        Ok(Engine { client, dir, cache: HashMap::new(), executions: 0 })
+    }
+
+    /// The build directory this engine loads from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Parse this build's manifest.
+    pub fn manifest(&self) -> Result<Manifest> {
+        Manifest::load(&self.dir)
+    }
+
+    /// Number of `execute` calls made so far.
+    pub fn executions(&self) -> u64 {
+        self.executions
+    }
+
+    /// Compile (or fetch from cache) the artifact `"{kind}.{func}"`.
+    fn compiled(&mut self, kind: &str, func: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = format!("{kind}.{func}");
+        if !self.cache.contains_key(&key) {
+            let path = self.dir.join(format!("{key}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(wrap_xla)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(wrap_xla)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            self.cache.insert(key.clone(), exe);
+        }
+        Ok(&self.cache[&key])
+    }
+
+    /// Eagerly compile a set of functions (so first-step latency does not
+    /// pollute benchmarks).
+    pub fn warm(&mut self, kind: &str, fns: &[&str]) -> Result<()> {
+        for f in fns {
+            self.compiled(kind, f)?;
+        }
+        Ok(())
+    }
+
+    /// Execute `"{kind}.{func}"` and unpack the result tuple.
+    ///
+    /// All artifacts are lowered with `return_tuple=True`, so the single
+    /// output literal is always a tuple — even for one result.
+    ///
+    /// Implementation note: this goes through `execute_b` with
+    /// Rust-owned input buffers rather than `PjRtLoadedExecutable::execute`.
+    /// The crate's literal-based `execute` **leaks every input device
+    /// buffer** (`BufferFromHostLiteral` + `release()` with no free in
+    /// `xla_rs.cc`), ~2.5 MB per call at tiny-model sizes — found via the
+    /// RSS probe now preserved as `Engine::execute`'s regression test
+    /// `engine_execute_does_not_leak`.
+    pub fn execute(
+        &mut self,
+        kind: &str,
+        func: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        self.executions += 1;
+        self.compiled(kind, func)?; // ensure cached (drops the borrow)
+        // Input transfer: buffers owned here, freed on drop.
+        let mut bufs = Vec::with_capacity(inputs.len());
+        for lit in inputs {
+            bufs.push(
+                self.client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(wrap_xla)?,
+            );
+        }
+        let exe = &self.cache[&format!("{kind}.{func}")];
+        let out = exe.execute_b::<xla::PjRtBuffer>(&bufs).map_err(wrap_xla)?;
+        let lit = out
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("{kind}.{func}: empty execution result"))?
+            .to_literal_sync()
+            .map_err(wrap_xla)?;
+        lit.to_tuple().map_err(wrap_xla)
+    }
+}
+
+fn wrap_xla(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+// ---------------------------------------------------------------------------
+// Literal <-> host buffer conversions
+// ---------------------------------------------------------------------------
+
+/// f32 literal with a logical shape. Single-copy: the data lands directly
+/// in a literal of the right shape (no intermediate rank-1 literal +
+/// reshape — that path copies twice and showed up in the §Perf profile).
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("lit_f32: {} elements for shape {dims:?}", data.len());
+    }
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+        .map_err(wrap_xla)
+}
+
+/// i32 literal with a logical shape (token batches). Single-copy.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("lit_i32: {} elements for shape {dims:?}", data.len());
+    }
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes)
+        .map_err(wrap_xla)
+}
+
+/// i32 scalar literal (init seeds).
+pub fn lit_scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Scalars vector literal (`[6]` Adam, `[4]` outer updates).
+pub fn lit_scalars(vals: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(vals)
+}
+
+/// Copy a literal out to host f32.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(wrap_xla)
+}
+
+/// Copy a scalar f32 out of a literal.
+pub fn to_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = to_vec_f32(lit)?;
+    v.first().copied().ok_or_else(|| anyhow!("empty literal"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lit_f32_roundtrip() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = lit_f32(&xs, &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), xs);
+    }
+
+    #[test]
+    fn lit_shape_mismatch_rejected() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_i32(&[1, 2, 3], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn engine_requires_manifest() {
+        let err = match Engine::new("/tmp/definitely-not-artifacts") {
+            Err(e) => e,
+            Ok(_) => panic!("engine must reject a dir without manifest"),
+        };
+        assert!(err.to_string().contains("manifest.toml"));
+    }
+}

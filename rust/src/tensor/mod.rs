@@ -1,0 +1,285 @@
+//! Host-side flat tensors.
+//!
+//! The coordinator moves model state around as contiguous `f32` buffers:
+//! collectives average them, the gossip outer step combines them, metrics
+//! reduce them. This module is that substrate — a deliberately small,
+//! allocation-conscious flat tensor plus the BLAS-1 style kernels the hot
+//! paths need (axpy, scale, dot, reductions) and the statistics the
+//! paper's figures report (cross-replica standard deviation, Pearson
+//! correlation).
+//!
+//! Device-side math lives in XLA executables (see [`crate::runtime`]);
+//! this type is the host staging and consensus-arithmetic representation.
+
+mod stats;
+
+pub use stats::{mean, pearson, replica_std, std_dev, OnlineStats};
+
+/// A flat, contiguous `f32` buffer with a logical shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    data: Vec<f32>,
+    shape: Vec<usize>,
+}
+
+impl Tensor {
+    /// Zero tensor of the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            data: vec![0.0; n],
+            shape: shape.to_vec(),
+        }
+    }
+
+    /// Tensor filled with a constant.
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            data: vec![v; n],
+            shape: shape.to_vec(),
+        }
+    }
+
+    /// Wrap an existing buffer. Panics if the element count mismatches.
+    pub fn from_vec(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "shape/data mismatch"
+        );
+        Tensor {
+            data,
+            shape: shape.to_vec(),
+        }
+    }
+
+    /// 1-D tensor from a slice.
+    pub fn from_slice(xs: &[f32]) -> Self {
+        Tensor {
+            data: xs.to_vec(),
+            shape: vec![xs.len()],
+        }
+    }
+
+    /// Gaussian init with the given std (He/Xavier style scaling is done by
+    /// callers who know fan-in).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut crate::rngx::Pcg64) -> Self {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal(0.0, std as f64) as f32).collect();
+        Tensor {
+            data,
+            shape: shape.to_vec(),
+        }
+    }
+
+    /// Logical shape.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the tensor holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Immutable view of the backing buffer.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable view of the backing buffer.
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the backing buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret the shape (element count must match).
+    pub fn reshape(&mut self, shape: &[usize]) {
+        assert_eq!(self.data.len(), shape.iter().product::<usize>());
+        self.shape = shape.to_vec();
+    }
+
+    // ---- BLAS-1 style kernels (hot in collectives / outer steps) ----
+
+    /// `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.data.len(), other.data.len(), "axpy length mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// `self *= alpha`.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+
+    /// Elementwise in-place add.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        self.axpy(1.0, other);
+    }
+
+    /// Elementwise in-place subtract.
+    pub fn sub_assign(&mut self, other: &Tensor) {
+        self.axpy(-1.0, other);
+    }
+
+    /// Dot product.
+    pub fn dot(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.data.len(), other.data.len());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| *a as f64 * *b as f64)
+            .sum()
+    }
+
+    /// Squared L2 norm (f64 accumulation).
+    pub fn norm_sq(&self) -> f64 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum()
+    }
+
+    /// L2 norm.
+    pub fn norm(&self) -> f64 {
+        self.norm_sq().sqrt()
+    }
+
+    /// Mean of all elements (f64 accumulation).
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|x| *x as f64).sum::<f64>() / self.data.len() as f64
+    }
+
+    /// `out = (a + b) / 2` written into `a` — the pair-averaging primitive
+    /// of the NoLoCo gossip step.
+    pub fn average_with(&mut self, other: &Tensor) {
+        assert_eq!(self.data.len(), other.data.len());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a = 0.5 * (*a + *b);
+        }
+    }
+
+    /// Linear interpolation toward `other`: `self = (1-t)*self + t*other`.
+    pub fn lerp(&mut self, other: &Tensor, t: f32) {
+        assert_eq!(self.data.len(), other.data.len());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a = (1.0 - t) * *a + t * b;
+        }
+    }
+}
+
+/// Element-count-weighted flatten of a parameter list into one vector —
+/// used when the gossip step ships a whole replica's parameters as a
+/// single message.
+pub fn flatten(params: &[Tensor]) -> Vec<f32> {
+    let n: usize = params.iter().map(|p| p.len()).sum();
+    let mut out = Vec::with_capacity(n);
+    for p in params {
+        out.extend_from_slice(p.as_slice());
+    }
+    out
+}
+
+/// Inverse of [`flatten`], given the original shapes.
+pub fn unflatten(flat: &[f32], shapes: &[Vec<usize>]) -> Vec<Tensor> {
+    let mut out = Vec::with_capacity(shapes.len());
+    let mut off = 0;
+    for s in shapes {
+        let n: usize = s.iter().product();
+        out.push(Tensor::from_vec(flat[off..off + n].to_vec(), s));
+        off += n;
+    }
+    assert_eq!(off, flat.len(), "unflatten length mismatch");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Pcg64;
+
+    #[test]
+    fn zeros_full_from_vec() {
+        let z = Tensor::zeros(&[2, 3]);
+        assert_eq!(z.len(), 6);
+        assert!(z.as_slice().iter().all(|&x| x == 0.0));
+        let f = Tensor::full(&[4], 2.5);
+        assert_eq!(f.as_slice(), &[2.5; 4]);
+        let v = Tensor::from_vec(vec![1.0, 2.0], &[2, 1]);
+        assert_eq!(v.shape(), &[2, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_vec_rejects_bad_shape() {
+        Tensor::from_vec(vec![1.0; 3], &[2, 2]);
+    }
+
+    #[test]
+    fn axpy_scale_dot() {
+        let mut a = Tensor::from_slice(&[1.0, 2.0, 3.0]);
+        let b = Tensor::from_slice(&[4.0, 5.0, 6.0]);
+        a.axpy(2.0, &b);
+        assert_eq!(a.as_slice(), &[9.0, 12.0, 15.0]);
+        a.scale(0.5);
+        assert_eq!(a.as_slice(), &[4.5, 6.0, 7.5]);
+        assert!((a.dot(&b) - (4.5 * 4.0 + 6.0 * 5.0 + 7.5 * 6.0) as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn average_with_is_midpoint() {
+        let mut a = Tensor::from_slice(&[0.0, 2.0]);
+        let b = Tensor::from_slice(&[4.0, 2.0]);
+        a.average_with(&b);
+        assert_eq!(a.as_slice(), &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn lerp_endpoints() {
+        let a0 = Tensor::from_slice(&[1.0, -1.0]);
+        let b = Tensor::from_slice(&[3.0, 5.0]);
+        let mut a = a0.clone();
+        a.lerp(&b, 0.0);
+        assert_eq!(a, a0);
+        a.lerp(&b, 1.0);
+        assert_eq!(a.as_slice(), b.as_slice());
+    }
+
+    #[test]
+    fn flatten_unflatten_roundtrip() {
+        let mut rng = Pcg64::seed_from_u64(11);
+        let params = vec![
+            Tensor::randn(&[3, 4], 1.0, &mut rng),
+            Tensor::randn(&[5], 1.0, &mut rng),
+            Tensor::randn(&[2, 2, 2], 1.0, &mut rng),
+        ];
+        let shapes: Vec<Vec<usize>> = params.iter().map(|p| p.shape().to_vec()).collect();
+        let flat = flatten(&params);
+        assert_eq!(flat.len(), 12 + 5 + 8);
+        let back = unflatten(&flat, &shapes);
+        assert_eq!(back, params);
+    }
+
+    #[test]
+    fn randn_moments() {
+        let mut rng = Pcg64::seed_from_u64(12);
+        let t = Tensor::randn(&[10_000], 0.02, &mut rng);
+        assert!(t.mean().abs() < 0.001);
+        let var = t.norm_sq() / t.len() as f64;
+        assert!((var.sqrt() - 0.02).abs() < 0.002);
+    }
+}

@@ -1,0 +1,208 @@
+//! Statistics for the paper's figures.
+//!
+//! Fig. 3B tracks the standard deviation of model weights *across data
+//! parallel replicas* (normalized by its max over the run) and reports the
+//! Pearson correlation between that σ and the learning-rate schedule
+//! (0.91–0.97 in the paper). These helpers compute exactly those
+//! quantities, plus a Welford online accumulator used by the benches.
+
+use super::Tensor;
+
+/// Arithmetic mean of a slice (empty → 0).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation of a slice.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Pearson correlation coefficient of two equal-length series.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len(), "pearson length mismatch");
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        let dx = x - mx;
+        let dy = y - my;
+        cov += dx * dy;
+        vx += dx * dx;
+        vy += dy * dy;
+    }
+    if vx == 0.0 || vy == 0.0 {
+        return 0.0;
+    }
+    cov / (vx.sqrt() * vy.sqrt())
+}
+
+/// Mean elementwise standard deviation across a set of same-shaped replica
+/// tensors — the paper's "standard deviation of the model weights across
+/// the data parallel world size" (Fig. 3B, Fig. 4A).
+///
+/// For each coordinate we compute the std over replicas, then average over
+/// coordinates; this matches treating the weight vector entries as samples
+/// of the replica-divergence process.
+pub fn replica_std(replicas: &[&Tensor]) -> f64 {
+    assert!(!replicas.is_empty());
+    let n = replicas[0].len();
+    for r in replicas {
+        assert_eq!(r.len(), n, "replica shape mismatch");
+    }
+    let k = replicas.len() as f64;
+    if replicas.len() < 2 || n == 0 {
+        return 0.0;
+    }
+    let mut acc = 0.0;
+    for i in 0..n {
+        let mut m = 0.0;
+        for r in replicas {
+            m += r.as_slice()[i] as f64;
+        }
+        m /= k;
+        let mut v = 0.0;
+        for r in replicas {
+            let d = r.as_slice()[i] as f64 - m;
+            v += d * d;
+        }
+        acc += (v / k).sqrt();
+    }
+    acc / n as f64
+}
+
+/// Welford online mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    /// Fresh accumulator.
+    pub fn new() -> Self {
+        OnlineStats {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Fold in one observation.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Running mean.
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Population standard deviation.
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Smallest observation.
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Largest observation.
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let zs = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&xs, &zs) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_uncorrelated_is_small() {
+        let mut rng = crate::rngx::Pcg64::seed_from_u64(13);
+        let xs: Vec<f64> = (0..5000).map(|_| rng.next_normal()).collect();
+        let ys: Vec<f64> = (0..5000).map(|_| rng.next_normal()).collect();
+        assert!(pearson(&xs, &ys).abs() < 0.05);
+    }
+
+    #[test]
+    fn replica_std_zero_for_identical() {
+        let t = Tensor::from_slice(&[1.0, 2.0, 3.0]);
+        assert_eq!(replica_std(&[&t, &t, &t]), 0.0);
+    }
+
+    #[test]
+    fn replica_std_matches_hand_computed() {
+        let a = Tensor::from_slice(&[0.0, 0.0]);
+        let b = Tensor::from_slice(&[2.0, 4.0]);
+        // Coord 0: mean 1, std 1. Coord 1: mean 2, std 2. Mean = 1.5.
+        assert!((replica_std(&[&a, &b]) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs = [1.0, 2.0, 3.5, -1.0, 0.25, 8.0];
+        let mut o = OnlineStats::new();
+        for &x in &xs {
+            o.push(x);
+        }
+        assert!((o.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((o.std_dev() - std_dev(&xs)).abs() < 1e-12);
+        assert_eq!(o.min(), -1.0);
+        assert_eq!(o.max(), 8.0);
+        assert_eq!(o.count(), 6);
+    }
+}

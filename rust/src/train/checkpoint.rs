@@ -1,0 +1,264 @@
+//! Training-state checkpoints.
+//!
+//! NoLoCo produces an *ensemble* of replicas (the paper's §6 observation),
+//! so a checkpoint stores every worker's full state: fast weights θ, Adam
+//! moments, slow weights φ and outer momentum δ. Format: a small
+//! self-describing little-endian binary (magic + version + grid shape +
+//! per-worker records). Data-loader cursors are *not* captured — resuming
+//! re-reads the stream from the configured position, which is the usual
+//! trade-off for deterministic synthetic data.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::state::WorkerState;
+
+const MAGIC: &[u8; 8] = b"NOLOCKPT";
+const VERSION: u32 = 1;
+
+/// A serialized snapshot of the whole worker grid.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Inner step the snapshot was taken after.
+    pub step: u64,
+    /// Data-parallel world size.
+    pub dp: u32,
+    /// Pipeline stages.
+    pub pp: u32,
+    /// Worker records, stage-major (`stage * dp + replica`).
+    pub workers: Vec<WorkerRecord>,
+}
+
+/// One worker's tensors.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerRecord {
+    pub stage: u32,
+    pub replica: u32,
+    pub adam_t: u64,
+    pub theta: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Empty for FSDP runs.
+    pub phi: Vec<f32>,
+    /// Empty for FSDP runs.
+    pub delta: Vec<f32>,
+}
+
+impl Checkpoint {
+    /// Snapshot a worker grid.
+    pub fn capture(step: u64, dp: usize, pp: usize, workers: &[WorkerState]) -> Checkpoint {
+        assert_eq!(workers.len(), dp * pp);
+        Checkpoint {
+            step,
+            dp: dp as u32,
+            pp: pp as u32,
+            workers: workers
+                .iter()
+                .map(|w| WorkerRecord {
+                    stage: w.stage as u32,
+                    replica: w.replica as u32,
+                    adam_t: w.adam_t,
+                    theta: w.theta.clone(),
+                    m: w.m.clone(),
+                    v: w.v.clone(),
+                    phi: w.phi.clone(),
+                    delta: w.delta.clone(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Restore tensors into a live worker grid (shapes must match).
+    pub fn restore(&self, workers: &mut [WorkerState]) -> Result<u64> {
+        ensure!(
+            workers.len() == self.workers.len(),
+            "grid mismatch: checkpoint has {} workers, run has {}",
+            self.workers.len(),
+            workers.len()
+        );
+        for (w, rec) in workers.iter_mut().zip(&self.workers) {
+            ensure!(
+                w.stage == rec.stage as usize && w.replica == rec.replica as usize,
+                "worker order mismatch at ({}, {})",
+                rec.stage,
+                rec.replica
+            );
+            ensure!(
+                w.theta.len() == rec.theta.len(),
+                "shape mismatch at ({}, {}): {} vs {}",
+                rec.stage,
+                rec.replica,
+                w.theta.len(),
+                rec.theta.len()
+            );
+            w.theta.copy_from_slice(&rec.theta);
+            w.m.copy_from_slice(&rec.m);
+            w.v.copy_from_slice(&rec.v);
+            w.adam_t = rec.adam_t;
+            w.phi = rec.phi.clone();
+            w.delta = rec.delta.clone();
+        }
+        Ok(self.step)
+    }
+
+    /// Write to a file (creating parent directories).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+        );
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&self.step.to_le_bytes())?;
+        w.write_all(&self.dp.to_le_bytes())?;
+        w.write_all(&self.pp.to_le_bytes())?;
+        for rec in &self.workers {
+            w.write_all(&rec.stage.to_le_bytes())?;
+            w.write_all(&rec.replica.to_le_bytes())?;
+            w.write_all(&rec.adam_t.to_le_bytes())?;
+            for buf in [&rec.theta, &rec.m, &rec.v, &rec.phi, &rec.delta] {
+                write_f32s(&mut w, buf)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Read back from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let path = path.as_ref();
+        let mut r = BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{} is not a NoLoCo checkpoint", path.display());
+        }
+        let version = read_u32(&mut r)?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let step = read_u64(&mut r)?;
+        let dp = read_u32(&mut r)?;
+        let pp = read_u32(&mut r)?;
+        let n = (dp * pp) as usize;
+        let mut workers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let stage = read_u32(&mut r)?;
+            let replica = read_u32(&mut r)?;
+            let adam_t = read_u64(&mut r)?;
+            let theta = read_f32s(&mut r)?;
+            let m = read_f32s(&mut r)?;
+            let v = read_f32s(&mut r)?;
+            let phi = read_f32s(&mut r)?;
+            let delta = read_f32s(&mut r)?;
+            workers.push(WorkerRecord { stage, replica, adam_t, theta, m, v, phi, delta });
+        }
+        Ok(Checkpoint { step, dp, pp, workers })
+    }
+}
+
+fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
+    w.write_all(&(xs.len() as u64).to_le_bytes())?;
+    for x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f32s<R: Read>(r: &mut R) -> Result<Vec<f32>> {
+    let n = read_u64(r)? as usize;
+    // 1 GiB sanity cap: a corrupt length should error, not OOM.
+    ensure!(n < (1 << 28), "implausible tensor length {n}");
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Method;
+    use crate::model::StageKind;
+
+    fn grid() -> Vec<WorkerState> {
+        let mut ws = Vec::new();
+        for s in 0..2 {
+            for r in 0..2 {
+                let mut w = WorkerState::new(
+                    s,
+                    r,
+                    StageKind::of_stage(s, 2),
+                    vec![s as f32 + r as f32 * 0.5; 7],
+                    Method::NoLoCo,
+                );
+                w.adam_t = 5;
+                w.m[0] = 0.25;
+                ws.push(w);
+            }
+        }
+        ws
+    }
+
+    #[test]
+    fn roundtrip_through_file() {
+        let ws = grid();
+        let ck = Checkpoint::capture(123, 2, 2, &ws);
+        let path = std::env::temp_dir().join("noloco_ckpt_test.bin");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn restore_into_grid() {
+        let ws = grid();
+        let ck = Checkpoint::capture(9, 2, 2, &ws);
+        let mut fresh = grid();
+        for w in &mut fresh {
+            w.theta.iter_mut().for_each(|x| *x = -1.0);
+            w.adam_t = 0;
+        }
+        let step = ck.restore(&mut fresh).unwrap();
+        assert_eq!(step, 9);
+        assert_eq!(fresh[3].theta, ws[3].theta);
+        assert_eq!(fresh[0].adam_t, 5);
+    }
+
+    #[test]
+    fn restore_rejects_shape_mismatch() {
+        let ws = grid();
+        let ck = Checkpoint::capture(0, 2, 2, &ws);
+        let mut wrong = vec![ws[0].clone()];
+        assert!(ck.restore(&mut wrong).is_err());
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = std::env::temp_dir().join("noloco_ckpt_garbage.bin");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,292 @@
+//! Typed wrappers around the artifact functions.
+//!
+//! Each wrapper packs host buffers into literals, invokes the compiled
+//! executable, and unpacks the tuple — the *only* place argument order of
+//! the Python-lowered functions is encoded on the Rust side (and the
+//! cross-language golden tests in `rust/tests/runtime_e2e.rs` pin it).
+
+use anyhow::{ensure, Result};
+
+use crate::model::StageKind;
+use crate::runtime::{self, funcs, Engine, Manifest};
+
+/// Adam hyper-parameters for the scalar operand (paper §4 settings).
+#[derive(Clone, Copy, Debug)]
+pub struct AdamScalars {
+    pub lr: f32,
+    /// 1-based step count (bias correction).
+    pub t: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// Global-norm clip threshold (paper: 1.0).
+    pub clip: f32,
+}
+
+impl AdamScalars {
+    /// Paper defaults at a given LR and step.
+    pub fn at(lr: f64, t: u64, clip: f64) -> AdamScalars {
+        AdamScalars {
+            lr: lr as f32,
+            t: t as f32,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            clip: clip as f32,
+        }
+    }
+
+    fn pack(&self) -> [f32; 6] {
+        [self.lr, self.t, self.beta1, self.beta2, self.eps, self.clip]
+    }
+}
+
+/// Initialize a stage's flat parameters on-device (the `init` artifact).
+pub fn init_stage(eng: &mut Engine, kind: StageKind, seed: i32) -> Result<Vec<f32>> {
+    let out = eng.execute(kind.as_str(), funcs::INIT, &[runtime::lit_scalar_i32(seed)])?;
+    runtime::to_vec_f32(&out[0])
+}
+
+/// Forward a token-consuming stage (`first`): tokens -> hidden.
+pub fn fwd_first(eng: &mut Engine, man: &Manifest, flat: &[f32], toks: &[i32]) -> Result<Vec<f32>> {
+    let (mb, s) = (man.mb, man.seq_len);
+    ensure!(toks.len() == mb * s, "fwd_first: token shape");
+    let out = eng.execute(
+        "first",
+        funcs::FWD,
+        &[
+            runtime::lit_f32(flat, &[flat.len()])?,
+            runtime::lit_i32(toks, &[mb, s])?,
+        ],
+    )?;
+    runtime::to_vec_f32(&out[0])
+}
+
+/// Forward an interior stage (`mid`): hidden -> hidden.
+pub fn fwd_mid(eng: &mut Engine, man: &Manifest, flat: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+    let (mb, s, h) = (man.mb, man.seq_len, man.hidden);
+    ensure!(x.len() == mb * s * h, "fwd_mid: hidden shape");
+    let out = eng.execute(
+        "mid",
+        funcs::FWD,
+        &[
+            runtime::lit_f32(flat, &[flat.len()])?,
+            runtime::lit_f32(x, &[mb, s, h])?,
+        ],
+    )?;
+    runtime::to_vec_f32(&out[0])
+}
+
+/// Validation loss of the `last` stage: (hidden, tokens) -> mean nll.
+pub fn loss_last(
+    eng: &mut Engine,
+    man: &Manifest,
+    flat: &[f32],
+    x: &[f32],
+    toks: &[i32],
+) -> Result<f32> {
+    let (mb, s, h) = (man.mb, man.seq_len, man.hidden);
+    let out = eng.execute(
+        "last",
+        funcs::LOSS,
+        &[
+            runtime::lit_f32(flat, &[flat.len()])?,
+            runtime::lit_f32(x, &[mb, s, h])?,
+            runtime::lit_i32(toks, &[mb, s])?,
+        ],
+    )?;
+    runtime::to_f32(&out[0])
+}
+
+/// Validation loss of the `full` (pp = 1) stage.
+pub fn loss_full(eng: &mut Engine, man: &Manifest, flat: &[f32], toks: &[i32]) -> Result<f32> {
+    let (mb, s) = (man.mb, man.seq_len);
+    let out = eng.execute(
+        "full",
+        funcs::LOSS,
+        &[
+            runtime::lit_f32(flat, &[flat.len()])?,
+            runtime::lit_i32(toks, &[mb, s])?,
+        ],
+    )?;
+    runtime::to_f32(&out[0])
+}
+
+/// Backward of `last`: (hidden, tokens) -> (loss, param grads, input grad).
+pub fn bwd_last(
+    eng: &mut Engine,
+    man: &Manifest,
+    flat: &[f32],
+    x: &[f32],
+    toks: &[i32],
+) -> Result<(f32, Vec<f32>, Vec<f32>)> {
+    let (mb, s, h) = (man.mb, man.seq_len, man.hidden);
+    let out = eng.execute(
+        "last",
+        funcs::BWD,
+        &[
+            runtime::lit_f32(flat, &[flat.len()])?,
+            runtime::lit_f32(x, &[mb, s, h])?,
+            runtime::lit_i32(toks, &[mb, s])?,
+        ],
+    )?;
+    ensure!(out.len() == 3, "last.bwd arity");
+    Ok((
+        runtime::to_f32(&out[0])?,
+        runtime::to_vec_f32(&out[1])?,
+        runtime::to_vec_f32(&out[2])?,
+    ))
+}
+
+/// Backward of `mid`: (x_in, g_out) -> (param grads, input grad).
+pub fn bwd_mid(
+    eng: &mut Engine,
+    man: &Manifest,
+    flat: &[f32],
+    x: &[f32],
+    g: &[f32],
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let (mb, s, h) = (man.mb, man.seq_len, man.hidden);
+    let out = eng.execute(
+        "mid",
+        funcs::BWD,
+        &[
+            runtime::lit_f32(flat, &[flat.len()])?,
+            runtime::lit_f32(x, &[mb, s, h])?,
+            runtime::lit_f32(g, &[mb, s, h])?,
+        ],
+    )?;
+    ensure!(out.len() == 2, "mid.bwd arity");
+    Ok((runtime::to_vec_f32(&out[0])?, runtime::to_vec_f32(&out[1])?))
+}
+
+/// Backward of `first`: (tokens, g_out) -> param grads.
+pub fn bwd_first(
+    eng: &mut Engine,
+    man: &Manifest,
+    flat: &[f32],
+    toks: &[i32],
+    g: &[f32],
+) -> Result<Vec<f32>> {
+    let (mb, s, h) = (man.mb, man.seq_len, man.hidden);
+    let out = eng.execute(
+        "first",
+        funcs::BWD,
+        &[
+            runtime::lit_f32(flat, &[flat.len()])?,
+            runtime::lit_i32(toks, &[mb, s])?,
+            runtime::lit_f32(g, &[mb, s, h])?,
+        ],
+    )?;
+    runtime::to_vec_f32(&out[0])
+}
+
+/// Backward of `full`: tokens -> (loss, param grads).
+pub fn bwd_full(
+    eng: &mut Engine,
+    man: &Manifest,
+    flat: &[f32],
+    toks: &[i32],
+) -> Result<(f32, Vec<f32>)> {
+    let (mb, s) = (man.mb, man.seq_len);
+    let out = eng.execute(
+        "full",
+        funcs::BWD,
+        &[
+            runtime::lit_f32(flat, &[flat.len()])?,
+            runtime::lit_i32(toks, &[mb, s])?,
+        ],
+    )?;
+    ensure!(out.len() == 2, "full.bwd arity");
+    Ok((runtime::to_f32(&out[0])?, runtime::to_vec_f32(&out[1])?))
+}
+
+/// One fused Adam step (`adam` artifact): updates `(flat, m, v)` in place.
+pub fn adam_step(
+    eng: &mut Engine,
+    kind: StageKind,
+    flat: &mut Vec<f32>,
+    m: &mut Vec<f32>,
+    v: &mut Vec<f32>,
+    g: &[f32],
+    sc: AdamScalars,
+) -> Result<()> {
+    let n = flat.len();
+    let out = eng.execute(
+        kind.as_str(),
+        funcs::ADAM,
+        &[
+            runtime::lit_f32(flat, &[n])?,
+            runtime::lit_f32(m, &[n])?,
+            runtime::lit_f32(v, &[n])?,
+            runtime::lit_f32(g, &[n])?,
+            runtime::lit_scalars(&sc.pack()),
+        ],
+    )?;
+    ensure!(out.len() == 3, "adam arity");
+    *flat = runtime::to_vec_f32(&out[0])?;
+    *m = runtime::to_vec_f32(&out[1])?;
+    *v = runtime::to_vec_f32(&out[2])?;
+    Ok(())
+}
+
+/// Fused NoLoCo outer step (Eq. 2–3) over group *sums*: updates
+/// `(phi, delta)` in place. `inv_n` is `1/group-size`.
+#[allow(clippy::too_many_arguments)]
+pub fn outer_noloco(
+    eng: &mut Engine,
+    kind: StageKind,
+    phi: &mut Vec<f32>,
+    delta: &mut Vec<f32>,
+    dsum: &[f32],
+    psum: &[f32],
+    alpha: f32,
+    beta: f32,
+    gamma: f32,
+    inv_n: f32,
+) -> Result<()> {
+    let n = phi.len();
+    let out = eng.execute(
+        kind.as_str(),
+        funcs::OUTER_NOLOCO,
+        &[
+            runtime::lit_f32(phi, &[n])?,
+            runtime::lit_f32(delta, &[n])?,
+            runtime::lit_f32(dsum, &[n])?,
+            runtime::lit_f32(psum, &[n])?,
+            runtime::lit_scalars(&[alpha, beta, gamma, inv_n]),
+        ],
+    )?;
+    ensure!(out.len() == 2, "outer_noloco arity");
+    *phi = runtime::to_vec_f32(&out[0])?;
+    *delta = runtime::to_vec_f32(&out[1])?;
+    Ok(())
+}
+
+/// Fused DiLoCo outer step over the all-reduced *mean* outer gradient:
+/// updates `(phi, delta)` in place.
+pub fn outer_diloco(
+    eng: &mut Engine,
+    kind: StageKind,
+    phi: &mut Vec<f32>,
+    delta: &mut Vec<f32>,
+    dmean: &[f32],
+    alpha: f32,
+    beta: f32,
+) -> Result<()> {
+    let n = phi.len();
+    let out = eng.execute(
+        kind.as_str(),
+        funcs::OUTER_DILOCO,
+        &[
+            runtime::lit_f32(phi, &[n])?,
+            runtime::lit_f32(delta, &[n])?,
+            runtime::lit_f32(dmean, &[n])?,
+            runtime::lit_scalars(&[alpha, beta, 0.0, 1.0]),
+        ],
+    )?;
+    ensure!(out.len() == 2, "outer_diloco arity");
+    *phi = runtime::to_vec_f32(&out[0])?;
+    *delta = runtime::to_vec_f32(&out[1])?;
+    Ok(())
+}

@@ -1,0 +1,159 @@
+//! Per-worker training state.
+//!
+//! A *worker* owns one pipeline stage of one data-parallel replica:
+//! fast weights θ, Adam moments, and (for the inner/outer methods) the
+//! slow weights φ and outer momentum δ of Eq. 1–3.
+
+use crate::config::Method;
+use crate::model::StageKind;
+
+/// State of worker `(stage, replica)`.
+#[derive(Clone, Debug)]
+pub struct WorkerState {
+    /// Pipeline stage index.
+    pub stage: usize,
+    /// Data-parallel replica index.
+    pub replica: usize,
+    /// Stage kind (selects the artifact set).
+    pub kind: StageKind,
+    /// Fast weights θ (flat).
+    pub theta: Vec<f32>,
+    /// Adam first moment.
+    pub m: Vec<f32>,
+    /// Adam second moment.
+    pub v: Vec<f32>,
+    /// Adam step count (1-based at first use).
+    pub adam_t: u64,
+    /// Slow weights φ (empty for FSDP).
+    pub phi: Vec<f32>,
+    /// Outer momentum δ (empty for FSDP).
+    pub delta: Vec<f32>,
+    /// Microbatch-accumulated gradient.
+    pub grad_acc: Vec<f32>,
+    /// Microbatches accumulated since the last optimizer step.
+    pub acc_count: usize,
+}
+
+impl WorkerState {
+    /// Fresh worker from shared initial weights (φ₀ ≡ θ₀ across replicas).
+    pub fn new(
+        stage: usize,
+        replica: usize,
+        kind: StageKind,
+        init: Vec<f32>,
+        method: Method,
+    ) -> WorkerState {
+        let n = init.len();
+        let (phi, delta) = if method == Method::Fsdp {
+            (Vec::new(), Vec::new())
+        } else {
+            (init.clone(), vec![0.0; n])
+        };
+        WorkerState {
+            stage,
+            replica,
+            kind,
+            theta: init,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            adam_t: 0,
+            phi,
+            delta,
+            grad_acc: vec![0.0; n],
+            acc_count: 0,
+        }
+    }
+
+    /// Parameter count.
+    pub fn len(&self) -> usize {
+        self.theta.len()
+    }
+
+    /// True when the worker holds no parameters (never in practice).
+    pub fn is_empty(&self) -> bool {
+        self.theta.is_empty()
+    }
+
+    /// Add one microbatch's gradient into the accumulator.
+    pub fn accumulate(&mut self, g: &[f32]) {
+        assert_eq!(g.len(), self.grad_acc.len());
+        for (a, x) in self.grad_acc.iter_mut().zip(g) {
+            *a += x;
+        }
+        self.acc_count += 1;
+    }
+
+    /// Drain the accumulator as the microbatch-mean gradient.
+    pub fn take_mean_grad(&mut self) -> Vec<f32> {
+        assert!(self.acc_count > 0, "no gradients accumulated");
+        let inv = 1.0 / self.acc_count as f32;
+        let mut g = std::mem::take(&mut self.grad_acc);
+        for x in &mut g {
+            *x *= inv;
+        }
+        self.grad_acc = vec![0.0; g.len()];
+        self.acc_count = 0;
+        g
+    }
+
+    /// Outer gradient Δ = θ − φ (Eq. 1).
+    pub fn outer_grad(&self) -> Vec<f32> {
+        assert!(!self.phi.is_empty(), "outer_grad needs slow weights");
+        self.theta
+            .iter()
+            .zip(&self.phi)
+            .map(|(t, p)| t - p)
+            .collect()
+    }
+
+    /// Reset fast weights to the (just-updated) slow weights; the start of
+    /// the next inner phase in DiLoCo/NoLoCo.
+    pub fn reset_theta_to_phi(&mut self) {
+        self.theta.copy_from_slice(&self.phi);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(method: Method) -> WorkerState {
+        WorkerState::new(0, 0, StageKind::Full, vec![1.0, 2.0, 3.0], method)
+    }
+
+    #[test]
+    fn fsdp_has_no_outer_state() {
+        let st = w(Method::Fsdp);
+        assert!(st.phi.is_empty() && st.delta.is_empty());
+        let st = w(Method::NoLoCo);
+        assert_eq!(st.phi, st.theta);
+        assert_eq!(st.delta, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn accumulate_and_mean() {
+        let mut st = w(Method::Fsdp);
+        st.accumulate(&[1.0, 2.0, 3.0]);
+        st.accumulate(&[3.0, 2.0, 1.0]);
+        let g = st.take_mean_grad();
+        assert_eq!(g, vec![2.0, 2.0, 2.0]);
+        assert_eq!(st.acc_count, 0);
+        assert_eq!(st.grad_acc, vec![0.0; 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "no gradients accumulated")]
+    fn mean_grad_requires_accumulation() {
+        w(Method::Fsdp).take_mean_grad();
+    }
+
+    #[test]
+    fn outer_grad_is_theta_minus_phi() {
+        let mut st = w(Method::NoLoCo);
+        st.theta = vec![2.0, 4.0, 6.0];
+        assert_eq!(st.outer_grad(), vec![1.0, 2.0, 3.0]);
+        st.phi = vec![0.0, 0.0, 0.0];
+        st.reset_theta_to_phi();
+        assert_eq!(st.theta, vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,555 @@
+//! Threaded executor: one OS thread + PJRT engine per worker, all
+//! communication over the in-process message [`Fabric`].
+//!
+//! This is the "real system" counterpart of [`super::SimTrainer`]: the
+//! same algorithm, but no shared state — every activation, gradient,
+//! token batch, all-reduce and gossip exchange is an actual message, and
+//! workers only coordinate through deterministic shared-seed derivations
+//! (route plans and gossip pairings are *computed*, not negotiated — the
+//! same trick SWARM-style systems use to avoid a routing master).
+//!
+//! Latency injection (`latency_log_normal`) turns the fabric into the
+//! paper's §5.3 network model, making the blocking-communication effects
+//! of Fig. 5B measurable in wall-clock terms on the real pipeline.
+
+use std::thread;
+
+use anyhow::{anyhow, Result};
+
+use crate::collective::all_reduce_mean;
+use crate::config::{Method, TrainConfig};
+use crate::data::Loader;
+use crate::metrics::perplexity;
+use crate::model::StageKind;
+use crate::net::{Endpoint, Fabric, Payload, Tag};
+use crate::optim::LrSchedule;
+use crate::rngx::Pcg64;
+use crate::routing::RoutePlan;
+use crate::runtime::{find_build, Engine, Manifest};
+
+use super::exec::{self, AdamScalars};
+use super::state::WorkerState;
+
+// Train-side tag kinds (collectives reserve 1..=4).
+const K_ACT: u16 = 100;
+const K_TOK: u16 = 101;
+const K_GRD: u16 = 102;
+const K_VACT: u16 = 103;
+const K_VTOK: u16 = 104;
+
+/// Result of a threaded run.
+#[derive(Clone, Debug)]
+pub struct ThreadedReport {
+    /// Mean training loss per inner step (averaged over replicas).
+    pub step_train_loss: Vec<f64>,
+    /// Final validation NLL (mean over replicas and batches).
+    pub final_val_nll: f64,
+    /// Final validation perplexity.
+    pub final_val_ppl: f64,
+    /// Wall-clock seconds for the whole run.
+    pub wall_secs: f64,
+    /// Total bytes sent over the fabric.
+    pub bytes_sent: u64,
+    /// Total messages sent over the fabric.
+    pub msgs_sent: u64,
+}
+
+/// Threaded DP × PP trainer.
+pub struct ThreadedTrainer {
+    cfg: TrainConfig,
+    /// Log-normal latency injection on every message, `(mu, sigma)` in
+    /// seconds — `None` for a fast fabric.
+    latency: Option<(f64, f64)>,
+    /// Validation batches to run at the end.
+    val_batches: usize,
+    /// Straggler tolerance: give up on a gossip peer after this long and
+    /// fall back to a singleton outer update. Only possible *because*
+    /// NoLoCo has no collective — a DiLoCo all-reduce cannot skip a
+    /// member. `None` = wait forever.
+    gossip_timeout: Option<std::time::Duration>,
+}
+
+/// What one worker thread hands back.
+struct WorkerOut {
+    /// stage == pp-1 only: per-step mean microbatch loss.
+    step_loss: Vec<f64>,
+    /// stage == pp-1 only: mean validation NLL over batches.
+    val_nll: Option<f64>,
+}
+
+impl ThreadedTrainer {
+    /// New trainer; call [`ThreadedTrainer::run`] to execute.
+    pub fn new(cfg: TrainConfig) -> ThreadedTrainer {
+        ThreadedTrainer { cfg, latency: None, val_batches: 4, gossip_timeout: None }
+    }
+
+    /// Enable straggler-tolerant gossip: skip a peer that does not
+    /// deliver within `t` (the outer step degrades to a singleton group).
+    pub fn with_gossip_timeout(mut self, t: std::time::Duration) -> ThreadedTrainer {
+        self.gossip_timeout = Some(t);
+        self
+    }
+
+    /// Inject log-normal per-message latency (`mu`, `sigma` in seconds).
+    pub fn with_latency(mut self, mu: f64, sigma: f64) -> ThreadedTrainer {
+        self.latency = Some((mu, sigma));
+        self
+    }
+
+    /// Number of end-of-run validation batches.
+    pub fn with_val_batches(mut self, n: usize) -> ThreadedTrainer {
+        self.val_batches = n;
+        self
+    }
+
+    /// Spawn the worker grid, train, validate, and aggregate.
+    pub fn run(&self) -> Result<ThreadedReport> {
+        let cfg = &self.cfg;
+        cfg.validate().map_err(anyhow::Error::msg)?;
+        if cfg.outer.method == crate::config::Method::NoLoCo && cfg.outer.group != 2 {
+            anyhow::bail!(
+                "the threaded executor implements the paper's minimum gossip group (n = 2); \
+                 use SimTrainer for general group sizes"
+            );
+        }
+        let (dp, pp) = (cfg.topology.dp, cfg.topology.pp);
+        let dir = find_build(&cfg.artifacts_dir, &cfg.model.name, pp)?;
+        let man = Manifest::load(&dir)?;
+        man.check_against(&cfg.model, pp)?;
+        let per_replica_seqs = (cfg.model.batch_tokens / cfg.model.seq_len / dp).max(man.mb);
+        let num_mb = (per_replica_seqs / man.mb).max(1);
+
+        let start = std::time::Instant::now();
+        let mut fabric = Fabric::new(dp * pp);
+        let endpoints = fabric.take_endpoints();
+
+        let outs: Vec<WorkerOut> = thread::scope(|scope| -> Result<Vec<WorkerOut>> {
+            let mut handles = Vec::new();
+            for (rank, mut ep) in endpoints.into_iter().enumerate() {
+                if let Some((mu, sigma)) = self.latency {
+                    ep.set_latency_log_normal(mu, sigma);
+                }
+                let dir = dir.clone();
+                let man = man.clone();
+                let cfg = cfg.clone();
+                let val_batches = self.val_batches;
+                let gossip_timeout = self.gossip_timeout;
+                handles.push(scope.spawn(move || -> Result<WorkerOut> {
+                    worker_main(rank, ep, cfg, dir, man, num_mb, val_batches, gossip_timeout)
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().map_err(|_| anyhow!("worker thread panicked"))?)
+                .collect()
+        })?;
+
+        // Aggregate last-stage outputs.
+        let mut step_train_loss = vec![0.0f64; cfg.steps];
+        let mut val_sum = 0.0;
+        let mut val_n = 0usize;
+        let mut contributors = 0usize;
+        for out in &outs {
+            if out.step_loss.is_empty() {
+                continue;
+            }
+            contributors += 1;
+            for (acc, l) in step_train_loss.iter_mut().zip(&out.step_loss) {
+                *acc += l;
+            }
+            if let Some(v) = out.val_nll {
+                val_sum += v;
+                val_n += 1;
+            }
+        }
+        for acc in &mut step_train_loss {
+            *acc /= contributors.max(1) as f64;
+        }
+        let final_val_nll = val_sum / val_n.max(1) as f64;
+        Ok(ThreadedReport {
+            step_train_loss,
+            final_val_nll,
+            final_val_ppl: perplexity(final_val_nll),
+            wall_secs: start.elapsed().as_secs_f64(),
+            bytes_sent: fabric.bytes_sent().iter().sum(),
+            msgs_sent: fabric.msgs_sent().iter().sum(),
+        })
+    }
+}
+
+/// Which origin replica's path crosses `(stage, me)` under `plan`.
+fn origin_through(plan: &RoutePlan, stage: usize, me: usize, dp: usize) -> usize {
+    for r0 in 0..dp {
+        if plan.path_from(r0)[stage] == me {
+            return r0;
+        }
+    }
+    unreachable!("permutation routing covers every replica");
+}
+
+/// Symmetric gossip exchange of `(Δ, φ)` with an optional straggler
+/// timeout. Sends both payloads eagerly (one RTT), then waits; `None`
+/// means the peer missed the deadline and the caller should fall back to
+/// a singleton update. Trailing late messages are absorbed harmlessly by
+/// the endpoint stash (tags are unique per outer step).
+fn gossip_exchange(
+    ep: &mut Endpoint,
+    peer: usize,
+    seq: u32,
+    delta: &[f32],
+    phi: &[f32],
+    timeout: Option<std::time::Duration>,
+) -> Option<(Vec<f32>, Vec<f32>)> {
+    const K_GOSSIP_D: u16 = 110;
+    const K_GOSSIP_P: u16 = 111;
+    let me = ep.rank() as u32;
+    ep.send(peer, Tag::new(K_GOSSIP_D, seq, me), Payload::F32(delta.to_vec()));
+    ep.send(peer, Tag::new(K_GOSSIP_P, seq, me), Payload::F32(phi.to_vec()));
+    let td = Tag::new(K_GOSSIP_D, seq, peer as u32);
+    let tp = Tag::new(K_GOSSIP_P, seq, peer as u32);
+    match timeout {
+        None => Some((ep.recv(td).payload.into_f32(), ep.recv(tp).payload.into_f32())),
+        Some(t) => {
+            let d = ep.recv_timeout(td, t)?.payload.into_f32();
+            let p = ep.recv_timeout(tp, t)?.payload.into_f32();
+            Some((d, p))
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_main(
+    rank: usize,
+    mut ep: Endpoint,
+    cfg: TrainConfig,
+    dir: std::path::PathBuf,
+    man: Manifest,
+    num_mb: usize,
+    val_batches: usize,
+    gossip_timeout: Option<std::time::Duration>,
+) -> Result<WorkerOut> {
+    let (dp, pp) = (cfg.topology.dp, cfg.topology.pp);
+    let (stage, replica) = (rank / dp, rank % dp);
+    let kind = StageKind::of_stage(stage, pp);
+    let is_first = stage == 0;
+    let is_last = stage == pp - 1;
+    let mb_toks = man.mb * man.seq_len;
+    let rank_of = |s: usize, r: usize| s * dp + r;
+    let row: Vec<usize> = (0..dp).map(|r| rank_of(stage, r)).collect();
+
+    let mut eng = Engine::new(&dir)?;
+    let init = exec::init_stage(&mut eng, kind, (cfg.seed as i32) ^ (stage as i32 * 7901))?;
+    let mut w = WorkerState::new(stage, replica, kind, init, cfg.outer.method);
+
+    let mut loader = is_first.then(|| {
+        Loader::train(
+            cfg.dataset,
+            cfg.model.vocab,
+            cfg.seed,
+            replica,
+            dp,
+            cfg.model.seq_len,
+            num_mb * man.mb,
+        )
+    });
+    let lr = LrSchedule {
+        peak: cfg.model.inner_lr,
+        warmup: cfg.warmup,
+        total: cfg.steps,
+        floor_frac: cfg.lr_floor,
+    };
+
+    let mut step_loss = Vec::new();
+    let mut coll_seq: u32 = 0; // collective tag namespace, same on all row members
+
+    for step in 0..cfg.steps {
+        let batch: Option<Vec<i32>> = loader
+            .as_mut()
+            .map(|l| l.next_batch().tokens.iter().map(|&t| t as i32).collect());
+        let mut losses = Vec::new();
+        // Stash of (wave, x_in) for the backward pass.
+        let mut stash: Vec<(u32, usize, Vec<f32>, Vec<i32>)> = Vec::new();
+
+        // ---- forward sweep over this step's waves ----
+        for mb in 0..num_mb {
+            let wave = (step * num_mb + mb) as u32;
+            let plan = RoutePlan::for_step(cfg.routing, dp, pp, cfg.seed ^ 0x0a17, wave as u64);
+            if pp == 1 {
+                let toks = &batch.as_ref().unwrap()[mb * mb_toks..(mb + 1) * mb_toks];
+                let (loss, g) = exec::bwd_full(&mut eng, &man, &w.theta, toks)?;
+                w.accumulate(&g);
+                losses.push(loss as f64);
+                continue;
+            }
+            if is_first {
+                let toks = batch.as_ref().unwrap()[mb * mb_toks..(mb + 1) * mb_toks].to_vec();
+                let x = exec::fwd_first(&mut eng, &man, &w.theta, &toks)?;
+                let nxt = rank_of(1, plan.next_of(0, replica));
+                ep.send(nxt, Tag::new(K_ACT, wave, replica as u32), Payload::F32(x));
+                ep.send(
+                    nxt,
+                    Tag::new(K_TOK, wave, replica as u32),
+                    Payload::U32(toks.iter().map(|&t| t as u32).collect()),
+                );
+                stash.push((wave, replica, Vec::new(), toks));
+            } else {
+                let r0 = origin_through(&plan, stage, replica, dp);
+                let act = ep.recv(Tag::new(K_ACT, wave, r0 as u32)).payload.into_f32();
+                let toks: Vec<i32> = ep
+                    .recv(Tag::new(K_TOK, wave, r0 as u32))
+                    .payload
+                    .u32()
+                    .iter()
+                    .map(|&t| t as i32)
+                    .collect();
+                if is_last {
+                    let (loss, g_theta, gx) =
+                        exec::bwd_last(&mut eng, &man, &w.theta, &act, &toks)?;
+                    w.accumulate(&g_theta);
+                    losses.push(loss as f64);
+                    let prv = rank_of(stage - 1, plan.prev_of(stage, replica));
+                    ep.send(prv, Tag::new(K_GRD, wave, r0 as u32), Payload::F32(gx));
+                } else {
+                    let x_out = exec::fwd_mid(&mut eng, &man, &w.theta, &act)?;
+                    let nxt = rank_of(stage + 1, plan.next_of(stage, replica));
+                    ep.send(nxt, Tag::new(K_ACT, wave, r0 as u32), Payload::F32(x_out));
+                    ep.send(
+                        nxt,
+                        Tag::new(K_TOK, wave, r0 as u32),
+                        Payload::U32(toks.iter().map(|&t| t as u32).collect()),
+                    );
+                    stash.push((wave, r0, act, toks));
+                }
+            }
+        }
+
+        // ---- backward sweep (first and mid stages drain gradients) ----
+        if pp > 1 && !is_last {
+            for (wave, r0, x_in, toks) in stash.drain(..) {
+                let plan =
+                    RoutePlan::for_step(cfg.routing, dp, pp, cfg.seed ^ 0x0a17, wave as u64);
+                let g_out = ep
+                    .recv(Tag::new(K_GRD, wave, r0 as u32))
+                    .payload
+                    .into_f32();
+                if is_first {
+                    let g = exec::bwd_first(&mut eng, &man, &w.theta, &toks, &g_out)?;
+                    w.accumulate(&g);
+                } else {
+                    let (g, gx) = exec::bwd_mid(&mut eng, &man, &w.theta, &x_in, &g_out)?;
+                    w.accumulate(&g);
+                    let prv = rank_of(stage - 1, plan.prev_of(stage, replica));
+                    ep.send(prv, Tag::new(K_GRD, wave, r0 as u32), Payload::F32(gx));
+                }
+            }
+        }
+
+        // ---- inner optimizer ----
+        let mut g = w.take_mean_grad();
+        if cfg.outer.method == Method::Fsdp && dp > 1 {
+            let mut t = crate::tensor::Tensor::from_vec(std::mem::take(&mut g), &[w.len()]);
+            all_reduce_mean(&mut ep, &row, coll_seq, &mut t);
+            coll_seq += 1;
+            g = t.into_vec();
+        }
+        w.adam_t += 1;
+        let sc = AdamScalars::at(lr.at(step), w.adam_t, cfg.grad_clip);
+        let (mut theta, mut m, mut v) = (
+            std::mem::take(&mut w.theta),
+            std::mem::take(&mut w.m),
+            std::mem::take(&mut w.v),
+        );
+        exec::adam_step(&mut eng, kind, &mut theta, &mut m, &mut v, &g, sc)?;
+        w.theta = theta;
+        w.m = m;
+        w.v = v;
+
+        // ---- outer optimizer ----
+        let outer_due =
+            cfg.outer.method != Method::Fsdp && (step + 1) % cfg.outer.inner_steps == 0;
+        if outer_due && dp > 1 {
+            let outer_idx = (step + 1) / cfg.outer.inner_steps;
+            match cfg.outer.method {
+                Method::DiLoCo => {
+                    let mut d = crate::tensor::Tensor::from_vec(w.outer_grad(), &[w.len()]);
+                    all_reduce_mean(&mut ep, &row, coll_seq, &mut d);
+                    coll_seq += 1;
+                    let (mut phi, mut delta) =
+                        (std::mem::take(&mut w.phi), std::mem::take(&mut w.delta));
+                    exec::outer_diloco(
+                        &mut eng,
+                        kind,
+                        &mut phi,
+                        &mut delta,
+                        d.as_slice(),
+                        cfg.outer.alpha as f32,
+                        cfg.outer.beta as f32,
+                    )?;
+                    w.phi = phi;
+                    w.delta = delta;
+                    w.reset_theta_to_phi();
+                }
+                Method::NoLoCo => {
+                    // Deterministic shared-seed pairing: every row member
+                    // derives the same pairs without any coordination.
+                    let mut prng = Pcg64::seed_from_u64(
+                        cfg.seed ^ 0x9055 ^ ((stage as u64) << 40) ^ (outer_idx as u64),
+                    );
+                    let pairs = prng.random_pairs(dp);
+                    let me = replica;
+                    let peer = pairs.iter().find_map(|&(a, b)| match b {
+                        Some(b) if a == me => Some(Some(b)),
+                        Some(b) if b == me => Some(Some(a)),
+                        None if a == me => Some(None),
+                        _ => None,
+                    });
+                    let my_delta = w.outer_grad();
+                    let (mut phi, mut delta) =
+                        (std::mem::take(&mut w.phi), std::mem::take(&mut w.delta));
+                    let exchanged = match peer.flatten() {
+                        Some(peer_r) => {
+                            let peer_rank = rank_of(stage, peer_r);
+                            gossip_exchange(
+                                &mut ep, peer_rank, coll_seq, &my_delta, &phi, gossip_timeout,
+                            )
+                        }
+                        None => None,
+                    };
+                    match exchanged {
+                        Some((d_theirs, p_theirs)) => {
+                            let dsum: Vec<f32> = my_delta
+                                .iter()
+                                .zip(&d_theirs)
+                                .map(|(a, b)| a + b)
+                                .collect();
+                            let psum: Vec<f32> =
+                                phi.iter().zip(&p_theirs).map(|(a, b)| a + b).collect();
+                            exec::outer_noloco(
+                                &mut eng,
+                                kind,
+                                &mut phi,
+                                &mut delta,
+                                &dsum,
+                                &psum,
+                                cfg.outer.alpha as f32,
+                                cfg.outer.beta as f32,
+                                cfg.outer.gamma as f32,
+                                0.5,
+                            )?;
+                        }
+                        // No peer (odd world) or peer timed out: a
+                        // singleton group — NoLoCo degrades gracefully
+                        // where a collective would hang.
+                        None => {
+                            let psum = phi.clone();
+                            exec::outer_noloco(
+                                &mut eng,
+                                kind,
+                                &mut phi,
+                                &mut delta,
+                                &my_delta,
+                                &psum,
+                                cfg.outer.alpha as f32,
+                                cfg.outer.beta as f32,
+                                cfg.outer.gamma as f32,
+                                1.0,
+                            )?;
+                        }
+                    }
+                    coll_seq += 2;
+                    w.phi = phi;
+                    w.delta = delta;
+                    w.reset_theta_to_phi();
+                }
+                Method::Fsdp => unreachable!(),
+            }
+        } else if outer_due {
+            // dp == 1: outer step degenerates to lookahead on one replica.
+            let my_delta = w.outer_grad();
+            let (mut phi, mut delta) = (std::mem::take(&mut w.phi), std::mem::take(&mut w.delta));
+            let psum = phi.clone();
+            exec::outer_noloco(
+                &mut eng,
+                kind,
+                &mut phi,
+                &mut delta,
+                &my_delta,
+                &psum,
+                cfg.outer.alpha as f32,
+                cfg.outer.beta as f32,
+                0.0,
+                1.0,
+            )?;
+            w.phi = phi;
+            w.delta = delta;
+            w.reset_theta_to_phi();
+        }
+
+        if is_last || pp == 1 {
+            let n = losses.len().max(1) as f64;
+            step_loss.push(losses.iter().sum::<f64>() / n);
+        }
+    }
+
+    // ---- final validation: fixed route r -> r, shared val stream ----
+    let mut val_nll = None;
+    if val_batches > 0 {
+        let mut vloader = Loader::validation(
+            cfg.dataset,
+            cfg.model.vocab,
+            cfg.seed ^ 0x5eed,
+            cfg.model.seq_len,
+            man.mb,
+        );
+        let mut sum = 0.0;
+        for vb in 0..val_batches {
+            let toks: Vec<i32> = vloader
+                .next_batch()
+                .tokens
+                .iter()
+                .map(|&t| t as i32)
+                .collect();
+            if pp == 1 {
+                sum += exec::loss_full(&mut eng, &man, &w.theta, &toks)? as f64;
+            } else if is_first {
+                let x = exec::fwd_first(&mut eng, &man, &w.theta, &toks)?;
+                let nxt = rank_of(1, replica);
+                ep.send(nxt, Tag::new(K_VACT, vb as u32, replica as u32), Payload::F32(x));
+                ep.send(
+                    nxt,
+                    Tag::new(K_VTOK, vb as u32, replica as u32),
+                    Payload::U32(toks.iter().map(|&t| t as u32).collect()),
+                );
+            } else {
+                let act = ep
+                    .recv(Tag::new(K_VACT, vb as u32, replica as u32))
+                    .payload
+                    .into_f32();
+                let vtoks: Vec<i32> = ep
+                    .recv(Tag::new(K_VTOK, vb as u32, replica as u32))
+                    .payload
+                    .u32()
+                    .iter()
+                    .map(|&t| t as i32)
+                    .collect();
+                if is_last {
+                    sum += exec::loss_last(&mut eng, &man, &w.theta, &act, &vtoks)? as f64;
+                } else {
+                    let x = exec::fwd_mid(&mut eng, &man, &w.theta, &act)?;
+                    let nxt = rank_of(stage + 1, replica);
+                    ep.send(nxt, Tag::new(K_VACT, vb as u32, replica as u32), Payload::F32(x));
+                    ep.send(
+                        nxt,
+                        Tag::new(K_VTOK, vb as u32, replica as u32),
+                        Payload::U32(vtoks.iter().map(|&t| t as u32).collect()),
+                    );
+                }
+            }
+        }
+        if is_last || pp == 1 {
+            val_nll = Some(sum / val_batches as f64);
+        }
+    }
+
+    Ok(WorkerOut { step_loss, val_nll })
+}

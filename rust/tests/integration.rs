@@ -1,0 +1,275 @@
+//! Cross-module integration tests that do not need PJRT artifacts:
+//! routing × collectives × optimizers × quadratic theory × fabric faults.
+
+use std::time::Duration;
+
+use noloco::collective::{
+    all_reduce_mean, pair_average_time, tree_all_reduce_time,
+};
+use noloco::config::{presets, Method, OuterConfig, Routing};
+use noloco::net::{Fabric, FaultPlan, LatencyModel, Payload, SimClock, Tag};
+use noloco::quad::{run_noloco, QuadSim, Quadratic};
+use noloco::rngx::Pcg64;
+use noloco::routing::{pair_histogram, RoutePlan};
+use noloco::tensor::Tensor;
+
+// ---------------------------------------------------------------------------
+// Theorem 1 (§3.2, App. A): convergence + variance scaling on the quadratic
+// ---------------------------------------------------------------------------
+
+fn quad_sim(omega: f64, gamma: f64, outer_steps: usize) -> QuadSim {
+    QuadSim {
+        replicas: 8,
+        inner_steps: 10,
+        outer_steps,
+        omega,
+        outer: OuterConfig {
+            method: Method::NoLoCo,
+            alpha: 0.5,
+            beta: 0.7,
+            gamma,
+            group: 2,
+            inner_steps: 10,
+        },
+        init_scale: 2.0,
+    }
+}
+
+#[test]
+fn theorem1_mean_converges_to_zero() {
+    let mut rng = Pcg64::seed_from_u64(1);
+    let problem = Quadratic::new(8, 0.2, 1.0, 0.4, &mut rng);
+    let gamma = OuterConfig::default_gamma(0.5, 2);
+    let res = run_noloco(&problem, &quad_sim(0.05, gamma, 200), 7);
+    let early = res.mean_norm[5];
+    let late = *res.mean_norm.last().unwrap();
+    assert!(
+        late < early * 0.05,
+        "E(phi) must decay toward 0: early {early}, late {late}"
+    );
+}
+
+#[test]
+fn theorem1_variance_scales_with_omega_squared() {
+    // V(phi) ∝ ω² at convergence: halving ω should quarter the variance
+    // (within stochastic slack).
+    let mut rng = Pcg64::seed_from_u64(2);
+    let problem = Quadratic::new(8, 0.3, 1.0, 0.5, &mut rng);
+    let gamma = OuterConfig::default_gamma(0.5, 2);
+    let var_at = |omega: f64| {
+        let res = run_noloco(&problem, &quad_sim(omega, gamma, 300), 11);
+        let tail = &res.replica_var[250..];
+        tail.iter().sum::<f64>() / tail.len() as f64
+    };
+    let v_hi = var_at(0.08);
+    let v_lo = var_at(0.04);
+    let ratio = v_hi / v_lo;
+    assert!(
+        (2.0..8.0).contains(&ratio),
+        "variance ratio for 2x omega should be ~4, got {ratio:.2} ({v_hi:.3e} / {v_lo:.3e})"
+    );
+}
+
+#[test]
+fn gamma_outside_eq74_window_diverges_or_wobbles() {
+    // γ below the window loses the consensus contraction: replica variance
+    // must stay clearly above the in-window setting.
+    let mut rng = Pcg64::seed_from_u64(3);
+    let problem = Quadratic::new(6, 0.3, 1.0, 0.5, &mut rng);
+    let run_var = |gamma: f64| {
+        let res = run_noloco(&problem, &quad_sim(0.08, gamma, 150), 5);
+        let tail = &res.replica_var[120..];
+        tail.iter().sum::<f64>() / tail.len() as f64
+    };
+    let (lo, _hi) = OuterConfig::gamma_window(0.5, 2);
+    let inside = run_var(OuterConfig::default_gamma(0.5, 2));
+    let below = run_var(lo * 0.05); // nearly no consensus term
+    assert!(
+        below > inside * 1.5,
+        "without consensus the ensemble should spread: inside {inside:.3e}, below {below:.3e}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Routing (§3.1): permutations, retraced backward, load balance
+// ---------------------------------------------------------------------------
+
+#[test]
+fn random_routing_is_balanced_and_retraceable() {
+    let (dp, pp) = (8, 4);
+    for step in 0..50u64 {
+        let plan = RoutePlan::for_step(Routing::Random, dp, pp, 42, step);
+        // Permutation property: every stage-s worker is on exactly one path.
+        for s in 0..pp {
+            let mut seen = vec![false; dp];
+            for r in 0..dp {
+                let p = plan.path_from(r);
+                assert!(!seen[p[s]], "stage {s} replica reused");
+                seen[p[s]] = true;
+            }
+        }
+        // Backward retrace: prev_of inverts next_of at every boundary.
+        for b in 0..plan.boundaries() {
+            for i in 0..dp {
+                let j = plan.next_of(b, i);
+                assert_eq!(plan.prev_of(b + 1, j), i);
+            }
+        }
+    }
+}
+
+#[test]
+fn pair_histogram_is_roughly_uniform() {
+    // Over many steps, stage-boundary pairings approach uniform — the
+    // property that drives the implicit mixing of §5.2.
+    let hist = pair_histogram(4, 2, 9, 4000);
+    let total: u64 = hist.iter().flatten().sum();
+    let cells = (hist.len() * hist[0].len()) as f64;
+    let expect = total as f64 / cells;
+    for row in &hist {
+        for &c in row {
+            let dev = (c as f64 - expect).abs() / expect;
+            assert!(dev < 0.15, "cell {c} vs expected {expect}");
+        }
+    }
+}
+
+#[test]
+fn fixed_routing_is_identity() {
+    let plan = RoutePlan::for_step(Routing::Fixed, 4, 3, 1, 99);
+    for r in 0..4 {
+        assert_eq!(plan.path_from(r), vec![r, r, r]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Collectives × fabric: numerics under faults, subgroups, latency costs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn gossip_survives_duplicated_messages() {
+    // Tag-matched recv must be idempotent against duplicate delivery.
+    let mut fabric = Fabric::with_faults(
+        2,
+        FaultPlan { drop_prob: 0.0, dup_prob: 0.5 },
+        123,
+    );
+    let eps = fabric.take_endpoints();
+    let handles: Vec<_> = eps
+        .into_iter()
+        .enumerate()
+        .map(|(rank, mut ep)| {
+            std::thread::spawn(move || {
+                let mut acc = Vec::new();
+                for step in 0..20u32 {
+                    let mine = Tensor::from_slice(&[rank as f32 + step as f32]);
+                    let theirs =
+                        noloco::collective::pair_exchange(&mut ep, 1 - rank, step, &mine);
+                    acc.push(theirs.as_slice()[0]);
+                }
+                acc
+            })
+        })
+        .collect();
+    let outs: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for step in 0..20 {
+        assert_eq!(outs[0][step], 1.0 + step as f32);
+        assert_eq!(outs[1][step], step as f32);
+    }
+}
+
+#[test]
+fn dropped_message_detected_by_timeout() {
+    let mut fabric = Fabric::with_faults(
+        2,
+        FaultPlan { drop_prob: 1.0, dup_prob: 0.0 },
+        7,
+    );
+    let mut eps = fabric.take_endpoints();
+    let mut e1 = eps.pop().unwrap();
+    let mut e0 = eps.pop().unwrap();
+    e0.send(1, Tag::new(9, 0, 0), Payload::Control);
+    assert!(e1.recv_timeout(Tag::new(9, 0, 0), Duration::from_millis(50)).is_none());
+}
+
+#[test]
+fn row_allreduce_in_grid_namespace() {
+    // Two disjoint stage rows all-reduce concurrently with the same step
+    // tag — point-to-point addressing must keep them independent.
+    let (dp, pp) = (3, 2);
+    let mut fabric = Fabric::new(dp * pp);
+    let eps = fabric.take_endpoints();
+    let handles: Vec<_> = eps
+        .into_iter()
+        .enumerate()
+        .map(|(rank, mut ep)| {
+            std::thread::spawn(move || {
+                let stage = rank / dp;
+                let row: Vec<usize> = (0..dp).map(|r| stage * dp + r).collect();
+                let mut t = Tensor::from_slice(&[rank as f32]);
+                all_reduce_mean(&mut ep, &row, 0, &mut t);
+                t.as_slice()[0]
+            })
+        })
+        .collect();
+    let outs: Vec<f32> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for rank in 0..dp * pp {
+        let stage = rank / dp;
+        let want: f32 =
+            (0..dp).map(|r| (stage * dp + r) as f32).sum::<f32>() / dp as f32;
+        assert!((outs[rank] - want).abs() < 1e-6, "rank {rank}");
+    }
+}
+
+#[test]
+fn tree_reduce_slower_than_gossip_on_simclock() {
+    // Fig. 5A's qualitative claim, on the discrete-event simulator: the
+    // tree all-reduce's expected time exceeds pair averaging, and the gap
+    // grows with world size.
+    let ratio_at = |n: usize| {
+        let model = LatencyModel::LogNormal { mu: 0.0, sigma: 0.7 };
+        let mut tree_total = 0.0;
+        let mut pair_total = 0.0;
+        for seed in 0..30 {
+            let mut clock = SimClock::new(n, model.clone(), seed);
+            tree_total += tree_all_reduce_time(&mut clock);
+            let mut clock = SimClock::new(n, model.clone(), seed + 1000);
+            pair_total += pair_average_time(&mut clock, None);
+        }
+        tree_total / pair_total
+    };
+    let r16 = ratio_at(16);
+    let r128 = ratio_at(128);
+    assert!(r16 > 1.5, "tree/gossip ratio at n=16: {r16}");
+    assert!(r128 > r16, "ratio must grow with n: {r128} vs {r16}");
+}
+
+// ---------------------------------------------------------------------------
+// Config system end-to-end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn preset_to_variants_round() {
+    let base = presets::preset("small").unwrap();
+    let d = presets::as_diloco(base.clone());
+    let f = presets::as_fsdp(base.clone());
+    assert_eq!(base.outer.method, Method::NoLoCo);
+    assert_eq!(d.outer.method, Method::DiLoCo);
+    assert_eq!(f.outer.method, Method::Fsdp);
+    // All validate and keep the same model.
+    for c in [&base, &d, &f] {
+        c.validate().unwrap();
+        assert_eq!(c.model.hidden, base.model.hidden);
+    }
+}
+
+#[test]
+fn gamma_default_sits_in_window_for_all_alphas() {
+    for alpha in [0.0, 0.1, 0.3, 0.5, 0.7, 0.9] {
+        for group in [2usize, 3, 4, 8] {
+            let (lo, hi) = OuterConfig::gamma_window(alpha, group);
+            let g = OuterConfig::default_gamma(alpha, group);
+            assert!(lo < g && g < hi, "alpha {alpha} group {group}");
+        }
+    }
+}

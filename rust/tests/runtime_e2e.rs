@@ -1,0 +1,365 @@
+//! Cross-language runtime tests: execute the AOT artifacts through the
+//! PJRT CPU client and compare against the `golden.toml` statistics the
+//! Python side computed with eager JAX at build time.
+//!
+//! This is the contract test for the whole Rust<->XLA bridge: argument
+//! order, layouts, tuple unpacking, and numerics all have to line up for
+//! these to pass. Requires `make artifacts` (skips politely otherwise).
+
+use noloco::runtime::{self, funcs, Engine};
+
+const ART: &str = "artifacts";
+
+fn stats(xs: &[f32]) -> (f64, f64, f64, f64) {
+    let n = xs.len() as f64;
+    let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var = xs.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    (mean, var.sqrt(), xs[0] as f64, xs[xs.len() - 1] as f64)
+}
+
+fn assert_close(got: f64, want: f64, tol: f64, what: &str) {
+    let denom = want.abs().max(1e-6);
+    assert!(
+        ((got - want) / denom).abs() < tol,
+        "{what}: got {got}, golden {want} (rel err {:.2e} > {tol})",
+        ((got - want) / denom).abs()
+    );
+}
+
+/// Check `(mean, std, first, last)` of a buffer against golden entries.
+fn check_stats(
+    golden: &std::collections::BTreeMap<String, f64>,
+    prefix: &str,
+    xs: &[f32],
+    tol: f64,
+) {
+    let (mean, std, first, last) = stats(xs);
+    assert_close(mean, golden[&format!("{prefix}_mean")], tol, &format!("{prefix}_mean"));
+    assert_close(std, golden[&format!("{prefix}_std")], tol, &format!("{prefix}_std"));
+    assert_close(first, golden[&format!("{prefix}_first")], tol, &format!("{prefix}_first"));
+    assert_close(last, golden[&format!("{prefix}_last")], tol, &format!("{prefix}_last"));
+}
+
+fn tokens_for(mb: usize, s: usize, vocab: usize) -> Vec<i32> {
+    // Must match aot.write_golden: (i*7919 + 13) % vocab.
+    (0..mb * s).map(|i| ((i * 7919 + 13) % vocab) as i32).collect()
+}
+
+fn engine_for(model: &str, pp: usize) -> Option<Engine> {
+    let dir = match runtime::find_build(ART, model, pp) {
+        Ok(d) => d,
+        Err(_) => {
+            eprintln!("skipping: no {model}-pp{pp} artifacts (run `make artifacts`)");
+            return None;
+        }
+    };
+    Some(Engine::new(dir).expect("engine"))
+}
+
+#[test]
+fn staged_build_matches_golden_end_to_end() {
+    let Some(mut eng) = engine_for("tiny", 2) else { return };
+    let man = eng.manifest().unwrap();
+    let golden = runtime::golden(eng.dir()).unwrap();
+    let (mb, s, v, h) = (man.mb, man.seq_len, man.vocab, man.hidden);
+    let n_first = man.param_count("first").unwrap();
+    let n_last = man.param_count("last").unwrap();
+
+    // ---- init ----
+    let first = eng
+        .execute("first", funcs::INIT, &[runtime::lit_scalar_i32(42)])
+        .unwrap();
+    let first = runtime::to_vec_f32(&first[0]).unwrap();
+    assert_eq!(first.len(), n_first);
+    check_stats(&golden, "first_init", &first, 1e-4);
+
+    let last = eng
+        .execute("last", funcs::INIT, &[runtime::lit_scalar_i32(43)])
+        .unwrap();
+    let last = runtime::to_vec_f32(&last[0]).unwrap();
+    assert_eq!(last.len(), n_last);
+    check_stats(&golden, "last_init", &last, 1e-4);
+
+    // ---- forward chain ----
+    let toks = tokens_for(mb, s, v);
+    let hidden = eng
+        .execute(
+            "first",
+            funcs::FWD,
+            &[
+                runtime::lit_f32(&first, &[n_first]).unwrap(),
+                runtime::lit_i32(&toks, &[mb, s]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let hidden = runtime::to_vec_f32(&hidden[0]).unwrap();
+    assert_eq!(hidden.len(), mb * s * h);
+    check_stats(&golden, "hidden", &hidden, 1e-3);
+
+    // ---- last-stage backward: (loss, gflat, gx) ----
+    let out = eng
+        .execute(
+            "last",
+            funcs::BWD,
+            &[
+                runtime::lit_f32(&last, &[n_last]).unwrap(),
+                runtime::lit_f32(&hidden, &[mb, s, h]).unwrap(),
+                runtime::lit_i32(&toks, &[mb, s]).unwrap(),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 3, "last.bwd returns (loss, gflat, gx)");
+    let loss = runtime::to_f32(&out[0]).unwrap() as f64;
+    assert_close(loss, golden["loss"], 1e-4, "loss");
+    // Untrained model: loss ~= ln(vocab).
+    assert!((loss - (v as f64).ln()).abs() < 1.0, "loss {loss}");
+    let glast = runtime::to_vec_f32(&out[1]).unwrap();
+    check_stats(&golden, "last_grad", &glast, 2e-3);
+    let gx = runtime::to_vec_f32(&out[2]).unwrap();
+    assert_eq!(gx.len(), mb * s * h);
+    check_stats(&golden, "gx", &gx, 2e-3);
+
+    // ---- first-stage backward consumes gx ----
+    let gfirst = eng
+        .execute(
+            "first",
+            funcs::BWD,
+            &[
+                runtime::lit_f32(&first, &[n_first]).unwrap(),
+                runtime::lit_i32(&toks, &[mb, s]).unwrap(),
+                runtime::lit_f32(&gx, &[mb, s, h]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let gfirst = runtime::to_vec_f32(&gfirst[0]).unwrap();
+    assert_eq!(gfirst.len(), n_first);
+    assert!(gfirst.iter().all(|x| x.is_finite()));
+    assert!(gfirst.iter().any(|&x| x != 0.0));
+
+    // ---- Adam artifact vs golden ----
+    let g: Vec<f32> = first.iter().map(|&x| 0.01 * x + 0.005).collect();
+    let zeros = vec![0.0f32; n_first];
+    let out = eng
+        .execute(
+            "first",
+            funcs::ADAM,
+            &[
+                runtime::lit_f32(&first, &[n_first]).unwrap(),
+                runtime::lit_f32(&zeros, &[n_first]).unwrap(),
+                runtime::lit_f32(&zeros, &[n_first]).unwrap(),
+                runtime::lit_f32(&g, &[n_first]).unwrap(),
+                runtime::lit_scalars(&[1e-3, 1.0, 0.9, 0.999, 1e-8, 1.0]),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 3);
+    let f2 = runtime::to_vec_f32(&out[0]).unwrap();
+    check_stats(&golden, "adam_flat", &f2, 1e-3);
+    let m2 = runtime::to_vec_f32(&out[1]).unwrap();
+    check_stats(&golden, "adam_m", &m2, 1e-3);
+
+    // ---- NoLoCo outer artifact vs golden ----
+    let delta: Vec<f32> = first.iter().map(|&x| 0.001 * x).collect();
+    let dsum: Vec<f32> = first.iter().map(|&x| 0.02 * x + 0.01).collect();
+    let psum: Vec<f32> = first.iter().map(|&x| 2.0 * x + 0.1).collect();
+    let out = eng
+        .execute(
+            "first",
+            funcs::OUTER_NOLOCO,
+            &[
+                runtime::lit_f32(&first, &[n_first]).unwrap(),
+                runtime::lit_f32(&delta, &[n_first]).unwrap(),
+                runtime::lit_f32(&dsum, &[n_first]).unwrap(),
+                runtime::lit_f32(&psum, &[n_first]).unwrap(),
+                runtime::lit_scalars(&[0.5, 0.7, 0.9, 0.5]),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 2);
+    let phi2 = runtime::to_vec_f32(&out[0]).unwrap();
+    check_stats(&golden, "outer_phi", &phi2, 1e-3);
+    let delta2 = runtime::to_vec_f32(&out[1]).unwrap();
+    check_stats(&golden, "outer_delta", &delta2, 1e-3);
+
+    // Outer artifact must agree with the host-side reference optimizer.
+    {
+        use noloco::optim::{NolocoOuter, OuterState};
+        use noloco::tensor::Tensor;
+        let mut st = OuterState::new(&[Tensor::from_vec(first.clone(), &[n_first])]);
+        st.delta = vec![Tensor::from_vec(delta.clone(), &[n_first])];
+        let opt = NolocoOuter { alpha: 0.5, beta: 0.7, gamma: 0.9 };
+        // Reconstruct the group arguments: dsum/psum are group *sums*
+        // with n=2 (inv_n = 0.5).
+        let d0: Vec<f32> = dsum.iter().map(|&x| 0.5 * x).collect();
+        let deltas = vec![
+            vec![Tensor::from_vec(d0.clone(), &[n_first])],
+            vec![Tensor::from_vec(d0, &[n_first])],
+        ];
+        let p0: Vec<f32> = psum.iter().map(|&x| 0.5 * x).collect();
+        let phis = vec![
+            vec![Tensor::from_vec(p0.clone(), &[n_first])],
+            vec![Tensor::from_vec(p0, &[n_first])],
+        ];
+        let theta = vec![Tensor::from_vec(first.clone(), &[n_first])];
+        opt.step_group(&mut st, &theta, &deltas, &phis);
+        let host = st.phi[0].as_slice();
+        let max_err = host
+            .iter()
+            .zip(&phi2)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-4, "host vs artifact outer step: max err {max_err}");
+    }
+}
+
+#[test]
+fn full_build_matches_golden() {
+    let Some(mut eng) = engine_for("tiny", 1) else { return };
+    let man = eng.manifest().unwrap();
+    let golden = runtime::golden(eng.dir()).unwrap();
+    let (mb, s, v) = (man.mb, man.seq_len, man.vocab);
+    let n = man.param_count("full").unwrap();
+
+    let flat = eng
+        .execute("full", funcs::INIT, &[runtime::lit_scalar_i32(42)])
+        .unwrap();
+    let flat = runtime::to_vec_f32(&flat[0]).unwrap();
+    check_stats(&golden, "full_init", &flat, 1e-4);
+
+    let toks = tokens_for(mb, s, v);
+    let out = eng
+        .execute(
+            "full",
+            funcs::BWD,
+            &[
+                runtime::lit_f32(&flat, &[n]).unwrap(),
+                runtime::lit_i32(&toks, &[mb, s]).unwrap(),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 2, "full.bwd returns (loss, gflat)");
+    let loss = runtime::to_f32(&out[0]).unwrap() as f64;
+    assert_close(loss, golden["loss"], 1e-4, "full loss");
+    let g = runtime::to_vec_f32(&out[1]).unwrap();
+    check_stats(&golden, "full_grad", &g, 2e-3);
+}
+
+#[test]
+fn loss_artifact_matches_bwd_loss() {
+    // last.loss (validation path) and last.bwd (training path) must agree
+    // on the loss value.
+    let Some(mut eng) = engine_for("tiny", 2) else { return };
+    let man = eng.manifest().unwrap();
+    let (mb, s, v, h) = (man.mb, man.seq_len, man.vocab, man.hidden);
+    let n_first = man.param_count("first").unwrap();
+    let n_last = man.param_count("last").unwrap();
+
+    let first = eng.execute("first", funcs::INIT, &[runtime::lit_scalar_i32(7)]).unwrap();
+    let first = runtime::to_vec_f32(&first[0]).unwrap();
+    let last = eng.execute("last", funcs::INIT, &[runtime::lit_scalar_i32(8)]).unwrap();
+    let last = runtime::to_vec_f32(&last[0]).unwrap();
+    let toks = tokens_for(mb, s, v);
+    let hid = eng
+        .execute(
+            "first",
+            funcs::FWD,
+            &[
+                runtime::lit_f32(&first, &[n_first]).unwrap(),
+                runtime::lit_i32(&toks, &[mb, s]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let hid = runtime::to_vec_f32(&hid[0]).unwrap();
+
+    let args = [
+        runtime::lit_f32(&last, &[n_last]).unwrap(),
+        runtime::lit_f32(&hid, &[mb, s, h]).unwrap(),
+        runtime::lit_i32(&toks, &[mb, s]).unwrap(),
+    ];
+    let l1 = runtime::to_f32(&eng.execute("last", funcs::LOSS, &args).unwrap()[0]).unwrap();
+    let args = [
+        runtime::lit_f32(&last, &[n_last]).unwrap(),
+        runtime::lit_f32(&hid, &[mb, s, h]).unwrap(),
+        runtime::lit_i32(&toks, &[mb, s]).unwrap(),
+    ];
+    let l2 = runtime::to_f32(&eng.execute("last", funcs::BWD, &args).unwrap()[0]).unwrap();
+    assert!((l1 - l2).abs() < 1e-5, "{l1} vs {l2}");
+}
+
+#[test]
+fn manifest_agrees_with_rust_model_mirror() {
+    // The Python stage_shapes and the Rust mirror must produce identical
+    // parameter counts — this is the preset-drift guard.
+    use noloco::config::presets;
+    use noloco::model::{stage_param_count, StageKind};
+    for (name, pp) in [("tiny", 1), ("tiny", 2), ("small", 2), ("e2e", 2)] {
+        let Ok(dir) = runtime::find_build(ART, name, pp) else { continue };
+        let man = Manifestish::load(&dir);
+        let cfg = presets::preset(name).unwrap().model;
+        man.0.check_against(&cfg, pp).unwrap();
+        for (kind_name, kind) in [
+            ("first", StageKind::First),
+            ("mid", StageKind::Mid),
+            ("last", StageKind::Last),
+            ("full", StageKind::Full),
+        ] {
+            if let Ok(n) = man.0.param_count(kind_name) {
+                assert_eq!(
+                    n,
+                    stage_param_count(&cfg, kind, pp),
+                    "{name}-pp{pp} {kind_name}"
+                );
+            }
+        }
+    }
+}
+
+struct Manifestish(noloco::runtime::Manifest);
+impl Manifestish {
+    fn load(dir: &std::path::Path) -> Self {
+        Manifestish(noloco::runtime::Manifest::load(dir).unwrap())
+    }
+}
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    for line in s.lines() {
+        if let Some(v) = line.strip_prefix("VmRSS:") {
+            return v.trim().trim_end_matches(" kB").trim().parse::<f64>().unwrap() / 1024.0;
+        }
+    }
+    0.0
+}
+
+#[test]
+fn engine_execute_does_not_leak() {
+    // Regression test for the upstream xla-crate bug where
+    // `PjRtLoadedExecutable::execute` leaks every input device buffer
+    // (~2.5 MB/call at tiny-first sizes — it OOM-killed 25k-step runs).
+    // `Engine::execute` works around it via Rust-owned buffers +
+    // `execute_b`; RSS across 400 executes must stay flat.
+    let Some(mut eng) = engine_for("tiny", 2) else { return };
+    let man = eng.manifest().unwrap();
+    let n = man.param_count("first").unwrap();
+    let flat = vec![0.1f32; n];
+    let ins = [
+        runtime::lit_f32(&flat, &[n]).unwrap(),
+        runtime::lit_f32(&flat, &[n]).unwrap(),
+        runtime::lit_f32(&flat, &[n]).unwrap(),
+        runtime::lit_f32(&flat, &[n]).unwrap(),
+        runtime::lit_scalars(&[1e-3, 1.0, 0.9, 0.999, 1e-8, 1.0]),
+    ];
+    // Warm (compile + allocator steady state).
+    for _ in 0..20 {
+        let out = eng.execute("first", funcs::ADAM, &ins).unwrap();
+        std::hint::black_box(runtime::to_vec_f32(&out[0]).unwrap());
+    }
+    let before = rss_mb();
+    for _ in 0..400 {
+        let out = eng.execute("first", funcs::ADAM, &ins).unwrap();
+        std::hint::black_box(runtime::to_vec_f32(&out[0]).unwrap());
+    }
+    let grown = rss_mb() - before;
+    // The old path grew ~1000 MB here; allow generous allocator noise.
+    assert!(grown < 100.0, "engine leaked {grown:.0} MB over 400 executes");
+}
