@@ -1,0 +1,93 @@
+//! Topology + elastic-membership benchmarks: per-message transfer
+//! sampling across the three network presets, payload-aware collective
+//! cost models on a WAN, and the shared-seed derivations (live route
+//! plans, churn masks) that sit on the trainers' hot path.
+//!
+//! `cargo bench --bench bench_topo`
+
+use noloco::bench::{bench_row, section};
+use noloco::collective::{
+    pair_average_time_bytes, ring_all_reduce_time_bytes, tree_all_reduce_time_bytes,
+    tree_all_reduce_time_over,
+};
+use noloco::config::{NetPreset, NetTopoConfig, Routing};
+use noloco::net::topo::ChurnSchedule;
+use noloco::net::SimClock;
+use noloco::rngx::Pcg64;
+use noloco::routing::RoutePlan;
+
+fn transfer_sampling() {
+    section("per-message transfer sampling (64 nodes, 4 MiB payload)");
+    for preset in [
+        NetPreset::SingleSwitchLan,
+        NetPreset::MultiRegionWan,
+        NetPreset::LongTailInternet,
+    ] {
+        let cfg = NetTopoConfig { preset, ..NetTopoConfig::default() };
+        let topo = cfg.build(64, 1);
+        let mut rng = Pcg64::seed_from_u64(2);
+        bench_row(&format!("transfer_time, preset {preset}"), || {
+            let mut acc = 0.0;
+            for i in 0..64usize {
+                acc += topo.transfer_time(i, (i * 7 + 1) % 64, 4 << 20, &mut rng);
+            }
+            std::hint::black_box(acc);
+        });
+    }
+}
+
+fn collective_costs() {
+    section("payload-aware collective cost models (WAN, 4 MiB payload)");
+    let wan = || {
+        NetTopoConfig {
+            preset: NetPreset::MultiRegionWan,
+            regions: 4,
+            ..NetTopoConfig::default()
+        }
+        .build(64, 1)
+    };
+    bench_row("tree all-reduce cost walk, n=64", || {
+        let mut c = SimClock::with_topology(wan(), 3);
+        std::hint::black_box(tree_all_reduce_time_bytes(&mut c, 4 << 20));
+    });
+    bench_row("ring all-reduce cost walk, n=64", || {
+        let mut c = SimClock::with_topology(wan(), 4);
+        std::hint::black_box(ring_all_reduce_time_bytes(&mut c, 4 << 20));
+    });
+    bench_row("gossip pair cost walk,    n=64", || {
+        let mut c = SimClock::with_topology(wan(), 5);
+        std::hint::black_box(pair_average_time_bytes(&mut c, None, 4 << 20));
+    });
+    bench_row("live-subset tree (48 of 64 live)", || {
+        let mut c = SimClock::with_topology(wan(), 6);
+        let live: Vec<usize> = (0..64).filter(|&w| w % 4 != 0).collect();
+        std::hint::black_box(tree_all_reduce_time_over(&mut c, &live, 4 << 20));
+    });
+}
+
+fn shared_seed_derivations() {
+    section("shared-seed derivations on the trainer hot path");
+    let live: Vec<usize> = (0..32).filter(|&r| r % 5 != 0).collect();
+    bench_row("RoutePlan::for_step_over, dp=32 pp=4", || {
+        let p = RoutePlan::for_step_over(Routing::Random, &live, 32, 4, 9, 1234);
+        std::hint::black_box(p.boundaries());
+    });
+    let schedule = ChurnSchedule::none()
+        .leave(10, 3)
+        .leave(20, 7)
+        .join(30, 3)
+        .leave(40, 11)
+        .join(50, 7);
+    bench_row("ChurnSchedule::live_at, 5 events", || {
+        for step in 0..64u64 {
+            std::hint::black_box(schedule.live_at(32, step));
+        }
+    });
+}
+
+fn main() {
+    println!("bench_topo — WAN topology, payload-aware collectives, elastic membership");
+    transfer_sampling();
+    collective_costs();
+    shared_seed_derivations();
+}

@@ -27,7 +27,7 @@ const VALUE_KEYS: &[&str] = &[
     "preset", "config", "method", "dataset", "routing", "steps", "dp", "pp", "seed",
     "out", "artifacts", "set", "eval-every", "inner-steps", "group", "alpha", "beta",
     "gamma", "warmup", "world", "sigma", "mu", "iters", "dim", "omega", "outer-steps",
-    "batch-tokens", "csv",
+    "batch-tokens", "csv", "topo", "regions", "churn", "payload",
 ];
 
 impl Args {
@@ -162,6 +162,16 @@ pub fn train_config_from(args: &Args) -> Result<crate::config::TrainConfig, Stri
     if let Some(a) = args.opt("artifacts") {
         cfg.artifacts_dir = a.to_string();
     }
+    if let Some(t) = args.opt("topo") {
+        cfg.net.preset = crate::config::NetPreset::parse(t)
+            .ok_or_else(|| format!("unknown network preset `{t}` (lan|wan|long-tail)"))?;
+    }
+    if let Some(v) = args.opt_usize("regions")? {
+        cfg.net.regions = v;
+    }
+    if let Some(c) = args.opt("churn") {
+        cfg.churn = crate::net::topo::ChurnSchedule::parse(c)?;
+    }
     // --set model.hidden=128 style overrides, applied last.
     if !args.sets.is_empty() {
         let mut text = String::new();
@@ -233,6 +243,20 @@ mod tests {
     #[test]
     fn train_config_rejects_bad_method() {
         let a = parse(&["train", "--method", "sgd"]);
+        assert!(train_config_from(&a).is_err());
+    }
+
+    #[test]
+    fn topo_and_churn_flags_plumb_through() {
+        let a = parse(&[
+            "train", "--topo", "wan", "--regions", "3", "--churn", "leave:4:1;join:8:1",
+        ]);
+        let cfg = train_config_from(&a).unwrap();
+        assert_eq!(cfg.net.preset, crate::config::NetPreset::MultiRegionWan);
+        assert_eq!(cfg.net.regions, 3);
+        assert_eq!(cfg.churn.events().len(), 2);
+        // Churn referencing a replica outside the dp grid fails validation.
+        let a = parse(&["train", "--churn", "leave:4:7"]);
         assert!(train_config_from(&a).is_err());
     }
 }

@@ -1,10 +1,16 @@
 //! Virtual-time cost models of the collectives (Fig. 5A machinery).
 //!
 //! Each function walks the collective's communication DAG against a
-//! [`SimClock`], returning the completion (virtual) time. Latencies are
-//! drawn per message from the clock's model; compute inside the
-//! collective is treated as free, matching the paper's analysis which
+//! [`SimClock`], returning the completion (virtual) time. Compute inside
+//! the collective is treated as free, matching the paper's analysis which
 //! isolates message time.
+//!
+//! Every model exists in two forms: the seed's payload-blind form (one
+//! latency draw per message) and a `*_bytes` form that charges each
+//! message its wire time through [`SimClock::link_time`] — on a
+//! topology-aware clock that is link latency + `bytes / bandwidth`,
+//! scaled by straggler multipliers, which is what makes Fig. 5-style
+//! comparisons runnable on heterogeneous WANs.
 
 use crate::net::SimClock;
 
@@ -14,42 +20,85 @@ use super::{tree_children, tree_parent};
 /// workers: reduce to the root, then broadcast back (Eq. 5 of the paper:
 /// ≈ `2 t_c log2(n)` for constant latency).
 pub fn tree_all_reduce_time(clock: &mut SimClock) -> f64 {
-    let n = clock.world();
-    if n <= 1 {
-        return clock.makespan();
+    tree_all_reduce_time_bytes(clock, 0)
+}
+
+/// Payload-aware [`tree_all_reduce_time`]: every edge carries the full
+/// `bytes` payload in both the reduce and the broadcast phase, so for a
+/// constant-latency link of bandwidth `w` the completion time is
+/// `2 · depth(n) · (t_c + bytes/w)` — Eq. 5 with the serialization term.
+pub fn tree_all_reduce_time_bytes(clock: &mut SimClock, bytes: u64) -> f64 {
+    let all: Vec<usize> = (0..clock.world()).collect();
+    tree_all_reduce_time_over(clock, &all, bytes)
+}
+
+/// [`tree_all_reduce_time_bytes`] over an explicit member subset: the
+/// binary tree is built over `members` (in the given order; `members[0]`
+/// is the root) and only those workers synchronize — the elastic-
+/// membership form of the collective, used after a group rebuild shrinks
+/// or grows the world. Returns the members' barrier time; non-members
+/// are untouched.
+pub fn tree_all_reduce_time_over(clock: &mut SimClock, members: &[usize], bytes: u64) -> f64 {
+    let k = members.len();
+    if k <= 1 {
+        // Nothing to synchronize: a singleton (or empty) group pays no
+        // communication; report its own frontier, not the global one.
+        return members
+            .iter()
+            .map(|&w| clock.ready_at(w))
+            .fold(0.0, f64::max);
     }
-    // Reduce phase: process nodes bottom-up. A parent's ready time becomes
-    // max(own ready, each child's ready + message latency).
-    for rank in (0..n).rev() {
-        for c in tree_children(rank, n) {
-            clock.send(c, rank);
+    // Reduce phase: process tree slots bottom-up. A parent's ready time
+    // becomes max(own ready, each child's ready + message latency).
+    for slot in (0..k).rev() {
+        for c in tree_children(slot, k) {
+            clock.send_bytes(members[c], members[slot], bytes);
         }
     }
     // Broadcast phase: top-down.
-    for rank in 0..n {
-        if tree_parent(rank).is_some() {
+    for slot in 0..k {
+        if let Some(p) = tree_parent(slot) {
             // Parent's ready time already includes the reduce; message
             // from parent to this node.
-            let p = tree_parent(rank).unwrap();
-            clock.send(p, rank);
+            clock.send_bytes(members[p], members[slot], bytes);
         }
     }
-    clock.barrier()
+    // Barrier over the members only.
+    let t = members
+        .iter()
+        .map(|&w| clock.ready_at(w))
+        .fold(0.0, f64::max);
+    for &w in members {
+        let r = clock.ready_at(w);
+        clock.compute(w, t - r);
+    }
+    t
 }
 
 /// Completion time of a ring all-reduce (reduce-scatter + all-gather):
 /// `2(n-1)` message generations, each a full ring hop.
 pub fn ring_all_reduce_time(clock: &mut SimClock) -> f64 {
+    ring_all_reduce_time_bytes(clock, 0)
+}
+
+/// Payload-aware [`ring_all_reduce_time`]: each of the `2(n-1)` ring
+/// generations ships one `bytes / n` chunk per worker, so bandwidth cost
+/// is `≈ 2·bytes/w` total while the latency term still pays `2(n-1)`
+/// hops — the classic latency/bandwidth trade against the tree.
+pub fn ring_all_reduce_time_bytes(clock: &mut SimClock, bytes: u64) -> f64 {
     let n = clock.world();
     if n <= 1 {
         return clock.makespan();
     }
+    let chunk = bytes.div_ceil(n as u64);
     for _phase in 0..2 * (n - 1) {
         // Every worker sends to its successor *simultaneously*: arrivals
         // are computed from the pre-generation ready times (snapshot), not
         // chained within the generation.
         let start: Vec<f64> = (0..n).map(|r| clock.ready_at(r)).collect();
-        let arrive: Vec<f64> = (0..n).map(|r| start[r] + clock.draw_latency()).collect();
+        let arrive: Vec<f64> = (0..n)
+            .map(|r| start[r] + clock.link_time(r, (r + 1) % n, chunk))
+            .collect();
         for r in 0..n {
             let to = (r + 1) % n;
             let t = start[to].max(arrive[r]);
@@ -67,6 +116,16 @@ pub fn ring_all_reduce_time(clock: &mut SimClock) -> f64 {
 /// pair takes, not the straggler max (§5.3: "2·E(t_local)" as a single
 /// leaf-level step of the tree).
 pub fn pair_average_time(clock: &mut SimClock, pairs: Option<&[(usize, usize)]>) -> f64 {
+    pair_average_time_bytes(clock, pairs, 0)
+}
+
+/// Payload-aware [`pair_average_time`]: each member ships its `bytes`
+/// payload to its partner (the NoLoCo gossip exchange of (Δ, φ)).
+pub fn pair_average_time_bytes(
+    clock: &mut SimClock,
+    pairs: Option<&[(usize, usize)]>,
+    bytes: u64,
+) -> f64 {
     let n = clock.world();
     let default: Vec<(usize, usize)> = (0..n / 2).map(|k| (2 * k, 2 * k + 1)).collect();
     let pairs = pairs.unwrap_or(&default);
@@ -75,7 +134,7 @@ pub fn pair_average_time(clock: &mut SimClock, pairs: Option<&[(usize, usize)]>)
     }
     let mut acc = 0.0;
     for &(a, b) in pairs {
-        acc += clock.exchange(a, b);
+        acc += clock.exchange_bytes(a, b, bytes);
     }
     acc / pairs.len() as f64
 }
@@ -127,6 +186,98 @@ mod tests {
             (mc - analytic).abs() / analytic < 0.02,
             "mc={mc} analytic={analytic}"
         );
+    }
+
+    #[test]
+    fn tree_bytes_matches_eq5_with_serialization_term() {
+        use crate::net::topo::{Link, Topology};
+        // Homogeneous constant link t_c = 1 s, bandwidth 1000 B/s, payload
+        // 500 B: per-edge cost 1.5 s, complete binary tree of n = 8 has
+        // depth 3 → 2 · 3 · 1.5 = 9.
+        let topo = Topology::single_switch(8, Link::new(LatencyModel::Constant(1.0), 1000.0));
+        let mut c = SimClock::with_topology(topo, 0);
+        assert_eq!(tree_all_reduce_time_bytes(&mut c, 500), 9.0);
+        // Zero payload on the same link reduces to the seed's Eq. 5 form.
+        let topo = Topology::single_switch(8, Link::new(LatencyModel::Constant(1.0), 1000.0));
+        let mut c = SimClock::with_topology(topo, 0);
+        assert_eq!(tree_all_reduce_time_bytes(&mut c, 0), 6.0);
+    }
+
+    #[test]
+    fn heterogeneous_links_slow_the_tree_not_the_local_pairs() {
+        use crate::net::topo::{Link, Topology};
+        // Two regions of 4; inter-region links 50× slower. The binary
+        // tree inevitably crosses regions; pairs chosen inside regions
+        // never do.
+        let hetero = || {
+            Topology::multi_region(
+                &[4, 4],
+                Link::constant(0.01),
+                Link::constant(0.5),
+            )
+        };
+        let homo = || Topology::single_switch(8, Link::constant(0.01));
+        let mut c = SimClock::with_topology(hetero(), 0);
+        let tree_het = tree_all_reduce_time_bytes(&mut c, 0);
+        let mut c = SimClock::with_topology(homo(), 0);
+        let tree_hom = tree_all_reduce_time_bytes(&mut c, 0);
+        assert!(
+            tree_het > 5.0 * tree_hom,
+            "inter-region hops must dominate: het {tree_het} hom {tree_hom}"
+        );
+        // Intra-region pairs pay only the fast links.
+        let pairs = [(0usize, 1usize), (2, 3), (4, 5), (6, 7)];
+        let mut c = SimClock::with_topology(hetero(), 0);
+        let pair_het = pair_average_time_bytes(&mut c, Some(&pairs), 0);
+        assert_eq!(pair_het, 0.01);
+    }
+
+    #[test]
+    fn subset_tree_syncs_only_its_members() {
+        use crate::net::topo::{Link, Topology};
+        let topo = Topology::single_switch(8, Link::constant(1.0));
+        let mut c = SimClock::with_topology(topo, 0);
+        // 4 members form a depth-2 tree: 2 · 2 · 1 s = 4 s.
+        let members = [0usize, 2, 4, 6];
+        let t = tree_all_reduce_time_over(&mut c, &members, 0);
+        assert_eq!(t, 4.0);
+        for &m in &members {
+            assert_eq!(c.ready_at(m), 4.0);
+        }
+        // Non-members never waited.
+        for w in [1usize, 3, 5, 7] {
+            assert_eq!(c.ready_at(w), 0.0);
+        }
+    }
+
+    #[test]
+    fn ring_bytes_amortizes_bandwidth_over_chunks() {
+        use crate::net::topo::{Link, Topology};
+        // n = 4 workers, constant latency 0, bandwidth 100 B/s, payload
+        // 400 B → chunk 100 B, hop cost 1 s, 2(n-1) = 6 generations → 6 s.
+        let topo = Topology::single_switch(4, Link::new(LatencyModel::Constant(0.0), 100.0));
+        let mut c = SimClock::with_topology(topo, 0);
+        assert_eq!(ring_all_reduce_time_bytes(&mut c, 400), 6.0);
+        // The tree ships the full payload per edge: depth 2, per-edge 4 s
+        // → 2 · 2 · 4 = 16 s. Ring wins on bandwidth-bound payloads.
+        let topo = Topology::single_switch(4, Link::new(LatencyModel::Constant(0.0), 100.0));
+        let mut c = SimClock::with_topology(topo, 0);
+        assert_eq!(tree_all_reduce_time_bytes(&mut c, 400), 16.0);
+    }
+
+    #[test]
+    fn straggler_node_drags_the_tree_but_only_its_own_pair() {
+        use crate::net::topo::{Link, Topology};
+        let topo = || Topology::single_switch(8, Link::constant(0.1)).with_straggler(7, 10.0);
+        let mut c = SimClock::with_topology(topo(), 0);
+        let tree = tree_all_reduce_time_bytes(&mut c, 0);
+        // Node 7's edge costs 1.0 in the reduce phase and again in the
+        // broadcast; the whole collective waits on it.
+        assert!(tree >= 2.0, "straggler must gate the barrier: {tree}");
+        // Pairs not involving node 7 finish at fast-link speed.
+        let mut c = SimClock::with_topology(topo(), 0);
+        let fast_pairs = [(0usize, 1usize), (2, 3), (4, 5)];
+        assert!((pair_average_time_bytes(&mut c, Some(&fast_pairs), 0) - 0.1).abs() < 1e-12);
     }
 
     #[test]

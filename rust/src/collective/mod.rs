@@ -17,7 +17,10 @@
 pub mod cost;
 mod exec;
 
-pub use cost::{pair_average_time, tree_all_reduce_time, ring_all_reduce_time};
+pub use cost::{
+    pair_average_time, pair_average_time_bytes, ring_all_reduce_time, ring_all_reduce_time_bytes,
+    tree_all_reduce_time, tree_all_reduce_time_bytes, tree_all_reduce_time_over,
+};
 pub use exec::{all_reduce_mean, broadcast, pair_exchange, reduce_scatter_gather};
 
 /// Children of `rank` in a binary reduction tree over `0..n` (rank 0 root).

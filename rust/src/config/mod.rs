@@ -11,6 +11,8 @@ pub mod presets;
 pub mod toml;
 
 use self::toml::Doc;
+use crate::net::topo::{ChurnSchedule, Link, Topology};
+use crate::net::LatencyModel;
 use std::fmt;
 
 /// Which training method drives the outer loop (§2, §3).
@@ -135,6 +137,122 @@ impl TopologyConfig {
     }
 }
 
+/// Named shapes for the simulated network (§5.3 scenario families).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetPreset {
+    /// One region, constant sub-ms links: the datacenter baseline.
+    SingleSwitchLan,
+    /// Several regions, fast log-normal links inside a region and slow
+    /// high-variance links between them.
+    MultiRegionWan,
+    /// One flat "region" of consumer links: heavy-tailed latency, low
+    /// bandwidth, per-node straggler multipliers.
+    LongTailInternet,
+}
+
+impl NetPreset {
+    /// Parse from a config / CLI string.
+    pub fn parse(s: &str) -> Option<NetPreset> {
+        match s.to_ascii_lowercase().as_str() {
+            "lan" | "single-switch" => Some(NetPreset::SingleSwitchLan),
+            "wan" | "multi-region" => Some(NetPreset::MultiRegionWan),
+            "long-tail" | "internet" => Some(NetPreset::LongTailInternet),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for NetPreset {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NetPreset::SingleSwitchLan => write!(f, "lan"),
+            NetPreset::MultiRegionWan => write!(f, "wan"),
+            NetPreset::LongTailInternet => write!(f, "long-tail"),
+        }
+    }
+}
+
+/// Simulated-network shape: which preset, and its knobs. Latencies are
+/// seconds (medians for the log-normal presets), bandwidths bytes/s.
+/// Lives in the `[topology]` TOML section next to `dp`/`pp`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetTopoConfig {
+    /// Scenario family.
+    pub preset: NetPreset,
+    /// Region count for the WAN preset (clamped to the world size).
+    pub regions: usize,
+    /// Intra-region link latency (s).
+    pub intra_latency: f64,
+    /// Inter-region link latency (s); also the long-tail median latency.
+    pub inter_latency: f64,
+    /// Intra-region bandwidth (bytes/s).
+    pub intra_bandwidth: f64,
+    /// Inter-region bandwidth (bytes/s); also the long-tail bandwidth.
+    pub inter_bandwidth: f64,
+    /// Log-normal latency spread σ for the WAN / long-tail presets.
+    pub latency_sigma: f64,
+    /// Straggler-multiplier spread σ for the long-tail preset.
+    pub straggler_sigma: f64,
+}
+
+impl Default for NetTopoConfig {
+    fn default() -> NetTopoConfig {
+        NetTopoConfig {
+            preset: NetPreset::SingleSwitchLan,
+            regions: 3,
+            intra_latency: 1e-3,
+            inter_latency: 80e-3,
+            intra_bandwidth: 1.25e9, // 10 Gb/s
+            inter_bandwidth: 1.25e7, // 100 Mb/s
+            latency_sigma: 0.6,
+            straggler_sigma: 0.5,
+        }
+    }
+}
+
+impl NetTopoConfig {
+    /// Materialize a [`Topology`] over `world` nodes. `seed` only affects
+    /// the long-tail preset's deterministic straggler draws.
+    pub fn build(&self, world: usize, seed: u64) -> Topology {
+        match self.preset {
+            NetPreset::SingleSwitchLan => Topology::single_switch(
+                world,
+                Link::new(LatencyModel::Constant(self.intra_latency), self.intra_bandwidth),
+            ),
+            NetPreset::MultiRegionWan => {
+                let r = self.regions.clamp(1, world.max(1));
+                let base = world / r;
+                let rem = world % r;
+                let sizes: Vec<usize> =
+                    (0..r).map(|i| base + usize::from(i < rem)).collect();
+                let intra = Link::new(
+                    LatencyModel::LogNormal {
+                        mu: self.intra_latency.ln(),
+                        sigma: self.latency_sigma,
+                    },
+                    self.intra_bandwidth,
+                );
+                let inter = Link::new(
+                    LatencyModel::LogNormal {
+                        mu: self.inter_latency.ln(),
+                        sigma: self.latency_sigma,
+                    },
+                    self.inter_bandwidth,
+                );
+                Topology::multi_region(&sizes, intra, inter)
+            }
+            NetPreset::LongTailInternet => Topology::long_tail(
+                world,
+                self.inter_latency.ln(),
+                self.latency_sigma,
+                self.inter_bandwidth,
+                self.straggler_sigma,
+                seed,
+            ),
+        }
+    }
+}
+
 /// Outer-optimizer hyper-parameters (§3.2, §4).
 #[derive(Clone, Debug, PartialEq)]
 pub struct OuterConfig {
@@ -253,6 +371,11 @@ pub struct TrainConfig {
     pub routing: Routing,
     /// Directory holding compiled HLO artifacts.
     pub artifacts_dir: String,
+    /// Simulated-network shape for the latency / WAN analyses.
+    pub net: NetTopoConfig,
+    /// Deterministic membership schedule over the DP replicas (elastic
+    /// training; the node index of each event is a DP replica).
+    pub churn: ChurnSchedule,
 }
 
 impl TrainConfig {
@@ -272,6 +395,27 @@ impl TrainConfig {
                 "model.name" => set_string(&mut self.model.name, v),
                 "topology.dp" => set_usize(&mut self.topology.dp, v),
                 "topology.pp" => set_usize(&mut self.topology.pp, v),
+                "topology.net" => match v.as_str().and_then(NetPreset::parse) {
+                    Some(p) => {
+                        self.net.preset = p;
+                        true
+                    }
+                    None => false,
+                },
+                "topology.regions" => set_usize(&mut self.net.regions, v),
+                "topology.intra_latency" => set_f64(&mut self.net.intra_latency, v),
+                "topology.inter_latency" => set_f64(&mut self.net.inter_latency, v),
+                "topology.intra_bandwidth" => set_f64(&mut self.net.intra_bandwidth, v),
+                "topology.inter_bandwidth" => set_f64(&mut self.net.inter_bandwidth, v),
+                "topology.latency_sigma" => set_f64(&mut self.net.latency_sigma, v),
+                "topology.straggler_sigma" => set_f64(&mut self.net.straggler_sigma, v),
+                "topology.churn" => match churn_from_value(v) {
+                    Some(s) => {
+                        self.churn = s;
+                        true
+                    }
+                    None => false,
+                },
                 "outer.method" => match v.as_str().and_then(Method::parse) {
                     Some(m) => {
                         self.outer.method = m;
@@ -339,7 +483,33 @@ impl TrainConfig {
         if self.outer.method == Method::NoLoCo && self.topology.dp < 2 {
             return Err("NoLoCo needs dp >= 2 to form gossip pairs".into());
         }
+        for &(step, event) in self.churn.events() {
+            if event.node() >= self.topology.dp {
+                return Err(format!(
+                    "churn event at step {step} names replica {} but dp = {}",
+                    event.node(),
+                    self.topology.dp
+                ));
+            }
+        }
         Ok(())
+    }
+}
+
+/// Parse `topology.churn`: either one `"leave:STEP:NODE;…"` string or an
+/// array of per-event strings.
+fn churn_from_value(v: &toml::Value) -> Option<ChurnSchedule> {
+    match v {
+        toml::Value::Str(s) => ChurnSchedule::parse(s).ok(),
+        toml::Value::Array(items) => {
+            let mut out = ChurnSchedule::none();
+            for it in items {
+                let (step, e) = ChurnSchedule::parse_event(it.as_str()?).ok()?;
+                out.push(step, e);
+            }
+            Some(out)
+        }
+        _ => None,
     }
 }
 
@@ -431,6 +601,56 @@ mod tests {
         assert!(c.validate().is_err());
         c.topology.pp = 2;
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn topology_section_configures_net_and_churn() {
+        let mut c = presets::preset("tiny").unwrap();
+        let doc = Doc::parse(
+            "[topology]\n\
+             net = \"wan\"\n\
+             regions = 4\n\
+             inter_latency = 0.2\n\
+             inter_bandwidth = 1000000.0\n\
+             churn = [\"leave:30:1\", \"join:45:1\"]\n",
+        )
+        .unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.net.preset, NetPreset::MultiRegionWan);
+        assert_eq!(c.net.regions, 4);
+        assert!((c.net.inter_latency - 0.2).abs() < 1e-12);
+        assert_eq!(c.churn.events().len(), 2);
+        c.validate().unwrap(); // replica 1 exists at dp = 2
+        // Churn naming a replica outside the grid must be rejected.
+        let bad = Doc::parse("[topology]\nchurn = \"leave:3:9\"\n").unwrap();
+        c.apply_doc(&bad).unwrap();
+        assert!(c.validate().unwrap_err().contains("churn"));
+    }
+
+    #[test]
+    fn net_presets_build_expected_shapes() {
+        let mut n = NetTopoConfig::default();
+        let lan = n.build(8, 0);
+        assert_eq!(lan.regions(), 1);
+        assert_eq!(lan.world(), 8);
+        n.preset = NetPreset::MultiRegionWan;
+        n.regions = 3;
+        let wan = n.build(8, 0);
+        assert_eq!(wan.regions(), 3);
+        assert_eq!(wan.world(), 8);
+        // 8 over 3 regions: 3 + 3 + 2.
+        let counts: Vec<usize> = (0..3)
+            .map(|r| (0..8).filter(|&node| wan.region_of(node) == r).count())
+            .collect();
+        assert_eq!(counts, vec![3, 3, 2]);
+        // Inter-region links are slower in expectation than intra.
+        assert!(wan.expected_transfer(0, 7, 0) > wan.expected_transfer(0, 1, 0));
+        n.preset = NetPreset::LongTailInternet;
+        let tail = n.build(8, 42);
+        assert_eq!(tail.regions(), 1);
+        assert!((0..8).all(|i| tail.straggler_of(i) >= 1.0));
+        assert_eq!(NetPreset::parse("long-tail"), Some(NetPreset::LongTailInternet));
+        assert_eq!(NetPreset::parse("nope"), None);
     }
 
     #[test]

@@ -11,8 +11,10 @@
 //! optimizer settings, smaller width/depth/vocab.
 
 use super::{
-    Dataset, Method, ModelConfig, OuterConfig, Routing, TopologyConfig, TrainConfig,
+    Dataset, Method, ModelConfig, NetTopoConfig, OuterConfig, Routing, TopologyConfig,
+    TrainConfig,
 };
+use crate::net::topo::ChurnSchedule;
 
 /// All preset names, for CLI help / validation.
 pub const PRESET_NAMES: &[&str] = &[
@@ -46,6 +48,8 @@ fn base(model: ModelConfig, steps: usize, warmup: usize) -> TrainConfig {
         seed: 0x0107c0,
         routing: Routing::Random,
         artifacts_dir: "artifacts".into(),
+        net: NetTopoConfig::default(),
+        churn: ChurnSchedule::none(),
     }
 }
 

@@ -26,8 +26,9 @@
 //! | [`tensor`] | host-side flat tensors + stats used by collectives |
 //! | [`prop`] | minimal property-testing harness |
 //! | [`net`] | discrete-event latency simulator + in-process message fabric |
-//! | [`collective`] | tree / ring all-reduce, broadcast, pair exchange |
-//! | [`routing`] | random-permutation pipeline routing (§3.1) |
+//! | [`net::topo`] | heterogeneous WAN topologies (regions, latency+bandwidth links, stragglers) + elastic membership (churn schedules, live sets) |
+//! | [`collective`] | tree / ring all-reduce, broadcast, pair exchange; topology- and payload-aware cost models |
+//! | [`routing`] | random-permutation pipeline routing (§3.1), incl. live-subset plans under churn |
 //! | [`optim`] | Adam, LR schedules, DiLoCo Nesterov, NoLoCo modified Nesterov (Eq. 2) |
 //! | [`quad`] | Theorem-1 quadratic-loss convergence harness |
 //! | [`data`] | synthetic corpora, tokenizer, sharded loaders |

@@ -5,12 +5,14 @@
 //! * `train`            — run the single-process trainer (default)
 //! * `train-threaded`   — run the threaded trainer over the message fabric
 //! * `presets`          — list configuration presets (Table 1 + CPU-scale)
+//! * `topo`             — analyze the configured network topology (sync costs)
 //! * `artifacts`        — inventory the compiled artifact builds
 //! * `check`            — validate a config + artifact pairing, no training
 //!
 //! Common options: `--preset NAME`, `--method fsdp|diloco|noloco`,
 //! `--dataset reddit|c4`, `--routing random|fixed`, `--steps N`, `--dp N`,
-//! `--pp N`, `--seed N`, `--config FILE`, `--set path=value`, `--csv OUT`.
+//! `--pp N`, `--seed N`, `--config FILE`, `--set path=value`, `--csv OUT`,
+//! `--topo lan|wan|long-tail`, `--regions N`, `--churn "leave:S:R;join:S:R"`.
 
 use noloco::cli::{self, Args};
 use noloco::config::presets;
@@ -30,6 +32,7 @@ fn main() {
         "train" => cmd_train(&args),
         "train-threaded" => cmd_train_threaded(&args),
         "presets" => cmd_presets(),
+        "topo" => cmd_topo(&args),
         "artifacts" => cmd_artifacts(&args),
         "check" => cmd_check(&args),
         "help" | "--help" | "-h" => {
@@ -56,6 +59,7 @@ fn print_help() {
            train            run the single-process trainer (default)\n\
            train-threaded   run the threaded trainer over the message fabric\n\
            presets          list configuration presets\n\
+           topo             analyze the configured network topology\n\
            artifacts        inventory compiled artifact builds\n\
            check            validate config + artifacts without training\n\n\
          OPTIONS:\n\
@@ -74,7 +78,11 @@ fn print_help() {
            --artifacts DIR      artifact root (default: artifacts)\n\
            --csv FILE           write the run trace as CSV\n\
            --latency-mu X       threaded: log-normal latency mu (seconds)\n\
-           --latency-sigma X    threaded: log-normal latency sigma"
+           --latency-sigma X    threaded: log-normal latency sigma\n\
+           --topo P             network preset: lan | wan | long-tail\n\
+           --regions N          WAN region count\n\
+           --churn EVENTS       'leave:STEP:REPLICA;join:STEP:REPLICA;…'\n\
+           --payload BYTES      topo: sync payload (default: model size)"
     );
 }
 
@@ -175,6 +183,62 @@ fn human_count(n: usize) -> String {
     } else {
         format!("{:.1}K", n as f64 / 1e3)
     }
+}
+
+fn cmd_topo(args: &Args) -> anyhow::Result<()> {
+    use noloco::collective::{
+        pair_average_time_bytes, ring_all_reduce_time_bytes, tree_all_reduce_time_bytes,
+    };
+    use noloco::net::SimClock;
+
+    let cfg = cli::train_config_from(args).map_err(anyhow::Error::msg)?;
+    let world = cfg.topology.world();
+    let topo = cfg.net.build(world, cfg.seed);
+    let payload = match args.opt_u64("payload").map_err(anyhow::Error::msg)? {
+        Some(b) => b,
+        None => (cfg.model.total_params() * 4) as u64,
+    };
+    println!(
+        "topology: {} | {} nodes in {} region(s) | payload {:.1} MiB",
+        cfg.net.preset,
+        topo.world(),
+        topo.regions(),
+        payload as f64 / (1024.0 * 1024.0)
+    );
+    for n in 0..topo.world() {
+        if topo.straggler_of(n) > 1.0 {
+            println!("  straggler: node {n} x{:.2}", topo.straggler_of(n));
+        }
+    }
+    let reps = 50;
+    let mut tree = 0.0;
+    let mut ring = 0.0;
+    let mut pair = 0.0;
+    for seed in 0..reps {
+        let mut c = SimClock::with_topology(topo.clone(), cfg.seed ^ seed);
+        tree += tree_all_reduce_time_bytes(&mut c, payload);
+        let mut c = SimClock::with_topology(topo.clone(), cfg.seed ^ (seed + 1000));
+        ring += ring_all_reduce_time_bytes(&mut c, payload);
+        let mut c = SimClock::with_topology(topo.clone(), cfg.seed ^ (seed + 2000));
+        pair += pair_average_time_bytes(&mut c, None, 2 * payload);
+    }
+    let r = reps as f64;
+    println!(
+        "expected sync cost: tree all-reduce {:.3}s | ring all-reduce {:.3}s | \
+         gossip pair (2x payload) {:.3}s",
+        tree / r,
+        ring / r,
+        pair / r
+    );
+    if cfg.churn.is_empty() {
+        println!("churn: none");
+    } else {
+        println!("churn schedule over dp = {}:", cfg.topology.dp);
+        for &(step, event) in cfg.churn.events() {
+            println!("  step {step}: {event:?}");
+        }
+    }
+    Ok(())
 }
 
 fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {

@@ -11,6 +11,29 @@
 //! waits until then, modelling link latency without occupying the sender
 //! thread. Fault injection ([`FaultPlan`]) drops or duplicates messages
 //! deterministically for robustness tests.
+//!
+//! # Determinism guarantees
+//!
+//! Fault decisions are made on the *sender* side, by a per-endpoint
+//! [`Pcg64`] seeded as `seed ^ rank · φ64` at construction. Consequences:
+//!
+//! * Given the same fabric seed and the same per-endpoint sequence of
+//!   `send` calls, the exact same messages are dropped / duplicated on
+//!   every run — regardless of thread scheduling, because no endpoint's
+//!   RNG is shared.
+//! * Each `send` consumes one RNG draw for the drop decision (when
+//!   `drop_prob > 0`), then — only if the message survived — one draw
+//!   for latency (when enabled) and one for the duplicate decision (when
+//!   `dup_prob > 0`). Drop and duplicate probabilities therefore compose
+//!   independently per message: a message is delivered twice with
+//!   probability `(1 − p_drop) · p_dup`, once with
+//!   `(1 − p_drop)(1 − p_dup)`, and never with `p_drop`.
+//! * A duplicated message reuses the original's `deliver_at`, so both
+//!   copies become receivable at the same instant.
+//!
+//! Receive-side ordering (which of two racing senders lands first) is
+//! *not* deterministic; tag-matched [`Endpoint::recv`] exists precisely
+//! so callers never depend on it.
 
 use crate::rngx::Pcg64;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -94,13 +117,26 @@ pub struct Message {
     deliver_at: Option<Instant>,
 }
 
-/// Deterministic fault injection for tests.
-#[derive(Clone, Debug, Default)]
+/// Deterministic fault injection for tests (see the module docs for the
+/// exact determinism guarantees and how the probabilities compose).
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct FaultPlan {
     /// Probability a message is silently dropped.
     pub drop_prob: f64,
     /// Probability a message is delivered twice.
     pub dup_prob: f64,
+}
+
+impl FaultPlan {
+    /// A fault-free plan (what [`Fabric::new`] uses).
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// True when no faults can fire.
+    pub fn is_none(&self) -> bool {
+        self.drop_prob <= 0.0 && self.dup_prob <= 0.0
+    }
 }
 
 struct Shared {
@@ -395,6 +431,80 @@ mod tests {
         assert!(e0
             .recv_timeout(Tag::new(1, 0, 0), Duration::from_millis(20))
             .is_some());
+    }
+
+    #[test]
+    fn fault_plan_none_is_fault_free() {
+        assert!(FaultPlan::none().is_none());
+        assert_eq!(FaultPlan::none(), FaultPlan::default());
+        assert!(!FaultPlan { drop_prob: 0.1, dup_prob: 0.0 }.is_none());
+        assert!(!FaultPlan { drop_prob: 0.0, dup_prob: 0.1 }.is_none());
+    }
+
+    #[test]
+    fn drop_beats_duplicate_when_both_certain() {
+        // Composition rule from the module docs: P(any delivery) =
+        // 1 - p_drop, regardless of dup_prob. With p_drop = 1 every
+        // message dies even though dup_prob = 1.
+        let mut f = Fabric::with_faults(
+            2,
+            FaultPlan { drop_prob: 1.0, dup_prob: 1.0 },
+            11,
+        );
+        let mut eps = f.take_endpoints();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        for k in 0..8u32 {
+            e1.send(0, Tag::new(1, k, 0), Payload::Control);
+        }
+        for k in 0..8u32 {
+            assert!(e0
+                .recv_timeout(Tag::new(1, k, 0), Duration::from_millis(5))
+                .is_none());
+        }
+        // Traffic accounting still counts the attempted sends.
+        assert_eq!(f.msgs_sent()[1], 8);
+    }
+
+    #[test]
+    fn mixed_drop_dup_is_deterministic_per_seed() {
+        // Same seed ⇒ identical per-message delivery multiset across runs,
+        // independent of wall-clock scheduling (sender-side decisions).
+        let deliveries = |seed: u64| -> Vec<usize> {
+            let mut f = Fabric::with_faults(
+                2,
+                FaultPlan { drop_prob: 0.4, dup_prob: 0.4 },
+                seed,
+            );
+            let mut eps = f.take_endpoints();
+            let mut e1 = eps.pop().unwrap();
+            let mut e0 = eps.pop().unwrap();
+            let n = 32u32;
+            for k in 0..n {
+                e1.send(0, Tag::new(1, k, 0), Payload::Control);
+            }
+            (0..n)
+                .map(|k| {
+                    let mut copies = 0;
+                    while e0
+                        .recv_timeout(Tag::new(1, k, 0), Duration::from_millis(5))
+                        .is_some()
+                    {
+                        copies += 1;
+                    }
+                    copies
+                })
+                .collect()
+        };
+        let a = deliveries(99);
+        let b = deliveries(99);
+        assert_eq!(a, b, "same seed must reproduce the same fault pattern");
+        // With these probabilities all three outcomes should occur.
+        assert!(a.iter().any(|&c| c == 0), "no drop observed");
+        assert!(a.iter().any(|&c| c == 1), "no single delivery observed");
+        assert!(a.iter().any(|&c| c == 2), "no duplicate observed");
+        let c = deliveries(100);
+        assert_ne!(a, c, "different seeds should differ");
     }
 
     #[test]

@@ -15,9 +15,16 @@
 //!   channels, with optional injected latency and fault injection for
 //!   tests. The distributed training driver ([`crate::train`]) runs on
 //!   this.
+//! * [`topo`] — heterogeneous WAN topologies (regions, per-link latency
+//!   *and bandwidth*, stragglers) plus elastic membership
+//!   ([`ChurnSchedule`] / [`Membership`]); [`SimClock::with_topology`]
+//!   makes the cost models link- and payload-aware, and the trainers use
+//!   the churn machinery for elastic NoLoCo runs.
 
 mod fabric;
 mod simclock;
+pub mod topo;
 
 pub use fabric::{Endpoint, Fabric, FaultPlan, Message, Payload, Tag};
 pub use simclock::{erf, LatencyModel, SimClock};
+pub use topo::{ChurnEvent, ChurnSchedule, Link, Membership, Topology};

@@ -8,6 +8,7 @@
 //! (tree-reduce vs local averaging expected time) and Fig. 5B (global
 //! blocking overhead of DiLoCo vs NoLoCo).
 
+use crate::net::topo::Topology;
 use crate::rngx::Pcg64;
 
 /// Message latency model.
@@ -64,22 +65,47 @@ pub fn erf(x: f64) -> f64 {
 }
 
 /// Virtual-time simulator over a set of workers.
+///
+/// Two flavours: the homogeneous one ([`SimClock::new`]) draws every
+/// message's cost from one payload-blind [`LatencyModel`]; the
+/// topology-aware one ([`SimClock::with_topology`]) routes every message
+/// through a [`Topology`], so cost = link latency + bytes/bandwidth,
+/// scaled by straggler multipliers.
 #[derive(Clone, Debug)]
 pub struct SimClock {
     /// Per-worker time at which the worker becomes free.
     ready: Vec<f64>,
     latency: LatencyModel,
+    topo: Option<Topology>,
     rng: Pcg64,
 }
 
 impl SimClock {
-    /// `n` workers, all ready at t = 0.
+    /// `n` workers, all ready at t = 0, homogeneous links.
     pub fn new(n: usize, latency: LatencyModel, seed: u64) -> Self {
         SimClock {
             ready: vec![0.0; n],
             latency,
+            topo: None,
             rng: Pcg64::seed_from_u64(seed),
         }
+    }
+
+    /// One worker per topology node, all ready at t = 0; message costs
+    /// come from the topology's links (the `latency` model of the plain
+    /// constructor is unused).
+    pub fn with_topology(topo: Topology, seed: u64) -> Self {
+        SimClock {
+            ready: vec![0.0; topo.world()],
+            latency: LatencyModel::Constant(0.0),
+            topo: Some(topo),
+            rng: Pcg64::seed_from_u64(seed),
+        }
+    }
+
+    /// The topology, when this clock is link-aware.
+    pub fn topology(&self) -> Option<&Topology> {
+        self.topo.as_ref()
     }
 
     /// Number of workers.
@@ -97,21 +123,47 @@ impl SimClock {
         self.ready[w] += dt;
     }
 
-    /// Simulate a message `from → to`: the receiver becomes ready no
-    /// earlier than sender-ready + latency. Returns the arrival time.
+    /// Sample the wire time of one `bytes`-sized message `from → to`
+    /// *without* attributing it to either worker's schedule (cost models
+    /// that roll their own schedules build on this). Topology-aware
+    /// clocks charge link latency + serialization + stragglers; plain
+    /// clocks fall back to the payload-blind latency model.
+    pub fn link_time(&mut self, from: usize, to: usize, bytes: u64) -> f64 {
+        match &self.topo {
+            Some(t) => t.transfer_time(from, to, bytes, &mut self.rng),
+            None => self.latency.sample(&mut self.rng),
+        }
+    }
+
+    /// Simulate a zero-payload message `from → to`: the receiver becomes
+    /// ready no earlier than sender-ready + latency. Returns the arrival
+    /// time.
     pub fn send(&mut self, from: usize, to: usize) -> f64 {
-        let lat = self.latency.sample(&mut self.rng);
+        self.send_bytes(from, to, 0)
+    }
+
+    /// Simulate a `bytes`-sized message `from → to` through the link (or
+    /// the homogeneous model when no topology is attached). Returns the
+    /// arrival time.
+    pub fn send_bytes(&mut self, from: usize, to: usize, bytes: u64) -> f64 {
+        let lat = self.link_time(from, to, bytes);
         let arrive = self.ready[from] + lat;
         self.ready[to] = self.ready[to].max(arrive);
         arrive
     }
 
-    /// Symmetric exchange between two workers (both send, both wait):
-    /// afterwards both are ready at `max(arrival_a, arrival_b)`. This is
-    /// one NoLoCo gossip hop.
+    /// Symmetric zero-payload exchange between two workers (both send,
+    /// both wait): afterwards both are ready at `max(arrival_a,
+    /// arrival_b)`. This is one NoLoCo gossip hop.
     pub fn exchange(&mut self, a: usize, b: usize) -> f64 {
-        let la = self.latency.sample(&mut self.rng);
-        let lb = self.latency.sample(&mut self.rng);
+        self.exchange_bytes(a, b, 0)
+    }
+
+    /// Symmetric exchange of `bytes` each way (the NoLoCo gossip hop with
+    /// its real (Δ, φ) payload).
+    pub fn exchange_bytes(&mut self, a: usize, b: usize, bytes: u64) -> f64 {
+        let la = self.link_time(a, b, bytes);
+        let lb = self.link_time(b, a, bytes);
         let t = (self.ready[a] + la).max(self.ready[b] + lb);
         self.ready[a] = t;
         self.ready[b] = t;
@@ -223,6 +275,39 @@ mod tests {
         c.compute(2, 5.0);
         assert_eq!(c.barrier(), 5.0);
         assert!(c.ready.iter().all(|&r| r == 5.0));
+    }
+
+    #[test]
+    fn topology_clock_charges_bandwidth_and_links() {
+        use crate::net::topo::{Link, Topology};
+        // Two regions of two nodes: intra 0.1 s + 1 kB/s, inter 1.0 s +
+        // 100 B/s.
+        let topo = Topology::multi_region(
+            &[2, 2],
+            Link::new(LatencyModel::Constant(0.1), 1000.0),
+            Link::new(LatencyModel::Constant(1.0), 100.0),
+        );
+        let mut c = SimClock::with_topology(topo, 0);
+        assert_eq!(c.world(), 4);
+        // Intra-region 500-byte message: 0.1 + 0.5.
+        assert_eq!(c.send_bytes(0, 1, 500), 0.6);
+        // Inter-region 500-byte message: 1.0 + 5.0.
+        assert_eq!(c.send_bytes(0, 2, 500), 6.0);
+        assert_eq!(c.ready_at(2), 6.0);
+        // Zero-payload send degenerates to pure link latency.
+        c.reset();
+        assert_eq!(c.send(0, 3), 1.0);
+    }
+
+    #[test]
+    fn topology_exchange_waits_on_slow_direction() {
+        use crate::net::topo::{Link, Topology};
+        let topo = Topology::single_switch(2, Link::constant(0.5)).with_straggler(1, 3.0);
+        let mut c = SimClock::with_topology(topo, 0);
+        // Both directions pay the straggler multiplier: 0.5 * 3.
+        assert_eq!(c.exchange(0, 1), 1.5);
+        assert_eq!(c.ready_at(0), 1.5);
+        assert_eq!(c.ready_at(1), 1.5);
     }
 
     #[test]

@@ -1,0 +1,503 @@
+//! Heterogeneous network topology + elastic membership.
+//!
+//! The paper's headline systems claim (§5.3, Fig. 5) is that NoLoCo's
+//! gossip-pair synchronization stays fast on *low-bandwidth, heterogeneous,
+//! internet-scale* clusters where an all-reduce stalls on the slowest link
+//! or member. The plain [`SimClock`](crate::net::SimClock) models one
+//! homogeneous latency distribution for every link and a fixed worker set;
+//! this module supplies what that misses:
+//!
+//! * [`Link`] — a latency model **plus bandwidth**, so a transfer costs
+//!   `latency + bytes / bandwidth` instead of a size-blind draw.
+//! * [`Topology`] — nodes grouped into regions with per-region-pair links
+//!   and per-node straggler multipliers. Three presets mirror the config
+//!   presets: [`Topology::single_switch`] (LAN), [`Topology::multi_region`]
+//!   (WAN), [`Topology::long_tail`] (internet with stragglers).
+//! * [`ChurnEvent`] / [`ChurnSchedule`] — deterministic node leave/join
+//!   events at given (virtual) steps, and [`Membership`] — the live-set
+//!   tracker the trainers and route planner consult.
+//!
+//! [`SimClock::with_topology`](crate::net::SimClock::with_topology) routes
+//! its message costs through a `Topology`, which makes the
+//! [`crate::collective::cost`] models topology- and payload-aware; the
+//! trainers ([`crate::train`]) consume `ChurnSchedule` to run elastic
+//! NoLoCo while the all-reduce baselines must abort — the measurable form
+//! of the paper's no-global-barrier advantage.
+//!
+//! Determinism: all randomness flows through the caller-provided
+//! [`Pcg64`]; two walks of the same schedule with the same seed produce
+//! identical transfer times and membership histories.
+
+use crate::net::LatencyModel;
+use crate::rngx::Pcg64;
+
+/// One (directionless) link class: a latency distribution plus a
+/// bandwidth. Transfer time of a `b`-byte message is one latency draw
+/// plus the serialization term `b / bandwidth`.
+#[derive(Clone, Debug)]
+pub struct Link {
+    /// Per-message latency model (the paper's log-normal, or constant).
+    pub latency: LatencyModel,
+    /// Bytes per second; `f64::INFINITY` for a latency-only link.
+    pub bandwidth: f64,
+}
+
+impl Link {
+    /// Link with the given latency model and bandwidth (bytes/s).
+    pub fn new(latency: LatencyModel, bandwidth: f64) -> Link {
+        assert!(bandwidth > 0.0, "bandwidth must be positive");
+        Link { latency, bandwidth }
+    }
+
+    /// Constant-latency, infinite-bandwidth link (the degenerate case in
+    /// which the payload-aware cost models reduce to the seed's
+    /// size-blind ones).
+    pub fn constant(latency_secs: f64) -> Link {
+        Link { latency: LatencyModel::Constant(latency_secs), bandwidth: f64::INFINITY }
+    }
+
+    /// Sample the transfer time of `bytes` over this link.
+    pub fn sample_transfer(&self, bytes: u64, rng: &mut Pcg64) -> f64 {
+        self.latency.sample(rng) + bytes as f64 / self.bandwidth
+    }
+
+    /// Analytic expected transfer time of `bytes`.
+    pub fn expected_transfer(&self, bytes: u64) -> f64 {
+        self.latency.expected() + bytes as f64 / self.bandwidth
+    }
+}
+
+/// Regions, per-region-pair links, and per-node straggler multipliers.
+///
+/// `links[a][b]` is the link class between region `a` and region `b`
+/// (diagonal entries are the intra-region links); the matrix is stored in
+/// full but constructed symmetric. A node's straggler multiplier scales
+/// every transfer it participates in (`max` of the two endpoints'
+/// multipliers), modelling a slow NIC / oversubscribed uplink rather than
+/// slow compute.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    region_names: Vec<String>,
+    node_region: Vec<usize>,
+    links: Vec<Vec<Link>>,
+    straggler: Vec<f64>,
+}
+
+impl Topology {
+    /// Build from explicit region names, per-node region assignment, and
+    /// a `regions × regions` link matrix.
+    pub fn new(
+        region_names: Vec<String>,
+        node_region: Vec<usize>,
+        links: Vec<Vec<Link>>,
+    ) -> Topology {
+        let nr = region_names.len();
+        assert!(nr > 0, "topology needs at least one region");
+        assert_eq!(links.len(), nr, "link matrix rows != regions");
+        for row in &links {
+            assert_eq!(row.len(), nr, "link matrix is not square");
+        }
+        for &r in &node_region {
+            assert!(r < nr, "node assigned to unknown region {r}");
+        }
+        let n = node_region.len();
+        Topology { region_names, node_region, links, straggler: vec![1.0; n] }
+    }
+
+    /// Single-switch LAN preset: one region, every pair shares `link`.
+    pub fn single_switch(n: usize, link: Link) -> Topology {
+        Topology::new(vec!["lan".into()], vec![0; n], vec![vec![link]])
+    }
+
+    /// Multi-region WAN preset: `sizes[i]` nodes in region `i`, fast
+    /// `intra` links inside a region and slow `inter` links between
+    /// regions. Regions are named `r0`, `r1`, ….
+    pub fn multi_region(sizes: &[usize], intra: Link, inter: Link) -> Topology {
+        let nr = sizes.len();
+        assert!(nr > 0, "multi_region needs at least one region");
+        let names = (0..nr).map(|i| format!("r{i}")).collect();
+        let mut node_region = Vec::new();
+        for (i, &s) in sizes.iter().enumerate() {
+            node_region.extend(std::iter::repeat(i).take(s));
+        }
+        let links: Vec<Vec<Link>> = (0..nr)
+            .map(|a| {
+                (0..nr)
+                    .map(|b| if a == b { intra.clone() } else { inter.clone() })
+                    .collect()
+            })
+            .collect();
+        Topology::new(names, node_region, links)
+    }
+
+    /// Long-tail internet preset: one region with log-normal link latency
+    /// `LogNormal(mu, sigma²)` at `bandwidth` bytes/s, plus deterministic
+    /// per-node straggler multipliers drawn log-normally from `seed`
+    /// (median 1, spread `straggler_sigma`) — a crude but effective model
+    /// of consumer uplinks.
+    pub fn long_tail(
+        n: usize,
+        mu: f64,
+        sigma: f64,
+        bandwidth: f64,
+        straggler_sigma: f64,
+        seed: u64,
+    ) -> Topology {
+        let link = Link::new(LatencyModel::LogNormal { mu, sigma }, bandwidth);
+        let mut t = Topology::new(vec!["internet".into()], vec![0; n], vec![vec![link]]);
+        let mut rng = Pcg64::seed_from_u64(seed ^ 0x10_7a11);
+        for s in t.straggler.iter_mut() {
+            *s = rng.log_normal(0.0, straggler_sigma).max(1.0);
+        }
+        t
+    }
+
+    /// Node count.
+    pub fn world(&self) -> usize {
+        self.node_region.len()
+    }
+
+    /// Region count.
+    pub fn regions(&self) -> usize {
+        self.region_names.len()
+    }
+
+    /// Region index of a node.
+    pub fn region_of(&self, node: usize) -> usize {
+        self.node_region[node]
+    }
+
+    /// Region name by index.
+    pub fn region_name(&self, region: usize) -> &str {
+        &self.region_names[region]
+    }
+
+    /// The link class between two nodes.
+    pub fn link(&self, a: usize, b: usize) -> &Link {
+        &self.links[self.node_region[a]][self.node_region[b]]
+    }
+
+    /// Set a node's straggler multiplier (≥ 1 scales its transfers up).
+    pub fn set_straggler(&mut self, node: usize, mult: f64) {
+        assert!(mult > 0.0, "straggler multiplier must be positive");
+        self.straggler[node] = mult;
+    }
+
+    /// Builder form of [`Topology::set_straggler`].
+    pub fn with_straggler(mut self, node: usize, mult: f64) -> Topology {
+        self.set_straggler(node, mult);
+        self
+    }
+
+    /// A node's straggler multiplier.
+    pub fn straggler_of(&self, node: usize) -> f64 {
+        self.straggler[node]
+    }
+
+    /// Sample the time to move `bytes` from `from` to `to`:
+    /// `max(straggler_from, straggler_to) · (latency + bytes/bandwidth)`.
+    pub fn transfer_time(&self, from: usize, to: usize, bytes: u64, rng: &mut Pcg64) -> f64 {
+        let base = self.link(from, to).sample_transfer(bytes, rng);
+        base * self.straggler[from].max(self.straggler[to])
+    }
+
+    /// Analytic expected transfer time between two nodes.
+    pub fn expected_transfer(&self, from: usize, to: usize, bytes: u64) -> f64 {
+        self.link(from, to).expected_transfer(bytes) * self.straggler[from].max(self.straggler[to])
+    }
+}
+
+/// One membership change, applied at the *start* of its scheduled step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChurnEvent {
+    /// Node (DP replica, in the trainers) drops out.
+    Leave(usize),
+    /// Node (re)joins the live set.
+    Join(usize),
+}
+
+impl ChurnEvent {
+    /// The node this event concerns.
+    pub fn node(&self) -> usize {
+        match *self {
+            ChurnEvent::Leave(n) | ChurnEvent::Join(n) => n,
+        }
+    }
+}
+
+/// Deterministic membership schedule: `(step, event)` pairs, fired in
+/// order at the start of each step. Workers that share the schedule (and
+/// the step counter) derive identical live sets with zero coordination
+/// traffic — the same shared-seed trick the route planner uses.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChurnSchedule {
+    events: Vec<(u64, ChurnEvent)>,
+}
+
+impl ChurnSchedule {
+    /// Empty schedule (static membership).
+    pub fn none() -> ChurnSchedule {
+        ChurnSchedule::default()
+    }
+
+    /// True when no events are scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Append an event; keeps the schedule sorted by step (stable for
+    /// same-step events, which fire in insertion order).
+    pub fn push(&mut self, step: u64, event: ChurnEvent) {
+        let at = self.events.partition_point(|&(s, _)| s <= step);
+        self.events.insert(at, (step, event));
+    }
+
+    /// Builder: node leaves at `step`.
+    pub fn leave(mut self, step: u64, node: usize) -> ChurnSchedule {
+        self.push(step, ChurnEvent::Leave(node));
+        self
+    }
+
+    /// Builder: node joins at `step`.
+    pub fn join(mut self, step: u64, node: usize) -> ChurnSchedule {
+        self.push(step, ChurnEvent::Join(node));
+        self
+    }
+
+    /// All events, sorted by step.
+    pub fn events(&self) -> &[(u64, ChurnEvent)] {
+        &self.events
+    }
+
+    /// Events firing exactly at `step`.
+    pub fn events_at(&self, step: u64) -> impl Iterator<Item = ChurnEvent> + '_ {
+        self.events
+            .iter()
+            .filter(move |&&(s, _)| s == step)
+            .map(|&(_, e)| e)
+    }
+
+    /// Live mask over `n` nodes after applying every event scheduled at or
+    /// before `step` (all nodes start live).
+    pub fn live_at(&self, n: usize, step: u64) -> Vec<bool> {
+        let mut m = Membership::full(n);
+        for &(s, e) in &self.events {
+            if s > step {
+                break;
+            }
+            m.apply(e);
+        }
+        m.into_mask()
+    }
+
+    /// Parse one event from the CLI/TOML string form
+    /// `"leave:STEP:NODE"` / `"join:STEP:NODE"`, e.g. `"leave:30:1"`.
+    pub fn parse_event(s: &str) -> Result<(u64, ChurnEvent), String> {
+        let mut it = s.split(':');
+        let kind = it.next().unwrap_or("");
+        let step: u64 = it
+            .next()
+            .ok_or_else(|| format!("churn event `{s}` missing step"))?
+            .trim()
+            .parse()
+            .map_err(|_| format!("churn event `{s}`: bad step"))?;
+        let node: usize = it
+            .next()
+            .ok_or_else(|| format!("churn event `{s}` missing node"))?
+            .trim()
+            .parse()
+            .map_err(|_| format!("churn event `{s}`: bad node"))?;
+        if it.next().is_some() {
+            return Err(format!("churn event `{s}`: trailing fields"));
+        }
+        match kind.trim() {
+            "leave" => Ok((step, ChurnEvent::Leave(node))),
+            "join" => Ok((step, ChurnEvent::Join(node))),
+            other => Err(format!("churn event kind `{other}` (want leave|join)")),
+        }
+    }
+
+    /// Parse a `;`-separated list of events (CLI `--churn` form).
+    pub fn parse(s: &str) -> Result<ChurnSchedule, String> {
+        let mut out = ChurnSchedule::none();
+        for part in s.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (step, e) = Self::parse_event(part)?;
+            out.push(step, e);
+        }
+        Ok(out)
+    }
+}
+
+/// Live-set tracker over a fixed id space `0..n`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Membership {
+    live: Vec<bool>,
+}
+
+impl Membership {
+    /// All `n` nodes live.
+    pub fn full(n: usize) -> Membership {
+        Membership { live: vec![true; n] }
+    }
+
+    /// Id-space size (live or not).
+    pub fn world(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Whether a node is currently live.
+    pub fn is_live(&self, node: usize) -> bool {
+        self.live[node]
+    }
+
+    /// Number of live nodes.
+    pub fn live_count(&self) -> usize {
+        self.live.iter().filter(|&&l| l).count()
+    }
+
+    /// Live node ids, ascending.
+    pub fn live_nodes(&self) -> Vec<usize> {
+        (0..self.live.len()).filter(|&i| self.live[i]).collect()
+    }
+
+    /// Apply one event; returns whether the live set changed (a `Leave`
+    /// of a dead node or `Join` of a live node is a no-op).
+    pub fn apply(&mut self, event: ChurnEvent) -> bool {
+        let node = event.node();
+        assert!(node < self.live.len(), "churn event for unknown node {node}");
+        let want = matches!(event, ChurnEvent::Join(_));
+        let changed = self.live[node] != want;
+        self.live[node] = want;
+        changed
+    }
+
+    /// Consume into the raw mask.
+    pub fn into_mask(self) -> Vec<bool> {
+        self.live
+    }
+
+    /// Borrow the raw mask.
+    pub fn mask(&self) -> &[bool] {
+        &self.live
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_transfer_is_latency_plus_serialization() {
+        let l = Link::new(LatencyModel::Constant(0.5), 100.0);
+        let mut rng = Pcg64::seed_from_u64(0);
+        assert_eq!(l.sample_transfer(200, &mut rng), 0.5 + 2.0);
+        assert_eq!(l.expected_transfer(200), 2.5);
+        // Infinite bandwidth degenerates to pure latency.
+        let c = Link::constant(0.25);
+        assert_eq!(c.sample_transfer(1 << 30, &mut rng), 0.25);
+    }
+
+    #[test]
+    fn multi_region_links_are_asymmetric_in_cost() {
+        let t = Topology::multi_region(&[2, 2], Link::constant(0.001), Link::constant(0.1));
+        assert_eq!(t.world(), 4);
+        assert_eq!(t.regions(), 2);
+        assert_eq!(t.region_of(0), 0);
+        assert_eq!(t.region_of(3), 1);
+        let mut rng = Pcg64::seed_from_u64(1);
+        // Intra-region cheap, inter-region two orders slower.
+        assert_eq!(t.transfer_time(0, 1, 0, &mut rng), 0.001);
+        assert_eq!(t.transfer_time(0, 2, 0, &mut rng), 0.1);
+        assert_eq!(t.transfer_time(3, 2, 0, &mut rng), 0.001);
+    }
+
+    #[test]
+    fn straggler_scales_both_directions() {
+        let t = Topology::single_switch(3, Link::constant(1.0)).with_straggler(2, 4.0);
+        let mut rng = Pcg64::seed_from_u64(2);
+        assert_eq!(t.transfer_time(0, 1, 0, &mut rng), 1.0);
+        assert_eq!(t.transfer_time(0, 2, 0, &mut rng), 4.0);
+        assert_eq!(t.transfer_time(2, 0, 0, &mut rng), 4.0);
+        assert_eq!(t.expected_transfer(2, 1, 0), 4.0);
+    }
+
+    #[test]
+    fn long_tail_is_deterministic_given_seed() {
+        let a = Topology::long_tail(16, -3.0, 0.8, 1e6, 0.5, 7);
+        let b = Topology::long_tail(16, -3.0, 0.8, 1e6, 0.5, 7);
+        for n in 0..16 {
+            assert_eq!(a.straggler_of(n), b.straggler_of(n));
+            assert!(a.straggler_of(n) >= 1.0);
+        }
+        // Some spread should exist.
+        let stragglers: Vec<f64> = (0..16).map(|n| a.straggler_of(n)).collect();
+        assert!(stragglers.iter().any(|&s| s > 1.0));
+    }
+
+    #[test]
+    fn bandwidth_term_matches_payload() {
+        let t = Topology::multi_region(
+            &[2, 2],
+            Link::new(LatencyModel::Constant(0.0), 1000.0),
+            Link::new(LatencyModel::Constant(0.0), 10.0),
+        );
+        let mut rng = Pcg64::seed_from_u64(3);
+        assert_eq!(t.transfer_time(0, 1, 500, &mut rng), 0.5);
+        assert_eq!(t.transfer_time(0, 2, 500, &mut rng), 50.0);
+    }
+
+    #[test]
+    fn churn_schedule_orders_and_masks() {
+        let s = ChurnSchedule::none().join(9, 3).leave(3, 1).leave(6, 2);
+        let steps: Vec<u64> = s.events().iter().map(|&(st, _)| st).collect();
+        assert_eq!(steps, vec![3, 6, 9]);
+        assert_eq!(s.live_at(4, 0), vec![true, true, true, true]);
+        assert_eq!(s.live_at(4, 3), vec![true, false, true, true]);
+        assert_eq!(s.live_at(4, 6), vec![true, false, false, true]);
+        // Node 3 was live from the start; Join is a no-op but keeps it live.
+        assert_eq!(s.live_at(4, 9), vec![true, false, false, true]);
+        assert_eq!(s.events_at(6).collect::<Vec<_>>(), vec![ChurnEvent::Leave(2)]);
+    }
+
+    #[test]
+    fn membership_apply_reports_changes() {
+        let mut m = Membership::full(3);
+        assert_eq!(m.live_count(), 3);
+        assert!(m.apply(ChurnEvent::Leave(1)));
+        assert!(!m.apply(ChurnEvent::Leave(1))); // already dead
+        assert_eq!(m.live_nodes(), vec![0, 2]);
+        assert!(m.apply(ChurnEvent::Join(1)));
+        assert!(m.is_live(1));
+        assert_eq!(m.live_count(), 3);
+    }
+
+    #[test]
+    fn churn_parse_round_trips() {
+        let s = ChurnSchedule::parse("leave:30:1; join:45:1 ;leave:50:0").unwrap();
+        assert_eq!(
+            s.events(),
+            &[
+                (30, ChurnEvent::Leave(1)),
+                (45, ChurnEvent::Join(1)),
+                (50, ChurnEvent::Leave(0)),
+            ]
+        );
+        assert!(ChurnSchedule::parse_event("leave:x:1").is_err());
+        assert!(ChurnSchedule::parse_event("hop:1:2").is_err());
+        assert!(ChurnSchedule::parse_event("leave:1").is_err());
+        assert!(ChurnSchedule::parse_event("leave:1:2:3").is_err());
+    }
+
+    #[test]
+    fn rejoin_after_leave_in_one_schedule() {
+        let s = ChurnSchedule::none().leave(2, 0).join(5, 0);
+        assert_eq!(s.live_at(2, 1), vec![true, true]);
+        assert_eq!(s.live_at(2, 2), vec![false, true]);
+        assert_eq!(s.live_at(2, 4), vec![false, true]);
+        assert_eq!(s.live_at(2, 5), vec![true, true]);
+    }
+}

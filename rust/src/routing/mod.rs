@@ -42,19 +42,67 @@ impl RoutePlan {
         }
     }
 
+    /// Fresh random permutations restricted to a *live subset* of the DP
+    /// replicas (elastic membership): at every boundary, live replicas are
+    /// permuted among themselves; dead replicas map to themselves and are
+    /// never on a live path. `live` must be strictly ascending (the order
+    /// [`crate::net::Membership::live_nodes`] returns). When `live` covers
+    /// all of `0..dp`, the draw is identical to [`RoutePlan::random`].
+    pub fn random_over(live: &[usize], dp: usize, pp: usize, rng: &mut Pcg64) -> RoutePlan {
+        debug_assert!(live.windows(2).all(|w| w[0] < w[1]), "live set must be ascending");
+        debug_assert!(live.iter().all(|&r| r < dp), "live replica out of range");
+        let perms = (0..pp.saturating_sub(1))
+            .map(|_| {
+                let sigma = rng.permutation(live.len());
+                let mut p: Vec<usize> = (0..dp).collect();
+                for (i, &src) in live.iter().enumerate() {
+                    p[src] = live[sigma[i]];
+                }
+                p
+            })
+            .collect();
+        RoutePlan { dp, perms }
+    }
+
     /// Deterministic per-step plan: every worker can derive the same plan
     /// from `(seed, step)` with no coordination traffic.
     pub fn for_step(routing: Routing, dp: usize, pp: usize, seed: u64, step: u64) -> RoutePlan {
         match routing {
             Routing::Fixed => RoutePlan::fixed(dp, pp),
             Routing::Random => {
-                let mut rng = Pcg64::new(
-                    (seed as u128) << 64 | step as u128,
-                    0x5eed_0000_0000_0000u128 | step as u128,
-                );
+                let mut rng = Self::step_rng(seed, step);
                 RoutePlan::random(dp, pp, &mut rng)
             }
         }
+    }
+
+    /// [`RoutePlan::for_step`] over a live subset: workers sharing
+    /// `(seed, step)` *and* the membership schedule derive identical
+    /// live-aware plans with no coordination traffic. With full
+    /// membership this equals `for_step` draw-for-draw.
+    pub fn for_step_over(
+        routing: Routing,
+        live: &[usize],
+        dp: usize,
+        pp: usize,
+        seed: u64,
+        step: u64,
+    ) -> RoutePlan {
+        match routing {
+            Routing::Fixed => RoutePlan::fixed(dp, pp),
+            Routing::Random => {
+                let mut rng = Self::step_rng(seed, step);
+                RoutePlan::random_over(live, dp, pp, &mut rng)
+            }
+        }
+    }
+
+    /// The per-step RNG both `for_step` variants share.
+    fn step_rng(seed: u64, step: u64) -> Pcg64 {
+        Pcg64::new(
+            (seed as u128) << 64 | step as u128,
+            0x5eed_0000_0000_0000u128 | step as u128,
+        )
     }
 
     /// DP index at stage `stage+1` that consumes stage `stage`, replica
@@ -182,6 +230,80 @@ mod tests {
             let c = *c as f64;
             assert!((c - expect).abs() / expect < 0.1, "count {c} vs {expect}");
         }
+    }
+
+    #[test]
+    fn full_live_set_matches_plain_for_step() {
+        let live: Vec<usize> = (0..6).collect();
+        for step in 0..20u64 {
+            let a = RoutePlan::for_step(Routing::Random, 6, 4, 11, step);
+            let b = RoutePlan::for_step_over(Routing::Random, &live, 6, 4, 11, step);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn live_subset_plans_fix_dead_replicas() {
+        let live = [0usize, 2, 5];
+        let p = RoutePlan::for_step_over(Routing::Random, &live, 6, 3, 3, 9);
+        for s in 0..p.boundaries() {
+            for dead in [1usize, 3, 4] {
+                assert_eq!(p.next_of(s, dead), dead);
+            }
+            // Live images are exactly the live set.
+            let mut img: Vec<usize> = live.iter().map(|&i| p.next_of(s, i)).collect();
+            img.sort_unstable();
+            assert_eq!(img, live.to_vec());
+        }
+        // Paths from live origins never touch a dead replica.
+        for &r0 in &live {
+            for &hop in &p.path_from(r0) {
+                assert!(live.contains(&hop), "path through dead replica {hop}");
+            }
+        }
+    }
+
+    #[test]
+    fn property_live_routing_stays_bijective_under_churn() {
+        // Satellite: RoutePlan permutations remain valid bijections over a
+        // shrinking/growing live-replica set. Walk a random membership
+        // trajectory (leave/join per step) and check every step's plan.
+        crate::prop::run("live-set route plans are bijections", 150, |g| {
+            let dp = g.usize_in(2, 12).max(2);
+            let pp = g.usize_in(2, 5).max(2);
+            let seed = g.rng().next_u64();
+            let mut live: Vec<bool> = vec![true; dp];
+            for step in 0..12u64 {
+                // Random leave or join, keeping at least one live replica.
+                let target = g.usize_in(0, dp - 1);
+                if g.bool() {
+                    live[target] = true;
+                } else if live.iter().filter(|&&l| l).count() > 1 {
+                    live[target] = false;
+                }
+                let live_idx: Vec<usize> =
+                    (0..dp).filter(|&r| live[r]).collect();
+                let p = RoutePlan::for_step_over(
+                    Routing::Random, &live_idx, dp, pp, seed, step,
+                );
+                for s in 0..p.boundaries() {
+                    // Bijection over the whole id space…
+                    let mut all: Vec<usize> = (0..dp).map(|i| p.next_of(s, i)).collect();
+                    all.sort_unstable();
+                    assert_eq!(all, (0..dp).collect::<Vec<_>>());
+                    // …that restricts to a bijection of the live set and
+                    // the identity off it.
+                    for r in 0..dp {
+                        if live[r] {
+                            assert!(live[p.next_of(s, r)], "live → dead route");
+                            assert_eq!(p.prev_of(s + 1, p.next_of(s, r)), r);
+                        } else {
+                            assert_eq!(p.next_of(s, r), r, "dead replica rerouted");
+                        }
+                    }
+                }
+            }
+        });
     }
 
     #[test]

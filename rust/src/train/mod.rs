@@ -22,6 +22,13 @@
 //!   communicating over the in-process [`crate::net::Fabric`]; used by the
 //!   end-to-end example and the blocking/latency studies.
 //!
+//! Both executors support *elastic membership* for NoLoCo: a
+//! [`crate::net::ChurnSchedule`] on the config drops / rejoins whole DP
+//! columns mid-run, with routing permutations and gossip pairings
+//! re-drawn over the live set. FSDP and DiLoCo abort on churn — their
+//! global all-reduce has no live-subset form (§5.3's no-global-barrier
+//! contrast, made measurable).
+//!
 //! All compute (fwd/bwd/Adam/outer updates) executes inside AOT-compiled
 //! XLA artifacts; this module only moves buffers and decides who talks to
 //! whom — exactly the paper's separation of concerns.

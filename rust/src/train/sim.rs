@@ -19,6 +19,7 @@ use crate::config::{Method, TrainConfig};
 use crate::data::Loader;
 use crate::metrics::{perplexity, RunTrace};
 use crate::model::StageKind;
+use crate::net::topo::ChurnEvent;
 use crate::optim::LrSchedule;
 use crate::rngx::Pcg64;
 use crate::routing::RoutePlan;
@@ -46,6 +47,9 @@ pub struct SimTrainer<'e> {
     mb_counter: u64,
     /// Microbatches per replica per step.
     num_mb: usize,
+    /// Elastic membership: which DP columns (all stages of a replica) are
+    /// currently live. Driven by `cfg.churn` or [`SimTrainer::apply_churn`].
+    live: Vec<bool>,
 }
 
 impl<'e> SimTrainer<'e> {
@@ -120,6 +124,7 @@ impl<'e> SimTrainer<'e> {
             floor_frac: cfg.lr_floor,
         };
         Ok(SimTrainer {
+            live: vec![true; dp],
             cfg,
             eng,
             man,
@@ -146,12 +151,83 @@ impl<'e> SimTrainer<'e> {
         stage * self.dp() + replica
     }
 
+    /// Currently live DP replicas, ascending.
+    pub fn live_replicas(&self) -> Vec<usize> {
+        (0..self.dp()).filter(|&r| self.live[r]).collect()
+    }
+
+    /// Whether DP replica `r` is currently live.
+    pub fn is_live(&self, r: usize) -> bool {
+        self.live[r]
+    }
+
+    /// Apply one membership event (a whole DP column across all stages).
+    ///
+    /// Only NoLoCo supports this: its gossip pairing and routing
+    /// permutations re-draw over the live set, so training continues
+    /// without any global coordination. FSDP / DiLoCo synchronize through
+    /// a world-wide all-reduce that has no live-subset form, so a
+    /// membership change aborts the run — the measurable shape of the
+    /// paper's no-global-barrier claim (§5.3).
+    pub fn apply_churn(&mut self, event: ChurnEvent) -> Result<()> {
+        ensure!(
+            self.cfg.outer.method == Method::NoLoCo,
+            "{} cannot change membership mid-run: its global all-reduce has no \
+             live-subset form; only NoLoCo's gossip re-pairs over survivors ({event:?})",
+            self.cfg.outer.method
+        );
+        let r = event.node();
+        ensure!(r < self.dp(), "churn event for replica {r} outside dp = {}", self.dp());
+        match event {
+            ChurnEvent::Leave(_) => {
+                self.live[r] = false;
+                ensure!(self.live.iter().any(|&l| l), "all replicas left the run");
+            }
+            ChurnEvent::Join(_) => {
+                if !self.live[r] {
+                    self.live[r] = true;
+                    self.reseed_replica(r);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Bootstrap a joining replica: copy the slow weights φ from the
+    /// lowest live donor in each stage row (the freshest consensus state),
+    /// reset θ to φ and zero the Adam moments and outer momentum. Without
+    /// a donor (solo rejoin) the replica resumes from its own last state.
+    fn reseed_replica(&mut self, r: usize) {
+        let dp = self.dp();
+        let donor = (0..dp).find(|&d| d != r && self.live[d]);
+        for s in 0..self.pp() {
+            let i = self.widx(s, r);
+            if let Some(d) = donor {
+                let phi = self.workers[self.widx(s, d)].phi.clone();
+                self.workers[i].phi = phi;
+            }
+            let w = &mut self.workers[i];
+            let n = w.len();
+            w.reset_theta_to_phi();
+            w.m = vec![0.0; n];
+            w.v = vec![0.0; n];
+            w.adam_t = 0;
+            w.delta = vec![0.0; n];
+            w.grad_acc = vec![0.0; n];
+            w.acc_count = 0;
+        }
+    }
+
     /// Run the configured number of inner steps; returns the report.
     pub fn run(&mut self) -> Result<TrainReport> {
         let start = std::time::Instant::now();
         let exec0 = self.eng.executions();
         let mut last_val = f64::NAN;
         for step in 0..self.cfg.steps {
+            let due: Vec<ChurnEvent> = self.cfg.churn.events_at(step as u64).collect();
+            for event in due {
+                self.apply_churn(event)?;
+            }
             let train_loss = self.inner_step(step)?;
             let outer_due = self.cfg.outer.method != Method::Fsdp
                 && (step + 1) % self.cfg.outer.inner_steps == 0;
@@ -186,30 +262,36 @@ impl<'e> SimTrainer<'e> {
         let mut loss_sum = 0.0;
         let mut loss_n = 0usize;
 
-        // One route plan per microbatch *wave*: all DP paths of a wave
-        // share a permutation (Fig. 1A) — exactly what the threaded
-        // executor derives independently on each worker.
-        let batches: Vec<Vec<i32>> = (0..dp)
+        // One route plan per microbatch *wave*: all live DP paths of a
+        // wave share a permutation (Fig. 1A) — exactly what the threaded
+        // executor derives independently on each worker. Dead columns
+        // neither load data nor appear on any path.
+        let live: Vec<usize> = self.live_replicas();
+        let batches: Vec<Option<Vec<i32>>> = (0..dp)
             .map(|r| {
-                self.loaders[r]
-                    .next_batch()
-                    .tokens
-                    .iter()
-                    .map(|&t| t as i32)
-                    .collect()
+                self.live[r].then(|| {
+                    self.loaders[r]
+                        .next_batch()
+                        .tokens
+                        .iter()
+                        .map(|&t| t as i32)
+                        .collect()
+                })
             })
             .collect();
         for mb in 0..self.num_mb {
-            let plan = RoutePlan::for_step(
+            let plan = RoutePlan::for_step_over(
                 self.cfg.routing,
+                &live,
                 dp,
                 pp,
                 self.cfg.seed ^ 0x0a17,
                 self.mb_counter,
             );
             self.mb_counter += 1;
-            for r in 0..dp {
-                let toks = &batches[r][mb * mb_toks..(mb + 1) * mb_toks];
+            for &r in &live {
+                let batch = batches[r].as_ref().expect("live replica has a batch");
+                let toks = &batch[mb * mb_toks..(mb + 1) * mb_toks];
                 let loss = self.run_microbatch(&plan, r, toks)?;
                 loss_sum += loss as f64;
                 loss_n += 1;
@@ -224,6 +306,9 @@ impl<'e> SimTrainer<'e> {
 
         let sc = AdamScalars::at(self.lr.at(step), step as u64 + 1, self.cfg.grad_clip);
         for i in 0..self.workers.len() {
+            if !self.live[i % dp] {
+                continue; // dead column: no gradients, no update
+            }
             let g = self.workers[i].take_mean_grad();
             let w = &mut self.workers[i];
             w.adam_t += 1;
@@ -374,16 +459,23 @@ impl<'e> SimTrainer<'e> {
                     self.cfg.outer.gamma as f32,
                 );
                 let group_size = self.cfg.outer.group;
+                let live = self.live_replicas();
                 for s in 0..pp {
-                    // Fresh random disjoint groups per stage row per outer
-                    // step (§3.2: "for each iteration we update the local
-                    // subgroup"; the paper uses the minimum size, 2).
-                    // Shared-seed derivation matches train::threaded so no
-                    // coordination is needed there.
+                    // Fresh random disjoint groups over the *live* columns
+                    // per stage row per outer step (§3.2: "for each
+                    // iteration we update the local subgroup"; the paper
+                    // uses the minimum size, 2). Shared-seed derivation
+                    // matches train::threaded so no coordination is
+                    // needed there; with full membership the draw is
+                    // identical to the static-grid one.
                     let mut prng = Pcg64::seed_from_u64(
                         self.cfg.seed ^ 0x9055 ^ ((s as u64) << 40) ^ outer_idx,
                     );
-                    let groups = prng.random_groups(dp, group_size);
+                    let groups: Vec<Vec<usize>> = prng
+                        .random_groups(live.len(), group_size)
+                        .into_iter()
+                        .map(|g| g.into_iter().map(|i| live[i]).collect())
+                        .collect();
                     for group in groups {
                         let gn = group.len();
                         let n = self.workers[self.widx(s, group[0])].len();
@@ -431,13 +523,17 @@ impl<'e> SimTrainer<'e> {
     }
 
     /// Mean validation NLL over the fixed validation set, averaged across
-    /// replicas (each evaluated through its own fixed-route pipeline).
+    /// the *live* replicas (each evaluated through its own fixed-route
+    /// pipeline).
     pub fn validate(&mut self) -> Result<f64> {
         let (dp, pp) = (self.dp(), self.pp());
         let mut sum = 0.0;
         let mut n = 0usize;
         let batches = self.val_batches.clone();
         for r in 0..dp {
+            if !self.live[r] {
+                continue;
+            }
             for toks in &batches {
                 let nll = if pp == 1 {
                     let i = self.widx(0, r);
@@ -471,18 +567,20 @@ impl<'e> SimTrainer<'e> {
     }
 
     /// Cross-replica weight standard deviation (Fig. 3B / Fig. 4A):
-    /// per-stage σ over the DP replicas' fast weights, averaged across
-    /// stages weighted by parameter count.
+    /// per-stage σ over the *live* DP replicas' fast weights, averaged
+    /// across stages weighted by parameter count.
     pub fn weight_std(&self) -> f64 {
-        let (dp, pp) = (self.dp(), self.pp());
-        if dp < 2 {
+        let pp = self.pp();
+        let live = self.live_replicas();
+        if live.len() < 2 {
             return 0.0;
         }
         let mut acc = 0.0;
         let mut total = 0usize;
         for s in 0..pp {
-            let tensors: Vec<Tensor> = (0..dp)
-                .map(|r| {
+            let tensors: Vec<Tensor> = live
+                .iter()
+                .map(|&r| {
                     let w = &self.workers[self.widx(s, r)];
                     Tensor::from_vec(w.theta.clone(), &[w.len()])
                 })

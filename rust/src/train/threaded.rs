@@ -11,6 +11,15 @@
 //! Latency injection (`latency_log_normal`) turns the fabric into the
 //! paper's §5.3 network model, making the blocking-communication effects
 //! of Fig. 5B measurable in wall-clock terms on the real pipeline.
+//!
+//! Elastic membership: a [`ChurnSchedule`] names DP columns that leave or
+//! (re)join at given steps. Every worker derives the per-step live set
+//! from the shared schedule — no control traffic — and the route plans
+//! and gossip pairings re-draw over the survivors, so a NoLoCo run keeps
+//! training through churn. A rejoining column catches up by absorbing its
+//! first gossip peer's slow weights. FSDP / DiLoCo refuse churn up front:
+//! their global all-reduce has no live-subset form, which is exactly the
+//! no-global-barrier contrast the paper draws (§5.3).
 
 use std::thread;
 
@@ -21,6 +30,7 @@ use crate::config::{Method, TrainConfig};
 use crate::data::Loader;
 use crate::metrics::perplexity;
 use crate::model::StageKind;
+use crate::net::topo::ChurnSchedule;
 use crate::net::{Endpoint, Fabric, Payload, Tag};
 use crate::optim::LrSchedule;
 use crate::rngx::Pcg64;
@@ -78,7 +88,8 @@ struct WorkerOut {
 }
 
 impl ThreadedTrainer {
-    /// New trainer; call [`ThreadedTrainer::run`] to execute.
+    /// New trainer; call [`ThreadedTrainer::run`] to execute. Any churn
+    /// schedule on the config is honored (NoLoCo only).
     pub fn new(cfg: TrainConfig) -> ThreadedTrainer {
         ThreadedTrainer { cfg, latency: None, val_batches: 4, gossip_timeout: None }
     }
@@ -87,6 +98,12 @@ impl ThreadedTrainer {
     /// deliver within `t` (the outer step degrades to a singleton group).
     pub fn with_gossip_timeout(mut self, t: std::time::Duration) -> ThreadedTrainer {
         self.gossip_timeout = Some(t);
+        self
+    }
+
+    /// Override the membership schedule (DP-column leave/join events).
+    pub fn with_churn(mut self, churn: ChurnSchedule) -> ThreadedTrainer {
+        self.cfg.churn = churn;
         self
     }
 
@@ -111,6 +128,25 @@ impl ThreadedTrainer {
                 "the threaded executor implements the paper's minimum gossip group (n = 2); \
                  use SimTrainer for general group sizes"
             );
+        }
+        if !cfg.churn.is_empty() && cfg.outer.method != Method::NoLoCo {
+            anyhow::bail!(
+                "{} cannot change membership mid-run: its global all-reduce has no \
+                 live-subset form; only NoLoCo's gossip re-pairs over survivors",
+                cfg.outer.method
+            );
+        }
+        // The schedule must never empty the live set: walking the sorted
+        // events tracks the live count through every prefix.
+        {
+            let mut m = crate::net::Membership::full(cfg.topology.dp);
+            for &(step, e) in cfg.churn.events() {
+                m.apply(e);
+                anyhow::ensure!(
+                    m.live_count() > 0,
+                    "churn schedule leaves no live replicas after step {step}"
+                );
+            }
         }
         let (dp, pp) = (cfg.topology.dp, cfg.topology.pp);
         let dir = find_build(&cfg.artifacts_dir, &cfg.model.name, pp)?;
@@ -144,26 +180,29 @@ impl ThreadedTrainer {
                 .collect()
         })?;
 
-        // Aggregate last-stage outputs.
+        // Aggregate last-stage outputs. Steps a replica sat out (churn)
+        // are reported as NaN and excluded from that step's mean.
         let mut step_train_loss = vec![0.0f64; cfg.steps];
+        let mut step_counts = vec![0usize; cfg.steps];
         let mut val_sum = 0.0;
         let mut val_n = 0usize;
-        let mut contributors = 0usize;
         for out in &outs {
             if out.step_loss.is_empty() {
                 continue;
             }
-            contributors += 1;
-            for (acc, l) in step_train_loss.iter_mut().zip(&out.step_loss) {
-                *acc += l;
+            for (i, l) in out.step_loss.iter().enumerate() {
+                if l.is_finite() {
+                    step_train_loss[i] += l;
+                    step_counts[i] += 1;
+                }
             }
             if let Some(v) = out.val_nll {
                 val_sum += v;
                 val_n += 1;
             }
         }
-        for acc in &mut step_train_loss {
-            *acc /= contributors.max(1) as f64;
+        for (acc, c) in step_train_loss.iter_mut().zip(&step_counts) {
+            *acc /= (*c).max(1) as f64;
         }
         let final_val_nll = val_sum / val_n.max(1) as f64;
         Ok(ThreadedReport {
@@ -177,14 +216,14 @@ impl ThreadedTrainer {
     }
 }
 
-/// Which origin replica's path crosses `(stage, me)` under `plan`.
-fn origin_through(plan: &RoutePlan, stage: usize, me: usize, dp: usize) -> usize {
-    for r0 in 0..dp {
+/// Which live origin replica's path crosses `(stage, me)` under `plan`.
+fn origin_through(plan: &RoutePlan, stage: usize, me: usize, live: &[usize]) -> usize {
+    for &r0 in live {
         if plan.path_from(r0)[stage] == me {
             return r0;
         }
     }
-    unreachable!("permutation routing covers every replica");
+    unreachable!("live permutation routing covers every live replica");
 }
 
 /// Symmetric gossip exchange of `(Δ, φ)` with an optional straggler
@@ -263,6 +302,20 @@ fn worker_main(
     let mut coll_seq: u32 = 0; // collective tag namespace, same on all row members
 
     for step in 0..cfg.steps {
+        // Elastic membership: every worker derives the same live set from
+        // the shared schedule — zero coordination traffic, like the route
+        // plans. A dead column sits the step out entirely (no data, no
+        // compute, no messages); live columns route and gossip over the
+        // survivors.
+        let live_mask = cfg.churn.live_at(dp, step as u64);
+        if !live_mask[replica] {
+            if is_last || pp == 1 {
+                step_loss.push(f64::NAN); // sat out; excluded from means
+            }
+            continue;
+        }
+        let live_idx: Vec<usize> = (0..dp).filter(|&r| live_mask[r]).collect();
+
         let batch: Option<Vec<i32>> = loader
             .as_mut()
             .map(|l| l.next_batch().tokens.iter().map(|&t| t as i32).collect());
@@ -273,7 +326,9 @@ fn worker_main(
         // ---- forward sweep over this step's waves ----
         for mb in 0..num_mb {
             let wave = (step * num_mb + mb) as u32;
-            let plan = RoutePlan::for_step(cfg.routing, dp, pp, cfg.seed ^ 0x0a17, wave as u64);
+            let plan = RoutePlan::for_step_over(
+                cfg.routing, &live_idx, dp, pp, cfg.seed ^ 0x0a17, wave as u64,
+            );
             if pp == 1 {
                 let toks = &batch.as_ref().unwrap()[mb * mb_toks..(mb + 1) * mb_toks];
                 let (loss, g) = exec::bwd_full(&mut eng, &man, &w.theta, toks)?;
@@ -293,7 +348,7 @@ fn worker_main(
                 );
                 stash.push((wave, replica, Vec::new(), toks));
             } else {
-                let r0 = origin_through(&plan, stage, replica, dp);
+                let r0 = origin_through(&plan, stage, replica, &live_idx);
                 let act = ep.recv(Tag::new(K_ACT, wave, r0 as u32)).payload.into_f32();
                 let toks: Vec<i32> = ep
                     .recv(Tag::new(K_TOK, wave, r0 as u32))
@@ -326,8 +381,9 @@ fn worker_main(
         // ---- backward sweep (first and mid stages drain gradients) ----
         if pp > 1 && !is_last {
             for (wave, r0, x_in, toks) in stash.drain(..) {
-                let plan =
-                    RoutePlan::for_step(cfg.routing, dp, pp, cfg.seed ^ 0x0a17, wave as u64);
+                let plan = RoutePlan::for_step_over(
+                    cfg.routing, &live_idx, dp, pp, cfg.seed ^ 0x0a17, wave as u64,
+                );
                 let g_out = ep
                     .recv(Tag::new(K_GRD, wave, r0 as u32))
                     .payload
@@ -390,32 +446,94 @@ fn worker_main(
                     w.reset_theta_to_phi();
                 }
                 Method::NoLoCo => {
-                    // Deterministic shared-seed pairing: every row member
-                    // derives the same pairs without any coordination.
+                    // Deterministic shared-seed pairing over the *live*
+                    // columns: every row member derives the same pairs
+                    // without any coordination (and a dead column is
+                    // never named, so nobody blocks on it — the elastic
+                    // counterpart of the paper's no-global-barrier
+                    // argument). The gossip tag namespace is keyed by
+                    // outer_idx, which stays aligned across workers even
+                    // when some sat out earlier steps.
                     let mut prng = Pcg64::seed_from_u64(
                         cfg.seed ^ 0x9055 ^ ((stage as u64) << 40) ^ (outer_idx as u64),
                     );
-                    let pairs = prng.random_pairs(dp);
-                    let me = replica;
+                    let pairs = prng.random_pairs(live_idx.len());
+                    let me = live_idx
+                        .iter()
+                        .position(|&r| r == replica)
+                        .expect("live worker is in its own live set");
                     let peer = pairs.iter().find_map(|&(a, b)| match b {
-                        Some(b) if a == me => Some(Some(b)),
-                        Some(b) if b == me => Some(Some(a)),
+                        Some(b) if a == me => Some(Some(live_idx[b])),
+                        Some(b) if b == me => Some(Some(live_idx[a])),
                         None if a == me => Some(None),
                         _ => None,
                     });
+                    let gossip_seq = outer_idx as u32;
+                    // A column is *stale* at this boundary if it was dead
+                    // at any step since (and including) the previous
+                    // boundary — i.e. it missed inner steps of this round
+                    // or the previous outer update, so its (Δ, φ) predate
+                    // the ensemble's. Every worker derives this from the
+                    // shared schedule, so both sides of a pair agree on
+                    // it: the stale side absorbs its peer's slow weights
+                    // instead of averaging its stale state into the
+                    // ensemble, and the fresh side updates as a
+                    // singleton. Two stale columns paired together fall
+                    // through to the plain averaged update — neither has
+                    // fresh state to offer, and the γ-consensus term
+                    // pulls their shared stale estimate back toward the
+                    // ensemble over the following boundaries (accepted
+                    // degradation, same regime as a timed-out peer).
+                    let window_start = step.saturating_sub(cfg.outer.inner_steps);
+                    let is_stale = |r: usize| {
+                        !cfg.churn.is_empty()
+                            && (window_start..=step)
+                                .any(|s| !cfg.churn.live_at(dp, s as u64)[r])
+                    };
+                    let i_am_stale = is_stale(replica);
+                    let peer_r_opt = peer.flatten();
                     let my_delta = w.outer_grad();
                     let (mut phi, mut delta) =
                         (std::mem::take(&mut w.phi), std::mem::take(&mut w.delta));
-                    let exchanged = match peer.flatten() {
+                    let exchanged = match peer_r_opt {
                         Some(peer_r) => {
                             let peer_rank = rank_of(stage, peer_r);
                             gossip_exchange(
-                                &mut ep, peer_rank, coll_seq, &my_delta, &phi, gossip_timeout,
+                                &mut ep, peer_rank, gossip_seq, &my_delta, &phi,
+                                gossip_timeout,
                             )
                         }
                         None => None,
                     };
                     match exchanged {
+                        Some((_, p_theirs))
+                            if i_am_stale && !is_stale(peer_r_opt.unwrap()) =>
+                        {
+                            // Rejoin catch-up: adopt the peer's φ outright.
+                            phi.copy_from_slice(&p_theirs);
+                            for d in delta.iter_mut() {
+                                *d = 0.0;
+                            }
+                        }
+                        Some((_, _))
+                            if peer_r_opt.is_some_and(|p| is_stale(p)) && !i_am_stale =>
+                        {
+                            // The peer is catching up from my φ; its stale
+                            // (Δ, φ) must not dilute mine — singleton step.
+                            let psum = phi.clone();
+                            exec::outer_noloco(
+                                &mut eng,
+                                kind,
+                                &mut phi,
+                                &mut delta,
+                                &my_delta,
+                                &psum,
+                                cfg.outer.alpha as f32,
+                                cfg.outer.beta as f32,
+                                cfg.outer.gamma as f32,
+                                1.0,
+                            )?;
+                        }
                         Some((d_theirs, p_theirs)) => {
                             let dsum: Vec<f32> = my_delta
                                 .iter()
@@ -437,7 +555,7 @@ fn worker_main(
                                 0.5,
                             )?;
                         }
-                        // No peer (odd world) or peer timed out: a
+                        // No peer (odd live count) or peer timed out: a
                         // singleton group — NoLoCo degrades gracefully
                         // where a collective would hang.
                         None => {
@@ -456,7 +574,6 @@ fn worker_main(
                             )?;
                         }
                     }
-                    coll_seq += 2;
                     w.phi = phi;
                     w.delta = delta;
                     w.reset_theta_to_phi();
@@ -492,8 +609,11 @@ fn worker_main(
     }
 
     // ---- final validation: fixed route r -> r, shared val stream ----
+    // Columns dead at the end of the run sit validation out (their whole
+    // pipeline is dark, so nobody waits on them).
+    let live_at_end = cfg.churn.live_at(dp, cfg.steps.saturating_sub(1) as u64);
     let mut val_nll = None;
-    if val_batches > 0 {
+    if val_batches > 0 && live_at_end[replica] {
         let mut vloader = Loader::validation(
             cfg.dataset,
             cfg.model.vocab,

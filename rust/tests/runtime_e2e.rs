@@ -48,7 +48,13 @@ fn tokens_for(mb: usize, s: usize, vocab: usize) -> Vec<i32> {
 fn engine_for(model: &str, pp: usize) -> Option<Engine> {
     let dir = match runtime::find_build(ART, model, pp) {
         Ok(d) => d,
-        Err(_) => {
+        Err(e) => {
+            // Skip cleanly without compiled artifacts; CI images that ran
+            // `make artifacts` set NOLOCO_REQUIRE_ARTIFACTS to turn a
+            // missing build into a hard failure instead of a silent skip.
+            if std::env::var_os("NOLOCO_REQUIRE_ARTIFACTS").is_some() {
+                panic!("NOLOCO_REQUIRE_ARTIFACTS is set but {model}-pp{pp} is missing: {e}");
+            }
             eprintln!("skipping: no {model}-pp{pp} artifacts (run `make artifacts`)");
             return None;
         }

@@ -1,0 +1,146 @@
+//! Integration tests for the WAN-topology + elastic-membership subsystem:
+//! payload-aware collective costs on heterogeneous networks, shared-seed
+//! live-set derivations, and the churn-aware config surface. None of
+//! these need PJRT artifacts.
+
+use noloco::collective::{
+    pair_average_time_bytes, ring_all_reduce_time_bytes, tree_all_reduce_time_bytes,
+    tree_all_reduce_time_over,
+};
+use noloco::config::{presets, NetPreset, NetTopoConfig};
+use noloco::net::topo::{ChurnEvent, ChurnSchedule, Link, Membership, Topology};
+use noloco::net::{LatencyModel, SimClock};
+use noloco::routing::RoutePlan;
+
+fn wan3() -> Topology {
+    Topology::multi_region(
+        &[4, 4, 4],
+        Link::new(LatencyModel::Constant(1e-3), 1e9),
+        Link::new(LatencyModel::LogNormal { mu: (80e-3f64).ln(), sigma: 0.6 }, 1.25e7),
+    )
+}
+
+#[test]
+fn wan_tree_pays_inter_region_links_pairs_can_avoid_them() {
+    // The Fig. 5 contrast on a heterogeneous network: the tree all-reduce
+    // must cross regions, local pairs need not.
+    let payload = 4 << 20; // 4 MiB
+    let mut tree = 0.0;
+    let mut local_pairs = 0.0;
+    let reps = 20;
+    for seed in 0..reps {
+        let mut c = SimClock::with_topology(wan3(), seed);
+        tree += tree_all_reduce_time_bytes(&mut c, payload);
+        let mut c = SimClock::with_topology(wan3(), seed + 500);
+        // Pairs drawn inside regions: (0,1)(2,3) | (4,5)(6,7) | (8,9)(10,11).
+        let pairs: Vec<(usize, usize)> = (0..6).map(|k| (2 * k, 2 * k + 1)).collect();
+        local_pairs += pair_average_time_bytes(&mut c, Some(&pairs), payload);
+    }
+    let (tree, local_pairs) = (tree / reps as f64, local_pairs / reps as f64);
+    assert!(
+        tree > 10.0 * local_pairs,
+        "cross-region tree should dwarf intra-region gossip: {tree:.3} vs {local_pairs:.3}"
+    );
+}
+
+#[test]
+fn ring_beats_tree_on_bandwidth_bound_wan_payloads() {
+    // The ring ships 1/n-sized chunks, the tree full payloads: with fat
+    // payloads over thin links the ring's bandwidth advantage shows even
+    // though it pays 2(n-1) latency hops.
+    let payload = 64 << 20; // 64 MiB across 12.5 MB/s inter-region links
+    let mut c = SimClock::with_topology(wan3(), 1);
+    let tree = tree_all_reduce_time_bytes(&mut c, payload);
+    let mut c = SimClock::with_topology(wan3(), 1);
+    let ring = ring_all_reduce_time_bytes(&mut c, payload);
+    assert!(ring < tree, "ring {ring:.1} should beat tree {tree:.1} on fat payloads");
+}
+
+#[test]
+fn live_subset_collective_ignores_the_departed() {
+    // After a leave, the surviving members' tree completes and the dead
+    // node's clock never moves — no global stall on the survivor side.
+    let mut c = SimClock::with_topology(wan3(), 2);
+    let mut member = Membership::full(12);
+    member.apply(ChurnEvent::Leave(5));
+    let live = member.live_nodes();
+    let t = tree_all_reduce_time_over(&mut c, &live, 1 << 20);
+    assert!(t > 0.0);
+    assert_eq!(c.ready_at(5), 0.0, "departed node must not be waited on");
+    for &w in &live {
+        assert!((c.ready_at(w) - t).abs() < 1e-9, "member {w} not at the barrier");
+    }
+}
+
+#[test]
+fn shared_seed_live_derivations_agree_across_workers() {
+    // Two independent "workers" with the same schedule + seed derive
+    // identical live masks, route plans, and (via the mask) gossip pair
+    // spaces at every step — the zero-coordination property the threaded
+    // trainer relies on.
+    let schedule = ChurnSchedule::none().leave(3, 1).join(7, 1).leave(9, 4);
+    let dp = 6;
+    for step in 0..12u64 {
+        let a_mask = schedule.live_at(dp, step);
+        let b_mask = schedule.live_at(dp, step);
+        assert_eq!(a_mask, b_mask);
+        let live: Vec<usize> = (0..dp).filter(|&r| a_mask[r]).collect();
+        let a = RoutePlan::for_step_over(noloco::config::Routing::Random, &live, dp, 3, 42, step);
+        let b = RoutePlan::for_step_over(noloco::config::Routing::Random, &live, dp, 3, 42, step);
+        assert_eq!(a, b);
+        // Every live path stays inside the live set.
+        for &r0 in &live {
+            for &hop in &a.path_from(r0) {
+                assert!(a_mask[hop]);
+            }
+        }
+    }
+}
+
+#[test]
+fn churn_config_round_trips_into_presets() {
+    let mut cfg = presets::preset("tiny").unwrap();
+    cfg.churn = ChurnSchedule::parse("leave:4:1;join:8:1").unwrap();
+    cfg.validate().unwrap();
+    assert_eq!(cfg.churn.events_at(4).collect::<Vec<_>>(), vec![ChurnEvent::Leave(1)]);
+    // DiLoCo configs carry churn through validation (the trainers reject
+    // it at run time, where the all-reduce would have to stall).
+    let d = presets::as_diloco(cfg.clone());
+    d.validate().unwrap();
+}
+
+#[test]
+fn net_preset_build_covers_uneven_region_splits() {
+    let cfg = NetTopoConfig {
+        preset: NetPreset::MultiRegionWan,
+        regions: 5,
+        ..NetTopoConfig::default()
+    };
+    let t = cfg.build(13, 0);
+    assert_eq!(t.world(), 13);
+    assert_eq!(t.regions(), 5);
+    let mut sizes = vec![0usize; 5];
+    for n in 0..13 {
+        sizes[t.region_of(n)] += 1;
+    }
+    assert_eq!(sizes, vec![3, 3, 3, 2, 2]);
+}
+
+#[test]
+fn straggler_gates_wan_collectives_not_unrelated_pairs() {
+    let topo = || wan3().with_straggler(11, 5.0);
+    let mut c = SimClock::with_topology(topo(), 3);
+    let with_straggler = tree_all_reduce_time_bytes(&mut c, 1 << 20);
+    let mut c = SimClock::with_topology(wan3(), 3);
+    let without = tree_all_reduce_time_bytes(&mut c, 1 << 20);
+    assert!(
+        with_straggler > without,
+        "straggler must slow the barrier: {with_straggler:.3} vs {without:.3}"
+    );
+    // A pair that avoids the straggler is unaffected by its existence.
+    let mut c = SimClock::with_topology(topo(), 4);
+    let a = pair_average_time_bytes(&mut c, Some(&[(0, 1)]), 1 << 20);
+    let mut c = SimClock::with_topology(wan3(), 4);
+    let b = pair_average_time_bytes(&mut c, Some(&[(0, 1)]), 1 << 20);
+    assert_eq!(a, b);
+}

@@ -12,6 +12,7 @@
 
 use noloco::cli::{train_config_from, Args};
 use noloco::config::{presets, Method, Routing, TrainConfig};
+use noloco::net::ChurnSchedule;
 use noloco::runtime::{find_build, Engine};
 use noloco::train::{SimTrainer, ThreadedTrainer};
 
@@ -39,14 +40,29 @@ fn cfg_for(method: Method, dp: usize, pp: usize, steps: usize) -> TrainConfig {
     cfg
 }
 
-fn engine(pp: usize) -> Option<Engine> {
+/// Whether the tiny artifact build for `pp` stages exists. When it does
+/// not, artifact-dependent tests skip cleanly — unless
+/// `NOLOCO_REQUIRE_ARTIFACTS` is set (CI images that ran `make
+/// artifacts`), in which case a missing build is a hard failure instead
+/// of a silent skip.
+fn have_artifacts(pp: usize) -> bool {
     match find_build(ART, "tiny", pp) {
-        Ok(dir) => Some(Engine::new(dir).unwrap()),
-        Err(_) => {
-            eprintln!("skipping: run `make artifacts` first");
-            None
+        Ok(_) => true,
+        Err(e) => {
+            if std::env::var_os("NOLOCO_REQUIRE_ARTIFACTS").is_some() {
+                panic!("NOLOCO_REQUIRE_ARTIFACTS is set but tiny-pp{pp} is missing: {e}");
+            }
+            eprintln!("skipping: no tiny-pp{pp} artifacts; run `make artifacts` to enable");
+            false
         }
     }
+}
+
+fn engine(pp: usize) -> Option<Engine> {
+    if !have_artifacts(pp) {
+        return None;
+    }
+    Some(Engine::new(find_build(ART, "tiny", pp).unwrap()).unwrap())
 }
 
 #[test]
@@ -206,7 +222,7 @@ fn threaded_fsdp_matches_sim_trajectory() {
     // The two executors implement the same algorithm; for FSDP (fully
     // deterministic synchronization) their loss series must agree to
     // float tolerance.
-    if find_build(ART, "tiny", 2).is_err() {
+    if !have_artifacts(2) {
         return;
     }
     let cfg = cfg_for(Method::Fsdp, 2, 2, 2);
@@ -230,7 +246,7 @@ fn threaded_fsdp_matches_sim_trajectory() {
 
 #[test]
 fn threaded_noloco_runs_and_reports() {
-    if find_build(ART, "tiny", 2).is_err() {
+    if !have_artifacts(2) {
         return;
     }
     let cfg = cfg_for(Method::NoLoCo, 2, 2, 2);
@@ -248,7 +264,7 @@ fn threaded_noloco_survives_straggling_gossip_peers() {
     // timeout every exchange falls back to a singleton update — training
     // must still complete with finite losses. (A DiLoCo collective would
     // simply stall; there is nothing to skip.)
-    if find_build(ART, "tiny", 2).is_err() {
+    if !have_artifacts(2) {
         return;
     }
     let cfg = cfg_for(Method::NoLoCo, 2, 2, 2);
@@ -260,6 +276,60 @@ fn threaded_noloco_survives_straggling_gossip_peers() {
         .unwrap();
     assert_eq!(report.step_train_loss.len(), 2);
     assert!(report.step_train_loss.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn threaded_rejects_churn_for_global_methods() {
+    // Needs no artifacts: the membership check fires before artifact
+    // resolution — DiLoCo's all-reduce has no live-subset form.
+    let mut cfg = cfg_for(Method::DiLoCo, 2, 2, 4);
+    cfg.churn = ChurnSchedule::none().leave(2, 1);
+    let err = ThreadedTrainer::new(cfg).run().unwrap_err();
+    assert!(err.to_string().contains("membership"), "{err}");
+}
+
+#[test]
+fn sim_global_methods_abort_on_churn() {
+    let Some(mut eng) = engine(2) else { return };
+    let mut cfg = cfg_for(Method::DiLoCo, 2, 2, 4);
+    cfg.churn = ChurnSchedule::none().leave(2, 1);
+    let err = SimTrainer::new(cfg, &mut eng).unwrap().run().unwrap_err();
+    assert!(err.to_string().contains("membership"), "{err}");
+}
+
+#[test]
+fn sim_noloco_trains_through_leave_and_rejoin() {
+    // Replica 1 drops at step 2 and rejoins at step 5 (mid outer round,
+    // so it re-enters via the donor-φ bootstrap). Training completes and
+    // the rejoined replica is live and finite.
+    let Some(mut eng) = engine(2) else { return };
+    let mut cfg = cfg_for(Method::NoLoCo, 2, 2, 6);
+    cfg.churn = ChurnSchedule::none().leave(2, 1).join(5, 1);
+    let mut t = SimTrainer::new(cfg, &mut eng).unwrap();
+    let report = t.run().unwrap();
+    assert!(report.final_val_nll.is_finite());
+    assert!(t.is_live(1));
+    assert_eq!(t.live_replicas(), vec![0, 1]);
+    assert!(t.worker(0, 1).theta.iter().all(|x| x.is_finite()));
+    // Gossip ran on every boundary (some as singletons) — no collectives.
+    assert_eq!(report.comm.blocking_collectives, 0);
+}
+
+#[test]
+fn threaded_noloco_trains_through_leave_and_rejoin() {
+    // The threaded executor derives the same live sets from the shared
+    // schedule: column 1 sits out steps 2–4, rejoins at 5 and catches up
+    // by absorbing its first gossip peer's slow weights.
+    if !have_artifacts(2) {
+        return;
+    }
+    let mut cfg = cfg_for(Method::NoLoCo, 2, 2, 6);
+    cfg.churn = ChurnSchedule::none().leave(2, 1).join(5, 1);
+    let report = ThreadedTrainer::new(cfg).with_val_batches(2).run().unwrap();
+    assert_eq!(report.step_train_loss.len(), 6);
+    // Column 0 stayed live throughout, so every step mean is finite.
+    assert!(report.step_train_loss.iter().all(|l| l.is_finite()));
+    assert!(report.final_val_nll.is_finite());
 }
 
 #[test]
