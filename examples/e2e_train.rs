@@ -46,14 +46,15 @@ fn main() -> anyhow::Result<()> {
     );
 
     if args.has_flag("threaded") {
-        // Real worker threads over the message fabric.
+        // Real worker threads over the message fabric — same unified
+        // TrainReport as the single-process path below.
         let report = ThreadedTrainer::new(cfg.clone()).with_val_batches(8).run()?;
         println!(
             "threaded done in {:.1}s | final val ppl {:.2} | {:.1} MiB / {} msgs on the fabric",
             report.wall_secs,
             report.final_val_ppl,
-            report.bytes_sent as f64 / (1024.0 * 1024.0),
-            report.msgs_sent
+            report.comm.mib_sent(),
+            report.comm.msgs_sent
         );
         let mut csv = String::from("step,train_loss\n");
         for (i, l) in report.step_train_loss.iter().enumerate() {

@@ -382,6 +382,9 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- the real elastic trainer, when artifacts are available ----
+    // Both executors now return the same unified TrainReport, so the
+    // threaded run reports the identical shape (trace, comm counters,
+    // per-step losses) the convergence experiments consume.
     match noloco::runtime::find_build("artifacts", "tiny", 2) {
         Ok(_) => {
             let mut cfg = presets::preset("tiny").unwrap();
@@ -390,13 +393,16 @@ fn main() -> anyhow::Result<()> {
             cfg.eval_tokens = 512;
             cfg.outer.inner_steps = 2;
             cfg.churn = ChurnSchedule::none().leave(3, 1).join(5, 1);
-            let report = noloco::train::ThreadedTrainer::new(cfg)
-                .with_val_batches(2)
-                .run()?;
+            let report = noloco::train::run_threaded(&cfg)?;
             println!(
-                "\n## Threaded elastic run (tiny artifacts): final ppl {:.2}, \
+                "\n## Threaded elastic run (tiny artifacts, {} executor): final ppl {:.2}, \
+                 {} gossip pairs / {} blocking collectives, {:.1} MiB on the fabric; \
                  losses finite on every step a replica was live",
-                report.final_val_ppl
+                report.executor,
+                report.final_val_ppl,
+                report.comm.pair_exchanges,
+                report.comm.blocking_collectives,
+                report.comm.mib_sent(),
             );
         }
         Err(_) => println!(

@@ -12,9 +12,10 @@ use noloco::collective::{
 };
 use noloco::config::{NetPreset, NetTopoConfig, Routing};
 use noloco::net::topo::ChurnSchedule;
-use noloco::net::SimClock;
+use noloco::net::{SimClock, Topology};
 use noloco::rngx::Pcg64;
 use noloco::routing::RoutePlan;
+use noloco::train::{BandwidthAwarePairing, PairingPolicy, UniformPairing};
 
 fn transfer_sampling() {
     section("per-message transfer sampling (64 nodes, 4 MiB payload)");
@@ -85,9 +86,85 @@ fn shared_seed_derivations() {
     });
 }
 
+/// Uniform vs. bandwidth-aware NoLoCo pairing: per-round gossip sync time
+/// (the slowest pair's expected transfer of both (Δ, φ) payloads) against
+/// consensus distance (replica variance after scalar gossip averaging) on
+/// the `wan` and `long-tail` presets — the ROADMAP's consensus/latency
+/// trade, made measurable.
+fn pairing_comparison() {
+    section("uniform vs bandwidth-aware gossip pairing (24 replicas, 4 MiB (Δ, φ))");
+    let dp = 24;
+    let payload = 2u64 * (4 << 20);
+    let rounds = 200u64;
+    let presets = [
+        ("wan", NetTopoConfig {
+            preset: NetPreset::MultiRegionWan,
+            regions: 3,
+            ..NetTopoConfig::default()
+        }),
+        ("long-tail", NetTopoConfig {
+            preset: NetPreset::LongTailInternet,
+            ..NetTopoConfig::default()
+        }),
+    ];
+    println!(
+        "  {:<12} {:<18} {:>16} {:>20}",
+        "preset", "policy", "mean sync (s)", "consensus distance"
+    );
+    for (name, cfg) in presets {
+        let topo = cfg.build(dp, 11);
+        let policies: [(&str, Box<dyn PairingPolicy>); 2] = [
+            ("uniform", Box::new(UniformPairing)),
+            ("bandwidth-aware", Box::new(BandwidthAwarePairing::new(cfg.build(dp, 11)))),
+        ];
+        for (pname, policy) in policies {
+            let (sync, dist) = pairing_walk(&topo, policy.as_ref(), dp, payload, rounds);
+            println!("  {name:<12} {pname:<18} {sync:>16.4} {dist:>20.3e}");
+        }
+        // Draw cost itself stays off the hot path's critical budget.
+        let live: Vec<usize> = (0..dp).collect();
+        let ba = BandwidthAwarePairing::new(cfg.build(dp, 11));
+        bench_row(&format!("BandwidthAwarePairing::draw, {name}"), || {
+            std::hint::black_box(ba.draw(&live, 2, 0, 1234, 9));
+        });
+    }
+}
+
+/// Walk `rounds` gossip rounds under `policy`: returns (mean per-round
+/// sync time, final replica variance of the scalar consensus walk).
+fn pairing_walk(
+    topo: &Topology,
+    policy: &dyn PairingPolicy,
+    dp: usize,
+    payload: u64,
+    rounds: u64,
+) -> (f64, f64) {
+    let live: Vec<usize> = (0..dp).collect();
+    // Scalar consensus state: replica r starts at r (maximal spread).
+    let mut x: Vec<f64> = (0..dp).map(|r| r as f64).collect();
+    let mut sync_sum = 0.0;
+    for outer_idx in 1..=rounds {
+        let groups = policy.draw(&live, 2, 0, outer_idx, 7);
+        let mut round = 0.0f64;
+        for g in &groups {
+            if g.len() == 2 {
+                round = round.max(topo.expected_transfer(g[0], g[1], payload));
+                let avg = 0.5 * (x[g[0]] + x[g[1]]);
+                x[g[0]] = avg;
+                x[g[1]] = avg;
+            }
+        }
+        sync_sum += round;
+    }
+    let mean = x.iter().sum::<f64>() / dp as f64;
+    let var = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / dp as f64;
+    (sync_sum / rounds as f64, var)
+}
+
 fn main() {
     println!("bench_topo — WAN topology, payload-aware collectives, elastic membership");
     transfer_sampling();
     collective_costs();
     shared_seed_derivations();
+    pairing_comparison();
 }

@@ -27,7 +27,7 @@ const VALUE_KEYS: &[&str] = &[
     "preset", "config", "method", "dataset", "routing", "steps", "dp", "pp", "seed",
     "out", "artifacts", "set", "eval-every", "inner-steps", "group", "alpha", "beta",
     "gamma", "warmup", "world", "sigma", "mu", "iters", "dim", "omega", "outer-steps",
-    "batch-tokens", "csv", "topo", "regions", "churn", "payload",
+    "batch-tokens", "csv", "topo", "regions", "churn", "payload", "pairing",
 ];
 
 impl Args {
@@ -172,6 +172,10 @@ pub fn train_config_from(args: &Args) -> Result<crate::config::TrainConfig, Stri
     if let Some(c) = args.opt("churn") {
         cfg.churn = crate::net::topo::ChurnSchedule::parse(c)?;
     }
+    if let Some(p) = args.opt("pairing") {
+        cfg.pairing = crate::config::PairingMode::parse(p)
+            .ok_or_else(|| format!("unknown pairing policy `{p}` (uniform|bandwidth-aware)"))?;
+    }
     // --set model.hidden=128 style overrides, applied last.
     if !args.sets.is_empty() {
         let mut text = String::new();
@@ -244,6 +248,15 @@ mod tests {
     fn train_config_rejects_bad_method() {
         let a = parse(&["train", "--method", "sgd"]);
         assert!(train_config_from(&a).is_err());
+    }
+
+    #[test]
+    fn pairing_flag_plumbs_through() {
+        let a = parse(&["train", "--pairing", "bandwidth-aware", "--topo", "wan"]);
+        let cfg = train_config_from(&a).unwrap();
+        assert_eq!(cfg.pairing, crate::config::PairingMode::BandwidthAware);
+        let a = parse(&["train", "--pairing", "nearest"]);
+        assert!(train_config_from(&a).unwrap_err().contains("pairing"));
     }
 
     #[test]

@@ -49,6 +49,39 @@ impl fmt::Display for Method {
     }
 }
 
+/// How NoLoCo's gossip groups are drawn each outer step (the
+/// [`PairingPolicy`](crate::train::PairingPolicy) selector).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PairingMode {
+    /// Uniform random disjoint groups over the live set (§3.2, the seed
+    /// behaviour).
+    Uniform,
+    /// Bias pairs toward cheap intra-region links on the configured
+    /// network topology, with periodic uniform rounds to keep the gossip
+    /// graph mixing across regions.
+    BandwidthAware,
+}
+
+impl PairingMode {
+    /// Parse from a config / CLI string.
+    pub fn parse(s: &str) -> Option<PairingMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "uniform" | "random" => Some(PairingMode::Uniform),
+            "bandwidth-aware" | "bandwidth" | "bw" => Some(PairingMode::BandwidthAware),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for PairingMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PairingMode::Uniform => write!(f, "uniform"),
+            PairingMode::BandwidthAware => write!(f, "bandwidth-aware"),
+        }
+    }
+}
+
 /// How pipeline stage replicas are wired each iteration (§3.1, §5.2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Routing {
@@ -376,6 +409,8 @@ pub struct TrainConfig {
     /// Deterministic membership schedule over the DP replicas (elastic
     /// training; the node index of each event is a DP replica).
     pub churn: ChurnSchedule,
+    /// NoLoCo gossip-pair drawing policy (ignored by FSDP / DiLoCo).
+    pub pairing: PairingMode,
 }
 
 impl TrainConfig {
@@ -419,6 +454,13 @@ impl TrainConfig {
                 "outer.method" => match v.as_str().and_then(Method::parse) {
                     Some(m) => {
                         self.outer.method = m;
+                        true
+                    }
+                    None => false,
+                },
+                "outer.pairing" => match v.as_str().and_then(PairingMode::parse) {
+                    Some(p) => {
+                        self.pairing = p;
                         true
                     }
                     None => false,
@@ -651,6 +693,22 @@ mod tests {
         assert!((0..8).all(|i| tail.straggler_of(i) >= 1.0));
         assert_eq!(NetPreset::parse("long-tail"), Some(NetPreset::LongTailInternet));
         assert_eq!(NetPreset::parse("nope"), None);
+    }
+
+    #[test]
+    fn pairing_mode_parses_and_plumbs() {
+        assert_eq!(PairingMode::parse("uniform"), Some(PairingMode::Uniform));
+        assert_eq!(
+            PairingMode::parse("Bandwidth-Aware"),
+            Some(PairingMode::BandwidthAware)
+        );
+        assert_eq!(PairingMode::parse("nearest"), None);
+        let mut c = presets::preset("tiny").unwrap();
+        assert_eq!(c.pairing, PairingMode::Uniform);
+        let doc = Doc::parse("[outer]\npairing = \"bandwidth-aware\"\n").unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.pairing, PairingMode::BandwidthAware);
+        c.validate().unwrap();
     }
 
     #[test]

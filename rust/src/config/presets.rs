@@ -11,8 +11,8 @@
 //! optimizer settings, smaller width/depth/vocab.
 
 use super::{
-    Dataset, Method, ModelConfig, NetTopoConfig, OuterConfig, Routing, TopologyConfig,
-    TrainConfig,
+    Dataset, Method, ModelConfig, NetTopoConfig, OuterConfig, PairingMode, Routing,
+    TopologyConfig, TrainConfig,
 };
 use crate::net::topo::ChurnSchedule;
 
@@ -50,6 +50,7 @@ fn base(model: ModelConfig, steps: usize, warmup: usize) -> TrainConfig {
         artifacts_dir: "artifacts".into(),
         net: NetTopoConfig::default(),
         churn: ChurnSchedule::none(),
+        pairing: PairingMode::Uniform,
     }
 }
 

@@ -82,6 +82,7 @@ fn print_help() {
            --topo P             network preset: lan | wan | long-tail\n\
            --regions N          WAN region count\n\
            --churn EVENTS       'leave:STEP:REPLICA;join:STEP:REPLICA;…'\n\
+           --pairing P          NoLoCo gossip pairing: uniform | bandwidth-aware\n\
            --payload BYTES      topo: sync payload (default: model size)"
     );
 }
@@ -89,13 +90,14 @@ fn print_help() {
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = cli::train_config_from(args).map_err(anyhow::Error::msg)?;
     println!(
-        "run: {} | {} | dp={} pp={} | {} steps | routing {:?} | seed {}",
+        "run: {} | {} | dp={} pp={} | {} steps | routing {:?} | pairing {} | seed {}",
         cfg.model.name,
         cfg.outer.method,
         cfg.topology.dp,
         cfg.topology.pp,
         cfg.steps,
         cfg.routing,
+        cfg.pairing,
         cfg.seed
     );
     let dir = find_build(&cfg.artifacts_dir, &cfg.model.name, cfg.topology.pp)?;
@@ -145,11 +147,21 @@ fn cmd_train_threaded(args: &Args) -> anyhow::Result<()> {
         report.wall_secs,
         report.final_val_nll,
         report.final_val_ppl,
-        report.bytes_sent as f64 / (1024.0 * 1024.0),
-        report.msgs_sent
+        report.comm.mib_sent(),
+        report.comm.msgs_sent
+    );
+    println!(
+        "comm: {} activation hops | {} blocking collectives | {} gossip pairs",
+        report.comm.activation_hops,
+        report.comm.blocking_collectives,
+        report.comm.pair_exchanges
     );
     let show = report.step_train_loss.len().min(5);
     println!("first {show} step losses: {:?}", &report.step_train_loss[..show]);
+    if let Some(csv) = args.opt("csv") {
+        report.trace.write_csv(csv)?;
+        println!("trace written to {csv}");
+    }
     Ok(())
 }
 

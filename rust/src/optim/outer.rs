@@ -18,6 +18,13 @@
 //!
 //! DiLoCo is the n = N, γ = 0 special case, with the mean over Δ computed
 //! by all-reduce instead of a random subgroup.
+//!
+//! These host-side tensor optimizers power the quadratic Theorem-1
+//! harness ([`crate::quad`]); the transformer trainers run the same
+//! updates inside fused XLA artifacts, dispatched through the
+//! [`crate::train::SyncStrategy`] impls (which also decide *who*
+//! contributes to the group sums — all-reduce rows vs. gossip pairs
+//! drawn by a [`crate::train::PairingPolicy`]).
 
 use crate::tensor::Tensor;
 

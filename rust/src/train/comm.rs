@@ -1,0 +1,541 @@
+//! The [`Communicator`] abstraction: *how* bytes move between workers.
+//!
+//! [`TrainerCore`](super::TrainerCore) drives the same DP × PP grid walk
+//! and the same [`SyncStrategy`](super::SyncStrategy) impls over either
+//! communicator:
+//!
+//! * [`AccountingComm`] — the single-process executor's substrate: payloads
+//!   are handed over through an in-memory mailbox and *accounted* (what
+//!   would cross the network) instead of transported. Peer state published
+//!   with [`Communicator::offer_state`] / [`Communicator::offer_reduce`]
+//!   is read back directly, which is why the grid executor can fold a
+//!   whole stage row without any scheduling.
+//! * [`FabricComm`] — one per worker thread, wrapping a
+//!   [`Fabric`](crate::net::Fabric) [`Endpoint`]: every hand-off is a real
+//!   tagged message, collectives run the tree algorithm from
+//!   [`crate::collective`], and gossip reads honour the optional straggler
+//!   timeout.
+//!
+//! The protocol is two-phase per synchronization round: every participant
+//! first *offers* its contribution (`offer_reduce` / `offer_state`), then
+//! folds peers' contributions (`all_reduce_mean` / `collect_state`). On
+//! the fabric the offer eagerly sends (one RTT per gossip pair, exactly
+//! the seed behaviour); on the accounting substrate it populates the
+//! mailbox the fold phase reads.
+//!
+//! Accounting semantics (kept identical to the seed counters):
+//! `activation_hops` / `floats_sent` count training-path activations,
+//! gradients and sync payloads in f32 elements; `bytes_sent` /
+//! `msgs_sent` count *everything shipped* (tokens and validation traffic
+//! included) in wire bytes, mirroring what [`Fabric`](crate::net::Fabric)
+//! meters on the threaded side so [`CommStats::mib_sent`] agrees between
+//! executors.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::collective;
+use crate::net::{Endpoint, Payload, Tag};
+use crate::tensor::Tensor;
+
+use super::CommStats;
+
+/// Stage-boundary tag kinds (collectives reserve 1..=4; gossip 110/111).
+pub const K_ACT: u16 = 100;
+/// Token shipment alongside activations.
+pub const K_TOK: u16 = 101;
+/// Backward-pass gradient w.r.t. the boundary activation.
+pub const K_GRD: u16 = 102;
+/// Validation activations.
+pub const K_VACT: u16 = 103;
+/// Validation tokens.
+pub const K_VTOK: u16 = 104;
+const K_GOSSIP_D: u16 = 110;
+const K_GOSSIP_P: u16 = 111;
+
+/// Tag of one stage-boundary payload: kind + wave (or eval slot) + origin
+/// replica. Unique per in-flight payload on both substrates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BoundaryTag {
+    /// Payload kind (`K_ACT`, `K_TOK`, `K_GRD`, `K_VACT`, `K_VTOK`).
+    pub kind: u16,
+    /// Microbatch wave (training) or eval slot (validation).
+    pub a: u32,
+    /// Origin replica whose path this payload belongs to.
+    pub origin: u32,
+}
+
+impl BoundaryTag {
+    /// Construct a tag.
+    pub fn new(kind: u16, a: u32, origin: u32) -> BoundaryTag {
+        BoundaryTag { kind, a, origin }
+    }
+}
+
+/// A boundary payload: activations / gradients or token ids.
+#[derive(Clone, Debug)]
+pub enum Wire {
+    /// Dense activations or gradients.
+    F32(Vec<f32>),
+    /// Token ids (host-side i32, shipped as u32 on the fabric).
+    I32(Vec<i32>),
+}
+
+impl Wire {
+    /// Take the f32 vector (panics on tokens — kinds define types).
+    pub fn into_f32(self) -> Vec<f32> {
+        match self {
+            Wire::F32(v) => v,
+            Wire::I32(_) => panic!("expected an f32 boundary payload, got tokens"),
+        }
+    }
+
+    /// Take the token vector (panics on f32 payloads).
+    pub fn into_i32(self) -> Vec<i32> {
+        match self {
+            Wire::I32(v) => v,
+            Wire::F32(_) => panic!("expected a token boundary payload, got f32s"),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Wire::F32(v) => v.len(),
+            Wire::I32(v) => v.len(),
+        }
+    }
+}
+
+/// How an executor moves payloads between workers of the grid.
+///
+/// Implementations are SPMD from the worker's point of view: the grid
+/// executor simply plays every rank's part itself. All methods take the
+/// caller's `(stage, replica)` coordinates so one communicator instance
+/// can serve any number of locally-owned workers.
+pub trait Communicator {
+    /// Executor name for reports ("sim" / "threaded").
+    fn executor(&self) -> &'static str;
+
+    /// Whether a joining replica can be handed a live donor's state
+    /// directly (single-process grids). When `false`, the NoLoCo strategy
+    /// recovers a rejoiner through its first gossip exchange instead.
+    fn supports_join_bootstrap(&self) -> bool;
+
+    /// Ship a stage-boundary payload to worker `to`.
+    fn send_boundary(&mut self, to: (usize, usize), tag: BoundaryTag, data: Wire) -> Result<()>;
+
+    /// Receive the boundary payload addressed to worker `at` under `tag`.
+    fn recv_boundary(&mut self, at: (usize, usize), tag: BoundaryTag) -> Result<Wire>;
+
+    /// Phase 1 of a mean all-reduce: publish this worker's contribution
+    /// for round `seq`. No-op on the fabric (the collective sends inline).
+    fn offer_reduce(&mut self, stage: usize, me: usize, seq: u32, buf: &[f32]) -> Result<()>;
+
+    /// Phase 2: overwrite `buf` with the elementwise mean over `replicas`
+    /// (ascending, must include `me`) of the stage row. Blocking
+    /// collective; counted once per row (at `replicas[0]`).
+    fn all_reduce_mean(
+        &mut self,
+        stage: usize,
+        me: usize,
+        replicas: &[usize],
+        seq: u32,
+        buf: &mut Vec<f32>,
+    ) -> Result<()>;
+
+    /// Phase 1 of a gossip round: publish `(Δ, φ)` to `peers` (same stage
+    /// row) under round `seq`. On the fabric this eagerly sends both
+    /// payloads (one RTT per pair).
+    fn offer_state(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peers: &[usize],
+        seq: u32,
+        delta: &[f32],
+        phi: &[f32],
+    ) -> Result<()>;
+
+    /// Phase 2: collect `peer`'s offered `(Δ, φ)`. `None` means the peer
+    /// missed the straggler deadline (fabric only) and the caller should
+    /// degrade to a smaller group.
+    fn collect_state(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peer: usize,
+        seq: u32,
+    ) -> Result<Option<(Vec<f32>, Vec<f32>)>>;
+
+    /// Communication accounting so far.
+    fn stats(&self) -> &CommStats;
+}
+
+// ---------------------------------------------------------------------
+// Accounting communicator (single-process grid executor)
+// ---------------------------------------------------------------------
+
+/// In-memory mailbox communicator for the grid executor. See the module
+/// docs for the counting semantics.
+pub struct AccountingComm {
+    stats: CommStats,
+    /// Boundary payloads in flight, keyed by destination + tag.
+    boundary: HashMap<(usize, usize, BoundaryTag), Wire>,
+    /// Published reduction contributions for the current round.
+    reduces: HashMap<(usize, usize), Vec<f32>>,
+    reduce_seq: u32,
+    /// Published gossip `(Δ, φ)` for the current round.
+    offers: HashMap<(usize, usize), (Vec<f32>, Vec<f32>)>,
+    offer_seq: u32,
+}
+
+impl AccountingComm {
+    /// Fresh communicator with zeroed counters.
+    pub fn new() -> AccountingComm {
+        AccountingComm {
+            stats: CommStats::default(),
+            boundary: HashMap::new(),
+            reduces: HashMap::new(),
+            reduce_seq: 0,
+            offers: HashMap::new(),
+            offer_seq: 0,
+        }
+    }
+}
+
+impl Default for AccountingComm {
+    fn default() -> AccountingComm {
+        AccountingComm::new()
+    }
+}
+
+impl Communicator for AccountingComm {
+    fn executor(&self) -> &'static str {
+        "sim"
+    }
+
+    fn supports_join_bootstrap(&self) -> bool {
+        true
+    }
+
+    fn send_boundary(&mut self, to: (usize, usize), tag: BoundaryTag, data: Wire) -> Result<()> {
+        let n = data.len() as u64;
+        self.stats.msgs_sent += 1;
+        self.stats.bytes_sent += 4 * n;
+        if matches!(tag.kind, K_ACT | K_GRD) {
+            // Training-path activations/gradients: the seed counters.
+            self.stats.activation_hops += 1;
+            self.stats.floats_sent += n;
+        }
+        self.boundary.insert((to.0, to.1, tag), data);
+        Ok(())
+    }
+
+    fn recv_boundary(&mut self, at: (usize, usize), tag: BoundaryTag) -> Result<Wire> {
+        match self.boundary.remove(&(at.0, at.1, tag)) {
+            Some(w) => Ok(w),
+            None => bail!(
+                "boundary payload {tag:?} for worker ({}, {}) was never sent \
+                 (grid walk ordering bug)",
+                at.0,
+                at.1
+            ),
+        }
+    }
+
+    fn offer_reduce(&mut self, stage: usize, me: usize, seq: u32, buf: &[f32]) -> Result<()> {
+        if seq != self.reduce_seq {
+            self.reduces.clear();
+            self.reduce_seq = seq;
+        }
+        self.reduces.insert((stage, me), buf.to_vec());
+        Ok(())
+    }
+
+    fn all_reduce_mean(
+        &mut self,
+        stage: usize,
+        me: usize,
+        replicas: &[usize],
+        seq: u32,
+        buf: &mut Vec<f32>,
+    ) -> Result<()> {
+        if seq != self.reduce_seq {
+            bail!("all_reduce_mean round {seq} folded before any offer (expected {})", self.reduce_seq);
+        }
+        let k = replicas.len();
+        let mut mean = vec![0.0f32; buf.len()];
+        for &r in replicas {
+            let Some(c) = self.reduces.get(&(stage, r)) else {
+                bail!("replica {r} of stage {stage} never offered to reduce round {seq}");
+            };
+            for (m, x) in mean.iter_mut().zip(c) {
+                *m += x / k as f32;
+            }
+        }
+        *buf = mean;
+        if me == replicas[0] {
+            // One blocking collective per stage row; tree cost: every edge
+            // carries the payload twice (reduce up + broadcast down).
+            let n = buf.len() as u64;
+            let edges = 2 * (k as u64 - 1);
+            self.stats.blocking_collectives += 1;
+            self.stats.floats_sent += edges * n;
+            self.stats.msgs_sent += edges;
+            self.stats.bytes_sent += edges * 4 * n;
+        }
+        Ok(())
+    }
+
+    fn offer_state(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peers: &[usize],
+        seq: u32,
+        delta: &[f32],
+        phi: &[f32],
+    ) -> Result<()> {
+        if seq != self.offer_seq {
+            self.offers.clear();
+            self.offer_seq = seq;
+        }
+        self.offers.insert((stage, me), (delta.to_vec(), phi.to_vec()));
+        let n = delta.len() as u64;
+        let p = peers.len() as u64;
+        // Each member ships (Δ, φ) to each peer; symmetric pair exchanges
+        // are counted once (by the lower-numbered side).
+        self.stats.pair_exchanges += peers.iter().filter(|&&q| q > me).count() as u64;
+        self.stats.floats_sent += p * 2 * n;
+        self.stats.msgs_sent += p * 2;
+        self.stats.bytes_sent += p * 2 * 4 * n;
+        Ok(())
+    }
+
+    fn collect_state(
+        &mut self,
+        stage: usize,
+        _me: usize,
+        peer: usize,
+        seq: u32,
+    ) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+        if seq != self.offer_seq {
+            bail!("gossip round {seq} collected before any offer (expected {})", self.offer_seq);
+        }
+        match self.offers.get(&(stage, peer)) {
+            Some(dp) => Ok(Some(dp.clone())),
+            None => bail!("replica {peer} of stage {stage} never offered to gossip round {seq}"),
+        }
+    }
+
+    fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fabric communicator (threaded executor, one per worker thread)
+// ---------------------------------------------------------------------
+
+/// Message-passing communicator over one fabric [`Endpoint`].
+///
+/// Logical counters ([`CommStats`]) follow the same once-per-row /
+/// once-per-pair rules as [`AccountingComm`] so summing worker stats
+/// reproduces the grid executor's totals; `bytes_sent` / `msgs_sent` are
+/// left to the fabric's own wire metering (the trainer overwrites them
+/// from [`Fabric::bytes_sent`](crate::net::Fabric::bytes_sent)).
+pub struct FabricComm {
+    ep: Endpoint,
+    dp: usize,
+    /// Straggler tolerance for gossip collects; `None` = wait forever.
+    gossip_timeout: Option<Duration>,
+    stats: CommStats,
+}
+
+impl FabricComm {
+    /// Wrap an endpoint. `dp` maps `(stage, replica)` to fabric ranks.
+    pub fn new(ep: Endpoint, dp: usize, gossip_timeout: Option<Duration>) -> FabricComm {
+        FabricComm { ep, dp, gossip_timeout, stats: CommStats::default() }
+    }
+
+    fn rank_of(&self, stage: usize, replica: usize) -> usize {
+        stage * self.dp + replica
+    }
+}
+
+impl Communicator for FabricComm {
+    fn executor(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn supports_join_bootstrap(&self) -> bool {
+        false
+    }
+
+    fn send_boundary(&mut self, to: (usize, usize), tag: BoundaryTag, data: Wire) -> Result<()> {
+        let n = data.len() as u64;
+        if matches!(tag.kind, K_ACT | K_GRD) {
+            self.stats.activation_hops += 1;
+            self.stats.floats_sent += n;
+        }
+        let payload = match data {
+            Wire::F32(v) => Payload::F32(v),
+            Wire::I32(v) => Payload::U32(v.iter().map(|&t| t as u32).collect()),
+        };
+        let rank = self.rank_of(to.0, to.1);
+        self.ep.send(rank, Tag::new(tag.kind, tag.a, tag.origin), payload);
+        Ok(())
+    }
+
+    fn recv_boundary(&mut self, _at: (usize, usize), tag: BoundaryTag) -> Result<Wire> {
+        let msg = self.ep.recv(Tag::new(tag.kind, tag.a, tag.origin));
+        Ok(match msg.payload {
+            Payload::F32(v) => Wire::F32(v),
+            Payload::U32(v) => Wire::I32(v.iter().map(|&t| t as i32).collect()),
+            Payload::Control => bail!("unexpected control payload under boundary tag {tag:?}"),
+        })
+    }
+
+    fn offer_reduce(&mut self, _stage: usize, _me: usize, _seq: u32, _buf: &[f32]) -> Result<()> {
+        Ok(()) // the tree collective sends inline during the fold phase
+    }
+
+    fn all_reduce_mean(
+        &mut self,
+        stage: usize,
+        me: usize,
+        replicas: &[usize],
+        seq: u32,
+        buf: &mut Vec<f32>,
+    ) -> Result<()> {
+        let ranks: Vec<usize> = replicas.iter().map(|&r| self.rank_of(stage, r)).collect();
+        let n = buf.len();
+        let mut t = Tensor::from_vec(std::mem::take(buf), &[n]);
+        collective::all_reduce_mean(&mut self.ep, &ranks, seq, &mut t);
+        *buf = t.into_vec();
+        if me == replicas[0] {
+            let k = replicas.len() as u64;
+            self.stats.blocking_collectives += 1;
+            self.stats.floats_sent += 2 * (k - 1) * n as u64;
+        }
+        Ok(())
+    }
+
+    fn offer_state(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peers: &[usize],
+        seq: u32,
+        delta: &[f32],
+        phi: &[f32],
+    ) -> Result<()> {
+        let my_rank = self.rank_of(stage, me) as u32;
+        for &p in peers {
+            let rank = self.rank_of(stage, p);
+            self.ep
+                .send(rank, Tag::new(K_GOSSIP_D, seq, my_rank), Payload::F32(delta.to_vec()));
+            self.ep
+                .send(rank, Tag::new(K_GOSSIP_P, seq, my_rank), Payload::F32(phi.to_vec()));
+        }
+        self.stats.pair_exchanges += peers.iter().filter(|&&q| q > me).count() as u64;
+        self.stats.floats_sent += peers.len() as u64 * 2 * delta.len() as u64;
+        Ok(())
+    }
+
+    fn collect_state(
+        &mut self,
+        stage: usize,
+        _me: usize,
+        peer: usize,
+        seq: u32,
+    ) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+        let peer_rank = self.rank_of(stage, peer) as u32;
+        let td = Tag::new(K_GOSSIP_D, seq, peer_rank);
+        let tp = Tag::new(K_GOSSIP_P, seq, peer_rank);
+        // Trailing late messages after a timeout are absorbed harmlessly by
+        // the endpoint stash (tags are unique per outer round).
+        Ok(match self.gossip_timeout {
+            None => Some((
+                self.ep.recv(td).payload.into_f32(),
+                self.ep.recv(tp).payload.into_f32(),
+            )),
+            Some(t) => {
+                let Some(d) = self.ep.recv_timeout(td, t) else { return Ok(None) };
+                let Some(p) = self.ep.recv_timeout(tp, t) else { return Ok(None) };
+                Some((d.payload.into_f32(), p.payload.into_f32()))
+            }
+        })
+    }
+
+    fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting_boundary_roundtrip_and_counting() {
+        let mut c = AccountingComm::new();
+        let tag = BoundaryTag::new(K_ACT, 3, 1);
+        c.send_boundary((1, 0), tag, Wire::F32(vec![1.0, 2.0, 3.0])).unwrap();
+        assert_eq!(c.stats().activation_hops, 1);
+        assert_eq!(c.stats().floats_sent, 3);
+        assert_eq!(c.stats().bytes_sent, 12);
+        assert_eq!(c.stats().msgs_sent, 1);
+        let back = c.recv_boundary((1, 0), tag).unwrap().into_f32();
+        assert_eq!(back, vec![1.0, 2.0, 3.0]);
+        // A second receive of the same tag is a protocol bug.
+        assert!(c.recv_boundary((1, 0), tag).is_err());
+        // Tokens count bytes but not the seed's activation counters.
+        c.send_boundary((1, 0), BoundaryTag::new(K_TOK, 3, 1), Wire::I32(vec![7, 8])).unwrap();
+        assert_eq!(c.stats().activation_hops, 1);
+        assert_eq!(c.stats().floats_sent, 3);
+        assert_eq!(c.stats().bytes_sent, 20);
+    }
+
+    #[test]
+    fn accounting_all_reduce_matches_row_mean() {
+        let mut c = AccountingComm::new();
+        c.offer_reduce(0, 0, 5, &[1.0, 3.0]).unwrap();
+        c.offer_reduce(0, 1, 5, &[3.0, 5.0]).unwrap();
+        let mut buf = vec![1.0, 3.0];
+        c.all_reduce_mean(0, 0, &[0, 1], 5, &mut buf).unwrap();
+        assert_eq!(buf, vec![2.0, 4.0]);
+        // Counted once per row, with the seed's tree-edge payload model:
+        // 2 · (k − 1) edges of n = 2 floats.
+        assert_eq!(c.stats().blocking_collectives, 1);
+        assert_eq!(c.stats().floats_sent, 4);
+        let mut buf2 = vec![3.0, 5.0];
+        c.all_reduce_mean(0, 1, &[0, 1], 5, &mut buf2).unwrap();
+        assert_eq!(buf2, vec![2.0, 4.0]);
+        assert_eq!(c.stats().blocking_collectives, 1, "fold at replica 1 must not recount");
+    }
+
+    #[test]
+    fn accounting_gossip_offers_round_and_pair_counting() {
+        let mut c = AccountingComm::new();
+        c.offer_state(0, 0, &[1], 1, &[1.0], &[2.0]).unwrap();
+        c.offer_state(0, 1, &[0], 1, &[3.0], &[4.0]).unwrap();
+        assert_eq!(c.stats().pair_exchanges, 1, "pair counted once");
+        assert_eq!(c.stats().floats_sent, 2 * 2, "both sides ship (Δ, φ)");
+        let (d, p) = c.collect_state(0, 0, 1, 1).unwrap().unwrap();
+        assert_eq!((d, p), (vec![3.0], vec![4.0]));
+        // A new round clears the previous offers.
+        c.offer_state(0, 0, &[], 2, &[9.0], &[9.0]).unwrap();
+        assert!(c.collect_state(0, 0, 1, 2).is_err());
+    }
+
+    #[test]
+    fn accounting_missing_offer_is_an_error() {
+        let mut c = AccountingComm::new();
+        c.offer_reduce(0, 0, 1, &[1.0]).unwrap();
+        let mut buf = vec![1.0];
+        assert!(c.all_reduce_mean(0, 0, &[0, 1], 1, &mut buf).is_err());
+    }
+}

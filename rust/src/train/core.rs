@@ -1,0 +1,812 @@
+//! The generic inner-loop driver both executors share.
+//!
+//! [`TrainerCore`] owns everything the paper's three methods have in
+//! common — the DP × PP grid walk with §3.1 random-permutation routing,
+//! microbatch accumulation, Adam inner steps, eval cadence, and the
+//! churn-driven live-set logic — parameterized by a
+//! [`Communicator`] (how payloads move: in-memory accounting vs. real
+//! fabric messages) and a [`SyncStrategy`](super::SyncStrategy) (what
+//! replicas exchange at each synchronization point).
+//!
+//! One core instance owns a *set of workers*:
+//!
+//! * the grid executor ([`SimTrainer`](super::SimTrainer)) owns the whole
+//!   `dp × pp` grid, stage-major, over one shared engine;
+//! * each threaded worker ([`ThreadedTrainer`](super::ThreadedTrainer))
+//!   owns exactly one worker over its private engine.
+//!
+//! The walk is written SPMD from the worker's point of view: every
+//! owned worker on a live path receives its boundary payloads, computes,
+//! and sends onward. On the mailbox communicator the forward sweep visits
+//! stages in ascending order (and the backward sweep in descending
+//! order), so every producer runs before its consumer; on the fabric the
+//! same code blocks on tagged receives exactly like the seed's
+//! per-worker loop.
+//!
+//! Determinism: route plans, gossip groups and live sets all derive from
+//! `(seed, step)` and the shared churn schedule, never from execution
+//! order, so the grid executor reproduces the seed trajectories
+//! bit-for-bit and threaded workers agree without coordination traffic.
+
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::data::Loader;
+use crate::metrics::{perplexity, RunTrace};
+use crate::model::StageKind;
+use crate::net::topo::ChurnEvent;
+use crate::optim::LrSchedule;
+use crate::routing::RoutePlan;
+use crate::runtime::{Engine, Manifest};
+use crate::tensor::Tensor;
+
+use super::comm::{BoundaryTag, Communicator, Wire, K_ACT, K_GRD, K_TOK, K_VACT, K_VTOK};
+use super::exec::{self, AdamScalars};
+use super::state::WorkerState;
+use super::strategy::{self, ChurnResponse, SyncStrategy};
+use super::TrainReport;
+
+/// The shared DP × PP training driver. See the module docs.
+pub struct TrainerCore<'e, C: Communicator> {
+    cfg: TrainConfig,
+    eng: &'e mut Engine,
+    man: Manifest,
+    comm: C,
+    strategy: Box<dyn SyncStrategy>,
+    /// Locally-owned workers: the whole grid (stage-major,
+    /// `stage * dp + replica`) for the grid executor, exactly one for a
+    /// threaded worker.
+    workers: Vec<WorkerState>,
+    /// Training loaders for locally-owned stage-0 columns, by replica.
+    loaders: Vec<(usize, Loader)>,
+    /// Pre-drawn validation batches (same stream on every replica); empty
+    /// for owned workers that never touch validation tokens directly.
+    val_batches: Vec<Vec<i32>>,
+    /// Validation batches per eval point (agreed across all workers).
+    n_val: usize,
+    lr: LrSchedule,
+    trace: RunTrace,
+    /// Microbatch waves per replica per step.
+    num_mb: usize,
+    /// Live mask over DP columns, driven by the churn schedule.
+    live: Vec<bool>,
+    /// Per-step mean training loss observed at owned last-stage workers
+    /// (NaN for steps the own column sat out).
+    step_train_loss: Vec<f64>,
+}
+
+fn draw_val_batches(cfg: &TrainConfig, man: &Manifest, n: usize) -> Vec<Vec<i32>> {
+    let mut val_loader = Loader::validation(
+        cfg.dataset,
+        cfg.model.vocab,
+        cfg.seed ^ 0x5eed,
+        cfg.model.seq_len,
+        man.mb,
+    );
+    (0..n)
+        .map(|_| {
+            val_loader
+                .next_batch()
+                .tokens
+                .iter()
+                .map(|&t| t as i32)
+                .collect()
+        })
+        .collect()
+}
+
+/// Which live origin replica's path crosses `(stage, me)` under `plan`.
+fn origin_through(plan: &RoutePlan, stage: usize, me: usize, live: &[usize]) -> usize {
+    for &r0 in live {
+        if plan.path_from(r0)[stage] == me {
+            return r0;
+        }
+    }
+    unreachable!("live permutation routing covers every live replica");
+}
+
+impl<'e, C: Communicator> TrainerCore<'e, C> {
+    /// Grid executor: own every worker of the DP × PP grid over one
+    /// shared engine, with identical per-stage init across replicas
+    /// (φ₀,ᵢ ≡ φ₀), sharded loaders and a pre-drawn validation set.
+    pub fn new_grid(cfg: TrainConfig, eng: &'e mut Engine, comm: C) -> Result<Self> {
+        cfg.validate().map_err(anyhow::Error::msg)?;
+        let man = eng.manifest()?;
+        man.check_against(&cfg.model, cfg.topology.pp)?;
+        let (dp, pp) = (cfg.topology.dp, cfg.topology.pp);
+
+        // Per-replica microbatching: the global batch is split across DP,
+        // then walked in manifest-sized microbatches.
+        let per_replica_seqs = (cfg.model.batch_tokens / cfg.model.seq_len / dp).max(1);
+        ensure!(
+            per_replica_seqs >= man.mb,
+            "per-replica batch ({per_replica_seqs} seqs) smaller than artifact microbatch ({}); \
+             lower dp or rebuild artifacts with a smaller mb",
+            man.mb
+        );
+        let num_mb = per_replica_seqs / man.mb;
+
+        // Shared init per stage: seed depends on the stage only.
+        let mut workers = Vec::with_capacity(dp * pp);
+        for s in 0..pp {
+            let kind = StageKind::of_stage(s, pp);
+            let init = exec::init_stage(eng, kind, (cfg.seed as i32) ^ (s as i32 * 7901))
+                .with_context(|| format!("initializing stage {s}"))?;
+            for r in 0..dp {
+                workers.push(WorkerState::new(s, r, kind, init.clone(), cfg.outer.method));
+            }
+        }
+        let loaders: Vec<(usize, Loader)> = (0..dp)
+            .map(|r| {
+                (
+                    r,
+                    Loader::train(
+                        cfg.dataset,
+                        cfg.model.vocab,
+                        cfg.seed,
+                        r,
+                        dp,
+                        cfg.model.seq_len,
+                        num_mb * man.mb,
+                    ),
+                )
+            })
+            .collect();
+
+        let val_seqs = (cfg.eval_tokens / cfg.model.seq_len).max(man.mb);
+        let n_val = (val_seqs / man.mb).max(1);
+        let val_batches = draw_val_batches(&cfg, &man, n_val);
+        let lr = LrSchedule {
+            peak: cfg.model.inner_lr,
+            warmup: cfg.warmup,
+            total: cfg.steps,
+            floor_frac: cfg.lr_floor,
+        };
+        let strategy = strategy::for_config(&cfg);
+        Ok(TrainerCore {
+            live: vec![true; dp],
+            cfg,
+            eng,
+            man,
+            comm,
+            strategy,
+            workers,
+            loaders,
+            val_batches,
+            n_val,
+            lr,
+            trace: RunTrace::default(),
+            num_mb,
+            step_train_loss: Vec::new(),
+        })
+    }
+
+    /// Threaded worker executor: own exactly `(stage, replica)` over this
+    /// worker's private engine. `num_mb` and `n_val` are computed once by
+    /// the spawning trainer so every worker agrees on the wave and eval
+    /// schedule.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_single(
+        cfg: TrainConfig,
+        eng: &'e mut Engine,
+        comm: C,
+        man: Manifest,
+        stage: usize,
+        replica: usize,
+        num_mb: usize,
+        n_val: usize,
+    ) -> Result<Self> {
+        cfg.validate().map_err(anyhow::Error::msg)?;
+        let (dp, pp) = (cfg.topology.dp, cfg.topology.pp);
+        ensure!(stage < pp && replica < dp, "worker ({stage}, {replica}) outside the grid");
+        let kind = StageKind::of_stage(stage, pp);
+        let init = exec::init_stage(eng, kind, (cfg.seed as i32) ^ (stage as i32 * 7901))
+            .with_context(|| format!("initializing stage {stage}"))?;
+        let workers = vec![WorkerState::new(stage, replica, kind, init, cfg.outer.method)];
+        let loaders = if stage == 0 {
+            vec![(
+                replica,
+                Loader::train(
+                    cfg.dataset,
+                    cfg.model.vocab,
+                    cfg.seed,
+                    replica,
+                    dp,
+                    cfg.model.seq_len,
+                    num_mb * man.mb,
+                ),
+            )]
+        } else {
+            Vec::new()
+        };
+        // Only workers that feed tokens into a pipeline draw the shared
+        // validation stream; interior/last stages receive tokens over the
+        // boundary channel.
+        let val_batches = if n_val > 0 && (stage == 0 || pp == 1) {
+            draw_val_batches(&cfg, &man, n_val)
+        } else {
+            Vec::new()
+        };
+        let lr = LrSchedule {
+            peak: cfg.model.inner_lr,
+            warmup: cfg.warmup,
+            total: cfg.steps,
+            floor_frac: cfg.lr_floor,
+        };
+        let strategy = strategy::for_config(&cfg);
+        Ok(TrainerCore {
+            live: vec![true; dp],
+            cfg,
+            eng,
+            man,
+            comm,
+            strategy,
+            workers,
+            loaders,
+            val_batches,
+            n_val,
+            lr,
+            trace: RunTrace::default(),
+            num_mb,
+            step_train_loss: Vec::new(),
+        })
+    }
+
+    fn dp(&self) -> usize {
+        self.cfg.topology.dp
+    }
+
+    fn pp(&self) -> usize {
+        self.cfg.topology.pp
+    }
+
+    /// Whether this core owns the whole grid (the grid executor).
+    pub fn owns_grid(&self) -> bool {
+        self.workers.len() == self.dp() * self.pp()
+    }
+
+    fn owns_last_stage(&self) -> bool {
+        let pp = self.pp();
+        self.workers.iter().any(|w| w.stage + 1 == pp)
+    }
+
+    fn widx(&self, stage: usize, replica: usize) -> usize {
+        debug_assert!(self.owns_grid());
+        stage * self.dp() + replica
+    }
+
+    /// Currently live DP replicas, ascending.
+    pub fn live_replicas(&self) -> Vec<usize> {
+        (0..self.dp()).filter(|&r| self.live[r]).collect()
+    }
+
+    /// Whether DP replica `r` is currently live.
+    pub fn is_live(&self, r: usize) -> bool {
+        self.live[r]
+    }
+
+    /// The manifest this core is bound to.
+    pub fn manifest(&self) -> &Manifest {
+        &self.man
+    }
+
+    /// Communication accounting so far.
+    pub fn comm_stats(&self) -> &super::CommStats {
+        self.comm.stats()
+    }
+
+    /// Immutable access to an owned worker (tests / inspection).
+    pub fn worker(&self, stage: usize, replica: usize) -> &WorkerState {
+        self.workers
+            .iter()
+            .find(|w| w.stage == stage && w.replica == replica)
+            .expect("worker not owned by this executor")
+    }
+
+    /// All owned workers (stage-major for the grid executor).
+    pub fn workers(&self) -> &[WorkerState] {
+        &self.workers
+    }
+
+    /// Mutable access for checkpoint restore.
+    pub(crate) fn workers_mut(&mut self) -> &mut [WorkerState] {
+        &mut self.workers
+    }
+
+    /// Apply one membership event (a whole DP column across all stages).
+    ///
+    /// The configured [`SyncStrategy`](super::SyncStrategy) decides the
+    /// response: gossip methods repair (re-pair over survivors, bootstrap
+    /// a joiner), collective methods abort — their world-wide all-reduce
+    /// has no live-subset form, which is the measurable shape of the
+    /// paper's no-global-barrier claim (§5.3).
+    pub fn apply_churn(&mut self, event: ChurnEvent) -> Result<()> {
+        ensure!(
+            matches!(self.strategy.churn_response(), ChurnResponse::Repair),
+            "{} cannot change membership mid-run: its global all-reduce has no \
+             live-subset form; only NoLoCo's gossip re-pairs over survivors ({event:?})",
+            self.cfg.outer.method
+        );
+        let r = event.node();
+        ensure!(r < self.dp(), "churn event for replica {r} outside dp = {}", self.dp());
+        match event {
+            ChurnEvent::Leave(_) => {
+                self.live[r] = false;
+                ensure!(self.live.iter().any(|&l| l), "all replicas left the run");
+            }
+            ChurnEvent::Join(_) => {
+                if !self.live[r] {
+                    self.live[r] = true;
+                    if self.comm.supports_join_bootstrap() && self.owns_grid() {
+                        self.reseed_replica(r);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Bootstrap a joining replica: copy the slow weights φ from the
+    /// lowest live donor in each stage row (the freshest consensus state),
+    /// reset θ to φ and zero the Adam moments and outer momentum. Without
+    /// a donor (solo rejoin) the replica resumes from its own last state.
+    /// Grid executor only; message-passing joiners catch up through their
+    /// first gossip exchange instead (see the NoLoCo strategy).
+    fn reseed_replica(&mut self, r: usize) {
+        let dp = self.dp();
+        let donor = (0..dp).find(|&d| d != r && self.live[d]);
+        for s in 0..self.pp() {
+            let i = self.widx(s, r);
+            if let Some(d) = donor {
+                let phi = self.workers[self.widx(s, d)].phi.clone();
+                self.workers[i].phi = phi;
+            }
+            let w = &mut self.workers[i];
+            let n = w.len();
+            w.reset_theta_to_phi();
+            w.m = vec![0.0; n];
+            w.v = vec![0.0; n];
+            w.adam_t = 0;
+            w.delta = vec![0.0; n];
+            w.grad_acc = vec![0.0; n];
+            w.acc_count = 0;
+        }
+    }
+
+    /// Run the configured number of inner steps; returns the report.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let start = Instant::now();
+        let exec0 = self.eng.executions();
+        let mut last_val = f64::NAN;
+        for step in 0..self.cfg.steps {
+            let due: Vec<ChurnEvent> = self.cfg.churn.events_at(step as u64).collect();
+            for event in due {
+                self.apply_churn(event)?;
+            }
+            // A single-worker executor whose column is dead sits the step
+            // out entirely: no data, no compute, no messages.
+            if !self.owns_grid() && !self.live[self.workers[0].replica] {
+                if self.owns_last_stage() {
+                    self.step_train_loss.push(f64::NAN); // excluded from means
+                }
+                continue;
+            }
+            let train_loss = self.inner_step(step)?;
+            if self.owns_last_stage() {
+                self.step_train_loss.push(train_loss);
+            }
+            let outer_due =
+                self.strategy.has_outer() && (step + 1) % self.cfg.outer.inner_steps == 0;
+            if outer_due {
+                self.outer_step(((step + 1) / self.cfg.outer.inner_steps) as u64)?;
+            }
+            let eval_due = self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0;
+            if (eval_due || step + 1 == self.cfg.steps) && self.n_val > 0 {
+                let val = self.validate_at(step)?;
+                if self.owns_last_stage() {
+                    last_val = val;
+                    let wstd = self.weight_std();
+                    self.trace
+                        .push(step + 1, train_loss, val, wstd, self.lr.at(step));
+                }
+            }
+        }
+        Ok(TrainReport {
+            final_val_nll: last_val,
+            final_val_ppl: perplexity(last_val),
+            trace: std::mem::take(&mut self.trace),
+            comm: self.comm.stats().clone(),
+            wall_secs: start.elapsed().as_secs_f64(),
+            executions: self.eng.executions() - exec0,
+            step_train_loss: std::mem::take(&mut self.step_train_loss),
+            executor: self.comm.executor(),
+        })
+    }
+
+    /// One inner optimizer step: route + fwd/bwd every owned worker's
+    /// microbatch waves, sync gradients through the strategy (FSDP), then
+    /// Adam on every owned live worker. Returns the mean training loss
+    /// over the losses observed at owned last-stage workers.
+    // Index loops are deliberate: the walk interleaves `&mut self.comm`
+    // and `&mut self.eng` with worker access, which iterator forms of
+    // `self.workers` would lock out.
+    #[allow(clippy::needless_range_loop, clippy::type_complexity)]
+    pub fn inner_step(&mut self, step: usize) -> Result<f64> {
+        let (dp, pp) = (self.dp(), self.pp());
+        let num_mb = self.num_mb;
+        let mb_toks = self.man.mb * self.man.seq_len;
+        let live = self.live_replicas();
+
+        // Draw this step's batches for locally-owned live stage-0 columns.
+        let mut batches: Vec<Option<Vec<i32>>> = vec![None; dp];
+        {
+            let TrainerCore { loaders, live: live_mask, .. } = self;
+            for (r, loader) in loaders.iter_mut() {
+                if live_mask[*r] {
+                    batches[*r] = Some(
+                        loader
+                            .next_batch()
+                            .tokens
+                            .iter()
+                            .map(|&t| t as i32)
+                            .collect(),
+                    );
+                }
+            }
+        }
+
+        // Losses indexed [wave][origin] so the final fold reproduces the
+        // seed's wave-major, ascending-origin accumulation order exactly.
+        let mut losses: Vec<Vec<Option<f64>>> = vec![vec![None; dp]; num_mb];
+        // Backward stash: (local worker, wave, origin, x_in, toks).
+        let mut stash: Vec<(usize, u32, usize, Vec<f32>, Vec<i32>)> = Vec::new();
+
+        // ---- forward sweep (the last stage also runs its backward) ----
+        for mb in 0..num_mb {
+            let wave = (step * num_mb + mb) as u64;
+            let wave32 = wave as u32;
+            let plan = RoutePlan::for_step_over(
+                self.cfg.routing,
+                &live,
+                dp,
+                pp,
+                self.cfg.seed ^ 0x0a17,
+                wave,
+            );
+            for li in 0..self.workers.len() {
+                let (s, q) = (self.workers[li].stage, self.workers[li].replica);
+                if !self.live[q] {
+                    continue;
+                }
+                if pp == 1 {
+                    let batch = batches[q].as_ref().expect("live stage-0 column has a batch");
+                    let toks = &batch[mb * mb_toks..(mb + 1) * mb_toks];
+                    let (loss, g) =
+                        exec::bwd_full(self.eng, &self.man, &self.workers[li].theta, toks)?;
+                    self.workers[li].accumulate(&g);
+                    losses[mb][q] = Some(loss as f64);
+                } else if s == 0 {
+                    let batch = batches[q].as_ref().expect("live stage-0 column has a batch");
+                    let toks = batch[mb * mb_toks..(mb + 1) * mb_toks].to_vec();
+                    let x =
+                        exec::fwd_first(self.eng, &self.man, &self.workers[li].theta, &toks)?;
+                    let nxt = (1, plan.next_of(0, q));
+                    self.comm
+                        .send_boundary(nxt, BoundaryTag::new(K_ACT, wave32, q as u32), Wire::F32(x))?;
+                    self.comm.send_boundary(
+                        nxt,
+                        BoundaryTag::new(K_TOK, wave32, q as u32),
+                        Wire::I32(toks.clone()),
+                    )?;
+                    stash.push((li, wave32, q, Vec::new(), toks));
+                } else {
+                    let r0 = origin_through(&plan, s, q, &live);
+                    let act = self
+                        .comm
+                        .recv_boundary((s, q), BoundaryTag::new(K_ACT, wave32, r0 as u32))?
+                        .into_f32();
+                    let toks = self
+                        .comm
+                        .recv_boundary((s, q), BoundaryTag::new(K_TOK, wave32, r0 as u32))?
+                        .into_i32();
+                    if s == pp - 1 {
+                        let (loss, g_theta, gx) = exec::bwd_last(
+                            self.eng,
+                            &self.man,
+                            &self.workers[li].theta,
+                            &act,
+                            &toks,
+                        )?;
+                        self.workers[li].accumulate(&g_theta);
+                        losses[mb][r0] = Some(loss as f64);
+                        let prv = (s - 1, plan.prev_of(s, q));
+                        self.comm.send_boundary(
+                            prv,
+                            BoundaryTag::new(K_GRD, wave32, r0 as u32),
+                            Wire::F32(gx),
+                        )?;
+                    } else {
+                        let x =
+                            exec::fwd_mid(self.eng, &self.man, &self.workers[li].theta, &act)?;
+                        let nxt = (s + 1, plan.next_of(s, q));
+                        self.comm.send_boundary(
+                            nxt,
+                            BoundaryTag::new(K_ACT, wave32, r0 as u32),
+                            Wire::F32(x),
+                        )?;
+                        self.comm.send_boundary(
+                            nxt,
+                            BoundaryTag::new(K_TOK, wave32, r0 as u32),
+                            Wire::I32(toks.clone()),
+                        )?;
+                        stash.push((li, wave32, r0, act, toks));
+                    }
+                }
+            }
+        }
+
+        // ---- backward sweep (first / mid stages drain gradients) ----
+        if pp > 1 {
+            // Wave-ascending, deeper stages first, so the mailbox executor
+            // produces every gradient before its consumer reads it.
+            stash.sort_by_key(|&(li, wave, _, _, _)| {
+                (wave, std::cmp::Reverse(self.workers[li].stage))
+            });
+            // The stash is wave-major, so one plan derivation serves every
+            // stage of a wave.
+            let mut cached: Option<(u32, RoutePlan)> = None;
+            for (li, wave32, r0, x_in, toks) in stash {
+                let (s, q) = (self.workers[li].stage, self.workers[li].replica);
+                if cached.as_ref().map(|(w, _)| *w) != Some(wave32) {
+                    let plan = RoutePlan::for_step_over(
+                        self.cfg.routing,
+                        &live,
+                        dp,
+                        pp,
+                        self.cfg.seed ^ 0x0a17,
+                        wave32 as u64,
+                    );
+                    cached = Some((wave32, plan));
+                }
+                let plan = &cached.as_ref().expect("plan cached above").1;
+                let g_out = self
+                    .comm
+                    .recv_boundary((s, q), BoundaryTag::new(K_GRD, wave32, r0 as u32))?
+                    .into_f32();
+                if s == 0 {
+                    let g = exec::bwd_first(
+                        self.eng,
+                        &self.man,
+                        &self.workers[li].theta,
+                        &toks,
+                        &g_out,
+                    )?;
+                    self.workers[li].accumulate(&g);
+                } else {
+                    let (g, gx) = exec::bwd_mid(
+                        self.eng,
+                        &self.man,
+                        &self.workers[li].theta,
+                        &x_in,
+                        &g_out,
+                    )?;
+                    self.workers[li].accumulate(&g);
+                    let prv = (s - 1, plan.prev_of(s, q));
+                    self.comm.send_boundary(
+                        prv,
+                        BoundaryTag::new(K_GRD, wave32, r0 as u32),
+                        Wire::F32(gx),
+                    )?;
+                }
+            }
+        }
+
+        // ---- strategy-owned gradient synchronization (FSDP) ----
+        let step64 = step as u64;
+        {
+            let TrainerCore { comm, strategy, workers, live: live_mask, .. } = self;
+            for w in workers.iter() {
+                if live_mask[w.replica] {
+                    strategy.offer_grads(comm, w, &live, step64)?;
+                }
+            }
+            for w in workers.iter_mut() {
+                if live_mask[w.replica] {
+                    strategy.sync_grads(comm, w, &live, step64)?;
+                }
+            }
+        }
+
+        // ---- inner optimizer ----
+        let lr_now = self.lr.at(step);
+        for li in 0..self.workers.len() {
+            if !self.live[self.workers[li].replica] {
+                continue; // dead column: no gradients, no update
+            }
+            let g = self.workers[li].take_mean_grad();
+            let w = &mut self.workers[li];
+            w.adam_t += 1;
+            let sc = AdamScalars::at(lr_now, w.adam_t, self.cfg.grad_clip);
+            let (kind, mut theta, mut m, mut v) = (
+                w.kind,
+                std::mem::take(&mut w.theta),
+                std::mem::take(&mut w.m),
+                std::mem::take(&mut w.v),
+            );
+            exec::adam_step(self.eng, kind, &mut theta, &mut m, &mut v, &g, sc)?;
+            let w = &mut self.workers[li];
+            w.theta = theta;
+            w.m = m;
+            w.v = v;
+        }
+
+        // Mean training loss in the seed's accumulation order.
+        let mut loss_sum = 0.0;
+        let mut loss_n = 0usize;
+        for wave in &losses {
+            for &r in &live {
+                if let Some(l) = wave[r] {
+                    loss_sum += l;
+                    loss_n += 1;
+                }
+            }
+        }
+        Ok(loss_sum / loss_n.max(1) as f64)
+    }
+
+    /// Outer optimizer step, fully delegated to the configured
+    /// [`SyncStrategy`](super::SyncStrategy): offer phase for every owned
+    /// live worker, then the fold/update phase. `outer_idx` is the
+    /// 1-based outer-step counter shared by both executors.
+    pub fn outer_step(&mut self, outer_idx: u64) -> Result<()> {
+        let live = self.live_replicas();
+        let TrainerCore { comm, strategy, workers, eng, live: live_mask, .. } = self;
+        for w in workers.iter() {
+            if live_mask[w.replica] {
+                strategy.offer_outer(comm, w, &live, outer_idx)?;
+            }
+        }
+        for w in workers.iter_mut() {
+            if live_mask[w.replica] {
+                strategy.apply_outer(comm, &mut **eng, w, &live, outer_idx)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Mean validation NLL over the fixed validation set, averaged across
+    /// the live replicas evaluated at owned last-stage workers (each
+    /// replica through its own fixed-route pipeline). Returns NaN for
+    /// owned workers that never see a loss (first/mid threaded stages).
+    pub fn validate(&mut self) -> Result<f64> {
+        // Standalone calls (tests / SimTrainer API) namespace their eval
+        // traffic past any step the schedule could produce.
+        self.validate_at(self.cfg.steps + 1)
+    }
+
+    #[allow(clippy::needless_range_loop)]
+    fn validate_at(&mut self, step: usize) -> Result<f64> {
+        let pp = self.pp();
+        let n_val = self.n_val;
+        // Eval boundary tags derive from the step so every worker agrees
+        // without coordination; 4096 batches per eval point is far above
+        // any configured n_val.
+        let slot0 = (step as u32 + 1).wrapping_mul(1 << 12);
+        let mut nlls: Vec<(usize, usize, f64)> = Vec::new();
+        for vb in 0..n_val {
+            let slot = slot0.wrapping_add(vb as u32);
+            for li in 0..self.workers.len() {
+                let (s, q) = (self.workers[li].stage, self.workers[li].replica);
+                if !self.live[q] {
+                    continue;
+                }
+                if pp == 1 {
+                    let toks = &self.val_batches[vb];
+                    let l =
+                        exec::loss_full(self.eng, &self.man, &self.workers[li].theta, toks)?;
+                    nlls.push((q, vb, l as f64));
+                } else if s == 0 {
+                    let toks = self.val_batches[vb].clone();
+                    let x =
+                        exec::fwd_first(self.eng, &self.man, &self.workers[li].theta, &toks)?;
+                    self.comm.send_boundary(
+                        (1, q),
+                        BoundaryTag::new(K_VACT, slot, q as u32),
+                        Wire::F32(x),
+                    )?;
+                    self.comm.send_boundary(
+                        (1, q),
+                        BoundaryTag::new(K_VTOK, slot, q as u32),
+                        Wire::I32(toks),
+                    )?;
+                } else {
+                    let act = self
+                        .comm
+                        .recv_boundary((s, q), BoundaryTag::new(K_VACT, slot, q as u32))?
+                        .into_f32();
+                    let toks = self
+                        .comm
+                        .recv_boundary((s, q), BoundaryTag::new(K_VTOK, slot, q as u32))?
+                        .into_i32();
+                    if s == pp - 1 {
+                        let l = exec::loss_last(
+                            self.eng,
+                            &self.man,
+                            &self.workers[li].theta,
+                            &act,
+                            &toks,
+                        )?;
+                        nlls.push((q, vb, l as f64));
+                    } else {
+                        let x =
+                            exec::fwd_mid(self.eng, &self.man, &self.workers[li].theta, &act)?;
+                        self.comm.send_boundary(
+                            (s + 1, q),
+                            BoundaryTag::new(K_VACT, slot, q as u32),
+                            Wire::F32(x),
+                        )?;
+                        self.comm.send_boundary(
+                            (s + 1, q),
+                            BoundaryTag::new(K_VTOK, slot, q as u32),
+                            Wire::I32(toks),
+                        )?;
+                    }
+                }
+            }
+        }
+        if nlls.is_empty() {
+            return Ok(f64::NAN);
+        }
+        // Seed accumulation order: replica-major, then batch.
+        nlls.sort_by_key(|&(r, b, _)| (r, b));
+        let n = nlls.len();
+        let sum: f64 = nlls.iter().map(|&(_, _, l)| l).sum();
+        Ok(sum / n as f64)
+    }
+
+    /// Cross-replica weight standard deviation (Fig. 3B / Fig. 4A):
+    /// per-stage σ over the live DP replicas' fast weights, averaged
+    /// across stages weighted by parameter count. Grid executor only —
+    /// a threaded worker cannot see its row peers, so it reports NaN.
+    pub fn weight_std(&self) -> f64 {
+        if !self.owns_grid() {
+            return f64::NAN;
+        }
+        let pp = self.pp();
+        let live = self.live_replicas();
+        if live.len() < 2 {
+            return 0.0;
+        }
+        let mut acc = 0.0;
+        let mut total = 0usize;
+        for s in 0..pp {
+            let tensors: Vec<Tensor> = live
+                .iter()
+                .map(|&r| {
+                    let w = &self.workers[self.widx(s, r)];
+                    Tensor::from_vec(w.theta.clone(), &[w.len()])
+                })
+                .collect();
+            let refs: Vec<&Tensor> = tensors.iter().collect();
+            let n = tensors[0].len();
+            acc += crate::tensor::replica_std(&refs) * n as f64;
+            total += n;
+        }
+        acc / total.max(1) as f64
+    }
+
+    /// Snapshot the whole worker grid (grid executor only).
+    pub fn checkpoint(&self, step: u64) -> Result<super::Checkpoint> {
+        if !self.owns_grid() {
+            bail!("checkpointing requires the grid executor (threaded workers own one worker)");
+        }
+        Ok(super::Checkpoint::capture(step, self.dp(), self.pp(), &self.workers))
+    }
+
+    /// Restore a snapshot into this grid; returns the snapshot's step.
+    pub fn restore(&mut self, ck: &super::Checkpoint) -> Result<u64> {
+        ck.restore(self.workers_mut())
+    }
+}

@@ -1,52 +1,69 @@
 //! Distributed training driver — the Layer-3 coordination contribution.
 //!
-//! Three training methods over a DP × PP worker grid (§2–3):
+//! The paper's observation is architectural: FSDP, DiLoCo and NoLoCo run
+//! the *same* inner loop and differ only in how replicas synchronize.
+//! This module is shaped accordingly — one training core, three methods,
+//! two executors:
 //!
-//! * **FSDP** — fully synchronous data parallel: gradients all-reduced
-//!   every inner step (the paper's upper baseline).
-//! * **DiLoCo** — m local Adam steps, then a Nesterov outer step over an
-//!   all-reduce of outer gradients (Douillard et al. 2023).
-//! * **NoLoCo** — m local Adam steps, then the modified-Nesterov gossip
-//!   step of Eq. 2–3 over *random pairs*: no collective, no global
-//!   barrier.
+//! * [`TrainerCore`] — the single generic inner-loop driver. Owns the
+//!   DP × PP grid walk with §3.1 random-permutation routing, Adam inner
+//!   steps, eval cadence and the churn-driven live-set logic.
+//! * [`SyncStrategy`] — what replicas exchange and how peer state folds
+//!   into the outer optimizer: [`FsdpSync`] (per-step gradient
+//!   all-reduce), [`DilocoSync`] (Nesterov outer step over an all-reduced
+//!   outer gradient), [`NolocoSync`] (the Eq. 2–3 modified-Nesterov
+//!   gossip step over random pairs — no collective, no global barrier).
+//!   NoLoCo's pair draw is itself pluggable via [`PairingPolicy`]:
+//!   [`UniformPairing`] (the paper's uniform draw) or
+//!   [`BandwidthAwarePairing`] (intra-region-biased pairs on a WAN, with
+//!   periodic uniform rounds preserving the mixing guarantee).
+//! * [`Communicator`] — how payloads move: [`AccountingComm`] hands
+//!   buffers over in memory and *accounts* the traffic (the deterministic
+//!   harness behind every convergence experiment), [`FabricComm`] sends
+//!   real tagged messages over the in-process [`crate::net::Fabric`]
+//!   (latency injection, gossip timeouts, the blocking studies).
 //!
-//! Plus the paper's §3.1 dynamic pipeline routing: each microbatch draws a
-//! fresh random permutation wiring stage-k replicas to stage-(k+1)
-//! replicas; the backward pass retraces the forward route.
+//! [`SimTrainer`] and [`ThreadedTrainer`] are thin constructors over
+//! `TrainerCore<AccountingComm>` (one core owning the whole grid) and
+//! `TrainerCore<FabricComm>` (one core per worker thread). Both return
+//! the same [`TrainReport`]. A new synchronization variant — streaming
+//! overlap, decoupled momentum, a new pairing bias — is one new trait
+//! impl, picked up by both executors at once.
 //!
-//! Two interchangeable executors run the same algorithm:
-//!
-//! * [`SimTrainer`] — single-threaded over one shared PJRT engine;
-//!   deterministic, used for every convergence experiment.
-//! * [`ThreadedTrainer`] — one OS thread + PJRT engine per worker,
-//!   communicating over the in-process [`crate::net::Fabric`]; used by the
-//!   end-to-end example and the blocking/latency studies.
-//!
-//! Both executors support *elastic membership* for NoLoCo: a
-//! [`crate::net::ChurnSchedule`] on the config drops / rejoins whole DP
-//! columns mid-run, with routing permutations and gossip pairings
-//! re-drawn over the live set. FSDP and DiLoCo abort on churn — their
-//! global all-reduce has no live-subset form (§5.3's no-global-barrier
-//! contrast, made measurable).
+//! Elastic membership: a [`crate::net::ChurnSchedule`] drops / rejoins
+//! whole DP columns mid-run. The strategy decides the response
+//! ([`ChurnResponse`]): NoLoCo re-pairs over survivors (a rejoiner
+//! bootstraps from a donor on the grid executor, or by absorbing a fresh
+//! gossip peer's slow weights over the fabric); FSDP / DiLoCo abort —
+//! their global all-reduce has no live-subset form (§5.3).
 //!
 //! All compute (fwd/bwd/Adam/outer updates) executes inside AOT-compiled
 //! XLA artifacts; this module only moves buffers and decides who talks to
 //! whom — exactly the paper's separation of concerns.
 
 mod checkpoint;
+mod comm;
+mod core;
 mod exec;
 mod sim;
 mod state;
+mod strategy;
 mod threaded;
 
 pub use checkpoint::Checkpoint;
+pub use comm::{AccountingComm, BoundaryTag, Communicator, FabricComm, Wire};
+pub use self::core::TrainerCore;
 pub use exec::{
     adam_step, bwd_first, bwd_full, bwd_last, bwd_mid, fwd_first, fwd_mid, init_stage,
     loss_full, loss_last, outer_diloco, outer_noloco, AdamScalars,
 };
 pub use sim::SimTrainer;
 pub use state::WorkerState;
-pub use threaded::{ThreadedReport, ThreadedTrainer};
+pub use strategy::{
+    for_config as strategy_for_config, BandwidthAwarePairing, ChurnResponse, CommPattern,
+    DilocoSync, FsdpSync, NolocoSync, PairingPolicy, SyncStrategy, UniformPairing,
+};
+pub use threaded::ThreadedTrainer;
 
 use anyhow::Result;
 
@@ -54,10 +71,20 @@ use crate::config::TrainConfig;
 use crate::metrics::RunTrace;
 use crate::runtime::{find_build, Engine};
 
-/// Communication accounting (what *would* cross the network).
+/// Communication accounting, unified across executors.
+///
+/// The *logical* counters (`floats_sent`, `activation_hops`,
+/// `blocking_collectives`, `pair_exchanges`) keep the seed semantics:
+/// training-path payload elements, counted once per hop / row collective
+/// / symmetric pair. The *wire* counters (`bytes_sent`, `msgs_sent`)
+/// meter everything shipped — tokens and validation traffic included —
+/// and agree between executors: the grid executor models the same
+/// messages the fabric actually sends (tree-edge collectives, eager
+/// gossip pairs, per-boundary activations + tokens).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct CommStats {
-    /// Total f32 payload elements shipped (activations + grads + sync).
+    /// Total f32 payload elements shipped on the training path
+    /// (activations + grads + sync).
     pub floats_sent: u64,
     /// Point-to-point activation/gradient hops between pipeline stages.
     pub activation_hops: u64,
@@ -66,30 +93,60 @@ pub struct CommStats {
     pub blocking_collectives: u64,
     /// NoLoCo gossip pair exchanges.
     pub pair_exchanges: u64,
+    /// Total wire bytes shipped (all payload kinds).
+    pub bytes_sent: u64,
+    /// Total messages shipped.
+    pub msgs_sent: u64,
 }
 
 impl CommStats {
-    /// Payload in MiB, assuming 4-byte floats.
+    /// Wire payload in MiB. Falls back to the logical f32 counter (4
+    /// bytes per element) when no wire metering happened — which keeps
+    /// the value comparable across executors either way.
     pub fn mib_sent(&self) -> f64 {
-        self.floats_sent as f64 * 4.0 / (1024.0 * 1024.0)
+        let bytes = if self.bytes_sent > 0 {
+            self.bytes_sent as f64
+        } else {
+            self.floats_sent as f64 * 4.0
+        };
+        bytes / (1024.0 * 1024.0)
+    }
+
+    /// Fold another worker's counters into this one (threaded
+    /// aggregation). The once-per-row / once-per-pair counting rules make
+    /// the sum across workers equal the grid executor's totals.
+    pub fn absorb(&mut self, other: &CommStats) {
+        self.floats_sent += other.floats_sent;
+        self.activation_hops += other.activation_hops;
+        self.blocking_collectives += other.blocking_collectives;
+        self.pair_exchanges += other.pair_exchanges;
+        self.bytes_sent += other.bytes_sent;
+        self.msgs_sent += other.msgs_sent;
     }
 }
 
-/// Result of a training run.
+/// Result of a training run — one shape for both executors.
 #[derive(Clone, Debug)]
 pub struct TrainReport {
     /// Final validation loss (mean NLL, nats).
     pub final_val_nll: f64,
     /// Final validation perplexity (Table 2's metric).
     pub final_val_ppl: f64,
-    /// Per-eval-point series (loss / PPL / weight-σ / LR curves).
+    /// Per-eval-point series (loss / PPL / weight-σ / LR curves). The
+    /// threaded executor reports NaN weight-σ (a worker cannot see its
+    /// row peers).
     pub trace: RunTrace,
-    /// Communication accounting.
+    /// Mean training loss per inner step (NaN for steps every reporting
+    /// replica sat out under churn).
+    pub step_train_loss: Vec<f64>,
+    /// Communication accounting ([`CommStats`]).
     pub comm: CommStats,
     /// Wall-clock seconds.
     pub wall_secs: f64,
-    /// PJRT executions issued.
+    /// PJRT executions issued (summed across worker engines).
     pub executions: u64,
+    /// Which executor produced the report ("sim" / "threaded").
+    pub executor: &'static str,
 }
 
 /// Convenience: resolve artifacts, build an engine, run [`SimTrainer`].
@@ -103,14 +160,48 @@ pub fn run_sim(cfg: &TrainConfig) -> Result<TrainReport> {
     SimTrainer::new(cfg.clone(), &mut eng)?.run()
 }
 
+/// Convenience sibling of [`run_sim`]: run [`ThreadedTrainer`] (one OS
+/// thread + engine per worker over the message fabric) and return the
+/// same unified [`TrainReport`].
+pub fn run_threaded(cfg: &TrainConfig) -> Result<TrainReport> {
+    ThreadedTrainer::new(cfg.clone()).run()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn comm_stats_mib() {
+    fn comm_stats_mib_prefers_wire_bytes() {
+        let c = CommStats { bytes_sent: 4 * 1024 * 1024, ..Default::default() };
+        assert!((c.mib_sent() - 4.0).abs() < 1e-12);
+        // Logical fallback when no wire metering happened.
         let c = CommStats { floats_sent: 1024 * 1024, ..Default::default() };
         assert!((c.mib_sent() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comm_stats_absorb_sums_fields() {
+        let mut a = CommStats {
+            floats_sent: 1,
+            activation_hops: 2,
+            blocking_collectives: 3,
+            pair_exchanges: 4,
+            bytes_sent: 5,
+            msgs_sent: 6,
+        };
+        a.absorb(&a.clone());
+        assert_eq!(
+            a,
+            CommStats {
+                floats_sent: 2,
+                activation_hops: 4,
+                blocking_collectives: 6,
+                pair_exchanges: 8,
+                bytes_sent: 10,
+                msgs_sent: 12,
+            }
+        );
     }
 
     #[test]

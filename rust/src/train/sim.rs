@@ -1,621 +1,115 @@
-//! Single-process training driver.
+//! Single-process training driver — a thin constructor over
+//! [`TrainerCore`] with the [`AccountingComm`] communicator.
 //!
-//! Runs the full DP × PP grid synchronously in one thread, sharing one
-//! PJRT [`Engine`]: the de-facto harness for the paper's convergence
-//! experiments (Tables 2–3, Figs. 2–4), where wall-clock parallelism is
-//! irrelevant (one CPU core) but *trajectory fidelity* is everything. The
-//! threaded driver ([`super::threaded`]) runs the same algorithm over real
-//! threads + the message fabric and is used by the end-to-end example and
-//! the latency work.
+//! One core owns the full DP × PP grid over one shared PJRT [`Engine`]:
+//! the de-facto harness for the paper's convergence experiments (Tables
+//! 2–3, Figs. 2–4), where wall-clock parallelism is irrelevant (one CPU
+//! core) but *trajectory fidelity* is everything. Communication is
+//! accounted (not transported): boundary payloads hand over through the
+//! in-memory mailbox while [`CommStats`](super::CommStats) records what
+//! would cross the network, which the latency analysis (Fig. 5) combines
+//! with the [`crate::net::SimClock`] latency model.
 //!
-//! Communication is accounted (not transported): every all-reduce /
-//! gossip exchange increments [`CommStats`] with the payload it *would*
-//! ship, which the latency analysis (Fig. 5) combines with the
-//! [`crate::net::SimClock`] latency model.
+//! The synchronization behaviour (FSDP / DiLoCo / NoLoCo) lives entirely
+//! in the shared [`SyncStrategy`](super::SyncStrategy) impls — the same
+//! code the threaded executor runs.
 
-use anyhow::{ensure, Context, Result};
+use anyhow::Result;
 
-use crate::config::{Method, TrainConfig};
-use crate::data::Loader;
-use crate::metrics::{perplexity, RunTrace};
-use crate::model::StageKind;
+use crate::config::TrainConfig;
 use crate::net::topo::ChurnEvent;
-use crate::optim::LrSchedule;
-use crate::rngx::Pcg64;
-use crate::routing::RoutePlan;
 use crate::runtime::{Engine, Manifest};
-use crate::tensor::Tensor;
 
-use super::exec::{self, AdamScalars};
+use super::comm::AccountingComm;
+use super::core::TrainerCore;
 use super::state::WorkerState;
 use super::{CommStats, TrainReport};
 
 /// Single-threaded DP × PP trainer over one shared engine.
 pub struct SimTrainer<'e> {
-    cfg: TrainConfig,
-    eng: &'e mut Engine,
-    man: Manifest,
-    /// Worker grid, indexed `stage * dp + replica`.
-    workers: Vec<WorkerState>,
-    loaders: Vec<Loader>,
-    /// Pre-drawn validation token batches (shared by every replica).
-    val_batches: Vec<Vec<i32>>,
-    lr: LrSchedule,
-    comm: CommStats,
-    trace: RunTrace,
-    /// Global microbatch counter (routing seed input).
-    mb_counter: u64,
-    /// Microbatches per replica per step.
-    num_mb: usize,
-    /// Elastic membership: which DP columns (all stages of a replica) are
-    /// currently live. Driven by `cfg.churn` or [`SimTrainer::apply_churn`].
-    live: Vec<bool>,
+    core: TrainerCore<'e, AccountingComm>,
 }
 
 impl<'e> SimTrainer<'e> {
     /// Build the worker grid: identical per-stage init across replicas
     /// (φ₀,ᵢ ≡ φ₀), sharded loaders, pre-drawn validation set.
     pub fn new(cfg: TrainConfig, eng: &'e mut Engine) -> Result<SimTrainer<'e>> {
-        cfg.validate().map_err(anyhow::Error::msg)?;
-        let man = eng.manifest()?;
-        man.check_against(&cfg.model, cfg.topology.pp)?;
-        let (dp, pp) = (cfg.topology.dp, cfg.topology.pp);
-
-        // Per-replica microbatching: the global batch is split across DP,
-        // then walked in manifest-sized microbatches.
-        let per_replica_seqs = (cfg.model.batch_tokens / cfg.model.seq_len / dp).max(1);
-        ensure!(
-            per_replica_seqs >= man.mb,
-            "per-replica batch ({per_replica_seqs} seqs) smaller than artifact microbatch ({}); \
-             lower dp or rebuild artifacts with a smaller mb",
-            man.mb
-        );
-        let num_mb = per_replica_seqs / man.mb;
-
-        // Shared init per stage: seed depends on the stage only.
-        let mut workers = Vec::with_capacity(dp * pp);
-        for s in 0..pp {
-            let kind = StageKind::of_stage(s, pp);
-            let init = exec::init_stage(eng, kind, (cfg.seed as i32) ^ (s as i32 * 7901))
-                .with_context(|| format!("initializing stage {s}"))?;
-            for r in 0..dp {
-                workers.push(WorkerState::new(s, r, kind, init.clone(), cfg.outer.method));
-            }
-        }
-        let loaders: Vec<Loader> = (0..dp)
-            .map(|r| {
-                Loader::train(
-                    cfg.dataset,
-                    cfg.model.vocab,
-                    cfg.seed,
-                    r,
-                    dp,
-                    cfg.model.seq_len,
-                    num_mb * man.mb,
-                )
-            })
-            .collect();
-
-        // Validation set: fixed token batches drawn once.
-        let val_seqs = (cfg.eval_tokens / cfg.model.seq_len).max(man.mb);
-        let mut val_loader = Loader::validation(
-            cfg.dataset,
-            cfg.model.vocab,
-            cfg.seed ^ 0x5eed,
-            cfg.model.seq_len,
-            man.mb,
-        );
-        let n_val_batches = (val_seqs / man.mb).max(1);
-        let val_batches: Vec<Vec<i32>> = (0..n_val_batches)
-            .map(|_| {
-                val_loader
-                    .next_batch()
-                    .tokens
-                    .iter()
-                    .map(|&t| t as i32)
-                    .collect()
-            })
-            .collect();
-
-        let lr = LrSchedule {
-            peak: cfg.model.inner_lr,
-            warmup: cfg.warmup,
-            total: cfg.steps,
-            floor_frac: cfg.lr_floor,
-        };
-        Ok(SimTrainer {
-            live: vec![true; dp],
-            cfg,
-            eng,
-            man,
-            workers,
-            loaders,
-            val_batches,
-            lr,
-            comm: CommStats::default(),
-            trace: RunTrace::default(),
-            mb_counter: 0,
-            num_mb,
-        })
-    }
-
-    fn dp(&self) -> usize {
-        self.cfg.topology.dp
-    }
-
-    fn pp(&self) -> usize {
-        self.cfg.topology.pp
-    }
-
-    fn widx(&self, stage: usize, replica: usize) -> usize {
-        stage * self.dp() + replica
+        Ok(SimTrainer { core: TrainerCore::new_grid(cfg, eng, AccountingComm::new())? })
     }
 
     /// Currently live DP replicas, ascending.
     pub fn live_replicas(&self) -> Vec<usize> {
-        (0..self.dp()).filter(|&r| self.live[r]).collect()
+        self.core.live_replicas()
     }
 
     /// Whether DP replica `r` is currently live.
     pub fn is_live(&self, r: usize) -> bool {
-        self.live[r]
+        self.core.is_live(r)
     }
 
     /// Apply one membership event (a whole DP column across all stages).
-    ///
-    /// Only NoLoCo supports this: its gossip pairing and routing
-    /// permutations re-draw over the live set, so training continues
-    /// without any global coordination. FSDP / DiLoCo synchronize through
-    /// a world-wide all-reduce that has no live-subset form, so a
-    /// membership change aborts the run — the measurable shape of the
-    /// paper's no-global-barrier claim (§5.3).
+    /// The configured strategy decides: NoLoCo repairs, FSDP / DiLoCo
+    /// abort (see [`TrainerCore::apply_churn`]).
     pub fn apply_churn(&mut self, event: ChurnEvent) -> Result<()> {
-        ensure!(
-            self.cfg.outer.method == Method::NoLoCo,
-            "{} cannot change membership mid-run: its global all-reduce has no \
-             live-subset form; only NoLoCo's gossip re-pairs over survivors ({event:?})",
-            self.cfg.outer.method
-        );
-        let r = event.node();
-        ensure!(r < self.dp(), "churn event for replica {r} outside dp = {}", self.dp());
-        match event {
-            ChurnEvent::Leave(_) => {
-                self.live[r] = false;
-                ensure!(self.live.iter().any(|&l| l), "all replicas left the run");
-            }
-            ChurnEvent::Join(_) => {
-                if !self.live[r] {
-                    self.live[r] = true;
-                    self.reseed_replica(r);
-                }
-            }
-        }
-        Ok(())
-    }
-
-    /// Bootstrap a joining replica: copy the slow weights φ from the
-    /// lowest live donor in each stage row (the freshest consensus state),
-    /// reset θ to φ and zero the Adam moments and outer momentum. Without
-    /// a donor (solo rejoin) the replica resumes from its own last state.
-    fn reseed_replica(&mut self, r: usize) {
-        let dp = self.dp();
-        let donor = (0..dp).find(|&d| d != r && self.live[d]);
-        for s in 0..self.pp() {
-            let i = self.widx(s, r);
-            if let Some(d) = donor {
-                let phi = self.workers[self.widx(s, d)].phi.clone();
-                self.workers[i].phi = phi;
-            }
-            let w = &mut self.workers[i];
-            let n = w.len();
-            w.reset_theta_to_phi();
-            w.m = vec![0.0; n];
-            w.v = vec![0.0; n];
-            w.adam_t = 0;
-            w.delta = vec![0.0; n];
-            w.grad_acc = vec![0.0; n];
-            w.acc_count = 0;
-        }
+        self.core.apply_churn(event)
     }
 
     /// Run the configured number of inner steps; returns the report.
     pub fn run(&mut self) -> Result<TrainReport> {
-        let start = std::time::Instant::now();
-        let exec0 = self.eng.executions();
-        let mut last_val = f64::NAN;
-        for step in 0..self.cfg.steps {
-            let due: Vec<ChurnEvent> = self.cfg.churn.events_at(step as u64).collect();
-            for event in due {
-                self.apply_churn(event)?;
-            }
-            let train_loss = self.inner_step(step)?;
-            let outer_due = self.cfg.outer.method != Method::Fsdp
-                && (step + 1) % self.cfg.outer.inner_steps == 0;
-            if outer_due {
-                let outer_idx = (step + 1) / self.cfg.outer.inner_steps;
-                self.outer_step(outer_idx as u64)?;
-            }
-            let eval_due = self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0;
-            if eval_due || step + 1 == self.cfg.steps {
-                last_val = self.validate()?;
-                let wstd = self.weight_std();
-                self.trace
-                    .push(step + 1, train_loss, last_val, wstd, self.lr.at(step));
-            }
-        }
-        Ok(TrainReport {
-            final_val_nll: last_val,
-            final_val_ppl: perplexity(last_val),
-            trace: std::mem::take(&mut self.trace),
-            comm: self.comm.clone(),
-            wall_secs: start.elapsed().as_secs_f64(),
-            executions: self.eng.executions() - exec0,
-        })
+        self.core.run()
     }
 
-    /// One inner optimizer step: route + fwd/bwd every replica's
-    /// microbatches, then Adam on every worker (FSDP all-reduces first).
+    /// One inner optimizer step (see [`TrainerCore::inner_step`]).
     /// Returns the mean training loss across microbatches.
     pub fn inner_step(&mut self, step: usize) -> Result<f64> {
-        let (dp, pp) = (self.dp(), self.pp());
-        let mb_toks = self.man.mb * self.man.seq_len;
-        let mut loss_sum = 0.0;
-        let mut loss_n = 0usize;
-
-        // One route plan per microbatch *wave*: all live DP paths of a
-        // wave share a permutation (Fig. 1A) — exactly what the threaded
-        // executor derives independently on each worker. Dead columns
-        // neither load data nor appear on any path.
-        let live: Vec<usize> = self.live_replicas();
-        let batches: Vec<Option<Vec<i32>>> = (0..dp)
-            .map(|r| {
-                self.live[r].then(|| {
-                    self.loaders[r]
-                        .next_batch()
-                        .tokens
-                        .iter()
-                        .map(|&t| t as i32)
-                        .collect()
-                })
-            })
-            .collect();
-        for mb in 0..self.num_mb {
-            let plan = RoutePlan::for_step_over(
-                self.cfg.routing,
-                &live,
-                dp,
-                pp,
-                self.cfg.seed ^ 0x0a17,
-                self.mb_counter,
-            );
-            self.mb_counter += 1;
-            for &r in &live {
-                let batch = batches[r].as_ref().expect("live replica has a batch");
-                let toks = &batch[mb * mb_toks..(mb + 1) * mb_toks];
-                let loss = self.run_microbatch(&plan, r, toks)?;
-                loss_sum += loss as f64;
-                loss_n += 1;
-            }
-        }
-
-        // FSDP: all-reduce the mean gradient across each stage row before
-        // the (then-identical) Adam updates.
-        if self.cfg.outer.method == Method::Fsdp && dp > 1 {
-            self.allreduce_grads();
-        }
-
-        let sc = AdamScalars::at(self.lr.at(step), step as u64 + 1, self.cfg.grad_clip);
-        for i in 0..self.workers.len() {
-            if !self.live[i % dp] {
-                continue; // dead column: no gradients, no update
-            }
-            let g = self.workers[i].take_mean_grad();
-            let w = &mut self.workers[i];
-            w.adam_t += 1;
-            let (kind, mut theta, mut m, mut v) = (
-                w.kind,
-                std::mem::take(&mut w.theta),
-                std::mem::take(&mut w.m),
-                std::mem::take(&mut w.v),
-            );
-            exec::adam_step(self.eng, kind, &mut theta, &mut m, &mut v, &g, sc)?;
-            let w = &mut self.workers[i];
-            w.theta = theta;
-            w.m = m;
-            w.v = v;
-        }
-        Ok(loss_sum / loss_n.max(1) as f64)
+        self.core.inner_step(step)
     }
 
-    /// Forward + backward one microbatch along its route; accumulates
-    /// gradients into every worker on the path. Returns the loss.
-    fn run_microbatch(&mut self, plan: &RoutePlan, r0: usize, toks: &[i32]) -> Result<f32> {
-        let pp = self.pp();
-        if pp == 1 {
-            let i = self.widx(0, r0);
-            let theta = std::mem::take(&mut self.workers[i].theta);
-            let (loss, g) = exec::bwd_full(self.eng, &self.man, &theta, toks)?;
-            self.workers[i].theta = theta;
-            self.workers[i].accumulate(&g);
-            return Ok(loss);
-        }
-
-        let path = plan.path_from(r0);
-        // ---- forward: record each stage's input ----
-        let mut stage_inputs: Vec<Vec<f32>> = Vec::with_capacity(pp);
-        let i0 = self.widx(0, path[0]);
-        let theta0 = std::mem::take(&mut self.workers[i0].theta);
-        let mut x = exec::fwd_first(self.eng, &self.man, &theta0, toks)?;
-        self.workers[i0].theta = theta0;
-        self.comm.activation_hops += 1;
-        self.comm.floats_sent += x.len() as u64;
-        for s in 1..pp - 1 {
-            let i = self.widx(s, path[s]);
-            let theta = std::mem::take(&mut self.workers[i].theta);
-            stage_inputs.push(std::mem::take(&mut x));
-            x = exec::fwd_mid(self.eng, &self.man, &theta, stage_inputs.last().unwrap())?;
-            self.workers[i].theta = theta;
-            self.comm.activation_hops += 1;
-            self.comm.floats_sent += x.len() as u64;
-        }
-
-        // ---- last stage: loss + backward ----
-        let il = self.widx(pp - 1, path[pp - 1]);
-        let theta_l = std::mem::take(&mut self.workers[il].theta);
-        let (loss, g_last, mut gx) = exec::bwd_last(self.eng, &self.man, &theta_l, &x, toks)?;
-        self.workers[il].theta = theta_l;
-        self.workers[il].accumulate(&g_last);
-        self.comm.activation_hops += 1;
-        self.comm.floats_sent += gx.len() as u64;
-
-        // ---- backward through interior stages (reverse route) ----
-        for s in (1..pp - 1).rev() {
-            let i = self.widx(s, path[s]);
-            let theta = std::mem::take(&mut self.workers[i].theta);
-            let x_in = &stage_inputs[s - 1];
-            let (g_mid, gx_new) = exec::bwd_mid(self.eng, &self.man, &theta, x_in, &gx)?;
-            self.workers[i].theta = theta;
-            self.workers[i].accumulate(&g_mid);
-            gx = gx_new;
-            self.comm.activation_hops += 1;
-            self.comm.floats_sent += gx.len() as u64;
-        }
-
-        // ---- first stage backward ----
-        let theta0 = std::mem::take(&mut self.workers[i0].theta);
-        let g_first = exec::bwd_first(self.eng, &self.man, &theta0, toks, &gx)?;
-        self.workers[i0].theta = theta0;
-        self.workers[i0].accumulate(&g_first);
-        Ok(loss)
-    }
-
-    /// Host-side mean all-reduce of accumulated gradients across each
-    /// stage row (the FSDP baseline's per-step synchronization).
-    fn allreduce_grads(&mut self) {
-        let (dp, pp) = (self.dp(), self.pp());
-        for s in 0..pp {
-            let n = self.workers[self.widx(s, 0)].grad_acc.len();
-            let mut mean = vec![0.0f32; n];
-            for r in 0..dp {
-                let w = &self.workers[self.widx(s, r)];
-                for (m, g) in mean.iter_mut().zip(&w.grad_acc) {
-                    *m += g / dp as f32;
-                }
-            }
-            for r in 0..dp {
-                let i = self.widx(s, r);
-                self.workers[i].grad_acc.copy_from_slice(&mean);
-            }
-            // Tree all-reduce cost: every edge carries the payload twice
-            // (reduce up + broadcast down).
-            self.comm.blocking_collectives += 1;
-            self.comm.floats_sent += 2 * (dp as u64 - 1) * n as u64;
-        }
-    }
-
-    /// Outer optimizer step (DiLoCo all-reduce or NoLoCo gossip pairs).
-    /// `outer_idx` is the 1-based outer-step counter; gossip pairings are
-    /// derived from `(seed, stage, outer_idx)` exactly as the threaded
-    /// executor derives them, so the two executors follow identical
-    /// trajectories given identical inputs.
+    /// Outer optimizer step, delegated to the configured
+    /// [`SyncStrategy`](super::SyncStrategy). `outer_idx` is the 1-based
+    /// outer-step counter shared with the threaded executor, so the two
+    /// follow identical trajectories given identical inputs.
     pub fn outer_step(&mut self, outer_idx: u64) -> Result<()> {
-        let (dp, pp) = (self.dp(), self.pp());
-        match self.cfg.outer.method {
-            Method::Fsdp => {}
-            Method::DiLoCo => {
-                let (alpha, beta) = (self.cfg.outer.alpha as f32, self.cfg.outer.beta as f32);
-                for s in 0..pp {
-                    // Mean outer gradient across the row (all-reduce).
-                    let n = self.workers[self.widx(s, 0)].len();
-                    let mut dmean = vec![0.0f32; n];
-                    for r in 0..dp {
-                        let d = self.workers[self.widx(s, r)].outer_grad();
-                        for (m, x) in dmean.iter_mut().zip(&d) {
-                            *m += x / dp as f32;
-                        }
-                    }
-                    self.comm.blocking_collectives += 1;
-                    self.comm.floats_sent += 2 * (dp as u64 - 1) * n as u64;
-                    for r in 0..dp {
-                        let i = self.widx(s, r);
-                        let w = &mut self.workers[i];
-                        let (kind, mut phi, mut delta) = (
-                            w.kind,
-                            std::mem::take(&mut w.phi),
-                            std::mem::take(&mut w.delta),
-                        );
-                        exec::outer_diloco(self.eng, kind, &mut phi, &mut delta, &dmean, alpha, beta)?;
-                        let w = &mut self.workers[i];
-                        w.phi = phi;
-                        w.delta = delta;
-                        w.reset_theta_to_phi();
-                    }
-                }
-            }
-            Method::NoLoCo => {
-                let (alpha, beta, gamma) = (
-                    self.cfg.outer.alpha as f32,
-                    self.cfg.outer.beta as f32,
-                    self.cfg.outer.gamma as f32,
-                );
-                let group_size = self.cfg.outer.group;
-                let live = self.live_replicas();
-                for s in 0..pp {
-                    // Fresh random disjoint groups over the *live* columns
-                    // per stage row per outer step (§3.2: "for each
-                    // iteration we update the local subgroup"; the paper
-                    // uses the minimum size, 2). Shared-seed derivation
-                    // matches train::threaded so no coordination is
-                    // needed there; with full membership the draw is
-                    // identical to the static-grid one.
-                    let mut prng = Pcg64::seed_from_u64(
-                        self.cfg.seed ^ 0x9055 ^ ((s as u64) << 40) ^ outer_idx,
-                    );
-                    let groups: Vec<Vec<usize>> = prng
-                        .random_groups(live.len(), group_size)
-                        .into_iter()
-                        .map(|g| g.into_iter().map(|i| live[i]).collect())
-                        .collect();
-                    for group in groups {
-                        let gn = group.len();
-                        let n = self.workers[self.widx(s, group[0])].len();
-                        // Group sums of Δ and φ (what members gossip).
-                        let mut dsum = vec![0.0f32; n];
-                        let mut psum = vec![0.0f32; n];
-                        for &r in &group {
-                            let w = &self.workers[self.widx(s, r)];
-                            let d = w.outer_grad();
-                            for (a, x) in dsum.iter_mut().zip(&d) {
-                                *a += x;
-                            }
-                            for (a, x) in psum.iter_mut().zip(&w.phi) {
-                                *a += x;
-                            }
-                        }
-                        if gn > 1 {
-                            // Each member ships (Δ, φ) to each other member
-                            // (for n=2: one symmetric pair exchange).
-                            self.comm.pair_exchanges += (gn * (gn - 1) / 2) as u64;
-                            self.comm.floats_sent += (gn * (gn - 1) * 2 * n) as u64;
-                        }
-                        for &r in &group {
-                            let i = self.widx(s, r);
-                            let w = &mut self.workers[i];
-                            let (kind, mut phi, mut delta) = (
-                                w.kind,
-                                std::mem::take(&mut w.phi),
-                                std::mem::take(&mut w.delta),
-                            );
-                            exec::outer_noloco(
-                                self.eng, kind, &mut phi, &mut delta, &dsum, &psum, alpha,
-                                beta, gamma, 1.0 / gn as f32,
-                            )?;
-                            let w = &mut self.workers[i];
-                            w.phi = phi;
-                            w.delta = delta;
-                            w.reset_theta_to_phi();
-                        }
-                    }
-                }
-            }
-        }
-        Ok(())
+        self.core.outer_step(outer_idx)
     }
 
     /// Mean validation NLL over the fixed validation set, averaged across
     /// the *live* replicas (each evaluated through its own fixed-route
     /// pipeline).
     pub fn validate(&mut self) -> Result<f64> {
-        let (dp, pp) = (self.dp(), self.pp());
-        let mut sum = 0.0;
-        let mut n = 0usize;
-        let batches = self.val_batches.clone();
-        for r in 0..dp {
-            if !self.live[r] {
-                continue;
-            }
-            for toks in &batches {
-                let nll = if pp == 1 {
-                    let i = self.widx(0, r);
-                    let theta = std::mem::take(&mut self.workers[i].theta);
-                    let l = exec::loss_full(self.eng, &self.man, &theta, toks)?;
-                    self.workers[i].theta = theta;
-                    l
-                } else {
-                    // Fixed route r -> r -> … for evaluation.
-                    let i0 = self.widx(0, r);
-                    let theta0 = std::mem::take(&mut self.workers[i0].theta);
-                    let mut x = exec::fwd_first(self.eng, &self.man, &theta0, toks)?;
-                    self.workers[i0].theta = theta0;
-                    for s in 1..pp - 1 {
-                        let i = self.widx(s, r);
-                        let theta = std::mem::take(&mut self.workers[i].theta);
-                        x = exec::fwd_mid(self.eng, &self.man, &theta, &x)?;
-                        self.workers[i].theta = theta;
-                    }
-                    let il = self.widx(pp - 1, r);
-                    let theta_l = std::mem::take(&mut self.workers[il].theta);
-                    let l = exec::loss_last(self.eng, &self.man, &theta_l, &x, toks)?;
-                    self.workers[il].theta = theta_l;
-                    l
-                };
-                sum += nll as f64;
-                n += 1;
-            }
-        }
-        Ok(sum / n as f64)
+        self.core.validate()
     }
 
-    /// Cross-replica weight standard deviation (Fig. 3B / Fig. 4A):
-    /// per-stage σ over the *live* DP replicas' fast weights, averaged
-    /// across stages weighted by parameter count.
+    /// Cross-replica weight standard deviation (Fig. 3B / Fig. 4A).
     pub fn weight_std(&self) -> f64 {
-        let pp = self.pp();
-        let live = self.live_replicas();
-        if live.len() < 2 {
-            return 0.0;
-        }
-        let mut acc = 0.0;
-        let mut total = 0usize;
-        for s in 0..pp {
-            let tensors: Vec<Tensor> = live
-                .iter()
-                .map(|&r| {
-                    let w = &self.workers[self.widx(s, r)];
-                    Tensor::from_vec(w.theta.clone(), &[w.len()])
-                })
-                .collect();
-            let refs: Vec<&Tensor> = tensors.iter().collect();
-            let n = tensors[0].len();
-            acc += crate::tensor::replica_std(&refs) * n as f64;
-            total += n;
-        }
-        acc / total.max(1) as f64
+        self.core.weight_std()
     }
 
     /// Immutable access to a worker (tests / inspection).
     pub fn worker(&self, stage: usize, replica: usize) -> &WorkerState {
-        &self.workers[stage * self.dp() + replica]
+        self.core.worker(stage, replica)
     }
 
     /// Snapshot the whole worker grid (see [`super::Checkpoint`]).
     pub fn checkpoint(&self, step: u64) -> super::Checkpoint {
-        super::Checkpoint::capture(step, self.dp(), self.pp(), &self.workers)
+        self.core
+            .checkpoint(step)
+            .expect("the grid executor always owns the full grid")
     }
 
     /// Restore a snapshot into this grid; returns the snapshot's step.
     /// Loader cursors are not part of the snapshot (see checkpoint docs).
     pub fn restore(&mut self, ck: &super::Checkpoint) -> Result<u64> {
-        ck.restore(&mut self.workers)
+        self.core.restore(ck)
     }
 
     /// Current communication accounting.
     pub fn comm(&self) -> &CommStats {
-        &self.comm
+        self.core.comm_stats()
     }
 
     /// The manifest this trainer is bound to.
     pub fn manifest(&self) -> &Manifest {
-        &self.man
+        self.core.manifest()
     }
 }

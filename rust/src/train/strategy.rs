@@ -1,0 +1,731 @@
+//! The [`SyncStrategy`] abstraction: *what* replicas exchange and how
+//! peer state folds into the outer optimizer.
+//!
+//! The paper's three methods differ only here — FSDP all-reduces
+//! gradients every inner step, DiLoCo all-reduces outer gradients every m
+//! steps, NoLoCo gossips `(Δ, φ)` over random pairs — so each is one impl
+//! of this trait, shared verbatim by both executors through the
+//! [`Communicator`](super::Communicator) abstraction. A new
+//! synchronization variant (streaming overlap, decoupled momentum à la
+//! DeMo, …) is one new impl, not two new trainer forks.
+//!
+//! Every synchronization point is two-phase (see [`super::comm`]): the
+//! core calls `offer_*` for each locally-owned live worker, then the
+//! matching fold. On the grid executor the offer phase publishes the
+//! whole row before any fold reads it; on the threaded executor each
+//! worker offers (eagerly sending) and folds only for itself.
+//!
+//! [`NolocoSync`] draws its gossip groups through a [`PairingPolicy`]:
+//! [`UniformPairing`] reproduces the seed's shared-seed draw bit-for-bit,
+//! and [`BandwidthAwarePairing`] biases pairs toward cheap intra-region
+//! links on a [`Topology`] while keeping the mixing guarantee with
+//! periodic uniform rounds (selectable via
+//! [`PairingMode`](crate::config::PairingMode) / `--pairing`).
+
+use anyhow::Result;
+
+use crate::config::{Method, OuterConfig, PairingMode, TrainConfig};
+use crate::net::{ChurnSchedule, Topology};
+use crate::rngx::Pcg64;
+use crate::runtime::Engine;
+
+use super::comm::Communicator;
+use super::exec;
+use super::state::WorkerState;
+
+/// What a method's synchronization point exchanges (§2–3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommPattern {
+    /// Globally blocking collective (FSDP gradients, DiLoCo outer step).
+    AllReduce,
+    /// Random disjoint gossip groups — no collective, no global barrier.
+    GossipPairs,
+    /// No cross-replica exchange (dp = 1 degenerate runs).
+    None,
+}
+
+/// How a method responds to a membership change mid-run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChurnResponse {
+    /// Abort: a world-wide collective has no live-subset form (§5.3).
+    Abort,
+    /// Keep training: routing and gossip re-draw over the live set; a
+    /// rejoiner bootstraps from a donor (grid executor) or by absorbing
+    /// its first gossip peer's slow weights (threaded executor).
+    Repair,
+}
+
+/// One training method's synchronization behaviour, shared by both
+/// executors. Implementations must be deterministic given
+/// `(seed, stage, step/outer_idx, live)` — the shared-seed discipline
+/// that lets threaded workers agree without coordination traffic.
+pub trait SyncStrategy: Send {
+    /// Method name for reports.
+    fn name(&self) -> &'static str;
+
+    /// What the outer synchronization exchanges.
+    fn pattern(&self) -> CommPattern;
+
+    /// Whether the method runs an outer step at all (false for FSDP).
+    fn has_outer(&self) -> bool;
+
+    /// Abort vs. repair on membership events.
+    fn churn_response(&self) -> ChurnResponse;
+
+    /// Per-inner-step gradient sync, phase 1: publish this worker's raw
+    /// accumulated gradient sums. Only FSDP does work here.
+    fn offer_grads(
+        &mut self,
+        _comm: &mut dyn Communicator,
+        _w: &WorkerState,
+        _live: &[usize],
+        _step: u64,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    /// Per-inner-step gradient sync, phase 2: fold the stage row's
+    /// gradients into this worker's accumulator (before the Adam step).
+    fn sync_grads(
+        &mut self,
+        _comm: &mut dyn Communicator,
+        _w: &mut WorkerState,
+        _live: &[usize],
+        _step: u64,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    /// Outer step, phase 1: publish this worker's `(Δ, φ)` (or outer
+    /// gradient) for round `outer_idx`.
+    fn offer_outer(
+        &mut self,
+        _comm: &mut dyn Communicator,
+        _w: &WorkerState,
+        _live: &[usize],
+        _outer_idx: u64,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    /// Outer step, phase 2: fold peer state, update `(φ, δ)` through the
+    /// compiled outer artifact, and reset θ := φ.
+    fn apply_outer(
+        &mut self,
+        _comm: &mut dyn Communicator,
+        _eng: &mut Engine,
+        _w: &mut WorkerState,
+        _live: &[usize],
+        _outer_idx: u64,
+    ) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Build the strategy configured on `cfg`.
+pub fn for_config(cfg: &TrainConfig) -> Box<dyn SyncStrategy> {
+    match cfg.outer.method {
+        Method::Fsdp => Box::new(FsdpSync),
+        Method::DiLoCo => Box::new(DilocoSync {
+            alpha: cfg.outer.alpha as f32,
+            beta: cfg.outer.beta as f32,
+        }),
+        Method::NoLoCo => {
+            let pairing: Box<dyn PairingPolicy> = match cfg.pairing {
+                PairingMode::Uniform => Box::new(UniformPairing),
+                PairingMode::BandwidthAware => Box::new(BandwidthAwarePairing::new(
+                    cfg.net.build(cfg.topology.dp, cfg.seed),
+                )),
+            };
+            Box::new(NolocoSync::new(
+                cfg.outer.clone(),
+                cfg.seed,
+                cfg.topology.dp,
+                cfg.churn.clone(),
+                pairing,
+            ))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// FSDP: per-step gradient all-reduce, no outer optimizer
+// ---------------------------------------------------------------------
+
+/// Fully synchronous data parallel (the paper's upper baseline).
+pub struct FsdpSync;
+
+impl SyncStrategy for FsdpSync {
+    fn name(&self) -> &'static str {
+        "fsdp"
+    }
+
+    fn pattern(&self) -> CommPattern {
+        CommPattern::AllReduce
+    }
+
+    fn has_outer(&self) -> bool {
+        false
+    }
+
+    fn churn_response(&self) -> ChurnResponse {
+        ChurnResponse::Abort
+    }
+
+    fn offer_grads(
+        &mut self,
+        comm: &mut dyn Communicator,
+        w: &WorkerState,
+        live: &[usize],
+        step: u64,
+    ) -> Result<()> {
+        if live.len() > 1 {
+            comm.offer_reduce(w.stage, w.replica, step as u32, &w.grad_acc)?;
+        }
+        Ok(())
+    }
+
+    fn sync_grads(
+        &mut self,
+        comm: &mut dyn Communicator,
+        w: &mut WorkerState,
+        live: &[usize],
+        step: u64,
+    ) -> Result<()> {
+        if live.len() <= 1 {
+            return Ok(());
+        }
+        // Reduce the *raw* microbatch sums; the per-worker mean division
+        // (by microbatch count) happens afterwards in the Adam path, which
+        // keeps the grid executor's seed trajectory bit-identical.
+        let mut g = std::mem::take(&mut w.grad_acc);
+        comm.all_reduce_mean(w.stage, w.replica, live, step as u32, &mut g)?;
+        w.grad_acc = g;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// DiLoCo: Nesterov outer step over an all-reduced mean outer gradient
+// ---------------------------------------------------------------------
+
+/// DiLoCo (Douillard et al. 2023): m local steps, then a blocking outer
+/// all-reduce.
+pub struct DilocoSync {
+    /// Nesterov momentum α.
+    pub alpha: f32,
+    /// Outer learning rate β.
+    pub beta: f32,
+}
+
+impl SyncStrategy for DilocoSync {
+    fn name(&self) -> &'static str {
+        "diloco"
+    }
+
+    fn pattern(&self) -> CommPattern {
+        CommPattern::AllReduce
+    }
+
+    fn has_outer(&self) -> bool {
+        true
+    }
+
+    fn churn_response(&self) -> ChurnResponse {
+        ChurnResponse::Abort
+    }
+
+    fn offer_outer(
+        &mut self,
+        comm: &mut dyn Communicator,
+        w: &WorkerState,
+        _live: &[usize],
+        outer_idx: u64,
+    ) -> Result<()> {
+        comm.offer_reduce(w.stage, w.replica, outer_idx as u32, &w.outer_grad())
+    }
+
+    fn apply_outer(
+        &mut self,
+        comm: &mut dyn Communicator,
+        eng: &mut Engine,
+        w: &mut WorkerState,
+        live: &[usize],
+        outer_idx: u64,
+    ) -> Result<()> {
+        let mut dmean = w.outer_grad();
+        comm.all_reduce_mean(w.stage, w.replica, live, outer_idx as u32, &mut dmean)?;
+        let (kind, mut phi, mut delta) =
+            (w.kind, std::mem::take(&mut w.phi), std::mem::take(&mut w.delta));
+        exec::outer_diloco(eng, kind, &mut phi, &mut delta, &dmean, self.alpha, self.beta)?;
+        w.phi = phi;
+        w.delta = delta;
+        w.reset_theta_to_phi();
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// NoLoCo: gossip-group modified-Nesterov outer step (Eq. 2–3)
+// ---------------------------------------------------------------------
+
+/// NoLoCo: m local steps, then the modified Nesterov gossip update over
+/// random disjoint groups drawn by a [`PairingPolicy`].
+pub struct NolocoSync {
+    outer: OuterConfig,
+    seed: u64,
+    dp: usize,
+    churn: ChurnSchedule,
+    pairing: Box<dyn PairingPolicy>,
+    /// Memoized last draw, keyed by `(stage, outer_idx, live)`: the offer
+    /// and fold phases (and, on the grid executor, every worker of a
+    /// stage row) share one partition instead of re-drawing it.
+    cache: Option<(usize, u64, Vec<usize>, Vec<Vec<usize>>)>,
+}
+
+impl NolocoSync {
+    /// New strategy over the given pairing policy.
+    pub fn new(
+        outer: OuterConfig,
+        seed: u64,
+        dp: usize,
+        churn: ChurnSchedule,
+        pairing: Box<dyn PairingPolicy>,
+    ) -> NolocoSync {
+        NolocoSync { outer, seed, dp, churn, pairing, cache: None }
+    }
+
+    fn my_group(&mut self, live: &[usize], stage: usize, outer_idx: u64, me: usize) -> Vec<usize> {
+        let hit = matches!(
+            &self.cache,
+            Some((s, o, l, _)) if *s == stage && *o == outer_idx && l.as_slice() == live
+        );
+        if !hit {
+            let groups = self.pairing.draw(live, self.outer.group, stage, outer_idx, self.seed);
+            self.cache = Some((stage, outer_idx, live.to_vec(), groups));
+        }
+        let (_, _, _, groups) = self.cache.as_ref().expect("cached above");
+        groups
+            .iter()
+            .find(|g| g.contains(&me))
+            .expect("pairing policy must cover every live replica")
+            .clone()
+    }
+
+    /// A column is *stale* at outer boundary `outer_idx` if it was dead at
+    /// any step of the closing round (or the previous boundary): its
+    /// `(Δ, φ)` predate the ensemble's. Derived from the shared schedule,
+    /// so every worker agrees without coordination.
+    fn is_stale(&self, r: usize, outer_idx: u64) -> bool {
+        if self.churn.is_empty() {
+            return false;
+        }
+        let step = (outer_idx as usize * self.outer.inner_steps).saturating_sub(1);
+        let window_start = step.saturating_sub(self.outer.inner_steps);
+        (window_start..=step).any(|s| !self.churn.live_at(self.dp, s as u64)[r])
+    }
+}
+
+impl SyncStrategy for NolocoSync {
+    fn name(&self) -> &'static str {
+        "noloco"
+    }
+
+    fn pattern(&self) -> CommPattern {
+        CommPattern::GossipPairs
+    }
+
+    fn has_outer(&self) -> bool {
+        true
+    }
+
+    fn churn_response(&self) -> ChurnResponse {
+        ChurnResponse::Repair
+    }
+
+    fn offer_outer(
+        &mut self,
+        comm: &mut dyn Communicator,
+        w: &WorkerState,
+        live: &[usize],
+        outer_idx: u64,
+    ) -> Result<()> {
+        let me = w.replica;
+        let group = self.my_group(live, w.stage, outer_idx, me);
+        let peers: Vec<usize> = group.iter().copied().filter(|&r| r != me).collect();
+        comm.offer_state(w.stage, me, &peers, outer_idx as u32, &w.outer_grad(), &w.phi)
+    }
+
+    fn apply_outer(
+        &mut self,
+        comm: &mut dyn Communicator,
+        eng: &mut Engine,
+        w: &mut WorkerState,
+        live: &[usize],
+        outer_idx: u64,
+    ) -> Result<()> {
+        let me = w.replica;
+        let seq = outer_idx as u32;
+        let group = self.my_group(live, w.stage, outer_idx, me);
+        // Collect every member's (Δ, φ) in group order; `None` marks a
+        // peer that missed the straggler deadline.
+        let my_delta = w.outer_grad();
+        let mut avail: Vec<Option<(Vec<f32>, Vec<f32>)>> = Vec::with_capacity(group.len());
+        for &r in &group {
+            if r == me {
+                avail.push(Some((my_delta.clone(), w.phi.clone())));
+            } else {
+                avail.push(comm.collect_state(w.stage, me, r, seq)?);
+            }
+        }
+        // Message-passing rejoin catch-up (the grid executor instead hands
+        // a joiner a donor's φ at the join event): a stale member adopts
+        // the first fresh peer's slow weights outright, and the fresh side
+        // drops stale contributions so they cannot dilute its state. Two
+        // stale members paired together fall through to the plain averaged
+        // update — neither has fresh state to offer, and the γ-consensus
+        // term pulls them back toward the ensemble over later boundaries.
+        if !comm.supports_join_bootstrap() && !self.churn.is_empty() {
+            if self.is_stale(me, outer_idx) {
+                for (i, &r) in group.iter().enumerate() {
+                    if r == me || self.is_stale(r, outer_idx) {
+                        continue;
+                    }
+                    if let Some((_, p_theirs)) = &avail[i] {
+                        w.phi.copy_from_slice(p_theirs);
+                        for d in w.delta.iter_mut() {
+                            *d = 0.0;
+                        }
+                        w.reset_theta_to_phi();
+                        return Ok(());
+                    }
+                }
+            } else {
+                for (i, &r) in group.iter().enumerate() {
+                    if r != me && self.is_stale(r, outer_idx) {
+                        avail[i] = None;
+                    }
+                }
+            }
+        }
+        // Fold the available members in group order; a group that shrank
+        // to one (odd live count, timeout, stale peers) degrades to a
+        // singleton update — NoLoCo's graceful form of the situation where
+        // a collective would simply hang.
+        let n = w.len();
+        let mut dsum = vec![0.0f32; n];
+        let mut psum = vec![0.0f32; n];
+        let mut gn = 0usize;
+        for (d, p) in avail.iter().flatten() {
+            for (a, x) in dsum.iter_mut().zip(d) {
+                *a += x;
+            }
+            for (a, x) in psum.iter_mut().zip(p) {
+                *a += x;
+            }
+            gn += 1;
+        }
+        let (alpha, beta, gamma) = (
+            self.outer.alpha as f32,
+            self.outer.beta as f32,
+            self.outer.gamma as f32,
+        );
+        let (kind, mut phi, mut delta) =
+            (w.kind, std::mem::take(&mut w.phi), std::mem::take(&mut w.delta));
+        exec::outer_noloco(
+            eng, kind, &mut phi, &mut delta, &dsum, &psum, alpha, beta, gamma,
+            1.0 / gn as f32,
+        )?;
+        w.phi = phi;
+        w.delta = delta;
+        w.reset_theta_to_phi();
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pairing policies
+// ---------------------------------------------------------------------
+
+/// How NoLoCo's gossip groups are drawn each outer round. Must return a
+/// disjoint cover of `live` in groups of `group` members (at most one
+/// smaller leftover group), deterministically in
+/// `(live, stage, outer_idx, seed)` — every worker re-derives the same
+/// partition with zero coordination traffic.
+pub trait PairingPolicy: Send + Sync {
+    /// Policy name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Draw the round's groups over `live` (ascending DP replica ids).
+    fn draw(
+        &self,
+        live: &[usize],
+        group: usize,
+        stage: usize,
+        outer_idx: u64,
+        seed: u64,
+    ) -> Vec<Vec<usize>>;
+}
+
+/// Uniform random disjoint groups — the seed derivation, bit-for-bit:
+/// `Pcg64(seed ^ 0x9055 ^ (stage << 40) ^ outer_idx)` over live positions.
+pub struct UniformPairing;
+
+impl PairingPolicy for UniformPairing {
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+
+    fn draw(
+        &self,
+        live: &[usize],
+        group: usize,
+        stage: usize,
+        outer_idx: u64,
+        seed: u64,
+    ) -> Vec<Vec<usize>> {
+        let mut prng = Pcg64::seed_from_u64(seed ^ 0x9055 ^ ((stage as u64) << 40) ^ outer_idx);
+        prng.random_groups(live.len(), group)
+            .into_iter()
+            .map(|g| g.into_iter().map(|i| live[i]).collect())
+            .collect()
+    }
+}
+
+/// Region-biased pairing over a network [`Topology`]: groups are drawn
+/// inside a region (cheap links) whenever possible, with per-region
+/// leftovers paired uniformly across regions. Every
+/// [`cross_every`](BandwidthAwarePairing::with_cross_every)-th round
+/// falls back to a full uniform draw so the gossip graph keeps mixing
+/// globally — without it, even region sizes would partition the ensemble
+/// and the γ-consensus term could never equalize regions.
+pub struct BandwidthAwarePairing {
+    topo: Topology,
+    cross_every: u64,
+}
+
+impl BandwidthAwarePairing {
+    /// New policy over `topo` (replica `r` ↦ topology node `r`), mixing
+    /// uniformly every 4th round.
+    pub fn new(topo: Topology) -> BandwidthAwarePairing {
+        BandwidthAwarePairing { topo, cross_every: 4 }
+    }
+
+    /// Override the uniform-round cadence (0 disables uniform rounds —
+    /// only safe when region sizes guarantee cross-region leftovers).
+    pub fn with_cross_every(mut self, cross_every: u64) -> BandwidthAwarePairing {
+        self.cross_every = cross_every;
+        self
+    }
+
+    fn region_of(&self, replica: usize) -> usize {
+        if replica < self.topo.world() {
+            self.topo.region_of(replica)
+        } else {
+            replica % self.topo.regions()
+        }
+    }
+}
+
+impl PairingPolicy for BandwidthAwarePairing {
+    fn name(&self) -> &'static str {
+        "bandwidth-aware"
+    }
+
+    fn draw(
+        &self,
+        live: &[usize],
+        group: usize,
+        stage: usize,
+        outer_idx: u64,
+        seed: u64,
+    ) -> Vec<Vec<usize>> {
+        if self.cross_every > 0 && outer_idx % self.cross_every == 0 {
+            return UniformPairing.draw(live, group, stage, outer_idx, seed);
+        }
+        let mut prng =
+            Pcg64::seed_from_u64(seed ^ 0xba9d_11a5 ^ ((stage as u64) << 40) ^ outer_idx);
+        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); self.topo.regions()];
+        for &r in live {
+            buckets[self.region_of(r)].push(r);
+        }
+        let mut groups = Vec::new();
+        let mut leftovers = Vec::new();
+        for bucket in &mut buckets {
+            prng.shuffle(bucket);
+            let full = bucket.len() - bucket.len() % group;
+            for c in bucket[..full].chunks(group) {
+                groups.push(c.to_vec());
+            }
+            leftovers.extend_from_slice(&bucket[full..]);
+        }
+        prng.shuffle(&mut leftovers);
+        for c in leftovers.chunks(group) {
+            groups.push(c.to_vec());
+        }
+        groups
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{NetPreset, NetTopoConfig};
+
+    fn assert_valid_partition(groups: &[Vec<usize>], live: &[usize], group: usize) {
+        let mut seen: Vec<usize> = groups.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        let mut want = live.to_vec();
+        want.sort_unstable();
+        assert_eq!(seen, want, "groups must cover the live set exactly once");
+        let short = groups.iter().filter(|g| g.len() < group).count();
+        assert!(short <= 1, "at most one leftover group, got {short}");
+        for g in groups {
+            assert!(!g.is_empty() && g.len() <= group);
+        }
+    }
+
+    #[test]
+    fn uniform_pairing_reproduces_seed_derivation() {
+        // Golden: the policy must replicate the exact inline draw both
+        // pre-redesign executors used — Pcg64(seed ^ 0x9055 ^ (stage << 40)
+        // ^ outer_idx) pairs over live *positions*, mapped through `live`.
+        let live = vec![0usize, 2, 3, 5, 6];
+        for (seed, stage, outer_idx) in [(0x0107c0u64, 0usize, 1u64), (42, 1, 7), (9, 3, 100)] {
+            let mut prng =
+                Pcg64::seed_from_u64(seed ^ 0x9055 ^ ((stage as u64) << 40) ^ outer_idx);
+            let want: Vec<Vec<usize>> = prng
+                .random_pairs(live.len())
+                .into_iter()
+                .map(|(a, b)| match b {
+                    Some(b) => vec![live[a], live[b]],
+                    None => vec![live[a]],
+                })
+                .collect();
+            let got = UniformPairing.draw(&live, 2, stage, outer_idx, seed);
+            assert_eq!(got, want, "seed={seed} stage={stage} outer={outer_idx}");
+        }
+        // General group sizes replicate the grid executor's random_groups.
+        let mut prng = Pcg64::seed_from_u64(11 ^ 0x9055 ^ (2u64 << 40) ^ 5);
+        let want: Vec<Vec<usize>> = prng
+            .random_groups(live.len(), 3)
+            .into_iter()
+            .map(|g| g.into_iter().map(|i| live[i]).collect())
+            .collect();
+        assert_eq!(UniformPairing.draw(&live, 3, 2, 5, 11), want);
+    }
+
+    #[test]
+    fn property_pairing_policies_emit_perfect_matchings() {
+        let wan = NetTopoConfig {
+            preset: NetPreset::MultiRegionWan,
+            regions: 3,
+            ..NetTopoConfig::default()
+        };
+        crate::prop::run("pairing policies partition the live set", 120, |g| {
+            let dp = g.usize_in(2, 16).max(2);
+            let group = g.usize_in(2, 4).max(2);
+            let seed = g.rng().next_u64();
+            let outer_idx = 1 + g.rng().next_u64() % 50;
+            let stage = g.usize_in(0, 3);
+            // Random live subset of size >= 1.
+            let live: Vec<usize> = (0..dp).filter(|_| g.bool()).collect();
+            let live = if live.is_empty() { vec![0] } else { live };
+            let uni = UniformPairing.draw(&live, group, stage, outer_idx, seed);
+            assert_valid_partition(&uni, &live, group);
+            let ba = BandwidthAwarePairing::new(wan.build(dp, seed));
+            let groups = ba.draw(&live, group, stage, outer_idx, seed);
+            assert_valid_partition(&groups, &live, group);
+        });
+    }
+
+    #[test]
+    fn bandwidth_aware_cuts_wan_sync_time_but_keeps_mixing() {
+        // 12 replicas over 3 WAN regions: region-biased rounds pair
+        // entirely inside regions (4 per region, even), so the expected
+        // slowest-pair transfer collapses vs the uniform draw, while the
+        // periodic uniform rounds keep cross-region edges appearing.
+        let wan = NetTopoConfig {
+            preset: NetPreset::MultiRegionWan,
+            regions: 3,
+            ..NetTopoConfig::default()
+        };
+        let dp = 12;
+        let topo = wan.build(dp, 7);
+        let live: Vec<usize> = (0..dp).collect();
+        let payload = 2u64 * (4 << 20); // both directions of (Δ, φ)
+        let round_cost = |groups: &[Vec<usize>]| -> f64 {
+            groups
+                .iter()
+                .filter(|g| g.len() == 2)
+                .map(|g| topo.expected_transfer(g[0], g[1], payload))
+                .fold(0.0, f64::max)
+        };
+        let ba = BandwidthAwarePairing::new(wan.build(dp, 7));
+        let (mut uni_sum, mut ba_sum, mut cross_seen) = (0.0, 0.0, false);
+        let rounds = 60u64;
+        for outer_idx in 1..=rounds {
+            uni_sum += round_cost(&UniformPairing.draw(&live, 2, 0, outer_idx, 7));
+            let groups = ba.draw(&live, 2, 0, outer_idx, 7);
+            ba_sum += round_cost(&groups);
+            cross_seen |= groups
+                .iter()
+                .any(|g| g.len() == 2 && topo.region_of(g[0]) != topo.region_of(g[1]));
+        }
+        let (uni_mean, ba_mean) = (uni_sum / rounds as f64, ba_sum / rounds as f64);
+        assert!(
+            ba_mean < uni_mean * 0.7,
+            "bandwidth-aware should cut WAN sync time: {ba_mean:.3}s vs {uni_mean:.3}s"
+        );
+        assert!(cross_seen, "mixing rounds must still produce cross-region pairs");
+    }
+
+    #[test]
+    fn strategy_factory_matches_method() {
+        let mut cfg = crate::config::presets::preset("tiny").unwrap();
+        let s = for_config(&cfg);
+        assert_eq!(s.name(), "noloco");
+        assert_eq!(s.pattern(), CommPattern::GossipPairs);
+        assert_eq!(s.churn_response(), ChurnResponse::Repair);
+        assert!(s.has_outer());
+        cfg = crate::config::presets::as_fsdp(cfg);
+        let s = for_config(&cfg);
+        assert_eq!(s.name(), "fsdp");
+        assert_eq!(s.pattern(), CommPattern::AllReduce);
+        assert_eq!(s.churn_response(), ChurnResponse::Abort);
+        assert!(!s.has_outer());
+        cfg = crate::config::presets::as_diloco(cfg);
+        let s = for_config(&cfg);
+        assert_eq!(s.name(), "diloco");
+        assert!(s.has_outer());
+        assert_eq!(s.churn_response(), ChurnResponse::Abort);
+        // The bandwidth-aware policy is selectable from config.
+        cfg.outer.method = Method::NoLoCo;
+        cfg.outer.gamma = OuterConfig::default_gamma(cfg.outer.alpha, cfg.outer.group);
+        cfg.pairing = PairingMode::BandwidthAware;
+        let s = for_config(&cfg);
+        assert_eq!(s.name(), "noloco");
+    }
+
+    #[test]
+    fn staleness_window_matches_schedule() {
+        // Replica 1 dead for steps 2..=4 (leave at 2, join at 5) with
+        // m = 2: boundaries close after steps 1, 3, 5, 7. It is stale at
+        // outer 2 and 3 (dead inside the window) and fresh again at 4.
+        let outer = OuterConfig {
+            method: Method::NoLoCo,
+            alpha: 0.5,
+            beta: 0.7,
+            gamma: OuterConfig::default_gamma(0.5, 2),
+            group: 2,
+            inner_steps: 2,
+        };
+        let churn = ChurnSchedule::none().leave(2, 1).join(5, 1);
+        let s = NolocoSync::new(outer, 0, 2, churn, Box::new(UniformPairing));
+        assert!(!s.is_stale(1, 1));
+        assert!(s.is_stale(1, 2));
+        assert!(s.is_stale(1, 3));
+        assert!(!s.is_stale(1, 4));
+        assert!(!s.is_stale(0, 2), "the surviving column is never stale");
+    }
+}

@@ -1,68 +1,49 @@
-//! Threaded executor: one OS thread + PJRT engine per worker, all
-//! communication over the in-process message [`Fabric`].
+//! Threaded executor — a thin spawner over [`TrainerCore`] with the
+//! [`FabricComm`] communicator: one OS thread + PJRT engine per worker,
+//! all communication over the in-process message [`Fabric`].
 //!
 //! This is the "real system" counterpart of [`super::SimTrainer`]: the
-//! same algorithm, but no shared state — every activation, gradient,
-//! token batch, all-reduce and gossip exchange is an actual message, and
-//! workers only coordinate through deterministic shared-seed derivations
-//! (route plans and gossip pairings are *computed*, not negotiated — the
+//! same core and the same [`SyncStrategy`](super::SyncStrategy) impls,
+//! but no shared state — every activation, gradient, token batch,
+//! all-reduce and gossip exchange is an actual message, and workers only
+//! coordinate through deterministic shared-seed derivations (route plans,
+//! gossip pairings and live sets are *computed*, not negotiated — the
 //! same trick SWARM-style systems use to avoid a routing master).
 //!
-//! Latency injection (`latency_log_normal`) turns the fabric into the
-//! paper's §5.3 network model, making the blocking-communication effects
-//! of Fig. 5B measurable in wall-clock terms on the real pipeline.
+//! Latency injection (`with_latency`) turns the fabric into the paper's
+//! §5.3 network model; `with_gossip_timeout` enables straggler-tolerant
+//! gossip (a peer that misses the deadline degrades the outer update to a
+//! smaller group — only possible *because* NoLoCo has no collective).
 //!
-//! Elastic membership: a [`ChurnSchedule`] names DP columns that leave or
-//! (re)join at given steps. Every worker derives the per-step live set
-//! from the shared schedule — no control traffic — and the route plans
-//! and gossip pairings re-draw over the survivors, so a NoLoCo run keeps
-//! training through churn. A rejoining column catches up by absorbing its
-//! first gossip peer's slow weights. FSDP / DiLoCo refuse churn up front:
-//! their global all-reduce has no live-subset form, which is exactly the
-//! no-global-barrier contrast the paper draws (§5.3).
+//! Elastic membership: every worker derives the per-step live set from
+//! the shared [`ChurnSchedule`] — no control traffic — and a rejoining
+//! column catches up by absorbing a fresh gossip peer's slow weights (the
+//! message-passing form of the grid executor's donor bootstrap). FSDP /
+//! DiLoCo refuse churn up front: their global all-reduce has no
+//! live-subset form, which is exactly the no-global-barrier contrast the
+//! paper draws (§5.3).
+//!
+//! The run returns the unified [`TrainReport`]: worker traces and
+//! logical communication counters are folded together (their
+//! once-per-row / once-per-pair counting reproduces the grid executor's
+//! totals) and the wire counters come from the fabric's own metering.
 
+use std::collections::BTreeMap;
 use std::thread;
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::collective::all_reduce_mean;
-use crate::config::{Method, TrainConfig};
-use crate::data::Loader;
-use crate::metrics::perplexity;
-use crate::model::StageKind;
+use crate::config::TrainConfig;
+use crate::metrics::{perplexity, RunTrace};
 use crate::net::topo::ChurnSchedule;
-use crate::net::{Endpoint, Fabric, Payload, Tag};
-use crate::optim::LrSchedule;
-use crate::rngx::Pcg64;
-use crate::routing::RoutePlan;
+use crate::net::Fabric;
 use crate::runtime::{find_build, Engine, Manifest};
 
-use super::exec::{self, AdamScalars};
-use super::state::WorkerState;
-
-// Train-side tag kinds (collectives reserve 1..=4).
-const K_ACT: u16 = 100;
-const K_TOK: u16 = 101;
-const K_GRD: u16 = 102;
-const K_VACT: u16 = 103;
-const K_VTOK: u16 = 104;
-
-/// Result of a threaded run.
-#[derive(Clone, Debug)]
-pub struct ThreadedReport {
-    /// Mean training loss per inner step (averaged over replicas).
-    pub step_train_loss: Vec<f64>,
-    /// Final validation NLL (mean over replicas and batches).
-    pub final_val_nll: f64,
-    /// Final validation perplexity.
-    pub final_val_ppl: f64,
-    /// Wall-clock seconds for the whole run.
-    pub wall_secs: f64,
-    /// Total bytes sent over the fabric.
-    pub bytes_sent: u64,
-    /// Total messages sent over the fabric.
-    pub msgs_sent: u64,
-}
+use super::comm::FabricComm;
+use super::core::TrainerCore;
+use super::strategy::{self, ChurnResponse, SyncStrategy};
+use super::{CommStats, TrainReport};
 
 /// Threaded DP × PP trainer.
 pub struct ThreadedTrainer {
@@ -70,21 +51,13 @@ pub struct ThreadedTrainer {
     /// Log-normal latency injection on every message, `(mu, sigma)` in
     /// seconds — `None` for a fast fabric.
     latency: Option<(f64, f64)>,
-    /// Validation batches to run at the end.
+    /// Validation batches per eval point.
     val_batches: usize,
     /// Straggler tolerance: give up on a gossip peer after this long and
-    /// fall back to a singleton outer update. Only possible *because*
+    /// fall back to a smaller outer group. Only possible *because*
     /// NoLoCo has no collective — a DiLoCo all-reduce cannot skip a
     /// member. `None` = wait forever.
     gossip_timeout: Option<std::time::Duration>,
-}
-
-/// What one worker thread hands back.
-struct WorkerOut {
-    /// stage == pp-1 only: per-step mean microbatch loss.
-    step_loss: Vec<f64>,
-    /// stage == pp-1 only: mean validation NLL over batches.
-    val_nll: Option<f64>,
 }
 
 impl ThreadedTrainer {
@@ -95,7 +68,7 @@ impl ThreadedTrainer {
     }
 
     /// Enable straggler-tolerant gossip: skip a peer that does not
-    /// deliver within `t` (the outer step degrades to a singleton group).
+    /// deliver within `t` (the outer step degrades to a smaller group).
     pub fn with_gossip_timeout(mut self, t: std::time::Duration) -> ThreadedTrainer {
         self.gossip_timeout = Some(t);
         self
@@ -113,23 +86,18 @@ impl ThreadedTrainer {
         self
     }
 
-    /// Number of end-of-run validation batches.
+    /// Number of validation batches per eval point (0 disables eval).
     pub fn with_val_batches(mut self, n: usize) -> ThreadedTrainer {
         self.val_batches = n;
         self
     }
 
     /// Spawn the worker grid, train, validate, and aggregate.
-    pub fn run(&self) -> Result<ThreadedReport> {
+    pub fn run(&self) -> Result<TrainReport> {
         let cfg = &self.cfg;
         cfg.validate().map_err(anyhow::Error::msg)?;
-        if cfg.outer.method == crate::config::Method::NoLoCo && cfg.outer.group != 2 {
-            anyhow::bail!(
-                "the threaded executor implements the paper's minimum gossip group (n = 2); \
-                 use SimTrainer for general group sizes"
-            );
-        }
-        if !cfg.churn.is_empty() && cfg.outer.method != Method::NoLoCo {
+        let churn_response = strategy::for_config(cfg).churn_response();
+        if !cfg.churn.is_empty() && matches!(churn_response, ChurnResponse::Abort) {
             anyhow::bail!(
                 "{} cannot change membership mid-run: its global all-reduce has no \
                  live-subset form; only NoLoCo's gossip re-pairs over survivors",
@@ -155,11 +123,11 @@ impl ThreadedTrainer {
         let per_replica_seqs = (cfg.model.batch_tokens / cfg.model.seq_len / dp).max(man.mb);
         let num_mb = (per_replica_seqs / man.mb).max(1);
 
-        let start = std::time::Instant::now();
+        let start = Instant::now();
         let mut fabric = Fabric::new(dp * pp);
         let endpoints = fabric.take_endpoints();
 
-        let outs: Vec<WorkerOut> = thread::scope(|scope| -> Result<Vec<WorkerOut>> {
+        let reports: Vec<TrainReport> = thread::scope(|scope| -> Result<Vec<TrainReport>> {
             let mut handles = Vec::new();
             for (rank, mut ep) in endpoints.into_iter().enumerate() {
                 if let Some((mu, sigma)) = self.latency {
@@ -170,8 +138,14 @@ impl ThreadedTrainer {
                 let cfg = cfg.clone();
                 let val_batches = self.val_batches;
                 let gossip_timeout = self.gossip_timeout;
-                handles.push(scope.spawn(move || -> Result<WorkerOut> {
-                    worker_main(rank, ep, cfg, dir, man, num_mb, val_batches, gossip_timeout)
+                handles.push(scope.spawn(move || -> Result<TrainReport> {
+                    let (stage, replica) = (rank / dp, rank % dp);
+                    let comm = FabricComm::new(ep, dp, gossip_timeout);
+                    let mut eng = Engine::new(&dir)?;
+                    TrainerCore::new_single(
+                        cfg, &mut eng, comm, man, stage, replica, num_mb, val_batches,
+                    )?
+                    .run()
                 }));
             }
             handles
@@ -180,496 +154,73 @@ impl ThreadedTrainer {
                 .collect()
         })?;
 
-        // Aggregate last-stage outputs. Steps a replica sat out (churn)
-        // are reported as NaN and excluded from that step's mean.
+        // ---- aggregate the per-worker reports into one ----
+        let mut comm = CommStats::default();
+        let mut executions = 0u64;
+        for r in &reports {
+            comm.absorb(&r.comm);
+            executions += r.executions;
+        }
+        // Wire metering is the fabric's ground truth.
+        comm.bytes_sent = fabric.bytes_sent().iter().sum();
+        comm.msgs_sent = fabric.msgs_sent().iter().sum();
+
+        // Per-step training loss: mean across reporting replicas; steps a
+        // replica sat out (churn) arrive as NaN and are excluded.
         let mut step_train_loss = vec![0.0f64; cfg.steps];
-        let mut step_counts = vec![0usize; cfg.steps];
-        let mut val_sum = 0.0;
-        let mut val_n = 0usize;
-        for out in &outs {
-            if out.step_loss.is_empty() {
-                continue;
-            }
-            for (i, l) in out.step_loss.iter().enumerate() {
+        let mut counts = vec![0usize; cfg.steps];
+        for r in &reports {
+            for (i, l) in r.step_train_loss.iter().enumerate() {
                 if l.is_finite() {
                     step_train_loss[i] += l;
-                    step_counts[i] += 1;
+                    counts[i] += 1;
                 }
             }
-            if let Some(v) = out.val_nll {
-                val_sum += v;
+        }
+        for (acc, c) in step_train_loss.iter_mut().zip(&counts) {
+            if *c == 0 {
+                *acc = f64::NAN;
+            } else {
+                *acc /= *c as f64;
+            }
+        }
+
+        // Eval trace: merge rows by step (replicas dead at an eval point
+        // contribute no row); weight-σ is unknowable worker-locally.
+        let mut rows: BTreeMap<usize, (f64, f64, f64, usize)> = BTreeMap::new();
+        for r in &reports {
+            let t = &r.trace;
+            for i in 0..t.steps.len() {
+                let e = rows.entry(t.steps[i]).or_insert((0.0, 0.0, t.lr[i], 0));
+                e.0 += t.train_loss[i];
+                e.1 += t.val_loss[i];
+                e.3 += 1;
+            }
+        }
+        let mut trace = RunTrace::default();
+        for (step, (ts, vs, lr, n)) in rows {
+            trace.push(step, ts / n as f64, vs / n as f64, f64::NAN, lr);
+        }
+
+        let mut val_sum = 0.0;
+        let mut val_n = 0usize;
+        for r in &reports {
+            if r.final_val_nll.is_finite() {
+                val_sum += r.final_val_nll;
                 val_n += 1;
             }
         }
-        for (acc, c) in step_train_loss.iter_mut().zip(&step_counts) {
-            *acc /= (*c).max(1) as f64;
-        }
-        let final_val_nll = val_sum / val_n.max(1) as f64;
-        Ok(ThreadedReport {
-            step_train_loss,
+        let final_val_nll = if val_n == 0 { f64::NAN } else { val_sum / val_n as f64 };
+
+        Ok(TrainReport {
             final_val_nll,
             final_val_ppl: perplexity(final_val_nll),
+            trace,
+            step_train_loss,
+            comm,
             wall_secs: start.elapsed().as_secs_f64(),
-            bytes_sent: fabric.bytes_sent().iter().sum(),
-            msgs_sent: fabric.msgs_sent().iter().sum(),
+            executions,
+            executor: "threaded",
         })
     }
-}
-
-/// Which live origin replica's path crosses `(stage, me)` under `plan`.
-fn origin_through(plan: &RoutePlan, stage: usize, me: usize, live: &[usize]) -> usize {
-    for &r0 in live {
-        if plan.path_from(r0)[stage] == me {
-            return r0;
-        }
-    }
-    unreachable!("live permutation routing covers every live replica");
-}
-
-/// Symmetric gossip exchange of `(Δ, φ)` with an optional straggler
-/// timeout. Sends both payloads eagerly (one RTT), then waits; `None`
-/// means the peer missed the deadline and the caller should fall back to
-/// a singleton update. Trailing late messages are absorbed harmlessly by
-/// the endpoint stash (tags are unique per outer step).
-fn gossip_exchange(
-    ep: &mut Endpoint,
-    peer: usize,
-    seq: u32,
-    delta: &[f32],
-    phi: &[f32],
-    timeout: Option<std::time::Duration>,
-) -> Option<(Vec<f32>, Vec<f32>)> {
-    const K_GOSSIP_D: u16 = 110;
-    const K_GOSSIP_P: u16 = 111;
-    let me = ep.rank() as u32;
-    ep.send(peer, Tag::new(K_GOSSIP_D, seq, me), Payload::F32(delta.to_vec()));
-    ep.send(peer, Tag::new(K_GOSSIP_P, seq, me), Payload::F32(phi.to_vec()));
-    let td = Tag::new(K_GOSSIP_D, seq, peer as u32);
-    let tp = Tag::new(K_GOSSIP_P, seq, peer as u32);
-    match timeout {
-        None => Some((ep.recv(td).payload.into_f32(), ep.recv(tp).payload.into_f32())),
-        Some(t) => {
-            let d = ep.recv_timeout(td, t)?.payload.into_f32();
-            let p = ep.recv_timeout(tp, t)?.payload.into_f32();
-            Some((d, p))
-        }
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn worker_main(
-    rank: usize,
-    mut ep: Endpoint,
-    cfg: TrainConfig,
-    dir: std::path::PathBuf,
-    man: Manifest,
-    num_mb: usize,
-    val_batches: usize,
-    gossip_timeout: Option<std::time::Duration>,
-) -> Result<WorkerOut> {
-    let (dp, pp) = (cfg.topology.dp, cfg.topology.pp);
-    let (stage, replica) = (rank / dp, rank % dp);
-    let kind = StageKind::of_stage(stage, pp);
-    let is_first = stage == 0;
-    let is_last = stage == pp - 1;
-    let mb_toks = man.mb * man.seq_len;
-    let rank_of = |s: usize, r: usize| s * dp + r;
-    let row: Vec<usize> = (0..dp).map(|r| rank_of(stage, r)).collect();
-
-    let mut eng = Engine::new(&dir)?;
-    let init = exec::init_stage(&mut eng, kind, (cfg.seed as i32) ^ (stage as i32 * 7901))?;
-    let mut w = WorkerState::new(stage, replica, kind, init, cfg.outer.method);
-
-    let mut loader = is_first.then(|| {
-        Loader::train(
-            cfg.dataset,
-            cfg.model.vocab,
-            cfg.seed,
-            replica,
-            dp,
-            cfg.model.seq_len,
-            num_mb * man.mb,
-        )
-    });
-    let lr = LrSchedule {
-        peak: cfg.model.inner_lr,
-        warmup: cfg.warmup,
-        total: cfg.steps,
-        floor_frac: cfg.lr_floor,
-    };
-
-    let mut step_loss = Vec::new();
-    let mut coll_seq: u32 = 0; // collective tag namespace, same on all row members
-
-    for step in 0..cfg.steps {
-        // Elastic membership: every worker derives the same live set from
-        // the shared schedule — zero coordination traffic, like the route
-        // plans. A dead column sits the step out entirely (no data, no
-        // compute, no messages); live columns route and gossip over the
-        // survivors.
-        let live_mask = cfg.churn.live_at(dp, step as u64);
-        if !live_mask[replica] {
-            if is_last || pp == 1 {
-                step_loss.push(f64::NAN); // sat out; excluded from means
-            }
-            continue;
-        }
-        let live_idx: Vec<usize> = (0..dp).filter(|&r| live_mask[r]).collect();
-
-        let batch: Option<Vec<i32>> = loader
-            .as_mut()
-            .map(|l| l.next_batch().tokens.iter().map(|&t| t as i32).collect());
-        let mut losses = Vec::new();
-        // Stash of (wave, x_in) for the backward pass.
-        let mut stash: Vec<(u32, usize, Vec<f32>, Vec<i32>)> = Vec::new();
-
-        // ---- forward sweep over this step's waves ----
-        for mb in 0..num_mb {
-            let wave = (step * num_mb + mb) as u32;
-            let plan = RoutePlan::for_step_over(
-                cfg.routing, &live_idx, dp, pp, cfg.seed ^ 0x0a17, wave as u64,
-            );
-            if pp == 1 {
-                let toks = &batch.as_ref().unwrap()[mb * mb_toks..(mb + 1) * mb_toks];
-                let (loss, g) = exec::bwd_full(&mut eng, &man, &w.theta, toks)?;
-                w.accumulate(&g);
-                losses.push(loss as f64);
-                continue;
-            }
-            if is_first {
-                let toks = batch.as_ref().unwrap()[mb * mb_toks..(mb + 1) * mb_toks].to_vec();
-                let x = exec::fwd_first(&mut eng, &man, &w.theta, &toks)?;
-                let nxt = rank_of(1, plan.next_of(0, replica));
-                ep.send(nxt, Tag::new(K_ACT, wave, replica as u32), Payload::F32(x));
-                ep.send(
-                    nxt,
-                    Tag::new(K_TOK, wave, replica as u32),
-                    Payload::U32(toks.iter().map(|&t| t as u32).collect()),
-                );
-                stash.push((wave, replica, Vec::new(), toks));
-            } else {
-                let r0 = origin_through(&plan, stage, replica, &live_idx);
-                let act = ep.recv(Tag::new(K_ACT, wave, r0 as u32)).payload.into_f32();
-                let toks: Vec<i32> = ep
-                    .recv(Tag::new(K_TOK, wave, r0 as u32))
-                    .payload
-                    .u32()
-                    .iter()
-                    .map(|&t| t as i32)
-                    .collect();
-                if is_last {
-                    let (loss, g_theta, gx) =
-                        exec::bwd_last(&mut eng, &man, &w.theta, &act, &toks)?;
-                    w.accumulate(&g_theta);
-                    losses.push(loss as f64);
-                    let prv = rank_of(stage - 1, plan.prev_of(stage, replica));
-                    ep.send(prv, Tag::new(K_GRD, wave, r0 as u32), Payload::F32(gx));
-                } else {
-                    let x_out = exec::fwd_mid(&mut eng, &man, &w.theta, &act)?;
-                    let nxt = rank_of(stage + 1, plan.next_of(stage, replica));
-                    ep.send(nxt, Tag::new(K_ACT, wave, r0 as u32), Payload::F32(x_out));
-                    ep.send(
-                        nxt,
-                        Tag::new(K_TOK, wave, r0 as u32),
-                        Payload::U32(toks.iter().map(|&t| t as u32).collect()),
-                    );
-                    stash.push((wave, r0, act, toks));
-                }
-            }
-        }
-
-        // ---- backward sweep (first and mid stages drain gradients) ----
-        if pp > 1 && !is_last {
-            for (wave, r0, x_in, toks) in stash.drain(..) {
-                let plan = RoutePlan::for_step_over(
-                    cfg.routing, &live_idx, dp, pp, cfg.seed ^ 0x0a17, wave as u64,
-                );
-                let g_out = ep
-                    .recv(Tag::new(K_GRD, wave, r0 as u32))
-                    .payload
-                    .into_f32();
-                if is_first {
-                    let g = exec::bwd_first(&mut eng, &man, &w.theta, &toks, &g_out)?;
-                    w.accumulate(&g);
-                } else {
-                    let (g, gx) = exec::bwd_mid(&mut eng, &man, &w.theta, &x_in, &g_out)?;
-                    w.accumulate(&g);
-                    let prv = rank_of(stage - 1, plan.prev_of(stage, replica));
-                    ep.send(prv, Tag::new(K_GRD, wave, r0 as u32), Payload::F32(gx));
-                }
-            }
-        }
-
-        // ---- inner optimizer ----
-        let mut g = w.take_mean_grad();
-        if cfg.outer.method == Method::Fsdp && dp > 1 {
-            let mut t = crate::tensor::Tensor::from_vec(std::mem::take(&mut g), &[w.len()]);
-            all_reduce_mean(&mut ep, &row, coll_seq, &mut t);
-            coll_seq += 1;
-            g = t.into_vec();
-        }
-        w.adam_t += 1;
-        let sc = AdamScalars::at(lr.at(step), w.adam_t, cfg.grad_clip);
-        let (mut theta, mut m, mut v) = (
-            std::mem::take(&mut w.theta),
-            std::mem::take(&mut w.m),
-            std::mem::take(&mut w.v),
-        );
-        exec::adam_step(&mut eng, kind, &mut theta, &mut m, &mut v, &g, sc)?;
-        w.theta = theta;
-        w.m = m;
-        w.v = v;
-
-        // ---- outer optimizer ----
-        let outer_due =
-            cfg.outer.method != Method::Fsdp && (step + 1) % cfg.outer.inner_steps == 0;
-        if outer_due && dp > 1 {
-            let outer_idx = (step + 1) / cfg.outer.inner_steps;
-            match cfg.outer.method {
-                Method::DiLoCo => {
-                    let mut d = crate::tensor::Tensor::from_vec(w.outer_grad(), &[w.len()]);
-                    all_reduce_mean(&mut ep, &row, coll_seq, &mut d);
-                    coll_seq += 1;
-                    let (mut phi, mut delta) =
-                        (std::mem::take(&mut w.phi), std::mem::take(&mut w.delta));
-                    exec::outer_diloco(
-                        &mut eng,
-                        kind,
-                        &mut phi,
-                        &mut delta,
-                        d.as_slice(),
-                        cfg.outer.alpha as f32,
-                        cfg.outer.beta as f32,
-                    )?;
-                    w.phi = phi;
-                    w.delta = delta;
-                    w.reset_theta_to_phi();
-                }
-                Method::NoLoCo => {
-                    // Deterministic shared-seed pairing over the *live*
-                    // columns: every row member derives the same pairs
-                    // without any coordination (and a dead column is
-                    // never named, so nobody blocks on it — the elastic
-                    // counterpart of the paper's no-global-barrier
-                    // argument). The gossip tag namespace is keyed by
-                    // outer_idx, which stays aligned across workers even
-                    // when some sat out earlier steps.
-                    let mut prng = Pcg64::seed_from_u64(
-                        cfg.seed ^ 0x9055 ^ ((stage as u64) << 40) ^ (outer_idx as u64),
-                    );
-                    let pairs = prng.random_pairs(live_idx.len());
-                    let me = live_idx
-                        .iter()
-                        .position(|&r| r == replica)
-                        .expect("live worker is in its own live set");
-                    let peer = pairs.iter().find_map(|&(a, b)| match b {
-                        Some(b) if a == me => Some(Some(live_idx[b])),
-                        Some(b) if b == me => Some(Some(live_idx[a])),
-                        None if a == me => Some(None),
-                        _ => None,
-                    });
-                    let gossip_seq = outer_idx as u32;
-                    // A column is *stale* at this boundary if it was dead
-                    // at any step since (and including) the previous
-                    // boundary — i.e. it missed inner steps of this round
-                    // or the previous outer update, so its (Δ, φ) predate
-                    // the ensemble's. Every worker derives this from the
-                    // shared schedule, so both sides of a pair agree on
-                    // it: the stale side absorbs its peer's slow weights
-                    // instead of averaging its stale state into the
-                    // ensemble, and the fresh side updates as a
-                    // singleton. Two stale columns paired together fall
-                    // through to the plain averaged update — neither has
-                    // fresh state to offer, and the γ-consensus term
-                    // pulls their shared stale estimate back toward the
-                    // ensemble over the following boundaries (accepted
-                    // degradation, same regime as a timed-out peer).
-                    let window_start = step.saturating_sub(cfg.outer.inner_steps);
-                    let is_stale = |r: usize| {
-                        !cfg.churn.is_empty()
-                            && (window_start..=step)
-                                .any(|s| !cfg.churn.live_at(dp, s as u64)[r])
-                    };
-                    let i_am_stale = is_stale(replica);
-                    let peer_r_opt = peer.flatten();
-                    let my_delta = w.outer_grad();
-                    let (mut phi, mut delta) =
-                        (std::mem::take(&mut w.phi), std::mem::take(&mut w.delta));
-                    let exchanged = match peer_r_opt {
-                        Some(peer_r) => {
-                            let peer_rank = rank_of(stage, peer_r);
-                            gossip_exchange(
-                                &mut ep, peer_rank, gossip_seq, &my_delta, &phi,
-                                gossip_timeout,
-                            )
-                        }
-                        None => None,
-                    };
-                    match exchanged {
-                        Some((_, p_theirs))
-                            if i_am_stale && !is_stale(peer_r_opt.unwrap()) =>
-                        {
-                            // Rejoin catch-up: adopt the peer's φ outright.
-                            phi.copy_from_slice(&p_theirs);
-                            for d in delta.iter_mut() {
-                                *d = 0.0;
-                            }
-                        }
-                        Some((_, _))
-                            if peer_r_opt.is_some_and(|p| is_stale(p)) && !i_am_stale =>
-                        {
-                            // The peer is catching up from my φ; its stale
-                            // (Δ, φ) must not dilute mine — singleton step.
-                            let psum = phi.clone();
-                            exec::outer_noloco(
-                                &mut eng,
-                                kind,
-                                &mut phi,
-                                &mut delta,
-                                &my_delta,
-                                &psum,
-                                cfg.outer.alpha as f32,
-                                cfg.outer.beta as f32,
-                                cfg.outer.gamma as f32,
-                                1.0,
-                            )?;
-                        }
-                        Some((d_theirs, p_theirs)) => {
-                            let dsum: Vec<f32> = my_delta
-                                .iter()
-                                .zip(&d_theirs)
-                                .map(|(a, b)| a + b)
-                                .collect();
-                            let psum: Vec<f32> =
-                                phi.iter().zip(&p_theirs).map(|(a, b)| a + b).collect();
-                            exec::outer_noloco(
-                                &mut eng,
-                                kind,
-                                &mut phi,
-                                &mut delta,
-                                &dsum,
-                                &psum,
-                                cfg.outer.alpha as f32,
-                                cfg.outer.beta as f32,
-                                cfg.outer.gamma as f32,
-                                0.5,
-                            )?;
-                        }
-                        // No peer (odd live count) or peer timed out: a
-                        // singleton group — NoLoCo degrades gracefully
-                        // where a collective would hang.
-                        None => {
-                            let psum = phi.clone();
-                            exec::outer_noloco(
-                                &mut eng,
-                                kind,
-                                &mut phi,
-                                &mut delta,
-                                &my_delta,
-                                &psum,
-                                cfg.outer.alpha as f32,
-                                cfg.outer.beta as f32,
-                                cfg.outer.gamma as f32,
-                                1.0,
-                            )?;
-                        }
-                    }
-                    w.phi = phi;
-                    w.delta = delta;
-                    w.reset_theta_to_phi();
-                }
-                Method::Fsdp => unreachable!(),
-            }
-        } else if outer_due {
-            // dp == 1: outer step degenerates to lookahead on one replica.
-            let my_delta = w.outer_grad();
-            let (mut phi, mut delta) = (std::mem::take(&mut w.phi), std::mem::take(&mut w.delta));
-            let psum = phi.clone();
-            exec::outer_noloco(
-                &mut eng,
-                kind,
-                &mut phi,
-                &mut delta,
-                &my_delta,
-                &psum,
-                cfg.outer.alpha as f32,
-                cfg.outer.beta as f32,
-                0.0,
-                1.0,
-            )?;
-            w.phi = phi;
-            w.delta = delta;
-            w.reset_theta_to_phi();
-        }
-
-        if is_last || pp == 1 {
-            let n = losses.len().max(1) as f64;
-            step_loss.push(losses.iter().sum::<f64>() / n);
-        }
-    }
-
-    // ---- final validation: fixed route r -> r, shared val stream ----
-    // Columns dead at the end of the run sit validation out (their whole
-    // pipeline is dark, so nobody waits on them).
-    let live_at_end = cfg.churn.live_at(dp, cfg.steps.saturating_sub(1) as u64);
-    let mut val_nll = None;
-    if val_batches > 0 && live_at_end[replica] {
-        let mut vloader = Loader::validation(
-            cfg.dataset,
-            cfg.model.vocab,
-            cfg.seed ^ 0x5eed,
-            cfg.model.seq_len,
-            man.mb,
-        );
-        let mut sum = 0.0;
-        for vb in 0..val_batches {
-            let toks: Vec<i32> = vloader
-                .next_batch()
-                .tokens
-                .iter()
-                .map(|&t| t as i32)
-                .collect();
-            if pp == 1 {
-                sum += exec::loss_full(&mut eng, &man, &w.theta, &toks)? as f64;
-            } else if is_first {
-                let x = exec::fwd_first(&mut eng, &man, &w.theta, &toks)?;
-                let nxt = rank_of(1, replica);
-                ep.send(nxt, Tag::new(K_VACT, vb as u32, replica as u32), Payload::F32(x));
-                ep.send(
-                    nxt,
-                    Tag::new(K_VTOK, vb as u32, replica as u32),
-                    Payload::U32(toks.iter().map(|&t| t as u32).collect()),
-                );
-            } else {
-                let act = ep
-                    .recv(Tag::new(K_VACT, vb as u32, replica as u32))
-                    .payload
-                    .into_f32();
-                let vtoks: Vec<i32> = ep
-                    .recv(Tag::new(K_VTOK, vb as u32, replica as u32))
-                    .payload
-                    .u32()
-                    .iter()
-                    .map(|&t| t as i32)
-                    .collect();
-                if is_last {
-                    sum += exec::loss_last(&mut eng, &man, &w.theta, &act, &vtoks)? as f64;
-                } else {
-                    let x = exec::fwd_mid(&mut eng, &man, &w.theta, &act)?;
-                    let nxt = rank_of(stage + 1, replica);
-                    ep.send(nxt, Tag::new(K_VACT, vb as u32, replica as u32), Payload::F32(x));
-                    ep.send(
-                        nxt,
-                        Tag::new(K_VTOK, vb as u32, replica as u32),
-                        Payload::U32(vtoks.iter().map(|&t| t as u32).collect()),
-                    );
-                }
-            }
-        }
-        if is_last || pp == 1 {
-            val_nll = Some(sum / val_batches as f64);
-        }
-    }
-
-    Ok(WorkerOut { step_loss, val_nll })
 }

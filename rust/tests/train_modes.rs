@@ -251,11 +251,17 @@ fn threaded_noloco_runs_and_reports() {
     }
     let cfg = cfg_for(Method::NoLoCo, 2, 2, 2);
     let report = ThreadedTrainer::new(cfg).with_val_batches(2).run().unwrap();
+    assert_eq!(report.executor, "threaded");
     assert_eq!(report.step_train_loss.len(), 2);
     assert!(report.step_train_loss.iter().all(|l| l.is_finite()));
     assert!(report.final_val_nll.is_finite());
-    assert!(report.bytes_sent > 0);
-    assert!(report.msgs_sent > 0);
+    assert!(report.comm.bytes_sent > 0);
+    assert!(report.comm.msgs_sent > 0);
+    // One outer step over 2 stages at dp = 2: a pair per stage row, and
+    // no blocking collectives — the unified counters keep seed semantics.
+    assert_eq!(report.comm.pair_exchanges, 2);
+    assert_eq!(report.comm.blocking_collectives, 0);
+    assert!(report.comm.activation_hops > 0);
 }
 
 #[test]
@@ -348,6 +354,93 @@ fn sim_supports_general_gossip_groups() {
     assert!(report.final_val_nll.is_finite());
     // One 3-member group = 3 pairwise exchanges per stage row.
     assert_eq!(report.comm.pair_exchanges, 2 * 3);
+}
+
+/// Golden trajectories: under the `TrainerCore` redesign every method
+/// must stay deterministic — same seed, same `RunTrace`, same comm
+/// accounting — and the per-method counting invariants pinned above
+/// (`fsdp_replicas_stay_bit_identical`, `noloco_diverges…`,
+/// `diloco_outer_resets…`) pin the counters to the pre-redesign seed
+/// values. This test pins the full trace series bit-for-bit across
+/// repeated runs for all three methods.
+#[test]
+fn golden_trajectories_are_bit_stable_per_method() {
+    let Some(mut eng) = engine(2) else { return };
+    for method in [Method::Fsdp, Method::DiLoCo, Method::NoLoCo] {
+        let mut cfg = cfg_for(method, 2, 2, 4);
+        cfg.eval_every = 2;
+        let a = SimTrainer::new(cfg.clone(), &mut eng).unwrap().run().unwrap();
+        let b = SimTrainer::new(cfg, &mut eng).unwrap().run().unwrap();
+        assert_eq!(a.executor, "sim");
+        assert_eq!(a.trace.steps, b.trace.steps, "{method}");
+        assert_eq!(a.trace.train_loss, b.trace.train_loss, "{method}");
+        assert_eq!(a.trace.val_loss, b.trace.val_loss, "{method}");
+        assert_eq!(a.trace.weight_std, b.trace.weight_std, "{method}");
+        assert_eq!(a.step_train_loss, b.step_train_loss, "{method}");
+        assert_eq!(a.comm, b.comm, "{method}");
+        assert_eq!(a.step_train_loss.len(), 4, "{method}");
+        assert!(a.step_train_loss.iter().all(|l| l.is_finite()), "{method}");
+    }
+}
+
+/// The threaded executor runs the *same* `SyncStrategy` impls over the
+/// fabric communicator: for every method its loss series must track the
+/// grid executor's to float tolerance (collective fold order is the only
+/// difference).
+#[test]
+fn threaded_matches_sim_for_all_methods() {
+    if !have_artifacts(2) {
+        return;
+    }
+    for method in [Method::Fsdp, Method::DiLoCo, Method::NoLoCo] {
+        let cfg = cfg_for(method, 2, 2, 2);
+        let mut eng = engine(2).unwrap();
+        let sim = SimTrainer::new(cfg.clone(), &mut eng).unwrap().run().unwrap();
+        let thr = ThreadedTrainer::new(cfg).with_val_batches(0).run().unwrap();
+        assert_eq!(thr.step_train_loss.len(), sim.step_train_loss.len(), "{method}");
+        for (a, b) in thr.step_train_loss.iter().zip(&sim.step_train_loss) {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "{method}: threaded {a} vs sim {b} — executors diverged"
+            );
+        }
+        // Logical comm counters agree exactly between executors.
+        assert_eq!(
+            thr.comm.blocking_collectives, sim.comm.blocking_collectives,
+            "{method}"
+        );
+        assert_eq!(thr.comm.pair_exchanges, sim.comm.pair_exchanges, "{method}");
+    }
+}
+
+/// The bandwidth-aware pairing policy is selectable end-to-end and keeps
+/// NoLoCo's trajectory finite and deterministic on a WAN topology.
+#[test]
+fn bandwidth_aware_pairing_trains_on_wan() {
+    let Some(mut eng) = engine(2) else { return };
+    let mut cfg = cfg_for(Method::NoLoCo, 2, 2, 4);
+    cfg.pairing = noloco::config::PairingMode::BandwidthAware;
+    cfg.net.preset = noloco::config::NetPreset::MultiRegionWan;
+    cfg.net.regions = 2;
+    let a = SimTrainer::new(cfg.clone(), &mut eng).unwrap().run().unwrap();
+    let b = SimTrainer::new(cfg, &mut eng).unwrap().run().unwrap();
+    assert!(a.final_val_nll.is_finite());
+    assert_eq!(a.final_val_nll, b.final_val_nll);
+    // Still gossip: no blocking collectives under the biased policy.
+    assert_eq!(a.comm.blocking_collectives, 0);
+    assert!(a.comm.pair_exchanges > 0);
+}
+
+#[test]
+fn run_threaded_convenience_mirrors_trainer() {
+    if !have_artifacts(2) {
+        return;
+    }
+    let cfg = cfg_for(Method::NoLoCo, 2, 2, 2);
+    let a = noloco::train::run_threaded(&cfg).unwrap();
+    assert_eq!(a.executor, "threaded");
+    assert_eq!(a.step_train_loss.len(), 2);
+    assert!(a.step_train_loss.iter().all(|l| l.is_finite()));
 }
 
 #[test]
