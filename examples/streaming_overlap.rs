@@ -1,0 +1,116 @@
+//! Streaming fragmented outer sync — how much synchronization wall-clock
+//! the overlap hides.
+//!
+//! Two views of the same question:
+//!
+//! * **Cost model** (always runs): on the `wan` preset, compare the gated
+//!   outer sync (the full (Δ, φ) pair exchange gating every boundary)
+//!   against the streamed residual — each of `K` fragments exchanged
+//!   behind one inner phase, only `max(0, t_k − compute)` left visible —
+//!   sweeping the fragment count. The *hiding ratio* `1 − residual/gated`
+//!   is the fraction of sync time removed from the critical path.
+//! * **Real trainer** (when the tiny artifact build exists): run gated
+//!   NoLoCo and `--sync streaming` side by side and show the identical
+//!   report shape, finite losses, and the unchanged collective-free
+//!   communication profile.
+//!
+//! ```sh
+//! cargo run --release --example streaming_overlap -- --out results/streaming
+//! ```
+
+use noloco::bench::gated_vs_streamed_pair_sync;
+use noloco::cli::Args;
+use noloco::config::{presets, NetPreset, NetTopoConfig, StreamConfig, SyncMode};
+use noloco::metrics::Table;
+
+const DP: usize = 24;
+/// Both directions of (Δ, φ) at `small`-model scale.
+const PAYLOAD: u64 = 2 * (4 << 20);
+/// Virtual seconds of inner compute behind each fragment (~one phase).
+const COMPUTE: f64 = 0.5;
+const ROUNDS: u64 = 100;
+
+fn wan() -> NetTopoConfig {
+    NetTopoConfig {
+        preset: NetPreset::MultiRegionWan,
+        regions: 3,
+        ..NetTopoConfig::default()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let out = args.opt("out").unwrap_or("results/streaming").to_string();
+    std::fs::create_dir_all(&out)?;
+
+    println!(
+        "## Streamed outer sync on the wan preset — {DP} replicas, \
+         {:.0} MiB (Δ, φ), {COMPUTE}s inner phase per fragment\n",
+        PAYLOAD as f64 / (1024.0 * 1024.0)
+    );
+
+    let mut table = Table::new(&["fragments", "gated (s)", "streamed residual (s)", "hiding"]);
+    let mut csv = String::from("fragments,gated_secs,residual_secs,hiding_ratio\n");
+    let mut last_resid = f64::INFINITY;
+    for fragments in [1usize, 2, 4, 8] {
+        let (gated, resid) =
+            gated_vs_streamed_pair_sync(&wan(), DP, PAYLOAD, fragments, COMPUTE, ROUNDS);
+        let hiding = 1.0 - resid / gated;
+        table.row(&[
+            fragments.to_string(),
+            format!("{gated:.3}"),
+            format!("{resid:.3}"),
+            format!("{:.1}%", hiding * 100.0),
+        ]);
+        csv.push_str(&format!("{fragments},{gated:.4},{resid:.4},{hiding:.4}\n"));
+        assert!(
+            resid < gated,
+            "streamed residual must undercut the gated sync: {resid} vs {gated}"
+        );
+        assert!(
+            resid <= last_resid * 1.05,
+            "finer fragments must not raise the residual materially"
+        );
+        last_resid = resid;
+    }
+    let md = table.to_markdown();
+    println!("{md}");
+    std::fs::write(format!("{out}/hiding.md"), &md)?;
+    std::fs::write(format!("{out}/hiding.csv"), csv)?;
+    println!(
+        "Splitting the exchange lets each chunk ride behind an inner phase: the \
+         serialization term divides by K while the per-fragment latency stays \
+         below the phase length, so the visible sync cost collapses.\n"
+    );
+
+    // ---- the real trainer, when artifacts are available ----
+    match noloco::runtime::find_build("artifacts", "tiny", 2) {
+        Ok(_) => {
+            let mut cfg = presets::preset("tiny").unwrap();
+            cfg.steps = 8;
+            cfg.warmup = 2;
+            cfg.eval_tokens = 512;
+            cfg.outer.inner_steps = 2;
+            let gated = noloco::train::run_sim(&cfg)?;
+            cfg.sync = SyncMode::Streaming;
+            cfg.stream = StreamConfig { fragments: 2, overlap: true };
+            let streamed = noloco::train::run_sim(&cfg)?;
+            println!(
+                "## Trainer check (tiny artifacts): gated ppl {:.2} vs streamed ppl {:.2}; \
+                 both collective-free ({} / {} blocking collectives), streamed sends the \
+                 same exchanges in {}-fragment slices",
+                gated.final_val_ppl,
+                streamed.final_val_ppl,
+                gated.comm.blocking_collectives,
+                streamed.comm.blocking_collectives,
+                cfg.stream.fragments,
+            );
+        }
+        Err(_) => println!(
+            "(trainer check skipped: no tiny artifacts; run `make artifacts`)"
+        ),
+    }
+
+    println!("\nwritten to {out}/hiding.*");
+    Ok(())
+}

@@ -1,11 +1,12 @@
 //! Topology + elastic-membership benchmarks: per-message transfer
 //! sampling across the three network presets, payload-aware collective
-//! cost models on a WAN, and the shared-seed derivations (live route
-//! plans, churn masks) that sit on the trainers' hot path.
+//! cost models on a WAN, the shared-seed derivations (live route
+//! plans, churn masks) that sit on the trainers' hot path, and the
+//! gated-vs-streamed outer-sync comparison (overlap hiding ratio).
 //!
 //! `cargo bench --bench bench_topo`
 
-use noloco::bench::{bench_row, section};
+use noloco::bench::{bench_row, gated_vs_streamed_pair_sync, section};
 use noloco::collective::{
     pair_average_time_bytes, ring_all_reduce_time_bytes, tree_all_reduce_time_bytes,
     tree_all_reduce_time_over,
@@ -161,10 +162,52 @@ fn pairing_walk(
     (sync_sum / rounds as f64, var)
 }
 
+/// Gated vs streamed outer sync on the WAN / long-tail presets: the
+/// gated cost is the full (Δ, φ) pair exchange at the boundary; the
+/// streamed cost is the per-fragment residual left visible after each
+/// fragment hides behind one inner phase. The **hiding ratio**
+/// `1 − residual / gated` is the fraction of synchronization wall-clock
+/// the streaming strategy removes from the critical path.
+fn streaming_overlap_comparison() {
+    section("gated vs streamed outer sync (24 replicas, 8 MiB (Δ, φ), 4 fragments)");
+    let dp = 24;
+    let payload = 2u64 * (4 << 20);
+    let fragments = 4;
+    // One inner phase of compute behind each fragment (~m inner steps).
+    let compute = 0.5;
+    let rounds = 100u64;
+    let presets = [
+        ("wan", NetTopoConfig {
+            preset: NetPreset::MultiRegionWan,
+            regions: 3,
+            ..NetTopoConfig::default()
+        }),
+        ("long-tail", NetTopoConfig {
+            preset: NetPreset::LongTailInternet,
+            ..NetTopoConfig::default()
+        }),
+    ];
+    println!(
+        "  {:<12} {:>14} {:>16} {:>14}",
+        "preset", "gated (s)", "streamed resid (s)", "hiding ratio"
+    );
+    for (name, cfg) in presets {
+        let (gated, resid) =
+            gated_vs_streamed_pair_sync(&cfg, dp, payload, fragments, compute, rounds);
+        let hiding = 1.0 - resid / gated;
+        println!("  {name:<12} {gated:>14.4} {resid:>16.4} {hiding:>14.3}");
+        assert!(
+            resid < gated,
+            "streamed residual must undercut the gated sync on {name}: {resid} vs {gated}"
+        );
+    }
+}
+
 fn main() {
     println!("bench_topo — WAN topology, payload-aware collectives, elastic membership");
     transfer_sampling();
     collective_costs();
     shared_seed_derivations();
     pairing_comparison();
+    streaming_overlap_comparison();
 }

@@ -7,6 +7,44 @@
 
 use std::time::{Duration, Instant};
 
+use crate::collective::{pair_average_time_bytes, streamed_pair_residual_bytes};
+use crate::config::NetTopoConfig;
+use crate::net::SimClock;
+use crate::train::{PairingPolicy, UniformPairing};
+
+/// Mean gated outer-sync time vs streamed residual over `rounds` uniform
+/// NoLoCo pairings on `cfg`'s topology: per round, the gated cost is the
+/// full `payload` pair exchange ([`pair_average_time_bytes`]) and the
+/// streamed cost is the per-fragment residual left visible after each of
+/// `fragments` chunks hides behind `compute` seconds of inner phase
+/// ([`streamed_pair_residual_bytes`]). Returns `(gated, residual)` mean
+/// seconds. One measurement protocol shared by `bench_topo`'s hiding-ratio
+/// section and `examples/streaming_overlap` so the two cannot drift.
+pub fn gated_vs_streamed_pair_sync(
+    cfg: &NetTopoConfig,
+    dp: usize,
+    payload: u64,
+    fragments: usize,
+    compute: f64,
+    rounds: u64,
+) -> (f64, f64) {
+    let live: Vec<usize> = (0..dp).collect();
+    let (mut gated, mut resid) = (0.0f64, 0.0f64);
+    for outer_idx in 1..=rounds {
+        let pairs: Vec<(usize, usize)> = UniformPairing
+            .draw(&live, 2, 0, outer_idx, 7)
+            .into_iter()
+            .filter(|g| g.len() == 2)
+            .map(|g| (g[0], g[1]))
+            .collect();
+        let mut c = SimClock::with_topology(cfg.build(dp, 11), outer_idx);
+        gated += pair_average_time_bytes(&mut c, Some(&pairs), payload);
+        let mut c = SimClock::with_topology(cfg.build(dp, 11), outer_idx ^ 0x5a5a);
+        resid += streamed_pair_residual_bytes(&mut c, Some(&pairs), payload, fragments, compute);
+    }
+    (gated / rounds as f64, resid / rounds as f64)
+}
+
 /// One benchmark's raw measurements.
 #[derive(Clone, Debug)]
 pub struct Sample {
@@ -146,5 +184,18 @@ mod tests {
         let s = Sample { name: "x".into(), iters_ns: vec![10.0, 20.0, 30.0] };
         assert!((s.mean_ns() - 20.0).abs() < 1e-12);
         assert_eq!(s.median_ns(), 20.0);
+    }
+
+    #[test]
+    fn gated_vs_streamed_walk_degenerates_and_hides() {
+        // On the constant-latency LAN preset, one fragment at zero
+        // compute is exactly the gated exchange; a long phase hides the
+        // streamed exchange entirely.
+        let lan = NetTopoConfig::default();
+        let (gated, resid) = gated_vs_streamed_pair_sync(&lan, 8, 1 << 20, 1, 0.0, 10);
+        assert!((gated - resid).abs() < 1e-12, "{gated} vs {resid}");
+        assert!(gated > 0.0);
+        let (_, hidden) = gated_vs_streamed_pair_sync(&lan, 8, 1 << 20, 4, 10.0, 10);
+        assert_eq!(hidden, 0.0);
     }
 }

@@ -27,7 +27,8 @@ const VALUE_KEYS: &[&str] = &[
     "preset", "config", "method", "dataset", "routing", "steps", "dp", "pp", "seed",
     "out", "artifacts", "set", "eval-every", "inner-steps", "group", "alpha", "beta",
     "gamma", "warmup", "world", "sigma", "mu", "iters", "dim", "omega", "outer-steps",
-    "batch-tokens", "csv", "topo", "regions", "churn", "payload", "pairing",
+    "batch-tokens", "csv", "topo", "regions", "churn", "payload", "pairing", "sync",
+    "fragments", "overlap",
 ];
 
 impl Args {
@@ -176,6 +177,20 @@ pub fn train_config_from(args: &Args) -> Result<crate::config::TrainConfig, Stri
         cfg.pairing = crate::config::PairingMode::parse(p)
             .ok_or_else(|| format!("unknown pairing policy `{p}` (uniform|bandwidth-aware)"))?;
     }
+    if let Some(s) = args.opt("sync") {
+        cfg.sync = crate::config::SyncMode::parse(s)
+            .ok_or_else(|| format!("unknown sync mode `{s}` (gated|streaming)"))?;
+    }
+    if let Some(v) = args.opt_usize("fragments")? {
+        cfg.stream.fragments = v;
+    }
+    if let Some(o) = args.opt("overlap") {
+        cfg.stream.overlap = match o.to_ascii_lowercase().as_str() {
+            "on" | "true" | "1" => true,
+            "off" | "false" | "0" => false,
+            _ => return Err(format!("--overlap expects on|off, got `{o}`")),
+        };
+    }
     // --set model.hidden=128 style overrides, applied last.
     if !args.sets.is_empty() {
         let mut text = String::new();
@@ -257,6 +272,24 @@ mod tests {
         assert_eq!(cfg.pairing, crate::config::PairingMode::BandwidthAware);
         let a = parse(&["train", "--pairing", "nearest"]);
         assert!(train_config_from(&a).unwrap_err().contains("pairing"));
+    }
+
+    #[test]
+    fn sync_flags_plumb_through() {
+        let a = parse(&[
+            "train", "--sync", "streaming", "--fragments", "8", "--overlap", "off",
+        ]);
+        let cfg = train_config_from(&a).unwrap();
+        assert_eq!(cfg.sync, crate::config::SyncMode::Streaming);
+        assert_eq!(cfg.stream.fragments, 8);
+        assert!(!cfg.stream.overlap);
+        let a = parse(&["train", "--sync", "bulk"]);
+        assert!(train_config_from(&a).unwrap_err().contains("sync"));
+        let a = parse(&["train", "--overlap", "maybe"]);
+        assert!(train_config_from(&a).unwrap_err().contains("overlap"));
+        // Streaming over FSDP is rejected by validation at the end.
+        let a = parse(&["train", "--sync", "streaming", "--method", "fsdp"]);
+        assert!(train_config_from(&a).is_err());
     }
 
     #[test]

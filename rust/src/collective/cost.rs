@@ -139,6 +139,70 @@ pub fn pair_average_time_bytes(
     acc / pairs.len() as f64
 }
 
+/// Residual (non-hidden) time of a *streamed* gossip outer sync
+/// (Streaming-DiLoCo-style overlap): the `bytes` payload splits into
+/// `fragments` equal chunks, each pair-exchanged behind one inner phase
+/// of `compute` seconds, so per fragment only `max(0, t_k − compute)`
+/// remains visible at a boundary. Returns the summed residual averaged
+/// over pairs — the streamed counterpart of [`pair_average_time_bytes`]
+/// (to which it reduces exactly at `fragments = 1`, `compute = 0`).
+///
+/// Unlike the gated models this does not advance the pair schedules:
+/// each fragment's exchange is measured standalone, because in the
+/// streamed timeline it starts at its own boundary, not chained after
+/// the previous fragment.
+pub fn streamed_pair_residual_bytes(
+    clock: &mut SimClock,
+    pairs: Option<&[(usize, usize)]>,
+    bytes: u64,
+    fragments: usize,
+    compute: f64,
+) -> f64 {
+    let n = clock.world();
+    let default: Vec<(usize, usize)> = (0..n / 2).map(|k| (2 * k, 2 * k + 1)).collect();
+    let pairs = pairs.unwrap_or(&default);
+    if pairs.is_empty() {
+        return 0.0;
+    }
+    let k = fragments.max(1);
+    let chunk = bytes.div_ceil(k as u64);
+    let mut acc = 0.0;
+    for &(a, b) in pairs {
+        let mut resid = 0.0;
+        for _ in 0..k {
+            // Symmetric exchange: both directions in flight at once, the
+            // pair is done when the slower one lands.
+            let t = clock.link_time(a, b, chunk).max(clock.link_time(b, a, chunk));
+            resid += (t - compute).max(0.0);
+        }
+        acc += resid;
+    }
+    acc / pairs.len() as f64
+}
+
+/// Streamed counterpart of [`tree_all_reduce_time_over`] for the DiLoCo
+/// flavor: each of the `fragments` chunks runs its own tree all-reduce
+/// behind an inner phase of `compute` seconds; the returned value is the
+/// summed per-fragment residual `max(0, t_k − compute)`. Resets the
+/// clock's schedule between fragments (each starts at its own boundary).
+pub fn streamed_tree_residual_bytes(
+    clock: &mut SimClock,
+    members: &[usize],
+    bytes: u64,
+    fragments: usize,
+    compute: f64,
+) -> f64 {
+    let k = fragments.max(1);
+    let chunk = bytes.div_ceil(k as u64);
+    let mut resid = 0.0;
+    for _ in 0..k {
+        clock.reset();
+        let t = tree_all_reduce_time_over(clock, members, chunk);
+        resid += (t - compute).max(0.0);
+    }
+    resid
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -278,6 +342,58 @@ mod tests {
         let mut c = SimClock::with_topology(topo(), 0);
         let fast_pairs = [(0usize, 1usize), (2, 3), (4, 5)];
         assert!((pair_average_time_bytes(&mut c, Some(&fast_pairs), 0) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn streamed_pair_residual_reduces_to_gated_at_k1_zero_compute() {
+        use crate::net::topo::{Link, Topology};
+        // Same draw order as `exchange_bytes` on a fresh clock: one
+        // fragment at zero compute is exactly the gated exchange.
+        let topo = || Topology::single_switch(8, Link::new(LatencyModel::Constant(0.3), 1000.0));
+        let mut a = SimClock::with_topology(topo(), 9);
+        let gated = pair_average_time_bytes(&mut a, None, 600);
+        let mut b = SimClock::with_topology(topo(), 9);
+        let streamed = streamed_pair_residual_bytes(&mut b, None, 600, 1, 0.0);
+        assert!((gated - streamed).abs() < 1e-12, "{gated} vs {streamed}");
+    }
+
+    #[test]
+    fn streamed_pair_residual_hides_behind_long_phases() {
+        use crate::net::topo::{Link, Topology};
+        // Constant 0.1 s latency + 1 MiB/s, 4 MiB payload in 4 fragments:
+        // per-fragment exchange is 0.1 + 1.0 = 1.1 s.
+        let topo =
+            || Topology::single_switch(4, Link::new(LatencyModel::Constant(0.1), (1 << 20) as f64));
+        let payload: u64 = 4 << 20;
+        // Gated: the whole 4 MiB gates the boundary — 4.1 s.
+        let mut c = SimClock::with_topology(topo(), 1);
+        let gated = pair_average_time_bytes(&mut c, None, payload);
+        assert!((gated - 4.1).abs() < 1e-9);
+        // A 2 s inner phase swallows each 1.1 s fragment entirely.
+        let mut c = SimClock::with_topology(topo(), 1);
+        assert_eq!(streamed_pair_residual_bytes(&mut c, None, payload, 4, 2.0), 0.0);
+        // A 0.6 s phase leaves 4 × 0.5 s visible — still half the gated
+        // cost, and the fragment count now multiplies only the *latency*.
+        let mut c = SimClock::with_topology(topo(), 1);
+        let resid = streamed_pair_residual_bytes(&mut c, None, payload, 4, 0.6);
+        assert!((resid - 2.0).abs() < 1e-9, "{resid}");
+        assert!(resid < gated);
+    }
+
+    #[test]
+    fn streamed_tree_residual_hides_behind_long_phases() {
+        use crate::net::topo::{Link, Topology};
+        // n = 8 tree, depth 3, constant 1 s latency, latency-only links:
+        // each fragment's all-reduce takes 6 s regardless of the split.
+        let topo = || Topology::single_switch(8, Link::constant(1.0));
+        let members: Vec<usize> = (0..8).collect();
+        let mut c = SimClock::with_topology(topo(), 0);
+        let full = streamed_tree_residual_bytes(&mut c, &members, 0, 1, 0.0);
+        assert_eq!(full, 6.0);
+        let mut c = SimClock::with_topology(topo(), 0);
+        assert_eq!(streamed_tree_residual_bytes(&mut c, &members, 0, 2, 6.0), 0.0);
+        let mut c = SimClock::with_topology(topo(), 0);
+        assert_eq!(streamed_tree_residual_bytes(&mut c, &members, 0, 2, 4.0), 4.0);
     }
 
     #[test]

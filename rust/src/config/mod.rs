@@ -82,6 +82,63 @@ impl fmt::Display for PairingMode {
     }
 }
 
+/// When the outer synchronization's payload crosses the network relative
+/// to the inner phases — the scheduling selector for the
+/// [`SyncStrategy`](crate::train::SyncStrategy) built by
+/// [`crate::train::strategy_for_config`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncMode {
+    /// The seed behaviour: the full (Δ, φ) exchange (or outer all-reduce)
+    /// gates the boundary between inner phases.
+    Gated,
+    /// Streaming fragmented sync (Streaming-DiLoCo-style overlap): the
+    /// outer state splits into [`StreamConfig::fragments`] chunks on a
+    /// round-robin schedule, each offered at one boundary and folded at
+    /// the next so the exchange hides behind the intervening inner phase.
+    Streaming,
+}
+
+impl SyncMode {
+    /// Parse from a config / CLI string.
+    pub fn parse(s: &str) -> Option<SyncMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "gated" | "blocking" => Some(SyncMode::Gated),
+            "streaming" | "stream" => Some(SyncMode::Streaming),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for SyncMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SyncMode::Gated => write!(f, "gated"),
+            SyncMode::Streaming => write!(f, "streaming"),
+        }
+    }
+}
+
+/// Shape of the streamed outer sync (`--sync streaming`): how many
+/// fragments the (Δ, φ) state splits into and whether each fragment's
+/// exchange overlaps the next inner phase. TOML keys `outer.fragments` /
+/// `outer.overlap`; ignored under [`SyncMode::Gated`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamConfig {
+    /// Fragment count K (1..=256; K = 1 streams the whole state at once).
+    pub fragments: usize,
+    /// Fold each fragment one boundary *after* its offer (hiding the
+    /// transfer behind the inner phase) instead of at the same boundary.
+    /// `fragments = 1` with overlap off reproduces the gated trajectory
+    /// bit-for-bit.
+    pub overlap: bool,
+}
+
+impl Default for StreamConfig {
+    fn default() -> StreamConfig {
+        StreamConfig { fragments: 4, overlap: true }
+    }
+}
+
 /// How pipeline stage replicas are wired each iteration (§3.1, §5.2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Routing {
@@ -411,6 +468,11 @@ pub struct TrainConfig {
     pub churn: ChurnSchedule,
     /// NoLoCo gossip-pair drawing policy (ignored by FSDP / DiLoCo).
     pub pairing: PairingMode,
+    /// Outer-sync scheduling: gated (the seed behaviour) or streaming
+    /// fragmented overlap.
+    pub sync: SyncMode,
+    /// Fragment count / overlap shape for [`SyncMode::Streaming`].
+    pub stream: StreamConfig,
 }
 
 impl TrainConfig {
@@ -465,6 +527,15 @@ impl TrainConfig {
                     }
                     None => false,
                 },
+                "outer.sync" => match v.as_str().and_then(SyncMode::parse) {
+                    Some(s) => {
+                        self.sync = s;
+                        true
+                    }
+                    None => false,
+                },
+                "outer.fragments" => set_usize(&mut self.stream.fragments, v),
+                "outer.overlap" => set_bool(&mut self.stream.overlap, v),
                 "outer.alpha" => set_f64(&mut self.outer.alpha, v),
                 "outer.beta" => set_f64(&mut self.outer.beta, v),
                 "outer.gamma" => set_f64(&mut self.outer.gamma, v),
@@ -534,6 +605,21 @@ impl TrainConfig {
                 ));
             }
         }
+        if self.sync == SyncMode::Streaming {
+            if self.outer.method == Method::Fsdp {
+                return Err(
+                    "streaming sync needs an outer method (diloco|noloco); \
+                     FSDP has no (Δ, φ) state to stream"
+                        .into(),
+                );
+            }
+            if self.stream.fragments == 0 || self.stream.fragments > 256 {
+                return Err(format!(
+                    "outer.fragments must be in 1..=256, got {}",
+                    self.stream.fragments
+                ));
+            }
+        }
         Ok(())
     }
 }
@@ -569,6 +655,16 @@ fn set_f64(slot: &mut f64, v: &toml::Value) -> bool {
     match v.as_float() {
         Some(f) => {
             *slot = f;
+            true
+        }
+        None => false,
+    }
+}
+
+fn set_bool(slot: &mut bool, v: &toml::Value) -> bool {
+    match v.as_bool() {
+        Some(b) => {
+            *slot = b;
             true
         }
         None => false,
@@ -708,6 +804,42 @@ mod tests {
         let doc = Doc::parse("[outer]\npairing = \"bandwidth-aware\"\n").unwrap();
         c.apply_doc(&doc).unwrap();
         assert_eq!(c.pairing, PairingMode::BandwidthAware);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn sync_mode_parses_and_plumbs() {
+        assert_eq!(SyncMode::parse("streaming"), Some(SyncMode::Streaming));
+        assert_eq!(SyncMode::parse("Gated"), Some(SyncMode::Gated));
+        assert_eq!(SyncMode::parse("overlapped"), None);
+        let mut c = presets::preset("tiny").unwrap();
+        assert_eq!(c.sync, SyncMode::Gated);
+        let doc = Doc::parse(
+            "[outer]\nsync = \"streaming\"\nfragments = 8\noverlap = false\n",
+        )
+        .unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.sync, SyncMode::Streaming);
+        assert_eq!(c.stream.fragments, 8);
+        assert!(!c.stream.overlap);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn streaming_validation_rejects_fsdp_and_bad_fragment_counts() {
+        let mut c = presets::preset("tiny").unwrap();
+        c.sync = SyncMode::Streaming;
+        c.validate().unwrap();
+        c.stream.fragments = 0;
+        assert!(c.validate().unwrap_err().contains("fragments"));
+        c.stream.fragments = 500;
+        assert!(c.validate().unwrap_err().contains("fragments"));
+        c.stream.fragments = 4;
+        c = presets::as_fsdp(c);
+        c.sync = SyncMode::Streaming;
+        assert!(c.validate().unwrap_err().contains("streaming"));
+        // Gated FSDP stays valid — the streaming restriction is scoped.
+        c.sync = SyncMode::Gated;
         c.validate().unwrap();
     }
 

@@ -12,7 +12,7 @@
 
 use super::{
     Dataset, Method, ModelConfig, NetTopoConfig, OuterConfig, PairingMode, Routing,
-    TopologyConfig, TrainConfig,
+    StreamConfig, SyncMode, TopologyConfig, TrainConfig,
 };
 use crate::net::topo::ChurnSchedule;
 
@@ -51,6 +51,8 @@ fn base(model: ModelConfig, steps: usize, warmup: usize) -> TrainConfig {
         net: NetTopoConfig::default(),
         churn: ChurnSchedule::none(),
         pairing: PairingMode::Uniform,
+        sync: SyncMode::Gated,
+        stream: StreamConfig::default(),
     }
 }
 

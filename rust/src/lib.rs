@@ -35,7 +35,7 @@
 //! | [`metrics`] | perplexity, cross-replica weight σ, Pearson r, CSV |
 //! | [`model`] | Rust mirror of Layer-2 stage parameter shapes |
 //! | [`runtime`] | PJRT engine: artifact loading, compile cache, execution |
-//! | [`train`] | distributed training API: one generic [`train::TrainerCore`] over pluggable [`train::SyncStrategy`] (fsdp / diloco / noloco) and [`train::Communicator`] (accounting / fabric) impls, plus [`train::PairingPolicy`] gossip pairing |
+//! | [`train`] | distributed training API: one generic [`train::TrainerCore`] over pluggable [`train::SyncStrategy`] (fsdp / diloco / noloco / streaming-fragmented overlap via [`train::StreamingSync`]) and [`train::Communicator`] (accounting / fabric) impls, plus [`train::PairingPolicy`] gossip pairing |
 //! | [`bench`] | measurement helpers for `cargo bench` targets |
 
 pub mod bench;

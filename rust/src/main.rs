@@ -83,6 +83,9 @@ fn print_help() {
            --regions N          WAN region count\n\
            --churn EVENTS       'leave:STEP:REPLICA;join:STEP:REPLICA;…'\n\
            --pairing P          NoLoCo gossip pairing: uniform | bandwidth-aware\n\
+           --sync S             outer sync scheduling: gated | streaming\n\
+           --fragments K        streaming: (Δ, φ) fragment count (default 4)\n\
+           --overlap on|off     streaming: fold fragments one boundary late\n\
            --payload BYTES      topo: sync payload (default: model size)"
     );
 }
@@ -90,7 +93,7 @@ fn print_help() {
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = cli::train_config_from(args).map_err(anyhow::Error::msg)?;
     println!(
-        "run: {} | {} | dp={} pp={} | {} steps | routing {:?} | pairing {} | seed {}",
+        "run: {} | {} | dp={} pp={} | {} steps | routing {:?} | pairing {} | sync {}{} | seed {}",
         cfg.model.name,
         cfg.outer.method,
         cfg.topology.dp,
@@ -98,6 +101,16 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.steps,
         cfg.routing,
         cfg.pairing,
+        cfg.sync,
+        if cfg.sync == noloco::config::SyncMode::Streaming {
+            format!(
+                " ({} fragments, overlap {})",
+                cfg.stream.fragments,
+                if cfg.stream.overlap { "on" } else { "off" }
+            )
+        } else {
+            String::new()
+        },
         cfg.seed
     );
     let dir = find_build(&cfg.artifacts_dir, &cfg.model.name, cfg.topology.pp)?;

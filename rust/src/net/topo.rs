@@ -27,6 +27,31 @@
 //! Determinism: all randomness flows through the caller-provided
 //! [`Pcg64`]; two walks of the same schedule with the same seed produce
 //! identical transfer times and membership histories.
+//!
+//! ## Typical use
+//!
+//! Configs build topologies through
+//! [`NetTopoConfig::build`](crate::config::NetTopoConfig::build)
+//! (`--topo lan|wan|long-tail` on the CLI); cost models then query
+//! [`Topology::transfer_time`] (sampled) or
+//! [`Topology::expected_transfer`] (analytic) per message. The pairing
+//! policy [`BandwidthAwarePairing`](crate::train::BandwidthAwarePairing)
+//! reads [`Topology::region_of`] to bias NoLoCo's gossip pairs toward
+//! cheap intra-region links.
+//!
+//! ## Churn semantics
+//!
+//! A [`ChurnSchedule`] is a sorted list of `(step, leave/join)` events
+//! over *DP columns* (one event drops or restores a replica across all
+//! pipeline stages). It is part of the shared config, so every worker
+//! derives the same per-step live mask ([`ChurnSchedule::live_at`])
+//! without any control traffic — churn here is *scheduled*, standing in
+//! for a failure detector (see ROADMAP). [`Membership`] is the
+//! incremental tracker for code that walks events in order. Trainers
+//! react through their strategy's
+//! [`ChurnResponse`](crate::train::ChurnResponse): gossip repairs,
+//! collectives abort, and streamed in-flight fragments that span a
+//! membership change are dropped rather than folded.
 
 use crate::net::LatencyModel;
 use crate::rngx::Pcg64;

@@ -23,6 +23,30 @@
 //! the seed behaviour); on the accounting substrate it populates the
 //! mailbox the fold phase reads.
 //!
+//! ## Streamed fragments
+//!
+//! The streaming strategy ([`StreamingSync`](super::StreamingSync))
+//! stretches the two phases across *boundaries*: fragment `k` of the
+//! (Δ, φ) state is offered at outer boundary `t` and folded at `t + 1`,
+//! so the transfer rides behind the intervening inner phase instead of
+//! gating it. [`Communicator::offer_fragment`] /
+//! [`Communicator::collect_fragment`] carry that protocol for both
+//! flavors — the gossip flavor ships (Δ_k, φ_k) to its pairs, the
+//! streamed-DiLoCo flavor ships Δ_k alone (φ empty) all-to-all across
+//! the row and averages locally. Payloads are tagged
+//! `(round, fragment)` and — unlike `offer_state`, whose mailbox holds
+//! exactly one round — stay readable after the *next* round's offers
+//! begin. [`AccountingComm`] keeps an in-flight fragment buffer
+//! garbage-collected two rounds back; [`FabricComm`] sends real tagged
+//! messages whose `(round, fragment)` pair is packed into the tag's
+//! sequence field (hence the 256-fragment cap enforced by
+//! [`crate::config::TrainConfig::validate`]). Fragment messages the
+//! receiver never collects — a churn event dropped the fold, or a
+//! straggler timeout gave up on the pair — stay in the endpoint stash
+//! for the rest of the run, like trailing gossip traffic after a
+//! timeout; the growth is bounded by dropped rounds × payload (a
+//! stash-expiry sweep is a ROADMAP follow-up).
+//!
 //! Accounting semantics (kept identical to the seed counters):
 //! `activation_hops` / `floats_sent` count training-path activations,
 //! gradients and sync payloads in f32 elements; `bytes_sent` /
@@ -54,6 +78,16 @@ pub const K_VACT: u16 = 103;
 pub const K_VTOK: u16 = 104;
 const K_GOSSIP_D: u16 = 110;
 const K_GOSSIP_P: u16 = 111;
+const K_FRAG_D: u16 = 112;
+const K_FRAG_P: u16 = 113;
+
+/// Pack a `(round, fragment)` pair into one 32-bit sequence value for
+/// fragment-tagged messages and fragment reduce rounds. Fragment counts
+/// are capped at 256 by config validation, so the low byte is the
+/// fragment and the rest the (wrapping) round counter.
+pub(crate) fn frag_seq(seq: u32, frag: u16) -> u32 {
+    seq.wrapping_mul(256).wrapping_add(frag as u32 & 0xff)
+}
 
 /// Tag of one stage-boundary payload: kind + wave (or eval slot) + origin
 /// replica. Unique per in-flight payload on both substrates.
@@ -169,6 +203,35 @@ pub trait Communicator {
         seq: u32,
     ) -> Result<Option<(Vec<f32>, Vec<f32>)>>;
 
+    /// Streamed-fragment phase 1: publish fragment `frag` of this
+    /// worker's `(Δ, φ)` to `peers` under round `seq`. Unlike
+    /// [`Communicator::offer_state`], the offer survives the next round's
+    /// offers — the fold may happen one boundary later (see the module
+    /// docs on streamed fragments).
+    #[allow(clippy::too_many_arguments)]
+    fn offer_fragment(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peers: &[usize],
+        seq: u32,
+        frag: u16,
+        delta: &[f32],
+        phi: &[f32],
+    ) -> Result<()>;
+
+    /// Streamed-fragment phase 2: collect `peer`'s fragment `frag` offered
+    /// under round `seq`. `None` means the peer missed the straggler
+    /// deadline (fabric only); the caller folds a smaller group.
+    fn collect_fragment(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peer: usize,
+        seq: u32,
+        frag: u16,
+    ) -> Result<Option<(Vec<f32>, Vec<f32>)>>;
+
     /// Communication accounting so far.
     fn stats(&self) -> &CommStats;
 }
@@ -189,6 +252,12 @@ pub struct AccountingComm {
     /// Published gossip `(Δ, φ)` for the current round.
     offers: HashMap<(usize, usize), (Vec<f32>, Vec<f32>)>,
     offer_seq: u32,
+    /// Streamed fragment offers in flight, keyed by
+    /// `(stage, replica, round, fragment)`. Entries persist across
+    /// boundaries (an overlapped fold reads the *previous* round's offers
+    /// after the current round began) and are garbage-collected two
+    /// rounds back.
+    frags: HashMap<(usize, usize, u32, u16), (Vec<f32>, Vec<f32>)>,
 }
 
 impl AccountingComm {
@@ -201,6 +270,7 @@ impl AccountingComm {
             reduce_seq: 0,
             offers: HashMap::new(),
             offer_seq: 0,
+            frags: HashMap::new(),
         }
     }
 }
@@ -327,6 +397,50 @@ impl Communicator for AccountingComm {
         match self.offers.get(&(stage, peer)) {
             Some(dp) => Ok(Some(dp.clone())),
             None => bail!("replica {peer} of stage {stage} never offered to gossip round {seq}"),
+        }
+    }
+
+    fn offer_fragment(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peers: &[usize],
+        seq: u32,
+        frag: u16,
+        delta: &[f32],
+        phi: &[f32],
+    ) -> Result<()> {
+        // Keep this round and the previous (its folds may still be due);
+        // anything older was either folded or dropped as stale.
+        self.frags.retain(|&(_, _, s, _), _| s + 2 > seq);
+        self.frags.insert((stage, me, seq, frag), (delta.to_vec(), phi.to_vec()));
+        // Same counting rules as `offer_state`, at fragment granularity:
+        // each member ships its payload to each peer, symmetric pairs
+        // counted once by the lower-numbered side. The payload is the
+        // *actual* element count — (Δ_k, φ_k) for the gossip flavor, Δ_k
+        // alone (φ empty) for the streamed-DiLoCo all-to-all.
+        let n = (delta.len() + phi.len()) as u64;
+        let p = peers.len() as u64;
+        self.stats.pair_exchanges += peers.iter().filter(|&&q| q > me).count() as u64;
+        self.stats.floats_sent += p * n;
+        self.stats.msgs_sent += p * 2;
+        self.stats.bytes_sent += p * 4 * n;
+        Ok(())
+    }
+
+    fn collect_fragment(
+        &mut self,
+        stage: usize,
+        _me: usize,
+        peer: usize,
+        seq: u32,
+        frag: u16,
+    ) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+        match self.frags.get(&(stage, peer, seq, frag)) {
+            Some(dp) => Ok(Some(dp.clone())),
+            None => bail!(
+                "replica {peer} of stage {stage} never offered fragment {frag} of round {seq}"
+            ),
         }
     }
 
@@ -470,6 +584,55 @@ impl Communicator for FabricComm {
         })
     }
 
+    fn offer_fragment(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peers: &[usize],
+        seq: u32,
+        frag: u16,
+        delta: &[f32],
+        phi: &[f32],
+    ) -> Result<()> {
+        let my_rank = self.rank_of(stage, me) as u32;
+        let a = frag_seq(seq, frag);
+        for &p in peers {
+            let rank = self.rank_of(stage, p);
+            self.ep
+                .send(rank, Tag::new(K_FRAG_D, a, my_rank), Payload::F32(delta.to_vec()));
+            self.ep
+                .send(rank, Tag::new(K_FRAG_P, a, my_rank), Payload::F32(phi.to_vec()));
+        }
+        self.stats.pair_exchanges += peers.iter().filter(|&&q| q > me).count() as u64;
+        self.stats.floats_sent += peers.len() as u64 * (delta.len() + phi.len()) as u64;
+        Ok(())
+    }
+
+    fn collect_fragment(
+        &mut self,
+        stage: usize,
+        _me: usize,
+        peer: usize,
+        seq: u32,
+        frag: u16,
+    ) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+        let peer_rank = self.rank_of(stage, peer) as u32;
+        let a = frag_seq(seq, frag);
+        let td = Tag::new(K_FRAG_D, a, peer_rank);
+        let tp = Tag::new(K_FRAG_P, a, peer_rank);
+        Ok(match self.gossip_timeout {
+            None => Some((
+                self.ep.recv(td).payload.into_f32(),
+                self.ep.recv(tp).payload.into_f32(),
+            )),
+            Some(t) => {
+                let Some(d) = self.ep.recv_timeout(td, t) else { return Ok(None) };
+                let Some(p) = self.ep.recv_timeout(tp, t) else { return Ok(None) };
+                Some((d.payload.into_f32(), p.payload.into_f32()))
+            }
+        })
+    }
+
     fn stats(&self) -> &CommStats {
         &self.stats
     }
@@ -537,5 +700,39 @@ mod tests {
         c.offer_reduce(0, 0, 1, &[1.0]).unwrap();
         let mut buf = vec![1.0];
         assert!(c.all_reduce_mean(0, 0, &[0, 1], 1, &mut buf).is_err());
+    }
+
+    #[test]
+    fn accounting_fragments_survive_the_next_round_then_expire() {
+        let mut c = AccountingComm::new();
+        c.offer_fragment(0, 0, &[1], 1, 0, &[1.0], &[2.0]).unwrap();
+        c.offer_fragment(0, 1, &[0], 1, 0, &[3.0], &[4.0]).unwrap();
+        // New round's offers do NOT clear the previous round's fragments —
+        // the stale-fold contract of the streaming strategy.
+        c.offer_fragment(0, 0, &[1], 2, 1, &[5.0], &[6.0]).unwrap();
+        let (d, p) = c.collect_fragment(0, 0, 1, 1, 0).unwrap().unwrap();
+        assert_eq!((d, p), (vec![3.0], vec![4.0]));
+        // Two rounds on, round-1 fragments are garbage-collected.
+        c.offer_fragment(0, 0, &[1], 3, 2, &[7.0], &[8.0]).unwrap();
+        assert!(c.collect_fragment(0, 0, 1, 1, 0).is_err());
+    }
+
+    #[test]
+    fn accounting_fragment_counting_matches_gossip_rules() {
+        let mut c = AccountingComm::new();
+        c.offer_fragment(0, 0, &[1], 1, 0, &[1.0, 2.0], &[3.0, 4.0]).unwrap();
+        c.offer_fragment(0, 1, &[0], 1, 0, &[5.0, 6.0], &[7.0, 8.0]).unwrap();
+        assert_eq!(c.stats().pair_exchanges, 1, "pair counted once per fragment round");
+        assert_eq!(c.stats().floats_sent, 2 * 2 * 2, "both sides ship (Δ_k, φ_k)");
+        assert_eq!(c.stats().msgs_sent, 4);
+        assert_eq!(c.stats().bytes_sent, 4 * 4 * 2);
+    }
+
+    #[test]
+    fn frag_seq_packs_round_and_fragment_distinctly() {
+        assert_eq!(frag_seq(1, 0), 256);
+        assert_eq!(frag_seq(1, 1), 257);
+        assert_eq!(frag_seq(2, 0), 512);
+        assert_ne!(frag_seq(3, 7), frag_seq(7, 3));
     }
 }

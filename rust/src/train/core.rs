@@ -413,6 +413,21 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
                 }
             }
         }
+        // Streamed overlap leaves the final boundary's fragment in
+        // flight; drain it so the finishing (φ, θ) include every offered
+        // exchange (no-op for gated strategies). The last eval above ran
+        // before this fold, mirroring a real deployment where the tail
+        // fragment lands after the final report.
+        {
+            let live = self.live_replicas();
+            let final_outer = (self.cfg.steps / self.cfg.outer.inner_steps) as u64;
+            let TrainerCore { comm, strategy, workers, live: live_mask, .. } = self;
+            for w in workers.iter_mut() {
+                if live_mask[w.replica] {
+                    strategy.drain(comm, w, &live, final_outer)?;
+                }
+            }
+        }
         Ok(TrainReport {
             final_val_nll: last_val,
             final_val_ppl: perplexity(last_val),
@@ -657,15 +672,26 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
     }
 
     /// Outer optimizer step, fully delegated to the configured
-    /// [`SyncStrategy`](super::SyncStrategy): offer phase for every owned
-    /// live worker, then the fold/update phase. `outer_idx` is the
-    /// 1-based outer-step counter shared by both executors.
+    /// [`SyncStrategy`](super::SyncStrategy). The boundary is three-phase
+    /// to support streamed overlap: the offer phase runs for every owned
+    /// live worker first (so a streamed offer snapshots `Δ = θ − φ`
+    /// before any fold resets θ over the same range), then any fragment
+    /// exchange left in flight from the previous boundary folds
+    /// ([`SyncStrategy::fold_inflight`](super::SyncStrategy::fold_inflight),
+    /// a no-op for gated strategies), then the fold/update phase.
+    /// `outer_idx` is the 1-based outer-step counter shared by both
+    /// executors.
     pub fn outer_step(&mut self, outer_idx: u64) -> Result<()> {
         let live = self.live_replicas();
         let TrainerCore { comm, strategy, workers, eng, live: live_mask, .. } = self;
         for w in workers.iter() {
             if live_mask[w.replica] {
                 strategy.offer_outer(comm, w, &live, outer_idx)?;
+            }
+        }
+        for w in workers.iter_mut() {
+            if live_mask[w.replica] {
+                strategy.fold_inflight(comm, w, &live, outer_idx)?;
             }
         }
         for w in workers.iter_mut() {

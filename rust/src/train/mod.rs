@@ -17,6 +17,10 @@
 //!   [`UniformPairing`] (the paper's uniform draw) or
 //!   [`BandwidthAwarePairing`] (intra-region-biased pairs on a WAN, with
 //!   periodic uniform rounds preserving the mixing guarantee).
+//!   [`StreamingSync`] (`--sync streaming`) layers Streaming-DiLoCo-style
+//!   fragmented overlap on either outer flavor: the (Δ, φ) state splits
+//!   into `outer.fragments` chunks, each offered at one boundary and
+//!   folded at the next so the exchange hides behind the inner phase.
 //! * [`Communicator`] — how payloads move: [`AccountingComm`] hands
 //!   buffers over in memory and *accounts* the traffic (the deterministic
 //!   harness behind every convergence experiment), [`FabricComm`] sends
@@ -48,6 +52,7 @@ mod exec;
 mod sim;
 mod state;
 mod strategy;
+mod streaming;
 mod threaded;
 
 pub use checkpoint::Checkpoint;
@@ -63,6 +68,7 @@ pub use strategy::{
     for_config as strategy_for_config, BandwidthAwarePairing, ChurnResponse, CommPattern,
     DilocoSync, FsdpSync, NolocoSync, PairingPolicy, SyncStrategy, UniformPairing,
 };
+pub use streaming::{FragmentSchedule, StreamingSync};
 pub use threaded::ThreadedTrainer;
 
 use anyhow::Result;

@@ -6,8 +6,11 @@
 //! steps, NoLoCo gossips `(Δ, φ)` over random pairs — so each is one impl
 //! of this trait, shared verbatim by both executors through the
 //! [`Communicator`](super::Communicator) abstraction. A new
-//! synchronization variant (streaming overlap, decoupled momentum à la
-//! DeMo, …) is one new impl, not two new trainer forks.
+//! synchronization variant is one new impl, not two new trainer forks —
+//! [`StreamingSync`](super::StreamingSync) (streaming fragmented overlap
+//! à la Streaming DiLoCo) is exactly that, layered on the
+//! [`SyncStrategy::fold_inflight`] / [`SyncStrategy::drain`] hooks the
+//! core calls around each boundary.
 //!
 //! Every synchronization point is two-phase (see [`super::comm`]): the
 //! core calls `offer_*` for each locally-owned live worker, then the
@@ -24,7 +27,7 @@
 
 use anyhow::Result;
 
-use crate::config::{Method, OuterConfig, PairingMode, TrainConfig};
+use crate::config::{Method, OuterConfig, PairingMode, SyncMode, TrainConfig};
 use crate::net::{ChurnSchedule, Topology};
 use crate::rngx::Pcg64;
 use crate::runtime::Engine;
@@ -120,32 +123,82 @@ pub trait SyncStrategy: Send {
     ) -> Result<()> {
         Ok(())
     }
+
+    /// Streaming overlap: fold any fragment exchange left in flight from
+    /// the *previous* boundary. Called by the core at every outer
+    /// boundary **after** the offer phase — the offer snapshots
+    /// `Δ = θ − φ` before the fold's θ-reset can touch the same range
+    /// (the `fragments = 1` case addresses the identical range at every
+    /// boundary). Gated strategies have nothing in flight (default
+    /// no-op). See [`StreamingSync`](super::StreamingSync).
+    fn fold_inflight(
+        &mut self,
+        _comm: &mut dyn Communicator,
+        _w: &mut WorkerState,
+        _live: &[usize],
+        _outer_idx: u64,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    /// End-of-run drain: fold whatever is still in flight so the reported
+    /// slow weights include the final boundary's offered exchange. Called
+    /// by the core once after the step loop with the last outer boundary
+    /// the run executed (`final_outer_idx`), so a leftover entry from an
+    /// earlier boundary — e.g. a worker that died mid-run — is recognized
+    /// as stale and dropped rather than folded. Default no-op.
+    fn drain(
+        &mut self,
+        _comm: &mut dyn Communicator,
+        _w: &mut WorkerState,
+        _live: &[usize],
+        _final_outer_idx: u64,
+    ) -> Result<()> {
+        Ok(())
+    }
 }
 
-/// Build the strategy configured on `cfg`.
-pub fn for_config(cfg: &TrainConfig) -> Box<dyn SyncStrategy> {
+/// Build the configured NoLoCo pairing policy (shared by the gated and
+/// streaming strategy constructors).
+pub(crate) fn pairing_for(cfg: &TrainConfig) -> Box<dyn PairingPolicy> {
+    match cfg.pairing {
+        PairingMode::Uniform => Box::new(UniformPairing),
+        PairingMode::BandwidthAware => Box::new(BandwidthAwarePairing::new(
+            cfg.net.build(cfg.topology.dp, cfg.seed),
+        )),
+    }
+}
+
+/// Build the *gated* strategy for `cfg.outer.method` — the one
+/// construction shared by [`for_config`] and the streaming strategy's
+/// degenerate delegate, so the two can never drift apart.
+pub(crate) fn gated_for(cfg: &TrainConfig) -> Box<dyn SyncStrategy> {
     match cfg.outer.method {
         Method::Fsdp => Box::new(FsdpSync),
         Method::DiLoCo => Box::new(DilocoSync {
             alpha: cfg.outer.alpha as f32,
             beta: cfg.outer.beta as f32,
         }),
-        Method::NoLoCo => {
-            let pairing: Box<dyn PairingPolicy> = match cfg.pairing {
-                PairingMode::Uniform => Box::new(UniformPairing),
-                PairingMode::BandwidthAware => Box::new(BandwidthAwarePairing::new(
-                    cfg.net.build(cfg.topology.dp, cfg.seed),
-                )),
-            };
-            Box::new(NolocoSync::new(
-                cfg.outer.clone(),
-                cfg.seed,
-                cfg.topology.dp,
-                cfg.churn.clone(),
-                pairing,
-            ))
-        }
+        Method::NoLoCo => Box::new(NolocoSync::new(
+            cfg.outer.clone(),
+            cfg.seed,
+            cfg.topology.dp,
+            cfg.churn.clone(),
+            pairing_for(cfg),
+        )),
     }
+}
+
+/// Build the strategy configured on `cfg`: the gated method impls below,
+/// or [`StreamingSync`](super::StreamingSync) over the configured flavor
+/// when `--sync streaming` is selected (FSDP has no outer state to
+/// stream; config validation rejects that pairing before trainers get
+/// here).
+pub fn for_config(cfg: &TrainConfig) -> Box<dyn SyncStrategy> {
+    if cfg.sync == SyncMode::Streaming && cfg.outer.method != Method::Fsdp {
+        return Box::new(super::streaming::StreamingSync::from_config(cfg));
+    }
+    gated_for(cfg)
 }
 
 // ---------------------------------------------------------------------
@@ -705,6 +758,19 @@ mod tests {
         cfg.pairing = PairingMode::BandwidthAware;
         let s = for_config(&cfg);
         assert_eq!(s.name(), "noloco");
+        // Streaming sync wraps the configured flavor for both outer
+        // methods and keeps its churn/pattern semantics.
+        cfg.sync = SyncMode::Streaming;
+        let s = for_config(&cfg);
+        assert_eq!(s.name(), "streaming");
+        assert_eq!(s.pattern(), CommPattern::GossipPairs);
+        assert_eq!(s.churn_response(), ChurnResponse::Repair);
+        cfg = crate::config::presets::as_diloco(cfg);
+        cfg.sync = SyncMode::Streaming;
+        let s = for_config(&cfg);
+        assert_eq!(s.name(), "streaming");
+        assert_eq!(s.pattern(), CommPattern::AllReduce);
+        assert_eq!(s.churn_response(), ChurnResponse::Abort);
     }
 
     #[test]

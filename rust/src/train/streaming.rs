@@ -1,0 +1,980 @@
+//! Streaming fragmented outer synchronization ([`StreamingSync`]).
+//!
+//! The gated strategies exchange the full (Δ, φ) state in one shot at
+//! every outer boundary, so the whole ensemble waits on the slowest
+//! transfer before the next inner phase can begin. Streaming DiLoCo
+//! (Douillard et al. 2025) shows that *fragmenting* the outer state and
+//! letting each fragment's exchange ride behind the next inner phase
+//! hides nearly all of that synchronization time. This module is that
+//! idea over the [`TrainerCore`](super::TrainerCore) API:
+//!
+//! * [`FragmentSchedule`] splits the flat parameter vector into `K`
+//!   balanced contiguous fragments and assigns fragment
+//!   `(t − 1) mod K` to outer boundary `t` — each fragment synchronizes
+//!   every `K`-th boundary, cutting the per-boundary payload to `1/K`.
+//! * At boundary `t` the due fragment's `(Δ_k, φ_k)` is **offered** —
+//!   eagerly sent on the fabric, buffered by the accounting
+//!   communicator. With `overlap` on, the **fold** happens at boundary
+//!   `t + 1` — the peers' state is one inner phase stale, exactly the
+//!   staleness Streaming DiLoCo shows is benign — and the transfer is
+//!   hidden behind the phase. With `overlap` off the fold happens at the
+//!   same boundary (gated, but payload-split).
+//! * The boundary order is **offer first, then fold** (the core calls
+//!   [`SyncStrategy::fold_inflight`] after the offer phase): the offer
+//!   snapshots `Δ = θ − φ` *before* the fold's θ-reset can touch the
+//!   same range, so every inner phase's progress is offered exactly
+//!   once — including the `K = 1` case, where fold and offer address
+//!   the identical (full) range at every boundary.
+//! * A fold applies the same outer math as the gated flavor — NoLoCo's
+//!   Eq. 2–3 modified Nesterov over the gossip group, or DiLoCo's
+//!   Nesterov over the fragment's mean Δ — restricted to the fragment's
+//!   range and computed host-side (the fused XLA outer artifacts are
+//!   compiled for the full parameter length, so fragments cannot reuse
+//!   them). Per-fragment momentum state is just the fragment's slice of
+//!   δ, which keeps each fragment's momentum decoupled (DeMo-adjacent).
+//!   After the φ update, θ over the range becomes
+//!   `φ' + (θ_now − θ_offer)`: the offered component is consumed by the
+//!   outer update while the drift accumulated during the in-flight
+//!   phase carries over, so no inner step is silently discarded. Gated
+//!   folds have zero drift and reduce to the plain θ := φ reset.
+//! * Both flavors send eagerly at offer time, so the overlap is real
+//!   wall-clock overlap on the threaded executor. The DiLoCo flavor
+//!   exchanges its fragment all-to-all across the live row and averages
+//!   locally — the same result as the gated tree all-reduce, trading
+//!   `(n−1)×` fragment bandwidth for zero blocking collectives
+//!   (`CommStats::blocking_collectives` stays 0 in streamed runs; a
+//!   tree-structured streamed reduce is a ROADMAP follow-up).
+//!
+//! ## The degenerate configuration routes through the gated strategy
+//!
+//! `fragments = 1` with overlap off is definitionally the gated method;
+//! [`StreamingSync`] then *delegates* every call to the matching
+//! [`NolocoSync`](super::NolocoSync) / [`DilocoSync`](super::DilocoSync)
+//! — built by the same `gated_for` factory `for_config` uses, so the two
+//! constructions cannot drift — and the trajectory, including the
+//! artifact-executed outer update, is bit-for-bit identical to
+//! `--sync gated` (pinned by `tests/streaming_sync.rs`).
+//!
+//! ## Churn: stale fragments are dropped, not folded
+//!
+//! An in-flight fragment records the live set and boundary it was
+//! offered under. The fold is **dropped** — φ, δ and θ keep their
+//! current values and the fragment simply rejoins the schedule `K`
+//! boundaries later — if the live set changed, if any schedule event
+//! fired inside the in-flight window (a leave+rejoin can restore the
+//! offer-time live set while the rejoiner's state was rebuilt), or if
+//! the entry is older than the boundary being folded (a worker that sat
+//! out mid-run). Folds that do proceed mirror the gated strategy's
+//! message-passing repair at fragment granularity: a rejoiner whose
+//! offer-time state was stale adopts the first fresh peer's offered
+//! φ_k — fragment by fragment as each comes due, driven by a staleness
+//! window of `K` phases (a fragment's state predates the ensemble's
+//! until its first post-rejoin exchange) — and fresh members exclude
+//! stale peers' contributions from their consensus sums.
+
+use std::collections::HashMap;
+use std::ops::Range;
+
+use anyhow::{ensure, Result};
+
+use crate::config::{Method, OuterConfig, StreamConfig, TrainConfig};
+use crate::net::topo::ChurnEvent;
+use crate::net::ChurnSchedule;
+use crate::runtime::Engine;
+
+use super::comm::Communicator;
+use super::state::WorkerState;
+use super::strategy::{
+    gated_for, pairing_for, ChurnResponse, CommPattern, PairingPolicy, SyncStrategy,
+    UniformPairing,
+};
+
+/// Balanced contiguous partition of a flat parameter vector into `K`
+/// fragments, plus the round-robin boundary schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FragmentSchedule {
+    n: usize,
+    k: usize,
+}
+
+impl FragmentSchedule {
+    /// Schedule over `n` parameters in `fragments` chunks (clamped to
+    /// `1..=n` so empty fragments never occur).
+    pub fn new(n: usize, fragments: usize) -> FragmentSchedule {
+        FragmentSchedule { n, k: fragments.clamp(1, n.max(1)) }
+    }
+
+    /// Effective fragment count after clamping.
+    pub fn fragments(&self) -> usize {
+        self.k
+    }
+
+    /// Fragment `frag`'s element range: contiguous chunks, the first
+    /// `n mod K` fragments one element larger.
+    pub fn range(&self, frag: usize) -> Range<usize> {
+        assert!(frag < self.k, "fragment {frag} outside schedule of {}", self.k);
+        let base = self.n / self.k;
+        let rem = self.n % self.k;
+        let lo = frag * base + frag.min(rem);
+        lo..lo + base + usize::from(frag < rem)
+    }
+
+    /// Which fragment is due at 1-based outer boundary `outer_idx`.
+    pub fn due_at(&self, outer_idx: u64) -> usize {
+        (outer_idx.saturating_sub(1) % self.k as u64) as usize
+    }
+}
+
+/// One offered-but-unfolded fragment exchange.
+struct Inflight {
+    /// Outer boundary the offer was made at.
+    outer_idx: u64,
+    /// Fragment index within the schedule.
+    frag: usize,
+    /// Gossip group (NoLoCo flavor) or full live row (DiLoCo flavor) the
+    /// offer went to, ascending.
+    group: Vec<usize>,
+    /// Live set snapshot at offer time — folds compare against the
+    /// current live set and drop the fragment on any change.
+    live: Vec<usize>,
+    /// This worker's fragment Δ at offer time.
+    delta: Vec<f32>,
+    /// This worker's fragment φ at offer time.
+    phi: Vec<f32>,
+    /// This worker's fragment θ at offer time (the drift baseline the
+    /// fold carries across its reset).
+    theta: Vec<f32>,
+}
+
+/// Streaming fragmented outer sync over a gated flavor (NoLoCo gossip or
+/// DiLoCo all-reduce). See the module docs for the offer/fold timeline.
+pub struct StreamingSync {
+    outer: OuterConfig,
+    stream: StreamConfig,
+    flavor: Method,
+    seed: u64,
+    dp: usize,
+    /// Shared membership schedule: a deferred fold consults it to drop
+    /// fragments whose phase saw *any* churn event — even a leave+rejoin
+    /// that restored the offer-time live set — and to derive the
+    /// rejoin-staleness rule mirrored from the gated NoLoCo strategy.
+    churn: ChurnSchedule,
+    pairing: Box<dyn PairingPolicy>,
+    /// Gated delegate for the degenerate `fragments = 1`, overlap-off
+    /// configuration (bit-identical trajectories by construction).
+    delegate: Option<Box<dyn SyncStrategy>>,
+    /// In-flight offers by owned worker `(stage, replica)`. At most two
+    /// per worker: the previous boundary's (unfolded under overlap) and
+    /// the one just offered — offers run before folds at a boundary.
+    inflight: HashMap<(usize, usize), Vec<Inflight>>,
+    /// Memoized last pairing draw, keyed by `(stage, outer_idx, live)`:
+    /// the grid executor calls the offer phase for every worker of a
+    /// stage row with identical inputs, so one draw serves the row (the
+    /// same cache the gated `NolocoSync` keeps).
+    cache: Option<(usize, u64, Vec<usize>, Vec<Vec<usize>>)>,
+    /// Fragments dropped instead of folded because membership changed
+    /// while they were in flight.
+    dropped_stale: u64,
+}
+
+impl StreamingSync {
+    /// Build from the full config; the flavor is `cfg.outer.method`
+    /// (FSDP is rejected by [`TrainConfig::validate`] before trainers
+    /// construct strategies).
+    pub fn from_config(cfg: &TrainConfig) -> StreamingSync {
+        let flavor = cfg.outer.method;
+        assert!(
+            flavor != Method::Fsdp,
+            "streaming sync needs an outer method (enforced by config validation)"
+        );
+        let degenerate = cfg.stream.fragments <= 1 && !cfg.stream.overlap;
+        let delegate = degenerate.then(|| gated_for(cfg));
+        // The pairing policy is consulted only on the non-delegated
+        // NoLoCo path; a delegate or the DiLoCo flavor draws no pairs, so
+        // skip building a (possibly topology-backed) policy for them.
+        let pairing: Box<dyn PairingPolicy> = if delegate.is_none() && flavor == Method::NoLoCo {
+            pairing_for(cfg)
+        } else {
+            Box::new(UniformPairing)
+        };
+        StreamingSync {
+            outer: cfg.outer.clone(),
+            stream: cfg.stream,
+            flavor,
+            seed: cfg.seed,
+            dp: cfg.topology.dp,
+            churn: cfg.churn.clone(),
+            pairing,
+            delegate,
+            inflight: HashMap::new(),
+            cache: None,
+            dropped_stale: 0,
+        }
+    }
+
+    /// Fragments dropped (not folded) because membership changed while
+    /// they were in flight.
+    pub fn dropped_stale(&self) -> u64 {
+        self.dropped_stale
+    }
+
+    /// This worker's exchange group at a boundary: the pairing policy's
+    /// gossip group for the NoLoCo flavor (drawn once per
+    /// `(stage, outer_idx, live)` through the cache), the whole live row
+    /// for the DiLoCo flavor.
+    fn my_group(&mut self, live: &[usize], stage: usize, outer_idx: u64, me: usize) -> Vec<usize> {
+        if self.flavor == Method::DiLoCo {
+            return live.to_vec();
+        }
+        let hit = matches!(
+            &self.cache,
+            Some((s, o, l, _)) if *s == stage && *o == outer_idx && l.as_slice() == live
+        );
+        if !hit {
+            let groups = self.pairing.draw(live, self.outer.group, stage, outer_idx, self.seed);
+            self.cache = Some((stage, outer_idx, live.to_vec(), groups));
+        }
+        let (_, _, _, groups) = self.cache.as_ref().expect("cached above");
+        groups
+            .iter()
+            .find(|g| g.contains(&me))
+            .expect("pairing policy must cover every live replica")
+            .clone()
+    }
+
+    /// Whether replica `r`'s *fragment due at boundary `b`* is stale:
+    /// `r` was dead at any step since that fragment's previous exchange,
+    /// `k_rounds` boundaries back (a fragment syncs every K-th boundary,
+    /// so its staleness window is K phases — the K = 1 case reduces to
+    /// the gated `NolocoSync::is_stale` one-round window). Derived from
+    /// the shared schedule, so every worker agrees without coordination;
+    /// the window keeps flagging the rejoiner until each fragment has
+    /// come due once post-rejoin and adopted fresh state.
+    fn is_stale_at(&self, r: usize, b: u64, k_rounds: usize) -> bool {
+        if self.churn.is_empty() {
+            return false;
+        }
+        let m = self.outer.inner_steps as u64;
+        let hi = (b * m).saturating_sub(1);
+        let lo = hi.saturating_sub(k_rounds.max(1) as u64 * m);
+        // Walk r's own (sorted) events, intersecting its dead intervals
+        // [leave, join) with [lo, hi] — allocation-free, unlike a
+        // per-step `live_at` scan.
+        let mut live = true;
+        let mut dead_since = 0u64;
+        for &(step, e) in self.churn.events() {
+            if e.node() != r {
+                continue;
+            }
+            match e {
+                ChurnEvent::Leave(_) => {
+                    if live {
+                        live = false;
+                        dead_since = step;
+                    }
+                }
+                ChurnEvent::Join(_) => {
+                    if !live {
+                        live = true;
+                        if dead_since <= hi && step > lo {
+                            return true;
+                        }
+                    }
+                }
+            }
+        }
+        !live && dead_since <= hi
+    }
+
+    /// Whether the churn schedule fires inside the inner phase that
+    /// follows the offer at boundary `offered_at` — the window a deferred
+    /// fragment is in flight for. Covers the case the live-set comparison
+    /// cannot: a leave + rejoin within one phase restores the offer-time
+    /// live set while the rejoiner's state was rebuilt underneath.
+    fn churn_in_flight_window(&self, offered_at: u64) -> bool {
+        if self.churn.is_empty() {
+            return false;
+        }
+        let m = self.outer.inner_steps as u64;
+        let lo = offered_at * m;
+        self.churn
+            .events()
+            .iter()
+            .any(|&(step, _)| step >= lo && step < lo + m)
+    }
+
+    /// Fold one fragment exchange into `(φ, δ, θ)` over its element
+    /// range. Host-side math — deterministic and identical across
+    /// communicators (collect order is the stored group order).
+    fn fold_entry(
+        &mut self,
+        comm: &mut dyn Communicator,
+        w: &mut WorkerState,
+        entry: Inflight,
+    ) -> Result<()> {
+        let sched = FragmentSchedule::new(w.len(), self.stream.fragments);
+        let r = sched.range(entry.frag);
+        ensure!(
+            r.len() == entry.delta.len(),
+            "in-flight fragment {} has {} elements, schedule expects {}",
+            entry.frag,
+            entry.delta.len(),
+            r.len()
+        );
+        let seq = entry.outer_idx as u32;
+        let k = sched.fragments();
+        let me = w.replica;
+        let (alpha, beta, gamma) = (
+            self.outer.alpha as f32,
+            self.outer.beta as f32,
+            self.outer.gamma as f32,
+        );
+        // Message-passing rejoin catch-up, at fragment granularity (the
+        // grid executor instead hands a joiner a donor's φ at the join
+        // event): a stale member adopts the first fresh peer's offered
+        // φ_k outright — fragment by fragment as each comes due — and
+        // the fresh side skips stale contributions so they cannot dilute
+        // its consensus sums. Two stale members paired together fall
+        // through to the plain averaged update, like the gated strategy.
+        let repair = self.flavor == Method::NoLoCo
+            && !comm.supports_join_bootstrap()
+            && !self.churn.is_empty();
+        if repair && self.is_stale_at(me, entry.outer_idx, k) {
+            for &q in &entry.group {
+                if q == me || self.is_stale_at(q, entry.outer_idx, k) {
+                    continue;
+                }
+                if let Some((_, p)) =
+                    comm.collect_fragment(w.stage, me, q, seq, entry.frag as u16)?
+                {
+                    w.phi[r.clone()].copy_from_slice(&p);
+                    for d in w.delta[r.clone()].iter_mut() {
+                        *d = 0.0;
+                    }
+                    w.theta[r.clone()].copy_from_slice(&w.phi[r.clone()]);
+                    return Ok(());
+                }
+            }
+        }
+        // Group sums start from this worker's *offer-time* state (not
+        // the current θ/φ — the inner phase has moved on).
+        let mut dsum = entry.delta.clone();
+        let mut psum = entry.phi.clone();
+        let mut gn = 1usize;
+        for &q in &entry.group {
+            if q == me {
+                continue;
+            }
+            if repair && self.is_stale_at(q, entry.outer_idx, k) {
+                continue; // stale peer: excluded from the fold
+            }
+            let Some((d, p)) = comm.collect_fragment(w.stage, me, q, seq, entry.frag as u16)?
+            else {
+                continue; // straggler timeout: smaller group
+            };
+            ensure!(
+                d.len() == dsum.len(),
+                "peer {q} offered fragment {} with mismatched length",
+                entry.frag
+            );
+            for (a, x) in dsum.iter_mut().zip(&d) {
+                *a += x;
+            }
+            for (a, x) in psum.iter_mut().zip(&p) {
+                *a += x;
+            }
+            gn += 1;
+        }
+        match self.flavor {
+            Method::NoLoCo => fold_noloco_fragment(
+                &mut w.phi[r.clone()],
+                &mut w.delta[r.clone()],
+                &dsum,
+                &psum,
+                gn,
+                alpha,
+                beta,
+                gamma,
+            ),
+            Method::DiLoCo => {
+                // Local mean over the all-to-all exchange — the same
+                // result as the gated tree all-reduce, without a
+                // blocking collective.
+                let inv_n = 1.0 / gn as f32;
+                for x in dsum.iter_mut() {
+                    *x *= inv_n;
+                }
+                fold_diloco_fragment(
+                    &mut w.phi[r.clone()],
+                    &mut w.delta[r.clone()],
+                    &dsum,
+                    alpha,
+                    beta,
+                );
+            }
+            Method::Fsdp => unreachable!("streaming sync rejects FSDP at validation"),
+        }
+        // The fragment's inner phase restarts from the updated slow
+        // weights, carrying the drift accumulated while the exchange was
+        // in flight: θ ← φ' + (θ_now − θ_offer). The offered component
+        // was consumed by the outer update; the drift since the offer
+        // stays, so no inner step is silently discarded. Gated folds
+        // have zero drift (fold follows the offer within one boundary)
+        // and reduce to the plain θ := φ reset.
+        for (j, i) in r.clone().enumerate() {
+            w.theta[i] = w.phi[i] + (w.theta[i] - entry.theta[j]);
+        }
+        Ok(())
+    }
+
+    /// Remove and return the entry offered at `offered_at` for `w`, if it
+    /// is safe to fold; entries from older boundaries (a worker that sat
+    /// out mid-run — whose peer offers may already be garbage-collected)
+    /// are dropped as stale, and newer entries (the offer that just
+    /// preceded this fold at the same boundary) are left in flight. The
+    /// matching entry itself is dropped instead of returned when the live
+    /// set changed or (for `deferred` folds, where a whole inner phase
+    /// elapsed in between) a churn event fired while it was in flight.
+    fn take_foldable(
+        &mut self,
+        w: &WorkerState,
+        live: &[usize],
+        offered_at: u64,
+        deferred: bool,
+    ) -> Option<Inflight> {
+        let stale_window = deferred && self.churn_in_flight_window(offered_at);
+        let entries = self.inflight.get_mut(&(w.stage, w.replica))?;
+        // Leftovers from boundaries before `offered_at` are stale.
+        let before = entries.len();
+        entries.retain(|e| e.outer_idx >= offered_at);
+        let mut dropped = (before - entries.len()) as u64;
+        let mut found = None;
+        if let Some(i) = entries.iter().position(|e| e.outer_idx == offered_at) {
+            let e = entries.remove(i);
+            if e.live == live && !stale_window {
+                found = Some(e);
+            } else {
+                dropped += 1;
+            }
+        }
+        self.dropped_stale += dropped;
+        found
+    }
+}
+
+impl SyncStrategy for StreamingSync {
+    fn name(&self) -> &'static str {
+        "streaming"
+    }
+
+    fn pattern(&self) -> CommPattern {
+        match self.flavor {
+            Method::NoLoCo => CommPattern::GossipPairs,
+            _ => CommPattern::AllReduce,
+        }
+    }
+
+    fn has_outer(&self) -> bool {
+        true
+    }
+
+    fn churn_response(&self) -> ChurnResponse {
+        match self.flavor {
+            Method::NoLoCo => ChurnResponse::Repair,
+            _ => ChurnResponse::Abort,
+        }
+    }
+
+    fn offer_outer(
+        &mut self,
+        comm: &mut dyn Communicator,
+        w: &WorkerState,
+        live: &[usize],
+        outer_idx: u64,
+    ) -> Result<()> {
+        if let Some(d) = self.delegate.as_mut() {
+            return d.offer_outer(comm, w, live, outer_idx);
+        }
+        let sched = FragmentSchedule::new(w.len(), self.stream.fragments);
+        let frag = sched.due_at(outer_idx);
+        let r = sched.range(frag);
+        let me = w.replica;
+        let theta = w.theta[r.clone()].to_vec();
+        let phi = w.phi[r.clone()].to_vec();
+        let delta: Vec<f32> = theta.iter().zip(&phi).map(|(t, p)| t - p).collect();
+        let group = self.my_group(live, w.stage, outer_idx, me);
+        let peers: Vec<usize> = group.iter().copied().filter(|&q| q != me).collect();
+        // Both flavors send eagerly: (Δ_k, φ_k) to the gossip group, or
+        // Δ_k alone to the whole live row (the DiLoCo flavor's
+        // all-to-all; φ is not part of its fold).
+        let phi_payload: &[f32] = if self.flavor == Method::NoLoCo { &phi } else { &[] };
+        comm.offer_fragment(
+            w.stage,
+            me,
+            &peers,
+            outer_idx as u32,
+            frag as u16,
+            &delta,
+            phi_payload,
+        )?;
+        self.inflight
+            .entry((w.stage, me))
+            .or_default()
+            .push(Inflight { outer_idx, frag, group, live: live.to_vec(), delta, phi, theta });
+        Ok(())
+    }
+
+    fn apply_outer(
+        &mut self,
+        comm: &mut dyn Communicator,
+        eng: &mut Engine,
+        w: &mut WorkerState,
+        live: &[usize],
+        outer_idx: u64,
+    ) -> Result<()> {
+        if let Some(d) = self.delegate.as_mut() {
+            return d.apply_outer(comm, eng, w, live, outer_idx);
+        }
+        if self.stream.overlap {
+            // The fold happens in `fold_inflight` at the *next* boundary;
+            // the fragment offered just now rides behind the coming inner
+            // phase.
+            return Ok(());
+        }
+        // Gated fragmented mode: fold this boundary's exchange now.
+        if let Some(entry) = self.take_foldable(w, live, outer_idx, false) {
+            self.fold_entry(comm, w, entry)?;
+        }
+        Ok(())
+    }
+
+    fn fold_inflight(
+        &mut self,
+        comm: &mut dyn Communicator,
+        w: &mut WorkerState,
+        live: &[usize],
+        outer_idx: u64,
+    ) -> Result<()> {
+        if let Some(d) = self.delegate.as_mut() {
+            return d.fold_inflight(comm, w, live, outer_idx);
+        }
+        if !self.stream.overlap {
+            return Ok(());
+        }
+        if let Some(entry) = self.take_foldable(w, live, outer_idx.saturating_sub(1), true) {
+            self.fold_entry(comm, w, entry)?;
+        }
+        Ok(())
+    }
+
+    fn drain(
+        &mut self,
+        comm: &mut dyn Communicator,
+        w: &mut WorkerState,
+        live: &[usize],
+        final_outer_idx: u64,
+    ) -> Result<()> {
+        if let Some(d) = self.delegate.as_mut() {
+            return d.drain(comm, w, live, final_outer_idx);
+        }
+        if !self.stream.overlap {
+            return Ok(());
+        }
+        if let Some(entry) = self.take_foldable(w, live, final_outer_idx, true) {
+            self.fold_entry(comm, w, entry)?;
+        }
+        Ok(())
+    }
+}
+
+/// Eq. 2–3 restricted to one fragment, host-side:
+/// `δ ← α δ + (β/n) Σ Δ − γ (φ − (1/n) Σ φ)`, then `φ ← φ + δ`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fold_noloco_fragment(
+    phi: &mut [f32],
+    delta: &mut [f32],
+    dsum: &[f32],
+    psum: &[f32],
+    gn: usize,
+    alpha: f32,
+    beta: f32,
+    gamma: f32,
+) {
+    let inv_n = 1.0 / gn as f32;
+    for i in 0..phi.len() {
+        let d = alpha * delta[i] + beta * inv_n * dsum[i] - gamma * (phi[i] - inv_n * psum[i]);
+        delta[i] = d;
+        phi[i] += d;
+    }
+}
+
+/// DiLoCo's Nesterov step restricted to one fragment, host-side:
+/// `δ ← α δ + β Δ̄`, then `φ ← φ + δ`.
+pub(crate) fn fold_diloco_fragment(
+    phi: &mut [f32],
+    delta: &mut [f32],
+    dmean: &[f32],
+    alpha: f32,
+    beta: f32,
+) {
+    for i in 0..phi.len() {
+        let d = alpha * delta[i] + beta * dmean[i];
+        delta[i] = d;
+        phi[i] += d;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, SyncMode};
+    use crate::model::StageKind;
+    use crate::optim::{NolocoOuter, OuterState};
+    use crate::tensor::Tensor;
+    use crate::train::AccountingComm;
+
+    fn streaming_cfg(fragments: usize, overlap: bool) -> TrainConfig {
+        let mut cfg = presets::preset("tiny").unwrap();
+        cfg.sync = SyncMode::Streaming;
+        cfg.stream = StreamConfig { fragments, overlap };
+        cfg
+    }
+
+    fn worker(replica: usize, theta: Vec<f32>) -> WorkerState {
+        let mut w = WorkerState::new(0, replica, StageKind::Full, theta.clone(), Method::NoLoCo);
+        // Give φ a distinct value so folds are observable.
+        for (p, t) in w.phi.iter_mut().zip(&theta) {
+            *p = t * 0.5;
+        }
+        w
+    }
+
+    /// One full overlapped boundary in the core's order: offers first,
+    /// then the fold of the previous boundary's entries.
+    fn boundary(
+        s: &mut StreamingSync,
+        comm: &mut AccountingComm,
+        workers: &mut [WorkerState],
+        live: &[usize],
+        outer_idx: u64,
+    ) {
+        for w in workers.iter() {
+            s.offer_outer(comm, w, live, outer_idx).unwrap();
+        }
+        for w in workers.iter_mut() {
+            s.fold_inflight(comm, w, live, outer_idx).unwrap();
+        }
+    }
+
+    #[test]
+    fn fragment_schedule_partitions_and_cycles() {
+        let s = FragmentSchedule::new(10, 3);
+        assert_eq!(s.fragments(), 3);
+        assert_eq!(s.range(0), 0..4);
+        assert_eq!(s.range(1), 4..7);
+        assert_eq!(s.range(2), 7..10);
+        // Disjoint cover of 0..n.
+        let covered: usize = (0..3).map(|f| s.range(f).len()).sum();
+        assert_eq!(covered, 10);
+        // Round-robin over 1-based boundaries.
+        assert_eq!(s.due_at(1), 0);
+        assert_eq!(s.due_at(2), 1);
+        assert_eq!(s.due_at(3), 2);
+        assert_eq!(s.due_at(4), 0);
+        // Clamped: more fragments than parameters collapses to n.
+        assert_eq!(FragmentSchedule::new(2, 8).fragments(), 2);
+        assert_eq!(FragmentSchedule::new(5, 1).range(0), 0..5);
+    }
+
+    #[test]
+    fn host_fold_matches_optim_reference_on_full_vector() {
+        // A whole-vector fragment must reproduce the NolocoOuter tensor
+        // update (same equations, different storage) to float tolerance.
+        let phi0 = vec![0.5f32, -1.0, 2.0, 0.25];
+        let theta_a = vec![1.0f32, -0.5, 2.5, 0.0];
+        let theta_b = vec![0.0f32, -2.0, 1.5, 1.0];
+        let phi_b = vec![0.4f32, -0.8, 1.9, 0.3];
+        let (alpha, beta, gamma) = (0.5f32, 0.7f32, 0.9f32);
+
+        // Reference: optim::NolocoOuter over tensors.
+        let mut st = OuterState::new(&[Tensor::from_vec(phi0.clone(), &[4])]);
+        let my_delta = st.outer_grad(&[Tensor::from_vec(theta_a.clone(), &[4])]);
+        let peer_delta: Vec<f32> =
+            theta_b.iter().zip(&phi_b).map(|(t, p)| t - p).collect();
+        let theta_t = vec![Tensor::from_vec(theta_a.clone(), &[4])];
+        NolocoOuter { alpha: alpha as f64, beta: beta as f64, gamma: gamma as f64 }.step_pair(
+            &mut st,
+            &theta_t,
+            &my_delta,
+            &[Tensor::from_vec(peer_delta.clone(), &[4])],
+            &[Tensor::from_vec(phi_b.clone(), &[4])],
+        );
+
+        // Fragment fold over the same inputs.
+        let mut phi = phi0.clone();
+        let mut delta = vec![0.0f32; 4];
+        let my_d: Vec<f32> = theta_a.iter().zip(&phi0).map(|(t, p)| t - p).collect();
+        let dsum: Vec<f32> = my_d.iter().zip(&peer_delta).map(|(a, b)| a + b).collect();
+        let psum: Vec<f32> = phi0.iter().zip(&phi_b).map(|(a, b)| a + b).collect();
+        fold_noloco_fragment(&mut phi, &mut delta, &dsum, &psum, 2, alpha, beta, gamma);
+        for (got, want) in phi.iter().zip(st.phi[0].as_slice()) {
+            assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn degenerate_config_delegates_to_the_gated_strategy() {
+        let s = StreamingSync::from_config(&streaming_cfg(1, false));
+        assert!(s.delegate.is_some(), "fragments=1 + overlap off must delegate");
+        let s = StreamingSync::from_config(&streaming_cfg(1, true));
+        assert!(s.delegate.is_none(), "overlap on streams even a single fragment");
+        let s = StreamingSync::from_config(&streaming_cfg(4, false));
+        assert!(s.delegate.is_none(), "payload-split gated mode is not the delegate");
+        assert_eq!(s.name(), "streaming");
+        assert_eq!(s.pattern(), CommPattern::GossipPairs);
+        assert_eq!(s.churn_response(), ChurnResponse::Repair);
+        assert!(s.has_outer());
+    }
+
+    #[test]
+    fn overlapped_fold_lags_one_boundary_and_touches_only_the_fragment() {
+        let mut s = StreamingSync::from_config(&streaming_cfg(2, true));
+        let mut comm = AccountingComm::new();
+        let live = vec![0usize, 1];
+        let mut ws = [
+            worker(0, vec![1.0, 2.0, 3.0, 4.0]),
+            worker(1, vec![4.0, 3.0, 2.0, 1.0]),
+        ];
+        let phi_a0 = ws[0].phi.clone();
+
+        // Boundary 1: offer fragment 0 (elements 0..2); nothing folds yet
+        // (no earlier boundary's entry in flight).
+        boundary(&mut s, &mut comm, &mut ws, &live, 1);
+        assert_eq!(ws[0].phi, phi_a0, "boundary 1 must not mutate state");
+
+        // Boundary 2: fragment 0 folds; elements 2..4 stay untouched.
+        boundary(&mut s, &mut comm, &mut ws, &live, 2);
+        assert_ne!(&ws[0].phi[..2], &phi_a0[..2], "fragment 0 must fold");
+        assert_eq!(&ws[0].phi[2..], &phi_a0[2..], "fragment 1 still in φ₀ state");
+        // No inner steps ran, so the drift is zero and θ == φ.
+        assert_eq!(&ws[0].theta[..2], &ws[0].phi[..2], "θ resets to φ on the folded fragment");
+        assert_eq!(s.dropped_stale(), 0);
+    }
+
+    #[test]
+    fn single_fragment_overlap_keeps_offering_real_progress() {
+        // The offer-before-fold boundary order means K = 1 with overlap
+        // (delayed full-state averaging) still offers each phase's
+        // progress: Δ snapshots before the fold's θ-reset hits the same
+        // range.
+        let mut s = StreamingSync::from_config(&streaming_cfg(1, true));
+        let mut comm = AccountingComm::new();
+        let live = vec![0usize, 1];
+        let mut ws = [
+            worker(0, vec![1.0, 2.0, 3.0, 4.0]),
+            worker(1, vec![4.0, 3.0, 2.0, 1.0]),
+        ];
+        for outer_idx in 1..=3u64 {
+            boundary(&mut s, &mut comm, &mut ws, &live, outer_idx);
+            // A fake inner phase between boundaries.
+            for w in ws.iter_mut() {
+                for x in w.theta.iter_mut() {
+                    *x += 0.1;
+                }
+            }
+        }
+        // The entry offered at boundary 3 captured the phase-3 progress —
+        // nonzero Δ even though boundary 3's fold reset θ just afterwards.
+        let entries = &s.inflight[&(0usize, 0usize)];
+        assert_eq!(entries.len(), 1);
+        assert!(
+            entries[0].delta.iter().any(|&d| d != 0.0),
+            "Δ must keep capturing inner progress under K = 1 overlap"
+        );
+    }
+
+    #[test]
+    fn fold_carries_inflight_drift_into_theta() {
+        let mut s = StreamingSync::from_config(&streaming_cfg(2, true));
+        let mut comm = AccountingComm::new();
+        let live = vec![0usize, 1];
+        let mut ws = [
+            worker(0, vec![1.0, 2.0, 3.0, 4.0]),
+            worker(1, vec![4.0, 3.0, 2.0, 1.0]),
+        ];
+        boundary(&mut s, &mut comm, &mut ws, &live, 1);
+        // Inner phase while fragment 0 is in flight: drift of +0.25.
+        for x in ws[0].theta.iter_mut() {
+            *x += 0.25;
+        }
+        boundary(&mut s, &mut comm, &mut ws, &live, 2);
+        // θ over the folded range is φ' plus the in-flight drift.
+        for i in 0..2 {
+            let want = ws[0].phi[i] + 0.25;
+            assert!(
+                (ws[0].theta[i] - want).abs() < 1e-6,
+                "drift must survive the fold: {} vs {want}",
+                ws[0].theta[i]
+            );
+        }
+    }
+
+    #[test]
+    fn streamed_diloco_fold_matches_mean_nesterov_and_agrees_across_replicas() {
+        let mut cfg = presets::as_diloco(streaming_cfg(2, true));
+        cfg.sync = SyncMode::Streaming;
+        let mut s = StreamingSync::from_config(&cfg);
+        let mut comm = AccountingComm::new();
+        let live = vec![0usize, 1];
+        // Same φ, different θ — the all-to-all mean must keep φ identical
+        // across replicas, like the gated all-reduce.
+        let init = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut a = WorkerState::new(0, 0, StageKind::Full, init.clone(), Method::DiLoCo);
+        let mut b = WorkerState::new(0, 1, StageKind::Full, init.clone(), Method::DiLoCo);
+        a.phi = init.clone();
+        b.phi = init.clone();
+        a.delta = vec![0.0; 4];
+        b.delta = vec![0.0; 4];
+        for (i, x) in a.theta.iter_mut().enumerate() {
+            *x += 0.5 + i as f32;
+        }
+        for x in b.theta.iter_mut() {
+            *x -= 0.5;
+        }
+        s.offer_outer(&mut comm, &a, &live, 1).unwrap();
+        s.offer_outer(&mut comm, &b, &live, 1).unwrap();
+        s.fold_inflight(&mut comm, &mut a, &live, 2).unwrap();
+        s.fold_inflight(&mut comm, &mut b, &live, 2).unwrap();
+        // Fragment 0 (elements 0..2): φ' = φ + β · mean(Δ) with δ₀ = 0.
+        let beta = cfg.outer.beta as f32;
+        for i in 0..2 {
+            let mean = ((0.5 + i as f32) + (-0.5)) / 2.0;
+            let want = init[i] + beta * mean;
+            assert!((a.phi[i] - want).abs() < 1e-6, "{} vs {want}", a.phi[i]);
+        }
+        assert_eq!(&a.phi[..2], &b.phi[..2], "replicas agree like an all-reduce");
+        assert_eq!(&a.phi[2..], &init[2..], "fragment 1 untouched");
+    }
+
+    #[test]
+    fn stale_fragment_is_dropped_after_membership_change() {
+        let mut s = StreamingSync::from_config(&streaming_cfg(2, true));
+        let mut comm = AccountingComm::new();
+        let mut a = worker(0, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = worker(1, vec![4.0, 3.0, 2.0, 1.0]);
+        let phi_a0 = a.phi.clone();
+
+        // Offered under live = {0, 1}; replica 1 leaves before the fold.
+        s.offer_outer(&mut comm, &a, &[0, 1], 1).unwrap();
+        s.offer_outer(&mut comm, &b, &[0, 1], 1).unwrap();
+        s.fold_inflight(&mut comm, &mut a, &[0], 2).unwrap();
+        assert_eq!(a.phi, phi_a0, "stale fragment must be dropped, not folded");
+        assert_eq!(s.dropped_stale(), 1);
+
+        // An entry from a sat-out boundary is dropped at a later fold.
+        s.offer_outer(&mut comm, &a, &[0, 1], 2).unwrap();
+        s.offer_outer(&mut comm, &b, &[0, 1], 2).unwrap();
+        s.fold_inflight(&mut comm, &mut a, &[0, 1], 4).unwrap();
+        assert_eq!(a.phi, phi_a0);
+        assert_eq!(s.dropped_stale(), 2);
+    }
+
+    #[test]
+    fn fabric_fold_adopts_fresh_peer_fragment_after_rejoin() {
+        // tiny's m = 50; replica 1 dead over steps 60..69 (leave 60,
+        // join 70). Boundary 2 closes step 99: replica 1 is live again
+        // but *stale* there (dead inside the K·m window), and the
+        // in-flight window [100, 150) is churn-free, so the fold at
+        // boundary 3 proceeds with the message-passing repair semantics:
+        // the rejoiner adopts the fresh peer's offered φ fragment and the
+        // fresh side folds a singleton, excluding the stale contribution.
+        let mut cfg = streaming_cfg(2, true);
+        cfg.churn = crate::net::ChurnSchedule::none().leave(60, 1).join(70, 1);
+        let mut fabric = crate::net::Fabric::new(2);
+        let mut eps = fabric.take_endpoints().into_iter();
+        let mut ca = crate::train::FabricComm::new(eps.next().unwrap(), 2, None);
+        let mut cb = crate::train::FabricComm::new(eps.next().unwrap(), 2, None);
+        let mut sa = StreamingSync::from_config(&cfg);
+        let mut sb = StreamingSync::from_config(&cfg);
+        let mut a = worker(0, vec![1.0, 2.0, 3.0, 4.0]);
+        let mut b = worker(1, vec![4.0, 3.0, 2.0, 1.0]);
+        let live = vec![0usize, 1];
+        let phi_a_offer = a.phi.clone();
+        // Boundary 2's due fragment is 1 (elements 2..4).
+        sa.offer_outer(&mut ca, &a, &live, 2).unwrap();
+        sb.offer_outer(&mut cb, &b, &live, 2).unwrap();
+        sa.fold_inflight(&mut ca, &mut a, &live, 3).unwrap();
+        sb.fold_inflight(&mut cb, &mut b, &live, 3).unwrap();
+        // The stale rejoiner adopted the fresh peer's offer-time φ_k.
+        assert_eq!(&b.phi[2..], &phi_a_offer[2..]);
+        assert_eq!(&b.delta[2..], &[0.0f32, 0.0][..]);
+        assert_eq!(&b.theta[2..], &phi_a_offer[2..]);
+        // The fresh side folded a singleton update: moved, but not onto
+        // the stale peer's values.
+        assert_ne!(&a.phi[2..], &phi_a_offer[2..]);
+        assert_ne!(&a.phi[2..], &b.phi[2..]);
+    }
+
+    #[test]
+    fn leave_and_rejoin_within_one_phase_still_drops_the_fragment() {
+        // A leave + rejoin inside the in-flight window restores the
+        // offer-time live set, so the live comparison alone would pass —
+        // the schedule-window check must still drop the fragment (the
+        // rejoiner's state was rebuilt underneath the exchange).
+        let mut cfg = streaming_cfg(2, true);
+        // tiny's inner_steps is 50: boundary 1 closes step 49, so the
+        // fragment is in flight over steps 50..99.
+        cfg.churn = crate::net::ChurnSchedule::none().leave(60, 1).join(70, 1);
+        let mut s = StreamingSync::from_config(&cfg);
+        let mut comm = AccountingComm::new();
+        let live = vec![0usize, 1];
+        let mut a = worker(0, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = worker(1, vec![4.0, 3.0, 2.0, 1.0]);
+        let phi_a0 = a.phi.clone();
+        s.offer_outer(&mut comm, &a, &live, 1).unwrap();
+        s.offer_outer(&mut comm, &b, &live, 1).unwrap();
+        s.fold_inflight(&mut comm, &mut a, &live, 2).unwrap();
+        assert_eq!(a.phi, phi_a0, "intra-phase churn must drop the fragment");
+        assert_eq!(s.dropped_stale(), 1);
+    }
+
+    #[test]
+    fn gated_fragmented_fold_updates_at_the_same_boundary() {
+        let mut s = StreamingSync::from_config(&streaming_cfg(2, false));
+        let mut comm = AccountingComm::new();
+        let live = vec![0usize, 1];
+        let mut a = worker(0, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = worker(1, vec![4.0, 3.0, 2.0, 1.0]);
+        let phi_a0 = a.phi.clone();
+        s.offer_outer(&mut comm, &a, &live, 1).unwrap();
+        s.offer_outer(&mut comm, &b, &live, 1).unwrap();
+        let entry = s.take_foldable(&a, &live, 1, false).unwrap();
+        s.fold_entry(&mut comm, &mut a, entry).unwrap();
+        assert_ne!(&a.phi[..2], &phi_a0[..2]);
+        assert_eq!(&a.phi[2..], &phi_a0[2..]);
+        assert_eq!(&a.theta[..2], &a.phi[..2], "zero drift: plain θ := φ");
+    }
+
+    #[test]
+    fn drain_folds_the_final_inflight_fragment_but_not_an_older_one() {
+        let mut s = StreamingSync::from_config(&streaming_cfg(2, true));
+        let mut comm = AccountingComm::new();
+        let live = vec![0usize, 1];
+        let mut a = worker(0, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = worker(1, vec![4.0, 3.0, 2.0, 1.0]);
+        let phi_a0 = a.phi.clone();
+        s.offer_outer(&mut comm, &a, &live, 1).unwrap();
+        s.offer_outer(&mut comm, &b, &live, 1).unwrap();
+        // An entry left over from an *earlier* boundary (a worker that
+        // sat out the tail of the run) must be dropped at drain time.
+        s.drain(&mut comm, &mut a, &live, 3).unwrap();
+        assert_eq!(a.phi, phi_a0, "stale tail entry must not fold");
+        assert_eq!(s.dropped_stale(), 1);
+        // The final boundary's entry folds.
+        s.offer_outer(&mut comm, &a, &live, 3).unwrap();
+        s.offer_outer(&mut comm, &b, &live, 3).unwrap();
+        s.drain(&mut comm, &mut a, &live, 3).unwrap();
+        assert_ne!(&a.phi[..2], &phi_a0[..2], "drain must fold the tail fragment");
+        assert!(s.inflight[&(0usize, 0usize)].is_empty());
+    }
+}

@@ -1,0 +1,294 @@
+//! Streaming fragmented outer sync (`--sync streaming`) — overlap
+//! semantics, cross-communicator determinism, and golden-trajectory
+//! equivalence of the degenerate configuration.
+//!
+//! The communicator-level tests run without artifacts (host-side folds
+//! need no engine); the trajectory tests drive the real trainers and
+//! skip politely when the tiny artifact build is absent (hardened by
+//! `NOLOCO_REQUIRE_ARTIFACTS`, as everywhere else).
+
+use noloco::config::{presets, Method, StreamConfig, SyncMode, TrainConfig};
+use noloco::model::StageKind;
+use noloco::net::{ChurnSchedule, Fabric};
+use noloco::runtime::{find_build, Engine};
+use noloco::train::{
+    strategy_for_config, AccountingComm, Communicator, FabricComm, SimTrainer, SyncStrategy,
+    WorkerState,
+};
+
+const ART: &str = "artifacts";
+
+fn streaming_cfg(fragments: usize, overlap: bool) -> TrainConfig {
+    let mut cfg = presets::preset("tiny").unwrap();
+    cfg.topology.dp = 2;
+    cfg.topology.pp = 2;
+    cfg.steps = 4;
+    cfg.warmup = 2;
+    cfg.eval_every = 2;
+    cfg.eval_tokens = 512;
+    cfg.outer.inner_steps = 2;
+    cfg.sync = SyncMode::Streaming;
+    cfg.stream = StreamConfig { fragments, overlap };
+    cfg
+}
+
+fn have_artifacts(pp: usize) -> bool {
+    match find_build(ART, "tiny", pp) {
+        Ok(_) => true,
+        Err(e) => {
+            if std::env::var_os("NOLOCO_REQUIRE_ARTIFACTS").is_some() {
+                panic!("NOLOCO_REQUIRE_ARTIFACTS is set but tiny-pp{pp} is missing: {e}");
+            }
+            eprintln!("skipping: no tiny-pp{pp} artifacts; run `make artifacts` to enable");
+            false
+        }
+    }
+}
+
+fn worker(replica: usize, n: usize) -> WorkerState {
+    // Deterministic, replica-distinct synthetic state: θ_i = f(i), φ = θ/2.
+    let theta: Vec<f32> = (0..n)
+        .map(|i| (i as f32 + 1.0) * if replica == 0 { 0.25 } else { -0.5 })
+        .collect();
+    let mut w = WorkerState::new(0, replica, StageKind::Full, theta, Method::NoLoCo);
+    for p in w.phi.iter_mut() {
+        *p *= 0.5;
+    }
+    w
+}
+
+/// Drive `boundaries` overlapped streaming rounds over one communicator
+/// setup. `strategies[i]` serves `workers[i]`; the grid executor passes
+/// the same strategy for both.
+fn run_rounds(
+    comms: &mut [&mut dyn Communicator],
+    strategies: &mut [&mut dyn SyncStrategy],
+    workers: &mut [WorkerState],
+    boundaries: u64,
+) {
+    let live = vec![0usize, 1];
+    for outer_idx in 1..=boundaries {
+        // The core's boundary order: offers first (Δ snapshots), then
+        // folds of the previous boundary's exchanges.
+        for i in 0..workers.len() {
+            strategies[i]
+                .offer_outer(&mut *comms[i], &workers[i], &live, outer_idx)
+                .unwrap();
+        }
+        for i in 0..workers.len() {
+            strategies[i]
+                .fold_inflight(&mut *comms[i], &mut workers[i], &live, outer_idx)
+                .unwrap();
+        }
+        // A fake inner phase so the next boundary's Δ is non-trivial.
+        for w in workers.iter_mut() {
+            for x in w.theta.iter_mut() {
+                *x += 0.1;
+            }
+        }
+    }
+    for i in 0..workers.len() {
+        strategies[i]
+            .drain(&mut *comms[i], &mut workers[i], &live, boundaries)
+            .unwrap();
+    }
+}
+
+/// Streamed folds must be bit-identical between the accounting mailbox
+/// and real fabric messages: same offers, same collect order, same
+/// host-side fragment math.
+#[test]
+fn streamed_folds_deterministic_across_communicators() {
+    let n = 7;
+    let mut cfg = streaming_cfg(3, true);
+    cfg.topology.pp = 1;
+    let phi0 = worker(0, n).phi.clone();
+
+    // Grid-style: one strategy + one shared accounting communicator
+    // serving both workers, in the core's boundary order.
+    let mut acc = AccountingComm::new();
+    let mut s = strategy_for_config(&cfg);
+    let mut acc_workers = [worker(0, n), worker(1, n)];
+    {
+        let live = vec![0usize, 1];
+        for outer_idx in 1..=4u64 {
+            for w in acc_workers.iter() {
+                s.offer_outer(&mut acc, w, &live, outer_idx).unwrap();
+            }
+            for w in acc_workers.iter_mut() {
+                s.fold_inflight(&mut acc, w, &live, outer_idx).unwrap();
+            }
+            for w in acc_workers.iter_mut() {
+                for x in w.theta.iter_mut() {
+                    *x += 0.1;
+                }
+            }
+        }
+        for w in acc_workers.iter_mut() {
+            s.drain(&mut acc, w, &live, 4).unwrap();
+        }
+    }
+
+    // Threaded-style: one strategy + one fabric communicator per worker.
+    let mut fabric = Fabric::new(2);
+    let mut eps = fabric.take_endpoints().into_iter();
+    let mut comm_a = FabricComm::new(eps.next().unwrap(), 2, None);
+    let mut comm_b = FabricComm::new(eps.next().unwrap(), 2, None);
+    let mut sa = strategy_for_config(&cfg);
+    let mut sb = strategy_for_config(&cfg);
+    let mut fab_workers = [worker(0, n), worker(1, n)];
+    run_rounds(
+        &mut [&mut comm_a, &mut comm_b],
+        &mut [sa.as_mut(), sb.as_mut()],
+        &mut fab_workers,
+        4,
+    );
+
+    for (a, f) in acc_workers.iter().zip(&fab_workers) {
+        assert_eq!(a.theta, f.theta, "θ diverged between communicators");
+        assert_eq!(a.phi, f.phi, "φ diverged between communicators");
+        assert_eq!(a.delta, f.delta, "δ diverged between communicators");
+    }
+    // The rounds actually folded something.
+    assert_ne!(acc_workers[0].phi, phi0);
+}
+
+/// A fragment offered before a leave must be dropped at the next
+/// boundary — on the fabric this also means *no blocking receive* from
+/// the departed peer (the test would hang otherwise).
+#[test]
+fn stale_fragment_dropped_after_churn_leave() {
+    let n = 6;
+    let mut cfg = streaming_cfg(2, true);
+    cfg.topology.pp = 1;
+    let mut fabric = Fabric::new(2);
+    let mut eps = fabric.take_endpoints().into_iter();
+    let mut comm_a = FabricComm::new(eps.next().unwrap(), 2, None);
+    let mut sa = strategy_for_config(&cfg);
+    let mut w0 = worker(0, n);
+
+    // Boundary 1: both replicas live; only worker 0's side runs here —
+    // worker 1 "dies" before offering anything the fold could read.
+    sa.offer_outer(&mut comm_a, &w0, &[0, 1], 1).unwrap();
+    let phi_before = w0.phi.clone();
+    // Boundary 2: replica 1 left; the in-flight fragment must be dropped
+    // without touching state and without waiting on the dead peer.
+    sa.fold_inflight(&mut comm_a, &mut w0, &[0], 2).unwrap();
+    assert_eq!(w0.phi, phi_before, "stale fragment must not fold");
+}
+
+/// `fragments = 1` with overlap off routes through the gated strategy:
+/// the loss trajectory, trace and comm accounting must be bit-identical
+/// to `--sync gated` for both outer flavors.
+#[test]
+fn degenerate_streaming_matches_gated_golden_trajectories() {
+    if !have_artifacts(2) {
+        return;
+    }
+    let mut eng = Engine::new(find_build(ART, "tiny", 2).unwrap()).unwrap();
+    for method in [Method::NoLoCo, Method::DiLoCo] {
+        let mut gated = streaming_cfg(1, false);
+        if method == Method::DiLoCo {
+            gated = presets::as_diloco(gated);
+            gated.outer.inner_steps = 2;
+            gated.sync = SyncMode::Streaming; // as_diloco keeps it, but be explicit
+        }
+        let mut plain = gated.clone();
+        plain.sync = SyncMode::Gated;
+        let a = SimTrainer::new(plain, &mut eng).unwrap().run().unwrap();
+        let b = SimTrainer::new(gated, &mut eng).unwrap().run().unwrap();
+        assert_eq!(a.step_train_loss, b.step_train_loss, "{method}");
+        assert_eq!(a.final_val_nll, b.final_val_nll, "{method}");
+        assert_eq!(a.trace.train_loss, b.trace.train_loss, "{method}");
+        assert_eq!(a.trace.val_loss, b.trace.val_loss, "{method}");
+        assert_eq!(a.trace.weight_std, b.trace.weight_std, "{method}");
+        assert_eq!(a.comm, b.comm, "{method}: comm accounting must not change");
+    }
+}
+
+/// Overlapped streaming runs under both executors and follows the same
+/// trajectory (host-side folds are executor-independent; the inner loop
+/// matches to float tolerance as for the gated methods).
+#[test]
+fn streaming_overlap_runs_under_both_executors() {
+    if !have_artifacts(2) {
+        return;
+    }
+    let cfg = streaming_cfg(2, true);
+    let sim = noloco::train::run_sim(&cfg).unwrap();
+    assert_eq!(sim.executor, "sim");
+    assert!(sim.step_train_loss.iter().all(|l| l.is_finite()));
+    assert!(sim.final_val_nll.is_finite());
+    assert_eq!(sim.comm.blocking_collectives, 0, "gossip flavor stays collective-free");
+    assert!(sim.comm.pair_exchanges > 0);
+
+    let thr = noloco::train::run_threaded(&cfg).unwrap();
+    assert_eq!(thr.executor, "threaded");
+    assert_eq!(thr.step_train_loss.len(), sim.step_train_loss.len());
+    for (a, b) in thr.step_train_loss.iter().zip(&sim.step_train_loss) {
+        assert!(
+            (a - b).abs() < 1e-4,
+            "threaded {a} vs sim {b} — streaming executors diverged"
+        );
+    }
+    assert_eq!(thr.comm.pair_exchanges, sim.comm.pair_exchanges);
+}
+
+/// Streaming runs are deterministic: same seed, same trajectory, for
+/// both the overlapped and the payload-split gated modes.
+#[test]
+fn streaming_trajectories_are_bit_stable() {
+    if !have_artifacts(2) {
+        return;
+    }
+    let mut eng = Engine::new(find_build(ART, "tiny", 2).unwrap()).unwrap();
+    for (fragments, overlap) in [(2, true), (3, false), (1, true)] {
+        let cfg = streaming_cfg(fragments, overlap);
+        let a = SimTrainer::new(cfg.clone(), &mut eng).unwrap().run().unwrap();
+        let b = SimTrainer::new(cfg, &mut eng).unwrap().run().unwrap();
+        assert_eq!(a.step_train_loss, b.step_train_loss, "K={fragments} overlap={overlap}");
+        assert_eq!(a.final_val_nll, b.final_val_nll, "K={fragments} overlap={overlap}");
+        assert_eq!(a.comm, b.comm, "K={fragments} overlap={overlap}");
+        assert!(a.step_train_loss.iter().all(|l| l.is_finite()));
+    }
+}
+
+/// The threaded executor runs streaming NoLoCo through a leave + rejoin
+/// too: in-flight fragments spanning the events are dropped, the
+/// rejoiner catches up through the per-fragment adoption path (no grid
+/// donor bootstrap on the fabric), and no fold ever blocks on a dead
+/// peer.
+#[test]
+fn threaded_streaming_trains_through_leave_and_rejoin() {
+    if !have_artifacts(2) {
+        return;
+    }
+    let mut cfg = streaming_cfg(2, true);
+    cfg.steps = 6;
+    cfg.churn = ChurnSchedule::none().leave(2, 1).join(5, 1);
+    let report = noloco::train::run_threaded(&cfg).unwrap();
+    assert_eq!(report.step_train_loss.len(), 6);
+    // Column 0 stayed live throughout, so every step mean is finite.
+    assert!(report.step_train_loss.iter().all(|l| l.is_finite()));
+    assert!(report.final_val_nll.is_finite());
+    assert_eq!(report.comm.blocking_collectives, 0);
+}
+
+/// Streaming NoLoCo trains through a leave + rejoin: in-flight fragments
+/// spanning the membership events are dropped and training completes.
+#[test]
+fn streaming_survives_churn() {
+    if !have_artifacts(2) {
+        return;
+    }
+    let mut eng = Engine::new(find_build(ART, "tiny", 2).unwrap()).unwrap();
+    let mut cfg = streaming_cfg(2, true);
+    cfg.steps = 6;
+    cfg.churn = ChurnSchedule::none().leave(2, 1).join(5, 1);
+    let mut t = SimTrainer::new(cfg, &mut eng).unwrap();
+    let report = t.run().unwrap();
+    assert!(report.final_val_nll.is_finite());
+    assert!(t.is_live(1));
+    assert!(t.worker(0, 1).theta.iter().all(|x| x.is_finite()));
+    assert_eq!(report.comm.blocking_collectives, 0);
+}

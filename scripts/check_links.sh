@@ -1,0 +1,67 @@
+#!/usr/bin/env bash
+# Lightweight markdown link checker for the docs layer.
+#
+# Verifies that every relative link/image target in the checked files
+# exists on disk (anchors and external http(s)/mailto links are skipped —
+# no network access in CI). Also verifies that paths named in backticks
+# with a known docs prefix exist, so README references like
+# `docs/ARCHITECTURE.md` cannot rot.
+#
+# Usage: scripts/check_links.sh [files...]   (defaults to README.md docs/*.md)
+
+set -u
+cd "$(dirname "$0")/.."
+
+files=("$@")
+if [ ${#files[@]} -eq 0 ]; then
+    files=(README.md docs/*.md)
+fi
+
+fail=0
+
+check_target() {
+    # $1 = referencing file, $2 = raw target
+    local src="$1" target="$2"
+    case "$target" in
+        http://*|https://*|mailto:*|\#*) return 0 ;;
+    esac
+    target="${target%%#*}"              # strip in-page anchors
+    [ -z "$target" ] && return 0
+    local base
+    case "$target" in
+        /*) base=".$target" ;;
+        *)  base="$(dirname "$src")/$target" ;;
+    esac
+    if [ ! -e "$base" ]; then
+        echo "BROKEN LINK: $src -> $target"
+        fail=1
+    fi
+}
+
+for f in "${files[@]}"; do
+    if [ ! -f "$f" ]; then
+        echo "MISSING FILE: $f"
+        fail=1
+        continue
+    fi
+    # Markdown links and images: [text](target), ![alt](target)
+    while IFS= read -r target; do
+        check_target "$f" "$target"
+    done < <(grep -o '!\?\[[^]]*\]([^)]*)' "$f" | sed 's/.*](\([^)]*\))/\1/')
+    # Backticked repo paths with a known prefix: `docs/...`, `rust/...`,
+    # `python/...`, `examples/...`, `scripts/...` — always repo-root
+    # relative, wherever they are referenced from.
+    while IFS= read -r target; do
+        # Skip glob-y or placeholder paths.
+        case "$target" in
+            *\**|*\<*|*\$*) continue ;;
+        esac
+        check_target "$f" "/$target"
+    done < <(grep -o '`\(docs\|rust\|python\|examples\|scripts\)/[^`]*`' "$f" | tr -d '`')
+done
+
+if [ "$fail" -ne 0 ]; then
+    echo "docs link check FAILED"
+    exit 1
+fi
+echo "docs link check OK (${files[*]})"
