@@ -1,0 +1,26 @@
+# Build-time entry points.
+#
+# `make artifacts` AOT-lowers every training-time function to HLO text
+# (python/compile/aot.py) under rust/artifacts/, where the Rust test
+# suite and examples look for them (cargo runs with cwd = rust/). The
+# Python layer never runs on the training path — this is the one
+# compile step.
+
+PYTHON ?= python3
+ARTIFACTS ?= $(CURDIR)/rust/artifacts
+
+.PHONY: artifacts test test-artifacts bench
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir $(ARTIFACTS)
+
+test:
+	cd rust && cargo test -q
+
+# The artifact-gated suite: every PJRT-dependent test hardens its skip
+# into a failure (used by the second CI job after `make artifacts`).
+test-artifacts:
+	cd rust && NOLOCO_REQUIRE_ARTIFACTS=1 cargo test -q
+
+bench:
+	cd rust && cargo bench

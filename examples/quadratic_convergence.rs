@@ -33,6 +33,7 @@ fn sim(omega: f64, gamma: f64, replicas: usize, outer_steps: usize) -> QuadSim {
             gamma,
             group: 2,
             inner_steps: 10,
+            staleness: 1,
         },
         init_scale: 2.0,
     }

@@ -93,7 +93,7 @@ fn main() -> anyhow::Result<()> {
             cfg.outer.inner_steps = 2;
             let gated = noloco::train::run_sim(&cfg)?;
             cfg.sync = SyncMode::Streaming;
-            cfg.stream = StreamConfig { fragments: 2, overlap: true };
+            cfg.stream = StreamConfig { fragments: 2, overlap: true, ..StreamConfig::default() };
             let streamed = noloco::train::run_sim(&cfg)?;
             println!(
                 "## Trainer check (tiny artifacts): gated ppl {:.2} vs streamed ppl {:.2}; \

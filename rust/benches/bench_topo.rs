@@ -6,7 +6,7 @@
 //!
 //! `cargo bench --bench bench_topo`
 
-use noloco::bench::{bench_row, gated_vs_streamed_pair_sync, section};
+use noloco::bench::{bench_row, gated_vs_streamed_pair_sync, lockstep_vs_async_idle, section};
 use noloco::collective::{
     pair_average_time_bytes, ring_all_reduce_time_bytes, tree_all_reduce_time_bytes,
     tree_all_reduce_time_over,
@@ -203,6 +203,47 @@ fn streaming_overlap_comparison() {
     }
 }
 
+/// Lockstep vs asynchronous boundary idle time on the `wan` and
+/// `long-tail` presets: per round, every replica draws a log-normal
+/// inner-phase compute time, gossip pairs exchange the 8 MiB (Δ, φ)
+/// payload, and the shared [`lockstep_vs_async_idle`] walk reports the
+/// mean per-worker stall under the gated global barrier vs the
+/// bounded-staleness engine's wait-only-for-your-pair discipline. The
+/// **stall reduction** `1 − async / lockstep` is the straggler time the
+/// async boundary removes from the critical path.
+fn boundary_idle_comparison() {
+    section("lockstep vs async boundary idle (24 replicas, 8 MiB (Δ, φ), log-normal compute)");
+    let dp = 24;
+    let payload = 2u64 * (4 << 20);
+    let rounds = 200u64;
+    let presets = [
+        ("wan", NetTopoConfig {
+            preset: NetPreset::MultiRegionWan,
+            regions: 3,
+            ..NetTopoConfig::default()
+        }),
+        ("long-tail", NetTopoConfig {
+            preset: NetPreset::LongTailInternet,
+            ..NetTopoConfig::default()
+        }),
+    ];
+    println!(
+        "  {:<12} {:>18} {:>16} {:>16}",
+        "preset", "lockstep idle (s)", "async idle (s)", "stall reduction"
+    );
+    for (name, cfg) in presets {
+        let (lock, asy) = lockstep_vs_async_idle(&cfg, dp, payload, rounds, None, 11);
+        println!(
+            "  {name:<12} {lock:>18.4} {asy:>16.4} {:>16.3}",
+            1.0 - asy / lock
+        );
+        assert!(
+            asy < lock,
+            "the async boundary must reduce straggler stall on {name}: {asy} vs {lock}"
+        );
+    }
+}
+
 fn main() {
     println!("bench_topo — WAN topology, payload-aware collectives, elastic membership");
     transfer_sampling();
@@ -210,4 +251,5 @@ fn main() {
     shared_seed_derivations();
     pairing_comparison();
     streaming_overlap_comparison();
+    boundary_idle_comparison();
 }

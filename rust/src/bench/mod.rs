@@ -7,9 +7,12 @@
 
 use std::time::{Duration, Instant};
 
-use crate::collective::{pair_average_time_bytes, streamed_pair_residual_bytes};
+use crate::collective::{
+    boundary_idle_times, pair_average_time_bytes, streamed_pair_residual_bytes,
+};
 use crate::config::NetTopoConfig;
 use crate::net::SimClock;
+use crate::rngx::Pcg64;
 use crate::train::{PairingPolicy, UniformPairing};
 
 /// Mean gated outer-sync time vs streamed residual over `rounds` uniform
@@ -43,6 +46,49 @@ pub fn gated_vs_streamed_pair_sync(
         resid += streamed_pair_residual_bytes(&mut c, Some(&pairs), payload, fragments, compute);
     }
     (gated / rounds as f64, resid / rounds as f64)
+}
+
+/// Mean per-worker boundary idle under the lockstep (gated) barrier vs
+/// the bounded-staleness engine's wait-only-for-your-pair discipline:
+/// per round, every replica draws a log-normal inner-phase compute time
+/// (`LogNormal(-1, 0.45²)` seconds, the wan_churn compute model), the
+/// uniform pairing exchanges `payload` bytes per pair at expected
+/// transfer times, and [`boundary_idle_times`] splits the stall. An
+/// optional `(node, mult)` straggler scales that node's links *and*
+/// compute. Returns `(lockstep, async)` mean idle seconds — one
+/// measurement protocol shared by `bench_topo`'s boundary-idle section
+/// and `examples/async_gossip` so the two cannot drift.
+pub fn lockstep_vs_async_idle(
+    cfg: &NetTopoConfig,
+    dp: usize,
+    payload: u64,
+    rounds: u64,
+    straggler: Option<(usize, f64)>,
+    seed: u64,
+) -> (f64, f64) {
+    let mut topo = cfg.build(dp, seed);
+    if let Some((node, mult)) = straggler {
+        topo.set_straggler(node, mult);
+    }
+    let live: Vec<usize> = (0..dp).collect();
+    let mut rng = Pcg64::seed_from_u64(seed ^ 0xa51c);
+    let (mut lock_sum, mut async_sum) = (0.0f64, 0.0f64);
+    for outer_idx in 1..=rounds {
+        let mut computes: Vec<f64> = (0..dp).map(|_| rng.log_normal(-1.0, 0.45)).collect();
+        if let Some((node, mult)) = straggler {
+            computes[node] *= mult;
+        }
+        let pairs: Vec<(usize, usize)> = UniformPairing
+            .draw(&live, 2, 0, outer_idx, seed)
+            .into_iter()
+            .filter(|g| g.len() == 2)
+            .map(|g| (g[0], g[1]))
+            .collect();
+        let (l, a) = boundary_idle_times(&topo, &pairs, &computes, payload);
+        lock_sum += l;
+        async_sum += a;
+    }
+    (lock_sum / rounds as f64, async_sum / rounds as f64)
 }
 
 /// One benchmark's raw measurements.

@@ -28,7 +28,7 @@ const VALUE_KEYS: &[&str] = &[
     "out", "artifacts", "set", "eval-every", "inner-steps", "group", "alpha", "beta",
     "gamma", "warmup", "world", "sigma", "mu", "iters", "dim", "omega", "outer-steps",
     "batch-tokens", "csv", "topo", "regions", "churn", "payload", "pairing", "sync",
-    "fragments", "overlap",
+    "fragments", "overlap", "staleness", "stash-age", "detect", "detect-misses",
 ];
 
 impl Args {
@@ -191,6 +191,22 @@ pub fn train_config_from(args: &Args) -> Result<crate::config::TrainConfig, Stri
             _ => return Err(format!("--overlap expects on|off, got `{o}`")),
         };
     }
+    if let Some(v) = args.opt_usize("staleness")? {
+        cfg.outer.staleness = v;
+    }
+    if let Some(v) = args.opt_usize("stash-age")? {
+        cfg.stream.stash_age = v;
+    }
+    if let Some(d) = args.opt("detect") {
+        cfg.detect.enabled = match d.to_ascii_lowercase().as_str() {
+            "on" | "true" | "1" => true,
+            "off" | "false" | "0" => false,
+            _ => return Err(format!("--detect expects on|off, got `{d}`")),
+        };
+    }
+    if let Some(v) = args.opt_usize("detect-misses")? {
+        cfg.detect.misses = v;
+    }
     // --set model.hidden=128 style overrides, applied last.
     if !args.sets.is_empty() {
         let mut text = String::new();
@@ -290,6 +306,29 @@ mod tests {
         // Streaming over FSDP is rejected by validation at the end.
         let a = parse(&["train", "--sync", "streaming", "--method", "fsdp"]);
         assert!(train_config_from(&a).is_err());
+    }
+
+    #[test]
+    fn async_boundary_flags_plumb_through() {
+        let a = parse(&[
+            "train", "--staleness", "3", "--stash-age", "6", "--detect", "on",
+            "--detect-misses", "4", "--pairing", "per-fragment",
+        ]);
+        let cfg = train_config_from(&a).unwrap();
+        assert_eq!(cfg.outer.staleness, 3);
+        assert_eq!(cfg.stream.stash_age, 6);
+        assert!(cfg.detect.enabled);
+        assert_eq!(cfg.detect.misses, 4);
+        assert_eq!(cfg.pairing, crate::config::PairingMode::PerFragment);
+        // Staleness > 1 over a collective method fails validation.
+        let a = parse(&["train", "--staleness", "2", "--method", "diloco"]);
+        assert!(train_config_from(&a).is_err());
+        let a = parse(&["train", "--detect", "maybe"]);
+        assert!(train_config_from(&a).unwrap_err().contains("detect"));
+        // The hier topology preset parses from --topo.
+        let a = parse(&["train", "--topo", "hier"]);
+        let cfg = train_config_from(&a).unwrap();
+        assert_eq!(cfg.net.preset, crate::config::NetPreset::HierarchicalDc);
     }
 
     #[test]

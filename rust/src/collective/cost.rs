@@ -12,6 +12,7 @@
 //! scaled by straggler multipliers, which is what makes Fig. 5-style
 //! comparisons runnable on heterogeneous WANs.
 
+use crate::net::topo::Topology;
 use crate::net::SimClock;
 
 use super::{tree_children, tree_parent};
@@ -201,6 +202,51 @@ pub fn streamed_tree_residual_bytes(
         resid += (t - compute).max(0.0);
     }
     resid
+}
+
+/// Straggler / idle-time model of one outer boundary, lockstep vs
+/// asynchronous (the async boundary engine's cost-model counterpart).
+///
+/// `computes[w]` is worker `w`'s inner-phase completion time this round
+/// (seconds); pair `(a, b)`'s gossip exchange of `bytes` completes at
+/// `max(t_a, t_b) + E[transfer_ab]`. Returns
+/// `(lockstep_mean_idle, async_mean_idle)` — the mean per-worker
+/// non-compute time at the boundary under each discipline:
+///
+/// * **lockstep** (the gated boundary): every worker additionally waits
+///   at a global barrier for the slowest pair, so
+///   `idle_w = T_barrier − t_w`;
+/// * **async** (bounded staleness): a worker waits only for its *own*
+///   pair, `idle_w = done_pair(w) − t_w`; unpaired workers wait for
+///   nobody.
+///
+/// `async ≤ lockstep` pointwise; the gap is the straggler stall the
+/// event-driven boundary removes from the critical path. Expected
+/// transfers keep the model deterministic — sample `computes` outside
+/// for a Monte-Carlo sweep.
+pub fn boundary_idle_times(
+    topo: &Topology,
+    pairs: &[(usize, usize)],
+    computes: &[f64],
+    bytes: u64,
+) -> (f64, f64) {
+    let n = computes.len();
+    if n == 0 {
+        return (0.0, 0.0);
+    }
+    let mut done = computes.to_vec();
+    for &(a, b) in pairs {
+        let t = computes[a].max(computes[b]) + topo.expected_transfer(a, b, bytes);
+        done[a] = t;
+        done[b] = t;
+    }
+    let barrier = done.iter().fold(0.0, f64::max);
+    let (mut lock, mut asy) = (0.0, 0.0);
+    for w in 0..n {
+        lock += barrier - computes[w];
+        asy += done[w] - computes[w];
+    }
+    (lock / n as f64, asy / n as f64)
 }
 
 #[cfg(test)]
@@ -394,6 +440,33 @@ mod tests {
         assert_eq!(streamed_tree_residual_bytes(&mut c, &members, 0, 2, 6.0), 0.0);
         let mut c = SimClock::with_topology(topo(), 0);
         assert_eq!(streamed_tree_residual_bytes(&mut c, &members, 0, 2, 4.0), 4.0);
+    }
+
+    #[test]
+    fn async_idle_undercuts_lockstep_under_a_straggler() {
+        use crate::net::topo::{Link, Topology};
+        // 6 workers, one (node 5) with a 10x-slow compute phase. Pairs
+        // (0,1) (2,3) (4,5), zero-latency infinite-bandwidth links so the
+        // idle comes purely from waiting on peers.
+        let topo = Topology::single_switch(6, Link::constant(0.0));
+        let computes = [1.0, 1.0, 1.0, 1.0, 1.0, 10.0];
+        let pairs = [(0usize, 1usize), (2, 3), (4, 5)];
+        let (lock, asy) = boundary_idle_times(&topo, &pairs, &computes, 0);
+        // Lockstep: barrier at 10 s, idle = (9*5 + 0)/6 = 7.5.
+        assert!((lock - 7.5).abs() < 1e-12, "{lock}");
+        // Async: only worker 4 waits the 9 s for its partner.
+        assert!((asy - 1.5).abs() < 1e-12, "{asy}");
+        assert!(asy < lock);
+        // No straggler, equal compute: both disciplines idle only on the
+        // transfer, and they agree.
+        let even = [2.0; 6];
+        let topo2 = Topology::single_switch(6, Link::constant(0.5));
+        let (lock, asy) = boundary_idle_times(&topo2, &pairs, &even, 0);
+        assert!((lock - 0.5).abs() < 1e-12);
+        assert!((asy - 0.5).abs() < 1e-12);
+        // Unpaired workers never idle under async.
+        let (lock, asy) = boundary_idle_times(&topo, &[(0, 5)], &computes, 0);
+        assert!(asy < lock);
     }
 
     #[test]

@@ -18,9 +18,9 @@ pub mod cost;
 mod exec;
 
 pub use cost::{
-    pair_average_time, pair_average_time_bytes, ring_all_reduce_time, ring_all_reduce_time_bytes,
-    streamed_pair_residual_bytes, streamed_tree_residual_bytes, tree_all_reduce_time,
-    tree_all_reduce_time_bytes, tree_all_reduce_time_over,
+    boundary_idle_times, pair_average_time, pair_average_time_bytes, ring_all_reduce_time,
+    ring_all_reduce_time_bytes, streamed_pair_residual_bytes, streamed_tree_residual_bytes,
+    tree_all_reduce_time, tree_all_reduce_time_bytes, tree_all_reduce_time_over,
 };
 pub use exec::{all_reduce_mean, broadcast, pair_exchange, reduce_scatter_gather};
 

@@ -60,6 +60,13 @@ pub enum PairingMode {
     /// network topology, with periodic uniform rounds to keep the gossip
     /// graph mixing across regions.
     BandwidthAware,
+    /// Draw a *different* uniform partition per fragment, so each
+    /// fragment of the (Δ, φ) state gossips with its own partner — the
+    /// multi-partner form used by the bounded-staleness async engine
+    /// (and by streamed runs, where each fragment's partner sequence
+    /// decorrelates from its siblings'). Mixes K× faster per round at
+    /// the same total payload.
+    PerFragment,
 }
 
 impl PairingMode {
@@ -68,6 +75,7 @@ impl PairingMode {
         match s.to_ascii_lowercase().as_str() {
             "uniform" | "random" => Some(PairingMode::Uniform),
             "bandwidth-aware" | "bandwidth" | "bw" => Some(PairingMode::BandwidthAware),
+            "per-fragment" | "per-frag" | "fragment" => Some(PairingMode::PerFragment),
             _ => None,
         }
     }
@@ -78,6 +86,7 @@ impl fmt::Display for PairingMode {
         match self {
             PairingMode::Uniform => write!(f, "uniform"),
             PairingMode::BandwidthAware => write!(f, "bandwidth-aware"),
+            PairingMode::PerFragment => write!(f, "per-fragment"),
         }
     }
 }
@@ -131,11 +140,20 @@ pub struct StreamConfig {
     /// `fragments = 1` with overlap off reproduces the gated trajectory
     /// bit-for-bit.
     pub overlap: bool,
+    /// Stash-expiry age in outer boundaries (`outer.stash_age` /
+    /// `--stash-age`): sync payloads never collected — churn-dropped
+    /// folds, straggler timeouts, suppressed receivers — are swept from
+    /// the communicator's retention buffers / endpoint stash once they
+    /// are this many boundaries old. `0` disables the sweep (the
+    /// pre-expiry behaviour: uncollected messages sit for the rest of
+    /// the run). Must cover `outer.staleness` so admissible rounds are
+    /// never swept.
+    pub stash_age: usize,
 }
 
 impl Default for StreamConfig {
     fn default() -> StreamConfig {
-        StreamConfig { fragments: 4, overlap: true }
+        StreamConfig { fragments: 4, overlap: true, stash_age: 4 }
     }
 }
 
@@ -238,6 +256,10 @@ pub enum NetPreset {
     /// One flat "region" of consumer links: heavy-tailed latency, low
     /// bandwidth, per-node straggler multipliers.
     LongTailInternet,
+    /// Hierarchical datacenter: rack / pod / spine tiers with per-tier
+    /// latency and bandwidth (nodes in racks, racks in pods, pods joined
+    /// by the spine). Each deeper tier is slower and narrower.
+    HierarchicalDc,
 }
 
 impl NetPreset {
@@ -247,6 +269,7 @@ impl NetPreset {
             "lan" | "single-switch" => Some(NetPreset::SingleSwitchLan),
             "wan" | "multi-region" => Some(NetPreset::MultiRegionWan),
             "long-tail" | "internet" => Some(NetPreset::LongTailInternet),
+            "hier" | "hierarchical" | "datacenter" => Some(NetPreset::HierarchicalDc),
             _ => None,
         }
     }
@@ -258,6 +281,7 @@ impl fmt::Display for NetPreset {
             NetPreset::SingleSwitchLan => write!(f, "lan"),
             NetPreset::MultiRegionWan => write!(f, "wan"),
             NetPreset::LongTailInternet => write!(f, "long-tail"),
+            NetPreset::HierarchicalDc => write!(f, "hier"),
         }
     }
 }
@@ -269,20 +293,30 @@ impl fmt::Display for NetPreset {
 pub struct NetTopoConfig {
     /// Scenario family.
     pub preset: NetPreset,
-    /// Region count for the WAN preset (clamped to the world size).
+    /// Region count for the WAN preset (clamped to the world size); the
+    /// *pod* count for the hierarchical preset.
     pub regions: usize,
-    /// Intra-region link latency (s).
+    /// Intra-region link latency (s); the rack-tier latency for `hier`.
     pub intra_latency: f64,
-    /// Inter-region link latency (s); also the long-tail median latency.
+    /// Inter-region link latency (s); also the long-tail median latency
+    /// and the spine-tier latency for `hier`.
     pub inter_latency: f64,
-    /// Intra-region bandwidth (bytes/s).
+    /// Intra-region bandwidth (bytes/s); the rack-tier bandwidth for
+    /// `hier`.
     pub intra_bandwidth: f64,
-    /// Inter-region bandwidth (bytes/s); also the long-tail bandwidth.
+    /// Inter-region bandwidth (bytes/s); also the long-tail bandwidth
+    /// and the spine-tier bandwidth for `hier`.
     pub inter_bandwidth: f64,
     /// Log-normal latency spread σ for the WAN / long-tail presets.
     pub latency_sigma: f64,
     /// Straggler-multiplier spread σ for the long-tail preset.
     pub straggler_sigma: f64,
+    /// Racks per pod for the hierarchical preset.
+    pub racks_per_pod: usize,
+    /// Pod-tier (rack-to-rack within a pod) latency (s) for `hier`.
+    pub pod_latency: f64,
+    /// Pod-tier bandwidth (bytes/s) for `hier`.
+    pub pod_bandwidth: f64,
 }
 
 impl Default for NetTopoConfig {
@@ -296,6 +330,9 @@ impl Default for NetTopoConfig {
             inter_bandwidth: 1.25e7, // 100 Mb/s
             latency_sigma: 0.6,
             straggler_sigma: 0.5,
+            racks_per_pod: 2,
+            pod_latency: 5e-3,
+            pod_bandwidth: 1.25e8, // 1 Gb/s
         }
     }
 }
@@ -339,6 +376,20 @@ impl NetTopoConfig {
                 self.straggler_sigma,
                 seed,
             ),
+            NetPreset::HierarchicalDc => Topology::hierarchical(
+                world,
+                self.regions.max(1),
+                self.racks_per_pod.max(1),
+                Link::new(LatencyModel::Constant(self.intra_latency), self.intra_bandwidth),
+                Link::new(LatencyModel::Constant(self.pod_latency), self.pod_bandwidth),
+                Link::new(
+                    LatencyModel::LogNormal {
+                        mu: self.inter_latency.ln(),
+                        sigma: self.latency_sigma,
+                    },
+                    self.inter_bandwidth,
+                ),
+            ),
         }
     }
 }
@@ -359,6 +410,16 @@ pub struct OuterConfig {
     pub group: usize,
     /// Inner steps per outer step m (paper: 100 DiLoCo, 50 NoLoCo).
     pub inner_steps: usize,
+    /// Bounded-staleness admission window for the outer gossip, in
+    /// boundaries. `1` (the default) is the lockstep contract — only
+    /// state offered at the current boundary folds, through the existing
+    /// gated / streaming code paths bit-for-bit. `S > 1` selects the
+    /// asynchronous boundary engine
+    /// ([`AsyncGossipSync`](crate::train::AsyncGossipSync)): peer state
+    /// up to `S − 1` boundaries old is admitted with an age-decayed
+    /// weight instead of excluded, so a lagging replica keeps mixing
+    /// instead of stalling its partners. NoLoCo only.
+    pub staleness: usize,
 }
 
 impl OuterConfig {
@@ -402,7 +463,40 @@ impl OuterConfig {
         if self.inner_steps == 0 {
             return Err("inner_steps must be >= 1".into());
         }
+        if self.staleness == 0 {
+            return Err("outer.staleness must be >= 1 (1 = lockstep boundary)".into());
+        }
+        if self.staleness > 1 && self.method != Method::NoLoCo {
+            return Err(format!(
+                "outer.staleness > 1 needs NoLoCo's gossip: {} synchronizes through a \
+                 blocking collective with no stale form",
+                self.method
+            ));
+        }
         Ok(())
+    }
+}
+
+/// Heartbeat-based failure *detection* knobs (the `[churn]` TOML
+/// section). With `detect` on, every replica announces liveness to its
+/// stage-row peers at each outer boundary; a peer that misses `misses`
+/// consecutive boundary heartbeats is suspected dead and removed through
+/// the same [`ChurnResponse`](crate::train::ChurnResponse) repair
+/// machinery a scheduled leave uses — and re-admitted (with the rejoin
+/// adoption logic) when its heartbeats resume. NoLoCo only: collectives
+/// have no live-subset form to repair into.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DetectConfig {
+    /// Enable the detector (`churn.detect` / `--detect on`).
+    pub enabled: bool,
+    /// Consecutive missed boundary heartbeats before a peer is declared
+    /// dead (`churn.misses` / `--detect-misses`).
+    pub misses: usize,
+}
+
+impl Default for DetectConfig {
+    fn default() -> DetectConfig {
+        DetectConfig { enabled: false, misses: 2 }
     }
 }
 
@@ -471,8 +565,12 @@ pub struct TrainConfig {
     /// Outer-sync scheduling: gated (the seed behaviour) or streaming
     /// fragmented overlap.
     pub sync: SyncMode,
-    /// Fragment count / overlap shape for [`SyncMode::Streaming`].
+    /// Fragment count / overlap shape for [`SyncMode::Streaming`] (the
+    /// bounded-staleness engine reuses `fragments` for its per-fragment
+    /// pairing form).
     pub stream: StreamConfig,
+    /// Heartbeat failure-detection knobs (the `[churn]` section).
+    pub detect: DetectConfig,
 }
 
 impl TrainConfig {
@@ -506,6 +604,9 @@ impl TrainConfig {
                 "topology.inter_bandwidth" => set_f64(&mut self.net.inter_bandwidth, v),
                 "topology.latency_sigma" => set_f64(&mut self.net.latency_sigma, v),
                 "topology.straggler_sigma" => set_f64(&mut self.net.straggler_sigma, v),
+                "topology.racks_per_pod" => set_usize(&mut self.net.racks_per_pod, v),
+                "topology.pod_latency" => set_f64(&mut self.net.pod_latency, v),
+                "topology.pod_bandwidth" => set_f64(&mut self.net.pod_bandwidth, v),
                 "topology.churn" => match churn_from_value(v) {
                     Some(s) => {
                         self.churn = s;
@@ -536,6 +637,10 @@ impl TrainConfig {
                 },
                 "outer.fragments" => set_usize(&mut self.stream.fragments, v),
                 "outer.overlap" => set_bool(&mut self.stream.overlap, v),
+                "outer.stash_age" => set_usize(&mut self.stream.stash_age, v),
+                "outer.staleness" => set_usize(&mut self.outer.staleness, v),
+                "churn.detect" => set_bool(&mut self.detect.enabled, v),
+                "churn.misses" => set_usize(&mut self.detect.misses, v),
                 "outer.alpha" => set_f64(&mut self.outer.alpha, v),
                 "outer.beta" => set_f64(&mut self.outer.beta, v),
                 "outer.gamma" => set_f64(&mut self.outer.gamma, v),
@@ -619,6 +724,64 @@ impl TrainConfig {
                     self.stream.fragments
                 ));
             }
+        }
+        if self.outer.staleness > 1 {
+            if self.sync != SyncMode::Gated {
+                return Err(
+                    "outer.staleness > 1 selects the async boundary engine, which owns \
+                     its own overlap; combine it with `sync = \"gated\"` (streaming's \
+                     one-boundary overlap is the staleness = 1 special case)"
+                        .into(),
+                );
+            }
+            if self.stream.fragments == 0 || self.stream.fragments > 256 {
+                return Err(format!(
+                    "outer.fragments must be in 1..=256 for per-fragment async gossip, got {}",
+                    self.stream.fragments
+                ));
+            }
+        }
+        if self.stream.stash_age > 0 && self.stream.stash_age < self.outer.staleness {
+            return Err(format!(
+                "outer.stash_age ({}) must cover outer.staleness ({}): the sweep would \
+                 expire rounds the admission window still accepts",
+                self.stream.stash_age, self.outer.staleness
+            ));
+        }
+        if self.outer.staleness > 1 && self.stream.stash_age == 0 {
+            return Err(
+                "outer.staleness > 1 needs outer.stash_age > 0: async offers stay \
+                 readable for the whole admission window, so only the expiry sweep \
+                 bounds the retention buffers"
+                    .into(),
+            );
+        }
+        if self.detect.enabled {
+            if self.outer.method != Method::NoLoCo {
+                return Err(format!(
+                    "churn.detect needs NoLoCo's repairable gossip; {} aborts on any \
+                     membership change",
+                    self.outer.method
+                ));
+            }
+            if self.detect.misses < 2 {
+                return Err(
+                    "churn.misses must be >= 2: workers heartbeat at boundary granularity \
+                     and run concurrently, so one boundary of skew is the healthy steady \
+                     state on the threaded executor — misses = 1 would flap live peers"
+                        .into(),
+                );
+            }
+            if self.stream.stash_age > 0 && self.stream.stash_age < self.detect.misses {
+                return Err(format!(
+                    "outer.stash_age ({}) must cover churn.misses ({}): the sweep would \
+                     expire heartbeats still inside the detection tolerance",
+                    self.stream.stash_age, self.detect.misses
+                ));
+            }
+        }
+        if self.net.preset == NetPreset::HierarchicalDc && self.net.racks_per_pod == 0 {
+            return Err("topology.racks_per_pod must be >= 1".into());
         }
         Ok(())
     }
@@ -841,6 +1004,84 @@ mod tests {
         // Gated FSDP stays valid — the streaming restriction is scoped.
         c.sync = SyncMode::Gated;
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn staleness_parses_and_validates() {
+        let mut c = presets::preset("tiny").unwrap();
+        assert_eq!(c.outer.staleness, 1);
+        let doc = Doc::parse("[outer]\nstaleness = 3\n").unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.outer.staleness, 3);
+        c.validate().unwrap();
+        // Zero is rejected, and staleness > 1 needs NoLoCo + gated sync.
+        c.outer.staleness = 0;
+        assert!(c.validate().unwrap_err().contains("staleness"));
+        c.outer.staleness = 2;
+        c.sync = SyncMode::Streaming;
+        assert!(c.validate().unwrap_err().contains("staleness"));
+        c.sync = SyncMode::Gated;
+        c.validate().unwrap();
+        let mut d = presets::as_diloco(presets::preset("tiny").unwrap());
+        d.outer.staleness = 2;
+        assert!(d.validate().unwrap_err().contains("staleness"));
+    }
+
+    #[test]
+    fn detect_knobs_parse_and_validate() {
+        let mut c = presets::preset("tiny").unwrap();
+        assert!(!c.detect.enabled);
+        assert_eq!(c.detect.misses, 2);
+        let doc = Doc::parse("[churn]\ndetect = true\nmisses = 3\n").unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert!(c.detect.enabled);
+        assert_eq!(c.detect.misses, 3);
+        c.validate().unwrap();
+        c.detect.misses = 0;
+        assert!(c.validate().unwrap_err().contains("misses"));
+        c.detect.misses = 1;
+        assert!(c.validate().unwrap_err().contains("misses"), "one boundary of skew is healthy");
+        c.detect.misses = 2;
+        c = presets::as_diloco(c);
+        assert!(c.validate().unwrap_err().contains("detect"));
+    }
+
+    #[test]
+    fn per_fragment_pairing_parses() {
+        assert_eq!(PairingMode::parse("per-fragment"), Some(PairingMode::PerFragment));
+        assert_eq!(PairingMode::parse("Per-Frag"), Some(PairingMode::PerFragment));
+        assert_eq!(format!("{}", PairingMode::PerFragment), "per-fragment");
+        let mut c = presets::preset("tiny").unwrap();
+        let doc = Doc::parse("[outer]\npairing = \"per-fragment\"\n").unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.pairing, PairingMode::PerFragment);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn hier_preset_builds_three_tiers() {
+        let n = NetTopoConfig {
+            preset: NetPreset::HierarchicalDc,
+            regions: 2,        // pods
+            racks_per_pod: 2,  // -> 4 racks
+            ..NetTopoConfig::default()
+        };
+        let t = n.build(8, 0);
+        assert_eq!(t.world(), 8);
+        assert_eq!(t.regions(), 4, "one topology region per rack");
+        // Node layout is rack-major: nodes 0..2 rack 0, 2..4 rack 1, ...
+        // Rack < pod < spine in expected transfer cost.
+        let rack = t.expected_transfer(0, 1, 1 << 20); // same rack
+        let pod = t.expected_transfer(0, 2, 1 << 20); // same pod, other rack
+        let spine = t.expected_transfer(0, 4, 1 << 20); // other pod
+        assert!(rack < pod, "rack tier must undercut pod tier: {rack} vs {pod}");
+        assert!(pod < spine, "pod tier must undercut spine tier: {pod} vs {spine}");
+        assert_eq!(NetPreset::parse("hier"), Some(NetPreset::HierarchicalDc));
+        assert_eq!(format!("{}", NetPreset::HierarchicalDc), "hier");
+        let bad = NetTopoConfig { racks_per_pod: 0, preset: NetPreset::HierarchicalDc, ..n };
+        let mut c = presets::preset("tiny").unwrap();
+        c.net = bad;
+        assert!(c.validate().unwrap_err().contains("racks_per_pod"));
     }
 
     #[test]

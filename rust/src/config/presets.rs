@@ -11,8 +11,8 @@
 //! optimizer settings, smaller width/depth/vocab.
 
 use super::{
-    Dataset, Method, ModelConfig, NetTopoConfig, OuterConfig, PairingMode, Routing,
-    StreamConfig, SyncMode, TopologyConfig, TrainConfig,
+    Dataset, DetectConfig, Method, ModelConfig, NetTopoConfig, OuterConfig, PairingMode,
+    Routing, StreamConfig, SyncMode, TopologyConfig, TrainConfig,
 };
 use crate::net::topo::ChurnSchedule;
 
@@ -37,6 +37,7 @@ fn base(model: ModelConfig, steps: usize, warmup: usize) -> TrainConfig {
             gamma: OuterConfig::default_gamma(0.5, 2),
             group: 2,
             inner_steps: 50,
+            staleness: 1,
         },
         dataset: Dataset::RedditLike,
         steps,
@@ -53,6 +54,7 @@ fn base(model: ModelConfig, steps: usize, warmup: usize) -> TrainConfig {
         pairing: PairingMode::Uniform,
         sync: SyncMode::Gated,
         stream: StreamConfig::default(),
+        detect: DetectConfig::default(),
     }
 }
 

@@ -26,7 +26,7 @@
 //! | [`tensor`] | host-side flat tensors + stats used by collectives |
 //! | [`prop`] | minimal property-testing harness |
 //! | [`net`] | discrete-event latency simulator + in-process message fabric |
-//! | [`net::topo`] | heterogeneous WAN topologies (regions, latency+bandwidth links, stragglers) + elastic membership (churn schedules, live sets) |
+//! | [`net::topo`] | heterogeneous WAN / hierarchical-DC topologies (regions, latency+bandwidth links, stragglers) + elastic membership (churn schedules, live sets, heartbeat failure detection) |
 //! | [`collective`] | tree / ring all-reduce, broadcast, pair exchange; topology- and payload-aware cost models |
 //! | [`routing`] | random-permutation pipeline routing (§3.1), incl. live-subset plans under churn |
 //! | [`optim`] | Adam, LR schedules, DiLoCo Nesterov, NoLoCo modified Nesterov (Eq. 2) |
@@ -35,7 +35,7 @@
 //! | [`metrics`] | perplexity, cross-replica weight σ, Pearson r, CSV |
 //! | [`model`] | Rust mirror of Layer-2 stage parameter shapes |
 //! | [`runtime`] | PJRT engine: artifact loading, compile cache, execution |
-//! | [`train`] | distributed training API: one generic [`train::TrainerCore`] over pluggable [`train::SyncStrategy`] (fsdp / diloco / noloco / streaming-fragmented overlap via [`train::StreamingSync`]) and [`train::Communicator`] (accounting / fabric) impls, plus [`train::PairingPolicy`] gossip pairing |
+//! | [`train`] | distributed training API: one generic [`train::TrainerCore`] over pluggable [`train::SyncStrategy`] (fsdp / diloco / noloco / streaming-fragmented overlap via [`train::StreamingSync`] / bounded-staleness async gossip via [`train::AsyncGossipSync`]) and [`train::Communicator`] (accounting / fabric) impls, plus [`train::PairingPolicy`] gossip pairing |
 //! | [`bench`] | measurement helpers for `cargo bench` targets |
 
 pub mod bench;

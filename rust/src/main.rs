@@ -79,13 +79,17 @@ fn print_help() {
            --csv FILE           write the run trace as CSV\n\
            --latency-mu X       threaded: log-normal latency mu (seconds)\n\
            --latency-sigma X    threaded: log-normal latency sigma\n\
-           --topo P             network preset: lan | wan | long-tail\n\
-           --regions N          WAN region count\n\
+           --topo P             network preset: lan | wan | long-tail | hier\n\
+           --regions N          WAN region count (hier: pod count)\n\
            --churn EVENTS       'leave:STEP:REPLICA;join:STEP:REPLICA;…'\n\
-           --pairing P          NoLoCo gossip pairing: uniform | bandwidth-aware\n\
+           --pairing P          NoLoCo gossip pairing: uniform | bandwidth-aware | per-fragment\n\
            --sync S             outer sync scheduling: gated | streaming\n\
-           --fragments K        streaming: (Δ, φ) fragment count (default 4)\n\
+           --fragments K        streaming / per-fragment async: (Δ, φ) fragment count\n\
            --overlap on|off     streaming: fold fragments one boundary late\n\
+           --staleness S        async boundary: admit peer state up to S-1 boundaries old\n\
+           --stash-age N        sweep uncollected sync payloads after N boundaries (0 = never)\n\
+           --detect on|off      heartbeat failure detection (NoLoCo)\n\
+           --detect-misses K    consecutive missed heartbeats before a peer is declared dead\n\
            --payload BYTES      topo: sync payload (default: model size)"
     );
 }
@@ -93,7 +97,7 @@ fn print_help() {
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = cli::train_config_from(args).map_err(anyhow::Error::msg)?;
     println!(
-        "run: {} | {} | dp={} pp={} | {} steps | routing {:?} | pairing {} | sync {}{} | seed {}",
+        "run: {} | {} | dp={} pp={} | {} steps | routing {:?} | pairing {} | sync {}{}{} | seed {}",
         cfg.model.name,
         cfg.outer.method,
         cfg.topology.dp,
@@ -108,6 +112,11 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
                 cfg.stream.fragments,
                 if cfg.stream.overlap { "on" } else { "off" }
             )
+        } else {
+            String::new()
+        },
+        if cfg.outer.staleness > 1 {
+            format!(" | async staleness {}", cfg.outer.staleness)
         } else {
             String::new()
         },

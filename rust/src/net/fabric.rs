@@ -330,6 +330,74 @@ impl Endpoint {
         }
     }
 
+    /// Return a received message to the stash (e.g. one half of a
+    /// two-part payload whose sibling has not arrived yet — the caller
+    /// backs off without losing what was already delivered).
+    pub fn stash_back(&mut self, msg: Message) {
+        self.stash.push(msg);
+    }
+
+    /// Truly non-blocking receive: drain the channel into the stash,
+    /// then take a matching message only if its injected delivery
+    /// instant has passed. A matched-but-not-yet-deliverable message
+    /// stays stashed and `None` is returned — unlike
+    /// [`Endpoint::recv_timeout`], this never sleeps on the latency
+    /// model, which is what the polling paths (heartbeats, staleness
+    /// fallback probes) require.
+    pub fn try_recv_ready(&mut self, tag: Tag) -> Option<Message> {
+        while let Ok(msg) = self.rx.try_recv() {
+            self.stash.push(msg);
+        }
+        let now = Instant::now();
+        let i = self.stash.iter().position(|m| {
+            m.tag == tag
+                && match m.deliver_at {
+                    None => true,
+                    Some(at) => at <= now,
+                }
+        })?;
+        Some(self.stash.swap_remove(i))
+    }
+
+    /// Like [`Endpoint::try_recv_ready`], but *leaves the message in the
+    /// stash* and returns a clone of its payload — for offers that must
+    /// stay readable for a retention window (the bounded-staleness
+    /// collects re-admit a peer's older offer at later boundaries; the
+    /// stash-expiry sweep reclaims them).
+    pub fn peek_ready(&mut self, tag: Tag) -> Option<Payload> {
+        while let Ok(msg) = self.rx.try_recv() {
+            self.stash.push(msg);
+        }
+        let now = Instant::now();
+        self.stash
+            .iter()
+            .find(|m| {
+                m.tag == tag
+                    && match m.deliver_at {
+                        None => true,
+                        Some(at) => at <= now,
+                    }
+            })
+            .map(|m| m.payload.clone())
+    }
+
+    /// Drain the channel into the stash (non-blocking), then drop every
+    /// stashed message whose tag fails `keep`; returns how many were
+    /// dropped. This is the stash-expiry hook: fragment, gossip and
+    /// heartbeat messages that were never collected — churn-dropped
+    /// folds, straggler timeouts, suppressed receivers — would otherwise
+    /// sit in the stash for the rest of the run. Callers sweep with a
+    /// tag-age predicate at a cadence of their choosing (the trainers
+    /// sweep once per outer boundary).
+    pub fn sweep_stash<F: FnMut(&Tag) -> bool>(&mut self, mut keep: F) -> usize {
+        while let Ok(msg) = self.rx.try_recv() {
+            self.stash.push(msg);
+        }
+        let before = self.stash.len();
+        self.stash.retain(|m| keep(&m.tag));
+        before - self.stash.len()
+    }
+
     /// Receive any message (FIFO across stash + channel).
     pub fn recv_any(&mut self) -> Message {
         if !self.stash.is_empty() {
@@ -505,6 +573,31 @@ mod tests {
         assert!(a.iter().any(|&c| c == 2), "no duplicate observed");
         let c = deliveries(100);
         assert_ne!(a, c, "different seeds should differ");
+    }
+
+    #[test]
+    fn sweep_stash_drops_only_unkept_tags() {
+        let mut f = Fabric::new(2);
+        let mut eps = f.take_endpoints();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e1.send(0, Tag::new(7, 1, 0), Payload::Control); // old round
+        e1.send(0, Tag::new(7, 5, 0), Payload::Control); // fresh round
+        e1.send(0, Tag::new(8, 1, 0), Payload::F32(vec![1.0])); // other kind
+        // Sweep: keep kind 7 only when its round is recent, keep the rest.
+        let dropped = e0.sweep_stash(|t| t.kind != 7 || t.a >= 4);
+        assert_eq!(dropped, 1);
+        // The fresh round and the other-kind message are still matchable.
+        assert!(e0
+            .recv_timeout(Tag::new(7, 5, 0), Duration::from_millis(20))
+            .is_some());
+        assert!(e0
+            .recv_timeout(Tag::new(8, 1, 0), Duration::from_millis(20))
+            .is_some());
+        // The expired one is gone.
+        assert!(e0
+            .recv_timeout(Tag::new(7, 1, 0), Duration::from_millis(5))
+            .is_none());
     }
 
     #[test]

@@ -27,4 +27,4 @@ pub mod topo;
 
 pub use fabric::{Endpoint, Fabric, FaultPlan, Message, Payload, Tag};
 pub use simclock::{erf, LatencyModel, SimClock};
-pub use topo::{ChurnEvent, ChurnSchedule, Link, Membership, Topology};
+pub use topo::{ChurnEvent, ChurnSchedule, FailureDetector, Link, Membership, Topology};

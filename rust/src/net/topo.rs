@@ -155,6 +155,51 @@ impl Topology {
         Topology::new(names, node_region, links)
     }
 
+    /// Hierarchical datacenter preset: `pods * racks_per_pod` racks, each
+    /// holding an equal share of the `n` nodes (remainder spread over the
+    /// first racks). Two nodes in the same rack talk over `rack`, two
+    /// racks in the same pod over `pod`, and anything crossing pods over
+    /// `spine` — the classic three-tier fabric where each deeper tier is
+    /// slower and narrower. Racks are the topology's regions, named
+    /// `p{pod}.r{rack}`.
+    pub fn hierarchical(
+        n: usize,
+        pods: usize,
+        racks_per_pod: usize,
+        rack: Link,
+        pod: Link,
+        spine: Link,
+    ) -> Topology {
+        assert!(pods > 0 && racks_per_pod > 0, "hierarchical needs pods and racks");
+        let nracks = pods * racks_per_pod;
+        let names: Vec<String> = (0..nracks)
+            .map(|r| format!("p{}.r{}", r / racks_per_pod, r % racks_per_pod))
+            .collect();
+        let base = n / nracks;
+        let rem = n % nracks;
+        let mut node_region = Vec::with_capacity(n);
+        for r in 0..nracks {
+            let size = base + usize::from(r < rem);
+            node_region.extend(std::iter::repeat(r).take(size));
+        }
+        let links: Vec<Vec<Link>> = (0..nracks)
+            .map(|a| {
+                (0..nracks)
+                    .map(|b| {
+                        if a == b {
+                            rack.clone()
+                        } else if a / racks_per_pod == b / racks_per_pod {
+                            pod.clone()
+                        } else {
+                            spine.clone()
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        Topology::new(names, node_region, links)
+    }
+
     /// Long-tail internet preset: one region with log-normal link latency
     /// `LogNormal(mu, sigma²)` at `bandwidth` bytes/s, plus deterministic
     /// per-node straggler multipliers drawn log-normally from `seed`
@@ -411,6 +456,91 @@ impl Membership {
     }
 }
 
+/// Heartbeat-based failure detector over a fixed id space `0..world`.
+///
+/// The schedule-driven churn above assumes failures are *announced*; this
+/// detector infers them. Every node is expected to announce liveness once
+/// per outer boundary (see
+/// [`Communicator::send_heartbeat`](crate::train::Communicator::send_heartbeat));
+/// the detector records the last boundary each node was heard at
+/// ([`FailureDetector::observe`]) and, on [`FailureDetector::tick`],
+/// declares a node dead once it has missed `misses` consecutive
+/// boundaries — emitting the same [`ChurnEvent`]s a schedule would, so
+/// detected failures feed the trainers' existing
+/// [`ChurnResponse`](crate::train::ChurnResponse) repair machinery. A
+/// dead node whose heartbeats resume is re-announced with a
+/// [`ChurnEvent::Join`], reusing the rejoin/adoption logic.
+///
+/// Unlike the schedule, detection is a *local* judgment: each worker runs
+/// its own detector over the heartbeats it received. Workers converge on
+/// the same verdict within one boundary of each other because heartbeats
+/// are emitted at boundary granularity; the gossip layer's straggler
+/// timeout absorbs the transient disagreement.
+#[derive(Clone, Debug)]
+pub struct FailureDetector {
+    misses: u64,
+    /// Last boundary a heartbeat was observed from each node. Every node
+    /// is granted an implicit boundary-0 heartbeat at construction so a
+    /// run's first boundaries don't mass-suspect the world.
+    last_seen: Vec<u64>,
+    dead: Vec<bool>,
+}
+
+impl FailureDetector {
+    /// Detector over `world` nodes declaring death after `misses`
+    /// consecutive missed boundary heartbeats (`misses >= 1`).
+    pub fn new(world: usize, misses: usize) -> FailureDetector {
+        assert!(misses >= 1, "misses must be >= 1");
+        FailureDetector {
+            misses: misses as u64,
+            last_seen: vec![0; world],
+            dead: vec![false; world],
+        }
+    }
+
+    /// Record a heartbeat from `node` stamped with `boundary` (stale or
+    /// duplicate stamps are absorbed — only the max is kept).
+    pub fn observe(&mut self, node: usize, boundary: u64) {
+        if boundary > self.last_seen[node] {
+            self.last_seen[node] = boundary;
+        }
+    }
+
+    /// Last boundary `node` was heard at (0 = never).
+    pub fn last_seen(&self, node: usize) -> u64 {
+        self.last_seen[node]
+    }
+
+    /// Whether the detector currently considers `node` dead.
+    pub fn is_dead(&self, node: usize) -> bool {
+        self.dead[node]
+    }
+
+    /// Evaluate all verdicts at `boundary`: a live node silent for
+    /// `misses` boundaries (inclusive of this one) turns into a
+    /// [`ChurnEvent::Leave`]; a dead node heard again within the same
+    /// tolerance turns into a [`ChurnEvent::Join`]. The thresholds are
+    /// symmetric (`silent >= misses` dead, `silent < misses` alive) so
+    /// a recovered peer whose heartbeats are consistently observed a
+    /// boundary late — the threaded executor's healthy skew — is still
+    /// re-admitted, and no silence value satisfies both (no flapping).
+    /// Events are emitted once per transition, ascending by node id.
+    pub fn tick(&mut self, boundary: u64) -> Vec<ChurnEvent> {
+        let mut events = Vec::new();
+        for node in 0..self.last_seen.len() {
+            let silent = boundary.saturating_sub(self.last_seen[node]);
+            if !self.dead[node] && silent >= self.misses {
+                self.dead[node] = true;
+                events.push(ChurnEvent::Leave(node));
+            } else if self.dead[node] && silent < self.misses {
+                self.dead[node] = false;
+                events.push(ChurnEvent::Join(node));
+            }
+        }
+        events
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -515,6 +645,76 @@ mod tests {
         assert!(ChurnSchedule::parse_event("hop:1:2").is_err());
         assert!(ChurnSchedule::parse_event("leave:1").is_err());
         assert!(ChurnSchedule::parse_event("leave:1:2:3").is_err());
+    }
+
+    #[test]
+    fn hierarchical_tiers_order_and_cover() {
+        let t = Topology::hierarchical(
+            10, // 2 pods x 2 racks = 4 racks: sizes 3, 3, 2, 2
+            2,
+            2,
+            Link::constant(0.001),
+            Link::constant(0.01),
+            Link::constant(0.1),
+        );
+        assert_eq!(t.world(), 10);
+        assert_eq!(t.regions(), 4);
+        assert_eq!(t.region_name(0), "p0.r0");
+        assert_eq!(t.region_name(3), "p1.r1");
+        // Remainder lands on the first racks: 3, 3, 2, 2.
+        let counts: Vec<usize> = (0..4)
+            .map(|r| (0..10).filter(|&n| t.region_of(n) == r).count())
+            .collect();
+        assert_eq!(counts, vec![3, 3, 2, 2]);
+        let mut rng = Pcg64::seed_from_u64(0);
+        // Same rack, same pod, cross pod.
+        assert_eq!(t.transfer_time(0, 1, 0, &mut rng), 0.001);
+        assert_eq!(t.transfer_time(0, 3, 0, &mut rng), 0.01);
+        assert_eq!(t.transfer_time(0, 6, 0, &mut rng), 0.1);
+        assert_eq!(t.transfer_time(8, 9, 0, &mut rng), 0.001);
+    }
+
+    #[test]
+    fn detector_declares_dead_after_misses_and_rejoins_on_resume() {
+        let mut d = FailureDetector::new(3, 2);
+        // Boundary 1: everyone heartbeats.
+        for n in 0..3 {
+            d.observe(n, 1);
+        }
+        assert!(d.tick(1).is_empty());
+        // Node 1 goes silent. One missed boundary is not enough...
+        d.observe(0, 2);
+        d.observe(2, 2);
+        assert!(d.tick(2).is_empty());
+        // ...two are.
+        d.observe(0, 3);
+        d.observe(2, 3);
+        assert_eq!(d.tick(3), vec![ChurnEvent::Leave(1)]);
+        assert!(d.is_dead(1));
+        // The verdict is emitted once, not every boundary.
+        d.observe(0, 4);
+        d.observe(2, 4);
+        assert!(d.tick(4).is_empty());
+        // Heartbeats resume: one Join, then quiet again.
+        for n in 0..3 {
+            d.observe(n, 5);
+        }
+        assert_eq!(d.tick(5), vec![ChurnEvent::Join(1)]);
+        assert!(!d.is_dead(1));
+        for n in 0..3 {
+            d.observe(n, 6);
+        }
+        assert!(d.tick(6).is_empty());
+    }
+
+    #[test]
+    fn detector_grace_covers_the_run_start() {
+        // The implicit boundary-0 heartbeat means nothing is suspected
+        // before `misses` real boundaries have elapsed.
+        let mut d = FailureDetector::new(2, 3);
+        assert!(d.tick(1).is_empty());
+        assert!(d.tick(2).is_empty());
+        assert_eq!(d.tick(3), vec![ChurnEvent::Leave(0), ChurnEvent::Leave(1)]);
     }
 
     #[test]

@@ -272,6 +272,7 @@ mod tests {
                 gamma,
                 group: 2,
                 inner_steps: 10,
+                staleness: 1,
             },
             init_scale: 2.0,
         }

@@ -1,0 +1,755 @@
+//! The bounded-staleness asynchronous boundary engine.
+//!
+//! The gated strategies advance every replica through the outer boundary
+//! in lockstep: offer at boundary `t`, fold at `t` (gated) or `t + 1`
+//! (streamed), and a peer whose state predates the round is excluded
+//! outright. That keeps a single straggler or rejoiner on the critical
+//! path — exactly the stall NoLoCo's no-global-barrier design is meant
+//! to remove. This module generalizes the boundary into an *event-driven*
+//! engine:
+//!
+//! * [`BoundaryClock`] — each replica has its own boundary clock: the
+//!   number of outer boundaries it actually participated in (derived
+//!   from the shared churn schedule, so every worker computes every
+//!   peer's participation with zero coordination traffic — the same
+//!   shared-seed discipline as routing and pairing).
+//!   [`TrainerCore`](super::TrainerCore) mirrors the clocks at run time;
+//!   the engine consults the schedule-derived form to know *which
+//!   boundaries a peer offered at*.
+//! * [`AsyncGossipSync`] — a [`SyncStrategy`] whose fold admits peer
+//!   state up to `outer.staleness − 1` boundaries old, weighted down by
+//!   age (`w = 1 / (1 + age)`), instead of the gated binary
+//!   admit-or-exclude. Offers are tagged with the boundary they were
+//!   made at ([`Communicator::offer_round`]) and retained for the
+//!   staleness window; a fold probes the window newest-boundary-first
+//!   and, on the fabric, a straggler's missing current offer degrades to
+//!   its freshest *already-delivered* one ([`Communicator::collect_round`]
+//!   with `wait = false` never blocks) instead of stalling the boundary.
+//!   A peer that offered nothing inside the window is excluded from the
+//!   fold; a churn-stale rejoiner still adopts a fresh peer's slow
+//!   weights within the repair window — the gated repair semantics are
+//!   the edge of this engine, and `staleness = 1` *is* the lockstep
+//!   contract (config routes it through the unchanged gated / streaming
+//!   paths, bit-for-bit).
+//! * Per-fragment pairing: with `--pairing per-fragment` the (Δ, φ)
+//!   state splits into `outer.fragments` ranges and each fragment
+//!   gossips with its *own* partner this round
+//!   ([`PairingPolicy::draw_for_fragment`](super::PairingPolicy::draw_for_fragment)),
+//!   mixing K× faster per round at the same total payload. Any other
+//!   pairing mode keeps one partner for the whole state (one fragment).
+//!
+//! The update restricted to an admitted set `A` (self included) is the
+//! Eq. 2–3 modified Nesterov with a weighted mean instead of the plain
+//! group mean:
+//!
+//! ```text
+//! δ ← α δ + (β / W) Σ_{q∈A} w_q Δ_q − γ (φ − (1/W) Σ_{q∈A} w_q φ_q),
+//! φ ← φ + δ,   θ ← φ,        W = Σ w_q,  w_q = 1 / (1 + age_q)
+//! ```
+//!
+//! where `age_q` is how many boundaries ago the admitted offer was made
+//! — 0 for a current offer, even from a replica that missed boundaries
+//! long past (its *state* is repaired by adoption / the donor bootstrap
+//! and then re-admitted at full weight; staleness measures the offer,
+//! not the replica's history). With every age 0 this is exactly the
+//! gated group mean, so the engine's trajectory coincides with the
+//! lockstep one on a churn-free, straggler-free run; the Eq. 74
+//! γ-window analysis applies verbatim to the uniform-weight case and
+//! carries over as a well-behaved approximation under mixed weights,
+//! which remain a convex combination of member states. Folds are
+//! computed host-side, like the streamed fragments — the fused XLA
+//! outer artifact is compiled for the uniform full-state mean — and the
+//! gated fragment fold ([`fold_noloco_fragment`](super::streaming)) is
+//! the `W = n` special case of [`fold_noloco_weighted`].
+//!
+//! Failure *detection* (the heartbeat half of the async boundary) lives
+//! in [`TrainerCore`](super::TrainerCore) /
+//! [`FailureDetector`](crate::net::FailureDetector): strategies decide
+//! what a boundary exchanges, the core decides who is still alive.
+
+use anyhow::{ensure, Result};
+
+use crate::config::{OuterConfig, PairingMode, TrainConfig};
+use crate::net::topo::ChurnEvent;
+use crate::net::ChurnSchedule;
+use crate::runtime::Engine;
+
+use super::comm::Communicator;
+use super::state::WorkerState;
+use super::strategy::{
+    pairing_for, ChurnResponse, CommPattern, PairingCache, PairingPolicy, SyncStrategy,
+};
+use super::streaming::FragmentSchedule;
+
+/// Per-replica boundary clocks, derived from the shared churn schedule.
+///
+/// Replica `r`'s clock at global boundary `t` is the number of
+/// boundaries in `1..=t` whose closing step `r` was live at — its own
+/// count of participated boundaries. Fully-live replicas read `t`; a
+/// replica that sat out boundaries lags by exactly the boundaries it
+/// missed. The async engine consults [`BoundaryClock::live_at_boundary`]
+/// to know which boundaries a peer offered at;
+/// [`TrainerCore::boundary_clocks`](super::TrainerCore::boundary_clocks)
+/// is the incrementally-maintained run-time mirror.
+#[derive(Clone, Debug)]
+pub struct BoundaryClock {
+    churn: ChurnSchedule,
+    dp: usize,
+    inner_steps: u64,
+}
+
+impl BoundaryClock {
+    /// Clock over `dp` replicas under `churn`, `inner_steps` per
+    /// boundary.
+    pub fn new(churn: ChurnSchedule, dp: usize, inner_steps: usize) -> BoundaryClock {
+        BoundaryClock { churn, dp, inner_steps: inner_steps.max(1) as u64 }
+    }
+
+    /// Whether replica `r` participates in (is live at the closing step
+    /// of) 1-based boundary `b`. Allocation-free walk of `r`'s own
+    /// events — this sits inside the fold's per-peer window probe, so it
+    /// must not replay the full live mask per call.
+    pub fn live_at_boundary(&self, r: usize, b: u64) -> bool {
+        if self.churn.is_empty() {
+            return true;
+        }
+        debug_assert!(r < self.dp, "replica outside the clock's world");
+        let closing = (b * self.inner_steps).saturating_sub(1);
+        let mut live = true;
+        for &(step, e) in self.churn.events() {
+            if step > closing {
+                break;
+            }
+            if e.node() == r {
+                live = matches!(e, ChurnEvent::Join(_));
+            }
+        }
+        live
+    }
+
+    /// Replica `r`'s own boundary clock at global boundary `outer_idx`.
+    pub fn clock_of(&self, r: usize, outer_idx: u64) -> u64 {
+        if self.churn.is_empty() {
+            return outer_idx;
+        }
+        (1..=outer_idx)
+            .filter(|&b| self.live_at_boundary(r, b))
+            .count() as u64
+    }
+}
+
+/// Eq. 2–3 with an age-weighted admitted set, host-side (see the module
+/// docs): `dsum`/`psum` are the already-weighted sums over the admitted
+/// members (self included) and `wsum` their total weight. The gated
+/// fragment fold is the `wsum = n` special case and delegates here.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fold_noloco_weighted(
+    phi: &mut [f32],
+    delta: &mut [f32],
+    dsum: &[f32],
+    psum: &[f32],
+    wsum: f32,
+    alpha: f32,
+    beta: f32,
+    gamma: f32,
+) {
+    let inv = 1.0 / wsum;
+    for i in 0..phi.len() {
+        let d = alpha * delta[i] + beta * inv * dsum[i] - gamma * (phi[i] - inv * psum[i]);
+        delta[i] = d;
+        phi[i] += d;
+    }
+}
+
+/// Bounded-staleness asynchronous gossip (`outer.staleness > 1`). See
+/// the module docs for the admission and weighting rules.
+pub struct AsyncGossipSync {
+    outer: OuterConfig,
+    seed: u64,
+    churn: ChurnSchedule,
+    clock: BoundaryClock,
+    pairing: Box<dyn PairingPolicy>,
+    /// Fragment count: `outer.fragments` under per-fragment pairing
+    /// (each fragment draws its own partner), 1 otherwise.
+    fragments: usize,
+    /// Memoized pairing draws (see [`PairingCache`]): one set of
+    /// per-fragment partitions per `(stage, outer_idx, live)` key.
+    cache: PairingCache,
+    /// Observability: oldest admitted offer age (boundaries) so far.
+    max_admitted_age: u64,
+    /// Peer contributions admitted into folds.
+    admitted: u64,
+    /// Peer contributions excluded: repair-stale, or no offer delivered
+    /// inside the staleness window.
+    excluded_stale: u64,
+}
+
+impl AsyncGossipSync {
+    /// Build from the full config (NoLoCo + gated sync, enforced by
+    /// [`TrainConfig::validate`]; `staleness = 1` is permitted here for
+    /// equivalence tests but
+    /// [`for_config`](super::strategy_for_config) only dispatches to
+    /// this engine above 1).
+    pub fn from_config(cfg: &TrainConfig) -> AsyncGossipSync {
+        assert!(
+            cfg.outer.method == crate::config::Method::NoLoCo,
+            "the async boundary engine is NoLoCo-only (enforced by config validation)"
+        );
+        let fragments = if cfg.pairing == PairingMode::PerFragment {
+            cfg.stream.fragments.max(1)
+        } else {
+            1
+        };
+        AsyncGossipSync {
+            outer: cfg.outer.clone(),
+            seed: cfg.seed,
+            churn: cfg.churn.clone(),
+            clock: BoundaryClock::new(cfg.churn.clone(), cfg.topology.dp, cfg.outer.inner_steps),
+            pairing: pairing_for(cfg),
+            fragments,
+            cache: PairingCache::new(),
+            max_admitted_age: 0,
+            admitted: 0,
+            excluded_stale: 0,
+        }
+    }
+
+    /// The engine's boundary clock (tests / inspection).
+    pub fn boundary_clock(&self) -> &BoundaryClock {
+        &self.clock
+    }
+
+    /// Fragment count per boundary (1 unless per-fragment pairing).
+    pub fn fragments(&self) -> usize {
+        self.fragments
+    }
+
+    /// Oldest offer age (in boundaries) any fold has admitted so far —
+    /// `max_admitted_age < outer.staleness` is the engine's
+    /// bounded-staleness guarantee.
+    pub fn max_admitted_age(&self) -> u64 {
+        self.max_admitted_age
+    }
+
+    /// Peer contributions admitted into folds so far.
+    pub fn admitted(&self) -> u64 {
+        self.admitted
+    }
+
+    /// Peer contributions excluded (repair-stale or nothing admissible
+    /// delivered) so far.
+    pub fn excluded_stale(&self) -> u64 {
+        self.excluded_stale
+    }
+
+    /// This worker's gossip group for `frag` at `outer_idx`, through the
+    /// shared per-round draw cache.
+    fn my_group(
+        &mut self,
+        live: &[usize],
+        stage: usize,
+        frag: u16,
+        outer_idx: u64,
+        me: usize,
+    ) -> Vec<usize> {
+        self.cache.my_group(
+            self.pairing.as_ref(),
+            live,
+            self.outer.group,
+            stage,
+            frag,
+            self.fragments,
+            outer_idx,
+            self.seed,
+            me,
+        )
+    }
+
+    /// Whether `r` was dead at any step of the staleness window closing
+    /// at boundary `outer_idx` — its (Δ, φ) predate the window's mixing
+    /// and the message-passing repair (adopt / exclude) applies beyond
+    /// the weighted admission. Allocation-free walk of `r`'s dead
+    /// intervals, mirroring the gated strategies.
+    fn is_stale(&self, r: usize, outer_idx: u64) -> bool {
+        if self.churn.is_empty() {
+            return false;
+        }
+        let m = self.outer.inner_steps as u64;
+        let s = self.outer.staleness as u64;
+        let hi = (outer_idx * m).saturating_sub(1);
+        let lo = outer_idx.saturating_sub(s) * m;
+        let mut live = true;
+        let mut dead_since = 0u64;
+        for &(step, e) in self.churn.events() {
+            if e.node() != r {
+                continue;
+            }
+            match e {
+                ChurnEvent::Leave(_) => {
+                    if live {
+                        live = false;
+                        dead_since = step;
+                    }
+                }
+                ChurnEvent::Join(_) => {
+                    if !live {
+                        live = true;
+                        if dead_since <= hi && step > lo {
+                            return true;
+                        }
+                    }
+                }
+            }
+        }
+        !live && dead_since <= hi
+    }
+
+    /// The fold half of the boundary, engine-free (the async update is
+    /// host-side; [`SyncStrategy::apply_outer`] delegates here). Public
+    /// so staleness-invariant tests can drive folds without PJRT
+    /// artifacts.
+    pub fn fold_boundary(
+        &mut self,
+        comm: &mut dyn Communicator,
+        w: &mut WorkerState,
+        live: &[usize],
+        outer_idx: u64,
+    ) -> Result<()> {
+        let me = w.replica;
+        let stage = w.stage;
+        let s = self.outer.staleness as u64;
+        // Admissible offer boundaries: the last `s`, newest first.
+        let win_lo = (outer_idx + 1).saturating_sub(s).max(1);
+        let (alpha, beta, gamma) = (
+            self.outer.alpha as f32,
+            self.outer.beta as f32,
+            self.outer.gamma as f32,
+        );
+        // Message-passing rejoin catch-up (the grid executor hands a
+        // joiner a donor's φ at the join event instead): a stale member
+        // adopts the first fresh peer's current-boundary φ fragment.
+        let repair = !comm.supports_join_bootstrap() && !self.churn.is_empty();
+        let me_stale = repair && self.is_stale(me, outer_idx);
+        let sched = FragmentSchedule::new(w.len(), self.fragments);
+        'frags: for frag in 0..sched.fragments() {
+            let range = sched.range(frag);
+            let group = self.my_group(live, stage, frag as u16, outer_idx, me);
+            if me_stale {
+                for &q in &group {
+                    if q == me || self.is_stale(q, outer_idx) {
+                        continue;
+                    }
+                    if let Some((_, p)) =
+                        comm.collect_round(stage, me, q, outer_idx as u32, frag as u16, true)?
+                    {
+                        w.phi[range.clone()].copy_from_slice(&p);
+                        for d in w.delta[range.clone()].iter_mut() {
+                            *d = 0.0;
+                        }
+                        for i in range.clone() {
+                            w.theta[i] = w.phi[i];
+                        }
+                        continue 'frags;
+                    }
+                }
+                // No fresh peer reachable: fall through to the weighted
+                // fold (two stale members keep each other moving and the
+                // γ-consensus pulls them back over later boundaries).
+            }
+            // Weighted admission; sums start from this worker's own
+            // contribution at weight 1 (θ and φ are untouched since the
+            // offer phase, so this equals the offered payload).
+            let mut dsum: Vec<f32> = w.theta[range.clone()]
+                .iter()
+                .zip(&w.phi[range.clone()])
+                .map(|(t, p)| t - p)
+                .collect();
+            let mut psum: Vec<f32> = w.phi[range.clone()].to_vec();
+            let mut wsum = 1.0f32;
+            for &q in &group {
+                if q == me {
+                    continue;
+                }
+                if repair && self.is_stale(q, outer_idx) {
+                    self.excluded_stale += 1;
+                    continue;
+                }
+                // Probe the window, newest boundary first. The peer made
+                // an offer at a boundary only if it participated in it;
+                // only the current boundary's offer is worth waiting for
+                // (older ones either already arrived or never will).
+                let mut got: Option<(u64, Vec<f32>, Vec<f32>)> = None;
+                for b in (win_lo..=outer_idx).rev() {
+                    if !self.clock.live_at_boundary(q, b) {
+                        continue;
+                    }
+                    let wait = b == outer_idx;
+                    if let Some((d, p)) =
+                        comm.collect_round(stage, me, q, b as u32, frag as u16, wait)?
+                    {
+                        got = Some((outer_idx - b, d, p));
+                        break;
+                    }
+                }
+                let Some((age, d, p)) = got else {
+                    // Nothing admissible delivered inside the window:
+                    // the fold degrades to a smaller group.
+                    self.excluded_stale += 1;
+                    continue;
+                };
+                ensure!(
+                    d.len() == dsum.len() && p.len() == psum.len(),
+                    "peer {q} offered fragment {frag} with mismatched length at age {age}"
+                );
+                debug_assert!(age < s, "admission must respect the staleness window");
+                let wgt = 1.0 / (1.0 + age as f32);
+                for (a, x) in dsum.iter_mut().zip(&d) {
+                    *a += wgt * x;
+                }
+                for (a, x) in psum.iter_mut().zip(&p) {
+                    *a += wgt * x;
+                }
+                wsum += wgt;
+                self.admitted += 1;
+                self.max_admitted_age = self.max_admitted_age.max(age);
+            }
+            fold_noloco_weighted(
+                &mut w.phi[range.clone()],
+                &mut w.delta[range.clone()],
+                &dsum,
+                &psum,
+                wsum,
+                alpha,
+                beta,
+                gamma,
+            );
+            for i in range {
+                w.theta[i] = w.phi[i];
+            }
+        }
+        Ok(())
+    }
+}
+
+impl SyncStrategy for AsyncGossipSync {
+    fn name(&self) -> &'static str {
+        "async"
+    }
+
+    fn pattern(&self) -> CommPattern {
+        CommPattern::GossipPairs
+    }
+
+    fn has_outer(&self) -> bool {
+        true
+    }
+
+    fn churn_response(&self) -> ChurnResponse {
+        ChurnResponse::Repair
+    }
+
+    fn offer_outer(
+        &mut self,
+        comm: &mut dyn Communicator,
+        w: &WorkerState,
+        live: &[usize],
+        outer_idx: u64,
+    ) -> Result<()> {
+        let me = w.replica;
+        let window = self.outer.staleness as u32;
+        let sched = FragmentSchedule::new(w.len(), self.fragments);
+        for frag in 0..sched.fragments() {
+            let r = sched.range(frag);
+            let phi = &w.phi[r.clone()];
+            let delta: Vec<f32> = w.theta[r.clone()]
+                .iter()
+                .zip(phi)
+                .map(|(t, p)| t - p)
+                .collect();
+            let group = self.my_group(live, w.stage, frag as u16, outer_idx, me);
+            let peers: Vec<usize> = group.into_iter().filter(|&q| q != me).collect();
+            comm.offer_round(
+                w.stage,
+                me,
+                &peers,
+                outer_idx as u32,
+                frag as u16,
+                window,
+                &delta,
+                phi,
+            )?;
+        }
+        Ok(())
+    }
+
+    fn apply_outer(
+        &mut self,
+        comm: &mut dyn Communicator,
+        _eng: &mut Engine,
+        w: &mut WorkerState,
+        live: &[usize],
+        outer_idx: u64,
+    ) -> Result<()> {
+        self.fold_boundary(comm, w, live, outer_idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, Method, PairingMode};
+    use crate::model::StageKind;
+    use crate::train::streaming::fold_noloco_fragment;
+    use crate::train::AccountingComm;
+
+    fn async_cfg(staleness: usize) -> TrainConfig {
+        let mut cfg = presets::preset("tiny").unwrap();
+        cfg.outer.staleness = staleness;
+        cfg
+    }
+
+    fn worker(replica: usize, theta: Vec<f32>) -> WorkerState {
+        let mut w = WorkerState::new(0, replica, StageKind::Full, theta.clone(), Method::NoLoCo);
+        for (p, t) in w.phi.iter_mut().zip(&theta) {
+            *p = t * 0.5;
+        }
+        w
+    }
+
+    fn ab_coeffs(s: &AsyncGossipSync) -> (f32, f32, f32) {
+        (
+            s.outer.alpha as f32,
+            s.outer.beta as f32,
+            s.outer.gamma as f32,
+        )
+    }
+
+    #[test]
+    fn boundary_clock_counts_participation() {
+        // m = 50; replica 1 dead over steps 40..119 misses the boundaries
+        // closing at steps 49 and 99, then participates again at 149.
+        let churn = ChurnSchedule::none().leave(40, 1).join(120, 1);
+        let c = BoundaryClock::new(churn, 2, 50);
+        assert_eq!(c.clock_of(0, 3), 3);
+        assert_eq!(c.clock_of(1, 1), 0);
+        assert_eq!(c.clock_of(1, 2), 0);
+        assert_eq!(c.clock_of(1, 3), 1);
+        assert!(!c.live_at_boundary(1, 1));
+        assert!(c.live_at_boundary(1, 3));
+        // No churn: the clock is the global boundary index.
+        let c = BoundaryClock::new(ChurnSchedule::none(), 2, 50);
+        assert_eq!(c.clock_of(1, 7), 7);
+    }
+
+    #[test]
+    fn zero_lag_fold_matches_the_uniform_group_mean() {
+        // With no churn every age is 0 and the weighted fold must equal
+        // the gated host-side group fold (fold_noloco_fragment, gn = 2).
+        let mut s = AsyncGossipSync::from_config(&async_cfg(3));
+        let mut comm = AccountingComm::new();
+        let live = vec![0usize, 1];
+        let mut a = worker(0, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = worker(1, vec![4.0, 3.0, 2.0, 1.0]);
+        let (alpha, beta, gamma) = ab_coeffs(&s);
+        // Reference on copies, before the fold mutates `a`.
+        let mut phi_ref = a.phi.clone();
+        let mut delta_ref = a.delta.clone();
+        let da: Vec<f32> = a.theta.iter().zip(&a.phi).map(|(t, p)| t - p).collect();
+        let db: Vec<f32> = b.theta.iter().zip(&b.phi).map(|(t, p)| t - p).collect();
+        let dsum: Vec<f32> = da.iter().zip(&db).map(|(x, y)| x + y).collect();
+        let psum: Vec<f32> = a.phi.iter().zip(&b.phi).map(|(x, y)| x + y).collect();
+        fold_noloco_fragment(&mut phi_ref, &mut delta_ref, &dsum, &psum, 2, alpha, beta, gamma);
+
+        s.offer_outer(&mut comm, &a, &live, 1).unwrap();
+        s.offer_outer(&mut comm, &b, &live, 1).unwrap();
+        s.fold_boundary(&mut comm, &mut a, &live, 1).unwrap();
+        assert_eq!(a.phi, phi_ref, "zero-age weighted fold == uniform group fold");
+        assert_eq!(a.delta, delta_ref);
+        assert_eq!(a.theta, a.phi, "θ resets to φ at a gated async boundary");
+        assert_eq!(s.max_admitted_age(), 0);
+        assert_eq!(s.admitted(), 1);
+    }
+
+    #[test]
+    fn missing_current_offer_degrades_to_an_aged_one() {
+        // Replica 1 participates at boundary 2 but not 3 (dead at the
+        // closing step), while the caller's live view still includes it
+        // — the detection-lag / straggler shape. The fold at boundary 3
+        // falls back to its boundary-2 offer at age 1, weight 1/2.
+        let mut cfg = async_cfg(4);
+        cfg.churn = ChurnSchedule::none().leave(40, 1).join(70, 1).leave(140, 1);
+        let mut s = AsyncGossipSync::from_config(&cfg);
+        let mut comm = AccountingComm::new();
+        let live = vec![0usize, 1];
+        let mut a = worker(0, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = worker(1, vec![4.0, 3.0, 2.0, 1.0]);
+        // Boundary 2: both offer (replica 1 participates — closing step
+        // 99 is inside its live window 70..140).
+        s.offer_outer(&mut comm, &a, &live, 2).unwrap();
+        s.offer_outer(&mut comm, &b, &live, 2).unwrap();
+        // Boundary 3: only replica 0 offers (1 is dead at closing 149).
+        s.offer_outer(&mut comm, &a, &live, 3).unwrap();
+
+        let (alpha, beta, gamma) = ab_coeffs(&s);
+        let wgt = 0.5f32;
+        let da: Vec<f32> = a.theta.iter().zip(&a.phi).map(|(t, p)| t - p).collect();
+        let db: Vec<f32> = b.theta.iter().zip(&b.phi).map(|(t, p)| t - p).collect();
+        let dsum: Vec<f32> = da.iter().zip(&db).map(|(x, y)| x + wgt * y).collect();
+        let psum: Vec<f32> = a.phi.iter().zip(&b.phi).map(|(x, y)| x + wgt * y).collect();
+        let mut phi_ref = a.phi.clone();
+        let mut delta_ref = a.delta.clone();
+        fold_noloco_weighted(
+            &mut phi_ref, &mut delta_ref, &dsum, &psum, 1.0 + wgt, alpha, beta, gamma,
+        );
+
+        s.fold_boundary(&mut comm, &mut a, &live, 3).unwrap();
+        assert_eq!(a.phi, phi_ref);
+        assert_eq!(s.max_admitted_age(), 1);
+        assert_eq!(s.admitted(), 1, "one aged admission at the single fold");
+        assert_eq!(s.excluded_stale(), 0);
+    }
+
+    #[test]
+    fn peer_with_no_offer_inside_the_window_is_excluded() {
+        // Replica 1's only offer is at boundary 1; with staleness 2 the
+        // window at boundary 3 is {2, 3}, where it never participated —
+        // the retained boundary-1 offer must NOT fold and the update
+        // degrades to a singleton.
+        let mut cfg = async_cfg(2);
+        cfg.churn = ChurnSchedule::none().leave(60, 1).join(320, 1);
+        let mut s = AsyncGossipSync::from_config(&cfg);
+        let mut comm = AccountingComm::new();
+        let live = vec![0usize, 1];
+        let mut a = worker(0, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = worker(1, vec![4.0, 3.0, 2.0, 1.0]);
+        // Boundary 1: both participate (closing step 49 < 60).
+        s.offer_outer(&mut comm, &a, &live, 1).unwrap();
+        s.offer_outer(&mut comm, &b, &live, 1).unwrap();
+        // Boundaries 2 and 3: only replica 0 offers.
+        s.offer_outer(&mut comm, &a, &live, 2).unwrap();
+        s.offer_outer(&mut comm, &a, &live, 3).unwrap();
+
+        let (alpha, beta, gamma) = ab_coeffs(&s);
+        let dsum: Vec<f32> = a.theta.iter().zip(&a.phi).map(|(t, p)| t - p).collect();
+        let psum = a.phi.clone();
+        let mut phi_ref = a.phi.clone();
+        let mut delta_ref = a.delta.clone();
+        fold_noloco_weighted(&mut phi_ref, &mut delta_ref, &dsum, &psum, 1.0, alpha, beta, gamma);
+
+        s.fold_boundary(&mut comm, &mut a, &live, 3).unwrap();
+        assert_eq!(a.phi, phi_ref, "out-of-window state must not fold");
+        assert_eq!(s.admitted(), 0);
+        assert_eq!(s.excluded_stale(), 1);
+        assert_eq!(s.max_admitted_age(), 0);
+    }
+
+    #[test]
+    fn recovered_replica_is_readmitted_at_full_weight() {
+        // A replica that missed boundaries long ago but participates now
+        // offers current state: age 0, weight 1 — staleness measures the
+        // offer, not the replica's history.
+        let mut cfg = async_cfg(2);
+        // Replica 1 dead over steps 40..119: misses boundaries 1 and 2,
+        // fully participating again from boundary 3 on.
+        cfg.churn = ChurnSchedule::none().leave(40, 1).join(120, 1);
+        let mut s = AsyncGossipSync::from_config(&cfg);
+        let mut comm = AccountingComm::new();
+        let live = vec![0usize, 1];
+        let mut a = worker(0, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = worker(1, vec![4.0, 3.0, 2.0, 1.0]);
+        // Boundary 5 is well past the repair window (dead interval ended
+        // at step 120 <= (5-2)*50 = 150): no exclusion, no adoption.
+        s.offer_outer(&mut comm, &a, &live, 5).unwrap();
+        s.offer_outer(&mut comm, &b, &live, 5).unwrap();
+        s.fold_boundary(&mut comm, &mut a, &live, 5).unwrap();
+        assert_eq!(s.admitted(), 1, "the recovered peer folds again");
+        assert_eq!(s.max_admitted_age(), 0, "…at full weight");
+        assert_eq!(s.excluded_stale(), 0);
+    }
+
+    #[test]
+    fn per_fragment_pairing_splits_the_state_into_fragments() {
+        let mut cfg = async_cfg(2);
+        cfg.pairing = PairingMode::PerFragment;
+        cfg.stream.fragments = 2;
+        let s = AsyncGossipSync::from_config(&cfg);
+        assert_eq!(s.fragments(), 2);
+        // Uniform pairing keeps the whole state as one fragment.
+        let s = AsyncGossipSync::from_config(&async_cfg(2));
+        assert_eq!(s.fragments(), 1);
+    }
+
+    #[test]
+    fn per_fragment_fold_touches_each_range_with_its_own_group() {
+        // dp = 2 means every fragment's partition is {0, 1} regardless of
+        // seed, so both fragments fold — the point is the plumbing:
+        // fragment-sliced offers and folds reproduce the full-state fold
+        // when the groups coincide.
+        let mut cfg = async_cfg(2);
+        cfg.pairing = PairingMode::PerFragment;
+        cfg.stream.fragments = 2;
+        let mut s = AsyncGossipSync::from_config(&cfg);
+        let mut comm = AccountingComm::new();
+        let live = vec![0usize, 1];
+        let mut a = worker(0, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = worker(1, vec![4.0, 3.0, 2.0, 1.0]);
+        let mut a_full = a.clone();
+        s.offer_outer(&mut comm, &a, &live, 1).unwrap();
+        s.offer_outer(&mut comm, &b, &live, 1).unwrap();
+        s.fold_boundary(&mut comm, &mut a, &live, 1).unwrap();
+
+        // Reference: the one-fragment engine over the same states.
+        let mut s1 = AsyncGossipSync::from_config(&async_cfg(2));
+        let mut comm1 = AccountingComm::new();
+        s1.offer_outer(&mut comm1, &a_full, &live, 1).unwrap();
+        s1.offer_outer(&mut comm1, &b, &live, 1).unwrap();
+        s1.fold_boundary(&mut comm1, &mut a_full, &live, 1).unwrap();
+        assert_eq!(a.phi, a_full.phi, "2-replica fragmented fold == full fold");
+        assert_eq!(a.theta, a_full.theta);
+    }
+
+    #[test]
+    fn strategy_factory_dispatches_on_staleness() {
+        use crate::train::strategy_for_config;
+        let cfg = async_cfg(1);
+        assert_eq!(strategy_for_config(&cfg).name(), "noloco", "staleness 1 is the gated path");
+        let cfg = async_cfg(3);
+        let s = strategy_for_config(&cfg);
+        assert_eq!(s.name(), "async");
+        assert_eq!(s.pattern(), CommPattern::GossipPairs);
+        assert_eq!(s.churn_response(), ChurnResponse::Repair);
+        assert!(s.has_outer());
+    }
+
+    #[test]
+    fn fabric_rejoiner_adopts_a_fresh_peer_round() {
+        // Message-passing repair: the churn-stale rejoiner adopts the
+        // fresh peer's current-boundary φ outright; the fresh side
+        // excludes the repair-stale contribution and folds a singleton.
+        let mut cfg = async_cfg(2);
+        cfg.churn = ChurnSchedule::none().leave(40, 1).join(120, 1);
+        let mut fabric = crate::net::Fabric::new(2);
+        let mut eps = fabric.take_endpoints().into_iter();
+        let mut ca = crate::train::FabricComm::new(eps.next().unwrap(), 2, None);
+        let mut cb = crate::train::FabricComm::new(eps.next().unwrap(), 2, None);
+        let mut sa = AsyncGossipSync::from_config(&cfg);
+        let mut sb = AsyncGossipSync::from_config(&cfg);
+        let mut a = worker(0, vec![1.0, 2.0, 3.0, 4.0]);
+        let mut b = worker(1, vec![4.0, 3.0, 2.0, 1.0]);
+        let live = vec![0usize, 1];
+        let phi_a_offer = a.phi.clone();
+        sa.offer_outer(&mut ca, &a, &live, 3).unwrap();
+        sb.offer_outer(&mut cb, &b, &live, 3).unwrap();
+        sa.fold_boundary(&mut ca, &mut a, &live, 3).unwrap();
+        sb.fold_boundary(&mut cb, &mut b, &live, 3).unwrap();
+        // The rejoiner adopted the fresh peer's offered φ.
+        assert_eq!(b.phi, phi_a_offer);
+        assert_eq!(b.delta, vec![0.0; 4]);
+        assert_eq!(b.theta, phi_a_offer);
+        // The fresh side moved, but not onto the stale peer's values.
+        assert_ne!(a.phi, phi_a_offer);
+        assert_ne!(a.phi, b.phi);
+        assert_eq!(sa.admitted(), 0);
+        assert_eq!(sa.excluded_stale(), 1);
+    }
+}

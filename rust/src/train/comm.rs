@@ -42,10 +42,28 @@
 //! sequence field (hence the 256-fragment cap enforced by
 //! [`crate::config::TrainConfig::validate`]). Fragment messages the
 //! receiver never collects — a churn event dropped the fold, or a
-//! straggler timeout gave up on the pair — stay in the endpoint stash
-//! for the rest of the run, like trailing gossip traffic after a
-//! timeout; the growth is bounded by dropped rounds × payload (a
-//! stash-expiry sweep is a ROADMAP follow-up).
+//! straggler timeout gave up on the pair — are garbage-collected by the
+//! [`Communicator::expire_stale`] sweep once they are `outer.stash_age`
+//! boundaries old (the trainers sweep once per boundary; `stash_age = 0`
+//! restores the old keep-forever behaviour).
+//!
+//! ## Bounded-staleness rounds and heartbeats
+//!
+//! The asynchronous boundary engine
+//! ([`AsyncGossipSync`](super::AsyncGossipSync)) needs two more
+//! primitives:
+//!
+//! * [`Communicator::offer_round`] / [`Communicator::collect_round`] —
+//!   like the fragment pair, but tagged with the boundary the offer was
+//!   made at and retained for a declared window of boundaries, so a fold
+//!   may admit a peer's offer from up to `outer.staleness − 1`
+//!   boundaries back. Absence is a legitimate outcome (`Ok(None)`), not
+//!   a protocol error: the engine degrades to older offers or a smaller
+//!   group instead of blocking.
+//! * [`Communicator::send_heartbeat`] / [`Communicator::poll_heartbeat`]
+//!   — per-boundary liveness announcements to the stage row, consumed by
+//!   the [`FailureDetector`](crate::net::FailureDetector). Polls never
+//!   block: detection is an inference over what has already arrived.
 //!
 //! Accounting semantics (kept identical to the seed counters):
 //! `activation_hops` / `floats_sent` count training-path activations,
@@ -80,6 +98,9 @@ const K_GOSSIP_D: u16 = 110;
 const K_GOSSIP_P: u16 = 111;
 const K_FRAG_D: u16 = 112;
 const K_FRAG_P: u16 = 113;
+const K_HB: u16 = 114;
+const K_ASYNC_D: u16 = 115;
+const K_ASYNC_P: u16 = 116;
 
 /// Pack a `(round, fragment)` pair into one 32-bit sequence value for
 /// fragment-tagged messages and fragment reduce rounds. Fragment counts
@@ -232,6 +253,71 @@ pub trait Communicator {
         frag: u16,
     ) -> Result<Option<(Vec<f32>, Vec<f32>)>>;
 
+    /// Bounded-staleness phase 1: publish fragment `frag` of this
+    /// worker's `(Δ, φ)` under the boundary `round` it is offered at,
+    /// retained for `window` rounds (so a fold up to `window − 1`
+    /// boundaries later can still admit it). Unlike
+    /// [`Communicator::offer_fragment`]'s fixed two-round retention, the
+    /// window is the engine's staleness knob.
+    #[allow(clippy::too_many_arguments)]
+    fn offer_round(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peers: &[usize],
+        round: u32,
+        frag: u16,
+        window: u32,
+        delta: &[f32],
+        phi: &[f32],
+    ) -> Result<()>;
+
+    /// Bounded-staleness phase 2: collect `peer`'s fragment `frag`
+    /// offered under `round`. `Ok(None)` means the offer is not
+    /// available — expired, never made, or (fabric, `wait = true`) past
+    /// the straggler deadline — and the caller degrades to an older
+    /// round or a smaller group. `wait` distinguishes the peer's current
+    /// round (worth blocking/waiting for) from older fallback rounds
+    /// (checked against what already arrived, never waited on).
+    fn collect_round(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peer: usize,
+        round: u32,
+        frag: u16,
+        wait: bool,
+    ) -> Result<Option<(Vec<f32>, Vec<f32>)>>;
+
+    /// Announce liveness at outer `boundary` to the stage-row `peers`
+    /// (a tiny control message; consumed by the failure detector).
+    fn send_heartbeat(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peers: &[usize],
+        boundary: u32,
+    ) -> Result<()>;
+
+    /// Non-blocking check whether `peer`'s heartbeat for `boundary` has
+    /// arrived at this worker. Never waits — detection infers from what
+    /// is already here.
+    fn poll_heartbeat(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peer: usize,
+        boundary: u32,
+    ) -> Result<bool>;
+
+    /// Stash-expiry sweep: drop retained sync payloads (streamed
+    /// fragments, bounded-staleness rounds, gossip offers, heartbeats)
+    /// older than `before_round`, returning how many were dropped.
+    /// Boundary payloads are untouched — their tags are wave-scoped and
+    /// always consumed. The trainers call this once per outer boundary
+    /// with `outer_idx − outer.stash_age`.
+    fn expire_stale(&mut self, before_round: u32) -> u64;
+
     /// Communication accounting so far.
     fn stats(&self) -> &CommStats;
 }
@@ -258,6 +344,11 @@ pub struct AccountingComm {
     /// after the current round began) and are garbage-collected two
     /// rounds back.
     frags: HashMap<(usize, usize, u32, u16), (Vec<f32>, Vec<f32>)>,
+    /// Bounded-staleness offers keyed `(stage, replica, round, fragment)`,
+    /// each retained for its offerer's declared window of rounds.
+    rounds: HashMap<(usize, usize, u32, u16), (Vec<f32>, Vec<f32>)>,
+    /// Latest boundary heartbeat per `(stage, replica)`.
+    hearts: HashMap<(usize, usize), u32>,
 }
 
 impl AccountingComm {
@@ -271,6 +362,8 @@ impl AccountingComm {
             offers: HashMap::new(),
             offer_seq: 0,
             frags: HashMap::new(),
+            rounds: HashMap::new(),
+            hearts: HashMap::new(),
         }
     }
 }
@@ -442,6 +535,78 @@ impl Communicator for AccountingComm {
                 "replica {peer} of stage {stage} never offered fragment {frag} of round {seq}"
             ),
         }
+    }
+
+    fn offer_round(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peers: &[usize],
+        round: u32,
+        frag: u16,
+        window: u32,
+        delta: &[f32],
+        phi: &[f32],
+    ) -> Result<()> {
+        // Per-replica GC: this worker's rounds older than its own window
+        // can no longer be admitted by any fold.
+        self.rounds.retain(|&(s, r, rd, _), _| {
+            s != stage || r != me || rd.saturating_add(window) > round
+        });
+        self.rounds.insert((stage, me, round, frag), (delta.to_vec(), phi.to_vec()));
+        // Same counting rules as `offer_fragment`: actual element count,
+        // symmetric pairs counted once by the lower-numbered side.
+        let n = (delta.len() + phi.len()) as u64;
+        let p = peers.len() as u64;
+        self.stats.pair_exchanges += peers.iter().filter(|&&q| q > me).count() as u64;
+        self.stats.floats_sent += p * n;
+        self.stats.msgs_sent += p * 2;
+        self.stats.bytes_sent += p * 4 * n;
+        Ok(())
+    }
+
+    fn collect_round(
+        &mut self,
+        stage: usize,
+        _me: usize,
+        peer: usize,
+        round: u32,
+        frag: u16,
+        _wait: bool,
+    ) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+        Ok(self.rounds.get(&(stage, peer, round, frag)).cloned())
+    }
+
+    fn send_heartbeat(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peers: &[usize],
+        boundary: u32,
+    ) -> Result<()> {
+        let slot = self.hearts.entry((stage, me)).or_insert(0);
+        *slot = (*slot).max(boundary);
+        // Control-sized messages, like the fabric's Payload::Control.
+        self.stats.msgs_sent += peers.len() as u64;
+        self.stats.bytes_sent += 8 * peers.len() as u64;
+        Ok(())
+    }
+
+    fn poll_heartbeat(
+        &mut self,
+        stage: usize,
+        _me: usize,
+        peer: usize,
+        boundary: u32,
+    ) -> Result<bool> {
+        Ok(self.hearts.get(&(stage, peer)).is_some_and(|&b| b >= boundary))
+    }
+
+    fn expire_stale(&mut self, before_round: u32) -> u64 {
+        let before_len = (self.rounds.len() + self.frags.len()) as u64;
+        self.rounds.retain(|&(_, _, rd, _), _| rd >= before_round);
+        self.frags.retain(|&(_, _, rd, _), _| rd >= before_round);
+        before_len - (self.rounds.len() + self.frags.len()) as u64
     }
 
     fn stats(&self) -> &CommStats {
@@ -633,6 +798,118 @@ impl Communicator for FabricComm {
         })
     }
 
+    fn offer_round(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peers: &[usize],
+        round: u32,
+        frag: u16,
+        _window: u32,
+        delta: &[f32],
+        phi: &[f32],
+    ) -> Result<()> {
+        // Retention is receiver-side on the fabric: messages sit in the
+        // endpoint stash until collected or expired by `expire_stale`.
+        let my_rank = self.rank_of(stage, me) as u32;
+        let a = frag_seq(round, frag);
+        for &p in peers {
+            let rank = self.rank_of(stage, p);
+            self.ep
+                .send(rank, Tag::new(K_ASYNC_D, a, my_rank), Payload::F32(delta.to_vec()));
+            self.ep
+                .send(rank, Tag::new(K_ASYNC_P, a, my_rank), Payload::F32(phi.to_vec()));
+        }
+        self.stats.pair_exchanges += peers.iter().filter(|&&q| q > me).count() as u64;
+        self.stats.floats_sent += peers.len() as u64 * (delta.len() + phi.len()) as u64;
+        Ok(())
+    }
+
+    fn collect_round(
+        &mut self,
+        stage: usize,
+        _me: usize,
+        peer: usize,
+        round: u32,
+        frag: u16,
+        wait: bool,
+    ) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+        let peer_rank = self.rank_of(stage, peer) as u32;
+        let a = frag_seq(round, frag);
+        let td = Tag::new(K_ASYNC_D, a, peer_rank);
+        let tp = Tag::new(K_ASYNC_P, a, peer_rank);
+        // Unlike the single-shot gossip collects, round offers stay
+        // *readable for the whole retention window* — a later boundary
+        // may re-admit the same offer at a higher age, exactly as the
+        // accounting communicator's retention map does — so every path
+        // leaves the messages in the stash (the expiry sweep reclaims
+        // them). Fallback rounds (`wait = false`) only consult what has
+        // already arrived — never sleeping, not even on the latency
+        // model; the current round honours the straggler timeout, or
+        // blocks when none is configured (the peer's offer is certain).
+        Ok(match (wait, self.gossip_timeout) {
+            (true, None) => {
+                let d = self.ep.recv(td);
+                let p = self.ep.recv(tp);
+                let out = (d.payload.clone().into_f32(), p.payload.clone().into_f32());
+                self.ep.stash_back(d);
+                self.ep.stash_back(p);
+                Some(out)
+            }
+            (true, Some(t)) => {
+                let Some(d) = self.ep.recv_timeout(td, t) else { return Ok(None) };
+                let Some(p) = self.ep.recv_timeout(tp, t) else {
+                    self.ep.stash_back(d);
+                    return Ok(None);
+                };
+                let out = (d.payload.clone().into_f32(), p.payload.clone().into_f32());
+                self.ep.stash_back(d);
+                self.ep.stash_back(p);
+                Some(out)
+            }
+            (false, _) => {
+                let Some(d) = self.ep.peek_ready(td) else { return Ok(None) };
+                let Some(p) = self.ep.peek_ready(tp) else { return Ok(None) };
+                Some((d.into_f32(), p.into_f32()))
+            }
+        })
+    }
+
+    fn send_heartbeat(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peers: &[usize],
+        boundary: u32,
+    ) -> Result<()> {
+        let my_rank = self.rank_of(stage, me) as u32;
+        for &p in peers {
+            let rank = self.rank_of(stage, p);
+            self.ep.send(rank, Tag::new(K_HB, boundary, my_rank), Payload::Control);
+        }
+        Ok(())
+    }
+
+    fn poll_heartbeat(
+        &mut self,
+        stage: usize,
+        _me: usize,
+        peer: usize,
+        boundary: u32,
+    ) -> Result<bool> {
+        let peer_rank = self.rank_of(stage, peer) as u32;
+        let tag = Tag::new(K_HB, boundary, peer_rank);
+        Ok(self.ep.try_recv_ready(tag).is_some())
+    }
+
+    fn expire_stale(&mut self, before_round: u32) -> u64 {
+        self.ep.sweep_stash(|t| match t.kind {
+            K_GOSSIP_D | K_GOSSIP_P | K_HB => t.a >= before_round,
+            K_FRAG_D | K_FRAG_P | K_ASYNC_D | K_ASYNC_P => t.a / 256 >= before_round,
+            _ => true,
+        }) as u64
+    }
+
     fn stats(&self) -> &CommStats {
         &self.stats
     }
@@ -726,6 +1003,84 @@ mod tests {
         assert_eq!(c.stats().floats_sent, 2 * 2 * 2, "both sides ship (Δ_k, φ_k)");
         assert_eq!(c.stats().msgs_sent, 4);
         assert_eq!(c.stats().bytes_sent, 4 * 4 * 2);
+    }
+
+    #[test]
+    fn accounting_rounds_respect_the_declared_window() {
+        let mut c = AccountingComm::new();
+        c.offer_round(0, 1, &[0], 1, 0, 3, &[1.0], &[2.0]).unwrap();
+        c.offer_round(0, 1, &[0], 2, 0, 3, &[3.0], &[4.0]).unwrap();
+        c.offer_round(0, 1, &[0], 3, 0, 3, &[5.0], &[6.0]).unwrap();
+        // All three rounds are inside the window of the latest offer.
+        assert_eq!(c.collect_round(0, 0, 1, 1, 0, true).unwrap(), Some((vec![1.0], vec![2.0])));
+        assert_eq!(c.collect_round(0, 0, 1, 3, 0, false).unwrap(), Some((vec![5.0], vec![6.0])));
+        // Round 4 pushes round 1 out of the 3-round window.
+        c.offer_round(0, 1, &[0], 4, 0, 3, &[7.0], &[8.0]).unwrap();
+        assert_eq!(c.collect_round(0, 0, 1, 1, 0, true).unwrap(), None);
+        assert_eq!(c.collect_round(0, 0, 1, 2, 0, true).unwrap(), Some((vec![3.0], vec![4.0])));
+        // Absence is None, never an error.
+        assert_eq!(c.collect_round(0, 0, 1, 9, 0, true).unwrap(), None);
+        assert_eq!(c.collect_round(1, 0, 1, 2, 0, true).unwrap(), None);
+    }
+
+    #[test]
+    fn accounting_heartbeats_poll_latest_boundary() {
+        let mut c = AccountingComm::new();
+        assert!(!c.poll_heartbeat(0, 0, 1, 1).unwrap());
+        c.send_heartbeat(0, 1, &[0], 3).unwrap();
+        assert!(c.poll_heartbeat(0, 0, 1, 3).unwrap());
+        assert!(c.poll_heartbeat(0, 0, 1, 2).unwrap(), "later heartbeat covers earlier polls");
+        assert!(!c.poll_heartbeat(0, 0, 1, 4).unwrap());
+        // Stale re-announcements never roll the clock back.
+        c.send_heartbeat(0, 1, &[0], 2).unwrap();
+        assert!(c.poll_heartbeat(0, 0, 1, 3).unwrap());
+        // Heartbeats are metered as control-sized wire traffic.
+        assert_eq!(c.stats().msgs_sent, 2);
+        assert_eq!(c.stats().bytes_sent, 16);
+    }
+
+    #[test]
+    fn accounting_expire_drops_old_rounds_and_fragments() {
+        let mut c = AccountingComm::new();
+        c.offer_round(0, 0, &[1], 2, 0, 8, &[1.0], &[1.0]).unwrap();
+        c.offer_round(0, 0, &[1], 5, 0, 8, &[2.0], &[2.0]).unwrap();
+        c.offer_fragment(0, 1, &[0], 2, 0, &[3.0], &[3.0]).unwrap();
+        assert_eq!(c.expire_stale(4), 2, "round 2 and fragment round 2 expire");
+        assert_eq!(c.collect_round(0, 1, 0, 2, 0, true).unwrap(), None);
+        assert_eq!(c.collect_round(0, 1, 0, 5, 0, true).unwrap(), Some((vec![2.0], vec![2.0])));
+        assert!(c.collect_fragment(0, 0, 1, 2, 0).is_err());
+    }
+
+    #[test]
+    fn fabric_rounds_heartbeats_and_expiry() {
+        let mut fabric = crate::net::Fabric::new(2);
+        let mut eps = fabric.take_endpoints().into_iter();
+        let mut a = FabricComm::new(eps.next().unwrap(), 2, None);
+        let mut b = FabricComm::new(eps.next().unwrap(), 2, None);
+        // Round offers land under their (round, frag) tag and are
+        // collectable in any order; fallback collects never block.
+        a.offer_round(0, 0, &[1], 3, 1, 4, &[1.0, 2.0], &[3.0, 4.0]).unwrap();
+        a.offer_round(0, 0, &[1], 4, 1, 4, &[5.0], &[6.0]).unwrap();
+        assert_eq!(
+            b.collect_round(0, 1, 0, 4, 1, true).unwrap(),
+            Some((vec![5.0], vec![6.0]))
+        );
+        assert_eq!(
+            b.collect_round(0, 1, 0, 3, 1, false).unwrap(),
+            Some((vec![1.0, 2.0], vec![3.0, 4.0]))
+        );
+        // A round never offered: the non-waiting collect reports None.
+        assert_eq!(b.collect_round(0, 1, 0, 9, 1, false).unwrap(), None);
+        // Heartbeats: poll is non-blocking and consumes the announcement.
+        a.send_heartbeat(0, 0, &[1], 7).unwrap();
+        assert!(b.poll_heartbeat(0, 1, 0, 7).unwrap());
+        assert!(!b.poll_heartbeat(0, 1, 0, 8).unwrap());
+        // Expiry sweeps uncollected old rounds out of the stash.
+        a.offer_round(0, 0, &[1], 2, 0, 4, &[9.0], &[9.0]).unwrap();
+        a.send_heartbeat(0, 0, &[1], 2).unwrap();
+        let dropped = b.expire_stale(3);
+        assert_eq!(dropped, 3, "two round payloads + one heartbeat expire");
+        assert_eq!(b.collect_round(0, 1, 0, 2, 0, false).unwrap(), None);
     }
 
     #[test]

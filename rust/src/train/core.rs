@@ -36,7 +36,7 @@ use crate::config::TrainConfig;
 use crate::data::Loader;
 use crate::metrics::{perplexity, RunTrace};
 use crate::model::StageKind;
-use crate::net::topo::ChurnEvent;
+use crate::net::topo::{ChurnEvent, FailureDetector};
 use crate::optim::LrSchedule;
 use crate::routing::RoutePlan;
 use crate::runtime::{Engine, Manifest};
@@ -70,11 +70,34 @@ pub struct TrainerCore<'e, C: Communicator> {
     trace: RunTrace,
     /// Microbatch waves per replica per step.
     num_mb: usize,
-    /// Live mask over DP columns, driven by the churn schedule.
+    /// Live mask over DP columns, driven by the churn schedule and (when
+    /// detection is on) the heartbeat failure detector.
     live: Vec<bool>,
     /// Per-step mean training loss observed at owned last-stage workers
     /// (NaN for steps the own column sat out).
     step_train_loss: Vec<f64>,
+    /// Per-replica boundary clocks: outer boundaries each replica
+    /// participated in (advanced for live replicas at every boundary
+    /// this core drives). The async engine derives the same clocks from
+    /// the shared schedule; these are the core's ground truth.
+    clocks: Vec<u64>,
+    /// Heartbeat failure detector (`[churn] detect`); `None` when
+    /// detection is off.
+    detector: Option<FailureDetector>,
+    /// Replicas removed by *detection* (as opposed to the schedule):
+    /// alive-but-partitioned from this core's view, still expected to
+    /// heartbeat again.
+    suspected: Vec<bool>,
+    /// Detection transitions observed: `(boundary, event)`.
+    detected: Vec<(u64, ChurnEvent)>,
+    /// Fault injection for detection tests: `(replica, from_step,
+    /// until_step)`. On the grid executor the replica's heartbeats are
+    /// suppressed over `[from, until)`; a single-worker executor owning
+    /// the replica crashes outright at `from`.
+    silence: Option<(usize, u64, u64)>,
+    /// Whether this core's worker crashed mid-run (silence fault on a
+    /// single-worker executor): skip the end-of-run drain.
+    crashed: bool,
 }
 
 fn draw_val_batches(cfg: &TrainConfig, man: &Manifest, n: usize) -> Vec<Vec<i32>> {
@@ -165,6 +188,10 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
             floor_frac: cfg.lr_floor,
         };
         let strategy = strategy::for_config(&cfg);
+        let detector = cfg
+            .detect
+            .enabled
+            .then(|| FailureDetector::new(dp, cfg.detect.misses));
         Ok(TrainerCore {
             live: vec![true; dp],
             cfg,
@@ -180,6 +207,12 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
             trace: RunTrace::default(),
             num_mb,
             step_train_loss: Vec::new(),
+            clocks: vec![0; dp],
+            detector,
+            suspected: vec![false; dp],
+            detected: Vec::new(),
+            silence: None,
+            crashed: false,
         })
     }
 
@@ -236,6 +269,10 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
             floor_frac: cfg.lr_floor,
         };
         let strategy = strategy::for_config(&cfg);
+        let detector = cfg
+            .detect
+            .enabled
+            .then(|| FailureDetector::new(dp, cfg.detect.misses));
         Ok(TrainerCore {
             live: vec![true; dp],
             cfg,
@@ -251,6 +288,12 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
             trace: RunTrace::default(),
             num_mb,
             step_train_loss: Vec::new(),
+            clocks: vec![0; dp],
+            detector,
+            suspected: vec![false; dp],
+            detected: Vec::new(),
+            silence: None,
+            crashed: false,
         })
     }
 
@@ -280,6 +323,29 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
     /// Currently live DP replicas, ascending.
     pub fn live_replicas(&self) -> Vec<usize> {
         (0..self.dp()).filter(|&r| self.live[r]).collect()
+    }
+
+    /// Per-replica boundary clocks: boundaries each replica participated
+    /// in so far (see the async boundary engine,
+    /// [`BoundaryClock`](super::BoundaryClock)).
+    pub fn boundary_clocks(&self) -> &[u64] {
+        &self.clocks
+    }
+
+    /// Detection transitions observed so far: `(boundary, event)`.
+    /// Empty when `[churn] detect` is off or nothing failed.
+    pub fn detected_events(&self) -> &[(u64, ChurnEvent)] {
+        &self.detected
+    }
+
+    /// Fault injection for failure-detection tests: silence `replica`
+    /// over inner steps `[from, until)`. On the grid executor the
+    /// replica keeps existing but stops heartbeating (a network
+    /// partition); a single-worker executor owning the replica crashes
+    /// outright at `from` (and `until` is ignored). Detection then has
+    /// to *infer* the failure — there is no schedule entry.
+    pub fn set_silence(&mut self, replica: usize, from_step: u64, until_step: u64) {
+        self.silence = Some((replica, from_step, until_step));
     }
 
     /// Whether DP replica `r` is currently live.
@@ -381,6 +447,15 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
         let exec0 = self.eng.executions();
         let mut last_val = f64::NAN;
         for step in 0..self.cfg.steps {
+            // A crash fault on a single-worker executor: the worker stops
+            // outright — no more compute, messages or heartbeats. Its
+            // peers must *detect* the failure; nothing announces it.
+            if let Some((r, from, _)) = self.silence {
+                if !self.owns_grid() && self.workers[0].replica == r && step as u64 >= from {
+                    self.crashed = true;
+                    break;
+                }
+            }
             let due: Vec<ChurnEvent> = self.cfg.churn.events_at(step as u64).collect();
             for event in due {
                 self.apply_churn(event)?;
@@ -417,8 +492,9 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
         // flight; drain it so the finishing (φ, θ) include every offered
         // exchange (no-op for gated strategies). The last eval above ran
         // before this fold, mirroring a real deployment where the tail
-        // fragment lands after the final report.
-        {
+        // fragment lands after the final report. A crashed worker drains
+        // nothing — it is gone.
+        if !self.crashed {
             let live = self.live_replicas();
             let final_outer = (self.cfg.steps / self.cfg.outer.inner_steps) as u64;
             let TrainerCore { comm, strategy, workers, live: live_mask, .. } = self;
@@ -437,6 +513,7 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
             executions: self.eng.executions() - exec0,
             step_train_loss: std::mem::take(&mut self.step_train_loss),
             executor: self.comm.executor(),
+            detected: self.detected.clone(),
         })
     }
 
@@ -672,16 +749,57 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
     }
 
     /// Outer optimizer step, fully delegated to the configured
-    /// [`SyncStrategy`](super::SyncStrategy). The boundary is three-phase
-    /// to support streamed overlap: the offer phase runs for every owned
-    /// live worker first (so a streamed offer snapshots `Δ = θ − φ`
-    /// before any fold resets θ over the same range), then any fragment
-    /// exchange left in flight from the previous boundary folds
-    /// ([`SyncStrategy::fold_inflight`](super::SyncStrategy::fold_inflight),
-    /// a no-op for gated strategies), then the fold/update phase.
+    /// [`SyncStrategy`](super::SyncStrategy). The boundary is the
+    /// event-driven engine's beat:
+    ///
+    /// 1. heartbeats + failure detection (when `[churn] detect` is on) —
+    ///    liveness announcements go out, verdicts come back, and a
+    ///    detected failure repairs the live set through the same
+    ///    [`apply_churn`](TrainerCore::apply_churn) machinery a
+    ///    scheduled leave uses;
+    /// 2. per-replica boundary clocks advance for the participants;
+    /// 3. the stash-expiry sweep drops sync payloads nobody collected
+    ///    (`outer.stash_age`);
+    /// 4. the three strategy phases: offers for every owned live worker
+    ///    first (so a streamed offer snapshots `Δ = θ − φ` before any
+    ///    fold resets θ over the same range), then any fragment exchange
+    ///    left in flight from the previous boundary
+    ///    ([`SyncStrategy::fold_inflight`](super::SyncStrategy::fold_inflight),
+    ///    a no-op for gated strategies), then the fold/update phase.
+    ///
     /// `outer_idx` is the 1-based outer-step counter shared by both
     /// executors.
     pub fn outer_step(&mut self, outer_idx: u64) -> Result<()> {
+        self.boundary_heartbeats(outer_idx)?;
+        // Clocks advance for this boundary's participants (live owned
+        // replicas) — each replica counts the boundaries it was part of.
+        if self.owns_grid() {
+            for r in 0..self.dp() {
+                if self.live[r] {
+                    self.clocks[r] += 1;
+                }
+            }
+        } else {
+            let r = self.workers[0].replica;
+            if self.live[r] {
+                self.clocks[r] += 1;
+            }
+        }
+        // Expiry sweep, thresholded on the slowest owned live clock so a
+        // lagging rejoiner's admissible rounds are never swept
+        // (`stash_age >= staleness` is enforced by config validation).
+        let stash_age = self.cfg.stream.stash_age as u64;
+        if stash_age > 0 {
+            let min_clock = (0..self.dp())
+                .filter(|&r| self.live[r])
+                .filter_map(|r| {
+                    let owned = self.owns_grid() || self.workers[0].replica == r;
+                    owned.then_some(self.clocks[r])
+                })
+                .min()
+                .unwrap_or(0);
+            self.comm.expire_stale(min_clock.saturating_sub(stash_age) as u32);
+        }
         let live = self.live_replicas();
         let TrainerCore { comm, strategy, workers, eng, live: live_mask, .. } = self;
         for w in workers.iter() {
@@ -697,6 +815,96 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
         for w in workers.iter_mut() {
             if live_mask[w.replica] {
                 strategy.apply_outer(comm, &mut **eng, w, &live, outer_idx)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// The heartbeat half of a boundary (no-op without `[churn] detect`):
+    /// every owned live replica announces liveness to its stage row, the
+    /// detector folds in what has arrived — never waiting; detection is
+    /// an inference over delivered messages — and each verdict feeds the
+    /// existing churn-repair machinery. One boundary of grace is polled
+    /// behind the current one to absorb in-flight delivery.
+    ///
+    /// The grid executor heartbeats on the stage-0 row only: replica
+    /// liveness is a column property, one row arbitrates it. Detection is
+    /// a *local* judgment per core — on the threaded executor transient
+    /// disagreement between workers is absorbed by the gossip straggler
+    /// timeout until their detectors converge (within one boundary).
+    fn boundary_heartbeats(&mut self, outer_idx: u64) -> Result<()> {
+        if self.detector.is_none() {
+            return Ok(());
+        }
+        let dp = self.dp();
+        let m = self.cfg.outer.inner_steps as u64;
+        let closing = (outer_idx * m).saturating_sub(1);
+        let grid = self.owns_grid();
+        let hb_stage = if grid { 0 } else { self.workers[0].stage };
+        let own: Vec<usize> = if grid {
+            (0..dp).collect()
+        } else {
+            vec![self.workers[0].replica]
+        };
+        for &r in &own {
+            let silenced = matches!(
+                self.silence,
+                Some((sr, from, until)) if sr == r && closing >= from && closing < until
+            );
+            // A detection-suspected replica is alive-but-partitioned: it
+            // keeps heartbeating (unlike a schedule-dead one) so the
+            // detector can re-admit it when the partition heals.
+            if silenced || !(self.live[r] || self.suspected[r]) {
+                continue;
+            }
+            let peers: Vec<usize> = (0..dp).filter(|&q| q != r).collect();
+            self.comm.send_heartbeat(hb_stage, r, &peers, outer_idx as u32)?;
+            self.detector
+                .as_mut()
+                .expect("checked above")
+                .observe(r, outer_idx);
+        }
+        // Poll the whole tolerance window, freshest first: a heartbeat
+        // delivered up to `misses` boundaries late must still be
+        // observed, or the configured tolerance would silently shrink to
+        // one boundary and a slow-but-alive peer could be declared dead
+        // with no way back (Join needs a current observation).
+        let me0 = own[0];
+        let lo = outer_idx.saturating_sub(self.cfg.detect.misses as u64).max(1);
+        for q in 0..dp {
+            if own.contains(&q) {
+                continue;
+            }
+            for hb in (lo..=outer_idx).rev() {
+                if self.comm.poll_heartbeat(hb_stage, me0, q, hb as u32)? {
+                    self.detector
+                        .as_mut()
+                        .expect("checked above")
+                        .observe(q, hb);
+                    break;
+                }
+            }
+        }
+        let events = self
+            .detector
+            .as_mut()
+            .expect("checked above")
+            .tick(outer_idx);
+        for e in events {
+            match e {
+                ChurnEvent::Leave(r) if self.live[r] => {
+                    self.suspected[r] = true;
+                    self.detected.push((outer_idx, e));
+                    self.apply_churn(e)?;
+                }
+                ChurnEvent::Join(r) if self.suspected[r] && !self.live[r] => {
+                    self.suspected[r] = false;
+                    self.detected.push((outer_idx, e));
+                    self.apply_churn(e)?;
+                }
+                // Schedule-driven absences arbitrate themselves: the
+                // shared schedule already updated the live mask.
+                _ => {}
             }
         }
         Ok(())

@@ -21,6 +21,12 @@
 //!   fragmented overlap on either outer flavor: the (Δ, φ) state splits
 //!   into `outer.fragments` chunks, each offered at one boundary and
 //!   folded at the next so the exchange hides behind the inner phase.
+//!   [`AsyncGossipSync`] (`outer.staleness > 1`) generalizes the boundary
+//!   into a bounded-staleness event-driven engine: per-replica boundary
+//!   clocks ([`BoundaryClock`]), age-weighted admission of peer state up
+//!   to `staleness − 1` boundaries old, and per-fragment partners
+//!   (`--pairing per-fragment`); `staleness = 1` is the lockstep special
+//!   case and routes through the gated / streaming paths untouched.
 //! * [`Communicator`] — how payloads move: [`AccountingComm`] hands
 //!   buffers over in memory and *accounts* the traffic (the deterministic
 //!   harness behind every convergence experiment), [`FabricComm`] sends
@@ -45,6 +51,7 @@
 //! XLA artifacts; this module only moves buffers and decides who talks to
 //! whom — exactly the paper's separation of concerns.
 
+mod boundary;
 mod checkpoint;
 mod comm;
 mod core;
@@ -55,6 +62,7 @@ mod strategy;
 mod streaming;
 mod threaded;
 
+pub use boundary::{AsyncGossipSync, BoundaryClock};
 pub use checkpoint::Checkpoint;
 pub use comm::{AccountingComm, BoundaryTag, Communicator, FabricComm, Wire};
 pub use self::core::TrainerCore;
@@ -66,7 +74,8 @@ pub use sim::SimTrainer;
 pub use state::WorkerState;
 pub use strategy::{
     for_config as strategy_for_config, BandwidthAwarePairing, ChurnResponse, CommPattern,
-    DilocoSync, FsdpSync, NolocoSync, PairingPolicy, SyncStrategy, UniformPairing,
+    DilocoSync, FsdpSync, NolocoSync, PairingPolicy, PerFragmentPairing, SyncStrategy,
+    UniformPairing,
 };
 pub use streaming::{FragmentSchedule, StreamingSync};
 pub use threaded::ThreadedTrainer;
@@ -153,6 +162,11 @@ pub struct TrainReport {
     pub executions: u64,
     /// Which executor produced the report ("sim" / "threaded").
     pub executor: &'static str,
+    /// Failure-detection transitions `(boundary, event)` observed by the
+    /// heartbeat detector (`[churn] detect`); empty when detection is
+    /// off or nothing failed. The threaded executor reports the union of
+    /// worker observations, deduplicated.
+    pub detected: Vec<(u64, crate::net::topo::ChurnEvent)>,
 }
 
 /// Convenience: resolve artifacts, build an engine, run [`SimTrainer`].

@@ -54,6 +54,26 @@ impl<'e> SimTrainer<'e> {
         self.core.apply_churn(event)
     }
 
+    /// Fault injection for failure-detection tests: suppress `replica`'s
+    /// heartbeats over inner steps `[from, until)` — a network partition
+    /// with no schedule entry; the detector must notice and the repair
+    /// machinery must absorb it (see [`TrainerCore::set_silence`]).
+    pub fn with_silence(mut self, replica: usize, from_step: u64, until_step: u64) -> Self {
+        self.core.set_silence(replica, from_step, until_step);
+        self
+    }
+
+    /// Detection transitions `(boundary, event)` observed so far.
+    pub fn detected_events(&self) -> &[(u64, ChurnEvent)] {
+        self.core.detected_events()
+    }
+
+    /// Per-replica boundary clocks (boundaries each replica participated
+    /// in so far).
+    pub fn boundary_clocks(&self) -> &[u64] {
+        self.core.boundary_clocks()
+    }
+
     /// Run the configured number of inner steps; returns the report.
     pub fn run(&mut self) -> Result<TrainReport> {
         self.core.run()

@@ -166,6 +166,7 @@ pub(crate) fn pairing_for(cfg: &TrainConfig) -> Box<dyn PairingPolicy> {
         PairingMode::BandwidthAware => Box::new(BandwidthAwarePairing::new(
             cfg.net.build(cfg.topology.dp, cfg.seed),
         )),
+        PairingMode::PerFragment => Box::new(PerFragmentPairing::new(Box::new(UniformPairing))),
     }
 }
 
@@ -190,11 +191,18 @@ pub(crate) fn gated_for(cfg: &TrainConfig) -> Box<dyn SyncStrategy> {
 }
 
 /// Build the strategy configured on `cfg`: the gated method impls below,
-/// or [`StreamingSync`](super::StreamingSync) over the configured flavor
+/// [`StreamingSync`](super::StreamingSync) over the configured flavor
 /// when `--sync streaming` is selected (FSDP has no outer state to
 /// stream; config validation rejects that pairing before trainers get
-/// here).
+/// here), or the bounded-staleness
+/// [`AsyncGossipSync`](super::AsyncGossipSync) engine when
+/// `outer.staleness > 1` (NoLoCo + gated only, enforced by validation —
+/// `staleness = 1` is the lockstep contract and routes through the
+/// gated / streaming code paths untouched, bit-for-bit).
 pub fn for_config(cfg: &TrainConfig) -> Box<dyn SyncStrategy> {
+    if cfg.outer.staleness > 1 {
+        return Box::new(super::boundary::AsyncGossipSync::from_config(cfg));
+    }
     if cfg.sync == SyncMode::Streaming && cfg.outer.method != Method::Fsdp {
         return Box::new(super::streaming::StreamingSync::from_config(cfg));
     }
@@ -518,6 +526,26 @@ pub trait PairingPolicy: Send + Sync {
         outer_idx: u64,
         seed: u64,
     ) -> Vec<Vec<usize>>;
+
+    /// Draw the round's groups for one *fragment* of the outer state.
+    /// The default ignores the fragment — every fragment of a round
+    /// shares one partition, the classic single-partner gossip.
+    /// [`PerFragmentPairing`] overrides this so each fragment draws its
+    /// own partner, mixing K× faster per round at the same total
+    /// payload. Must satisfy the same disjoint-cover contract as
+    /// [`PairingPolicy::draw`] for every fragment independently.
+    fn draw_for_fragment(
+        &self,
+        live: &[usize],
+        group: usize,
+        stage: usize,
+        frag: u16,
+        outer_idx: u64,
+        seed: u64,
+    ) -> Vec<Vec<usize>> {
+        let _ = frag;
+        self.draw(live, group, stage, outer_idx, seed)
+    }
 }
 
 /// Uniform random disjoint groups — the seed derivation, bit-for-bit:
@@ -620,6 +648,113 @@ impl PairingPolicy for BandwidthAwarePairing {
     }
 }
 
+/// One-entry memo for a boundary's pairing draws, shared by the gossip
+/// strategies: keyed by `(stage, outer_idx, live)`, holding a lazily
+/// filled slot per fragment — only fragments actually requested are
+/// drawn (streaming asks for one per boundary; the async engine for
+/// all of them). The grid executor calls the offer and fold phases for
+/// every worker of a stage row with identical inputs, so one set of
+/// draws serves the whole row instead of being re-derived per worker
+/// per phase.
+pub(crate) struct PairingCache {
+    entry: Option<(usize, u64, Vec<usize>, Vec<Option<Vec<Vec<usize>>>>)>,
+}
+
+impl PairingCache {
+    /// Empty cache.
+    pub(crate) fn new() -> PairingCache {
+        PairingCache { entry: None }
+    }
+
+    /// The group containing `me` for fragment `frag` (of `fragments`),
+    /// drawing and memoizing that fragment's partition on a miss.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn my_group(
+        &mut self,
+        pairing: &dyn PairingPolicy,
+        live: &[usize],
+        group: usize,
+        stage: usize,
+        frag: u16,
+        fragments: usize,
+        outer_idx: u64,
+        seed: u64,
+        me: usize,
+    ) -> Vec<usize> {
+        let hit = matches!(
+            &self.entry,
+            Some((s, o, l, _)) if *s == stage && *o == outer_idx && l.as_slice() == live
+        );
+        if !hit {
+            self.entry = Some((stage, outer_idx, live.to_vec(), vec![None; fragments.max(1)]));
+        }
+        let (_, _, _, draws) = self.entry.as_mut().expect("keyed above");
+        let slot = &mut draws[frag as usize];
+        if slot.is_none() {
+            *slot = Some(pairing.draw_for_fragment(live, group, stage, frag, outer_idx, seed));
+        }
+        slot.as_ref()
+            .expect("filled above")
+            .iter()
+            .find(|g| g.contains(&me))
+            .expect("pairing policy must cover every live replica")
+            .clone()
+    }
+}
+
+/// Per-fragment pairing: every fragment of a round draws its *own*
+/// disjoint partition by perturbing the round seed with the fragment
+/// index, so a replica gossips each (Δ_k, φ_k) slice with a different
+/// partner. Wraps any inner policy (uniform here by construction — the
+/// fragment perturbation composes with the inner policy's own bias).
+/// With one fragment this reduces to the inner policy's draw with a
+/// shifted seed: a valid partition, just a different one — selecting
+/// `--pairing per-fragment` opts into a new partner sequence.
+pub struct PerFragmentPairing {
+    inner: Box<dyn PairingPolicy>,
+}
+
+impl PerFragmentPairing {
+    /// Wrap `inner`, fragment-perturbing its seed.
+    pub fn new(inner: Box<dyn PairingPolicy>) -> PerFragmentPairing {
+        PerFragmentPairing { inner }
+    }
+
+    fn frag_seed(seed: u64, frag: u16) -> u64 {
+        seed ^ (frag as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+    }
+}
+
+impl PairingPolicy for PerFragmentPairing {
+    fn name(&self) -> &'static str {
+        "per-fragment"
+    }
+
+    fn draw(
+        &self,
+        live: &[usize],
+        group: usize,
+        stage: usize,
+        outer_idx: u64,
+        seed: u64,
+    ) -> Vec<Vec<usize>> {
+        self.draw_for_fragment(live, group, stage, 0, outer_idx, seed)
+    }
+
+    fn draw_for_fragment(
+        &self,
+        live: &[usize],
+        group: usize,
+        stage: usize,
+        frag: u16,
+        outer_idx: u64,
+        seed: u64,
+    ) -> Vec<Vec<usize>> {
+        self.inner
+            .draw(live, group, stage, outer_idx, Self::frag_seed(seed, frag))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -666,6 +801,31 @@ mod tests {
             .map(|g| g.into_iter().map(|i| live[i]).collect())
             .collect();
         assert_eq!(UniformPairing.draw(&live, 3, 2, 5, 11), want);
+    }
+
+    #[test]
+    fn per_fragment_pairing_varies_partners_but_keeps_valid_partitions() {
+        let live: Vec<usize> = (0..8).collect();
+        let p = PerFragmentPairing::new(Box::new(UniformPairing));
+        let mut distinct = false;
+        let base = p.draw_for_fragment(&live, 2, 0, 0, 5, 7);
+        assert_valid_partition(&base, &live, 2);
+        for frag in 1..4u16 {
+            let g = p.draw_for_fragment(&live, 2, 0, frag, 5, 7);
+            assert_valid_partition(&g, &live, 2);
+            distinct |= g != base;
+            // Deterministic per (fragment, round): redrawing agrees.
+            assert_eq!(g, p.draw_for_fragment(&live, 2, 0, frag, 5, 7));
+        }
+        assert!(distinct, "fragments must be able to draw different partners");
+        // The plain draw is fragment 0's partition (one coherent story
+        // for code paths that never learned about fragments).
+        assert_eq!(p.draw(&live, 2, 0, 5, 7), base);
+        // The default-impl passthrough on other policies ignores frag.
+        assert_eq!(
+            UniformPairing.draw_for_fragment(&live, 2, 0, 3, 5, 7),
+            UniformPairing.draw(&live, 2, 0, 5, 7)
+        );
     }
 
     #[test]
@@ -785,6 +945,7 @@ mod tests {
             gamma: OuterConfig::default_gamma(0.5, 2),
             group: 2,
             inner_steps: 2,
+            staleness: 1,
         };
         let churn = ChurnSchedule::none().leave(2, 1).join(5, 1);
         let s = NolocoSync::new(outer, 0, 2, churn, Box::new(UniformPairing));

@@ -85,8 +85,8 @@ use crate::runtime::Engine;
 use super::comm::Communicator;
 use super::state::WorkerState;
 use super::strategy::{
-    gated_for, pairing_for, ChurnResponse, CommPattern, PairingPolicy, SyncStrategy,
-    UniformPairing,
+    gated_for, pairing_for, ChurnResponse, CommPattern, PairingCache, PairingPolicy,
+    SyncStrategy, UniformPairing,
 };
 
 /// Balanced contiguous partition of a flat parameter vector into `K`
@@ -167,11 +167,11 @@ pub struct StreamingSync {
     /// per worker: the previous boundary's (unfolded under overlap) and
     /// the one just offered — offers run before folds at a boundary.
     inflight: HashMap<(usize, usize), Vec<Inflight>>,
-    /// Memoized last pairing draw, keyed by `(stage, outer_idx, live)`:
-    /// the grid executor calls the offer phase for every worker of a
-    /// stage row with identical inputs, so one draw serves the row (the
-    /// same cache the gated `NolocoSync` keeps).
-    cache: Option<(usize, u64, Vec<usize>, Vec<Vec<usize>>)>,
+    /// Memoized pairing draws (see
+    /// [`PairingCache`](super::strategy::PairingCache)): the grid
+    /// executor calls the offer phase for every worker of a stage row
+    /// with identical inputs, so one set of draws serves the row.
+    cache: PairingCache,
     /// Fragments dropped instead of folded because membership changed
     /// while they were in flight.
     dropped_stale: u64,
@@ -207,7 +207,7 @@ impl StreamingSync {
             pairing,
             delegate,
             inflight: HashMap::new(),
-            cache: None,
+            cache: PairingCache::new(),
             dropped_stale: 0,
         }
     }
@@ -221,25 +221,33 @@ impl StreamingSync {
     /// This worker's exchange group at a boundary: the pairing policy's
     /// gossip group for the NoLoCo flavor (drawn once per
     /// `(stage, outer_idx, live)` through the cache), the whole live row
-    /// for the DiLoCo flavor.
-    fn my_group(&mut self, live: &[usize], stage: usize, outer_idx: u64, me: usize) -> Vec<usize> {
+    /// for the DiLoCo flavor. The draw is keyed by the boundary's due
+    /// `frag` (from the caller's parameter-length-clamped schedule), so
+    /// `--pairing per-fragment` gives each fragment its own partner
+    /// sequence; one fragment is due per boundary, which keeps the cache
+    /// key valid — the fragment is a function of `outer_idx`.
+    fn my_group(
+        &mut self,
+        live: &[usize],
+        stage: usize,
+        frag: u16,
+        outer_idx: u64,
+        me: usize,
+    ) -> Vec<usize> {
         if self.flavor == Method::DiLoCo {
             return live.to_vec();
         }
-        let hit = matches!(
-            &self.cache,
-            Some((s, o, l, _)) if *s == stage && *o == outer_idx && l.as_slice() == live
-        );
-        if !hit {
-            let groups = self.pairing.draw(live, self.outer.group, stage, outer_idx, self.seed);
-            self.cache = Some((stage, outer_idx, live.to_vec(), groups));
-        }
-        let (_, _, _, groups) = self.cache.as_ref().expect("cached above");
-        groups
-            .iter()
-            .find(|g| g.contains(&me))
-            .expect("pairing policy must cover every live replica")
-            .clone()
+        self.cache.my_group(
+            self.pairing.as_ref(),
+            live,
+            self.outer.group,
+            stage,
+            frag,
+            self.stream.fragments.max(1),
+            outer_idx,
+            self.seed,
+            me,
+        )
     }
 
     /// Whether replica `r`'s *fragment due at boundary `b`* is stale:
@@ -502,7 +510,7 @@ impl SyncStrategy for StreamingSync {
         let theta = w.theta[r.clone()].to_vec();
         let phi = w.phi[r.clone()].to_vec();
         let delta: Vec<f32> = theta.iter().zip(&phi).map(|(t, p)| t - p).collect();
-        let group = self.my_group(live, w.stage, outer_idx, me);
+        let group = self.my_group(live, w.stage, frag as u16, outer_idx, me);
         let peers: Vec<usize> = group.iter().copied().filter(|&q| q != me).collect();
         // Both flavors send eagerly: (Δ_k, φ_k) to the gossip group, or
         // Δ_k alone to the whole live row (the DiLoCo flavor's
@@ -588,7 +596,10 @@ impl SyncStrategy for StreamingSync {
 }
 
 /// Eq. 2–3 restricted to one fragment, host-side:
-/// `δ ← α δ + (β/n) Σ Δ − γ (φ − (1/n) Σ φ)`, then `φ ← φ + δ`.
+/// `δ ← α δ + (β/n) Σ Δ − γ (φ − (1/n) Σ φ)`, then `φ ← φ + δ` — the
+/// uniform (`W = n`) special case of the async engine's
+/// [`fold_noloco_weighted`](super::boundary::fold_noloco_weighted), to
+/// which it delegates so the Eq. 2–3 arithmetic exists once.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn fold_noloco_fragment(
     phi: &mut [f32],
@@ -600,12 +611,7 @@ pub(crate) fn fold_noloco_fragment(
     beta: f32,
     gamma: f32,
 ) {
-    let inv_n = 1.0 / gn as f32;
-    for i in 0..phi.len() {
-        let d = alpha * delta[i] + beta * inv_n * dsum[i] - gamma * (phi[i] - inv_n * psum[i]);
-        delta[i] = d;
-        phi[i] += d;
-    }
+    super::boundary::fold_noloco_weighted(phi, delta, dsum, psum, gn as f32, alpha, beta, gamma);
 }
 
 /// DiLoCo's Nesterov step restricted to one fragment, host-side:
@@ -636,7 +642,7 @@ mod tests {
     fn streaming_cfg(fragments: usize, overlap: bool) -> TrainConfig {
         let mut cfg = presets::preset("tiny").unwrap();
         cfg.sync = SyncMode::Streaming;
-        cfg.stream = StreamConfig { fragments, overlap };
+        cfg.stream = StreamConfig { fragments, overlap, ..StreamConfig::default() };
         cfg
     }
 

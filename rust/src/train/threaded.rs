@@ -36,7 +36,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::TrainConfig;
 use crate::metrics::{perplexity, RunTrace};
-use crate::net::topo::ChurnSchedule;
+use crate::net::topo::{ChurnEvent, ChurnSchedule};
 use crate::net::Fabric;
 use crate::runtime::{find_build, Engine, Manifest};
 
@@ -58,13 +58,29 @@ pub struct ThreadedTrainer {
     /// NoLoCo has no collective — a DiLoCo all-reduce cannot skip a
     /// member. `None` = wait forever.
     gossip_timeout: Option<std::time::Duration>,
+    /// Fault injection for detection tests: crash `(replica, at_step)` —
+    /// the worker thread stops outright, announcing nothing.
+    silence: Option<(usize, u64)>,
 }
 
 impl ThreadedTrainer {
     /// New trainer; call [`ThreadedTrainer::run`] to execute. Any churn
     /// schedule on the config is honored (NoLoCo only).
     pub fn new(cfg: TrainConfig) -> ThreadedTrainer {
-        ThreadedTrainer { cfg, latency: None, val_batches: 4, gossip_timeout: None }
+        ThreadedTrainer { cfg, latency: None, val_batches: 4, gossip_timeout: None, silence: None }
+    }
+
+    /// Fault injection for failure-detection tests: the worker column
+    /// `replica` crashes outright at `at_step` — no announcement, no
+    /// schedule entry; survivors must *detect* the failure through
+    /// missed heartbeats (enable `[churn] detect` and set a gossip
+    /// timeout so collects from the dead peer degrade instead of
+    /// blocking). Meaningful with `pp = 1`: a crashed pipeline stage
+    /// would starve its consumers, which is stage-failure territory the
+    /// detector does not repair yet.
+    pub fn with_silence(mut self, replica: usize, at_step: u64) -> ThreadedTrainer {
+        self.silence = Some((replica, at_step));
+        self
     }
 
     /// Enable straggler-tolerant gossip: skip a peer that does not
@@ -116,6 +132,14 @@ impl ThreadedTrainer {
                 );
             }
         }
+        // Detection without a straggler timeout would block forever on a
+        // crashed peer's gossip collect — the timeout is what lets the
+        // fold degrade while the detector converges. Default one in.
+        let gossip_timeout = match (self.gossip_timeout, cfg.detect.enabled) {
+            (Some(t), _) => Some(t),
+            (None, true) => Some(std::time::Duration::from_secs(2)),
+            (None, false) => None,
+        };
         let (dp, pp) = (cfg.topology.dp, cfg.topology.pp);
         let dir = find_build(&cfg.artifacts_dir, &cfg.model.name, pp)?;
         let man = Manifest::load(&dir)?;
@@ -137,15 +161,18 @@ impl ThreadedTrainer {
                 let man = man.clone();
                 let cfg = cfg.clone();
                 let val_batches = self.val_batches;
-                let gossip_timeout = self.gossip_timeout;
+                let silence = self.silence;
                 handles.push(scope.spawn(move || -> Result<TrainReport> {
                     let (stage, replica) = (rank / dp, rank % dp);
                     let comm = FabricComm::new(ep, dp, gossip_timeout);
                     let mut eng = Engine::new(&dir)?;
-                    TrainerCore::new_single(
+                    let mut core = TrainerCore::new_single(
                         cfg, &mut eng, comm, man, stage, replica, num_mb, val_batches,
-                    )?
-                    .run()
+                    )?;
+                    if let Some((r, at)) = silence {
+                        core.set_silence(r, at, u64::MAX);
+                    }
+                    core.run()
                 }));
             }
             handles
@@ -202,6 +229,21 @@ impl ThreadedTrainer {
             trace.push(step, ts / n as f64, vs / n as f64, f64::NAN, lr);
         }
 
+        // Detection transitions: every surviving worker runs its own
+        // detector over the same boundary-granular heartbeats, so their
+        // observations coincide up to a one-boundary skew. Group same
+        // events together, collapse entries within one boundary of each
+        // other (keeping the earliest), then restore chronological order.
+        let mut detected: Vec<(u64, ChurnEvent)> = reports
+            .iter()
+            .flat_map(|r| r.detected.iter().copied())
+            .collect();
+        detected.sort_by_key(|&(b, e)| (e.node(), matches!(e, ChurnEvent::Join(_)), b));
+        detected.dedup_by(|later, earlier| {
+            later.1 == earlier.1 && later.0.saturating_sub(earlier.0) <= 1
+        });
+        detected.sort_by_key(|&(b, e)| (b, e.node(), matches!(e, ChurnEvent::Join(_))));
+
         let mut val_sum = 0.0;
         let mut val_n = 0usize;
         for r in &reports {
@@ -221,6 +263,7 @@ impl ThreadedTrainer {
             wall_secs: start.elapsed().as_secs_f64(),
             executions,
             executor: "threaded",
+            detected,
         })
     }
 }

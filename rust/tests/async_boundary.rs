@@ -1,0 +1,342 @@
+//! Bounded-staleness async boundary engine + heartbeat failure
+//! detection.
+//!
+//! Three layers of guarantees:
+//!
+//! * **Staleness property** (no artifacts): across random churn
+//!   schedules, staleness windows and boundary counts, no fold ever
+//!   admits peer state older than `outer.staleness − 1` boundaries.
+//! * **Golden equivalence** (artifact-gated): with `staleness = 1` the
+//!   config routes through the gated / streaming strategies untouched,
+//!   and the rest of the boundary machinery (heartbeats, stash expiry,
+//!   clocks) must not perturb those trajectories — bit-for-bit, on both
+//!   executors.
+//! * **Failure detection** (artifact-gated): a silenced replica is
+//!   suspected after `churn.misses` missed heartbeats and repaired
+//!   through the existing churn machinery — with *no* `ChurnSchedule`
+//!   entry.
+
+use noloco::config::{presets, Method, SyncMode, TrainConfig};
+use noloco::model::StageKind;
+use noloco::net::topo::ChurnEvent;
+use noloco::net::ChurnSchedule;
+use noloco::runtime::{find_build, Engine};
+use noloco::train::{
+    AccountingComm, AsyncGossipSync, BoundaryClock, SimTrainer, SyncStrategy, ThreadedTrainer,
+    WorkerState,
+};
+
+const ART: &str = "artifacts";
+
+fn have_artifacts(pp: usize) -> bool {
+    match find_build(ART, "tiny", pp) {
+        Ok(_) => true,
+        Err(e) => {
+            if std::env::var_os("NOLOCO_REQUIRE_ARTIFACTS").is_some() {
+                panic!("NOLOCO_REQUIRE_ARTIFACTS is set but tiny-pp{pp} is missing: {e}");
+            }
+            eprintln!("skipping: no tiny-pp{pp} artifacts; run `make artifacts` to enable");
+            false
+        }
+    }
+}
+
+fn base_cfg(dp: usize, pp: usize, steps: usize) -> TrainConfig {
+    let mut cfg = presets::preset("tiny").unwrap();
+    cfg.topology.dp = dp;
+    cfg.topology.pp = pp;
+    cfg.steps = steps;
+    cfg.warmup = 2;
+    cfg.eval_every = 0;
+    cfg.eval_tokens = 512;
+    cfg.outer.inner_steps = 2;
+    cfg
+}
+
+// ---------------------------------------------------------------------
+// Staleness property (no artifacts required)
+// ---------------------------------------------------------------------
+
+#[test]
+fn property_no_fold_admits_state_older_than_staleness() {
+    noloco::prop::run("bounded staleness admission", 60, |g| {
+        let dp = g.usize_in(2, 5).max(2);
+        let staleness = g.usize_in(1, 4).max(1);
+        let boundaries = 1 + g.rng().next_u64() % 8;
+        // Random churn over non-zero replicas: a leave and a rejoin at
+        // random steps (inner_steps = 1, so steps are boundaries).
+        let mut churn = ChurnSchedule::none();
+        for _ in 0..g.usize_in(0, 2) {
+            let node = 1 + (g.rng().next_u64() as usize) % (dp - 1).max(1);
+            let at = g.rng().next_u64() % boundaries.max(1);
+            churn = churn.leave(at, node);
+            churn = churn.join(at + 1 + g.rng().next_u64() % 4, node);
+        }
+        let mut cfg = presets::preset("tiny").unwrap();
+        cfg.topology.dp = dp;
+        cfg.outer.inner_steps = 1;
+        cfg.outer.staleness = staleness;
+        cfg.churn = churn.clone();
+        let mut s = AsyncGossipSync::from_config(&cfg);
+        let mut comm = AccountingComm::new();
+        let mut workers: Vec<WorkerState> = (0..dp)
+            .map(|r| {
+                let theta: Vec<f32> = (0..6).map(|i| (i + r + 1) as f32 * 0.25).collect();
+                let mut w =
+                    WorkerState::new(0, r, StageKind::Full, theta, Method::NoLoCo);
+                for p in w.phi.iter_mut() {
+                    *p *= 0.5;
+                }
+                w
+            })
+            .collect();
+        let clock = BoundaryClock::new(churn, dp, 1);
+        for b in 1..=boundaries {
+            let live: Vec<usize> =
+                (0..dp).filter(|&r| clock.live_at_boundary(r, b)).collect();
+            if live.len() < 2 {
+                continue;
+            }
+            for &r in &live {
+                s.offer_outer(&mut comm, &workers[r], &live, b).unwrap();
+            }
+            for &r in &live {
+                s.fold_boundary(&mut comm, &mut workers[r], &live, b).unwrap();
+            }
+        }
+        assert!(
+            s.max_admitted_age() < staleness as u64,
+            "fold admitted age {} under staleness {staleness}",
+            s.max_admitted_age()
+        );
+        for w in &workers {
+            assert!(w.phi.iter().all(|x| x.is_finite()));
+        }
+    });
+}
+
+#[test]
+fn clock_lag_equals_missed_boundaries() {
+    // Cross-check the two clock derivations on a nontrivial schedule.
+    let churn = ChurnSchedule::none().leave(3, 1).join(8, 1).leave(10, 2);
+    let clock = BoundaryClock::new(churn, 3, 2);
+    // Boundary b closes step 2b - 1: replica 1 dead over steps 3..7
+    // misses boundaries 2 (step 3), 3 (step 5), 4 (step 7); replica 2
+    // dead from step 10 misses boundary 6 (step 11) on.
+    for b in 1..=6u64 {
+        assert_eq!(clock.clock_of(0, b), b);
+    }
+    assert_eq!(clock.clock_of(1, 6), 3);
+    assert_eq!(clock.clock_of(2, 6), 5);
+}
+
+// ---------------------------------------------------------------------
+// Golden equivalence: staleness = 1 + boundary machinery ≡ the gated /
+// streaming trajectories (artifact-gated)
+// ---------------------------------------------------------------------
+
+/// Bitwise comparison of per-step losses (NaN-tolerant: both NaN is
+/// equal — a churned step nobody reported).
+fn assert_same_losses(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x.is_nan() && y.is_nan()) || x.to_bits() == y.to_bits(),
+            "{what}: step {i} diverged: {x} vs {y}"
+        );
+    }
+}
+
+/// The machinery knobs the async engine added, applied to a lockstep
+/// run: explicit staleness 1, the stash-expiry sweep, and heartbeat
+/// detection with nothing failing. None of it may touch the trajectory.
+fn with_boundary_machinery(mut cfg: TrainConfig) -> TrainConfig {
+    cfg.outer.staleness = 1;
+    cfg.stream.stash_age = 4;
+    cfg.detect.enabled = true;
+    cfg.detect.misses = 2;
+    cfg
+}
+
+#[test]
+fn staleness_one_reproduces_the_gated_trajectory_on_the_grid() {
+    if !have_artifacts(2) {
+        return;
+    }
+    let cfg = base_cfg(2, 2, 6);
+    let mut base = cfg.clone();
+    base.stream.stash_age = 0; // the pre-expiry behaviour
+    let dir = find_build(ART, "tiny", 2).unwrap();
+    let mut eng = Engine::new(&dir).unwrap();
+    let mut t = SimTrainer::new(base, &mut eng).unwrap();
+    let r0 = t.run().unwrap();
+    let phi0 = t.worker(0, 0).phi.clone();
+    let theta0 = t.worker(1, 1).theta.clone();
+
+    let mut eng = Engine::new(&dir).unwrap();
+    let mut t = SimTrainer::new(with_boundary_machinery(cfg), &mut eng).unwrap();
+    let r1 = t.run().unwrap();
+    assert_same_losses(&r0.step_train_loss, &r1.step_train_loss, "gated vs staleness-1");
+    assert_eq!(phi0, t.worker(0, 0).phi);
+    assert_eq!(theta0, t.worker(1, 1).theta);
+    assert!(r1.detected.is_empty(), "nothing failed, nothing may be detected");
+}
+
+#[test]
+fn staleness_one_reproduces_the_streaming_trajectory_on_the_grid() {
+    if !have_artifacts(2) {
+        return;
+    }
+    let mut cfg = base_cfg(2, 2, 6);
+    cfg.sync = SyncMode::Streaming;
+    cfg.stream.fragments = 2;
+    cfg.stream.overlap = true;
+    let mut base = cfg.clone();
+    base.stream.stash_age = 0;
+    let dir = find_build(ART, "tiny", 2).unwrap();
+    let mut eng = Engine::new(&dir).unwrap();
+    let r0 = SimTrainer::new(base, &mut eng).unwrap().run().unwrap();
+
+    let mut eng = Engine::new(&dir).unwrap();
+    let r1 = SimTrainer::new(with_boundary_machinery(cfg), &mut eng)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_same_losses(&r0.step_train_loss, &r1.step_train_loss, "streaming vs staleness-1");
+    assert_eq!(r0.final_val_nll.to_bits(), r1.final_val_nll.to_bits());
+}
+
+#[test]
+fn staleness_one_reproduces_the_gated_trajectory_on_the_fabric() {
+    if !have_artifacts(2) {
+        return;
+    }
+    let cfg = base_cfg(2, 2, 6);
+    let mut base = cfg.clone();
+    base.stream.stash_age = 0;
+    let r0 = ThreadedTrainer::new(base).run().unwrap();
+    let r1 = ThreadedTrainer::new(with_boundary_machinery(cfg)).run().unwrap();
+    assert_same_losses(&r0.step_train_loss, &r1.step_train_loss, "threaded gated vs staleness-1");
+    assert_eq!(r0.final_val_nll.to_bits(), r1.final_val_nll.to_bits());
+    assert!(r1.detected.is_empty());
+}
+
+// ---------------------------------------------------------------------
+// The async engine end-to-end (artifact-gated)
+// ---------------------------------------------------------------------
+
+#[test]
+fn async_engine_matches_across_executors_without_churn() {
+    // Churn-free: every age is 0, the weighted fold is the uniform group
+    // mean, and the two executors must follow the same trajectory (the
+    // train_modes float tolerance: separate PJRT engines, same
+    // algorithm).
+    if !have_artifacts(2) {
+        return;
+    }
+    let mut cfg = base_cfg(2, 2, 6);
+    cfg.outer.staleness = 3;
+    let dir = find_build(ART, "tiny", 2).unwrap();
+    let mut eng = Engine::new(&dir).unwrap();
+    let mut t = SimTrainer::new(cfg.clone(), &mut eng).unwrap();
+    let report = t.run().unwrap();
+    assert!(report.final_val_nll.is_finite());
+    assert_eq!(t.boundary_clocks(), &[3, 3]);
+    let r2 = ThreadedTrainer::new(cfg).run().unwrap();
+    assert_eq!(report.step_train_loss.len(), r2.step_train_loss.len());
+    for (i, (a, b)) in report.step_train_loss.iter().zip(&r2.step_train_loss).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-4,
+            "sim vs threaded async diverged at step {i}: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn async_engine_trains_through_churn_and_lags_the_clock() {
+    if !have_artifacts(2) {
+        return;
+    }
+    let mut cfg = base_cfg(2, 2, 12);
+    cfg.outer.staleness = 3;
+    // Replica 1 dead over steps 2..5: misses the boundaries closing at
+    // steps 3 and 5 (boundaries 2 and 3 of 6).
+    cfg.churn = ChurnSchedule::none().leave(2, 1).join(6, 1);
+    let dir = find_build(ART, "tiny", 2).unwrap();
+    let mut eng = Engine::new(&dir).unwrap();
+    let mut t = SimTrainer::new(cfg.clone(), &mut eng).unwrap();
+    let report = t.run().unwrap();
+    assert!(report.final_val_nll.is_finite());
+    assert_eq!(t.boundary_clocks(), &[6, 4], "replica 1 missed two boundaries");
+    // The core's clocks agree with the schedule-derived engine clocks.
+    let clock = BoundaryClock::new(cfg.churn.clone(), 2, cfg.outer.inner_steps);
+    assert_eq!(clock.clock_of(0, 6), 6);
+    assert_eq!(clock.clock_of(1, 6), 4);
+    // The fabric run repairs through adoption (grid reseeds at the join
+    // instead — the same executor asymmetry as the gated strategy), so
+    // trajectories are not compared; it must complete and train.
+    let r2 = ThreadedTrainer::new(cfg).run().unwrap();
+    assert!(r2.final_val_nll.is_finite());
+    assert!(r2
+        .step_train_loss
+        .iter()
+        .all(|l| l.is_finite() || l.is_nan()));
+}
+
+// ---------------------------------------------------------------------
+// Failure detection without a schedule (artifact-gated)
+// ---------------------------------------------------------------------
+
+#[test]
+fn silenced_replica_is_suspected_and_repaired_without_a_schedule() {
+    if !have_artifacts(2) {
+        return;
+    }
+    let mut cfg = base_cfg(2, 2, 12);
+    cfg.detect.enabled = true;
+    cfg.detect.misses = 2;
+    assert!(cfg.churn.is_empty(), "the whole point: no schedule entry");
+    let dir = find_build(ART, "tiny", 2).unwrap();
+    let mut eng = Engine::new(&dir).unwrap();
+    // Boundary b closes step 2b - 1; silencing steps [4, 10) suppresses
+    // the heartbeats of boundaries 3, 4, 5 and resumes at boundary 6.
+    let mut t = SimTrainer::new(cfg, &mut eng)
+        .unwrap()
+        .with_silence(1, 4, 10);
+    let report = t.run().unwrap();
+    assert_eq!(
+        report.detected,
+        vec![(4, ChurnEvent::Leave(1)), (6, ChurnEvent::Join(1))],
+        "suspect after 2 missed heartbeats, re-admit on resume"
+    );
+    assert!(report.final_val_nll.is_finite());
+    // The rejoin reused the donor-bootstrap repair: the run finished with
+    // both replicas live and training (finite losses on the tail steps).
+    assert!(report.step_train_loss.iter().all(|l| l.is_finite()));
+    assert!(t.is_live(1));
+}
+
+#[test]
+fn threaded_crash_is_detected_and_survivor_finishes() {
+    if !have_artifacts(1) {
+        return;
+    }
+    let mut cfg = base_cfg(2, 1, 12);
+    cfg.detect.enabled = true;
+    cfg.detect.misses = 2;
+    let report = ThreadedTrainer::new(cfg)
+        .with_gossip_timeout(std::time::Duration::from_millis(100))
+        .with_silence(1, 4)
+        .run()
+        .unwrap();
+    assert!(
+        report
+            .detected
+            .iter()
+            .any(|&(_, e)| e == ChurnEvent::Leave(1)),
+        "the survivor must detect the crash: {:?}",
+        report.detected
+    );
+    assert!(report.final_val_nll.is_finite(), "the survivor still trains and evals");
+    assert_eq!(report.executor, "threaded");
+}

@@ -30,6 +30,7 @@ fn quad_sim(omega: f64, gamma: f64, outer_steps: usize) -> QuadSim {
             gamma,
             group: 2,
             inner_steps: 10,
+            staleness: 1,
         },
         init_scale: 2.0,
     }

@@ -28,7 +28,7 @@ fn streaming_cfg(fragments: usize, overlap: bool) -> TrainConfig {
     cfg.eval_tokens = 512;
     cfg.outer.inner_steps = 2;
     cfg.sync = SyncMode::Streaming;
-    cfg.stream = StreamConfig { fragments, overlap };
+    cfg.stream = StreamConfig { fragments, overlap, ..StreamConfig::default() };
     cfg
 }
 
