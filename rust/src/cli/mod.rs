@@ -29,6 +29,7 @@ const VALUE_KEYS: &[&str] = &[
     "gamma", "warmup", "world", "sigma", "mu", "iters", "dim", "omega", "outer-steps",
     "batch-tokens", "csv", "topo", "regions", "churn", "payload", "pairing", "sync",
     "fragments", "overlap", "staleness", "stash-age", "detect", "detect-misses",
+    "trace-out", "metrics-out", "trace-level",
 ];
 
 impl Args {
@@ -207,6 +208,16 @@ pub fn train_config_from(args: &Args) -> Result<crate::config::TrainConfig, Stri
     if let Some(v) = args.opt_usize("detect-misses")? {
         cfg.detect.misses = v;
     }
+    if let Some(p) = args.opt("trace-out") {
+        cfg.obs.trace_out = Some(p.to_string());
+    }
+    if let Some(p) = args.opt("metrics-out") {
+        cfg.obs.metrics_out = Some(p.to_string());
+    }
+    if let Some(l) = args.opt("trace-level") {
+        cfg.obs.trace_level = crate::config::TraceLevel::parse(l)
+            .ok_or_else(|| format!("unknown trace level `{l}` (off|boundary|step)"))?;
+    }
     // --set model.hidden=128 style overrides, applied last.
     if !args.sets.is_empty() {
         let mut text = String::new();
@@ -329,6 +340,24 @@ mod tests {
         let a = parse(&["train", "--topo", "hier"]);
         let cfg = train_config_from(&a).unwrap();
         assert_eq!(cfg.net.preset, crate::config::NetPreset::HierarchicalDc);
+    }
+
+    #[test]
+    fn obs_flags_plumb_through() {
+        let a = parse(&[
+            "train", "--trace-out", "run.jsonl", "--metrics-out=live.json",
+            "--trace-level", "boundary",
+        ]);
+        let cfg = train_config_from(&a).unwrap();
+        assert_eq!(cfg.obs.trace_out.as_deref(), Some("run.jsonl"));
+        assert_eq!(cfg.obs.metrics_out.as_deref(), Some("live.json"));
+        assert_eq!(cfg.obs.trace_level, crate::config::TraceLevel::Boundary);
+        assert!(cfg.obs.enabled());
+        let a = parse(&["train", "--trace-level", "verbose"]);
+        assert!(train_config_from(&a).unwrap_err().contains("trace level"));
+        // No sink configured: observability stays off.
+        let cfg = train_config_from(&parse(&["train"])).unwrap();
+        assert!(!cfg.obs.enabled());
     }
 
     #[test]

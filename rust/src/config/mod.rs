@@ -500,6 +500,65 @@ impl Default for DetectConfig {
     }
 }
 
+/// Journal verbosity for the [`obs`](crate::obs) subsystem
+/// (`obs.trace_level` / `--trace-level`). Counters and the live metrics
+/// snapshot always accumulate on an enabled hub; the level only gates
+/// what the JSONL journal records.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TraceLevel {
+    /// No journal events — counters and metrics snapshots only.
+    Off,
+    /// Boundary-granular events only (drops the per-step `inner` lines).
+    Boundary,
+    /// Everything, including one `inner` event per inner step.
+    #[default]
+    Step,
+}
+
+impl TraceLevel {
+    /// Parse from a config / CLI string.
+    pub fn parse(s: &str) -> Option<TraceLevel> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "none" => Some(TraceLevel::Off),
+            "boundary" => Some(TraceLevel::Boundary),
+            "step" | "full" => Some(TraceLevel::Step),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for TraceLevel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TraceLevel::Off => write!(f, "off"),
+            TraceLevel::Boundary => write!(f, "boundary"),
+            TraceLevel::Step => write!(f, "step"),
+        }
+    }
+}
+
+/// Observability sinks (the `[obs]` TOML section / `--trace-out`,
+/// `--metrics-out`, `--trace-level` CLI flags). Both sinks default off;
+/// with neither set the hub is fully disabled and the training path pays
+/// one branch per event site.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ObsConfig {
+    /// JSONL run-journal path (`obs.trace_out` / `--trace-out`).
+    pub trace_out: Option<String>,
+    /// Live metrics snapshot path, atomically rewritten every boundary
+    /// (`obs.metrics_out` / `--metrics-out`).
+    pub metrics_out: Option<String>,
+    /// Journal verbosity (`obs.trace_level` / `--trace-level`).
+    pub trace_level: TraceLevel,
+}
+
+impl ObsConfig {
+    /// Whether any sink is configured (the hub is disabled otherwise).
+    pub fn enabled(&self) -> bool {
+        self.trace_out.is_some() || self.metrics_out.is_some()
+    }
+}
+
 /// Synthetic corpus flavour (dataset substitution; see DESIGN.md §4).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dataset {
@@ -571,6 +630,9 @@ pub struct TrainConfig {
     pub stream: StreamConfig,
     /// Heartbeat failure-detection knobs (the `[churn]` section).
     pub detect: DetectConfig,
+    /// Observability sinks (the `[obs]` section): run journal, live
+    /// metrics snapshot, journal verbosity.
+    pub obs: ObsConfig,
 }
 
 impl TrainConfig {
@@ -641,6 +703,15 @@ impl TrainConfig {
                 "outer.staleness" => set_usize(&mut self.outer.staleness, v),
                 "churn.detect" => set_bool(&mut self.detect.enabled, v),
                 "churn.misses" => set_usize(&mut self.detect.misses, v),
+                "obs.trace_out" => set_opt_string(&mut self.obs.trace_out, v),
+                "obs.metrics_out" => set_opt_string(&mut self.obs.metrics_out, v),
+                "obs.trace_level" => match v.as_str().and_then(TraceLevel::parse) {
+                    Some(l) => {
+                        self.obs.trace_level = l;
+                        true
+                    }
+                    None => false,
+                },
                 "outer.alpha" => set_f64(&mut self.outer.alpha, v),
                 "outer.beta" => set_f64(&mut self.outer.beta, v),
                 "outer.gamma" => set_f64(&mut self.outer.gamma, v),
@@ -726,14 +797,11 @@ impl TrainConfig {
             }
         }
         if self.outer.staleness > 1 {
-            if self.sync != SyncMode::Gated {
-                return Err(
-                    "outer.staleness > 1 selects the async boundary engine, which owns \
-                     its own overlap; combine it with `sync = \"gated\"` (streaming's \
-                     one-boundary overlap is the staleness = 1 special case)"
-                        .into(),
-                );
-            }
+            // Either sync mode is fine here: staleness > 1 selects the
+            // async boundary engine, which owns the overlap — `gated`
+            // and `streaming` collapse to the same bounded-staleness
+            // schedule (streaming's one-boundary overlap is the
+            // staleness = 1 special case of the same window).
             if self.stream.fragments == 0 || self.stream.fragments > 256 {
                 return Err(format!(
                     "outer.fragments must be in 1..=256 for per-fragment async gossip, got {}",
@@ -838,6 +906,20 @@ fn set_string(slot: &mut String, v: &toml::Value) -> bool {
     match v.as_str() {
         Some(s) => {
             *slot = s.to_string();
+            true
+        }
+        None => false,
+    }
+}
+
+fn set_opt_string(slot: &mut Option<String>, v: &toml::Value) -> bool {
+    match v.as_str() {
+        Some("") => {
+            *slot = None;
+            true
+        }
+        Some(s) => {
+            *slot = Some(s.to_string());
             true
         }
         None => false,
@@ -1014,12 +1096,15 @@ mod tests {
         c.apply_doc(&doc).unwrap();
         assert_eq!(c.outer.staleness, 3);
         c.validate().unwrap();
-        // Zero is rejected, and staleness > 1 needs NoLoCo + gated sync.
+        // Zero is rejected; staleness > 1 needs NoLoCo but accepts both
+        // sync modes (the async boundary engine owns the overlap either
+        // way — streaming's one-boundary overlap is its staleness = 1
+        // special case).
         c.outer.staleness = 0;
         assert!(c.validate().unwrap_err().contains("staleness"));
         c.outer.staleness = 2;
         c.sync = SyncMode::Streaming;
-        assert!(c.validate().unwrap_err().contains("staleness"));
+        c.validate().unwrap();
         c.sync = SyncMode::Gated;
         c.validate().unwrap();
         let mut d = presets::as_diloco(presets::preset("tiny").unwrap());
@@ -1044,6 +1129,32 @@ mod tests {
         c.detect.misses = 2;
         c = presets::as_diloco(c);
         assert!(c.validate().unwrap_err().contains("detect"));
+    }
+
+    #[test]
+    fn obs_knobs_parse_and_validate() {
+        let mut c = presets::preset("tiny").unwrap();
+        assert_eq!(c.obs, ObsConfig::default());
+        assert!(!c.obs.enabled());
+        let doc = Doc::parse(
+            "[obs]\ntrace_out = \"run.jsonl\"\nmetrics_out = \"live.json\"\n\
+             trace_level = \"boundary\"\n",
+        )
+        .unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.obs.trace_out.as_deref(), Some("run.jsonl"));
+        assert_eq!(c.obs.metrics_out.as_deref(), Some("live.json"));
+        assert_eq!(c.obs.trace_level, TraceLevel::Boundary);
+        assert!(c.obs.enabled());
+        c.validate().unwrap();
+        // Empty string clears a sink; bad levels are rejected.
+        let doc = Doc::parse("[obs]\ntrace_out = \"\"\n").unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.obs.trace_out, None);
+        let doc = Doc::parse("[obs]\ntrace_level = \"verbose\"\n").unwrap();
+        assert!(c.apply_doc(&doc).is_err());
+        assert_eq!(TraceLevel::parse("step"), Some(TraceLevel::Step));
+        assert_eq!(TraceLevel::Off.to_string(), "off");
     }
 
     #[test]

@@ -11,8 +11,8 @@
 //! optimizer settings, smaller width/depth/vocab.
 
 use super::{
-    Dataset, DetectConfig, Method, ModelConfig, NetTopoConfig, OuterConfig, PairingMode,
-    Routing, StreamConfig, SyncMode, TopologyConfig, TrainConfig,
+    Dataset, DetectConfig, Method, ModelConfig, NetTopoConfig, ObsConfig, OuterConfig,
+    PairingMode, Routing, StreamConfig, SyncMode, TopologyConfig, TrainConfig,
 };
 use crate::net::topo::ChurnSchedule;
 
@@ -55,6 +55,7 @@ fn base(model: ModelConfig, steps: usize, warmup: usize) -> TrainConfig {
         sync: SyncMode::Gated,
         stream: StreamConfig::default(),
         detect: DetectConfig::default(),
+        obs: ObsConfig::default(),
     }
 }
 

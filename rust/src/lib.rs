@@ -28,6 +28,7 @@
 //! | [`net`] | discrete-event latency simulator + in-process message fabric |
 //! | [`net::topo`] | heterogeneous WAN / hierarchical-DC topologies (regions, latency+bandwidth links, stragglers) + elastic membership (churn schedules, live sets, heartbeat failure detection) |
 //! | [`collective`] | tree / ring all-reduce, broadcast, pair exchange; topology- and payload-aware cost models |
+//! | [`obs`] | structured observability: JSONL run journal, counter registry, live metrics snapshots, deterministic cost-model baselines |
 //! | [`routing`] | random-permutation pipeline routing (§3.1), incl. live-subset plans under churn |
 //! | [`optim`] | Adam, LR schedules, DiLoCo Nesterov, NoLoCo modified Nesterov (Eq. 2) |
 //! | [`quad`] | Theorem-1 quadratic-loss convergence harness |
@@ -46,6 +47,7 @@ pub mod data;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod optim;
 pub mod prop;
 pub mod quad;

@@ -8,6 +8,8 @@
 //! * `topo`             — analyze the configured network topology (sync costs)
 //! * `artifacts`        — inventory the compiled artifact builds
 //! * `check`            — validate a config + artifact pairing, no training
+//! * `obs-smoke`        — emit a small sample trace journal (schema tooling)
+//! * `bench-baseline`   — write the deterministic cost-model baseline JSON
 //!
 //! Common options: `--preset NAME`, `--method fsdp|diloco|noloco`,
 //! `--dataset reddit|c4`, `--routing random|fixed`, `--steps N`, `--dp N`,
@@ -35,6 +37,8 @@ fn main() {
         "topo" => cmd_topo(&args),
         "artifacts" => cmd_artifacts(&args),
         "check" => cmd_check(&args),
+        "obs-smoke" => cmd_obs_smoke(&args),
+        "bench-baseline" => cmd_bench_baseline(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -61,7 +65,9 @@ fn print_help() {
            presets          list configuration presets\n\
            topo             analyze the configured network topology\n\
            artifacts        inventory compiled artifact builds\n\
-           check            validate config + artifacts without training\n\n\
+           check            validate config + artifacts without training\n\
+           obs-smoke        emit a small sample trace journal (--out FILE)\n\
+           bench-baseline   write the cost-model baseline JSON (--out FILE)\n\n\
          OPTIONS:\n\
            --preset NAME        preset (default: tiny); see `noloco presets`\n\
            --method M           fsdp | diloco | noloco\n\
@@ -90,6 +96,9 @@ fn print_help() {
            --stash-age N        sweep uncollected sync payloads after N boundaries (0 = never)\n\
            --detect on|off      heartbeat failure detection (NoLoCo)\n\
            --detect-misses K    consecutive missed heartbeats before a peer is declared dead\n\
+           --trace-out FILE     write the structured run journal (JSONL)\n\
+           --metrics-out FILE   atomically rewrite a live metrics snapshot every boundary\n\
+           --trace-level L      journal detail: off | boundary | step (default: step)\n\
            --payload BYTES      topo: sync payload (default: model size)"
     );
 }
@@ -142,6 +151,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         report.trace.write_csv(csv)?;
         println!("trace written to {csv}");
     }
+    if let Some(p) = &report.obs.journal_path {
+        println!("trace journal written to {p}");
+    }
     Ok(())
 }
 
@@ -183,6 +195,9 @@ fn cmd_train_threaded(args: &Args) -> anyhow::Result<()> {
     if let Some(csv) = args.opt("csv") {
         report.trace.write_csv(csv)?;
         println!("trace written to {csv}");
+    }
+    if let Some(p) = &report.obs.journal_path {
+        println!("trace journal written to {p}");
     }
     Ok(())
 }
@@ -313,5 +328,58 @@ fn cmd_check(args: &Args) -> anyhow::Result<()> {
     println!("config OK: {} ({})", cfg.model.name, cfg.outer.method);
     println!("artifacts OK: {}", dir.display());
     println!("gamma window (Eq. 74): ({lo:.4}, {hi:.4}); gamma = {}", cfg.outer.gamma);
+    Ok(())
+}
+
+/// Emit a small synthetic journal covering every event type — no
+/// artifacts or training needed. `scripts/check_trace_schema.sh`
+/// validates its output against the schema table.
+fn cmd_obs_smoke(args: &Args) -> anyhow::Result<()> {
+    use noloco::config::{ObsConfig, TraceLevel};
+    use noloco::obs::{Event, ObsHub};
+    use noloco::train::{AccountingComm, Communicator};
+
+    let out = args.opt("out").unwrap_or("obs_smoke.jsonl").to_string();
+    let obs_cfg = ObsConfig {
+        trace_out: Some(out.clone()),
+        metrics_out: None,
+        trace_level: TraceLevel::Step,
+    };
+    let hub = ObsHub::from_config(&obs_cfg)?;
+    let mut comm = AccountingComm::new();
+    comm.set_obs(hub.clone());
+
+    // A tiny synthetic run: replica 0 offers round-stashed state to
+    // replica 1 at boundary 1; replica 1 folds it one boundary later
+    // (age 1). The communicator journals the offer/fold pair itself;
+    // the trainer-side events are recorded directly.
+    hub.record(0, Event::InnerPhase { stage: 0, replica: 0, step: 0, loss: 2.5, dur_s: 0.01 });
+    let delta = vec![0.5f32; 8];
+    let phi = vec![1.0f32; 8];
+    comm.set_obs_boundary(1, 49);
+    comm.offer_round(0, 0, &[1], 1, 0, 2, &delta, &phi)?;
+    comm.set_obs_boundary(2, 99);
+    let folded = comm.collect_round(0, 1, 0, 1, 0, false)?;
+    anyhow::ensure!(folded.is_some(), "smoke fold found no stashed offer");
+    hub.record(99, Event::HeartbeatMiss { stage: 0, replica: 1, peer: 0, boundary: 2 });
+    hub.record(99, Event::Detect { boundary: 2, node: 0, join: false });
+    hub.record(99, Event::StashSwept { boundary: 2, dropped: 1 });
+    hub.record(100, Event::ChurnApplied { step: 100, node: 0, join: true });
+    let (bytes, msgs) = comm.wire_totals();
+    hub.record(99, Event::Boundary { outer_idx: 2, inner_s: 0.5, sync_s: 0.05, bytes, msgs });
+    hub.record(100, Event::Drain { outer_idx: 2, bytes: 0, msgs: 0 });
+    let report = hub.report();
+    let events: u64 = report.counters.iter().map(|(_, v)| v).sum();
+    println!("obs-smoke journal written to {out} ({events} events)");
+    Ok(())
+}
+
+/// Write the deterministic cost-model baseline (`BENCH_baseline.json`);
+/// `scripts/bench_check.sh` compares a fresh emission against the
+/// checked-in copy and fails on >10% drift.
+fn cmd_bench_baseline(args: &Args) -> anyhow::Result<()> {
+    let out = args.opt("out").unwrap_or("BENCH_baseline.json");
+    std::fs::write(out, noloco::obs::bench::baseline_json())?;
+    println!("cost-model baseline written to {out}");
     Ok(())
 }

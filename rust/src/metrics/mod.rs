@@ -85,17 +85,53 @@ impl RunTrace {
         self.weight_std.iter().map(|s| s / max).collect()
     }
 
-    /// Serialize to CSV.
+    /// Serialize to CSV. In memory, "not measured" is NaN; on disk it is
+    /// an *empty cell* — CSV has no NaN literal, and emitting one breaks
+    /// spreadsheet/pandas consumers. [`RunTrace::from_csv`] restores the
+    /// NaN convention on read-back.
     pub fn to_csv(&self) -> String {
+        fn cell(v: f64) -> String {
+            if v.is_finite() {
+                format!("{v}")
+            } else {
+                String::new()
+            }
+        }
         let mut out = String::from("step,train_loss,val_loss,weight_std,lr\n");
         for i in 0..self.steps.len() {
             let _ = writeln!(
                 out,
                 "{},{},{},{},{}",
-                self.steps[i], self.train_loss[i], self.val_loss[i], self.weight_std[i], self.lr[i]
+                self.steps[i],
+                cell(self.train_loss[i]),
+                cell(self.val_loss[i]),
+                cell(self.weight_std[i]),
+                cell(self.lr[i])
             );
         }
         out
+    }
+
+    /// Parse a trace back from [`RunTrace::to_csv`] output. Empty or
+    /// unparseable float cells become NaN (the in-memory "not measured"
+    /// convention); rows with a bad step index are skipped.
+    pub fn from_csv(text: &str) -> RunTrace {
+        let mut t = RunTrace::default();
+        for line in text.lines().skip(1) {
+            let mut cols = line.split(',');
+            let Some(step) = cols.next().and_then(|c| c.trim().parse::<usize>().ok()) else {
+                continue;
+            };
+            let mut f = |c: Option<&str>| {
+                c.and_then(|c| c.trim().parse::<f64>().ok()).unwrap_or(f64::NAN)
+            };
+            let train_loss = f(cols.next());
+            let val_loss = f(cols.next());
+            let weight_std = f(cols.next());
+            let lr = f(cols.next());
+            t.push(step, train_loss, val_loss, weight_std, lr);
+        }
+        t
     }
 
     /// Write CSV to a file, creating parent directories.
@@ -214,6 +250,24 @@ mod tests {
         assert!(csv.starts_with("step,"));
         assert!(csv.lines().count() == 2);
         assert!(csv.contains("10,2.5,2.4,0.1,0.0005"));
+    }
+
+    #[test]
+    fn csv_nan_cells_are_empty_and_roundtrip() {
+        let mut t = RunTrace::default();
+        t.push(10, 2.5, f64::NAN, 0.1, 5e-4);
+        t.push(20, 2.4, 2.3, f64::NAN, 4e-4);
+        let csv = t.to_csv();
+        // No literal NaN on disk — unmeasured cells are empty.
+        assert!(!csv.contains("NaN"), "{csv}");
+        assert!(csv.contains("10,2.5,,0.1,0.0005"), "{csv}");
+        assert!(csv.contains("20,2.4,2.3,,0.0004"), "{csv}");
+        let back = RunTrace::from_csv(&csv);
+        assert_eq!(back.steps, t.steps);
+        assert_eq!(back.train_loss, t.train_loss);
+        assert!(back.val_loss[0].is_nan() && (back.val_loss[1] - 2.3).abs() < 1e-12);
+        assert!(back.weight_std[1].is_nan() && (back.weight_std[0] - 0.1).abs() < 1e-12);
+        assert_eq!(back.lr, t.lr);
     }
 
     #[test]

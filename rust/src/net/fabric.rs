@@ -243,6 +243,16 @@ impl Endpoint {
         self.latency = Some((mu, sigma));
     }
 
+    /// This rank's wire totals so far: `(bytes_sent, msgs_sent)`. The
+    /// same counters [`Fabric::bytes_sent`] / [`Fabric::msgs_sent`]
+    /// expose fabric-wide, readable from the worker side — attempted
+    /// sends are counted even when fault injection drops them.
+    pub fn sent_totals(&self) -> (u64, u64) {
+        let bytes = self.shared.bytes_sent.lock().unwrap()[self.rank];
+        let msgs = self.shared.msgs_sent.lock().unwrap()[self.rank];
+        (bytes, msgs)
+    }
+
     /// Send `payload` to `to` under `tag`.
     pub fn send(&mut self, to: usize, tag: Tag, payload: Payload) {
         {
@@ -458,6 +468,9 @@ mod tests {
         assert_eq!(f.bytes_sent()[1], 400);
         assert_eq!(f.msgs_sent()[1], 1);
         assert_eq!(f.bytes_sent()[0], 0);
+        // The worker-side view agrees with the fabric-wide counters.
+        assert_eq!(e1.sent_totals(), (400, 1));
+        assert_eq!(_e0.sent_totals(), (0, 0));
     }
 
     #[test]

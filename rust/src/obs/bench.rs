@@ -1,0 +1,221 @@
+//! Deterministic cost-model baselines (`BENCH_baseline.json`).
+//!
+//! The CLI's `bench-topo` / `bench-outer-step` studies walk the
+//! collective cost models against a *sampling*
+//! [`SimClock`](crate::net::SimClock) — great for distributions, useless
+//! as a regression gate. This module redoes the same walks in **expected
+//! time**: every message costs [`Topology::expected_transfer`] (analytic
+//! `E[latency] + bytes/bandwidth`), so each metric is a pure function of
+//! the topology presets — no RNG, no wall clock, identical on every
+//! machine. `scripts/bench_check.sh` recomputes them (or mirrors the
+//! arithmetic in Python when no Rust toolchain is around) and fails on a
+//! >10% drift from the checked-in `BENCH_baseline.json`.
+//!
+//! Fixed scenario: `N = 24` workers, 8 MiB of outer state, the
+//! lan / wan / hier presets at their config defaults, adjacent gossip
+//! pairs `(0,1) … (22,23)`, and a deterministic staggered compute vector
+//! `0.25 + 0.05·(w mod 7)` for the idle-time model.
+
+use std::fmt::Write as _;
+
+use crate::collective::{boundary_idle_times, tree_children, tree_parent};
+use crate::config::{NetPreset, NetTopoConfig};
+use crate::net::topo::Topology;
+
+/// Worker count for every baseline metric.
+pub const BENCH_WORLD: usize = 24;
+/// Per-worker outer-state payload for the preset family (8 MiB).
+pub const BENCH_BYTES: u64 = 8 * 1024 * 1024;
+/// Payload for the `outer.*` family (the Fig. 5 outer-step scale).
+pub const OUTER_BYTES: u64 = 8_000_000;
+/// Fragment count for the streaming-overlap residual.
+pub const BENCH_FRAGMENTS: u64 = 4;
+/// Inner-phase seconds available to hide one streamed fragment behind.
+pub const STREAM_COMPUTE_S: f64 = 0.5;
+
+fn preset_topo(preset: NetPreset) -> Topology {
+    // Config defaults; seed is only consumed by the long-tail preset's
+    // straggler draws, which the baseline deliberately excludes.
+    NetTopoConfig { preset, ..NetTopoConfig::default() }.build(BENCH_WORLD, 0)
+}
+
+fn adjacent_pairs() -> Vec<(usize, usize)> {
+    (0..BENCH_WORLD / 2).map(|i| (2 * i, 2 * i + 1)).collect()
+}
+
+/// Mean expected pair-exchange time over the adjacent pairs.
+fn pair_mean(topo: &Topology, bytes: u64) -> f64 {
+    let pairs = adjacent_pairs();
+    pairs.iter().map(|&(a, b)| topo.expected_transfer(a, b, bytes)).sum::<f64>()
+        / pairs.len() as f64
+}
+
+/// Expected-time walk of the §5.3 binary-tree all-reduce: reduce to
+/// rank 0, broadcast back down, every edge at its expected transfer.
+fn tree_allreduce_expected(topo: &Topology, bytes: u64) -> f64 {
+    let n = BENCH_WORLD;
+    let mut ready = vec![0.0f64; n];
+    // Reduce upward: children (2r+1, 2r+2) have higher ranks, so a
+    // reverse sweep finalizes every child before its parent folds it.
+    for r in (0..n).rev() {
+        for c in tree_children(r, n) {
+            let arrive = ready[c] + topo.expected_transfer(c, r, bytes);
+            if arrive > ready[r] {
+                ready[r] = arrive;
+            }
+        }
+    }
+    // Broadcast downward: parents have lower ranks.
+    for r in 0..n {
+        if let Some(p) = tree_parent(r) {
+            let arrive = ready[p] + topo.expected_transfer(p, r, bytes);
+            if arrive > ready[r] {
+                ready[r] = arrive;
+            }
+        }
+    }
+    ready.iter().fold(0.0, |a, &b| a.max(b))
+}
+
+/// Expected-time walk of a ring all-reduce: `2(n−1)` generations of
+/// chunked neighbor sends, every worker sending simultaneously from a
+/// snapshot of the previous generation.
+fn ring_allreduce_expected(topo: &Topology, bytes: u64) -> f64 {
+    let n = BENCH_WORLD;
+    let chunk = bytes.div_ceil(n as u64);
+    let mut ready = vec![0.0f64; n];
+    for _gen in 0..2 * (n - 1) {
+        let start = ready.clone();
+        for r in 0..n {
+            let to = (r + 1) % n;
+            let arrive = start[r] + topo.expected_transfer(r, to, chunk);
+            ready[to] = start[to].max(arrive);
+        }
+    }
+    ready.iter().fold(0.0, |a, &b| a.max(b))
+}
+
+/// Streaming-overlap residual: the payload splits into
+/// [`BENCH_FRAGMENTS`] chunks, each pair exchange hides behind
+/// [`STREAM_COMPUTE_S`] of inner compute; what still pokes out (summed
+/// over fragments, averaged over pairs) is the visible boundary cost.
+fn streamed_residual(topo: &Topology, bytes: u64) -> f64 {
+    let chunk = bytes.div_ceil(BENCH_FRAGMENTS);
+    let pairs = adjacent_pairs();
+    let mut acc = 0.0;
+    for &(a, b) in &pairs {
+        let t = topo.expected_transfer(a, b, chunk);
+        acc += (t - STREAM_COMPUTE_S).max(0.0) * BENCH_FRAGMENTS as f64;
+    }
+    acc / pairs.len() as f64
+}
+
+/// The full baseline: `(metric name, seconds-or-ratio)` rows in emission
+/// order. Deterministic — two calls return identical values.
+pub fn cost_model_baseline() -> Vec<(String, f64)> {
+    let presets = [
+        ("lan", NetPreset::SingleSwitchLan),
+        ("wan", NetPreset::MultiRegionWan),
+        ("hier", NetPreset::HierarchicalDc),
+    ];
+    let pairs = adjacent_pairs();
+    let computes: Vec<f64> = (0..BENCH_WORLD).map(|w| 0.25 + 0.05 * (w % 7) as f64).collect();
+    let mut out = Vec::new();
+    for (name, preset) in presets {
+        let topo = preset_topo(preset);
+        out.push((format!("{name}.pair_mean_s"), pair_mean(&topo, BENCH_BYTES)));
+        out.push((format!("{name}.tree_allreduce_s"), tree_allreduce_expected(&topo, BENCH_BYTES)));
+        out.push((format!("{name}.ring_allreduce_s"), ring_allreduce_expected(&topo, BENCH_BYTES)));
+        out.push((format!("{name}.streamed_residual_s"), streamed_residual(&topo, BENCH_BYTES)));
+        let (lock, asy) = boundary_idle_times(&topo, &pairs, &computes, BENCH_BYTES);
+        out.push((format!("{name}.lockstep_idle_s"), lock));
+        out.push((format!("{name}.async_idle_s"), asy));
+    }
+    // Outer-step family (Fig. 5's comparison) on the WAN preset: one
+    // NoLoCo gossip pair vs the DiLoCo blocking tree all-reduce.
+    let wan = preset_topo(NetPreset::MultiRegionWan);
+    let pair = pair_mean(&wan, OUTER_BYTES);
+    let tree = tree_allreduce_expected(&wan, OUTER_BYTES);
+    out.push(("outer.noloco_pair_s".to_string(), pair));
+    out.push(("outer.diloco_tree_s".to_string(), tree));
+    out.push(("outer.speedup".to_string(), tree / pair));
+    out
+}
+
+/// Serialize [`cost_model_baseline`] into the `BENCH_baseline.json`
+/// shape: `{"v":1,"metrics":{"<name>":<value>,…}}` (floats in Rust's
+/// shortest round-trip form, newline-terminated).
+pub fn baseline_json() -> String {
+    let mut s = String::from("{\"v\":1,\"metrics\":{");
+    for (i, (k, v)) in cost_model_baseline().iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "\"{k}\":{v}");
+    }
+    s.push_str("}}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_is_deterministic() {
+        assert_eq!(cost_model_baseline(), cost_model_baseline());
+        assert_eq!(baseline_json(), baseline_json());
+    }
+
+    fn metric(name: &str) -> f64 {
+        cost_model_baseline()
+            .into_iter()
+            .find(|(k, _)| k == name)
+            .unwrap_or_else(|| panic!("missing metric {name}"))
+            .1
+    }
+
+    #[test]
+    fn lan_is_faster_than_wan_everywhere() {
+        for m in ["pair_mean_s", "tree_allreduce_s", "ring_allreduce_s"] {
+            assert!(
+                metric(&format!("lan.{m}")) < metric(&format!("wan.{m}")),
+                "lan should beat wan on {m}"
+            );
+        }
+    }
+
+    #[test]
+    fn async_idle_never_exceeds_lockstep_idle() {
+        for p in ["lan", "wan", "hier"] {
+            let lock = metric(&format!("{p}.lockstep_idle_s"));
+            let asy = metric(&format!("{p}.async_idle_s"));
+            assert!(asy <= lock + 1e-12, "{p}: async {asy} > lockstep {lock}");
+        }
+    }
+
+    #[test]
+    fn outer_speedup_favors_gossip_on_wan() {
+        // A 24-worker blocking tree crossing WAN links must cost more
+        // than one adjacent (intra-region) gossip pair.
+        assert!(metric("outer.speedup") > 1.0);
+        let ratio = metric("outer.diloco_tree_s") / metric("outer.noloco_pair_s");
+        assert!((metric("outer.speedup") - ratio).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lan_pair_mean_matches_closed_form() {
+        // Single switch, constant 1 ms at 1.25 GB/s: E = 1e-3 + B/1.25e9.
+        let expect = 1e-3 + BENCH_BYTES as f64 / 1.25e9;
+        assert!((metric("lan.pair_mean_s") - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_shape_has_version_and_all_metrics() {
+        let s = baseline_json();
+        assert!(s.starts_with("{\"v\":1,\"metrics\":{"));
+        for (k, _) in cost_model_baseline() {
+            assert!(s.contains(&format!("\"{k}\":")), "missing {k} in {s}");
+        }
+    }
+}

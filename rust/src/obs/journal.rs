@@ -1,0 +1,322 @@
+//! The event journal: a versioned JSONL schema for boundary-level runs.
+//!
+//! One [`Event`] per state transition the training stack cares about —
+//! inner phases, offer/fold traffic, heartbeat misses and detections,
+//! churn, stash sweeps, per-boundary wire deltas, and the final drain.
+//! Every line carries the schema version (`"v"`), a wall-clock stamp in
+//! seconds since the hub was created (`"wall"`), a sim-clock stamp
+//! (`"sim"`, the global inner-step index at emission) and the event name
+//! (`"ev"`); the remaining keys are flat event-specific fields.
+//!
+//! The encoding is hand-rolled flat JSON — one object per line, no
+//! nesting, no string escapes (all strings in the schema are bare
+//! identifiers). [`parse_line`] is the matching minimal reader, enough
+//! for the invariant tests and `scripts/check_trace_schema.sh` to
+//! round-trip a journal without a JSON dependency. JSON has no NaN, so
+//! non-finite floats encode as `null` and parse back as NaN.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Journal schema version, written as `"v"` on every line. Bump when an
+/// event gains/loses fields or changes meaning; readers should reject
+/// versions they do not know.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// One journal entry. Integer ranks (`stage`, `replica`, `peer`, `node`)
+/// index the DP × PP grid; `round`/`boundary`/`outer_idx` count outer
+/// boundaries (1-based, matching the trainers); `frag` is a fragment
+/// index under `outer.fragments`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// One inner optimization step on one worker: step index, training
+    /// loss (NaN when the replica sat out) and phase duration.
+    InnerPhase { stage: usize, replica: usize, step: u64, loss: f64, dur_s: f64 },
+    /// Outer state offered to a peer: `(round, frag)` identifies the
+    /// offer, `bytes` its wire payload size.
+    Offer { stage: usize, replica: usize, peer: usize, round: u64, frag: u16, bytes: u64 },
+    /// A peer offer folded into the local outer step. `age` = current
+    /// boundary minus the offer's round (0 = fresh).
+    Fold { stage: usize, replica: usize, peer: usize, round: u64, frag: u16, age: u64, bytes: u64 },
+    /// A heartbeat window closed with no signal from `peer`.
+    HeartbeatMiss { stage: usize, replica: usize, peer: usize, boundary: u64 },
+    /// The miss counter crossed the detection threshold (or a join was
+    /// observed): the failure detector's verdict on `node`.
+    Detect { boundary: u64, node: usize, join: bool },
+    /// The churn schedule dropped (`join = false`) or rejoined
+    /// (`join = true`) `node` at `step`.
+    ChurnApplied { step: u64, node: usize, join: bool },
+    /// The communicator's stash sweep dropped `dropped` expired entries
+    /// at `boundary`.
+    StashSwept { boundary: u64, dropped: u64 },
+    /// Per-boundary breakdown: inner-phase seconds, boundary-sync
+    /// seconds, and the wire traffic delta (`bytes`/`msgs`) attributed
+    /// to this boundary passage. Summing `bytes`/`msgs` over all
+    /// `Boundary` events plus the final [`Event::Drain`] reproduces the
+    /// run's wire totals exactly.
+    Boundary { outer_idx: u64, inner_s: f64, sync_s: f64, bytes: u64, msgs: u64 },
+    /// End-of-run drain: residual wire traffic after the last boundary
+    /// (final in-flight folds, validation shipping, etc.).
+    Drain { outer_idx: u64, bytes: u64, msgs: u64 },
+}
+
+impl Event {
+    /// The `"ev"` name this event serializes under.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Event::InnerPhase { .. } => "inner",
+            Event::Offer { .. } => "offer",
+            Event::Fold { .. } => "fold",
+            Event::HeartbeatMiss { .. } => "hb_miss",
+            Event::Detect { .. } => "detect",
+            Event::ChurnApplied { .. } => "churn",
+            Event::StashSwept { .. } => "sweep",
+            Event::Boundary { .. } => "boundary",
+            Event::Drain { .. } => "drain",
+        }
+    }
+
+    /// Encode as one JSONL line (no trailing newline).
+    pub fn to_json(&self, wall: f64, sim: u64) -> String {
+        let mut s = String::with_capacity(160);
+        let _ = write!(
+            s,
+            "{{\"v\":{SCHEMA_VERSION},\"wall\":{wall:.6},\"sim\":{sim},\"ev\":\"{}\"",
+            self.name()
+        );
+        match self {
+            Event::InnerPhase { stage, replica, step, loss, dur_s } => {
+                push_u64(&mut s, "stage", *stage as u64);
+                push_u64(&mut s, "replica", *replica as u64);
+                push_u64(&mut s, "step", *step);
+                push_f64(&mut s, "loss", *loss);
+                push_f64(&mut s, "dur_s", *dur_s);
+            }
+            Event::Offer { stage, replica, peer, round, frag, bytes } => {
+                push_u64(&mut s, "stage", *stage as u64);
+                push_u64(&mut s, "replica", *replica as u64);
+                push_u64(&mut s, "peer", *peer as u64);
+                push_u64(&mut s, "round", *round);
+                push_u64(&mut s, "frag", u64::from(*frag));
+                push_u64(&mut s, "bytes", *bytes);
+            }
+            Event::Fold { stage, replica, peer, round, frag, age, bytes } => {
+                push_u64(&mut s, "stage", *stage as u64);
+                push_u64(&mut s, "replica", *replica as u64);
+                push_u64(&mut s, "peer", *peer as u64);
+                push_u64(&mut s, "round", *round);
+                push_u64(&mut s, "frag", u64::from(*frag));
+                push_u64(&mut s, "age", *age);
+                push_u64(&mut s, "bytes", *bytes);
+            }
+            Event::HeartbeatMiss { stage, replica, peer, boundary } => {
+                push_u64(&mut s, "stage", *stage as u64);
+                push_u64(&mut s, "replica", *replica as u64);
+                push_u64(&mut s, "peer", *peer as u64);
+                push_u64(&mut s, "boundary", *boundary);
+            }
+            Event::Detect { boundary, node, join } => {
+                push_u64(&mut s, "boundary", *boundary);
+                push_u64(&mut s, "node", *node as u64);
+                push_bool(&mut s, "join", *join);
+            }
+            Event::ChurnApplied { step, node, join } => {
+                push_u64(&mut s, "step", *step);
+                push_u64(&mut s, "node", *node as u64);
+                push_bool(&mut s, "join", *join);
+            }
+            Event::StashSwept { boundary, dropped } => {
+                push_u64(&mut s, "boundary", *boundary);
+                push_u64(&mut s, "dropped", *dropped);
+            }
+            Event::Boundary { outer_idx, inner_s, sync_s, bytes, msgs } => {
+                push_u64(&mut s, "outer_idx", *outer_idx);
+                push_f64(&mut s, "inner_s", *inner_s);
+                push_f64(&mut s, "sync_s", *sync_s);
+                push_u64(&mut s, "bytes", *bytes);
+                push_u64(&mut s, "msgs", *msgs);
+            }
+            Event::Drain { outer_idx, bytes, msgs } => {
+                push_u64(&mut s, "outer_idx", *outer_idx);
+                push_u64(&mut s, "bytes", *bytes);
+                push_u64(&mut s, "msgs", *msgs);
+            }
+        }
+        s.push('}');
+        s
+    }
+}
+
+/// Event-specific required keys per `"ev"` name (beyond the envelope
+/// `v`/`wall`/`sim`/`ev` present on every line). `None` for unknown
+/// names. `scripts/check_trace_schema.sh` embeds the same table.
+pub fn required_keys(ev: &str) -> Option<&'static [&'static str]> {
+    Some(match ev {
+        "inner" => &["stage", "replica", "step", "loss", "dur_s"],
+        "offer" => &["stage", "replica", "peer", "round", "frag", "bytes"],
+        "fold" => &["stage", "replica", "peer", "round", "frag", "age", "bytes"],
+        "hb_miss" => &["stage", "replica", "peer", "boundary"],
+        "detect" => &["boundary", "node", "join"],
+        "churn" => &["step", "node", "join"],
+        "sweep" => &["boundary", "dropped"],
+        "boundary" => &["outer_idx", "inner_s", "sync_s", "bytes", "msgs"],
+        "drain" => &["outer_idx", "bytes", "msgs"],
+        _ => return None,
+    })
+}
+
+pub(crate) fn push_f64(s: &mut String, key: &str, v: f64) {
+    if v.is_finite() {
+        let _ = write!(s, ",\"{key}\":{v:.6}");
+    } else {
+        let _ = write!(s, ",\"{key}\":null");
+    }
+}
+
+pub(crate) fn push_u64(s: &mut String, key: &str, v: u64) {
+    let _ = write!(s, ",\"{key}\":{v}");
+}
+
+pub(crate) fn push_bool(s: &mut String, key: &str, v: bool) {
+    let _ = write!(s, ",\"{key}\":{v}");
+}
+
+/// A value parsed back out of a journal line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonVal {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+    Null,
+}
+
+impl JsonVal {
+    /// Numeric view: numbers as themselves, `null` as NaN (the inverse
+    /// of the NaN → `null` encoding), everything else `None`.
+    pub fn num(&self) -> Option<f64> {
+        match self {
+            JsonVal::Num(x) => Some(*x),
+            JsonVal::Null => Some(f64::NAN),
+            _ => None,
+        }
+    }
+
+    /// Unsigned-integer view of a numeric value.
+    pub fn uint(&self) -> Option<u64> {
+        match self {
+            JsonVal::Num(x) if x.is_finite() && *x >= 0.0 => Some(*x as u64),
+            _ => None,
+        }
+    }
+
+    /// String view.
+    pub fn str_val(&self) -> Option<&str> {
+        match self {
+            JsonVal::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Boolean view.
+    pub fn boolean(&self) -> Option<bool> {
+        match self {
+            JsonVal::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse one flat journal line back into a key → value map. Returns
+/// `None` on anything that is not a single flat JSON object in the
+/// journal's dialect (no nesting, no escaped quotes).
+pub fn parse_line(line: &str) -> Option<BTreeMap<String, JsonVal>> {
+    let s = line.trim();
+    let mut rest = s.strip_prefix('{')?.strip_suffix('}')?.trim_start();
+    let mut out = BTreeMap::new();
+    while !rest.is_empty() {
+        rest = rest.strip_prefix('"')?;
+        let kend = rest.find('"')?;
+        let key = rest[..kend].to_string();
+        rest = rest[kend + 1..].trim_start().strip_prefix(':')?.trim_start();
+        let (val, used) = if let Some(r) = rest.strip_prefix('"') {
+            let vend = r.find('"')?;
+            (JsonVal::Str(r[..vend].to_string()), vend + 2)
+        } else if rest.starts_with("true") {
+            (JsonVal::Bool(true), 4)
+        } else if rest.starts_with("false") {
+            (JsonVal::Bool(false), 5)
+        } else if rest.starts_with("null") {
+            (JsonVal::Null, 4)
+        } else {
+            let vend = rest
+                .find(|c: char| !(c.is_ascii_digit() || "+-.eE".contains(c)))
+                .unwrap_or(rest.len());
+            (JsonVal::Num(rest[..vend].parse().ok()?), vend)
+        };
+        out.insert(key, val);
+        rest = rest[used..].trim_start();
+        match rest.strip_prefix(',') {
+            Some(r) => rest = r.trim_start(),
+            None if rest.is_empty() => {}
+            None => return None,
+        }
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_event_roundtrips_through_parse_line() {
+        let events = vec![
+            Event::InnerPhase { stage: 0, replica: 1, step: 7, loss: 2.5, dur_s: 0.125 },
+            Event::Offer { stage: 0, replica: 1, peer: 2, round: 3, frag: 1, bytes: 4096 },
+            Event::Fold { stage: 0, replica: 1, peer: 2, round: 3, frag: 1, age: 2, bytes: 4096 },
+            Event::HeartbeatMiss { stage: 1, replica: 0, peer: 3, boundary: 5 },
+            Event::Detect { boundary: 5, node: 3, join: false },
+            Event::ChurnApplied { step: 40, node: 3, join: true },
+            Event::StashSwept { boundary: 6, dropped: 2 },
+            Event::Boundary { outer_idx: 6, inner_s: 1.5, sync_s: 0.25, bytes: 8192, msgs: 4 },
+            Event::Drain { outer_idx: 6, bytes: 128, msgs: 1 },
+        ];
+        for (i, ev) in events.iter().enumerate() {
+            let line = ev.to_json(1.25, i as u64);
+            let m = parse_line(&line).expect("line parses");
+            assert_eq!(m["v"].uint(), Some(u64::from(SCHEMA_VERSION)));
+            assert_eq!(m["sim"].uint(), Some(i as u64));
+            assert!((m["wall"].num().unwrap() - 1.25).abs() < 1e-9);
+            let name = m["ev"].str_val().unwrap();
+            assert_eq!(name, ev.name());
+            for key in required_keys(name).expect("known event") {
+                assert!(m.contains_key(*key), "{name} line missing {key}: {line}");
+            }
+        }
+    }
+
+    #[test]
+    fn nan_loss_encodes_as_null_and_parses_back_as_nan() {
+        let ev = Event::InnerPhase { stage: 0, replica: 0, step: 1, loss: f64::NAN, dur_s: 0.5 };
+        let line = ev.to_json(0.0, 1);
+        assert!(line.contains("\"loss\":null"), "{line}");
+        assert!(!line.contains("NaN"), "{line}");
+        let m = parse_line(&line).unwrap();
+        assert!(m["loss"].num().unwrap().is_nan());
+    }
+
+    #[test]
+    fn parse_line_rejects_trailing_garbage() {
+        assert!(parse_line("{\"v\":1} extra").is_none());
+        assert!(parse_line("{\"v\":1,\"ev\":\"inner\"").is_none());
+        assert!(parse_line("not json").is_none());
+    }
+
+    #[test]
+    fn booleans_and_negative_exponents_parse() {
+        let m = parse_line("{\"join\":true,\"x\":1.5e-3,\"y\":false}").unwrap();
+        assert_eq!(m["join"].boolean(), Some(true));
+        assert_eq!(m["y"].boolean(), Some(false));
+        assert!((m["x"].num().unwrap() - 1.5e-3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,415 @@
+//! Structured observability: run journal, counter registry, live
+//! metrics snapshots and the cost-model bench emitter.
+//!
+//! NoLoCo's claims are about *when* communication happens — overlap
+//! behind the inner phase, bounded-staleness folds, no global blocking
+//! collective — so the evidence has to be boundary-granular, not a
+//! post-hoc sum. This module is that evidence layer:
+//!
+//! * [`journal`] — the versioned JSONL event schema ([`Event`]) plus a
+//!   minimal flat-JSON reader ([`parse_line`]) for tests and tooling.
+//! * [`ObsHub`] — the shared sink everything reports into. A disabled
+//!   hub is a `None` behind a cheap clone: every `record`/`count` call
+//!   is a no-op, so untraced runs pay one branch per event site. An
+//!   enabled hub derives the counter registry and the per-boundary
+//!   breakdown from the same event stream it journals — the journal is
+//!   ground truth, the counters are a fold over it.
+//! * Live metrics: with `--metrics-out <path>` the hub atomically
+//!   rewrites a one-object JSON snapshot every boundary (current loss,
+//!   weight-σ, wire totals, fold-age histogram) — the file-based seed
+//!   of ROADMAP item 5's live endpoint.
+//! * [`bench`] — deterministic expected-cost walks over the net-topology
+//!   presets, serialized into `BENCH_baseline.json` and guarded by
+//!   `scripts/bench_check.sh`.
+//!
+//! Wire attribution invariant: the trainers emit one [`Event::Boundary`]
+//! per boundary passage carrying the *delta* of the communicator's wire
+//! totals since the previous capture, plus one final [`Event::Drain`]
+//! with the residual. Summing `bytes`/`msgs` over those events therefore
+//! reproduces `TrainReport.comm.bytes_sent`/`msgs_sent` bit-for-bit —
+//! at every trace level, since `boundary`/`drain` events are never
+//! filtered out of an enabled journal.
+
+pub mod bench;
+pub mod journal;
+
+pub use journal::{parse_line, required_keys, Event, JsonVal, SCHEMA_VERSION};
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{ObsConfig, TraceLevel};
+
+/// One per-boundary idle/overlap row, derived from [`Event::Boundary`].
+/// On the threaded executor each worker contributes its own rows, so a
+/// boundary index appears once per worker that passed it.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BoundaryRow {
+    /// Outer boundary index (1-based).
+    pub outer_idx: u64,
+    /// Seconds spent in the inner phase leading up to this boundary.
+    pub inner_s: f64,
+    /// Seconds spent in boundary synchronization (offer + fold +
+    /// bookkeeping) — the part overlap is supposed to hide.
+    pub sync_s: f64,
+    /// Wire bytes attributed to this boundary passage.
+    pub bytes: u64,
+    /// Wire messages attributed to this boundary passage.
+    pub msgs: u64,
+}
+
+/// Post-hoc summary of the hub's view of a run, carried on
+/// `TrainReport.obs`. Default (all empty) when observability was off.
+#[derive(Clone, Debug, Default)]
+pub struct ObsReport {
+    /// Journal path, when `--trace-out` wrote one.
+    pub journal_path: Option<String>,
+    /// Counter registry contents, sorted by key.
+    pub counters: Vec<(String, u64)>,
+    /// Fold-admission age histogram: `fold_age_hist[a]` counts folds
+    /// that admitted an offer `a` boundaries old.
+    pub fold_age_hist: Vec<u64>,
+    /// Per-boundary breakdown rows in emission order.
+    pub boundaries: Vec<BoundaryRow>,
+}
+
+impl ObsReport {
+    /// Look up a counter by key (0 when absent).
+    pub fn counter(&self, key: &str) -> u64 {
+        self.counters.iter().find(|(k, _)| k == key).map(|(_, v)| *v).unwrap_or(0)
+    }
+
+    /// Sum of `bytes` over all boundary rows (the drained residual is
+    /// *not* included — see the module docs for the full invariant).
+    pub fn boundary_bytes(&self) -> u64 {
+        self.boundaries.iter().map(|r| r.bytes).sum()
+    }
+}
+
+struct ObsInner {
+    level: TraceLevel,
+    start: Instant,
+    writer: Option<BufWriter<File>>,
+    journal_path: Option<String>,
+    metrics_path: Option<String>,
+    events: Vec<Event>,
+    counters: BTreeMap<String, u64>,
+    fold_age_hist: Vec<u64>,
+    boundaries: Vec<BoundaryRow>,
+}
+
+impl ObsInner {
+    fn bump(&mut self, key: &str, n: u64) {
+        *self.counters.entry(key.to_string()).or_insert(0) += n;
+    }
+
+    fn absorb(&mut self, sim: u64, ev: Event) {
+        // Counters and derived tables always fold, at every level.
+        match &ev {
+            Event::InnerPhase { .. } => self.bump("inner_phases", 1),
+            Event::Offer { .. } => self.bump("offers", 1),
+            Event::Fold { age, .. } => {
+                self.bump("folds", 1);
+                let a = *age as usize;
+                if self.fold_age_hist.len() <= a {
+                    self.fold_age_hist.resize(a + 1, 0);
+                }
+                self.fold_age_hist[a] += 1;
+            }
+            Event::HeartbeatMiss { .. } => self.bump("heartbeat_misses", 1),
+            Event::Detect { .. } => self.bump("detections", 1),
+            Event::ChurnApplied { .. } => self.bump("churn_applied", 1),
+            Event::StashSwept { dropped, .. } => self.bump("stash_swept", *dropped),
+            Event::Boundary { outer_idx, inner_s, sync_s, bytes, msgs } => {
+                self.bump("boundaries", 1);
+                self.boundaries.push(BoundaryRow {
+                    outer_idx: *outer_idx,
+                    inner_s: *inner_s,
+                    sync_s: *sync_s,
+                    bytes: *bytes,
+                    msgs: *msgs,
+                });
+            }
+            Event::Drain { .. } => self.bump("drains", 1),
+        }
+        // The journal (and its in-memory mirror) honors the trace level.
+        let admit = match self.level {
+            TraceLevel::Off => false,
+            TraceLevel::Boundary => !matches!(ev, Event::InnerPhase { .. }),
+            TraceLevel::Step => true,
+        };
+        if !admit {
+            return;
+        }
+        if let Some(w) = self.writer.as_mut() {
+            // A full disk must not kill a training run mid-boundary.
+            let _ = writeln!(w, "{}", ev.to_json(self.start.elapsed().as_secs_f64(), sim));
+        }
+        self.events.push(ev);
+    }
+}
+
+/// The shared observability sink. Cheap to clone (an `Option<Arc>`);
+/// a disabled hub makes every reporting call a no-op branch, so event
+/// sites need no `if traced` guards of their own.
+#[derive(Clone)]
+pub struct ObsHub {
+    inner: Option<Arc<Mutex<ObsInner>>>,
+}
+
+impl ObsHub {
+    /// The no-op hub: records nothing, costs one branch per call.
+    pub fn disabled() -> ObsHub {
+        ObsHub { inner: None }
+    }
+
+    /// Build from config: disabled unless a trace or metrics sink is
+    /// set. Fails only if the journal file cannot be created.
+    pub fn from_config(cfg: &ObsConfig) -> Result<ObsHub> {
+        if !cfg.enabled() {
+            return Ok(ObsHub::disabled());
+        }
+        let writer = match &cfg.trace_out {
+            Some(p) => Some(BufWriter::new(
+                File::create(p).with_context(|| format!("creating trace journal {p}"))?,
+            )),
+            None => None,
+        };
+        Ok(ObsHub::build(cfg.trace_level, writer, cfg.trace_out.clone(), cfg.metrics_out.clone()))
+    }
+
+    /// An enabled hub with no file sinks — events and counters
+    /// accumulate in memory only (tests, `obs-smoke`).
+    pub fn in_memory(level: TraceLevel) -> ObsHub {
+        ObsHub::build(level, None, None, None)
+    }
+
+    fn build(
+        level: TraceLevel,
+        writer: Option<BufWriter<File>>,
+        journal_path: Option<String>,
+        metrics_path: Option<String>,
+    ) -> ObsHub {
+        ObsHub {
+            inner: Some(Arc::new(Mutex::new(ObsInner {
+                level,
+                start: Instant::now(),
+                writer,
+                journal_path,
+                metrics_path,
+                events: Vec::new(),
+                counters: BTreeMap::new(),
+                fold_age_hist: Vec::new(),
+                boundaries: Vec::new(),
+            }))),
+        }
+    }
+
+    /// Whether this hub records anything at all.
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Record one event: fold it into the counter registry and (level
+    /// permitting) append it to the journal. `sim` is the sim-clock
+    /// stamp — the global inner-step index at emission.
+    pub fn record(&self, sim: u64, ev: Event) {
+        let Some(inner) = &self.inner else { return };
+        inner.lock().unwrap().absorb(sim, ev);
+    }
+
+    /// Add `n` to a named counter (strategy/communicator totals that
+    /// have no per-event form).
+    pub fn count(&self, key: &str, n: u64) {
+        let Some(inner) = &self.inner else { return };
+        inner.lock().unwrap().bump(key, n);
+    }
+
+    /// Current value of a counter (0 when absent or disabled).
+    pub fn counter(&self, key: &str) -> u64 {
+        match &self.inner {
+            Some(inner) => inner.lock().unwrap().counters.get(key).copied().unwrap_or(0),
+            None => 0,
+        }
+    }
+
+    /// Snapshot of the recorded (level-admitted) events.
+    pub fn events(&self) -> Vec<Event> {
+        match &self.inner {
+            Some(inner) => inner.lock().unwrap().events.clone(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Seconds since the hub was created (0 when disabled).
+    pub fn wall(&self) -> f64 {
+        match &self.inner {
+            Some(inner) => inner.lock().unwrap().start.elapsed().as_secs_f64(),
+            None => 0.0,
+        }
+    }
+
+    /// Atomically rewrite the live metrics snapshot (`--metrics-out`):
+    /// write to `<path>.tmp`, then rename over the target so readers
+    /// never observe a torn file. No-op without a metrics sink.
+    pub fn snapshot_metrics(
+        &self,
+        step: u64,
+        boundary: u64,
+        loss: f64,
+        sigma: f64,
+        bytes: u64,
+        msgs: u64,
+    ) {
+        let Some(inner) = &self.inner else { return };
+        let g = inner.lock().unwrap();
+        let Some(path) = g.metrics_path.clone() else { return };
+        let mut s = String::with_capacity(256);
+        let _ = write!(
+            s,
+            "{{\"v\":{SCHEMA_VERSION},\"wall\":{:.6},\"step\":{step},\"boundary\":{boundary}",
+            g.start.elapsed().as_secs_f64()
+        );
+        journal::push_f64(&mut s, "loss", loss);
+        journal::push_f64(&mut s, "sigma", sigma);
+        journal::push_u64(&mut s, "bytes", bytes);
+        journal::push_u64(&mut s, "msgs", msgs);
+        s.push_str(",\"fold_age_hist\":[");
+        for (i, n) in g.fold_age_hist.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{n}");
+        }
+        s.push_str("]}");
+        drop(g);
+        let tmp = format!("{path}.tmp");
+        if fs::write(&tmp, s.as_bytes()).is_ok() {
+            let _ = fs::rename(&tmp, &path);
+        }
+    }
+
+    /// Flush the journal and summarize the registry into an
+    /// [`ObsReport`]. Safe to call more than once.
+    pub fn report(&self) -> ObsReport {
+        let Some(inner) = &self.inner else { return ObsReport::default() };
+        let mut g = inner.lock().unwrap();
+        if let Some(w) = g.writer.as_mut() {
+            let _ = w.flush();
+        }
+        ObsReport {
+            journal_path: g.journal_path.clone(),
+            counters: g.counters.iter().map(|(k, v)| (k.clone(), *v)).collect(),
+            fold_age_hist: g.fold_age_hist.clone(),
+            boundaries: g.boundaries.clone(),
+        }
+    }
+}
+
+impl std::fmt::Debug for ObsHub {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ObsHub").field("enabled", &self.is_enabled()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_hub_is_inert() {
+        let hub = ObsHub::disabled();
+        assert!(!hub.is_enabled());
+        hub.record(0, Event::Drain { outer_idx: 1, bytes: 1, msgs: 1 });
+        hub.count("x", 5);
+        assert_eq!(hub.counter("x"), 0);
+        assert!(hub.events().is_empty());
+        let rep = hub.report();
+        assert!(rep.counters.is_empty() && rep.journal_path.is_none());
+    }
+
+    #[test]
+    fn counters_derive_from_events() {
+        let hub = ObsHub::in_memory(TraceLevel::Step);
+        hub.record(1, Event::Offer { stage: 0, replica: 0, peer: 1, round: 1, frag: 0, bytes: 64 });
+        hub.record(
+            2,
+            Event::Fold { stage: 0, replica: 0, peer: 1, round: 1, frag: 0, age: 2, bytes: 64 },
+        );
+        hub.record(2, Event::StashSwept { boundary: 2, dropped: 3 });
+        hub.record(
+            2,
+            Event::Boundary { outer_idx: 2, inner_s: 0.5, sync_s: 0.1, bytes: 128, msgs: 2 },
+        );
+        assert_eq!(hub.counter("offers"), 1);
+        assert_eq!(hub.counter("folds"), 1);
+        assert_eq!(hub.counter("stash_swept"), 3);
+        let rep = hub.report();
+        assert_eq!(rep.fold_age_hist, vec![0, 0, 1]);
+        assert_eq!(rep.boundaries.len(), 1);
+        assert_eq!(rep.boundary_bytes(), 128);
+        assert_eq!(rep.counter("boundaries"), 1);
+    }
+
+    #[test]
+    fn boundary_level_drops_inner_from_journal_but_not_counters() {
+        let hub = ObsHub::in_memory(TraceLevel::Boundary);
+        hub.record(
+            1,
+            Event::InnerPhase { stage: 0, replica: 0, step: 1, loss: 2.0, dur_s: 0.1 },
+        );
+        hub.record(1, Event::Drain { outer_idx: 1, bytes: 0, msgs: 0 });
+        assert_eq!(hub.counter("inner_phases"), 1);
+        let evs = hub.events();
+        assert_eq!(evs.len(), 1);
+        assert!(matches!(evs[0], Event::Drain { .. }));
+    }
+
+    #[test]
+    fn off_level_keeps_counters_only() {
+        let hub = ObsHub::in_memory(TraceLevel::Off);
+        hub.record(1, Event::Drain { outer_idx: 1, bytes: 9, msgs: 1 });
+        assert_eq!(hub.counter("drains"), 1);
+        assert!(hub.events().is_empty());
+    }
+
+    #[test]
+    fn journal_and_metrics_files_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("noloco_obs_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace = dir.join("run.jsonl");
+        let metrics = dir.join("metrics.json");
+        let cfg = ObsConfig {
+            trace_out: Some(trace.to_string_lossy().into_owned()),
+            metrics_out: Some(metrics.to_string_lossy().into_owned()),
+            trace_level: TraceLevel::Step,
+        };
+        let hub = ObsHub::from_config(&cfg).unwrap();
+        assert!(hub.is_enabled());
+        hub.record(
+            3,
+            Event::Boundary { outer_idx: 1, inner_s: 0.5, sync_s: 0.25, bytes: 256, msgs: 4 },
+        );
+        hub.snapshot_metrics(3, 1, 2.75, f64::NAN, 256, 4);
+        let rep = hub.report();
+        assert_eq!(rep.journal_path.as_deref(), Some(trace.to_str().unwrap()));
+
+        let text = std::fs::read_to_string(&trace).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 1);
+        let m = parse_line(lines[0]).unwrap();
+        assert_eq!(m["ev"].str_val(), Some("boundary"));
+        assert_eq!(m["bytes"].uint(), Some(256));
+
+        let snap = std::fs::read_to_string(&metrics).unwrap();
+        assert!(snap.contains("\"sigma\":null"), "{snap}");
+        assert!(snap.contains("\"bytes\":256"), "{snap}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -492,6 +492,12 @@ impl SyncStrategy for AsyncGossipSync {
     ) -> Result<()> {
         self.fold_boundary(comm, w, live, outer_idx)
     }
+
+    fn report_obs(&self, hub: &crate::obs::ObsHub) {
+        hub.count("async.admitted", self.admitted);
+        hub.count("async.excluded_stale", self.excluded_stale);
+        hub.count("async.max_admitted_age", self.max_admitted_age);
+    }
 }
 
 #[cfg(test)]

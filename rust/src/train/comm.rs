@@ -80,6 +80,7 @@ use anyhow::{bail, Result};
 
 use crate::collective;
 use crate::net::{Endpoint, Payload, Tag};
+use crate::obs::{Event, ObsHub};
 use crate::tensor::Tensor;
 
 use super::CommStats;
@@ -320,6 +321,28 @@ pub trait Communicator {
 
     /// Communication accounting so far.
     fn stats(&self) -> &CommStats;
+
+    /// Attach an observability hub. Communicators that report per-peer
+    /// `offer`/`fold` journal events keep the handle; the default
+    /// ignores it (a disabled hub costs nothing either way).
+    fn set_obs(&mut self, _hub: ObsHub) {}
+
+    /// Tell the communicator which outer `boundary` it is serving and
+    /// the sim-clock stamp (`sim`, global inner-step index) to put on
+    /// the events it emits — the trainers call this once per boundary.
+    /// The boundary is the reference for fold-age derivation
+    /// (`age = boundary − offered round`).
+    fn set_obs_boundary(&mut self, _boundary: u64, _sim: u64) {}
+
+    /// This communicator's wire totals `(bytes_sent, msgs_sent)` — the
+    /// counters the journal's `boundary`/`drain` events attribute. The
+    /// default reads [`Communicator::stats`]; the fabric overrides it
+    /// with the endpoint's own metering (the trainer overwrites fabric
+    /// stats post-hoc, so its local `stats()` wire fields stay zero).
+    fn wire_totals(&self) -> (u64, u64) {
+        let s = self.stats();
+        (s.bytes_sent, s.msgs_sent)
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -349,6 +372,12 @@ pub struct AccountingComm {
     rounds: HashMap<(usize, usize, u32, u16), (Vec<f32>, Vec<f32>)>,
     /// Latest boundary heartbeat per `(stage, replica)`.
     hearts: HashMap<(usize, usize), u32>,
+    /// Observability sink (disabled unless the trainer attaches one).
+    hub: ObsHub,
+    /// Outer boundary currently being served (fold-age reference).
+    cur_boundary: u64,
+    /// Sim-clock stamp for emitted events (global inner-step index).
+    cur_sim: u64,
 }
 
 impl AccountingComm {
@@ -364,6 +393,9 @@ impl AccountingComm {
             frags: HashMap::new(),
             rounds: HashMap::new(),
             hearts: HashMap::new(),
+            hub: ObsHub::disabled(),
+            cur_boundary: 0,
+            cur_sim: 0,
         }
     }
 }
@@ -474,13 +506,26 @@ impl Communicator for AccountingComm {
         self.stats.floats_sent += p * 2 * n;
         self.stats.msgs_sent += p * 2;
         self.stats.bytes_sent += p * 2 * 4 * n;
+        for &q in peers {
+            self.hub.record(
+                self.cur_sim,
+                Event::Offer {
+                    stage,
+                    replica: me,
+                    peer: q,
+                    round: u64::from(seq),
+                    frag: 0,
+                    bytes: 2 * 4 * n,
+                },
+            );
+        }
         Ok(())
     }
 
     fn collect_state(
         &mut self,
         stage: usize,
-        _me: usize,
+        me: usize,
         peer: usize,
         seq: u32,
     ) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
@@ -488,7 +533,21 @@ impl Communicator for AccountingComm {
             bail!("gossip round {seq} collected before any offer (expected {})", self.offer_seq);
         }
         match self.offers.get(&(stage, peer)) {
-            Some(dp) => Ok(Some(dp.clone())),
+            Some(dp) => {
+                self.hub.record(
+                    self.cur_sim,
+                    Event::Fold {
+                        stage,
+                        replica: me,
+                        peer,
+                        round: u64::from(seq),
+                        frag: 0,
+                        age: 0,
+                        bytes: 4 * (dp.0.len() + dp.1.len()) as u64,
+                    },
+                );
+                Ok(Some(dp.clone()))
+            }
             None => bail!("replica {peer} of stage {stage} never offered to gossip round {seq}"),
         }
     }
@@ -518,19 +577,46 @@ impl Communicator for AccountingComm {
         self.stats.floats_sent += p * n;
         self.stats.msgs_sent += p * 2;
         self.stats.bytes_sent += p * 4 * n;
+        for &q in peers {
+            self.hub.record(
+                self.cur_sim,
+                Event::Offer {
+                    stage,
+                    replica: me,
+                    peer: q,
+                    round: u64::from(seq),
+                    frag,
+                    bytes: 4 * n,
+                },
+            );
+        }
         Ok(())
     }
 
     fn collect_fragment(
         &mut self,
         stage: usize,
-        _me: usize,
+        me: usize,
         peer: usize,
         seq: u32,
         frag: u16,
     ) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
         match self.frags.get(&(stage, peer, seq, frag)) {
-            Some(dp) => Ok(Some(dp.clone())),
+            Some(dp) => {
+                self.hub.record(
+                    self.cur_sim,
+                    Event::Fold {
+                        stage,
+                        replica: me,
+                        peer,
+                        round: u64::from(seq),
+                        frag,
+                        age: self.cur_boundary.saturating_sub(u64::from(seq)),
+                        bytes: 4 * (dp.0.len() + dp.1.len()) as u64,
+                    },
+                );
+                Ok(Some(dp.clone()))
+            }
             None => bail!(
                 "replica {peer} of stage {stage} never offered fragment {frag} of round {seq}"
             ),
@@ -562,19 +648,47 @@ impl Communicator for AccountingComm {
         self.stats.floats_sent += p * n;
         self.stats.msgs_sent += p * 2;
         self.stats.bytes_sent += p * 4 * n;
+        for &q in peers {
+            self.hub.record(
+                self.cur_sim,
+                Event::Offer {
+                    stage,
+                    replica: me,
+                    peer: q,
+                    round: u64::from(round),
+                    frag,
+                    bytes: 4 * n,
+                },
+            );
+        }
         Ok(())
     }
 
     fn collect_round(
         &mut self,
         stage: usize,
-        _me: usize,
+        me: usize,
         peer: usize,
         round: u32,
         frag: u16,
         _wait: bool,
     ) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
-        Ok(self.rounds.get(&(stage, peer, round, frag)).cloned())
+        let got = self.rounds.get(&(stage, peer, round, frag)).cloned();
+        if let Some(dp) = &got {
+            self.hub.record(
+                self.cur_sim,
+                Event::Fold {
+                    stage,
+                    replica: me,
+                    peer,
+                    round: u64::from(round),
+                    frag,
+                    age: self.cur_boundary.saturating_sub(u64::from(round)),
+                    bytes: 4 * (dp.0.len() + dp.1.len()) as u64,
+                },
+            );
+        }
+        Ok(got)
     }
 
     fn send_heartbeat(
@@ -612,6 +726,15 @@ impl Communicator for AccountingComm {
     fn stats(&self) -> &CommStats {
         &self.stats
     }
+
+    fn set_obs(&mut self, hub: ObsHub) {
+        self.hub = hub;
+    }
+
+    fn set_obs_boundary(&mut self, boundary: u64, sim: u64) {
+        self.cur_boundary = boundary;
+        self.cur_sim = sim;
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -631,12 +754,26 @@ pub struct FabricComm {
     /// Straggler tolerance for gossip collects; `None` = wait forever.
     gossip_timeout: Option<Duration>,
     stats: CommStats,
+    /// Observability sink (disabled unless the trainer attaches one).
+    hub: ObsHub,
+    /// Outer boundary currently being served (fold-age reference).
+    cur_boundary: u64,
+    /// Sim-clock stamp for emitted events (global inner-step index).
+    cur_sim: u64,
 }
 
 impl FabricComm {
     /// Wrap an endpoint. `dp` maps `(stage, replica)` to fabric ranks.
     pub fn new(ep: Endpoint, dp: usize, gossip_timeout: Option<Duration>) -> FabricComm {
-        FabricComm { ep, dp, gossip_timeout, stats: CommStats::default() }
+        FabricComm {
+            ep,
+            dp,
+            gossip_timeout,
+            stats: CommStats::default(),
+            hub: ObsHub::disabled(),
+            cur_boundary: 0,
+            cur_sim: 0,
+        }
     }
 
     fn rank_of(&self, stage: usize, replica: usize) -> usize {
@@ -718,6 +855,17 @@ impl Communicator for FabricComm {
                 .send(rank, Tag::new(K_GOSSIP_D, seq, my_rank), Payload::F32(delta.to_vec()));
             self.ep
                 .send(rank, Tag::new(K_GOSSIP_P, seq, my_rank), Payload::F32(phi.to_vec()));
+            self.hub.record(
+                self.cur_sim,
+                Event::Offer {
+                    stage,
+                    replica: me,
+                    peer: p,
+                    round: u64::from(seq),
+                    frag: 0,
+                    bytes: 4 * (delta.len() + phi.len()) as u64,
+                },
+            );
         }
         self.stats.pair_exchanges += peers.iter().filter(|&&q| q > me).count() as u64;
         self.stats.floats_sent += peers.len() as u64 * 2 * delta.len() as u64;
@@ -727,7 +875,7 @@ impl Communicator for FabricComm {
     fn collect_state(
         &mut self,
         stage: usize,
-        _me: usize,
+        me: usize,
         peer: usize,
         seq: u32,
     ) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
@@ -736,7 +884,7 @@ impl Communicator for FabricComm {
         let tp = Tag::new(K_GOSSIP_P, seq, peer_rank);
         // Trailing late messages after a timeout are absorbed harmlessly by
         // the endpoint stash (tags are unique per outer round).
-        Ok(match self.gossip_timeout {
+        let got = match self.gossip_timeout {
             None => Some((
                 self.ep.recv(td).payload.into_f32(),
                 self.ep.recv(tp).payload.into_f32(),
@@ -746,7 +894,22 @@ impl Communicator for FabricComm {
                 let Some(p) = self.ep.recv_timeout(tp, t) else { return Ok(None) };
                 Some((d.payload.into_f32(), p.payload.into_f32()))
             }
-        })
+        };
+        if let Some(dp) = &got {
+            self.hub.record(
+                self.cur_sim,
+                Event::Fold {
+                    stage,
+                    replica: me,
+                    peer,
+                    round: u64::from(seq),
+                    frag: 0,
+                    age: 0,
+                    bytes: 4 * (dp.0.len() + dp.1.len()) as u64,
+                },
+            );
+        }
+        Ok(got)
     }
 
     fn offer_fragment(
@@ -767,6 +930,17 @@ impl Communicator for FabricComm {
                 .send(rank, Tag::new(K_FRAG_D, a, my_rank), Payload::F32(delta.to_vec()));
             self.ep
                 .send(rank, Tag::new(K_FRAG_P, a, my_rank), Payload::F32(phi.to_vec()));
+            self.hub.record(
+                self.cur_sim,
+                Event::Offer {
+                    stage,
+                    replica: me,
+                    peer: p,
+                    round: u64::from(seq),
+                    frag,
+                    bytes: 4 * (delta.len() + phi.len()) as u64,
+                },
+            );
         }
         self.stats.pair_exchanges += peers.iter().filter(|&&q| q > me).count() as u64;
         self.stats.floats_sent += peers.len() as u64 * (delta.len() + phi.len()) as u64;
@@ -776,7 +950,7 @@ impl Communicator for FabricComm {
     fn collect_fragment(
         &mut self,
         stage: usize,
-        _me: usize,
+        me: usize,
         peer: usize,
         seq: u32,
         frag: u16,
@@ -785,7 +959,7 @@ impl Communicator for FabricComm {
         let a = frag_seq(seq, frag);
         let td = Tag::new(K_FRAG_D, a, peer_rank);
         let tp = Tag::new(K_FRAG_P, a, peer_rank);
-        Ok(match self.gossip_timeout {
+        let got = match self.gossip_timeout {
             None => Some((
                 self.ep.recv(td).payload.into_f32(),
                 self.ep.recv(tp).payload.into_f32(),
@@ -795,7 +969,22 @@ impl Communicator for FabricComm {
                 let Some(p) = self.ep.recv_timeout(tp, t) else { return Ok(None) };
                 Some((d.payload.into_f32(), p.payload.into_f32()))
             }
-        })
+        };
+        if let Some(dp) = &got {
+            self.hub.record(
+                self.cur_sim,
+                Event::Fold {
+                    stage,
+                    replica: me,
+                    peer,
+                    round: u64::from(seq),
+                    frag,
+                    age: self.cur_boundary.saturating_sub(u64::from(seq)),
+                    bytes: 4 * (dp.0.len() + dp.1.len()) as u64,
+                },
+            );
+        }
+        Ok(got)
     }
 
     fn offer_round(
@@ -819,6 +1008,17 @@ impl Communicator for FabricComm {
                 .send(rank, Tag::new(K_ASYNC_D, a, my_rank), Payload::F32(delta.to_vec()));
             self.ep
                 .send(rank, Tag::new(K_ASYNC_P, a, my_rank), Payload::F32(phi.to_vec()));
+            self.hub.record(
+                self.cur_sim,
+                Event::Offer {
+                    stage,
+                    replica: me,
+                    peer: p,
+                    round: u64::from(round),
+                    frag,
+                    bytes: 4 * (delta.len() + phi.len()) as u64,
+                },
+            );
         }
         self.stats.pair_exchanges += peers.iter().filter(|&&q| q > me).count() as u64;
         self.stats.floats_sent += peers.len() as u64 * (delta.len() + phi.len()) as u64;
@@ -828,7 +1028,7 @@ impl Communicator for FabricComm {
     fn collect_round(
         &mut self,
         stage: usize,
-        _me: usize,
+        me: usize,
         peer: usize,
         round: u32,
         frag: u16,
@@ -847,7 +1047,7 @@ impl Communicator for FabricComm {
         // already arrived — never sleeping, not even on the latency
         // model; the current round honours the straggler timeout, or
         // blocks when none is configured (the peer's offer is certain).
-        Ok(match (wait, self.gossip_timeout) {
+        let got = match (wait, self.gossip_timeout) {
             (true, None) => {
                 let d = self.ep.recv(td);
                 let p = self.ep.recv(tp);
@@ -872,7 +1072,22 @@ impl Communicator for FabricComm {
                 let Some(p) = self.ep.peek_ready(tp) else { return Ok(None) };
                 Some((d.into_f32(), p.into_f32()))
             }
-        })
+        };
+        if let Some(dp) = &got {
+            self.hub.record(
+                self.cur_sim,
+                Event::Fold {
+                    stage,
+                    replica: me,
+                    peer,
+                    round: u64::from(round),
+                    frag,
+                    age: self.cur_boundary.saturating_sub(u64::from(round)),
+                    bytes: 4 * (dp.0.len() + dp.1.len()) as u64,
+                },
+            );
+        }
+        Ok(got)
     }
 
     fn send_heartbeat(
@@ -912,6 +1127,22 @@ impl Communicator for FabricComm {
 
     fn stats(&self) -> &CommStats {
         &self.stats
+    }
+
+    fn set_obs(&mut self, hub: ObsHub) {
+        self.hub = hub;
+    }
+
+    fn set_obs_boundary(&mut self, boundary: u64, sim: u64) {
+        self.cur_boundary = boundary;
+        self.cur_sim = sim;
+    }
+
+    fn wire_totals(&self) -> (u64, u64) {
+        // The endpoint meters actual sends; the local stats' wire fields
+        // stay zero on this executor (the trainer back-fills them from
+        // the fabric-wide counters post-run).
+        self.ep.sent_totals()
     }
 }
 
@@ -1081,6 +1312,37 @@ mod tests {
         let dropped = b.expire_stale(3);
         assert_eq!(dropped, 3, "two round payloads + one heartbeat expire");
         assert_eq!(b.collect_round(0, 1, 0, 2, 0, false).unwrap(), None);
+    }
+
+    #[test]
+    fn obs_offers_and_folds_are_journaled_with_ages() {
+        let hub = crate::obs::ObsHub::in_memory(crate::config::TraceLevel::Step);
+        let mut c = AccountingComm::new();
+        c.set_obs(hub.clone());
+        c.set_obs_boundary(1, 50);
+        c.offer_round(0, 1, &[0], 1, 0, 3, &[1.0, 2.0], &[3.0]).unwrap();
+        // Fold one boundary later: age = 2 − 1 = 1.
+        c.set_obs_boundary(2, 100);
+        assert!(c.collect_round(0, 0, 1, 1, 0, false).unwrap().is_some());
+        // A probe of a round never offered emits nothing.
+        assert!(c.collect_round(0, 0, 1, 7, 0, false).unwrap().is_none());
+        assert_eq!(hub.counter("offers"), 1);
+        assert_eq!(hub.counter("folds"), 1);
+        let evs = hub.events();
+        assert_eq!(evs.len(), 2);
+        match &evs[0] {
+            Event::Offer { peer, round, bytes, .. } => {
+                assert_eq!((*peer, *round, *bytes), (0, 1, 12));
+            }
+            other => panic!("expected an offer, got {other:?}"),
+        }
+        match &evs[1] {
+            Event::Fold { round, age, bytes, .. } => {
+                assert_eq!((*round, *age, *bytes), (1, 1, 12));
+            }
+            other => panic!("expected a fold, got {other:?}"),
+        }
+        assert_eq!(hub.report().fold_age_hist, vec![0, 1]);
     }
 
     #[test]

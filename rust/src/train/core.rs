@@ -34,9 +34,10 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::config::TrainConfig;
 use crate::data::Loader;
-use crate::metrics::{perplexity, RunTrace};
+use crate::metrics::RunTrace;
 use crate::model::StageKind;
 use crate::net::topo::{ChurnEvent, FailureDetector};
+use crate::obs::{Event, ObsHub};
 use crate::optim::LrSchedule;
 use crate::routing::RoutePlan;
 use crate::runtime::{Engine, Manifest};
@@ -98,6 +99,15 @@ pub struct TrainerCore<'e, C: Communicator> {
     /// Whether this core's worker crashed mid-run (silence fault on a
     /// single-worker executor): skip the end-of-run drain.
     crashed: bool,
+    /// Observability sink: built from `[obs]` by the grid executor,
+    /// attached post-construction by the threaded trainer (one shared
+    /// hub per run), disabled otherwise.
+    obs: ObsHub,
+    /// Wire totals `(bytes, msgs)` at the last boundary capture — the
+    /// reference for per-boundary delta attribution.
+    last_wire: (u64, u64),
+    /// Inner-phase seconds accumulated since the last boundary capture.
+    inner_accum: f64,
 }
 
 fn draw_val_batches(cfg: &TrainConfig, man: &Manifest, n: usize) -> Vec<Vec<i32>> {
@@ -134,7 +144,7 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
     /// Grid executor: own every worker of the DP × PP grid over one
     /// shared engine, with identical per-stage init across replicas
     /// (φ₀,ᵢ ≡ φ₀), sharded loaders and a pre-drawn validation set.
-    pub fn new_grid(cfg: TrainConfig, eng: &'e mut Engine, comm: C) -> Result<Self> {
+    pub fn new_grid(cfg: TrainConfig, eng: &'e mut Engine, mut comm: C) -> Result<Self> {
         cfg.validate().map_err(anyhow::Error::msg)?;
         let man = eng.manifest()?;
         man.check_against(&cfg.model, cfg.topology.pp)?;
@@ -192,6 +202,8 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
             .detect
             .enabled
             .then(|| FailureDetector::new(dp, cfg.detect.misses));
+        let obs = ObsHub::from_config(&cfg.obs)?;
+        comm.set_obs(obs.clone());
         Ok(TrainerCore {
             live: vec![true; dp],
             cfg,
@@ -213,6 +225,9 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
             detected: Vec::new(),
             silence: None,
             crashed: false,
+            obs,
+            last_wire: (0, 0),
+            inner_accum: 0.0,
         })
     }
 
@@ -294,6 +309,9 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
             detected: Vec::new(),
             silence: None,
             crashed: false,
+            obs: ObsHub::disabled(),
+            last_wire: (0, 0),
+            inner_accum: 0.0,
         })
     }
 
@@ -361,6 +379,20 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
     /// Communication accounting so far.
     pub fn comm_stats(&self) -> &super::CommStats {
         self.comm.stats()
+    }
+
+    /// Attach an observability hub after construction: the threaded
+    /// trainer builds one shared hub per run and clones it into every
+    /// worker core (and its communicator), so all workers journal into
+    /// the same sink. The grid executor builds its own from `[obs]`.
+    pub fn set_obs(&mut self, hub: ObsHub) {
+        self.comm.set_obs(hub.clone());
+        self.obs = hub;
+    }
+
+    /// This core's observability hub (disabled unless configured).
+    pub fn obs(&self) -> &ObsHub {
+        &self.obs
     }
 
     /// Immutable access to an owned worker (tests / inspection).
@@ -459,6 +491,14 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
             let due: Vec<ChurnEvent> = self.cfg.churn.events_at(step as u64).collect();
             for event in due {
                 self.apply_churn(event)?;
+                self.obs.record(
+                    step as u64,
+                    Event::ChurnApplied {
+                        step: step as u64,
+                        node: event.node(),
+                        join: matches!(event, ChurnEvent::Join(_)),
+                    },
+                );
             }
             // A single-worker executor whose column is dead sits the step
             // out entirely: no data, no compute, no messages.
@@ -468,9 +508,29 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
                 }
                 continue;
             }
+            let t_inner = Instant::now();
             let train_loss = self.inner_step(step)?;
+            let dur_s = t_inner.elapsed().as_secs_f64();
+            self.inner_accum += dur_s;
             if self.owns_last_stage() {
                 self.step_train_loss.push(train_loss);
+            }
+            if self.obs.is_enabled() {
+                let pp = self.pp();
+                for w in &self.workers {
+                    if w.stage + 1 == pp && self.live[w.replica] {
+                        self.obs.record(
+                            step as u64,
+                            Event::InnerPhase {
+                                stage: w.stage,
+                                replica: w.replica,
+                                step: step as u64,
+                                loss: train_loss,
+                                dur_s,
+                            },
+                        );
+                    }
+                }
             }
             let outer_due =
                 self.strategy.has_outer() && (step + 1) % self.cfg.outer.inner_steps == 0;
@@ -494,9 +554,9 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
         // before this fold, mirroring a real deployment where the tail
         // fragment lands after the final report. A crashed worker drains
         // nothing — it is gone.
+        let final_outer = (self.cfg.steps / self.cfg.outer.inner_steps) as u64;
         if !self.crashed {
             let live = self.live_replicas();
-            let final_outer = (self.cfg.steps / self.cfg.outer.inner_steps) as u64;
             let TrainerCore { comm, strategy, workers, live: live_mask, .. } = self;
             for w in workers.iter_mut() {
                 if live_mask[w.replica] {
@@ -504,17 +564,49 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
                 }
             }
         }
-        Ok(TrainReport {
-            final_val_nll: last_val,
-            final_val_ppl: perplexity(last_val),
-            trace: std::mem::take(&mut self.trace),
-            comm: self.comm.stats().clone(),
-            wall_secs: start.elapsed().as_secs_f64(),
-            executions: self.eng.executions() - exec0,
-            step_train_loss: std::mem::take(&mut self.step_train_loss),
-            executor: self.comm.executor(),
-            detected: self.detected.clone(),
-        })
+        // The residual wire delta past the last boundary capture (final
+        // in-flight folds, validation shipping) closes the attribution
+        // invariant: Σ boundary bytes + drain bytes == comm totals.
+        if self.obs.is_enabled() {
+            let (b, m) = self.comm.wire_totals();
+            let (b0, m0) = self.last_wire;
+            self.last_wire = (b, m);
+            self.obs.record(
+                self.cfg.steps as u64,
+                Event::Drain {
+                    outer_idx: final_outer,
+                    bytes: b.saturating_sub(b0),
+                    msgs: m.saturating_sub(m0),
+                },
+            );
+            self.strategy.report_obs(&self.obs);
+            let loss = self.last_finite_loss();
+            let sigma = self.weight_std();
+            self.obs
+                .snapshot_metrics(self.cfg.steps as u64, final_outer, loss, sigma, b, m);
+        }
+        Ok(TrainReport::assemble(
+            last_val,
+            std::mem::take(&mut self.trace),
+            std::mem::take(&mut self.step_train_loss),
+            self.comm.stats().clone(),
+            start.elapsed().as_secs_f64(),
+            self.eng.executions() - exec0,
+            self.comm.executor(),
+            self.detected.clone(),
+            self.obs.report(),
+        ))
+    }
+
+    /// Most recent finite per-step training loss (NaN when none yet) —
+    /// the "current loss" a live metrics snapshot reports.
+    fn last_finite_loss(&self) -> f64 {
+        self.step_train_loss
+            .iter()
+            .rev()
+            .find(|l| l.is_finite())
+            .copied()
+            .unwrap_or(f64::NAN)
     }
 
     /// One inner optimizer step: route + fwd/bwd every owned worker's
@@ -770,6 +862,11 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
     /// `outer_idx` is the 1-based outer-step counter shared by both
     /// executors.
     pub fn outer_step(&mut self, outer_idx: u64) -> Result<()> {
+        let t_sync = Instant::now();
+        // The boundary closes at this global inner step — the sim stamp
+        // for everything emitted here and by the communicator.
+        let sim = (outer_idx * self.cfg.outer.inner_steps as u64).saturating_sub(1);
+        self.comm.set_obs_boundary(outer_idx, sim);
         self.boundary_heartbeats(outer_idx)?;
         // Clocks advance for this boundary's participants (live owned
         // replicas) — each replica counts the boundaries it was part of.
@@ -798,24 +895,51 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
                 })
                 .min()
                 .unwrap_or(0);
-            self.comm.expire_stale(min_clock.saturating_sub(stash_age) as u32);
+            let dropped = self.comm.expire_stale(min_clock.saturating_sub(stash_age) as u32);
+            if dropped > 0 {
+                self.obs
+                    .record(sim, Event::StashSwept { boundary: outer_idx, dropped });
+            }
         }
         let live = self.live_replicas();
-        let TrainerCore { comm, strategy, workers, eng, live: live_mask, .. } = self;
-        for w in workers.iter() {
-            if live_mask[w.replica] {
-                strategy.offer_outer(comm, w, &live, outer_idx)?;
+        {
+            let TrainerCore { comm, strategy, workers, eng, live: live_mask, .. } = self;
+            for w in workers.iter() {
+                if live_mask[w.replica] {
+                    strategy.offer_outer(comm, w, &live, outer_idx)?;
+                }
+            }
+            for w in workers.iter_mut() {
+                if live_mask[w.replica] {
+                    strategy.fold_inflight(comm, w, &live, outer_idx)?;
+                }
+            }
+            for w in workers.iter_mut() {
+                if live_mask[w.replica] {
+                    strategy.apply_outer(comm, &mut **eng, w, &live, outer_idx)?;
+                }
             }
         }
-        for w in workers.iter_mut() {
-            if live_mask[w.replica] {
-                strategy.fold_inflight(comm, w, &live, outer_idx)?;
-            }
-        }
-        for w in workers.iter_mut() {
-            if live_mask[w.replica] {
-                strategy.apply_outer(comm, &mut **eng, w, &live, outer_idx)?;
-            }
+        // One boundary row per passage: inner seconds since the last
+        // boundary, this boundary's sync seconds, and the wire delta.
+        if self.obs.is_enabled() {
+            let (b, m) = self.comm.wire_totals();
+            let (b0, m0) = self.last_wire;
+            self.last_wire = (b, m);
+            let inner_s = std::mem::take(&mut self.inner_accum);
+            self.obs.record(
+                sim,
+                Event::Boundary {
+                    outer_idx,
+                    inner_s,
+                    sync_s: t_sync.elapsed().as_secs_f64(),
+                    bytes: b.saturating_sub(b0),
+                    msgs: m.saturating_sub(m0),
+                },
+            );
+            let loss = self.last_finite_loss();
+            let sigma = self.weight_std();
+            self.obs.snapshot_metrics(sim, outer_idx, loss, sigma, b, m);
         }
         Ok(())
     }
@@ -875,14 +999,30 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
             if own.contains(&q) {
                 continue;
             }
+            let mut seen = false;
             for hb in (lo..=outer_idx).rev() {
                 if self.comm.poll_heartbeat(hb_stage, me0, q, hb as u32)? {
                     self.detector
                         .as_mut()
                         .expect("checked above")
                         .observe(q, hb);
+                    seen = true;
                     break;
                 }
+            }
+            // Journal a miss only for peers we still expect to signal
+            // (live, or suspected-but-heartbeating) — a schedule-dead
+            // column missing forever is not news.
+            if !seen && (self.live[q] || self.suspected[q]) {
+                self.obs.record(
+                    closing,
+                    Event::HeartbeatMiss {
+                        stage: hb_stage,
+                        replica: me0,
+                        peer: q,
+                        boundary: outer_idx,
+                    },
+                );
             }
         }
         let events = self
@@ -895,11 +1035,19 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
                 ChurnEvent::Leave(r) if self.live[r] => {
                     self.suspected[r] = true;
                     self.detected.push((outer_idx, e));
+                    self.obs.record(
+                        closing,
+                        Event::Detect { boundary: outer_idx, node: r, join: false },
+                    );
                     self.apply_churn(e)?;
                 }
                 ChurnEvent::Join(r) if self.suspected[r] && !self.live[r] => {
                     self.suspected[r] = false;
                     self.detected.push((outer_idx, e));
+                    self.obs.record(
+                        closing,
+                        Event::Detect { boundary: outer_idx, node: r, join: true },
+                    );
                     self.apply_churn(e)?;
                 }
                 // Schedule-driven absences arbitrate themselves: the

@@ -167,6 +167,41 @@ pub struct TrainReport {
     /// off or nothing failed. The threaded executor reports the union of
     /// worker observations, deduplicated.
     pub detected: Vec<(u64, crate::net::topo::ChurnEvent)>,
+    /// Observability summary ([`crate::obs::ObsReport`]): counter
+    /// registry, fold-age histogram and per-boundary breakdown. Default
+    /// (all empty) when no `[obs]` sink was configured.
+    pub obs: crate::obs::ObsReport,
+}
+
+impl TrainReport {
+    /// The one place a report is assembled from its parts — both
+    /// executors call this, so derived fields (`final_val_ppl`) can
+    /// never drift between them.
+    #[allow(clippy::too_many_arguments)]
+    pub fn assemble(
+        final_val_nll: f64,
+        trace: RunTrace,
+        step_train_loss: Vec<f64>,
+        comm: CommStats,
+        wall_secs: f64,
+        executions: u64,
+        executor: &'static str,
+        detected: Vec<(u64, crate::net::topo::ChurnEvent)>,
+        obs: crate::obs::ObsReport,
+    ) -> TrainReport {
+        TrainReport {
+            final_val_nll,
+            final_val_ppl: crate::metrics::perplexity(final_val_nll),
+            trace,
+            step_train_loss,
+            comm,
+            wall_secs,
+            executions,
+            executor,
+            detected,
+            obs,
+        }
+    }
 }
 
 /// Convenience: resolve artifacts, build an engine, run [`SimTrainer`].

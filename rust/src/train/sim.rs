@@ -128,6 +128,13 @@ impl<'e> SimTrainer<'e> {
         self.core.comm_stats()
     }
 
+    /// The run's observability hub (built from `[obs]`; disabled when no
+    /// sink is configured). Tests and tooling can read counters and the
+    /// in-memory event mirror mid-run.
+    pub fn obs(&self) -> &crate::obs::ObsHub {
+        self.core.obs()
+    }
+
     /// The manifest this trainer is bound to.
     pub fn manifest(&self) -> &Manifest {
         self.core.manifest()

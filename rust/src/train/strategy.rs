@@ -156,6 +156,12 @@ pub trait SyncStrategy: Send {
     ) -> Result<()> {
         Ok(())
     }
+
+    /// Push this strategy's private counters into the observability hub
+    /// (under a `<name>.` key prefix). Called by the core once at the
+    /// end of a run; strategies with nothing beyond the journaled
+    /// offer/fold stream keep the default no-op.
+    fn report_obs(&self, _hub: &crate::obs::ObsHub) {}
 }
 
 /// Build the configured NoLoCo pairing policy (shared by the gated and
@@ -196,9 +202,10 @@ pub(crate) fn gated_for(cfg: &TrainConfig) -> Box<dyn SyncStrategy> {
 /// stream; config validation rejects that pairing before trainers get
 /// here), or the bounded-staleness
 /// [`AsyncGossipSync`](super::AsyncGossipSync) engine when
-/// `outer.staleness > 1` (NoLoCo + gated only, enforced by validation —
-/// `staleness = 1` is the lockstep contract and routes through the
-/// gated / streaming code paths untouched, bit-for-bit).
+/// `outer.staleness > 1` (NoLoCo only; either `--sync` mode is accepted
+/// since the async engine owns the overlap itself — `staleness = 1` is
+/// the lockstep contract and routes through the gated / streaming code
+/// paths untouched, bit-for-bit).
 pub fn for_config(cfg: &TrainConfig) -> Box<dyn SyncStrategy> {
     if cfg.outer.staleness > 1 {
         return Box::new(super::boundary::AsyncGossipSync::from_config(cfg));

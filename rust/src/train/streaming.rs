@@ -593,6 +593,13 @@ impl SyncStrategy for StreamingSync {
         }
         Ok(())
     }
+
+    fn report_obs(&self, hub: &crate::obs::ObsHub) {
+        if let Some(d) = self.delegate.as_ref() {
+            return d.report_obs(hub);
+        }
+        hub.count("streaming.dropped_stale", self.dropped_stale);
+    }
 }
 
 /// Eq. 2–3 restricted to one fragment, host-side:

@@ -35,7 +35,8 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::config::TrainConfig;
-use crate::metrics::{perplexity, RunTrace};
+use crate::metrics::RunTrace;
+use crate::obs::ObsHub;
 use crate::net::topo::{ChurnEvent, ChurnSchedule};
 use crate::net::Fabric;
 use crate::runtime::{find_build, Engine, Manifest};
@@ -150,6 +151,10 @@ impl ThreadedTrainer {
         let start = Instant::now();
         let mut fabric = Fabric::new(dp * pp);
         let endpoints = fabric.take_endpoints();
+        // One shared hub for the whole run: every worker core (and its
+        // fabric communicator) journals into the same sink, each stamping
+        // events with its own (stage, replica).
+        let hub = ObsHub::from_config(&cfg.obs)?;
 
         let reports: Vec<TrainReport> = thread::scope(|scope| -> Result<Vec<TrainReport>> {
             let mut handles = Vec::new();
@@ -162,6 +167,7 @@ impl ThreadedTrainer {
                 let cfg = cfg.clone();
                 let val_batches = self.val_batches;
                 let silence = self.silence;
+                let hub = hub.clone();
                 handles.push(scope.spawn(move || -> Result<TrainReport> {
                     let (stage, replica) = (rank / dp, rank % dp);
                     let comm = FabricComm::new(ep, dp, gossip_timeout);
@@ -169,6 +175,7 @@ impl ThreadedTrainer {
                     let mut core = TrainerCore::new_single(
                         cfg, &mut eng, comm, man, stage, replica, num_mb, val_batches,
                     )?;
+                    core.set_obs(hub);
                     if let Some((r, at)) = silence {
                         core.set_silence(r, at, u64::MAX);
                     }
@@ -254,16 +261,16 @@ impl ThreadedTrainer {
         }
         let final_val_nll = if val_n == 0 { f64::NAN } else { val_sum / val_n as f64 };
 
-        Ok(TrainReport {
+        Ok(TrainReport::assemble(
             final_val_nll,
-            final_val_ppl: perplexity(final_val_nll),
             trace,
             step_train_loss,
             comm,
-            wall_secs: start.elapsed().as_secs_f64(),
+            start.elapsed().as_secs_f64(),
             executions,
-            executor: "threaded",
+            "threaded",
             detected,
-        })
+            hub.report(),
+        ))
     }
 }

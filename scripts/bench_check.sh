@@ -1,0 +1,199 @@
+#!/usr/bin/env bash
+# Cost-model regression gate against the checked-in BENCH_baseline.json.
+#
+# Recomputes the deterministic expected-time baselines (see
+# rust/src/obs/bench.rs) and fails when any metric drifts more than 10%
+# from the committed values. With a Rust toolchain the live numbers come
+# from `cargo run -- bench-baseline`; without one, from the Python
+# mirror below, which re-implements the same closed-form arithmetic
+# (log-normal expected latencies, heap-tree / ring walks) — change it
+# together with rust/src/obs/bench.rs.
+#
+# Usage: scripts/bench_check.sh [--update]
+#   --update   rewrite BENCH_baseline.json with the live values
+
+set -u
+cd "$(dirname "$0")/.."
+
+BASELINE="BENCH_baseline.json"
+update=0
+if [ "${1:-}" = "--update" ]; then
+    update=1
+fi
+
+live="$(mktemp -t noloco_bench_XXXXXX.json)"
+trap 'rm -f "$live"' EXIT
+
+mirror() {
+    python3 - <<'PY'
+import json
+import math
+
+# Mirror of the constants + walks in rust/src/obs/bench.rs over the
+# NetTopoConfig defaults in rust/src/config/mod.rs.
+WORLD = 24
+BYTES = 8 * 1024 * 1024
+OUTER_BYTES = 8_000_000
+FRAGMENTS = 4
+STREAM_COMPUTE_S = 0.5
+
+INTRA_LAT, INTER_LAT, POD_LAT = 1e-3, 80e-3, 5e-3
+INTRA_BW, INTER_BW, POD_BW = 1.25e9, 1.25e7, 1.25e8
+SIGMA = 0.6
+RACKS_PER_POD = 2
+LOGN = math.exp(SIGMA * SIGMA / 2.0)  # E[LogNormal(ln m, s^2)] = m * e^(s^2/2)
+
+
+def lan_link(a, b):
+    return (INTRA_LAT, INTRA_BW)
+
+
+def wan_link(a, b):
+    # 24 nodes over 3 regions of 8.
+    if a // 8 == b // 8:
+        return (INTRA_LAT * LOGN, INTRA_BW)
+    return (INTER_LAT * LOGN, INTER_BW)
+
+
+def hier_link(a, b):
+    # 3 pods x 2 racks = 6 racks of 4; rack = i // 4, pod = rack // 2.
+    ra, rb = a // 4, b // 4
+    if ra == rb:
+        return (INTRA_LAT, INTRA_BW)
+    if ra // RACKS_PER_POD == rb // RACKS_PER_POD:
+        return (POD_LAT, POD_BW)
+    return (INTER_LAT * LOGN, INTER_BW)
+
+
+def expected(link, a, b, nbytes):
+    lat, bw = link(a, b)
+    return lat + nbytes / bw
+
+
+PAIRS = [(2 * i, 2 * i + 1) for i in range(WORLD // 2)]
+
+
+def pair_mean(link, nbytes):
+    return sum(expected(link, a, b, nbytes) for a, b in PAIRS) / len(PAIRS)
+
+
+def tree_allreduce(link, nbytes):
+    n = WORLD
+    ready = [0.0] * n
+    for r in reversed(range(n)):  # reduce up the heap tree
+        for c in (2 * r + 1, 2 * r + 2):
+            if c < n:
+                ready[r] = max(ready[r], ready[c] + expected(link, c, r, nbytes))
+    for r in range(1, n):  # broadcast back down
+        p = (r - 1) // 2
+        ready[r] = max(ready[r], ready[p] + expected(link, p, r, nbytes))
+    return max(ready)
+
+
+def ring_allreduce(link, nbytes):
+    n = WORLD
+    chunk = -(-nbytes // n)
+    ready = [0.0] * n
+    for _ in range(2 * (n - 1)):
+        start = ready[:]
+        for r in range(n):
+            to = (r + 1) % n
+            ready[to] = max(start[to], start[r] + expected(link, r, to, chunk))
+    return max(ready)
+
+
+def streamed_residual(link, nbytes):
+    chunk = -(-nbytes // FRAGMENTS)
+    acc = 0.0
+    for a, b in PAIRS:
+        acc += max(expected(link, a, b, chunk) - STREAM_COMPUTE_S, 0.0) * FRAGMENTS
+    return acc / len(PAIRS)
+
+
+def boundary_idle(link, nbytes):
+    computes = [0.25 + 0.05 * (w % 7) for w in range(WORLD)]
+    done = computes[:]
+    for a, b in PAIRS:
+        t = max(computes[a], computes[b]) + expected(link, a, b, nbytes)
+        done[a] = done[b] = t
+    barrier = max(done)
+    lock = sum(barrier - c for c in computes) / WORLD
+    asy = sum(d - c for d, c in zip(done, computes)) / WORLD
+    return lock, asy
+
+
+out = {}
+for name, link in (("lan", lan_link), ("wan", wan_link), ("hier", hier_link)):
+    out[f"{name}.pair_mean_s"] = pair_mean(link, BYTES)
+    out[f"{name}.tree_allreduce_s"] = tree_allreduce(link, BYTES)
+    out[f"{name}.ring_allreduce_s"] = ring_allreduce(link, BYTES)
+    out[f"{name}.streamed_residual_s"] = streamed_residual(link, BYTES)
+    lock, asy = boundary_idle(link, BYTES)
+    out[f"{name}.lockstep_idle_s"] = lock
+    out[f"{name}.async_idle_s"] = asy
+pair = pair_mean(wan_link, OUTER_BYTES)
+tree = tree_allreduce(wan_link, OUTER_BYTES)
+out["outer.noloco_pair_s"] = pair
+out["outer.diloco_tree_s"] = tree
+out["outer.speedup"] = tree / pair
+
+print(json.dumps({"v": 1, "metrics": out}, separators=(",", ":")))
+PY
+}
+
+if command -v cargo >/dev/null 2>&1; then
+    if ! (cd rust && cargo run --release --quiet -- bench-baseline --out "$live" >/dev/null); then
+        echo "bench check FAILED (bench-baseline did not run)"
+        exit 1
+    fi
+    src="cargo run -- bench-baseline"
+else
+    if ! mirror >"$live"; then
+        echo "bench check FAILED (python mirror did not run)"
+        exit 1
+    fi
+    src="python mirror of rust/src/obs/bench.rs"
+fi
+
+if [ "$update" -eq 1 ]; then
+    cp "$live" "$BASELINE"
+    echo "bench baseline updated ($BASELINE from $src)"
+    exit 0
+fi
+
+if [ ! -f "$BASELINE" ]; then
+    echo "bench check FAILED ($BASELINE missing; run scripts/bench_check.sh --update)"
+    exit 1
+fi
+
+python3 - "$BASELINE" "$live" <<'PY'
+import json
+import sys
+
+TOLERANCE = 0.10
+
+base = json.load(open(sys.argv[1]))
+live = json.load(open(sys.argv[2]))
+fail = 0
+if base.get("v") != 1 or live.get("v") != 1:
+    print(f"unknown baseline version: base {base.get('v')!r} live {live.get('v')!r}")
+    sys.exit(1)
+bm, lm = base["metrics"], live["metrics"]
+for k in sorted(set(bm) | set(lm)):
+    if k not in bm or k not in lm:
+        where = "baseline" if k not in bm else "live walk"
+        print(f"MISSING METRIC: {k} absent from {where}")
+        fail = 1
+        continue
+    b, l = float(bm[k]), float(lm[k])
+    drift = abs(l - b) / max(abs(b), 1e-12)
+    if drift > TOLERANCE:
+        print(f"REGRESSION: {k}: baseline {b} vs live {l} ({100 * drift:.1f}% drift)")
+        fail = 1
+sys.exit(fail)
+PY
+if [ $? -ne 0 ]; then
+    echo "bench check FAILED ($src vs $BASELINE)"
+    exit 1
+fi
+echo "bench check OK ($src vs $BASELINE, tolerance 10%)"

@@ -1,0 +1,115 @@
+#!/usr/bin/env bash
+# Validate a run-journal JSONL against the obs schema (v1).
+#
+# With a Rust toolchain available: emits a fresh smoke journal via
+# `cargo run -- obs-smoke` and validates that, so the journal writer and
+# the schema table cannot drift apart unnoticed. Without one (minimal
+# containers): validates the checked-in `docs/trace.sample.jsonl`
+# instead. Pass a journal path to validate an arbitrary run's trace
+# (per-event coverage is then not required — a clean run has no
+# `hb_miss`/`detect` lines).
+#
+# The REQUIRED table below mirrors `required_keys` in
+# rust/src/obs/journal.rs — change them together.
+#
+# Usage: scripts/check_trace_schema.sh [journal.jsonl]
+
+set -u
+cd "$(dirname "$0")/.."
+
+journal="${1:-}"
+coverage="partial"
+cleanup=""
+if [ -z "$journal" ]; then
+    coverage="full"
+    if command -v cargo >/dev/null 2>&1; then
+        journal="$(mktemp -t noloco_trace_XXXXXX.jsonl)"
+        cleanup="$journal"
+        if ! (cd rust && cargo run --release --quiet -- obs-smoke --out "$journal" >/dev/null); then
+            echo "trace schema check FAILED (obs-smoke did not run)"
+            rm -f "$cleanup"
+            exit 1
+        fi
+    else
+        journal="docs/trace.sample.jsonl"
+        echo "no cargo toolchain; validating checked-in $journal"
+    fi
+fi
+
+python3 - "$journal" "$coverage" <<'PY'
+import json
+import sys
+
+# Mirror of required_keys() in rust/src/obs/journal.rs.
+REQUIRED = {
+    "inner": ["stage", "replica", "step", "loss", "dur_s"],
+    "offer": ["stage", "replica", "peer", "round", "frag", "bytes"],
+    "fold": ["stage", "replica", "peer", "round", "frag", "age", "bytes"],
+    "hb_miss": ["stage", "replica", "peer", "boundary"],
+    "detect": ["boundary", "node", "join"],
+    "churn": ["step", "node", "join"],
+    "sweep": ["boundary", "dropped"],
+    "boundary": ["outer_idx", "inner_s", "sync_s", "bytes", "msgs"],
+    "drain": ["outer_idx", "bytes", "msgs"],
+}
+ENVELOPE = ("v", "wall", "sim", "ev")
+
+path, coverage = sys.argv[1], sys.argv[2]
+fail = 0
+seen = set()
+lines = 0
+for i, line in enumerate(open(path), 1):
+    line = line.strip()
+    if not line:
+        continue
+    lines += 1
+    if "NaN" in line:
+        print(f"{path}:{i}: literal NaN (non-finite floats must encode as null)")
+        fail = 1
+    try:
+        m = json.loads(line)
+    except ValueError as e:
+        print(f"{path}:{i}: unparseable JSON: {e}")
+        fail = 1
+        continue
+    for k in ENVELOPE:
+        if k not in m:
+            print(f"{path}:{i}: missing envelope key {k!r}")
+            fail = 1
+    if m.get("v") != 1:
+        print(f"{path}:{i}: unknown schema version {m.get('v')!r}")
+        fail = 1
+        continue
+    ev = m.get("ev")
+    keys = REQUIRED.get(ev)
+    if keys is None:
+        print(f"{path}:{i}: unknown event {ev!r}")
+        fail = 1
+        continue
+    seen.add(ev)
+    for k in keys:
+        if k not in m:
+            print(f"{path}:{i}: {ev!r} missing required key {k!r}")
+            fail = 1
+    extra = set(m) - set(keys) - set(ENVELOPE)
+    if extra:
+        print(f"{path}:{i}: {ev!r} has undeclared keys {sorted(extra)}")
+        fail = 1
+if lines == 0:
+    print(f"{path}: empty journal")
+    fail = 1
+if coverage == "full":
+    missing = set(REQUIRED) - seen
+    if missing:
+        print(f"{path}: event types never exercised: {sorted(missing)}")
+        fail = 1
+sys.exit(fail)
+PY
+status=$?
+[ -n "$cleanup" ] && rm -f "$cleanup"
+
+if [ "$status" -ne 0 ]; then
+    echo "trace schema check FAILED ($journal)"
+    exit 1
+fi
+echo "trace schema check OK ($journal)"
