@@ -29,7 +29,9 @@ const VALUE_KEYS: &[&str] = &[
     "gamma", "warmup", "world", "sigma", "mu", "iters", "dim", "omega", "outer-steps",
     "batch-tokens", "csv", "topo", "regions", "churn", "payload", "pairing", "sync",
     "fragments", "overlap", "staleness", "stash-age", "detect", "detect-misses",
-    "trace-out", "metrics-out", "trace-level",
+    "trace-out", "metrics-out", "trace-level", "ckpt-out", "ckpt-every", "resume",
+    "fault-drop", "fault-dup", "fault-delay", "fault-delay-secs", "fault-reorder",
+    "fault-corrupt", "executor", "halt-after",
 ];
 
 impl Args {
@@ -218,6 +220,33 @@ pub fn train_config_from(args: &Args) -> Result<crate::config::TrainConfig, Stri
         cfg.obs.trace_level = crate::config::TraceLevel::parse(l)
             .ok_or_else(|| format!("unknown trace level `{l}` (off|boundary|step)"))?;
     }
+    if let Some(p) = args.opt("ckpt-out") {
+        cfg.ckpt.out = Some(p.to_string());
+    }
+    if let Some(v) = args.opt_usize("ckpt-every")? {
+        cfg.ckpt.every = v;
+    }
+    if let Some(p) = args.opt("resume") {
+        cfg.ckpt.resume = Some(p.to_string());
+    }
+    if let Some(v) = args.opt_f64("fault-drop")? {
+        cfg.faults.drop = v;
+    }
+    if let Some(v) = args.opt_f64("fault-dup")? {
+        cfg.faults.dup = v;
+    }
+    if let Some(v) = args.opt_f64("fault-delay")? {
+        cfg.faults.delay = v;
+    }
+    if let Some(v) = args.opt_f64("fault-delay-secs")? {
+        cfg.faults.delay_secs = v;
+    }
+    if let Some(v) = args.opt_f64("fault-reorder")? {
+        cfg.faults.reorder = v;
+    }
+    if let Some(v) = args.opt_f64("fault-corrupt")? {
+        cfg.faults.corrupt = v;
+    }
     // --set model.hidden=128 style overrides, applied last.
     if !args.sets.is_empty() {
         let mut text = String::new();
@@ -358,6 +387,31 @@ mod tests {
         // No sink configured: observability stays off.
         let cfg = train_config_from(&parse(&["train"])).unwrap();
         assert!(!cfg.obs.enabled());
+    }
+
+    #[test]
+    fn ckpt_and_fault_flags_plumb_through() {
+        let a = parse(&[
+            "train", "--ckpt-out", "run.ckpt", "--ckpt-every", "2", "--resume=old.ckpt",
+            "--fault-drop", "0.2", "--fault-dup", "0.1", "--fault-reorder", "0.2",
+            "--fault-corrupt", "0.05",
+        ]);
+        let cfg = train_config_from(&a).unwrap();
+        assert_eq!(cfg.ckpt.out.as_deref(), Some("run.ckpt"));
+        assert_eq!(cfg.ckpt.every, 2);
+        assert_eq!(cfg.ckpt.resume.as_deref(), Some("old.ckpt"));
+        assert!(cfg.ckpt.armed());
+        assert!((cfg.faults.drop - 0.2).abs() < 1e-12);
+        assert!((cfg.faults.corrupt - 0.05).abs() < 1e-12);
+        assert!(cfg.faults.any());
+        let plan = cfg.faults.plan();
+        assert!((plan.drop_prob - 0.2).abs() < 1e-12 && !plan.is_none());
+        // A path without a cadence never fires — rejected up front.
+        let a = parse(&["train", "--ckpt-out", "run.ckpt"]);
+        assert!(train_config_from(&a).unwrap_err().contains("ckpt.every"));
+        // Probabilities must be probabilities.
+        let a = parse(&["train", "--fault-drop", "1.5"]);
+        assert!(train_config_from(&a).unwrap_err().contains("probability"));
     }
 
     #[test]

@@ -559,6 +559,82 @@ impl ObsConfig {
     }
 }
 
+/// Crash-recovery knobs (the `[ckpt]` TOML section / `--ckpt-out`,
+/// `--ckpt-every`, `--resume` CLI flags). Checkpoints cut at outer
+/// boundaries — after the fold and any eval of the closing step — so a
+/// resumed run replays the exact trajectory suffix (losses and
+/// communication accounting bit-for-bit; wall-clock excluded).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CkptConfig {
+    /// Checkpoint file path (`ckpt.out` / `--ckpt-out`). Written
+    /// atomically (tmp + rename); each write replaces the previous one.
+    pub out: Option<String>,
+    /// Auto-checkpoint cadence in *outer boundaries* (`ckpt.every` /
+    /// `--ckpt-every`; 0 = never). A value of `k` snapshots every `k`-th
+    /// boundary.
+    pub every: usize,
+    /// Resume from this checkpoint file before training
+    /// (`ckpt.resume` / `--resume`).
+    pub resume: Option<String>,
+}
+
+impl CkptConfig {
+    /// Whether the periodic writer is armed (both a path and a cadence).
+    pub fn armed(&self) -> bool {
+        self.out.is_some() && self.every > 0
+    }
+}
+
+/// Fault-injection knobs for the threaded executor's in-process fabric
+/// (the `[faults]` TOML section / `--fault-*` CLI flags). All
+/// probabilities are per-message and drawn from a deterministic
+/// per-receiver RNG seeded off `train.seed`, so a faulty run is exactly
+/// reproducible. The grid executor's mailbox is lossless; these knobs
+/// only apply to `--executor threads`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultsConfig {
+    /// Probability a message is silently dropped (`faults.drop`).
+    pub drop: f64,
+    /// Probability a message is delivered twice (`faults.dup`).
+    pub dup: f64,
+    /// Probability a message is held back `delay_secs` before delivery
+    /// (`faults.delay`).
+    pub delay: f64,
+    /// Hold-back duration in seconds for delayed messages
+    /// (`faults.delay_secs`).
+    pub delay_secs: f64,
+    /// Probability a message is swapped behind its successor
+    /// (`faults.reorder`).
+    pub reorder: f64,
+    /// Probability a message's payload is bit-flipped in flight; CRC
+    /// framing detects and drops it on receive, counted per rank
+    /// (`faults.corrupt`).
+    pub corrupt: f64,
+}
+
+impl FaultsConfig {
+    /// Whether any fault is configured.
+    pub fn any(&self) -> bool {
+        self.drop > 0.0
+            || self.dup > 0.0
+            || self.delay > 0.0
+            || self.reorder > 0.0
+            || self.corrupt > 0.0
+    }
+
+    /// Lower into the fabric's [`FaultPlan`](crate::net::FaultPlan).
+    pub fn plan(&self) -> crate::net::FaultPlan {
+        crate::net::FaultPlan {
+            drop_prob: self.drop,
+            dup_prob: self.dup,
+            delay_prob: self.delay,
+            delay_secs: self.delay_secs,
+            reorder_prob: self.reorder,
+            corrupt_prob: self.corrupt,
+        }
+    }
+}
+
 /// Synthetic corpus flavour (dataset substitution; see DESIGN.md §4).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dataset {
@@ -633,6 +709,12 @@ pub struct TrainConfig {
     /// Observability sinks (the `[obs]` section): run journal, live
     /// metrics snapshot, journal verbosity.
     pub obs: ObsConfig,
+    /// Crash recovery (the `[ckpt]` section): periodic full-fidelity
+    /// checkpoints and resume.
+    pub ckpt: CkptConfig,
+    /// Fault injection for the threaded executor's fabric (the
+    /// `[faults]` section).
+    pub faults: FaultsConfig,
 }
 
 impl TrainConfig {
@@ -705,6 +787,15 @@ impl TrainConfig {
                 "churn.misses" => set_usize(&mut self.detect.misses, v),
                 "obs.trace_out" => set_opt_string(&mut self.obs.trace_out, v),
                 "obs.metrics_out" => set_opt_string(&mut self.obs.metrics_out, v),
+                "ckpt.out" => set_opt_string(&mut self.ckpt.out, v),
+                "ckpt.every" => set_usize(&mut self.ckpt.every, v),
+                "ckpt.resume" => set_opt_string(&mut self.ckpt.resume, v),
+                "faults.drop" => set_f64(&mut self.faults.drop, v),
+                "faults.dup" => set_f64(&mut self.faults.dup, v),
+                "faults.delay" => set_f64(&mut self.faults.delay, v),
+                "faults.delay_secs" => set_f64(&mut self.faults.delay_secs, v),
+                "faults.reorder" => set_f64(&mut self.faults.reorder, v),
+                "faults.corrupt" => set_f64(&mut self.faults.corrupt, v),
                 "obs.trace_level" => match v.as_str().and_then(TraceLevel::parse) {
                     Some(l) => {
                         self.obs.trace_level = l;
@@ -850,6 +941,30 @@ impl TrainConfig {
         }
         if self.net.preset == NetPreset::HierarchicalDc && self.net.racks_per_pod == 0 {
             return Err("topology.racks_per_pod must be >= 1".into());
+        }
+        for (name, p) in [
+            ("faults.drop", self.faults.drop),
+            ("faults.dup", self.faults.dup),
+            ("faults.delay", self.faults.delay),
+            ("faults.reorder", self.faults.reorder),
+            ("faults.corrupt", self.faults.corrupt),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("{name} must be a probability in [0, 1], got {p}"));
+            }
+        }
+        if self.faults.delay_secs < 0.0 {
+            return Err(format!(
+                "faults.delay_secs must be >= 0, got {}",
+                self.faults.delay_secs
+            ));
+        }
+        if self.ckpt.out.is_some() && self.ckpt.every == 0 {
+            return Err(
+                "ckpt.out is set but ckpt.every = 0: the periodic writer never fires; \
+                 set a boundary cadence (ckpt.every >= 1)"
+                    .into(),
+            );
         }
         Ok(())
     }

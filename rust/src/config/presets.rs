@@ -11,8 +11,9 @@
 //! optimizer settings, smaller width/depth/vocab.
 
 use super::{
-    Dataset, DetectConfig, Method, ModelConfig, NetTopoConfig, ObsConfig, OuterConfig,
-    PairingMode, Routing, StreamConfig, SyncMode, TopologyConfig, TrainConfig,
+    CkptConfig, Dataset, DetectConfig, FaultsConfig, Method, ModelConfig, NetTopoConfig,
+    ObsConfig, OuterConfig, PairingMode, Routing, StreamConfig, SyncMode, TopologyConfig,
+    TrainConfig,
 };
 use crate::net::topo::ChurnSchedule;
 
@@ -56,6 +57,8 @@ fn base(model: ModelConfig, steps: usize, warmup: usize) -> TrainConfig {
         stream: StreamConfig::default(),
         detect: DetectConfig::default(),
         obs: ObsConfig::default(),
+        ckpt: CkptConfig::default(),
+        faults: FaultsConfig::default(),
     }
 }
 

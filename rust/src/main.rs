@@ -8,6 +8,8 @@
 //! * `topo`             — analyze the configured network topology (sync costs)
 //! * `artifacts`        — inventory the compiled artifact builds
 //! * `check`            — validate a config + artifact pairing, no training
+//! * `drill`            — kill-restart drill: checkpoint, drop state, resume,
+//!                        assert the trajectory is bit-identical
 //! * `obs-smoke`        — emit a small sample trace journal (schema tooling)
 //! * `bench-baseline`   — write the deterministic cost-model baseline JSON
 //!
@@ -37,6 +39,7 @@ fn main() {
         "topo" => cmd_topo(&args),
         "artifacts" => cmd_artifacts(&args),
         "check" => cmd_check(&args),
+        "drill" => cmd_drill(&args),
         "obs-smoke" => cmd_obs_smoke(&args),
         "bench-baseline" => cmd_bench_baseline(&args),
         "help" | "--help" | "-h" => {
@@ -66,6 +69,7 @@ fn print_help() {
            topo             analyze the configured network topology\n\
            artifacts        inventory compiled artifact builds\n\
            check            validate config + artifacts without training\n\
+           drill            kill-restart drill: ckpt, drop state, resume, compare\n\
            obs-smoke        emit a small sample trace journal (--out FILE)\n\
            bench-baseline   write the cost-model baseline JSON (--out FILE)\n\n\
          OPTIONS:\n\
@@ -99,6 +103,17 @@ fn print_help() {
            --trace-out FILE     write the structured run journal (JSONL)\n\
            --metrics-out FILE   atomically rewrite a live metrics snapshot every boundary\n\
            --trace-level L      journal detail: off | boundary | step (default: step)\n\
+           --ckpt-out FILE      write full-fidelity checkpoints here (atomic tmp+rename)\n\
+           --ckpt-every K       checkpoint cadence in outer boundaries (0 = never)\n\
+           --resume FILE        resume training from a checkpoint file\n\
+           --fault-drop P       threaded: per-message drop probability\n\
+           --fault-dup P        threaded: per-message duplication probability\n\
+           --fault-delay P      threaded: per-message delay probability\n\
+           --fault-delay-secs S threaded: hold-back duration for delayed messages\n\
+           --fault-reorder P    threaded: adjacent-swap reorder probability\n\
+           --fault-corrupt P    threaded: bit-flip probability (CRC drops + counts)\n\
+           --executor E         drill: grid | threads | both (default: both)\n\
+           --halt-after B       drill: boundary to kill at (default: mid-run)\n\
            --payload BYTES      topo: sync payload (default: model size)"
     );
 }
@@ -135,6 +150,11 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     println!("artifacts: {}", dir.display());
     let mut eng = Engine::new(dir)?;
     let mut trainer = SimTrainer::new(cfg.clone(), &mut eng)?;
+    if let Some(path) = &cfg.ckpt.resume {
+        let ck = noloco::train::Checkpoint::load(path)?;
+        trainer.resume_from(&ck)?;
+        println!("resumed from {path} (boundary {}, step {})", ck.outer_idx, ck.step);
+    }
     let report = trainer.run()?;
     println!(
         "done in {:.1}s | {} executions | final val nll {:.4} (ppl {:.2})",
@@ -331,6 +351,139 @@ fn cmd_check(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Kill-restart drill: run the configured training three ways and assert
+/// crash recovery is invisible in the trajectory.
+///
+/// * **A (reference)** — one uninterrupted run.
+/// * **B (killed)** — same config with the `[ckpt]` cadence armed; every
+///   worker halts right after the checkpoint covering `--halt-after`
+///   (default: the mid-run boundary) hits disk, dropping all state.
+/// * **C (resumed)** — a fresh trainer resumes from the file and runs to
+///   completion.
+///
+/// C must match A bit-for-bit on every per-step training loss and on the
+/// full communication accounting (wire bytes/messages included); only
+/// wall-clock is exempt. Runs on the grid executor, the threaded
+/// executor, or both (`--executor`).
+fn cmd_drill(args: &Args) -> anyhow::Result<()> {
+    use noloco::train::{Checkpoint, TrainReport};
+
+    let cfg = cli::train_config_from(args).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(
+        cfg.ckpt.resume.is_none(),
+        "drill manages its own checkpoint lifecycle; drop --resume"
+    );
+    let m = cfg.outer.inner_steps.max(1) as u64;
+    let boundaries = cfg.steps as u64 / m;
+    anyhow::ensure!(
+        boundaries >= 2,
+        "drill needs at least 2 outer boundaries to kill mid-run \
+         (steps = {}, inner_steps = {m} gives {boundaries})",
+        cfg.steps
+    );
+    let halt = match args.opt_u64("halt-after").map_err(anyhow::Error::msg)? {
+        Some(b) => {
+            anyhow::ensure!(
+                b >= 1 && b < boundaries,
+                "--halt-after must be in 1..{boundaries} (killing at the final \
+                 boundary leaves nothing to resume)"
+            );
+            b
+        }
+        None => (boundaries / 2).max(1),
+    };
+    let ckpt_path = match args.opt("ckpt-out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => std::env::temp_dir().join(format!("noloco_drill_{}.ckpt", std::process::id())),
+    };
+    let executor = args.opt("executor").unwrap_or("both");
+    let (run_grid, run_threads) = match executor {
+        "grid" => (true, false),
+        "threads" | "threaded" => (false, true),
+        "both" => (true, true),
+        other => anyhow::bail!("--executor expects grid | threads | both, got `{other}`"),
+    };
+    println!(
+        "drill: {} | {} | dp={} pp={} | {} steps ({} boundaries) | kill after boundary \
+         {halt} | ckpt {}",
+        cfg.model.name,
+        cfg.outer.method,
+        cfg.topology.dp,
+        cfg.topology.pp,
+        cfg.steps,
+        boundaries,
+        ckpt_path.display()
+    );
+
+    // B's config: cadence armed so the checkpoint covering `halt` is cut
+    // exactly there (`every = halt` fires first at boundary `halt`).
+    let mut cfg_b = cfg.clone();
+    cfg_b.ckpt.out = Some(ckpt_path.display().to_string());
+    cfg_b.ckpt.every = halt as usize;
+
+    let compare = |name: &str, a: &TrainReport, c: &TrainReport| -> anyhow::Result<()> {
+        anyhow::ensure!(
+            a.step_train_loss.len() == c.step_train_loss.len(),
+            "{name}: loss trace lengths differ ({} vs {})",
+            a.step_train_loss.len(),
+            c.step_train_loss.len()
+        );
+        for (i, (x, y)) in a.step_train_loss.iter().zip(&c.step_train_loss).enumerate() {
+            anyhow::ensure!(
+                x.to_bits() == y.to_bits(),
+                "{name}: step {i} train loss diverged after resume: {x} vs {y}"
+            );
+        }
+        anyhow::ensure!(
+            a.comm == c.comm,
+            "{name}: communication accounting diverged after resume:\n  \
+             reference {:?}\n  resumed   {:?}",
+            a.comm,
+            c.comm
+        );
+        println!(
+            "{name}: resumed trajectory bit-identical ({} step losses, comm {:.1} MiB / {} msgs)",
+            c.step_train_loss.len(),
+            c.comm.mib_sent(),
+            c.comm.msgs_sent
+        );
+        Ok(())
+    };
+
+    if run_grid {
+        let dir = find_build(&cfg.artifacts_dir, &cfg.model.name, cfg.topology.pp)?;
+        let mut eng = Engine::new(&dir)?;
+        let reference = SimTrainer::new(cfg.clone(), &mut eng)?.run()?;
+        let _killed = SimTrainer::new(cfg_b.clone(), &mut eng)?.halt_after(halt).run()?;
+        println!("drill(grid): killed run stopped after step {} of {}", halt * m, cfg.steps);
+        let ck = Checkpoint::load(&ckpt_path)?;
+        anyhow::ensure!(
+            ck.outer_idx == halt,
+            "checkpoint covers boundary {} but the drill killed at {halt}",
+            ck.outer_idx
+        );
+        let mut resumed = SimTrainer::new(cfg.clone(), &mut eng)?;
+        resumed.resume_from(&ck)?;
+        let resumed = resumed.run()?;
+        compare("drill(grid)", &reference, &resumed)?;
+    }
+    if run_threads {
+        let reference = ThreadedTrainer::new(cfg.clone()).run()?;
+        ThreadedTrainer::new(cfg_b.clone()).with_halt_after(halt).run()?;
+        let ck = Checkpoint::load(&ckpt_path)?;
+        anyhow::ensure!(
+            ck.outer_idx == halt,
+            "checkpoint covers boundary {} but the drill killed at {halt}",
+            ck.outer_idx
+        );
+        let resumed = ThreadedTrainer::new(cfg.clone()).with_resume(ck).run()?;
+        compare("drill(threads)", &reference, &resumed)?;
+    }
+    let _ = std::fs::remove_file(&ckpt_path);
+    println!("drill OK");
+    Ok(())
+}
+
 /// Emit a small synthetic journal covering every event type — no
 /// artifacts or training needed. `scripts/check_trace_schema.sh`
 /// validates its output against the schema table.
@@ -367,6 +520,8 @@ fn cmd_obs_smoke(args: &Args) -> anyhow::Result<()> {
     hub.record(100, Event::ChurnApplied { step: 100, node: 0, join: true });
     let (bytes, msgs) = comm.wire_totals();
     hub.record(99, Event::Boundary { outer_idx: 2, inner_s: 0.5, sync_s: 0.05, bytes, msgs });
+    hub.record(99, Event::Ckpt { boundary: 2, step: 100, bytes: 65536 });
+    hub.record(100, Event::Resume { boundary: 2, step: 100 });
     hub.record(100, Event::Drain { outer_idx: 2, bytes: 0, msgs: 0 });
     let report = hub.report();
     let events: u64 = report.counters.iter().map(|(_, v)| v).sum();

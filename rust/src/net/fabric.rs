@@ -9,8 +9,18 @@
 //!
 //! Latency injection: a message may carry a `deliver_at` instant; `recv`
 //! waits until then, modelling link latency without occupying the sender
-//! thread. Fault injection ([`FaultPlan`]) drops or duplicates messages
-//! deterministically for robustness tests.
+//! thread. Fault injection ([`FaultPlan`]) drops, duplicates, delays,
+//! reorders or corrupts messages deterministically for robustness tests.
+//!
+//! # CRC framing
+//!
+//! Every message carries a CRC-32 of its payload, computed at `send`
+//! *before* fault injection gets a chance to corrupt the frame. Receivers
+//! verify the CRC the moment a message is pulled off the channel: a
+//! mismatching frame is dropped on the floor and counted (per receiving
+//! rank, [`Fabric::corrupt_dropped`]) — it never reaches the stash, so a
+//! corrupt frame behaves exactly like a dropped one from the protocol's
+//! point of view and the straggler/staleness fallbacks absorb it.
 //!
 //! # Determinism guarantees
 //!
@@ -18,18 +28,29 @@
 //! [`Pcg64`] seeded as `seed ^ rank · φ64` at construction. Consequences:
 //!
 //! * Given the same fabric seed and the same per-endpoint sequence of
-//!   `send` calls, the exact same messages are dropped / duplicated on
-//!   every run — regardless of thread scheduling, because no endpoint's
-//!   RNG is shared.
+//!   `send` calls, the exact same messages are dropped / duplicated /
+//!   delayed / reordered / corrupted on every run — regardless of thread
+//!   scheduling, because no endpoint's RNG is shared.
 //! * Each `send` consumes one RNG draw for the drop decision (when
 //!   `drop_prob > 0`), then — only if the message survived — one draw
-//!   for latency (when enabled) and one for the duplicate decision (when
-//!   `dup_prob > 0`). Drop and duplicate probabilities therefore compose
-//!   independently per message: a message is delivered twice with
-//!   probability `(1 − p_drop) · p_dup`, once with
-//!   `(1 − p_drop)(1 − p_dup)`, and never with `p_drop`.
-//! * A duplicated message reuses the original's `deliver_at`, so both
-//!   copies become receivable at the same instant.
+//!   for latency (when enabled), one for the duplicate decision (when
+//!   `dup_prob > 0`), one for extra delay (when `delay_prob > 0`), one
+//!   for reorder (when `reorder_prob > 0`) and one-plus-one for the
+//!   corrupt decision and the flipped bit (when `corrupt_prob > 0`) — in
+//!   exactly that order. Every new draw is gated on its probability
+//!   being positive, so configs that only use drop/dup reproduce the
+//!   same fault pattern they always did under a given seed.
+//! * Drop and duplicate probabilities compose independently per message:
+//!   a message is delivered twice with probability
+//!   `(1 − p_drop) · p_dup`, once with `(1 − p_drop)(1 − p_dup)`, and
+//!   never with `p_drop`.
+//! * A duplicated message reuses the original's `deliver_at` (and, when
+//!   corruption fired, its corrupted payload), so both copies become
+//!   receivable at the same instant and fail the CRC together.
+//! * A reordered message is held back by its sender and released right
+//!   after that sender's *next* `send` call (or at endpoint drop) — a
+//!   deterministic adjacent swap in the sender's own stream; nothing is
+//!   ever lost to reordering.
 //!
 //! Receive-side ordering (which of two racing senders lands first) is
 //! *not* deterministic; tag-matched [`Endpoint::recv`] exists precisely
@@ -115,6 +136,55 @@ pub struct Message {
     pub payload: Payload,
     /// Earliest delivery instant (latency injection), if any.
     deliver_at: Option<Instant>,
+    /// CRC-32 of the payload as the sender framed it (pre-corruption).
+    crc: u32,
+}
+
+/// CRC-32 (IEEE 802.3 polynomial, reflected) over a byte stream.
+fn crc32_update(mut crc: u32, bytes: impl IntoIterator<Item = u8>) -> u32 {
+    for b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xedb8_8320 & mask);
+        }
+    }
+    crc
+}
+
+/// CRC-32 of a payload's wire bytes (little-endian element order).
+pub fn payload_crc(p: &Payload) -> u32 {
+    let crc = match p {
+        Payload::F32(v) => v.iter().fold(0xffff_ffff, |c, x| {
+            crc32_update(c, x.to_bits().to_le_bytes())
+        }),
+        Payload::U32(v) => v
+            .iter()
+            .fold(0xffff_ffff, |c, x| crc32_update(c, x.to_le_bytes())),
+        Payload::Control => 0xffff_ffff,
+    };
+    !crc
+}
+
+/// Flip one payload bit chosen by `r`; returns false when the payload has
+/// no bytes to flip (pure control frames — the caller corrupts the CRC
+/// field instead, which the receiver detects the same way).
+fn corrupt_payload(p: &mut Payload, r: u64) -> bool {
+    match p {
+        Payload::F32(v) if !v.is_empty() => {
+            let i = ((r >> 5) as usize) % v.len();
+            let bit = (r & 31) as u32;
+            v[i] = f32::from_bits(v[i].to_bits() ^ (1u32 << bit));
+            true
+        }
+        Payload::U32(v) if !v.is_empty() => {
+            let i = ((r >> 5) as usize) % v.len();
+            let bit = (r & 31) as u32;
+            v[i] ^= 1u32 << bit;
+            true
+        }
+        _ => false,
+    }
 }
 
 /// Deterministic fault injection for tests (see the module docs for the
@@ -125,6 +195,16 @@ pub struct FaultPlan {
     pub drop_prob: f64,
     /// Probability a message is delivered twice.
     pub dup_prob: f64,
+    /// Probability a message's delivery is postponed by `delay_secs`.
+    pub delay_prob: f64,
+    /// Extra delivery delay, in seconds, when the delay fault fires.
+    pub delay_secs: f64,
+    /// Probability a message is held back until the sender's next send
+    /// (an adjacent swap in that sender's stream).
+    pub reorder_prob: f64,
+    /// Probability one payload bit is flipped in flight; the receiver's
+    /// CRC check drops and counts such frames.
+    pub corrupt_prob: f64,
 }
 
 impl FaultPlan {
@@ -135,7 +215,11 @@ impl FaultPlan {
 
     /// True when no faults can fire.
     pub fn is_none(&self) -> bool {
-        self.drop_prob <= 0.0 && self.dup_prob <= 0.0
+        self.drop_prob <= 0.0
+            && self.dup_prob <= 0.0
+            && self.delay_prob <= 0.0
+            && self.reorder_prob <= 0.0
+            && self.corrupt_prob <= 0.0
     }
 }
 
@@ -143,6 +227,8 @@ struct Shared {
     senders: Vec<Sender<Message>>,
     bytes_sent: Mutex<Vec<u64>>,
     msgs_sent: Mutex<Vec<u64>>,
+    /// Frames a *receiving* rank discarded on CRC mismatch.
+    corrupt_dropped: Mutex<Vec<u64>>,
 }
 
 /// The fabric: construct once, then [`Fabric::take_endpoints`] and hand
@@ -171,6 +257,7 @@ impl Fabric {
             senders,
             bytes_sent: Mutex::new(vec![0; n]),
             msgs_sent: Mutex::new(vec![0; n]),
+            corrupt_dropped: Mutex::new(vec![0; n]),
         });
         let endpoints = receivers
             .into_iter()
@@ -184,6 +271,7 @@ impl Fabric {
                     latency: None,
                     faults: faults.clone(),
                     rng: Pcg64::seed_from_u64(seed ^ (rank as u64).wrapping_mul(0x9e3779b97f4a7c15)),
+                    held: None,
                 })
             })
             .collect();
@@ -213,6 +301,12 @@ impl Fabric {
     pub fn msgs_sent(&self) -> Vec<u64> {
         self.shared.msgs_sent.lock().unwrap().clone()
     }
+
+    /// Frames each *receiving* rank discarded on CRC mismatch (corrupt
+    /// fault injection caught by the framing layer).
+    pub fn corrupt_dropped(&self) -> Vec<u64> {
+        self.shared.corrupt_dropped.lock().unwrap().clone()
+    }
 }
 
 /// One worker's handle on the fabric.
@@ -224,6 +318,18 @@ pub struct Endpoint {
     latency: Option<(f64, f64)>, // (mu, sigma) log-normal seconds
     faults: FaultPlan,
     rng: Pcg64,
+    /// A reorder-faulted message held until the next send (or drop).
+    held: Option<(usize, Message)>,
+}
+
+impl Drop for Endpoint {
+    fn drop(&mut self) {
+        // A held (reordered) message is late, never lost: flush it when
+        // the endpoint retires without another send.
+        if let Some((to, msg)) = self.held.take() {
+            let _ = self.shared.senders[to].send(msg);
+        }
+    }
 }
 
 impl Endpoint {
@@ -253,7 +359,9 @@ impl Endpoint {
         (bytes, msgs)
     }
 
-    /// Send `payload` to `to` under `tag`.
+    /// Send `payload` to `to` under `tag`. Fault/latency RNG draws follow
+    /// the fixed order documented at module level: drop → latency → dup →
+    /// delay → reorder → corrupt, each gated on its knob being active.
     pub fn send(&mut self, to: usize, tag: Tag, payload: Payload) {
         {
             let mut b = self.shared.bytes_sent.lock().unwrap();
@@ -261,29 +369,112 @@ impl Endpoint {
             let mut m = self.shared.msgs_sent.lock().unwrap();
             m[self.rank] += 1;
         }
+        // The CRC frames the payload *as intended* — corruption below
+        // mutates the payload only, which is what receivers detect.
+        let crc = payload_crc(&payload);
         if self.faults.drop_prob > 0.0 && self.rng.next_f64() < self.faults.drop_prob {
+            self.release_held();
             return; // dropped on the floor
         }
-        let deliver_at = self.latency.map(|(mu, sigma)| {
+        let mut deliver_at = self.latency.map(|(mu, sigma)| {
             Instant::now() + Duration::from_secs_f64(self.rng.log_normal(mu, sigma))
         });
-        let msg = Message {
-            from: self.rank,
-            tag,
-            payload: payload.clone(),
-            deliver_at,
-        };
         let dup = self.faults.dup_prob > 0.0 && self.rng.next_f64() < self.faults.dup_prob;
-        // A send to a hung-up receiver is not an error for the sender —
-        // that worker has already finished (e.g. trailing gossip traffic).
-        let _ = self.shared.senders[to].send(msg);
+        if self.faults.delay_prob > 0.0 && self.rng.next_f64() < self.faults.delay_prob {
+            let extra = Duration::from_secs_f64(self.faults.delay_secs.max(0.0));
+            deliver_at = Some(deliver_at.unwrap_or_else(Instant::now) + extra);
+        }
+        let reorder =
+            self.faults.reorder_prob > 0.0 && self.rng.next_f64() < self.faults.reorder_prob;
+        let mut payload = payload;
+        let mut crc = crc;
+        if self.faults.corrupt_prob > 0.0 && self.rng.next_f64() < self.faults.corrupt_prob {
+            let r = self.rng.next_u64();
+            if !corrupt_payload(&mut payload, r) {
+                crc ^= 1; // control frame: corrupt the frame check itself
+            }
+        }
+        let msg = Message { from: self.rank, tag, payload: payload.clone(), deliver_at, crc };
         if dup {
+            // The duplicate shares the original's deliver_at and (possibly
+            // corrupted) payload; a send to a hung-up receiver is not an
+            // error for the sender — that worker has already finished.
             let _ = self.shared.senders[to].send(Message {
                 from: self.rank,
                 tag,
                 payload,
                 deliver_at,
+                crc,
             });
+        }
+        if reorder {
+            // Hold this message until the next send; an already-held one
+            // is released first (oldest-first, nothing accumulates).
+            self.release_held();
+            self.held = Some((to, msg));
+        } else {
+            let _ = self.shared.senders[to].send(msg);
+            self.release_held();
+        }
+    }
+
+    fn release_held(&mut self) {
+        if let Some((to, msg)) = self.held.take() {
+            let _ = self.shared.senders[to].send(msg);
+        }
+    }
+
+    /// Checkpoint-replay send: no wire metering, no fault or latency RNG
+    /// draws, immediate delivery. Resume uses this to re-publish retained
+    /// offers without double-counting traffic the interrupted run already
+    /// metered or perturbing the deterministic fault stream.
+    pub fn send_unmetered(&mut self, to: usize, tag: Tag, payload: Payload) {
+        let crc = payload_crc(&payload);
+        let _ = self.shared.senders[to].send(Message {
+            from: self.rank,
+            tag,
+            payload,
+            deliver_at: None,
+            crc,
+        });
+    }
+
+    /// The fault RNG's raw state, for checkpointing mid-run so a resumed
+    /// endpoint reproduces the interrupted run's remaining fault stream.
+    pub fn fault_rng_state(&self) -> (u128, u128) {
+        self.rng.state_parts()
+    }
+
+    /// Restore a fault RNG state captured by [`Endpoint::fault_rng_state`].
+    pub fn restore_fault_rng(&mut self, state: u128, inc: u128) {
+        self.rng = Pcg64::from_state_parts(state, inc);
+    }
+
+    /// Reset this rank's shared wire counters to checkpointed totals, so
+    /// a resumed run's cumulative metering continues where the
+    /// interrupted run left off.
+    pub fn restore_sent_totals(&self, bytes: u64, msgs: u64) {
+        self.shared.bytes_sent.lock().unwrap()[self.rank] = bytes;
+        self.shared.msgs_sent.lock().unwrap()[self.rank] = msgs;
+    }
+
+    /// Verify an incoming frame's CRC; a mismatch counts against this
+    /// (receiving) rank and the frame must be discarded by the caller.
+    fn frame_ok(&self, msg: &Message) -> bool {
+        if msg.crc == payload_crc(&msg.payload) {
+            true
+        } else {
+            self.shared.corrupt_dropped.lock().unwrap()[self.rank] += 1;
+            false
+        }
+    }
+
+    /// Drain the channel into the stash, discarding CRC-corrupt frames.
+    fn drain_into_stash(&mut self) {
+        while let Ok(msg) = self.rx.try_recv() {
+            if self.frame_ok(&msg) {
+                self.stash.push(msg);
+            }
         }
     }
 
@@ -309,6 +500,9 @@ impl Endpoint {
                 .rx
                 .recv()
                 .expect("fabric hung up while a recv was outstanding");
+            if !self.frame_ok(&msg) {
+                continue; // corrupt frame: dropped and counted
+            }
             if msg.tag == tag {
                 Self::honor_latency(&msg);
                 return msg;
@@ -329,6 +523,7 @@ impl Endpoint {
         loop {
             let left = deadline.saturating_duration_since(Instant::now());
             match self.rx.recv_timeout(left) {
+                Ok(msg) if !self.frame_ok(&msg) => {} // corrupt: drop + count
                 Ok(msg) if msg.tag == tag => {
                     Self::honor_latency(&msg);
                     return Some(msg);
@@ -355,9 +550,7 @@ impl Endpoint {
     /// model, which is what the polling paths (heartbeats, staleness
     /// fallback probes) require.
     pub fn try_recv_ready(&mut self, tag: Tag) -> Option<Message> {
-        while let Ok(msg) = self.rx.try_recv() {
-            self.stash.push(msg);
-        }
+        self.drain_into_stash();
         let now = Instant::now();
         let i = self.stash.iter().position(|m| {
             m.tag == tag
@@ -375,9 +568,7 @@ impl Endpoint {
     /// collects re-admit a peer's older offer at later boundaries; the
     /// stash-expiry sweep reclaims them).
     pub fn peek_ready(&mut self, tag: Tag) -> Option<Payload> {
-        while let Ok(msg) = self.rx.try_recv() {
-            self.stash.push(msg);
-        }
+        self.drain_into_stash();
         let now = Instant::now();
         self.stash
             .iter()
@@ -400,9 +591,7 @@ impl Endpoint {
     /// tag-age predicate at a cadence of their choosing (the trainers
     /// sweep once per outer boundary).
     pub fn sweep_stash<F: FnMut(&Tag) -> bool>(&mut self, mut keep: F) -> usize {
-        while let Ok(msg) = self.rx.try_recv() {
-            self.stash.push(msg);
-        }
+        self.drain_into_stash();
         let before = self.stash.len();
         self.stash.retain(|m| keep(&m.tag));
         before - self.stash.len()
@@ -415,9 +604,14 @@ impl Endpoint {
             Self::honor_latency(&msg);
             return msg;
         }
-        let msg = self.rx.recv().expect("fabric hung up");
-        Self::honor_latency(&msg);
-        msg
+        loop {
+            let msg = self.rx.recv().expect("fabric hung up");
+            if !self.frame_ok(&msg) {
+                continue; // corrupt frame: dropped and counted
+            }
+            Self::honor_latency(&msg);
+            return msg;
+        }
     }
 }
 
@@ -477,10 +671,7 @@ mod tests {
     fn drops_cause_timeouts() {
         let mut f = Fabric::with_faults(
             2,
-            FaultPlan {
-                drop_prob: 1.0,
-                dup_prob: 0.0,
-            },
+            FaultPlan { drop_prob: 1.0, ..FaultPlan::none() },
             3,
         );
         let mut eps = f.take_endpoints();
@@ -496,10 +687,7 @@ mod tests {
     fn duplicates_are_observable_and_matchable() {
         let mut f = Fabric::with_faults(
             2,
-            FaultPlan {
-                drop_prob: 0.0,
-                dup_prob: 1.0,
-            },
+            FaultPlan { dup_prob: 1.0, ..FaultPlan::none() },
             4,
         );
         let mut eps = f.take_endpoints();
@@ -518,8 +706,11 @@ mod tests {
     fn fault_plan_none_is_fault_free() {
         assert!(FaultPlan::none().is_none());
         assert_eq!(FaultPlan::none(), FaultPlan::default());
-        assert!(!FaultPlan { drop_prob: 0.1, dup_prob: 0.0 }.is_none());
-        assert!(!FaultPlan { drop_prob: 0.0, dup_prob: 0.1 }.is_none());
+        assert!(!FaultPlan { drop_prob: 0.1, ..FaultPlan::none() }.is_none());
+        assert!(!FaultPlan { dup_prob: 0.1, ..FaultPlan::none() }.is_none());
+        assert!(!FaultPlan { delay_prob: 0.1, ..FaultPlan::none() }.is_none());
+        assert!(!FaultPlan { reorder_prob: 0.1, ..FaultPlan::none() }.is_none());
+        assert!(!FaultPlan { corrupt_prob: 0.1, ..FaultPlan::none() }.is_none());
     }
 
     #[test]
@@ -529,7 +720,7 @@ mod tests {
         // message dies even though dup_prob = 1.
         let mut f = Fabric::with_faults(
             2,
-            FaultPlan { drop_prob: 1.0, dup_prob: 1.0 },
+            FaultPlan { drop_prob: 1.0, dup_prob: 1.0, ..FaultPlan::none() },
             11,
         );
         let mut eps = f.take_endpoints();
@@ -554,7 +745,7 @@ mod tests {
         let deliveries = |seed: u64| -> Vec<usize> {
             let mut f = Fabric::with_faults(
                 2,
-                FaultPlan { drop_prob: 0.4, dup_prob: 0.4 },
+                FaultPlan { drop_prob: 0.4, dup_prob: 0.4, ..FaultPlan::none() },
                 seed,
             );
             let mut eps = f.take_endpoints();
@@ -611,6 +802,227 @@ mod tests {
         assert!(e0
             .recv_timeout(Tag::new(7, 1, 0), Duration::from_millis(5))
             .is_none());
+    }
+
+    #[test]
+    fn delay_fault_is_deterministic_per_seed() {
+        // Which messages get the extra delay is a sender-side RNG
+        // decision: same seed ⇒ same delayed set; the delayed ones are
+        // not ready immediately but are never lost.
+        let delayed_set = |seed: u64| -> Vec<bool> {
+            let mut f = Fabric::with_faults(
+                2,
+                FaultPlan { delay_prob: 0.5, delay_secs: 0.3, ..FaultPlan::none() },
+                seed,
+            );
+            let mut eps = f.take_endpoints();
+            let mut e1 = eps.pop().unwrap();
+            let mut e0 = eps.pop().unwrap();
+            let n = 16u32;
+            for k in 0..n {
+                e1.send(0, Tag::new(1, k, 0), Payload::Control);
+            }
+            // A non-delayed message is ready at once; a delayed one is
+            // visible in the stash but not deliverable yet.
+            let pattern: Vec<bool> = (0..n)
+                .map(|k| e0.try_recv_ready(Tag::new(1, k, 0)).is_none())
+                .collect();
+            // Nothing is lost: blocking recv honors the delay and returns.
+            for (k, &was_delayed) in pattern.iter().enumerate() {
+                if was_delayed {
+                    let m = e0.recv(Tag::new(1, k as u32, 0));
+                    assert_eq!(m.payload, Payload::Control);
+                }
+            }
+            pattern
+        };
+        let a = delayed_set(21);
+        assert!(a.iter().any(|&d| d), "no delay observed");
+        assert!(a.iter().any(|&d| !d), "everything delayed");
+        assert_eq!(a, delayed_set(21), "same seed must reproduce the delayed set");
+        assert_ne!(a, delayed_set(22), "different seeds should differ");
+    }
+
+    #[test]
+    fn reorder_fault_is_deterministic_per_seed() {
+        // A reordered message is released right after its sender's next
+        // send — a deterministic adjacent swap. Same seed ⇒ same arrival
+        // order at the receiver (single sender, so channel FIFO order is
+        // exactly the sender's release order).
+        let arrival_order = |seed: u64| -> Vec<u32> {
+            let mut f = Fabric::with_faults(
+                2,
+                FaultPlan { reorder_prob: 0.5, ..FaultPlan::none() },
+                seed,
+            );
+            let mut eps = f.take_endpoints();
+            let mut e1 = eps.pop().unwrap();
+            let mut e0 = eps.pop().unwrap();
+            let n = 32u32;
+            for k in 0..n {
+                e1.send(0, Tag::new(1, k, 0), Payload::Control);
+            }
+            drop(e1); // flush a trailing held message
+            (0..n).map(|_| e0.recv_any().tag.a).collect()
+        };
+        let a = arrival_order(31);
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..32).collect::<Vec<u32>>(), "reorder must not lose frames");
+        assert_ne!(a, (0..32).collect::<Vec<u32>>(), "no reorder observed");
+        assert_eq!(a, arrival_order(31), "same seed must reproduce the order");
+        assert_ne!(a, arrival_order(32), "different seeds should differ");
+    }
+
+    #[test]
+    fn corrupt_frames_are_dropped_and_counted() {
+        let mut f = Fabric::with_faults(
+            2,
+            FaultPlan { corrupt_prob: 1.0, ..FaultPlan::none() },
+            5,
+        );
+        let mut eps = f.take_endpoints();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        for k in 0..4u32 {
+            e1.send(0, Tag::new(1, k, 0), Payload::F32(vec![1.0, 2.0, 3.0]));
+        }
+        // Control frames have no payload bits; the CRC field itself is
+        // corrupted and the framing check catches that the same way.
+        e1.send(0, Tag::new(2, 0, 0), Payload::Control);
+        for k in 0..4u32 {
+            assert!(e0
+                .recv_timeout(Tag::new(1, k, 0), Duration::from_millis(10))
+                .is_none());
+        }
+        assert!(e0
+            .recv_timeout(Tag::new(2, 0, 0), Duration::from_millis(10))
+            .is_none());
+        // Dropped-and-counted at the *receiving* rank; sends were metered.
+        assert_eq!(f.corrupt_dropped()[0], 5);
+        assert_eq!(f.corrupt_dropped()[1], 0);
+        assert_eq!(f.msgs_sent()[1], 5);
+    }
+
+    #[test]
+    fn corrupt_pattern_is_deterministic_per_seed() {
+        let survivors = |seed: u64| -> Vec<bool> {
+            let mut f = Fabric::with_faults(
+                2,
+                FaultPlan { corrupt_prob: 0.4, ..FaultPlan::none() },
+                seed,
+            );
+            let mut eps = f.take_endpoints();
+            let mut e1 = eps.pop().unwrap();
+            let mut e0 = eps.pop().unwrap();
+            let n = 24u32;
+            for k in 0..n {
+                e1.send(0, Tag::new(1, k, 0), Payload::U32(vec![k; 8]));
+            }
+            (0..n)
+                .map(|k| {
+                    e0.recv_timeout(Tag::new(1, k, 0), Duration::from_millis(5))
+                        .is_some()
+                })
+                .collect()
+        };
+        let a = survivors(77);
+        assert!(a.iter().any(|&s| s), "everything corrupted");
+        assert!(a.iter().any(|&s| !s), "no corruption observed");
+        assert_eq!(a, survivors(77), "same seed must reproduce the corrupt set");
+        assert_ne!(a, survivors(78), "different seeds should differ");
+    }
+
+    #[test]
+    fn clean_frames_pass_crc_verification() {
+        // Fault-free fabric: framing is transparent — every payload kind
+        // round-trips and nothing is counted as corrupt.
+        let mut f = Fabric::new(2);
+        let mut eps = f.take_endpoints();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e1.send(0, Tag::new(1, 0, 0), Payload::F32(vec![1.5, -2.5]));
+        e1.send(0, Tag::new(2, 0, 0), Payload::U32(vec![9, 9]));
+        e1.send(0, Tag::new(3, 0, 0), Payload::Control);
+        assert_eq!(e0.recv(Tag::new(1, 0, 0)).payload.f32(), &[1.5, -2.5]);
+        assert_eq!(e0.recv(Tag::new(2, 0, 0)).payload.u32(), &[9, 9]);
+        assert_eq!(e0.recv(Tag::new(3, 0, 0)).payload, Payload::Control);
+        assert_eq!(f.corrupt_dropped(), vec![0, 0]);
+    }
+
+    #[test]
+    fn unmetered_send_skips_faults_and_counters() {
+        // The checkpoint-replay path must deliver even on a fabric whose
+        // fault plan would drop everything, and must not advance the
+        // fault RNG or the wire counters.
+        let mut f = Fabric::with_faults(
+            2,
+            FaultPlan { drop_prob: 1.0, ..FaultPlan::none() },
+            9,
+        );
+        let mut eps = f.take_endpoints();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let rng_before = e1.fault_rng_state();
+        e1.send_unmetered(0, Tag::new(1, 0, 0), Payload::F32(vec![4.0]));
+        assert_eq!(e1.fault_rng_state(), rng_before);
+        assert_eq!(e1.sent_totals(), (0, 0));
+        let m = e0.recv(Tag::new(1, 0, 0));
+        assert_eq!(m.payload.f32(), &[4.0]);
+    }
+
+    #[test]
+    fn fault_rng_state_restores_mid_stream() {
+        // Run A: 16 faulty sends, recording deliveries of the back half.
+        // Run B: restore the fault RNG captured after A's front half and
+        // send only the back half — the delivery pattern must match,
+        // which is what makes checkpoint/resume fault-stream exact.
+        let plan = FaultPlan { drop_prob: 0.5, dup_prob: 0.3, ..FaultPlan::none() };
+        let copies = |e0: &mut Endpoint, k: u32| -> usize {
+            let mut c = 0;
+            while e0
+                .recv_timeout(Tag::new(1, k, 0), Duration::from_millis(5))
+                .is_some()
+            {
+                c += 1;
+            }
+            c
+        };
+        let mut fa = Fabric::with_faults(2, plan.clone(), 13);
+        let mut eps = fa.take_endpoints();
+        let mut a1 = eps.pop().unwrap();
+        let mut a0 = eps.pop().unwrap();
+        for k in 0..8u32 {
+            a1.send(0, Tag::new(1, k, 0), Payload::Control);
+        }
+        let mid_state = a1.fault_rng_state();
+        for k in 8..16u32 {
+            a1.send(0, Tag::new(1, k, 0), Payload::Control);
+        }
+        let tail_a: Vec<usize> = (8..16).map(|k| copies(&mut a0, k)).collect();
+
+        let mut fb = Fabric::with_faults(2, plan, 999); // different seed on purpose
+        let mut eps = fb.take_endpoints();
+        let mut b1 = eps.pop().unwrap();
+        let mut b0 = eps.pop().unwrap();
+        b1.restore_fault_rng(mid_state.0, mid_state.1);
+        for k in 8..16u32 {
+            b1.send(0, Tag::new(1, k, 0), Payload::Control);
+        }
+        let tail_b: Vec<usize> = (8..16).map(|k| copies(&mut b0, k)).collect();
+        assert_eq!(tail_a, tail_b, "restored RNG must continue the fault stream");
+    }
+
+    #[test]
+    fn restored_wire_totals_continue_cumulatively() {
+        let mut f = Fabric::new(2);
+        let mut eps = f.take_endpoints();
+        let mut e1 = eps.pop().unwrap();
+        let _e0 = eps.pop().unwrap();
+        e1.restore_sent_totals(1000, 7);
+        e1.send(0, Tag::new(1, 0, 0), Payload::F32(vec![0.0; 25]));
+        assert_eq!(e1.sent_totals(), (1100, 8));
+        assert_eq!(f.bytes_sent()[1], 1100);
     }
 
     #[test]

@@ -511,6 +511,21 @@ impl FailureDetector {
         self.last_seen[node]
     }
 
+    /// Snapshot the detector's verdict state for a checkpoint:
+    /// `(last_seen, dead)` per node. `misses` is config, not state.
+    pub fn export_state(&self) -> (Vec<u64>, Vec<bool>) {
+        (self.last_seen.clone(), self.dead.clone())
+    }
+
+    /// Restore a snapshot taken by [`FailureDetector::export_state`].
+    /// The world size must match the constructed detector.
+    pub fn restore_state(&mut self, last_seen: &[u64], dead: &[bool]) {
+        assert_eq!(last_seen.len(), self.last_seen.len(), "detector world mismatch");
+        assert_eq!(dead.len(), self.dead.len(), "detector world mismatch");
+        self.last_seen.copy_from_slice(last_seen);
+        self.dead.copy_from_slice(dead);
+    }
+
     /// Whether the detector currently considers `node` dead.
     pub fn is_dead(&self, node: usize) -> bool {
         self.dead[node]
@@ -705,6 +720,28 @@ mod tests {
             d.observe(n, 6);
         }
         assert!(d.tick(6).is_empty());
+    }
+
+    #[test]
+    fn detector_state_round_trips_through_export() {
+        let mut d = FailureDetector::new(3, 2);
+        for n in 0..3 {
+            d.observe(n, 1);
+        }
+        d.observe(0, 3);
+        d.observe(2, 3);
+        d.tick(3); // node 1 declared dead
+        let (seen, dead) = d.export_state();
+        let mut r = FailureDetector::new(3, 2);
+        r.restore_state(&seen, &dead);
+        assert!(r.is_dead(1));
+        assert_eq!(r.last_seen(0), 3);
+        // Restored detector continues identically: node 1 resumes.
+        for n in 0..3 {
+            d.observe(n, 4);
+            r.observe(n, 4);
+        }
+        assert_eq!(d.tick(4), r.tick(4));
     }
 
     #[test]

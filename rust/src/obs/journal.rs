@@ -58,6 +58,11 @@ pub enum Event {
     /// End-of-run drain: residual wire traffic after the last boundary
     /// (final in-flight folds, validation shipping, etc.).
     Drain { outer_idx: u64, bytes: u64, msgs: u64 },
+    /// The `[ckpt]` cadence wrote a snapshot covering `boundary` (cut
+    /// after `step` inner steps); `bytes` is the on-disk file size.
+    Ckpt { boundary: u64, step: u64, bytes: u64 },
+    /// The run resumed from a snapshot cut at `boundary` / `step`.
+    Resume { boundary: u64, step: u64 },
 }
 
 impl Event {
@@ -73,6 +78,8 @@ impl Event {
             Event::StashSwept { .. } => "sweep",
             Event::Boundary { .. } => "boundary",
             Event::Drain { .. } => "drain",
+            Event::Ckpt { .. } => "ckpt",
+            Event::Resume { .. } => "resume",
         }
     }
 
@@ -141,6 +148,15 @@ impl Event {
                 push_u64(&mut s, "bytes", *bytes);
                 push_u64(&mut s, "msgs", *msgs);
             }
+            Event::Ckpt { boundary, step, bytes } => {
+                push_u64(&mut s, "boundary", *boundary);
+                push_u64(&mut s, "step", *step);
+                push_u64(&mut s, "bytes", *bytes);
+            }
+            Event::Resume { boundary, step } => {
+                push_u64(&mut s, "boundary", *boundary);
+                push_u64(&mut s, "step", *step);
+            }
         }
         s.push('}');
         s
@@ -161,6 +177,8 @@ pub fn required_keys(ev: &str) -> Option<&'static [&'static str]> {
         "sweep" => &["boundary", "dropped"],
         "boundary" => &["outer_idx", "inner_s", "sync_s", "bytes", "msgs"],
         "drain" => &["outer_idx", "bytes", "msgs"],
+        "ckpt" => &["boundary", "step", "bytes"],
+        "resume" => &["boundary", "step"],
         _ => return None,
     })
 }
@@ -280,6 +298,8 @@ mod tests {
             Event::StashSwept { boundary: 6, dropped: 2 },
             Event::Boundary { outer_idx: 6, inner_s: 1.5, sync_s: 0.25, bytes: 8192, msgs: 4 },
             Event::Drain { outer_idx: 6, bytes: 128, msgs: 1 },
+            Event::Ckpt { boundary: 6, step: 300, bytes: 65536 },
+            Event::Resume { boundary: 6, step: 300 },
         ];
         for (i, ev) in events.iter().enumerate() {
             let line = ev.to_json(1.25, i as u64);

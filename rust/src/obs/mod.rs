@@ -137,6 +137,8 @@ impl ObsInner {
                 });
             }
             Event::Drain { .. } => self.bump("drains", 1),
+            Event::Ckpt { .. } => self.bump("ckpts", 1),
+            Event::Resume { .. } => self.bump("resumes", 1),
         }
         // The journal (and its in-memory mirror) honors the trace level.
         let admit = match self.level {

@@ -67,13 +67,16 @@
 //! [`FailureDetector`](crate::net::FailureDetector): strategies decide
 //! what a boundary exchanges, the core decides who is still alive.
 
-use anyhow::{ensure, Result};
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure, Result};
 
 use crate::config::{OuterConfig, PairingMode, TrainConfig};
 use crate::net::topo::ChurnEvent;
 use crate::net::ChurnSchedule;
 use crate::runtime::Engine;
 
+use super::checkpoint::{OfferRecord, StrategyState};
 use super::comm::Communicator;
 use super::state::WorkerState;
 use super::strategy::{
@@ -182,6 +185,24 @@ pub struct AsyncGossipSync {
     /// Peer contributions excluded: repair-stale, or no offer delivered
     /// inside the staleness window.
     excluded_stale: u64,
+    /// Own offers still inside the staleness window, per owned worker
+    /// (the grid executor drives every `(stage, replica)` through one
+    /// strategy instance). Peers' folds may still admit any of these, so
+    /// a checkpoint retains them ([`SyncStrategy::export_state`]) and a
+    /// resume re-publishes them through the communicator's unmetered
+    /// replay hook; the offer phase GCs entries the admission window can
+    /// no longer reach.
+    sent: HashMap<(usize, usize), Vec<SentOffer>>,
+}
+
+/// One retained own offer (see [`AsyncGossipSync::sent`]): the exact
+/// payload handed to [`Communicator::offer_round`], plus its addressing.
+struct SentOffer {
+    round: u64,
+    frag: usize,
+    peers: Vec<usize>,
+    delta: Vec<f32>,
+    phi: Vec<f32>,
 }
 
 impl AsyncGossipSync {
@@ -211,6 +232,7 @@ impl AsyncGossipSync {
             max_admitted_age: 0,
             admitted: 0,
             excluded_stale: 0,
+            sent: HashMap::new(),
         }
     }
 
@@ -457,6 +479,14 @@ impl SyncStrategy for AsyncGossipSync {
     ) -> Result<()> {
         let me = w.replica;
         let window = self.outer.staleness as u32;
+        let s = self.outer.staleness as u64;
+        // GC retained offers the admission window can no longer reach: a
+        // fold at boundary b admits rounds in (b − s, b], and no future
+        // fold is earlier than this boundary.
+        self.sent
+            .entry((w.stage, me))
+            .or_default()
+            .retain(|o| o.round + s > outer_idx);
         let sched = FragmentSchedule::new(w.len(), self.fragments);
         for frag in 0..sched.fragments() {
             let r = sched.range(frag);
@@ -478,6 +508,16 @@ impl SyncStrategy for AsyncGossipSync {
                 &delta,
                 phi,
             )?;
+            // Retain the published payload: a crash after this offer but
+            // before the window closes must be able to re-publish it so
+            // peers' post-resume folds still admit it.
+            self.sent.entry((w.stage, me)).or_default().push(SentOffer {
+                round: outer_idx,
+                frag,
+                peers,
+                delta,
+                phi: phi.to_vec(),
+            });
         }
         Ok(())
     }
@@ -491,6 +531,70 @@ impl SyncStrategy for AsyncGossipSync {
         outer_idx: u64,
     ) -> Result<()> {
         self.fold_boundary(comm, w, live, outer_idx)
+    }
+
+    fn export_state(&self, w: &WorkerState) -> Option<StrategyState> {
+        let offers = self
+            .sent
+            .get(&(w.stage, w.replica))
+            .map(|os| {
+                os.iter()
+                    .map(|o| OfferRecord {
+                        round: o.round,
+                        frag: o.frag as u32,
+                        peers: o.peers.iter().map(|&p| p as u32).collect(),
+                        delta: o.delta.clone(),
+                        phi: o.phi.clone(),
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        Some(StrategyState::Async {
+            offers,
+            admitted: self.admitted,
+            excluded_stale: self.excluded_stale,
+            max_admitted_age: self.max_admitted_age,
+        })
+    }
+
+    fn restore_state(
+        &mut self,
+        comm: &mut dyn Communicator,
+        w: &WorkerState,
+        st: &StrategyState,
+    ) -> Result<()> {
+        let StrategyState::Async { offers, admitted, excluded_stale, max_admitted_age } = st
+        else {
+            bail!("checkpoint strategy state is not the async kind");
+        };
+        // The counters are strategy-global; every owned worker's record
+        // carries the same value, so max-merge is idempotent on the grid
+        // (restored once per worker) and a plain restore per rank on the
+        // fabric.
+        self.admitted = self.admitted.max(*admitted);
+        self.excluded_stale = self.excluded_stale.max(*excluded_stale);
+        self.max_admitted_age = self.max_admitted_age.max(*max_admitted_age);
+        let me = w.replica;
+        for rec in offers {
+            let peers: Vec<usize> = rec.peers.iter().map(|&p| p as usize).collect();
+            comm.replay_round(
+                w.stage,
+                me,
+                &peers,
+                rec.round as u32,
+                rec.frag as u16,
+                &rec.delta,
+                &rec.phi,
+            )?;
+            self.sent.entry((w.stage, me)).or_default().push(SentOffer {
+                round: rec.round,
+                frag: rec.frag as usize,
+                peers,
+                delta: rec.delta.clone(),
+                phi: rec.phi.clone(),
+            });
+        }
+        Ok(())
     }
 
     fn report_obs(&self, hub: &crate::obs::ObsHub) {
@@ -757,5 +861,111 @@ mod tests {
         assert_ne!(a.phi, b.phi);
         assert_eq!(sa.admitted(), 0);
         assert_eq!(sa.excluded_stale(), 1);
+    }
+
+    #[test]
+    fn export_restore_resumes_aged_admission_bit_identically() {
+        // Checkpoint after the boundary-2 fold, with replica 1's round-2
+        // offer still inside the staleness-4 window; the resumed engine
+        // must fold boundary 3 (which admits that offer at age 1) onto
+        // exactly the reference trajectory, from replayed offers alone.
+        let mut cfg = async_cfg(4);
+        cfg.churn = ChurnSchedule::none().leave(40, 1).join(70, 1).leave(140, 1);
+        let mut s = AsyncGossipSync::from_config(&cfg);
+        let mut comm = AccountingComm::new();
+        let live = vec![0usize, 1];
+        let mut a = worker(0, vec![1.0, 2.0, 3.0, 4.0]);
+        let mut b = worker(1, vec![4.0, 3.0, 2.0, 1.0]);
+        s.offer_outer(&mut comm, &a, &live, 2).unwrap();
+        s.offer_outer(&mut comm, &b, &live, 2).unwrap();
+        s.fold_boundary(&mut comm, &mut a, &live, 2).unwrap();
+        s.fold_boundary(&mut comm, &mut b, &live, 2).unwrap();
+        // --- checkpoint cut: per-worker strategy records + worker clones.
+        let rec_a = s.export_state(&a).unwrap();
+        let rec_b = s.export_state(&b).unwrap();
+        let mut a2 = a.clone();
+        let b2 = b.clone();
+        // Reference continues: boundary 3, replica 1 dead at closing 149.
+        s.offer_outer(&mut comm, &a, &live, 3).unwrap();
+        s.fold_boundary(&mut comm, &mut a, &live, 3).unwrap();
+        // Resumed side: fresh engine + fresh communicator, sender-replay.
+        let mut s2 = AsyncGossipSync::from_config(&cfg);
+        let mut comm2 = AccountingComm::new();
+        s2.restore_state(&mut comm2, &a2, &rec_a).unwrap();
+        s2.restore_state(&mut comm2, &b2, &rec_b).unwrap();
+        s2.offer_outer(&mut comm2, &a2, &live, 3).unwrap();
+        s2.fold_boundary(&mut comm2, &mut a2, &live, 3).unwrap();
+        assert_eq!(a2.phi, a.phi, "resumed fold must be bit-identical");
+        assert_eq!(a2.delta, a.delta);
+        assert_eq!(a2.theta, a.theta);
+        assert_eq!(s2.admitted(), s.admitted());
+        assert_eq!(s2.excluded_stale(), s.excluded_stale());
+        assert_eq!(s2.max_admitted_age(), s.max_admitted_age());
+        assert_eq!(s2.max_admitted_age(), 1, "the aged offer folded on both sides");
+    }
+
+    #[test]
+    fn chaos_faults_keep_the_async_boundary_live_and_convergent() {
+        // Combined fault soak over the real fabric: drops, duplicates,
+        // reorders and CRC-corrupt frames together. Two replicas run a
+        // quadratic inner problem (θ ← θ − lr (θ − target)) under the
+        // bounded-staleness engine; the run must stay live (no fold ever
+        // blocks past the gossip timeout), converge onto the target, and
+        // the corrupt frames must show up dropped-and-counted.
+        use std::time::Duration;
+        let mut cfg = async_cfg(3);
+        cfg.seed = 11;
+        let plan = crate::net::FaultPlan {
+            drop_prob: 0.2,
+            dup_prob: 0.1,
+            reorder_prob: 0.2,
+            corrupt_prob: 0.15,
+            ..crate::net::FaultPlan::none()
+        };
+        let mut fabric = crate::net::Fabric::with_faults(2, plan, cfg.seed);
+        let rounds = 60u64;
+        let dim = 8usize;
+        let handles: Vec<_> = fabric
+            .take_endpoints()
+            .into_iter()
+            .enumerate()
+            .map(|(me, ep)| {
+                let cfg = cfg.clone();
+                std::thread::spawn(move || {
+                    let mut comm = crate::train::FabricComm::new(
+                        ep,
+                        2,
+                        Some(Duration::from_millis(30)),
+                    );
+                    let mut s = AsyncGossipSync::from_config(&cfg);
+                    let start = 1.0 + 3.0 * me as f32;
+                    let mut w = worker(me, vec![start; dim]);
+                    w.phi.copy_from_slice(&w.theta);
+                    let target = 0.5f32;
+                    let live = vec![0usize, 1];
+                    for b in 1..=rounds {
+                        for _ in 0..4 {
+                            for t in w.theta.iter_mut() {
+                                *t -= 0.4 * (*t - target);
+                            }
+                        }
+                        s.offer_outer(&mut comm, &w, &live, b).unwrap();
+                        s.fold_boundary(&mut comm, &mut w, &live, b).unwrap();
+                    }
+                    let dist = w
+                        .theta
+                        .iter()
+                        .fold(0.0f32, |m, t| m.max((t - target).abs()));
+                    (dist, s.admitted() + s.excluded_stale())
+                })
+            })
+            .collect();
+        for h in handles {
+            let (dist, folds) = h.join().expect("a chaos worker panicked");
+            assert!(dist < 0.1, "worker ended {dist} away from the target");
+            assert_eq!(folds, rounds, "every boundary folded exactly once");
+        }
+        let corrupt: u64 = fabric.corrupt_dropped().iter().sum();
+        assert!(corrupt > 0, "corrupt frames must be dropped and counted");
     }
 }

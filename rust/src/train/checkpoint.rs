@@ -1,37 +1,73 @@
-//! Training-state checkpoints.
+//! Training-state checkpoints — the crash-recovery control plane's
+//! on-disk format.
 //!
 //! NoLoCo produces an *ensemble* of replicas (the paper's §6 observation),
 //! so a checkpoint stores every worker's full state: fast weights θ, Adam
-//! moments, slow weights φ and outer momentum δ. Format: a small
-//! self-describing little-endian binary (magic + version + grid shape +
-//! per-worker records). Data-loader cursors are *not* captured — resuming
-//! re-reads the stream from the configured position, which is the usual
-//! trade-off for deterministic synthetic data.
+//! moments, slow weights φ and outer momentum δ — plus everything else a
+//! bit-identical resume needs: data-loader cursors, per-core boundary
+//! clocks and live masks, the failure detector's verdicts, communication
+//! accounting, fault-RNG streams, and the in-flight sync state
+//! (streamed fragments awaiting their deferred fold, bounded-staleness
+//! offers still inside their admission window).
+//!
+//! Checkpoints are taken at outer boundaries, *after* the outer step —
+//! the grid's quiet point: gradient accumulators are empty, boundary
+//! activation payloads are all consumed, and the only cross-boundary
+//! state is the retained offer/fragment stash, which the strategy records
+//! capture. Pairing draws, route plans and boundary clocks are *not*
+//! serialized: they are pure functions of `(seed, schedule, outer_idx)`
+//! and re-derive identically on resume.
+//!
+//! Format (version 2): `MAGIC | version | section count`, then one
+//! section per state family — `id | length | payload | CRC-32` — so a
+//! torn or bit-flipped file is rejected section-precisely instead of
+//! deserializing garbage. [`Checkpoint::save`] writes to a sibling
+//! temporary file and renames it into place, so a crash mid-write leaves
+//! the previous checkpoint intact.
 
-use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::collections::HashMap;
+use std::io::{BufReader, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use super::state::WorkerState;
+use super::CommStats;
 
 const MAGIC: &[u8; 8] = b"NOLOCKPT";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
-/// A serialized snapshot of the whole worker grid.
-#[derive(Clone, Debug, PartialEq)]
+const SEC_META: u32 = 1;
+const SEC_WORKERS: u32 = 2;
+const SEC_LOADERS: u32 = 3;
+const SEC_CORES: u32 = 4;
+
+/// A serialized snapshot of the whole worker grid plus the run's
+/// coordination state.
+#[derive(Clone, Debug, PartialEq, Default)]
 pub struct Checkpoint {
-    /// Inner step the snapshot was taken after.
+    /// Inner steps completed when the snapshot was taken (a resumed run
+    /// continues at step index `step`).
     pub step: u64,
+    /// Outer boundaries completed (`step / inner_steps` when the cadence
+    /// is boundary-aligned; 0 for bare tensor snapshots).
+    pub outer_idx: u64,
     /// Data-parallel world size.
     pub dp: u32,
     /// Pipeline stages.
     pub pp: u32,
     /// Worker records, stage-major (`stage * dp + replica`).
     pub workers: Vec<WorkerRecord>,
+    /// Per-replica data-loader cursors (stage-0 loaders own the stream).
+    /// Empty for bare tensor snapshots.
+    pub loaders: Vec<LoaderCursor>,
+    /// Per-core runtime records: one for the grid executor, `dp · pp`
+    /// for the threaded executor. Empty for bare tensor snapshots.
+    pub cores: Vec<CoreRecord>,
 }
 
-/// One worker's tensors.
+/// One worker's tensors and in-flight sync state.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WorkerRecord {
     pub stage: u32,
@@ -44,29 +80,108 @@ pub struct WorkerRecord {
     pub phi: Vec<f32>,
     /// Empty for FSDP runs.
     pub delta: Vec<f32>,
+    /// In-flight strategy state (streamed fragments, retained async
+    /// offers); `None` for the lockstep strategies, which hold nothing
+    /// across a boundary.
+    pub strategy: Option<StrategyState>,
+}
+
+/// One data loader's stream position.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoaderCursor {
+    pub replica: u32,
+    pub cursor: u64,
+}
+
+/// One trainer core's runtime state (everything that is not worker
+/// tensors but still shapes the trajectory or the final report).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct CoreRecord {
+    /// Owning rank; `(0, 0)` with `grid = true` for the grid executor.
+    pub stage: u32,
+    pub replica: u32,
+    /// True when this core owned the whole grid (sim executor).
+    pub grid: bool,
+    /// Live mask over DP replicas as this core saw it.
+    pub live: Vec<bool>,
+    /// Detector-suspected mask.
+    pub suspected: Vec<bool>,
+    /// Per-replica boundary clocks.
+    pub clocks: Vec<u64>,
+    /// Failure-detector state `(last_seen, dead)`, when detection is on.
+    pub detector: Option<(Vec<u64>, Vec<bool>)>,
+    /// Detection transitions so far: `(boundary, node, is_join)`.
+    pub detected: Vec<(u64, u32, bool)>,
+    /// Per-step training losses recorded so far (bit-exact, NaNs kept).
+    pub step_train_loss: Vec<f64>,
+    /// Eval trace rows so far: `(step, train, val, wstd, lr)`.
+    pub trace: Vec<(u64, f64, f64, f64, f64)>,
+    /// Wire totals at the last journaled boundary (delta attribution).
+    pub last_wire: (u64, u64),
+    /// Logical + wire communication accounting at snapshot time.
+    pub stats: CommStats,
+    /// Fabric fault-RNG stream `(state, inc)`, threaded executor only.
+    pub fault_rng: Option<(u128, u128)>,
+    /// This rank's fabric wire counters `(bytes, msgs)`, threaded only.
+    pub wire_sent: (u64, u64),
+}
+
+/// In-flight synchronization state a strategy holds across boundaries.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StrategyState {
+    /// [`StreamingSync`](super::StreamingSync): fragments offered but not
+    /// yet folded, plus the stale-drop counter.
+    Streaming {
+        inflight: Vec<InflightRecord>,
+        dropped_stale: u64,
+    },
+    /// [`AsyncGossipSync`](super::AsyncGossipSync): own offers still
+    /// inside the staleness window (re-published on resume so peers can
+    /// fold them), plus the admission counters.
+    Async {
+        offers: Vec<OfferRecord>,
+        admitted: u64,
+        excluded_stale: u64,
+        max_admitted_age: u64,
+    },
+}
+
+/// One streamed fragment awaiting its deferred fold.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InflightRecord {
+    pub outer_idx: u64,
+    pub frag: u32,
+    pub group: Vec<u32>,
+    pub live: Vec<u32>,
+    pub delta: Vec<f32>,
+    pub phi: Vec<f32>,
+    pub theta: Vec<f32>,
+}
+
+/// One bounded-staleness offer retained inside the admission window.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OfferRecord {
+    pub round: u64,
+    pub frag: u32,
+    pub peers: Vec<u32>,
+    pub delta: Vec<f32>,
+    pub phi: Vec<f32>,
 }
 
 impl Checkpoint {
-    /// Snapshot a worker grid.
+    /// Snapshot a worker grid's tensors only (no loaders, no core
+    /// records) — the building block tests use; the trainers assemble
+    /// full-fidelity checkpoints on top via their own capture paths.
     pub fn capture(step: u64, dp: usize, pp: usize, workers: &[WorkerState]) -> Checkpoint {
         assert_eq!(workers.len(), dp * pp);
         Checkpoint {
             step,
+            outer_idx: 0,
             dp: dp as u32,
             pp: pp as u32,
-            workers: workers
-                .iter()
-                .map(|w| WorkerRecord {
-                    stage: w.stage as u32,
-                    replica: w.replica as u32,
-                    adam_t: w.adam_t,
-                    theta: w.theta.clone(),
-                    m: w.m.clone(),
-                    v: w.v.clone(),
-                    phi: w.phi.clone(),
-                    delta: w.delta.clone(),
-                })
-                .collect(),
+            workers: workers.iter().map(|w| WorkerRecord::of(w, None)).collect(),
+            loaders: Vec::new(),
+            cores: Vec::new(),
         }
     }
 
@@ -79,120 +194,653 @@ impl Checkpoint {
             workers.len()
         );
         for (w, rec) in workers.iter_mut().zip(&self.workers) {
-            ensure!(
-                w.stage == rec.stage as usize && w.replica == rec.replica as usize,
-                "worker order mismatch at ({}, {})",
-                rec.stage,
-                rec.replica
-            );
-            ensure!(
-                w.theta.len() == rec.theta.len(),
-                "shape mismatch at ({}, {}): {} vs {}",
-                rec.stage,
-                rec.replica,
-                w.theta.len(),
-                rec.theta.len()
-            );
-            w.theta.copy_from_slice(&rec.theta);
-            w.m.copy_from_slice(&rec.m);
-            w.v.copy_from_slice(&rec.v);
-            w.adam_t = rec.adam_t;
-            w.phi = rec.phi.clone();
-            w.delta = rec.delta.clone();
+            rec.restore_into(w)?;
         }
         Ok(self.step)
     }
 
-    /// Write to a file (creating parent directories).
-    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let path = path.as_ref();
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        let mut w = BufWriter::new(
-            std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
-        );
-        w.write_all(MAGIC)?;
-        w.write_all(&VERSION.to_le_bytes())?;
-        w.write_all(&self.step.to_le_bytes())?;
-        w.write_all(&self.dp.to_le_bytes())?;
-        w.write_all(&self.pp.to_le_bytes())?;
-        for rec in &self.workers {
-            w.write_all(&rec.stage.to_le_bytes())?;
-            w.write_all(&rec.replica.to_le_bytes())?;
-            w.write_all(&rec.adam_t.to_le_bytes())?;
-            for buf in [&rec.theta, &rec.m, &rec.v, &rec.phi, &rec.delta] {
-                write_f32s(&mut w, buf)?;
-            }
-        }
-        Ok(())
+    /// The record for one worker, if present.
+    pub fn worker(&self, stage: usize, replica: usize) -> Option<&WorkerRecord> {
+        self.workers
+            .iter()
+            .find(|w| w.stage as usize == stage && w.replica as usize == replica)
     }
 
-    /// Read back from a file.
+    /// The core record for one rank (or the grid core), if present.
+    pub fn core(&self, stage: usize, replica: usize, grid: bool) -> Option<&CoreRecord> {
+        self.cores.iter().find(|c| {
+            c.grid == grid && (grid || (c.stage as usize == stage && c.replica as usize == replica))
+        })
+    }
+
+    /// A replica's checkpointed loader cursor, if present.
+    pub fn loader_cursor(&self, replica: usize) -> Option<u64> {
+        self.loaders
+            .iter()
+            .find(|l| l.replica as usize == replica)
+            .map(|l| l.cursor)
+    }
+
+    /// Write atomically (tmp + rename, creating parent directories);
+    /// returns the file size in bytes.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<u64> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let bytes = self.to_bytes();
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, &bytes)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} into place", path.display()))?;
+        Ok(bytes.len() as u64)
+    }
+
+    /// Serialize to the versioned sectioned byte format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut meta = Vec::new();
+        put_u64(&mut meta, self.step);
+        put_u64(&mut meta, self.outer_idx);
+        put_u32(&mut meta, self.dp);
+        put_u32(&mut meta, self.pp);
+
+        let mut workers = Vec::new();
+        put_u32(&mut workers, self.workers.len() as u32);
+        for rec in &self.workers {
+            rec.encode(&mut workers);
+        }
+
+        let mut loaders = Vec::new();
+        put_u32(&mut loaders, self.loaders.len() as u32);
+        for l in &self.loaders {
+            put_u32(&mut loaders, l.replica);
+            put_u64(&mut loaders, l.cursor);
+        }
+
+        let mut cores = Vec::new();
+        put_u32(&mut cores, self.cores.len() as u32);
+        for c in &self.cores {
+            c.encode(&mut cores);
+        }
+
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&4u32.to_le_bytes());
+        for (id, body) in [
+            (SEC_META, &meta),
+            (SEC_WORKERS, &workers),
+            (SEC_LOADERS, &loaders),
+            (SEC_CORES, &cores),
+        ] {
+            out.extend_from_slice(&id.to_le_bytes());
+            out.extend_from_slice(&(body.len() as u64).to_le_bytes());
+            out.extend_from_slice(body);
+            out.extend_from_slice(&crc32(body).to_le_bytes());
+        }
+        out
+    }
+
+    /// Read back from a file, verifying magic, version and per-section
+    /// CRCs.
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
         let path = path.as_ref();
         let mut r = BufReader::new(
             std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
         );
-        let mut magic = [0u8; 8];
-        r.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            bail!("{} is not a NoLoCo checkpoint", path.display());
-        }
-        let version = read_u32(&mut r)?;
+        let mut bytes = Vec::new();
+        r.read_to_end(&mut bytes)?;
+        Self::from_bytes(&bytes).with_context(|| format!("reading {}", path.display()))
+    }
+
+    /// Deserialize from the sectioned byte format.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        ensure!(bytes.len() >= 16, "truncated checkpoint header");
+        ensure!(&bytes[..8] == MAGIC, "not a NoLoCo checkpoint");
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
         if version != VERSION {
-            bail!("unsupported checkpoint version {version}");
+            bail!("unsupported checkpoint version {version} (want {VERSION})");
         }
-        let step = read_u64(&mut r)?;
-        let dp = read_u32(&mut r)?;
-        let pp = read_u32(&mut r)?;
-        let n = (dp * pp) as usize;
+        let nsec = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        ensure!(nsec <= 64, "implausible section count {nsec}");
+        let mut sections: HashMap<u32, &[u8]> = HashMap::new();
+        let mut i = 16usize;
+        for _ in 0..nsec {
+            ensure!(bytes.len() >= i + 12, "truncated section header");
+            let id = u32::from_le_bytes(bytes[i..i + 4].try_into().unwrap());
+            let len = u64::from_le_bytes(bytes[i + 4..i + 12].try_into().unwrap()) as usize;
+            i += 12;
+            ensure!(bytes.len() >= i + len + 4, "truncated section {id}");
+            let body = &bytes[i..i + len];
+            i += len;
+            let want = u32::from_le_bytes(bytes[i..i + 4].try_into().unwrap());
+            i += 4;
+            ensure!(
+                crc32(body) == want,
+                "section {id} failed its CRC check (corrupt checkpoint)"
+            );
+            sections.insert(id, body);
+        }
+
+        let meta = sections.get(&SEC_META).context("checkpoint missing meta section")?;
+        let mut c = Cur::new(meta);
+        let step = c.u64()?;
+        let outer_idx = c.u64()?;
+        let dp = c.u32()?;
+        let pp = c.u32()?;
+
+        let wsec = sections
+            .get(&SEC_WORKERS)
+            .context("checkpoint missing workers section")?;
+        let mut c = Cur::new(wsec);
+        let n = c.u32()? as usize;
+        ensure!(n <= 1 << 20, "implausible worker count {n}");
         let mut workers = Vec::with_capacity(n);
         for _ in 0..n {
-            let stage = read_u32(&mut r)?;
-            let replica = read_u32(&mut r)?;
-            let adam_t = read_u64(&mut r)?;
-            let theta = read_f32s(&mut r)?;
-            let m = read_f32s(&mut r)?;
-            let v = read_f32s(&mut r)?;
-            let phi = read_f32s(&mut r)?;
-            let delta = read_f32s(&mut r)?;
-            workers.push(WorkerRecord { stage, replica, adam_t, theta, m, v, phi, delta });
+            workers.push(WorkerRecord::decode(&mut c)?);
         }
-        Ok(Checkpoint { step, dp, pp, workers })
+
+        let mut loaders = Vec::new();
+        if let Some(lsec) = sections.get(&SEC_LOADERS) {
+            let mut c = Cur::new(lsec);
+            let n = c.u32()? as usize;
+            ensure!(n <= 1 << 20, "implausible loader count {n}");
+            for _ in 0..n {
+                let replica = c.u32()?;
+                let cursor = c.u64()?;
+                loaders.push(LoaderCursor { replica, cursor });
+            }
+        }
+
+        let mut cores = Vec::new();
+        if let Some(csec) = sections.get(&SEC_CORES) {
+            let mut c = Cur::new(csec);
+            let n = c.u32()? as usize;
+            ensure!(n <= 1 << 20, "implausible core count {n}");
+            for _ in 0..n {
+                cores.push(CoreRecord::decode(&mut c)?);
+            }
+        }
+
+        Ok(Checkpoint { step, outer_idx, dp, pp, workers, loaders, cores })
     }
 }
 
-fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
-    w.write_all(&(xs.len() as u64).to_le_bytes())?;
+impl WorkerRecord {
+    /// Snapshot one worker's tensors plus its strategy's in-flight state.
+    pub fn of(w: &WorkerState, strategy: Option<StrategyState>) -> WorkerRecord {
+        WorkerRecord {
+            stage: w.stage as u32,
+            replica: w.replica as u32,
+            adam_t: w.adam_t,
+            theta: w.theta.clone(),
+            m: w.m.clone(),
+            v: w.v.clone(),
+            phi: w.phi.clone(),
+            delta: w.delta.clone(),
+            strategy,
+        }
+    }
+
+    /// Restore this record's tensors into a live worker (shape-checked).
+    pub fn restore_into(&self, w: &mut WorkerState) -> Result<()> {
+        ensure!(
+            w.stage == self.stage as usize && w.replica == self.replica as usize,
+            "worker order mismatch at ({}, {})",
+            self.stage,
+            self.replica
+        );
+        ensure!(
+            w.theta.len() == self.theta.len(),
+            "shape mismatch at ({}, {}): {} vs {}",
+            self.stage,
+            self.replica,
+            w.theta.len(),
+            self.theta.len()
+        );
+        w.theta.copy_from_slice(&self.theta);
+        w.m.copy_from_slice(&self.m);
+        w.v.copy_from_slice(&self.v);
+        w.adam_t = self.adam_t;
+        w.phi = self.phi.clone();
+        w.delta = self.delta.clone();
+        Ok(())
+    }
+
+    fn encode(&self, b: &mut Vec<u8>) {
+        put_u32(b, self.stage);
+        put_u32(b, self.replica);
+        put_u64(b, self.adam_t);
+        for buf in [&self.theta, &self.m, &self.v, &self.phi, &self.delta] {
+            put_f32s(b, buf);
+        }
+        match &self.strategy {
+            None => put_u8(b, 0),
+            Some(StrategyState::Streaming { inflight, dropped_stale }) => {
+                put_u8(b, 1);
+                put_u64(b, *dropped_stale);
+                put_u32(b, inflight.len() as u32);
+                for e in inflight {
+                    put_u64(b, e.outer_idx);
+                    put_u32(b, e.frag);
+                    put_u32s(b, &e.group);
+                    put_u32s(b, &e.live);
+                    put_f32s(b, &e.delta);
+                    put_f32s(b, &e.phi);
+                    put_f32s(b, &e.theta);
+                }
+            }
+            Some(StrategyState::Async { offers, admitted, excluded_stale, max_admitted_age }) => {
+                put_u8(b, 2);
+                put_u64(b, *admitted);
+                put_u64(b, *excluded_stale);
+                put_u64(b, *max_admitted_age);
+                put_u32(b, offers.len() as u32);
+                for o in offers {
+                    put_u64(b, o.round);
+                    put_u32(b, o.frag);
+                    put_u32s(b, &o.peers);
+                    put_f32s(b, &o.delta);
+                    put_f32s(b, &o.phi);
+                }
+            }
+        }
+    }
+
+    fn decode(c: &mut Cur) -> Result<WorkerRecord> {
+        let stage = c.u32()?;
+        let replica = c.u32()?;
+        let adam_t = c.u64()?;
+        let theta = c.f32s()?;
+        let m = c.f32s()?;
+        let v = c.f32s()?;
+        let phi = c.f32s()?;
+        let delta = c.f32s()?;
+        let strategy = match c.u8()? {
+            0 => None,
+            1 => {
+                let dropped_stale = c.u64()?;
+                let n = c.u32()? as usize;
+                ensure!(n <= 1 << 16, "implausible inflight count {n}");
+                let mut inflight = Vec::with_capacity(n);
+                for _ in 0..n {
+                    inflight.push(InflightRecord {
+                        outer_idx: c.u64()?,
+                        frag: c.u32()?,
+                        group: c.u32s()?,
+                        live: c.u32s()?,
+                        delta: c.f32s()?,
+                        phi: c.f32s()?,
+                        theta: c.f32s()?,
+                    });
+                }
+                Some(StrategyState::Streaming { inflight, dropped_stale })
+            }
+            2 => {
+                let admitted = c.u64()?;
+                let excluded_stale = c.u64()?;
+                let max_admitted_age = c.u64()?;
+                let n = c.u32()? as usize;
+                ensure!(n <= 1 << 16, "implausible offer count {n}");
+                let mut offers = Vec::with_capacity(n);
+                for _ in 0..n {
+                    offers.push(OfferRecord {
+                        round: c.u64()?,
+                        frag: c.u32()?,
+                        peers: c.u32s()?,
+                        delta: c.f32s()?,
+                        phi: c.f32s()?,
+                    });
+                }
+                Some(StrategyState::Async { offers, admitted, excluded_stale, max_admitted_age })
+            }
+            t => bail!("unknown strategy-state tag {t}"),
+        };
+        Ok(WorkerRecord { stage, replica, adam_t, theta, m, v, phi, delta, strategy })
+    }
+}
+
+impl CoreRecord {
+    fn encode(&self, b: &mut Vec<u8>) {
+        put_u32(b, self.stage);
+        put_u32(b, self.replica);
+        put_u8(b, self.grid as u8);
+        put_bools(b, &self.live);
+        put_bools(b, &self.suspected);
+        put_u64s(b, &self.clocks);
+        match &self.detector {
+            None => put_u8(b, 0),
+            Some((seen, dead)) => {
+                put_u8(b, 1);
+                put_u64s(b, seen);
+                put_bools(b, dead);
+            }
+        }
+        put_u32(b, self.detected.len() as u32);
+        for &(boundary, node, join) in &self.detected {
+            put_u64(b, boundary);
+            put_u32(b, node);
+            put_u8(b, join as u8);
+        }
+        put_f64s(b, &self.step_train_loss);
+        put_u32(b, self.trace.len() as u32);
+        for &(s, t, v, w, l) in &self.trace {
+            put_u64(b, s);
+            put_f64(b, t);
+            put_f64(b, v);
+            put_f64(b, w);
+            put_f64(b, l);
+        }
+        put_u64(b, self.last_wire.0);
+        put_u64(b, self.last_wire.1);
+        for x in [
+            self.stats.floats_sent,
+            self.stats.activation_hops,
+            self.stats.blocking_collectives,
+            self.stats.pair_exchanges,
+            self.stats.bytes_sent,
+            self.stats.msgs_sent,
+        ] {
+            put_u64(b, x);
+        }
+        match self.fault_rng {
+            None => put_u8(b, 0),
+            Some((state, inc)) => {
+                put_u8(b, 1);
+                put_u64(b, (state >> 64) as u64);
+                put_u64(b, state as u64);
+                put_u64(b, (inc >> 64) as u64);
+                put_u64(b, inc as u64);
+            }
+        }
+        put_u64(b, self.wire_sent.0);
+        put_u64(b, self.wire_sent.1);
+    }
+
+    fn decode(c: &mut Cur) -> Result<CoreRecord> {
+        let stage = c.u32()?;
+        let replica = c.u32()?;
+        let grid = c.u8()? != 0;
+        let live = c.bools()?;
+        let suspected = c.bools()?;
+        let clocks = c.u64s()?;
+        let detector = match c.u8()? {
+            0 => None,
+            _ => Some((c.u64s()?, c.bools()?)),
+        };
+        let n = c.u32()? as usize;
+        ensure!(n <= 1 << 16, "implausible detected-event count {n}");
+        let mut detected = Vec::with_capacity(n);
+        for _ in 0..n {
+            let boundary = c.u64()?;
+            let node = c.u32()?;
+            let join = c.u8()? != 0;
+            detected.push((boundary, node, join));
+        }
+        let step_train_loss = c.f64s()?;
+        let n = c.u32()? as usize;
+        ensure!(n <= 1 << 24, "implausible trace length {n}");
+        let mut trace = Vec::with_capacity(n);
+        for _ in 0..n {
+            trace.push((c.u64()?, c.f64()?, c.f64()?, c.f64()?, c.f64()?));
+        }
+        let last_wire = (c.u64()?, c.u64()?);
+        let stats = CommStats {
+            floats_sent: c.u64()?,
+            activation_hops: c.u64()?,
+            blocking_collectives: c.u64()?,
+            pair_exchanges: c.u64()?,
+            bytes_sent: c.u64()?,
+            msgs_sent: c.u64()?,
+        };
+        let fault_rng = match c.u8()? {
+            0 => None,
+            _ => {
+                let sh = c.u64()?;
+                let sl = c.u64()?;
+                let ih = c.u64()?;
+                let il = c.u64()?;
+                Some((((sh as u128) << 64) | sl as u128, ((ih as u128) << 64) | il as u128))
+            }
+        };
+        let wire_sent = (c.u64()?, c.u64()?);
+        Ok(CoreRecord {
+            stage,
+            replica,
+            grid,
+            live,
+            suspected,
+            clocks,
+            detector,
+            detected,
+            step_train_loss,
+            trace,
+            last_wire,
+            stats,
+            fault_rng,
+            wire_sent,
+        })
+    }
+}
+
+/// One rank's contribution to a threaded-executor checkpoint.
+#[derive(Clone, Debug)]
+pub struct RankSnapshot {
+    /// Inner steps completed (identical across ranks at a boundary).
+    pub step: u64,
+    /// Outer boundaries completed.
+    pub outer_idx: u64,
+    /// This rank's worker record.
+    pub worker: WorkerRecord,
+    /// This rank's loader cursor (stage-0 ranks only).
+    pub loader: Option<LoaderCursor>,
+    /// This rank's core runtime record.
+    pub core: CoreRecord,
+}
+
+/// Assembles rank-local snapshots into one consistent boundary-aligned
+/// checkpoint — the threaded executor's coordinator. Each worker submits
+/// its [`RankSnapshot`] when the cadence fires; the rank completing the
+/// set writes the merged file atomically. No barrier: ranks submit and
+/// move on, so a checkpoint costs no synchronization beyond one mutex.
+pub struct CkptAssembler {
+    path: PathBuf,
+    world: usize,
+    pending: Mutex<HashMap<u64, Vec<RankSnapshot>>>,
+}
+
+impl CkptAssembler {
+    /// Coordinator writing to `path` once all `dp · pp` ranks have
+    /// submitted a snapshot for the same step.
+    pub fn new(path: impl Into<PathBuf>, dp: usize, pp: usize) -> CkptAssembler {
+        CkptAssembler { path: path.into(), world: dp * pp, pending: Mutex::new(HashMap::new()) }
+    }
+
+    /// Submit one rank's snapshot. Returns `Some(bytes_written)` for the
+    /// rank that completed the set (it performed the write), `None`
+    /// otherwise.
+    pub fn submit(&self, dp: u32, pp: u32, snap: RankSnapshot) -> Result<Option<u64>> {
+        let step = snap.step;
+        let ready = {
+            let mut p = self.pending.lock().unwrap();
+            let v = p.entry(step).or_default();
+            v.push(snap);
+            if v.len() == self.world {
+                p.remove(&step)
+            } else {
+                None
+            }
+        };
+        let Some(mut snaps) = ready else { return Ok(None) };
+        snaps.sort_by_key(|s| (s.worker.stage, s.worker.replica));
+        let outer_idx = snaps[0].outer_idx;
+        let mut loaders: Vec<LoaderCursor> =
+            snaps.iter().filter_map(|s| s.loader.clone()).collect();
+        loaders.sort_by_key(|l| l.replica);
+        let ck = Checkpoint {
+            step,
+            outer_idx,
+            dp,
+            pp,
+            workers: snaps.iter().map(|s| s.worker.clone()).collect(),
+            loaders,
+            cores: snaps.iter().map(|s| s.core.clone()).collect(),
+        };
+        let bytes = ck.save(&self.path)?;
+        Ok(Some(bytes))
+    }
+}
+
+/// CRC-32 (IEEE 802.3 polynomial, reflected) — the per-section frame
+/// check.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xffff_ffffu32;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xedb8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+// ---- little-endian encoding helpers ----
+
+fn put_u8(b: &mut Vec<u8>, x: u8) {
+    b.push(x);
+}
+
+fn put_u32(b: &mut Vec<u8>, x: u32) {
+    b.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, x: u64) {
+    b.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_f64(b: &mut Vec<u8>, x: f64) {
+    b.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_f32s(b: &mut Vec<u8>, xs: &[f32]) {
+    put_u64(b, xs.len() as u64);
     for x in xs {
-        w.write_all(&x.to_le_bytes())?;
+        b.extend_from_slice(&x.to_le_bytes());
     }
-    Ok(())
 }
 
-fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
+fn put_f64s(b: &mut Vec<u8>, xs: &[f64]) {
+    put_u64(b, xs.len() as u64);
+    for x in xs {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
 }
 
-fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
+fn put_u32s(b: &mut Vec<u8>, xs: &[u32]) {
+    put_u64(b, xs.len() as u64);
+    for &x in xs {
+        put_u32(b, x);
+    }
 }
 
-fn read_f32s<R: Read>(r: &mut R) -> Result<Vec<f32>> {
-    let n = read_u64(r)? as usize;
-    // 1 GiB sanity cap: a corrupt length should error, not OOM.
-    ensure!(n < (1 << 28), "implausible tensor length {n}");
-    let mut bytes = vec![0u8; n * 4];
-    r.read_exact(&mut bytes)?;
-    Ok(bytes
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect())
+fn put_u64s(b: &mut Vec<u8>, xs: &[u64]) {
+    put_u64(b, xs.len() as u64);
+    for &x in xs {
+        put_u64(b, x);
+    }
+}
+
+fn put_bools(b: &mut Vec<u8>, xs: &[bool]) {
+    put_u64(b, xs.len() as u64);
+    for &x in xs {
+        b.push(x as u8);
+    }
+}
+
+/// Bounds-checked little-endian cursor over a section body.
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Cur<'a> {
+        Cur { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.i + n <= self.b.len(), "truncated checkpoint section");
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        // 1 GiB sanity cap: a corrupt length should error, not OOM.
+        ensure!(n < (1 << 28), "implausible tensor length {n}");
+        Ok(self
+            .take(n * 4)?
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.u64()? as usize;
+        ensure!(n < (1 << 27), "implausible series length {n}");
+        Ok(self
+            .take(n * 8)?
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.u64()? as usize;
+        ensure!(n < (1 << 24), "implausible index length {n}");
+        Ok(self
+            .take(n * 4)?
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.u64()? as usize;
+        ensure!(n < (1 << 24), "implausible series length {n}");
+        Ok(self
+            .take(n * 8)?
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn bools(&mut self) -> Result<Vec<bool>> {
+        let n = self.u64()? as usize;
+        ensure!(n < (1 << 24), "implausible mask length {n}");
+        Ok(self.take(n)?.iter().map(|&b| b != 0).collect())
+    }
 }
 
 #[cfg(test)]
@@ -220,6 +868,64 @@ mod tests {
         ws
     }
 
+    fn full_checkpoint() -> Checkpoint {
+        let ws = grid();
+        let mut ck = Checkpoint::capture(123, 2, 2, &ws);
+        ck.outer_idx = 3;
+        ck.workers[1].strategy = Some(StrategyState::Streaming {
+            inflight: vec![InflightRecord {
+                outer_idx: 3,
+                frag: 1,
+                group: vec![0, 1],
+                live: vec![0, 1],
+                delta: vec![0.5, -0.5],
+                phi: vec![1.0, 2.0],
+                theta: vec![1.5, 2.5],
+            }],
+            dropped_stale: 2,
+        });
+        ck.workers[2].strategy = Some(StrategyState::Async {
+            offers: vec![OfferRecord {
+                round: 3,
+                frag: 0,
+                peers: vec![1],
+                delta: vec![0.25; 3],
+                phi: vec![0.75; 3],
+            }],
+            admitted: 7,
+            excluded_stale: 1,
+            max_admitted_age: 2,
+        });
+        ck.loaders = vec![
+            LoaderCursor { replica: 0, cursor: 40 },
+            LoaderCursor { replica: 1, cursor: 40 },
+        ];
+        ck.cores = vec![CoreRecord {
+            stage: 0,
+            replica: 0,
+            grid: true,
+            live: vec![true, false],
+            suspected: vec![false, true],
+            clocks: vec![3, 1],
+            detector: Some((vec![3, 1], vec![false, true])),
+            detected: vec![(2, 1, false)],
+            step_train_loss: vec![1.5, f64::NAN, 1.25],
+            trace: vec![(10, 1.5, 1.6, 0.01, 3e-4)],
+            last_wire: (4096, 12),
+            stats: CommStats {
+                floats_sent: 100,
+                activation_hops: 8,
+                blocking_collectives: 0,
+                pair_exchanges: 4,
+                bytes_sent: 4096,
+                msgs_sent: 12,
+            },
+            fault_rng: Some((u128::MAX - 5, 12345)),
+            wire_sent: (2048, 6),
+        }];
+        ck
+    }
+
     #[test]
     fn roundtrip_through_file() {
         let ws = grid();
@@ -229,6 +935,33 @@ mod tests {
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(ck, back);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn full_fidelity_roundtrip_preserves_every_section() {
+        let ck = full_checkpoint();
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        // NaN != NaN defeats PartialEq on the loss series; compare bits.
+        assert_eq!(
+            back.cores[0]
+                .step_train_loss
+                .iter()
+                .map(|x| x.to_bits())
+                .collect::<Vec<_>>(),
+            ck.cores[0]
+                .step_train_loss
+                .iter()
+                .map(|x| x.to_bits())
+                .collect::<Vec<_>>()
+        );
+        assert_eq!(back.workers, ck.workers);
+        assert_eq!(back.loaders, ck.loaders);
+        assert_eq!(back.cores[0].fault_rng, ck.cores[0].fault_rng);
+        assert_eq!(back.cores[0].stats, ck.cores[0].stats);
+        assert_eq!(back.outer_idx, 3);
+        assert_eq!(back.loader_cursor(1), Some(40));
+        assert!(back.core(0, 0, true).is_some());
+        assert!(back.worker(1, 1).is_some());
     }
 
     #[test]
@@ -260,5 +993,77 @@ mod tests {
         std::fs::write(&path, b"not a checkpoint at all").unwrap();
         assert!(Checkpoint::load(&path).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bit_flip_fails_the_section_crc() {
+        let ck = full_checkpoint();
+        let mut bytes = ck.to_bytes();
+        // Flip one payload bit well past the headers.
+        let at = bytes.len() / 2;
+        bytes[at] ^= 0x10;
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("CRC") || err.contains("truncated"), "got: {err}");
+    }
+
+    #[test]
+    fn save_is_atomic_tmp_plus_rename() {
+        let dir = std::env::temp_dir().join("noloco_ckpt_atomic_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.bin");
+        let ck = full_checkpoint();
+        ck.save(&path).unwrap();
+        // The temporary staging file must not survive.
+        assert!(!path.with_extension("tmp").exists());
+        assert!(Checkpoint::load(&path).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn assembler_writes_once_all_ranks_submit() {
+        let ws = grid();
+        let dir = std::env::temp_dir().join("noloco_ckpt_asm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("asm.bin");
+        let asm = CkptAssembler::new(&path, 2, 2);
+        let mut wrote = Vec::new();
+        for (i, w) in ws.iter().enumerate() {
+            let snap = RankSnapshot {
+                step: 20,
+                outer_idx: 2,
+                worker: WorkerRecord::of(w, None),
+                loader: (w.stage == 0).then(|| LoaderCursor {
+                    replica: w.replica as u32,
+                    cursor: 40 + w.replica as u64,
+                }),
+                core: CoreRecord {
+                    stage: w.stage as u32,
+                    replica: w.replica as u32,
+                    ..CoreRecord::default()
+                },
+            };
+            let r = asm.submit(2, 2, snap).unwrap();
+            wrote.push((i, r));
+        }
+        // Exactly the final submission performed the write.
+        assert!(wrote[..3].iter().all(|(_, r)| r.is_none()));
+        assert!(wrote[3].1.is_some());
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.step, 20);
+        assert_eq!(ck.outer_idx, 2);
+        assert_eq!(ck.workers.len(), 4);
+        // Stage-major worker order, ascending loader cursors by replica.
+        assert!(ck.workers.windows(2).all(|w| (w[0].stage, w[0].replica)
+            <= (w[1].stage, w[1].replica)));
+        assert_eq!(ck.loader_cursor(0), Some(40));
+        assert_eq!(ck.loader_cursor(1), Some(41));
+        assert_eq!(ck.cores.len(), 4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn crc32_matches_known_vector() {
+        // The classic IEEE check value for "123456789".
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
     }
 }

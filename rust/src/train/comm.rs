@@ -343,6 +343,86 @@ pub trait Communicator {
         let s = self.stats();
         (s.bytes_sent, s.msgs_sent)
     }
+
+    // --- crash-recovery hooks (sender-replay resume protocol) ---
+    //
+    // Receiver-side stashes are never serialized: a checkpoint records
+    // each rank's *own* retained offers, and a resumed rank re-publishes
+    // them through the `replay_*` methods — unmetered (no stats, no
+    // journal events, no fault-RNG draws), because the original sends
+    // were already accounted before the checkpoint was cut. Both
+    // substrates converge to the same post-resume state: the accounting
+    // mailbox repopulates its retention maps, the fabric re-delivers the
+    // messages into peers' channels.
+
+    /// Re-publish a retained streamed-fragment offer after a resume.
+    #[allow(clippy::too_many_arguments)]
+    fn replay_fragment(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peers: &[usize],
+        seq: u32,
+        frag: u16,
+        delta: &[f32],
+        phi: &[f32],
+    ) -> Result<()> {
+        let _ = (stage, me, peers, seq, frag, delta, phi);
+        Ok(())
+    }
+
+    /// Re-publish a retained bounded-staleness offer after a resume.
+    #[allow(clippy::too_many_arguments)]
+    fn replay_round(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peers: &[usize],
+        round: u32,
+        frag: u16,
+        delta: &[f32],
+        phi: &[f32],
+    ) -> Result<()> {
+        let _ = (stage, me, peers, round, frag, delta, phi);
+        Ok(())
+    }
+
+    /// Re-announce the checkpoint boundary's heartbeat after a resume
+    /// (so peers' detectors keep seeing this rank alive).
+    fn replay_heartbeat(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peers: &[usize],
+        boundary: u32,
+    ) -> Result<()> {
+        let _ = (stage, me, peers, boundary);
+        Ok(())
+    }
+
+    /// Restore checkpointed accounting so resumed counters continue
+    /// cumulatively (wire fields are restored separately on the fabric
+    /// via [`Communicator::restore_wire_totals`]).
+    fn restore_stats(&mut self, stats: &CommStats) {
+        let _ = stats;
+    }
+
+    /// Fault-injection RNG stream `(state, inc)` of the underlying
+    /// transport, if it has one (fabric only).
+    fn fault_rng_state(&self) -> Option<(u128, u128)> {
+        None
+    }
+
+    /// Restore a checkpointed fault-RNG stream so post-resume fault
+    /// draws continue the original sequence.
+    fn restore_fault_rng(&mut self, state: u128, inc: u128) {
+        let _ = (state, inc);
+    }
+
+    /// Restore this rank's transport wire counters (fabric only).
+    fn restore_wire_totals(&mut self, bytes: u64, msgs: u64) {
+        let _ = (bytes, msgs);
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -734,6 +814,52 @@ impl Communicator for AccountingComm {
     fn set_obs_boundary(&mut self, boundary: u64, sim: u64) {
         self.cur_boundary = boundary;
         self.cur_sim = sim;
+    }
+
+    fn replay_fragment(
+        &mut self,
+        stage: usize,
+        me: usize,
+        _peers: &[usize],
+        seq: u32,
+        frag: u16,
+        delta: &[f32],
+        phi: &[f32],
+    ) -> Result<()> {
+        // Straight re-insertion: no metering, no GC (the next real offer
+        // re-applies the retention rule over the replayed rounds).
+        self.frags.insert((stage, me, seq, frag), (delta.to_vec(), phi.to_vec()));
+        Ok(())
+    }
+
+    fn replay_round(
+        &mut self,
+        stage: usize,
+        me: usize,
+        _peers: &[usize],
+        round: u32,
+        frag: u16,
+        delta: &[f32],
+        phi: &[f32],
+    ) -> Result<()> {
+        self.rounds.insert((stage, me, round, frag), (delta.to_vec(), phi.to_vec()));
+        Ok(())
+    }
+
+    fn replay_heartbeat(
+        &mut self,
+        stage: usize,
+        me: usize,
+        _peers: &[usize],
+        boundary: u32,
+    ) -> Result<()> {
+        let slot = self.hearts.entry((stage, me)).or_insert(0);
+        *slot = (*slot).max(boundary);
+        Ok(())
+    }
+
+    fn restore_stats(&mut self, stats: &CommStats) {
+        self.stats = stats.clone();
     }
 }
 
@@ -1144,6 +1270,80 @@ impl Communicator for FabricComm {
         // the fabric-wide counters post-run).
         self.ep.sent_totals()
     }
+
+    fn replay_fragment(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peers: &[usize],
+        seq: u32,
+        frag: u16,
+        delta: &[f32],
+        phi: &[f32],
+    ) -> Result<()> {
+        let my_rank = self.rank_of(stage, me) as u32;
+        let a = frag_seq(seq, frag);
+        for &p in peers {
+            let rank = self.rank_of(stage, p);
+            self.ep.send_unmetered(rank, Tag::new(K_FRAG_D, a, my_rank), Payload::F32(delta.to_vec()));
+            self.ep.send_unmetered(rank, Tag::new(K_FRAG_P, a, my_rank), Payload::F32(phi.to_vec()));
+        }
+        Ok(())
+    }
+
+    fn replay_round(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peers: &[usize],
+        round: u32,
+        frag: u16,
+        delta: &[f32],
+        phi: &[f32],
+    ) -> Result<()> {
+        let my_rank = self.rank_of(stage, me) as u32;
+        let a = frag_seq(round, frag);
+        for &p in peers {
+            let rank = self.rank_of(stage, p);
+            self.ep.send_unmetered(rank, Tag::new(K_ASYNC_D, a, my_rank), Payload::F32(delta.to_vec()));
+            self.ep.send_unmetered(rank, Tag::new(K_ASYNC_P, a, my_rank), Payload::F32(phi.to_vec()));
+        }
+        Ok(())
+    }
+
+    fn replay_heartbeat(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peers: &[usize],
+        boundary: u32,
+    ) -> Result<()> {
+        let my_rank = self.rank_of(stage, me) as u32;
+        for &p in peers {
+            let rank = self.rank_of(stage, p);
+            self.ep.send_unmetered(rank, Tag::new(K_HB, boundary, my_rank), Payload::Control);
+        }
+        Ok(())
+    }
+
+    fn restore_stats(&mut self, stats: &CommStats) {
+        // Wire fields live in the fabric's shared counters on this
+        // executor (restored via `restore_wire_totals`); the local copy
+        // keeps only the logical counters, as before the crash.
+        self.stats = CommStats { bytes_sent: 0, msgs_sent: 0, ..stats.clone() };
+    }
+
+    fn fault_rng_state(&self) -> Option<(u128, u128)> {
+        Some(self.ep.fault_rng_state())
+    }
+
+    fn restore_fault_rng(&mut self, state: u128, inc: u128) {
+        self.ep.restore_fault_rng(state, inc);
+    }
+
+    fn restore_wire_totals(&mut self, bytes: u64, msgs: u64) {
+        self.ep.restore_sent_totals(bytes, msgs);
+    }
 }
 
 #[cfg(test)]
@@ -1280,6 +1480,69 @@ mod tests {
         assert_eq!(c.collect_round(0, 1, 0, 2, 0, true).unwrap(), None);
         assert_eq!(c.collect_round(0, 1, 0, 5, 0, true).unwrap(), Some((vec![2.0], vec![2.0])));
         assert!(c.collect_fragment(0, 0, 1, 2, 0).is_err());
+    }
+
+    #[test]
+    fn accounting_replay_repopulates_stashes_without_metering() {
+        let mut c = AccountingComm::new();
+        c.replay_round(0, 1, &[0], 4, 1, &[1.0], &[2.0]).unwrap();
+        c.replay_fragment(0, 1, &[0], 4, 0, &[3.0], &[4.0]).unwrap();
+        c.replay_heartbeat(0, 1, &[0], 4).unwrap();
+        assert_eq!(c.stats(), &CommStats::default(), "replays are unmetered");
+        assert_eq!(c.collect_round(0, 0, 1, 4, 1, true).unwrap(), Some((vec![1.0], vec![2.0])));
+        assert_eq!(
+            c.collect_fragment(0, 0, 1, 4, 0).unwrap(),
+            Some((vec![3.0], vec![4.0]))
+        );
+        assert!(c.poll_heartbeat(0, 0, 1, 4).unwrap());
+    }
+
+    #[test]
+    fn accounting_restore_stats_resumes_counters_cumulatively() {
+        let mut c = AccountingComm::new();
+        let prior = CommStats { floats_sent: 10, msgs_sent: 3, bytes_sent: 40, ..Default::default() };
+        c.restore_stats(&prior);
+        c.send_boundary((1, 0), BoundaryTag::new(K_ACT, 0, 0), Wire::F32(vec![0.0; 5])).unwrap();
+        assert_eq!(c.stats().floats_sent, 15);
+        assert_eq!(c.stats().msgs_sent, 4);
+        assert_eq!(c.stats().bytes_sent, 60);
+    }
+
+    #[test]
+    fn fabric_replay_delivers_without_counting_or_fault_draws() {
+        // Even under certain drop, replays arrive: they model traffic
+        // that already survived the faulty wire before the checkpoint.
+        let plan = crate::net::FaultPlan { drop_prob: 1.0, ..crate::net::FaultPlan::none() };
+        let mut fabric = crate::net::Fabric::with_faults(2, plan, 77);
+        let mut eps = fabric.take_endpoints().into_iter();
+        let mut a = FabricComm::new(eps.next().unwrap(), 2, None);
+        let mut b = FabricComm::new(eps.next().unwrap(), 2, None);
+        let rng_before = a.fault_rng_state();
+        a.replay_round(0, 0, &[1], 6, 2, &[1.5], &[2.5]).unwrap();
+        a.replay_fragment(0, 0, &[1], 6, 0, &[3.5], &[4.5]).unwrap();
+        a.replay_heartbeat(0, 0, &[1], 6).unwrap();
+        assert_eq!(a.fault_rng_state(), rng_before, "replays draw no fault randomness");
+        assert_eq!(a.wire_totals(), (0, 0), "replays are unmetered");
+        assert_eq!(b.collect_round(0, 1, 0, 6, 2, false).unwrap(), Some((vec![1.5], vec![2.5])));
+        assert_eq!(
+            b.collect_fragment(0, 1, 0, 6, 0).unwrap(),
+            Some((vec![3.5], vec![4.5]))
+        );
+        assert!(b.poll_heartbeat(0, 1, 0, 6).unwrap());
+    }
+
+    #[test]
+    fn fabric_fault_rng_and_wire_totals_round_trip() {
+        let plan = crate::net::FaultPlan { drop_prob: 0.3, ..crate::net::FaultPlan::none() };
+        let mut fabric = crate::net::Fabric::with_faults(2, plan, 5);
+        let mut eps = fabric.take_endpoints().into_iter();
+        let mut a = FabricComm::new(eps.next().unwrap(), 2, None);
+        let _b = eps.next().unwrap();
+        let (state, inc) = a.fault_rng_state().unwrap();
+        a.restore_fault_rng(state, inc);
+        assert_eq!(a.fault_rng_state(), Some((state, inc)));
+        a.restore_wire_totals(4096, 17);
+        assert_eq!(a.wire_totals(), (4096, 17));
     }
 
     #[test]

@@ -28,9 +28,11 @@
 //! order, so the grid executor reproduces the seed trajectories
 //! bit-for-bit and threaded workers agree without coordination traffic.
 
+use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::config::TrainConfig;
 use crate::data::Loader;
@@ -43,6 +45,7 @@ use crate::routing::RoutePlan;
 use crate::runtime::{Engine, Manifest};
 use crate::tensor::Tensor;
 
+use super::checkpoint::{Checkpoint, CkptAssembler, CoreRecord, LoaderCursor, RankSnapshot, WorkerRecord};
 use super::comm::{BoundaryTag, Communicator, Wire, K_ACT, K_GRD, K_TOK, K_VACT, K_VTOK};
 use super::exec::{self, AdamScalars};
 use super::state::WorkerState;
@@ -108,6 +111,24 @@ pub struct TrainerCore<'e, C: Communicator> {
     last_wire: (u64, u64),
     /// Inner-phase seconds accumulated since the last boundary capture.
     inner_accum: f64,
+    /// Auto-checkpoint cadence in outer boundaries (`[ckpt] every`);
+    /// 0 disables the cadence.
+    ckpt_every: u64,
+    /// Grid executor: the file the cadence writes (atomically).
+    ckpt_out: Option<PathBuf>,
+    /// Threaded executor: the shared coordinator every rank submits its
+    /// [`RankSnapshot`] to; the rank completing a boundary's set writes
+    /// the merged file.
+    ckpt_sink: Option<Arc<CkptAssembler>>,
+    /// Kill-restart drills: stop right after the checkpoint at this
+    /// boundary is written — the run "crashes" at the cut (no drain).
+    halt_after: Option<u64>,
+    /// First inner step the run loop executes (a resume continues at the
+    /// checkpoint's step).
+    start_step: usize,
+    /// Whether the run stopped at `halt_after` (skip the drain, exactly
+    /// like a crash).
+    halted: bool,
 }
 
 fn draw_val_batches(cfg: &TrainConfig, man: &Manifest, n: usize) -> Vec<Vec<i32>> {
@@ -206,6 +227,8 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
         comm.set_obs(obs.clone());
         Ok(TrainerCore {
             live: vec![true; dp],
+            ckpt_every: cfg.ckpt.every as u64,
+            ckpt_out: cfg.ckpt.out.as_ref().map(PathBuf::from),
             cfg,
             eng,
             man,
@@ -228,6 +251,10 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
             obs,
             last_wire: (0, 0),
             inner_accum: 0.0,
+            ckpt_sink: None,
+            halt_after: None,
+            start_step: 0,
+            halted: false,
         })
     }
 
@@ -290,6 +317,7 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
             .then(|| FailureDetector::new(dp, cfg.detect.misses));
         Ok(TrainerCore {
             live: vec![true; dp],
+            ckpt_every: cfg.ckpt.every as u64,
             cfg,
             eng,
             man,
@@ -312,6 +340,11 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
             obs: ObsHub::disabled(),
             last_wire: (0, 0),
             inner_accum: 0.0,
+            ckpt_out: None,
+            ckpt_sink: None,
+            halt_after: None,
+            start_step: 0,
+            halted: false,
         })
     }
 
@@ -364,6 +397,20 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
     /// to *infer* the failure — there is no schedule entry.
     pub fn set_silence(&mut self, replica: usize, from_step: u64, until_step: u64) {
         self.silence = Some((replica, from_step, until_step));
+    }
+
+    /// Attach the threaded executor's checkpoint coordinator: every rank
+    /// submits its [`RankSnapshot`] here when the `[ckpt]` cadence fires
+    /// and the rank completing a boundary's set writes the merged file.
+    pub fn set_ckpt_sink(&mut self, sink: Arc<CkptAssembler>) {
+        self.ckpt_sink = Some(sink);
+    }
+
+    /// Kill-restart drills: stop right after the checkpoint at
+    /// `boundary` is written — no drain, no further steps, exactly the
+    /// state a crash at the cut would leave behind.
+    pub fn set_halt_after(&mut self, boundary: u64) {
+        self.halt_after = Some(boundary);
     }
 
     /// Whether DP replica `r` is currently live.
@@ -477,8 +524,18 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
     pub fn run(&mut self) -> Result<TrainReport> {
         let start = Instant::now();
         let exec0 = self.eng.executions();
-        let mut last_val = f64::NAN;
-        for step in 0..self.cfg.steps {
+        // A resumed run starts from the checkpoint's restored trace: the
+        // final report's val loss must survive a resume that never evals
+        // again.
+        let mut last_val = self
+            .trace
+            .val_loss
+            .iter()
+            .rev()
+            .copied()
+            .find(|v| v.is_finite())
+            .unwrap_or(f64::NAN);
+        for step in self.start_step..self.cfg.steps {
             // A crash fault on a single-worker executor: the worker stops
             // outright — no more compute, messages or heartbeats. Its
             // peers must *detect* the failure; nothing announces it.
@@ -505,6 +562,14 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
             if !self.owns_grid() && !self.live[self.workers[0].replica] {
                 if self.owns_last_stage() {
                     self.step_train_loss.push(f64::NAN); // excluded from means
+                }
+                // A dead column still contributes its rank snapshot when
+                // the cadence fires: the assembler needs all dp·pp ranks,
+                // and the column's checkpointed state is exactly what a
+                // resume must recreate (sitting the run out).
+                if self.maybe_checkpoint(step)? {
+                    self.halted = true;
+                    break;
                 }
                 continue;
             }
@@ -547,15 +612,23 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
                         .push(step + 1, train_loss, val, wstd, self.lr.at(step));
                 }
             }
+            // The cadence cuts *after* everything the step does — outer
+            // fold and eval included — so the snapshot is a true prefix
+            // of the uninterrupted trajectory (eval traffic is already in
+            // the accounting) and a resume continues at `step + 1`.
+            if self.maybe_checkpoint(step)? {
+                self.halted = true;
+                break;
+            }
         }
         // Streamed overlap leaves the final boundary's fragment in
         // flight; drain it so the finishing (φ, θ) include every offered
         // exchange (no-op for gated strategies). The last eval above ran
         // before this fold, mirroring a real deployment where the tail
-        // fragment lands after the final report. A crashed worker drains
-        // nothing — it is gone.
+        // fragment lands after the final report. A crashed or
+        // drill-halted worker drains nothing — it is gone.
         let final_outer = (self.cfg.steps / self.cfg.outer.inner_steps) as u64;
-        if !self.crashed {
+        if !self.crashed && !self.halted {
             let live = self.live_replicas();
             let TrainerCore { comm, strategy, workers, live: live_mask, .. } = self;
             for w in workers.iter_mut() {
@@ -1179,16 +1252,264 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
         acc / total.max(1) as f64
     }
 
-    /// Snapshot the whole worker grid (grid executor only).
-    pub fn checkpoint(&self, step: u64) -> Result<super::Checkpoint> {
-        if !self.owns_grid() {
-            bail!("checkpointing requires the grid executor (threaded workers own one worker)");
+    /// Snapshot everything this core owns as a [`Checkpoint`]. The grid
+    /// executor returns the complete run checkpoint; a threaded rank
+    /// returns a single-rank checkpoint of its own state (the `[ckpt]`
+    /// cadence instead routes [`TrainerCore::rank_snapshot`]s through
+    /// the [`CkptAssembler`] coordinator, which merges all `dp · pp` of
+    /// them into one file).
+    pub fn checkpoint(&self, step: u64) -> Result<Checkpoint> {
+        let boundary = step / self.cfg.outer.inner_steps as u64;
+        if self.owns_grid() {
+            return self.capture_full(step, boundary);
         }
-        Ok(super::Checkpoint::capture(step, self.dp(), self.pp(), &self.workers))
+        let snap = self.rank_snapshot(step, boundary);
+        Ok(Checkpoint {
+            step,
+            outer_idx: boundary,
+            dp: self.dp() as u32,
+            pp: self.pp() as u32,
+            workers: vec![snap.worker],
+            loaders: snap.loader.into_iter().collect(),
+            cores: vec![snap.core],
+        })
     }
 
-    /// Restore a snapshot into this grid; returns the snapshot's step.
-    pub fn restore(&mut self, ck: &super::Checkpoint) -> Result<u64> {
+    /// Restore a snapshot's tensors into this grid; returns the
+    /// snapshot's step. Tensor-only — [`TrainerCore::resume_from`] is
+    /// the full-fidelity path.
+    pub fn restore(&mut self, ck: &Checkpoint) -> Result<u64> {
         ck.restore(self.workers_mut())
+    }
+
+    /// Full-fidelity snapshot of the whole run (grid executor): worker
+    /// tensors + in-flight strategy state, loader cursors, and the one
+    /// grid core record.
+    pub fn capture_full(&self, step: u64, boundary: u64) -> Result<Checkpoint> {
+        ensure!(
+            self.owns_grid(),
+            "capture_full snapshots the whole grid; threaded ranks assemble \
+             rank snapshots through the CkptAssembler instead"
+        );
+        let workers = self
+            .workers
+            .iter()
+            .map(|w| WorkerRecord::of(w, self.strategy.export_state(w)))
+            .collect();
+        let loaders = self
+            .loaders
+            .iter()
+            .map(|(r, l)| LoaderCursor { replica: *r as u32, cursor: l.cursor() })
+            .collect();
+        Ok(Checkpoint {
+            step,
+            outer_idx: boundary,
+            dp: self.dp() as u32,
+            pp: self.pp() as u32,
+            workers,
+            loaders,
+            cores: vec![self.core_record(true)],
+        })
+    }
+
+    /// This rank's contribution to a threaded-executor checkpoint
+    /// (exactly one owned worker).
+    pub fn rank_snapshot(&self, step: u64, boundary: u64) -> RankSnapshot {
+        debug_assert_eq!(self.workers.len(), 1, "rank snapshots are per threaded worker");
+        let w = &self.workers[0];
+        RankSnapshot {
+            step,
+            outer_idx: boundary,
+            worker: WorkerRecord::of(w, self.strategy.export_state(w)),
+            loader: self
+                .loaders
+                .first()
+                .map(|(r, l)| LoaderCursor { replica: *r as u32, cursor: l.cursor() }),
+            core: self.core_record(false),
+        }
+    }
+
+    /// Everything this core holds outside worker tensors that still
+    /// shapes the trajectory or the final report.
+    fn core_record(&self, grid: bool) -> CoreRecord {
+        let (stage, replica) = if grid {
+            (0, 0)
+        } else {
+            (self.workers[0].stage as u32, self.workers[0].replica as u32)
+        };
+        CoreRecord {
+            stage,
+            replica,
+            grid,
+            live: self.live.clone(),
+            suspected: self.suspected.clone(),
+            clocks: self.clocks.clone(),
+            detector: self.detector.as_ref().map(|d| d.export_state()),
+            detected: self
+                .detected
+                .iter()
+                .map(|&(b, e)| (b, e.node() as u32, matches!(e, ChurnEvent::Join(_))))
+                .collect(),
+            step_train_loss: self.step_train_loss.clone(),
+            trace: (0..self.trace.steps.len())
+                .map(|i| {
+                    (
+                        self.trace.steps[i] as u64,
+                        self.trace.train_loss[i],
+                        self.trace.val_loss[i],
+                        self.trace.weight_std[i],
+                        self.trace.lr[i],
+                    )
+                })
+                .collect(),
+            last_wire: self.last_wire,
+            stats: self.comm.stats().clone(),
+            fault_rng: self.comm.fault_rng_state(),
+            wire_sent: self.comm.wire_totals(),
+        }
+    }
+
+    /// The `[ckpt]` cadence: at every `every`-th outer boundary (after
+    /// the fold and any eval of the closing step), the grid executor
+    /// writes the full checkpoint atomically and a threaded rank submits
+    /// its snapshot to the coordinator. Returns whether the run must
+    /// halt (kill-restart drill).
+    fn maybe_checkpoint(&mut self, step: usize) -> Result<bool> {
+        let armed = self.ckpt_every > 0
+            && if self.owns_grid() { self.ckpt_out.is_some() } else { self.ckpt_sink.is_some() };
+        if !armed {
+            return Ok(false);
+        }
+        let m = self.cfg.outer.inner_steps as u64;
+        let done = step as u64 + 1; // inner steps completed
+        if done % (self.ckpt_every * m) != 0 {
+            return Ok(false);
+        }
+        let boundary = done / m;
+        let written = if self.owns_grid() {
+            let ck = self.capture_full(done, boundary)?;
+            let path = self.ckpt_out.as_ref().expect("armed above");
+            Some(ck.save(path)?)
+        } else {
+            let snap = self.rank_snapshot(done, boundary);
+            let sink = self.ckpt_sink.as_ref().expect("armed above");
+            sink.submit(self.dp() as u32, self.pp() as u32, snap)?
+        };
+        // One journal row per written file: the grid core always writes;
+        // on the threaded executor the rank completing the set does.
+        if let Some(bytes) = written {
+            self.obs
+                .record(done.saturating_sub(1), Event::Ckpt { boundary, step: done, bytes });
+        }
+        Ok(self.halt_after == Some(boundary))
+    }
+
+    /// Restore a full-fidelity checkpoint into this core (both
+    /// executors) and arm the run loop to continue at the snapshot's
+    /// step: worker tensors, in-flight strategy state (each rank
+    /// re-publishes its own retained offers — the sender-replay
+    /// protocol, so peers' folds admit them exactly as before the
+    /// crash), loader cursors, live/suspected masks, boundary clocks,
+    /// detector verdicts, recorded losses and trace, communication
+    /// accounting and the fabric's fault-RNG / wire counters.
+    pub fn resume_from(&mut self, ck: &Checkpoint) -> Result<()> {
+        ensure!(
+            ck.dp as usize == self.dp() && ck.pp as usize == self.pp(),
+            "checkpoint grid {}×{} does not match the run ({}×{})",
+            ck.dp,
+            ck.pp,
+            self.dp(),
+            self.pp()
+        );
+        let m = self.cfg.outer.inner_steps as u64;
+        ensure!(
+            ck.step % m == 0,
+            "checkpoint step {} is not boundary-aligned (inner_steps = {m})",
+            ck.step
+        );
+        ensure!(
+            ck.step as usize <= self.cfg.steps,
+            "checkpoint step {} is past the configured run ({} steps)",
+            ck.step,
+            self.cfg.steps
+        );
+        // Worker tensors + each worker's in-flight strategy state.
+        for i in 0..self.workers.len() {
+            let (s, r) = (self.workers[i].stage, self.workers[i].replica);
+            let rec = ck
+                .worker(s, r)
+                .with_context(|| format!("checkpoint has no record for worker ({s}, {r})"))?
+                .clone();
+            rec.restore_into(&mut self.workers[i])?;
+            if let Some(st) = &rec.strategy {
+                let TrainerCore { comm, strategy, workers, .. } = self;
+                strategy.restore_state(comm, &workers[i], st)?;
+            }
+        }
+        // Loader cursors: replay the stream up to the recorded position.
+        for (r, loader) in self.loaders.iter_mut() {
+            let cur = ck
+                .loader_cursor(*r)
+                .with_context(|| format!("checkpoint has no loader cursor for replica {r}"))?;
+            loader.fast_forward(cur);
+        }
+        // Core runtime state.
+        let grid = self.owns_grid();
+        let (s0, r0) = (self.workers[0].stage, self.workers[0].replica);
+        let core = ck.core(s0, r0, grid).with_context(|| {
+            format!("checkpoint has no core record for ({s0}, {r0}, grid = {grid})")
+        })?;
+        ensure!(
+            core.live.len() == self.dp(),
+            "checkpoint live mask covers {} replicas, run has {}",
+            core.live.len(),
+            self.dp()
+        );
+        self.live = core.live.clone();
+        self.suspected = core.suspected.clone();
+        self.clocks = core.clocks.clone();
+        if let (Some(det), Some((seen, dead))) = (self.detector.as_mut(), core.detector.as_ref())
+        {
+            det.restore_state(seen, dead);
+        }
+        self.detected = core
+            .detected
+            .iter()
+            .map(|&(b, n, join)| {
+                let n = n as usize;
+                (b, if join { ChurnEvent::Join(n) } else { ChurnEvent::Leave(n) })
+            })
+            .collect();
+        self.step_train_loss = core.step_train_loss.clone();
+        self.trace = RunTrace::default();
+        for &(st, tr, va, ws, lr) in &core.trace {
+            self.trace.push(st as usize, tr, va, ws, lr);
+        }
+        self.last_wire = core.last_wire;
+        self.comm.restore_stats(&core.stats);
+        if let Some((state, inc)) = core.fault_rng {
+            self.comm.restore_fault_rng(state, inc);
+        }
+        self.comm.restore_wire_totals(core.wire_sent.0, core.wire_sent.1);
+        // Re-announce the checkpoint boundary's heartbeat: the original
+        // message died with the old fabric, but peers' next poll window
+        // still reaches back to this boundary.
+        if self.detector.is_some() && ck.outer_idx > 0 {
+            let hb_stage = if grid { 0 } else { s0 };
+            let own: Vec<usize> =
+                if grid { (0..self.dp()).collect() } else { vec![r0] };
+            for &r in &own {
+                if self.live[r] || self.suspected[r] {
+                    let peers: Vec<usize> = (0..self.dp()).filter(|&q| q != r).collect();
+                    self.comm.replay_heartbeat(hb_stage, r, &peers, ck.outer_idx as u32)?;
+                }
+            }
+        }
+        self.start_step = ck.step as usize;
+        self.obs.record(
+            ck.step.saturating_sub(1),
+            Event::Resume { boundary: ck.outer_idx, step: ck.step },
+        );
+        Ok(())
     }
 }

@@ -63,7 +63,10 @@ mod streaming;
 mod threaded;
 
 pub use boundary::{AsyncGossipSync, BoundaryClock};
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{
+    Checkpoint, CkptAssembler, CoreRecord, InflightRecord, LoaderCursor, OfferRecord,
+    RankSnapshot, StrategyState, WorkerRecord,
+};
 pub use comm::{AccountingComm, BoundaryTag, Communicator, FabricComm, Wire};
 pub use self::core::TrainerCore;
 pub use exec::{
@@ -210,9 +213,15 @@ impl TrainReport {
 /// should construct one [`Engine`] themselves and call
 /// [`SimTrainer::new`] per run to amortize XLA compilation.
 pub fn run_sim(cfg: &TrainConfig) -> Result<TrainReport> {
+    use anyhow::Context;
     let dir = find_build(&cfg.artifacts_dir, &cfg.model.name, cfg.topology.pp)?;
     let mut eng = Engine::new(dir)?;
-    SimTrainer::new(cfg.clone(), &mut eng)?.run()
+    let mut t = SimTrainer::new(cfg.clone(), &mut eng)?;
+    if let Some(path) = &cfg.ckpt.resume {
+        let ck = Checkpoint::load(path).with_context(|| format!("resuming from {path}"))?;
+        t.resume_from(&ck)?;
+    }
+    t.run()
 }
 
 /// Convenience sibling of [`run_sim`]: run [`ThreadedTrainer`] (one OS

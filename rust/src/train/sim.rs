@@ -110,17 +110,37 @@ impl<'e> SimTrainer<'e> {
         self.core.worker(stage, replica)
     }
 
-    /// Snapshot the whole worker grid (see [`super::Checkpoint`]).
+    /// Snapshot the whole worker grid — tensors, loader cursors, core
+    /// runtime state and in-flight sync state (see
+    /// [`super::Checkpoint`]). The `[ckpt]` cadence writes the same
+    /// snapshot to disk automatically.
     pub fn checkpoint(&self, step: u64) -> super::Checkpoint {
         self.core
             .checkpoint(step)
             .expect("the grid executor always owns the full grid")
     }
 
-    /// Restore a snapshot into this grid; returns the snapshot's step.
-    /// Loader cursors are not part of the snapshot (see checkpoint docs).
+    /// Restore a snapshot's tensors into this grid; returns the
+    /// snapshot's step. [`SimTrainer::resume_from`] is the
+    /// full-fidelity path (loaders, clocks, accounting, in-flight sync
+    /// state included).
     pub fn restore(&mut self, ck: &super::Checkpoint) -> Result<u64> {
         self.core.restore(ck)
+    }
+
+    /// Full-fidelity resume: restore everything a bit-identical
+    /// continuation needs and arm the run loop to continue at the
+    /// checkpoint's step (see [`TrainerCore::resume_from`]).
+    pub fn resume_from(&mut self, ck: &super::Checkpoint) -> Result<()> {
+        self.core.resume_from(ck)
+    }
+
+    /// Kill-restart drills: stop right after the `[ckpt]` cadence
+    /// writes the checkpoint at `boundary` (see
+    /// [`TrainerCore::set_halt_after`]).
+    pub fn halt_after(mut self, boundary: u64) -> Self {
+        self.core.set_halt_after(boundary);
+        self
     }
 
     /// Current communication accounting.

@@ -32,6 +32,7 @@ use crate::net::{ChurnSchedule, Topology};
 use crate::rngx::Pcg64;
 use crate::runtime::Engine;
 
+use super::checkpoint::StrategyState;
 use super::comm::Communicator;
 use super::exec;
 use super::state::WorkerState;
@@ -162,6 +163,28 @@ pub trait SyncStrategy: Send {
     /// end of a run; strategies with nothing beyond the journaled
     /// offer/fold stream keep the default no-op.
     fn report_obs(&self, _hub: &crate::obs::ObsHub) {}
+
+    /// Export worker `w`'s in-flight cross-boundary state for a
+    /// checkpoint. `None` for gated strategies — they hold nothing
+    /// across a boundary, which is exactly why checkpoints are cut
+    /// there. Overlapped strategies return their retained fragments /
+    /// offers (see [`StrategyState`]).
+    fn export_state(&self, _w: &WorkerState) -> Option<StrategyState> {
+        None
+    }
+
+    /// Restore worker `w`'s checkpointed in-flight state, re-publishing
+    /// this worker's retained offers through `comm`'s unmetered replay
+    /// hooks so peers' folds can still admit them (the sender-replay
+    /// resume protocol — receiver stashes are never serialized).
+    fn restore_state(
+        &mut self,
+        _comm: &mut dyn Communicator,
+        _w: &WorkerState,
+        _st: &StrategyState,
+    ) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// Build the configured NoLoCo pairing policy (shared by the gated and

@@ -75,13 +75,14 @@
 use std::collections::HashMap;
 use std::ops::Range;
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::config::{Method, OuterConfig, StreamConfig, TrainConfig};
 use crate::net::topo::ChurnEvent;
 use crate::net::ChurnSchedule;
 use crate::runtime::Engine;
 
+use super::checkpoint::{InflightRecord, StrategyState};
 use super::comm::Communicator;
 use super::state::WorkerState;
 use super::strategy::{
@@ -600,6 +601,74 @@ impl SyncStrategy for StreamingSync {
         }
         hub.count("streaming.dropped_stale", self.dropped_stale);
     }
+
+    fn export_state(&self, w: &WorkerState) -> Option<StrategyState> {
+        if self.delegate.is_some() {
+            return None; // the gated delegate holds nothing across a boundary
+        }
+        let inflight = self
+            .inflight
+            .get(&(w.stage, w.replica))
+            .map(|es| {
+                es.iter()
+                    .map(|e| InflightRecord {
+                        outer_idx: e.outer_idx,
+                        frag: e.frag as u32,
+                        group: e.group.iter().map(|&x| x as u32).collect(),
+                        live: e.live.iter().map(|&x| x as u32).collect(),
+                        delta: e.delta.clone(),
+                        phi: e.phi.clone(),
+                        theta: e.theta.clone(),
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        Some(StrategyState::Streaming { inflight, dropped_stale: self.dropped_stale })
+    }
+
+    fn restore_state(
+        &mut self,
+        comm: &mut dyn Communicator,
+        w: &WorkerState,
+        st: &StrategyState,
+    ) -> Result<()> {
+        let StrategyState::Streaming { inflight, dropped_stale } = st else {
+            bail!("checkpoint strategy state is not the streaming kind");
+        };
+        // The counter is strategy-global; every owned worker's record
+        // carries the same value (the grid executor restores it once per
+        // worker, converging by max).
+        self.dropped_stale = self.dropped_stale.max(*dropped_stale);
+        let me = w.replica;
+        for rec in inflight {
+            let group: Vec<usize> = rec.group.iter().map(|&x| x as usize).collect();
+            let peers: Vec<usize> = group.iter().copied().filter(|&q| q != me).collect();
+            // Sender-replay: re-publish this worker's retained offer so
+            // peers' deferred folds can still collect it (unmetered —
+            // the original send was accounted before the checkpoint).
+            let phi_payload: &[f32] =
+                if self.flavor == Method::NoLoCo { &rec.phi } else { &[] };
+            comm.replay_fragment(
+                w.stage,
+                me,
+                &peers,
+                rec.outer_idx as u32,
+                rec.frag as u16,
+                &rec.delta,
+                phi_payload,
+            )?;
+            self.inflight.entry((w.stage, me)).or_default().push(Inflight {
+                outer_idx: rec.outer_idx,
+                frag: rec.frag as usize,
+                group,
+                live: rec.live.iter().map(|&x| x as usize).collect(),
+                delta: rec.delta.clone(),
+                phi: rec.phi.clone(),
+                theta: rec.theta.clone(),
+            });
+        }
+        Ok(())
+    }
 }
 
 /// Eq. 2–3 restricted to one fragment, host-side:
@@ -966,6 +1035,46 @@ mod tests {
         assert_ne!(&a.phi[..2], &phi_a0[..2]);
         assert_eq!(&a.phi[2..], &phi_a0[2..]);
         assert_eq!(&a.theta[..2], &a.phi[..2], "zero drift: plain θ := φ");
+    }
+
+    #[test]
+    fn export_restore_resumes_inflight_folds_bit_identically() {
+        let cfg = streaming_cfg(2, true);
+        let live = vec![0usize, 1];
+        let mut s = StreamingSync::from_config(&cfg);
+        let mut comm = AccountingComm::new();
+        let mut ws = [
+            worker(0, vec![1.0, 2.0, 3.0, 4.0]),
+            worker(1, vec![4.0, 3.0, 2.0, 1.0]),
+        ];
+        for w in ws.iter() {
+            s.offer_outer(&mut comm, w, &live, 1).unwrap();
+        }
+        // Inner-phase drift while fragment 0 is in flight.
+        for w in ws.iter_mut() {
+            for x in w.theta.iter_mut() {
+                *x += 0.25;
+            }
+        }
+        // Checkpoint mid-flight: worker tensors + exported strategy state.
+        let snaps: Vec<(WorkerState, StrategyState)> =
+            ws.iter().map(|w| (w.clone(), s.export_state(w).unwrap())).collect();
+        // Reference run continues uninterrupted through boundary 2.
+        boundary(&mut s, &mut comm, &mut ws, &live, 2);
+        // Resumed run: fresh strategy + fresh comm, sender-replay restore.
+        let mut s2 = StreamingSync::from_config(&cfg);
+        let mut comm2 = AccountingComm::new();
+        let mut ws2: Vec<WorkerState> = snaps.iter().map(|(w, _)| w.clone()).collect();
+        for (w, st) in &snaps {
+            s2.restore_state(&mut comm2, w, st).unwrap();
+        }
+        boundary(&mut s2, &mut comm2, &mut ws2, &live, 2);
+        for (a, b) in ws.iter().zip(&ws2) {
+            assert_eq!(a.phi, b.phi, "resumed φ must match bit-for-bit");
+            assert_eq!(a.theta, b.theta, "resumed θ must match bit-for-bit");
+            assert_eq!(a.delta, b.delta, "resumed δ must match bit-for-bit");
+        }
+        assert_eq!(s.dropped_stale(), s2.dropped_stale());
     }
 
     #[test]

@@ -29,10 +29,11 @@
 //! totals) and the wire counters come from the fabric's own metering.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::thread;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::config::TrainConfig;
 use crate::metrics::RunTrace;
@@ -41,6 +42,7 @@ use crate::net::topo::{ChurnEvent, ChurnSchedule};
 use crate::net::Fabric;
 use crate::runtime::{find_build, Engine, Manifest};
 
+use super::checkpoint::{Checkpoint, CkptAssembler};
 use super::comm::FabricComm;
 use super::core::TrainerCore;
 use super::strategy::{self, ChurnResponse, SyncStrategy};
@@ -62,13 +64,27 @@ pub struct ThreadedTrainer {
     /// Fault injection for detection tests: crash `(replica, at_step)` —
     /// the worker thread stops outright, announcing nothing.
     silence: Option<(usize, u64)>,
+    /// Kill-restart drills: every worker stops right after the `[ckpt]`
+    /// cadence covers this boundary.
+    halt_after: Option<u64>,
+    /// Resume from this snapshot instead of `cfg.ckpt.resume` (drills
+    /// hand the loaded checkpoint over directly).
+    resume: Option<Arc<Checkpoint>>,
 }
 
 impl ThreadedTrainer {
     /// New trainer; call [`ThreadedTrainer::run`] to execute. Any churn
     /// schedule on the config is honored (NoLoCo only).
     pub fn new(cfg: TrainConfig) -> ThreadedTrainer {
-        ThreadedTrainer { cfg, latency: None, val_batches: 4, gossip_timeout: None, silence: None }
+        ThreadedTrainer {
+            cfg,
+            latency: None,
+            val_batches: 4,
+            gossip_timeout: None,
+            silence: None,
+            halt_after: None,
+            resume: None,
+        }
     }
 
     /// Fault injection for failure-detection tests: the worker column
@@ -106,6 +122,20 @@ impl ThreadedTrainer {
     /// Number of validation batches per eval point (0 disables eval).
     pub fn with_val_batches(mut self, n: usize) -> ThreadedTrainer {
         self.val_batches = n;
+        self
+    }
+
+    /// Kill-restart drills: every worker stops right after the `[ckpt]`
+    /// cadence snapshots `boundary` (see [`TrainerCore::set_halt_after`]).
+    pub fn with_halt_after(mut self, boundary: u64) -> ThreadedTrainer {
+        self.halt_after = Some(boundary);
+        self
+    }
+
+    /// Resume all workers from an already-loaded snapshot (the drill
+    /// path; `cfg.ckpt.resume` is the file-path form of the same thing).
+    pub fn with_resume(mut self, ck: Checkpoint) -> ThreadedTrainer {
+        self.resume = Some(Arc::new(ck));
         self
     }
 
@@ -149,12 +179,30 @@ impl ThreadedTrainer {
         let num_mb = (per_replica_seqs / man.mb).max(1);
 
         let start = Instant::now();
-        let mut fabric = Fabric::new(dp * pp);
+        // Fault injection rides the fabric: a fault-free plan is exactly
+        // `Fabric::new`, so this is unconditional. The per-receiver fault
+        // RNGs derive from the run seed — faulty runs replay exactly.
+        let mut fabric = Fabric::with_faults(dp * pp, cfg.faults.plan(), cfg.seed);
         let endpoints = fabric.take_endpoints();
         // One shared hub for the whole run: every worker core (and its
         // fabric communicator) journals into the same sink, each stamping
         // events with its own (stage, replica).
         let hub = ObsHub::from_config(&cfg.obs)?;
+        // Periodic checkpoints: ranks snapshot independently at the same
+        // boundary and the assembler writes once the dp·pp set is whole.
+        let sink: Option<Arc<CkptAssembler>> = match (&cfg.ckpt.out, cfg.ckpt.every) {
+            (Some(path), every) if every > 0 => Some(Arc::new(CkptAssembler::new(path, dp, pp))),
+            _ => None,
+        };
+        // Resume: the drill path hands a loaded snapshot over; the config
+        // path names a file. Loaded once, shared read-only by every rank.
+        let resume: Option<Arc<Checkpoint>> = match (&self.resume, &cfg.ckpt.resume) {
+            (Some(ck), _) => Some(ck.clone()),
+            (None, Some(path)) => Some(Arc::new(
+                Checkpoint::load(path).with_context(|| format!("resuming from {path}"))?,
+            )),
+            (None, None) => None,
+        };
 
         let reports: Vec<TrainReport> = thread::scope(|scope| -> Result<Vec<TrainReport>> {
             let mut handles = Vec::new();
@@ -167,7 +215,10 @@ impl ThreadedTrainer {
                 let cfg = cfg.clone();
                 let val_batches = self.val_batches;
                 let silence = self.silence;
+                let halt_after = self.halt_after;
                 let hub = hub.clone();
+                let sink = sink.clone();
+                let resume = resume.clone();
                 handles.push(scope.spawn(move || -> Result<TrainReport> {
                     let (stage, replica) = (rank / dp, rank % dp);
                     let comm = FabricComm::new(ep, dp, gossip_timeout);
@@ -176,6 +227,15 @@ impl ThreadedTrainer {
                         cfg, &mut eng, comm, man, stage, replica, num_mb, val_batches,
                     )?;
                     core.set_obs(hub);
+                    if let Some(sink) = sink {
+                        core.set_ckpt_sink(sink);
+                    }
+                    if let Some(b) = halt_after {
+                        core.set_halt_after(b);
+                    }
+                    if let Some(ck) = &resume {
+                        core.resume_from(ck)?;
+                    }
                     if let Some((r, at)) = silence {
                         core.set_silence(r, at, u64::MAX);
                     }
@@ -195,9 +255,18 @@ impl ThreadedTrainer {
             comm.absorb(&r.comm);
             executions += r.executions;
         }
-        // Wire metering is the fabric's ground truth.
+        // Wire metering is the fabric's ground truth (a resumed run
+        // restores the snapshot's per-rank totals into these counters, so
+        // they stay prefix-inclusive).
         comm.bytes_sent = fabric.bytes_sent().iter().sum();
         comm.msgs_sent = fabric.msgs_sent().iter().sum();
+        // CRC-rejected frames (corrupt fault injection): surfaced as an
+        // obs counter so a faulty run's report shows what the framing
+        // layer absorbed.
+        let corrupt_dropped: u64 = fabric.corrupt_dropped().iter().sum();
+        if corrupt_dropped > 0 {
+            hub.count("net.corrupt_dropped", corrupt_dropped);
+        }
 
         // Per-step training loss: mean across reporting replicas; steps a
         // replica sat out (churn) arrive as NaN and are excluded.

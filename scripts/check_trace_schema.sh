@@ -51,6 +51,8 @@ REQUIRED = {
     "sweep": ["boundary", "dropped"],
     "boundary": ["outer_idx", "inner_s", "sync_s", "bytes", "msgs"],
     "drain": ["outer_idx", "bytes", "msgs"],
+    "ckpt": ["boundary", "step", "bytes"],
+    "resume": ["boundary", "step"],
 }
 ENVELOPE = ("v", "wall", "sim", "ev")
 
