@@ -1,0 +1,213 @@
+//! Dependency-free static analysis of the repo's own source tree.
+//!
+//! `noloco analyze` walks `rust/src/**` and enforces the determinism
+//! invariants the reproduction's guarantees rest on (golden
+//! bit-identical trajectories, sender-replay resume, drill
+//! kill-restart equality):
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | R1   | no wall-clock / ambient randomness on deterministic paths |
+//! | R2   | no iteration over unordered maps in train/net/collective/routing |
+//! | R3   | every RNG seeded from config or restored state, never a magic literal |
+//! | R4   | two-phase `Communicator` discipline (offer before fold, single sweep site, non-blocking heartbeat polls) |
+//! | R5   | fold-path float reductions through approved fixed-association helpers |
+//!
+//! Like `obs::journal`, this is deliberately a hand-rolled scanner
+//! (no syn, no external crates): see [`scan`] for the lexer and
+//! [`rules`] for the registry. Violations are suppressed line-by-line
+//! with `// analyze: <tag>` justifications, never wholesale.
+
+pub mod rules;
+pub mod scan;
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Analyzer version, journaled with the verdict so traces self-describe
+/// which rule set the build was checked against.
+pub const VERSION: u32 = 1;
+
+/// One rule violation at a source location.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Path relative to the analyzed source root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule ID (`R1`…`R5`).
+    pub rule: &'static str,
+    /// Human-readable diagnostic.
+    pub msg: String,
+}
+
+/// Outcome of analyzing a source tree.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    /// All findings, ordered by (file, line, rule).
+    pub findings: Vec<Finding>,
+}
+
+impl Report {
+    /// True when no rule tripped.
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// Run every rule over one file's source text. `rel` is the
+/// `/`-separated path relative to the source root (it drives the
+/// per-rule allowlists and directory scopes).
+pub fn analyze_source(rel: &str, src: &str) -> Vec<Finding> {
+    let lines = scan::scan(src);
+    let fns = scan::functions(&lines);
+    let mut out = Vec::new();
+    rules::r1_wall_clock(rel, &lines, &mut out);
+    rules::r2_unordered_iteration(rel, &lines, &mut out);
+    rules::r3_magic_seed(rel, &lines, &mut out);
+    rules::r4_protocol(rel, &lines, &fns, &mut out);
+    rules::r5_float_reduction(rel, &lines, &fns, &mut out);
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// Analyze every `.rs` file under `root` (deterministic sorted walk).
+pub fn run_path(root: &Path) -> Result<Report> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)
+        .with_context(|| format!("walking {}", root.display()))?;
+    files.sort();
+    let mut report = Report::default();
+    for path in files {
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        report.files += 1;
+        let mut findings = analyze_source(&rel, &src);
+        report.findings.append(&mut findings);
+    }
+    report
+        .findings
+        .sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Locate the crate's own `src/` tree: `rust/src` (repo root), `src`
+/// (crate dir), then the build-time manifest dir as a last resort.
+pub fn default_root() -> Option<PathBuf> {
+    for cand in ["rust/src", "src"] {
+        let p = PathBuf::from(cand);
+        if p.join("lib.rs").is_file() {
+            return Some(p);
+        }
+    }
+    let baked = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    if baked.join("lib.rs").is_file() {
+        return Some(baked);
+    }
+    None
+}
+
+/// Analyze the crate's own tree, for journaling: `(findings, clean)`.
+/// `None` when no source tree is reachable (installed binary running
+/// outside the repo) — the journal then simply carries no verdict.
+pub fn self_verdict() -> Option<(u64, bool)> {
+    let root = default_root()?;
+    let report = run_path(&root).ok()?;
+    Some((report.findings.len() as u64, report.clean()))
+}
+
+/// Human-readable rendering: one `file:line: [rule] msg` per finding
+/// plus a summary line.
+pub fn render_text(report: &Report) -> String {
+    let mut out = String::new();
+    for f in &report.findings {
+        out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.msg));
+    }
+    out.push_str(&format!(
+        "analyze v{}: {} files, {} findings — {}\n",
+        VERSION,
+        report.files,
+        report.findings.len(),
+        if report.clean() { "clean" } else { "FAIL" }
+    ));
+    out
+}
+
+/// Machine-readable rendering: flat JSONL in the `obs::journal`
+/// dialect (one header line, then one line per finding), parseable by
+/// `obs::journal::parse_line`.
+pub fn render_json(report: &Report) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{{\"v\":1,\"kind\":\"analyze\",\"version\":{},\"files\":{},\"findings\":{},\"clean\":{}}}\n",
+        VERSION,
+        report.files,
+        report.findings.len(),
+        report.clean()
+    ));
+    for f in &report.findings {
+        out.push_str(&format!(
+            "{{\"v\":1,\"kind\":\"finding\",\"file\":\"{}\",\"line\":{},\"rule\":\"{}\",\"msg\":\"{}\"}}\n",
+            json_str(&f.file),
+            f.line,
+            f.rule,
+            json_str(&f.msg)
+        ));
+    }
+    out
+}
+
+/// The flat-JSON dialect has no escapes: strip the two characters that
+/// would break framing.
+fn json_str(s: &str) -> String {
+    s.replace('"', "'").replace('\\', "/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_text_carries_location_and_rule() {
+        let bad = "fn step() {\n    let t = std::time::Instant::now();\n}\n";
+        let report = Report { files: 1, findings: analyze_source("train/x.rs", bad) };
+        let text = render_text(&report);
+        assert!(text.contains("train/x.rs:2: [R1]"), "{text}");
+        assert!(text.contains("FAIL"));
+    }
+
+    #[test]
+    fn render_json_is_flat_jsonl() {
+        let bad = "fn step() {\n    let t = std::time::Instant::now();\n}\n";
+        let report = Report { files: 1, findings: analyze_source("train/x.rs", bad) };
+        let json = render_json(&report);
+        let lines: Vec<&str> = json.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"kind\":\"analyze\""));
+        assert!(lines[0].contains("\"clean\":false"));
+        assert!(lines[1].contains("\"rule\":\"R1\""));
+        assert!(lines[1].contains("\"line\":2"));
+        assert!(!json.contains('\\'), "flat dialect must stay escape-free");
+    }
+}

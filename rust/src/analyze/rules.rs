@@ -1,0 +1,653 @@
+//! The determinism rule registry (R1–R5).
+//!
+//! Each rule walks the scanned [`Line`]s of one file and pushes
+//! [`Finding`]s. A finding can be suppressed by a justification
+//! comment on the same or the immediately preceding line:
+//!
+//! ```text
+//! // analyze: ordered-ok — keys are folded through a sorted Vec below
+//! ```
+//!
+//! Tags are rule-specific (`wall-clock-ok`, `ordered-ok`, `seed-ok`,
+//! `protocol-ok`, `float-ok`) so a justification never silences more
+//! than the rule it names. Test code (`#[cfg(test)]` / `#[test]`) is
+//! exempt from every rule.
+
+use super::Finding;
+use super::scan::{enclosing, FnSpan, Line};
+
+/// R1 justification tag.
+pub const TAG_R1: &str = "wall-clock-ok";
+/// R2 justification tag.
+pub const TAG_R2: &str = "ordered-ok";
+/// R3 justification tag.
+pub const TAG_R3: &str = "seed-ok";
+/// R4 justification tag.
+pub const TAG_R4: &str = "protocol-ok";
+/// R5 justification tag.
+pub const TAG_R5: &str = "float-ok";
+
+/// True when line `ln` carries `// analyze: <tag>`, or the contiguous
+/// comment-only block immediately above it does. Multi-line
+/// justifications are the norm — the tag opens the block, prose
+/// continues below it — so the whole block counts as "immediately
+/// preceding".
+fn annotated(lines: &[Line], ln: usize, tag: &str) -> bool {
+    if has_tag(&lines[ln].comment, tag) {
+        return true;
+    }
+    let mut i = ln;
+    while i > 0 {
+        i -= 1;
+        let above = &lines[i];
+        if above.code.trim().is_empty() && !above.comment.is_empty() {
+            if has_tag(&above.comment, tag) {
+                return true;
+            }
+            continue; // keep walking up the comment block
+        }
+        break;
+    }
+    false
+}
+
+fn has_tag(comment: &str, tag: &str) -> bool {
+    comment
+        .split("analyze:")
+        .skip(1)
+        .any(|rest| rest.trim_start().starts_with(tag))
+}
+
+fn push(out: &mut Vec<Finding>, rel: &str, ln: usize, rule: &'static str, msg: String) {
+    out.push(Finding { file: rel.to_string(), line: ln + 1, rule, msg });
+}
+
+/// `pat` occurs in `code` at an identifier boundary (so `operand::`
+/// does not match `rand::`, nor `thread_rng_x` match `thread_rng`).
+fn contains_token(code: &str, pat: &str) -> bool {
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find(pat) {
+        let at = start + pos;
+        let prev_ok = at == 0 || {
+            let p = code[..at].chars().next_back().unwrap_or(' ');
+            !(p.is_ascii_alphanumeric() || p == '_')
+        };
+        let end = at + pat.len();
+        let next_ok = pat.ends_with(':')
+            || pat.ends_with('(')
+            || match code[end..].chars().next() {
+                Some(n) => !(n.is_ascii_alphanumeric() || n == '_'),
+                None => true,
+            };
+        if prev_ok && next_ok {
+            return true;
+        }
+        start = end;
+    }
+    false
+}
+
+// ---------------------------------------------------------------- R1
+
+const R1_PATTERNS: &[&str] = &["SystemTime::now", "Instant::now", "thread_rng", "rand::"];
+
+/// Files where wall-clock / ambient randomness is legitimate by role:
+/// obs (wall stamps), bench (measurement), main.rs (CLI wall-clock
+/// envelope), net/fabric.rs (the real-time threaded transport — its
+/// latency model and timeouts are wall-clock by design and never feed
+/// the deterministic trajectory).
+const R1_ALLOW: &[&str] = &["obs/", "bench/", "main.rs", "net/fabric.rs"];
+
+/// R1: no wall-clock reads or ambient randomness on deterministic paths.
+pub fn r1_wall_clock(rel: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    if R1_ALLOW.iter().any(|p| rel.starts_with(p)) {
+        return;
+    }
+    for (ln, line) in lines.iter().enumerate() {
+        if line.is_test {
+            continue;
+        }
+        for pat in R1_PATTERNS {
+            if contains_token(&line.code, pat) && !annotated(lines, ln, TAG_R1) {
+                push(
+                    out,
+                    rel,
+                    ln,
+                    "R1",
+                    format!(
+                        "`{pat}` — wall-clock/ambient randomness is denied on deterministic \
+                         paths; justify with `// analyze: {TAG_R1}` or move it to an \
+                         allowlisted module"
+                    ),
+                );
+                break;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R2
+
+const R2_DIRS: &[&str] = &["train/", "net/", "collective/", "routing/"];
+const R2_ITER: &[&str] = &[
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".drain()",
+    ".into_iter()",
+];
+
+/// R2: no iteration over unordered `HashMap`/`HashSet` bindings in the
+/// deterministic directories — iteration order would leak into fold
+/// order, wire accounting, and checkpoint bytes.
+pub fn r2_unordered_iteration(rel: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    if !R2_DIRS.iter().any(|d| rel.starts_with(d)) {
+        return;
+    }
+    let maps = unordered_idents(lines);
+    if maps.is_empty() {
+        return;
+    }
+    for (ln, line) in lines.iter().enumerate() {
+        if line.is_test {
+            continue;
+        }
+        let hit = maps.iter().find(|name| {
+            R2_ITER
+                .iter()
+                .any(|m| contains_token(&line.code, &format!("{name}{m}")))
+                || for_loop_over(&line.code, name)
+        });
+        if let Some(name) = hit {
+            if !annotated(lines, ln, TAG_R2) {
+                push(
+                    out,
+                    rel,
+                    ln,
+                    "R2",
+                    format!(
+                        "iteration over unordered `{name}` (HashMap/HashSet) on a \
+                         deterministic path — swap to BTreeMap / sort keys, or justify \
+                         with `// analyze: {TAG_R2}`"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Names bound or ascribed to a `HashMap`/`HashSet` type anywhere in
+/// the file (declarations, struct fields, constructor field inits).
+fn unordered_idents(lines: &[Line]) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for line in lines {
+        let code = &line.code;
+        if code.trim_start().starts_with("use ") {
+            continue;
+        }
+        for marker in ["HashMap", "HashSet"] {
+            let mut start = 0usize;
+            while let Some(pos) = code[start..].find(marker) {
+                let at = start + pos;
+                if let Some(name) = binding_before(&code[..at]) {
+                    if !out.contains(&name) {
+                        out.push(name);
+                    }
+                }
+                start = at + marker.len();
+            }
+        }
+    }
+    out
+}
+
+/// `prefix` ends just before a `HashMap`/`HashSet` token: recover the
+/// binding it is being assigned (`=`) or ascribed (`:`) to, if any.
+fn binding_before(prefix: &str) -> Option<String> {
+    let cut = prefix.rfind([':', '='])?;
+    if prefix[..cut].ends_with(':') {
+        // Path segment (`collections::HashMap`): walk past the `::`.
+        return binding_before(&prefix[..cut.saturating_sub(1)]);
+    }
+    let head = prefix[..cut].trim_end();
+    let name: String = head
+        .chars()
+        .rev()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .collect::<String>()
+        .chars()
+        .rev()
+        .collect();
+    if name.is_empty() || name.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// `for … in [&][mut ]name` (optionally with trailing `{`, `.iter()` …).
+fn for_loop_over(code: &str, name: &str) -> bool {
+    let Some(pos) = code.find(" in ") else {
+        return false;
+    };
+    if !code[..pos].contains("for ") {
+        return false;
+    }
+    let rest = code[pos + 4..]
+        .trim_start()
+        .trim_start_matches('&')
+        .trim_start_matches("mut ")
+        .trim_start();
+    rest.starts_with(name)
+        && match rest[name.len()..].chars().next() {
+            Some(c) => !(c.is_ascii_alphanumeric() || c == '_'),
+            None => true,
+        }
+}
+
+// ---------------------------------------------------------------- R3
+
+const R3_CALLS: &[&str] = &["seed_from_u64(", "Pcg64::new("];
+
+/// R3: every RNG construction must derive from a config seed or
+/// restored state — a bare literal seed outside tests silently forks
+/// the trajectory from what the config says.
+pub fn r3_magic_seed(rel: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    if rel.starts_with("rngx/") {
+        // The RNG crate itself: reference streams and splitmix
+        // constants live here.
+        return;
+    }
+    for (ln, line) in lines.iter().enumerate() {
+        if line.is_test {
+            continue;
+        }
+        for call in R3_CALLS {
+            if let Some(pos) = line.code.find(call) {
+                let args = capture_args(lines, ln, pos + call.len());
+                if !has_seed_ident(&args) && !annotated(lines, ln, TAG_R3) {
+                    push(
+                        out,
+                        rel,
+                        ln,
+                        "R3",
+                        format!(
+                            "`{call}…)` seeded from literals only — derive from the config \
+                             seed or restored state, or justify with `// analyze: {TAG_R3}`"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Argument text of a call, starting just past its opening paren
+/// (which is already consumed), spanning up to 30 lines.
+fn capture_args(lines: &[Line], ln: usize, from: usize) -> String {
+    let mut depth = 1i64;
+    let mut out = String::new();
+    let mut idx = ln;
+    let mut offset = from;
+    while idx < lines.len() && idx <= ln + 30 {
+        for c in lines[idx].code[offset..].chars() {
+            match c {
+                '(' => depth += 1,
+                ')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return out;
+                    }
+                }
+                _ => {}
+            }
+            out.push(c);
+        }
+        out.push(' ');
+        idx += 1;
+        offset = 0;
+    }
+    out
+}
+
+/// Any free identifier in the argument text (not a cast keyword,
+/// primitive type, method name, or the alpha tail of a numeric
+/// literal) counts as a derived seed.
+fn has_seed_ident(args: &str) -> bool {
+    const EXCLUDE: &[&str] = &[
+        "as", "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128",
+        "isize", "f32", "f64",
+    ];
+    let cs: Vec<char> = args.chars().collect();
+    let mut i = 0usize;
+    while i < cs.len() {
+        let c = cs[i];
+        if c.is_ascii_alphabetic() || c == '_' {
+            let prev = if i > 0 { cs[i - 1] } else { ' ' };
+            let method_or_tail = prev == '.' || prev.is_ascii_alphanumeric() || prev == '_';
+            let mut j = i;
+            let mut tok = String::new();
+            while j < cs.len() && (cs[j].is_ascii_alphanumeric() || cs[j] == '_') {
+                tok.push(cs[j]);
+                j += 1;
+            }
+            if !method_or_tail && !EXCLUDE.contains(&tok.as_str()) {
+                return true;
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------- R4
+
+/// One `Communicator` exchange family: offer/replay methods that must
+/// precede its collect/fold methods within a single boundary body.
+struct Family {
+    name: &'static str,
+    offers: &'static [&'static str],
+    collects: &'static [&'static str],
+}
+
+const FAMILIES: &[Family] = &[
+    Family { name: "reduce", offers: &["offer_reduce"], collects: &["all_reduce_mean"] },
+    Family { name: "state", offers: &["offer_state"], collects: &["collect_state"] },
+    Family {
+        name: "fragment",
+        offers: &["offer_fragment", "replay_fragment"],
+        collects: &["collect_fragment"],
+    },
+    Family {
+        name: "round",
+        offers: &["offer_round", "replay_round"],
+        collects: &["collect_round"],
+    },
+];
+
+/// Functions that ARE the protocol (impls and replay/restore paths) —
+/// exempt from the R4a intra-body ordering check.
+const PROTOCOL_METHODS: &[&str] = &[
+    "offer_reduce",
+    "all_reduce_mean",
+    "offer_state",
+    "collect_state",
+    "offer_fragment",
+    "replay_fragment",
+    "collect_fragment",
+    "offer_round",
+    "replay_round",
+    "collect_round",
+    "expire_stale",
+    "poll_heartbeat",
+    "send_heartbeat",
+    "replay_heartbeat",
+];
+
+const SWEEP_METHOD: &str = "expire_stale";
+const SWEEP_SITE: &str = "train/core.rs";
+const HEARTBEAT_POLL: &str = "poll_heartbeat";
+const BLOCKING: &[&str] = &[".recv(", ".recv_timeout(", "thread::sleep", ".wait(", ".wait_timeout("];
+
+fn calls_on_line(code: &str, method: &str) -> bool {
+    code.contains(&format!(".{method}("))
+}
+
+/// R4: `Communicator` protocol conformance — offer/replay before
+/// collect/fold within one body (R4a), `expire_stale` only from the
+/// boundary sweep in train/core.rs (R4b), heartbeat polls non-blocking
+/// (R4c).
+pub fn r4_protocol(rel: &str, lines: &[Line], fns: &[FnSpan], out: &mut Vec<Finding>) {
+    if rel != SWEEP_SITE {
+        for (ln, line) in lines.iter().enumerate() {
+            if !line.is_test
+                && calls_on_line(&line.code, SWEEP_METHOD)
+                && !annotated(lines, ln, TAG_R4)
+            {
+                push(
+                    out,
+                    rel,
+                    ln,
+                    "R4",
+                    format!(
+                        "`.{SWEEP_METHOD}(…)` outside the {SWEEP_SITE} boundary sweep — \
+                         stash expiry from a second site races the staleness window"
+                    ),
+                );
+            }
+        }
+    }
+    for span in fns {
+        if lines[span.header].is_test {
+            continue;
+        }
+        if span.name == HEARTBEAT_POLL {
+            for ln in span.start..=span.end {
+                if BLOCKING.iter().any(|b| lines[ln].code.contains(b))
+                    && !annotated(lines, ln, TAG_R4)
+                {
+                    push(
+                        out,
+                        rel,
+                        ln,
+                        "R4",
+                        "blocking call inside `fn poll_heartbeat` — heartbeat polls must \
+                         stay non-blocking (use try_recv-style probes)"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+        if PROTOCOL_METHODS.contains(&span.name.as_str())
+            || span.name.starts_with("replay_")
+            || span.name.starts_with("restore_")
+        {
+            continue;
+        }
+        for fam in FAMILIES {
+            let first = |methods: &[&str]| -> Option<usize> {
+                (span.start..=span.end).find(|&ln| {
+                    !lines[ln].is_test
+                        && methods.iter().any(|m| calls_on_line(&lines[ln].code, m))
+                })
+            };
+            if let (Some(c), Some(o)) = (first(fam.collects), first(fam.offers)) {
+                if c < o && !annotated(lines, c, TAG_R4) {
+                    push(
+                        out,
+                        rel,
+                        c,
+                        "R4",
+                        format!(
+                            "{} collect/fold before its offer/replay inside `fn {}` — \
+                             the two-phase protocol offers first within a boundary body",
+                            fam.name, span.name
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R5
+
+const R5_FILES: &[&str] =
+    &["train/strategy.rs", "train/streaming.rs", "train/boundary.rs", "train/comm.rs"];
+const R5_REDUCERS: &[&str] = &[".sum()", ".sum::<", ".product()", ".product::<"];
+const R5_APPROVED: &[&str] = &["fold_noloco_weighted"];
+
+/// R5: param-space reductions on the fold path go through the approved
+/// fixed-association helpers — ad-hoc iterator sums re-associate and
+/// break bit-identity across refactors.
+pub fn r5_float_reduction(rel: &str, lines: &[Line], fns: &[FnSpan], out: &mut Vec<Finding>) {
+    if !R5_FILES.contains(&rel) {
+        return;
+    }
+    for (ln, line) in lines.iter().enumerate() {
+        if line.is_test {
+            continue;
+        }
+        if !R5_REDUCERS.iter().any(|r| line.code.contains(r)) {
+            continue;
+        }
+        let approved =
+            enclosing(fns, ln).is_some_and(|s| R5_APPROVED.contains(&s.name.as_str()));
+        if !approved && !annotated(lines, ln, TAG_R5) {
+            push(
+                out,
+                rel,
+                ln,
+                "R5",
+                format!(
+                    "iterator reduction on the fold path — route param-space sums through \
+                     an approved helper ({}) or justify with `// analyze: {TAG_R5}`",
+                    R5_APPROVED.join(", ")
+                ),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::analyze::analyze_source;
+
+    fn rules(rel: &str, src: &str) -> Vec<&'static str> {
+        analyze_source(rel, src).into_iter().map(|f| f.rule).collect()
+    }
+
+    // -------------------------------------------------------- R1
+
+    #[test]
+    fn r1_trips_on_wall_clock_in_deterministic_path() {
+        let bad = "fn step() {\n    let t = std::time::Instant::now();\n}\n";
+        assert_eq!(rules("train/x.rs", bad), vec!["R1"]);
+        let f = &analyze_source("train/x.rs", bad)[0];
+        assert_eq!((f.line, f.rule), (2, "R1"));
+    }
+
+    #[test]
+    fn r1_passes_allowlist_annotation_and_tests() {
+        let bad = "fn step() {\n    let t = std::time::Instant::now();\n}\n";
+        assert!(rules("obs/x.rs", bad).is_empty(), "obs/ is allowlisted");
+        assert!(rules("net/fabric.rs", bad).is_empty(), "fabric is allowlisted");
+        let annotated = "fn step() {\n    // analyze: wall-clock-ok — report envelope only\n    let t = std::time::Instant::now();\n}\n";
+        assert!(rules("train/x.rs", annotated).is_empty());
+        // The tag may open a multi-line justification block; the whole
+        // contiguous comment block counts as immediately preceding.
+        let block = "fn step() {\n    // analyze: wall-clock-ok — report envelope\n    // only; never feeds the trajectory.\n    let t = std::time::Instant::now();\n}\n";
+        assert!(rules("train/x.rs", block).is_empty());
+        // But a tag above intervening *code* does not leak downward.
+        let detached = "fn step() {\n    // analyze: wall-clock-ok\n    let a = 1;\n    let t = std::time::Instant::now();\n}\n";
+        assert_eq!(rules("train/x.rs", detached), vec!["R1"]);
+        let test_only = "#[cfg(test)]\nmod tests {\n    fn t() { let t = std::time::Instant::now(); }\n}\n";
+        assert!(rules("train/x.rs", test_only).is_empty());
+        let in_string = "fn step() {\n    let s = \"Instant::now\";\n}\n";
+        assert!(rules("train/x.rs", in_string).is_empty());
+    }
+
+    #[test]
+    fn r1_trips_on_ambient_randomness() {
+        let bad = "fn step() {\n    let r = rand::random::<u64>();\n}\n";
+        assert_eq!(rules("net/x.rs", bad), vec!["R1"]);
+        let ok = "fn step() {\n    let r = operand::random();\n}\n";
+        assert!(rules("net/x.rs", ok).is_empty());
+    }
+
+    // -------------------------------------------------------- R2
+
+    #[test]
+    fn r2_trips_on_hashmap_iteration() {
+        let bad = "fn sweep() {\n    let mut pending = std::collections::HashMap::new();\n    for (k, v) in &pending {\n    }\n    let n: usize = pending.values().count();\n}\n";
+        assert_eq!(rules("train/x.rs", bad), vec!["R2", "R2"]);
+    }
+
+    #[test]
+    fn r2_passes_btreemap_annotation_and_other_dirs() {
+        let clean = "fn sweep() {\n    let mut pending = std::collections::BTreeMap::new();\n    for (k, v) in &pending {\n    }\n}\n";
+        assert!(rules("train/x.rs", clean).is_empty());
+        let annotated = "struct S { seen: HashSet<u32> }\nfn sweep(s: &S) {\n    // analyze: ordered-ok — membership count only, order never observed\n    let n = s.seen.iter().count();\n}\n";
+        assert!(rules("train/x.rs", annotated).is_empty());
+        let bad = "fn sweep() {\n    let mut pending = std::collections::HashMap::new();\n    for (k, v) in &pending {\n    }\n}\n";
+        assert!(rules("obs/x.rs", bad).is_empty(), "R2 scopes to deterministic dirs");
+    }
+
+    #[test]
+    fn r2_keyed_access_is_fine() {
+        let keyed = "struct S { cache: HashMap<String, u32> }\nfn get(s: &S) -> Option<&u32> {\n    s.cache.get(\"k\")\n}\n";
+        assert!(rules("train/x.rs", keyed).is_empty());
+    }
+
+    // -------------------------------------------------------- R3
+
+    #[test]
+    fn r3_trips_on_magic_seed() {
+        let bad = "fn init() {\n    let rng = Pcg64::new(0xdead_beef, 0x5eed_5eed);\n}\n";
+        assert_eq!(rules("train/x.rs", bad), vec!["R3"]);
+    }
+
+    #[test]
+    fn r3_passes_derived_seeds_tests_and_rngx() {
+        let derived = "fn init(seed: u64) {\n    let rng = Pcg64::new(seed as u128, 0x5eed);\n}\n";
+        assert!(rules("train/x.rs", derived).is_empty());
+        let multiline = "fn init(seed: u64, step: u64) {\n    let rng = Pcg64::new(\n        (seed as u128) << 64 | step as u128,\n        0x5eed_0000_0000 | step as u128,\n    );\n}\n";
+        assert!(rules("routing/x.rs", multiline).is_empty());
+        let bad = "fn init() {\n    let rng = Pcg64::new(0xdead_beef, 0x5eed);\n}\n";
+        assert!(rules("rngx/x.rs", bad).is_empty(), "rngx/ is allowlisted");
+        let test_only = "#[cfg(test)]\nmod tests {\n    fn t() { let rng = Pcg64::new(1, 2); }\n}\n";
+        assert!(rules("train/x.rs", test_only).is_empty());
+    }
+
+    // -------------------------------------------------------- R4
+
+    #[test]
+    fn r4a_trips_on_collect_before_offer() {
+        let bad = "fn boundary(&mut self) {\n    let got = self.comm.collect_round(0, 1, 0, 1, 0, false);\n    self.comm.offer_round(0, 0, 1, 1, 0, 2, d, p);\n}\n";
+        assert_eq!(rules("train/x.rs", bad), vec!["R4"]);
+    }
+
+    #[test]
+    fn r4a_passes_offer_first_and_replay_fns() {
+        let good = "fn boundary(&mut self) {\n    self.comm.offer_round(0, 0, 1, 1, 0, 2, d, p);\n    let got = self.comm.collect_round(0, 1, 0, 1, 0, false);\n}\n";
+        assert!(rules("train/x.rs", good).is_empty());
+        let replay = "fn replay_pending(&mut self) {\n    let got = self.comm.collect_round(0, 1, 0, 1, 0, false);\n    self.comm.offer_round(0, 0, 1, 1, 0, 2, d, p);\n}\n";
+        assert!(rules("train/x.rs", replay).is_empty(), "replay_* fns are exempt");
+    }
+
+    #[test]
+    fn r4b_trips_on_stray_expire_stale() {
+        let bad = "fn boundary(&mut self) {\n    self.comm.expire_stale(7);\n}\n";
+        assert_eq!(rules("train/strategy.rs", bad), vec!["R4"]);
+        assert!(rules("train/core.rs", bad).is_empty(), "the sweep site is exempt");
+    }
+
+    #[test]
+    fn r4c_trips_on_blocking_heartbeat_poll() {
+        let bad = "fn poll_heartbeat(&mut self) {\n    let m = self.rx.recv();\n}\n";
+        assert_eq!(rules("net/x.rs", bad), vec!["R4"]);
+        let good = "fn poll_heartbeat(&mut self) {\n    let m = self.ep.try_recv_ready();\n}\n";
+        assert!(rules("net/x.rs", good).is_empty());
+    }
+
+    // -------------------------------------------------------- R5
+
+    #[test]
+    fn r5_trips_on_adhoc_fold_reduction() {
+        let bad = "fn fold(&mut self, xs: &[f32]) -> f64 {\n    xs.iter().map(|x| *x as f64).sum::<f64>()\n}\n";
+        assert_eq!(rules("train/comm.rs", bad), vec!["R5"]);
+        assert!(rules("train/core.rs", bad).is_empty(), "R5 scopes to fold-path files");
+    }
+
+    #[test]
+    fn r5_passes_approved_helper_and_annotation() {
+        let approved = "fn fold_noloco_weighted(xs: &[f32]) -> f64 {\n    xs.iter().map(|x| *x as f64).sum::<f64>()\n}\n";
+        assert!(rules("train/boundary.rs", approved).is_empty());
+        let annotated = "fn count(&self) -> usize {\n    // analyze: float-ok — integer byte accounting, not param space\n    self.msgs.iter().map(|m| m.bytes).sum()\n}\n";
+        assert!(rules("train/comm.rs", annotated).is_empty());
+    }
+}

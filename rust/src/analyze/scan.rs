@@ -1,0 +1,398 @@
+//! Minimal Rust source scanner for the static-analysis pass.
+//!
+//! Not a parser: a line-oriented lexer that strips comments, blanks
+//! string/char literal contents, tracks `#[cfg(test)]` regions by brace
+//! depth, and recovers function spans — exactly enough structure for
+//! the determinism rules in [`crate::analyze::rules`], with no external
+//! crates (the `obs::journal::parse_line` school of tooling).
+//!
+//! The scanner is deliberately conservative: string and comment bodies
+//! can never trip a rule (they are blanked before matching), and
+//! anything inside a `#[cfg(test)]` item or `#[test]` function is
+//! exempt from every rule.
+
+/// One scanned source line.
+#[derive(Clone, Debug)]
+pub struct Line {
+    /// Code text with comments removed and string/char contents blanked
+    /// (the delimiting quotes survive so token boundaries stay sane).
+    pub code: String,
+    /// Comment text carried on this line (line and block comments) —
+    /// where `// analyze: <tag>` justifications live.
+    pub comment: String,
+    /// Inside a `#[cfg(test)]` item or a `#[test]` function.
+    pub is_test: bool,
+}
+
+/// A function span: name, header line, and inclusive body line range
+/// (0-based line indices into the scanned [`Line`] vector).
+#[derive(Clone, Debug)]
+pub struct FnSpan {
+    /// The declared function name.
+    pub name: String,
+    /// Line carrying the `fn` keyword.
+    pub header: usize,
+    /// First line of the span (the header line).
+    pub start: usize,
+    /// Last line of the body (the closing-brace line).
+    pub end: usize,
+}
+
+/// Lex `src` into per-line code/comment text and mark test regions.
+pub fn scan(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut raw: Vec<(String, String)> = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        Block(u32),
+        Str,
+        RawStr(usize),
+    }
+    let mut st = St::Code;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            raw.push((std::mem::take(&mut code), std::mem::take(&mut comment)));
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    st = St::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    st = St::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !ends_in_ident(&code) {
+                    if let Some((skip, hashes)) = raw_str_start(&chars, i) {
+                        code.push('"');
+                        st = St::RawStr(hashes);
+                        i += skip;
+                    } else if c == 'b' && next == Some('"') {
+                        code.push('"');
+                        st = St::Str;
+                        i += 2;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal vs lifetime: an escape or a
+                    // one-char-then-quote sequence is a literal;
+                    // anything else is a lifetime tick.
+                    if next == Some('\\') {
+                        let mut j = i + 2;
+                        while j < chars.len() && chars[j] != '\'' {
+                            j += 1;
+                        }
+                        code.push_str("''");
+                        i = j + 1;
+                    } else if chars.get(i + 2).copied() == Some('\'') {
+                        code.push_str("''");
+                        i += 3;
+                    } else {
+                        code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            St::Block(d) => {
+                let next = chars.get(i + 1).copied();
+                if c == '*' && next == Some('/') {
+                    st = if d == 1 { St::Code } else { St::Block(d - 1) };
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::Block(d + 1);
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    // Skip the escaped char, but let the newline of a
+                    // line-continuation escape reach the top of the
+                    // loop so line numbers stay aligned.
+                    if chars.get(i + 1).copied() == Some('\n') {
+                        i += 1;
+                    } else {
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    code.push('"');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                if c == '"' && closes_raw(&chars, i, h) {
+                    code.push('"');
+                    st = St::Code;
+                    i += 1 + h;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        raw.push((code, comment));
+    }
+    mark_tests(raw)
+}
+
+fn ends_in_ident(code: &str) -> bool {
+    code.chars().next_back().is_some_and(|p| p.is_ascii_alphanumeric() || p == '_')
+}
+
+/// `r"…"`, `r#"…"#`, `br#"…"#` openers: returns (chars to skip past the
+/// opening quote, hash count).
+fn raw_str_start(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+    }
+    if chars.get(j).copied() != Some('r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while chars.get(j).copied() == Some('#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j).copied() == Some('"') {
+        Some((j + 1 - i, hashes))
+    } else {
+        None
+    }
+}
+
+fn closes_raw(chars: &[char], i: usize, hashes: usize) -> bool {
+    (1..=hashes).all(|k| chars.get(i + k).copied() == Some('#'))
+}
+
+/// Mark lines inside `#[cfg(test)]` items / `#[test]` functions. The
+/// attribute arms a pending flag; the next `{` opens the exempt region,
+/// a `;` before any brace (attribute on a braceless item) disarms it.
+fn mark_tests(raw: Vec<(String, String)>) -> Vec<Line> {
+    let mut out = Vec::with_capacity(raw.len());
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut exit_depth: Option<i64> = None;
+    for (code, comment) in raw {
+        if exit_depth.is_none() && (code.contains("cfg(test") || code.contains("#[test]")) {
+            pending = true;
+        }
+        let mut is_test = exit_depth.is_some() || pending;
+        for ch in code.chars() {
+            match ch {
+                '{' => {
+                    if pending && exit_depth.is_none() {
+                        exit_depth = Some(depth);
+                        pending = false;
+                        is_test = true;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if exit_depth.is_some_and(|d| depth <= d) {
+                        exit_depth = None;
+                        is_test = true; // the closing-brace line itself
+                    }
+                }
+                ';' => {
+                    if pending && exit_depth.is_none() {
+                        pending = false;
+                    }
+                }
+                _ => {}
+            }
+        }
+        if exit_depth.is_some() {
+            is_test = true;
+        }
+        out.push(Line { code, comment, is_test });
+    }
+    out
+}
+
+/// Recover function spans by brace counting. A `fn name` header arms a
+/// pending declaration; the next `{` at argument-paren depth zero opens
+/// its body, a `;` there (trait method declaration) disarms it.
+pub fn functions(lines: &[Line]) -> Vec<FnSpan> {
+    let mut out: Vec<FnSpan> = Vec::new();
+    let mut open: Vec<(String, usize, i64)> = Vec::new();
+    let mut pending: Option<(String, usize)> = None;
+    let mut pending_paren: i64 = 0;
+    let mut depth: i64 = 0;
+    for (ln, line) in lines.iter().enumerate() {
+        let decls = fn_decls(&line.code);
+        let mut di = 0usize;
+        for (ci, ch) in line.code.chars().enumerate() {
+            if di < decls.len() && decls[di].0 == ci {
+                pending = Some((decls[di].1.clone(), ln));
+                pending_paren = 0;
+                di += 1;
+            }
+            match ch {
+                '(' => pending_paren += 1,
+                ')' => pending_paren -= 1,
+                '{' => {
+                    if let Some((name, header)) = pending.take() {
+                        open.push((name, header, depth));
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if open.last().is_some_and(|&(_, _, d)| depth <= d) {
+                        if let Some((name, header, _)) = open.pop() {
+                            out.push(FnSpan { name, header, start: header, end: ln });
+                        }
+                    }
+                }
+                ';' => {
+                    if pending.is_some() && pending_paren <= 0 {
+                        pending = None; // bodiless trait declaration
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    out.sort_by_key(|s| s.start);
+    out
+}
+
+/// `(char index, name)` of each `fn` declaration on a code line.
+fn fn_decls(code: &str) -> Vec<(usize, String)> {
+    let cs: Vec<char> = code.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < cs.len() {
+        let boundary_before = i == 0 || !is_ident(cs[i - 1]);
+        let boundary_after = match cs.get(i + 2) {
+            Some(c) => !is_ident(*c),
+            None => true,
+        };
+        if cs[i] == 'f' && cs[i + 1] == 'n' && boundary_before && boundary_after {
+            let mut j = i + 2;
+            while j < cs.len() && cs[j].is_whitespace() {
+                j += 1;
+            }
+            let mut name = String::new();
+            while j < cs.len() && is_ident(cs[j]) {
+                name.push(cs[j]);
+                j += 1;
+            }
+            if !name.is_empty() {
+                out.push((i, name));
+            }
+            i = j.max(i + 2);
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Innermost function span containing line `ln`, if any.
+pub fn enclosing<'a>(fns: &'a [FnSpan], ln: usize) -> Option<&'a FnSpan> {
+    fns.iter()
+        .filter(|s| s.start <= ln && ln <= s.end)
+        .min_by_key(|s| s.end - s.start)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked() {
+        let src = "let a = \"Instant::now()\"; // Instant::now\nlet b = 1; /* x */ let c = 2;\n";
+        let lines = scan(src);
+        assert!(!lines[0].code.contains("Instant"));
+        assert!(lines[0].comment.contains("Instant::now"));
+        assert!(lines[1].code.contains("let b = 1;"));
+        assert!(lines[1].code.contains("let c = 2;"));
+        assert!(lines[1].comment.contains('x'));
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals_are_blanked() {
+        let src = "let s = r#\"a \"quoted\" Instant::now\"#;\nlet c = 'x';\nlet l: &'static str = \"\";\n";
+        let lines = scan(src);
+        assert!(!lines[0].code.contains("Instant"), "{}", lines[0].code);
+        assert!(lines[1].code.contains("''"));
+        assert!(lines[2].code.contains("&'static"));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_marked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let lines = scan(src);
+        assert!(!lines[0].is_test);
+        assert!(lines[1].is_test && lines[2].is_test && lines[3].is_test && lines[4].is_test);
+        assert!(!lines[5].is_test);
+    }
+
+    #[test]
+    fn cfg_test_on_braceless_item_does_not_leak() {
+        let src = "#[cfg(test)]\nuse std::fmt;\nfn live() { let x = 1; }\n";
+        let lines = scan(src);
+        assert!(lines[1].is_test);
+        assert!(!lines[2].is_test, "the attribute must die at the semicolon");
+    }
+
+    #[test]
+    fn function_spans_cover_bodies() {
+        let src = "impl Foo {\n    fn bar(&self) {\n        baz();\n    }\n    fn qux() -> u32 {\n        7\n    }\n}\n";
+        let lines = scan(src);
+        let fns = functions(&lines);
+        assert_eq!(fns.len(), 2);
+        assert_eq!(fns[0].name, "bar");
+        assert_eq!((fns[0].start, fns[0].end), (1, 3));
+        assert_eq!(fns[1].name, "qux");
+        assert_eq!((fns[1].start, fns[1].end), (4, 6));
+        assert_eq!(enclosing(&fns, 2).map(|s| s.name.as_str()), Some("bar"));
+        assert!(enclosing(&fns, 0).is_none());
+    }
+
+    #[test]
+    fn trait_declarations_open_no_span() {
+        let src = "trait T {\n    fn a(&self);\n    fn b(&self) {\n        1;\n    }\n}\n";
+        let fns = functions(&scan(src));
+        assert_eq!(fns.len(), 1);
+        assert_eq!(fns[0].name, "b");
+    }
+}

@@ -31,7 +31,7 @@ const VALUE_KEYS: &[&str] = &[
     "fragments", "overlap", "staleness", "stash-age", "detect", "detect-misses",
     "trace-out", "metrics-out", "trace-level", "ckpt-out", "ckpt-every", "resume",
     "fault-drop", "fault-dup", "fault-delay", "fault-delay-secs", "fault-reorder",
-    "fault-corrupt", "executor", "halt-after",
+    "fault-corrupt", "executor", "halt-after", "format", "root",
 ];
 
 impl Args {

@@ -5,6 +5,11 @@
 //! that is consistent across ranks. Tags carry `(kind, step, slot)` so
 //! concurrent collectives at different steps never cross-match.
 
+// `expect` discipline: group membership (`caller not in group`) is the
+// collective's caller contract — a violation is a harness bug and must
+// crash loudly rather than limp into a wrong reduction.
+#![allow(clippy::expect_used)]
+
 use crate::net::{Endpoint, Payload, Tag};
 use crate::tensor::Tensor;
 

@@ -166,7 +166,7 @@ mod tests {
         // entropy — otherwise there is nothing for the model to learn.
         let mut c = Corpus::train(Dataset::RedditLike, 256, 5);
         let mut uni = vec![0f64; 256];
-        let mut big = std::collections::HashMap::<(u32, u32), f64>::new();
+        let mut big = std::collections::BTreeMap::<(u32, u32), f64>::new();
         let mut prev_count = vec![0f64; 256];
         for _ in 0..400 {
             let s = c.next_sequence(128);

@@ -20,6 +20,7 @@
 //!
 //! | module | role |
 //! |---|---|
+//! | [`analyze`] | dependency-free static analysis of this tree: determinism / protocol-conformance rules R1–R5 behind `noloco analyze` |
 //! | [`cli`] | zero-dependency argument parsing |
 //! | [`config`] | TOML-subset parser, typed configs, paper presets (Table 1) |
 //! | [`rngx`] | PCG64 RNG, normal / log-normal draws, permutations |
@@ -39,6 +40,14 @@
 //! | [`train`] | distributed training API: one generic [`train::TrainerCore`] over pluggable [`train::SyncStrategy`] (fsdp / diloco / noloco / streaming-fragmented overlap via [`train::StreamingSync`] / bounded-staleness async gossip via [`train::AsyncGossipSync`]) and [`train::Communicator`] (accounting / fabric) impls, plus [`train::PairingPolicy`] gossip pairing |
 //! | [`bench`] | measurement helpers for `cargo bench` targets |
 
+// Panic discipline for library code: every `unwrap`/`expect` on the
+// non-test path is either removed or carries a local, justified allow.
+// Tests keep their idiomatic unwraps. (`unsafe_code = "deny"` lives in
+// Cargo.toml `[lints]`; these are crate attrs so they scope to src/.)
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+#![cfg_attr(test, allow(clippy::unwrap_used, clippy::expect_used))]
+
+pub mod analyze;
 pub mod bench;
 pub mod cli;
 pub mod collective;

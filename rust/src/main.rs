@@ -12,11 +12,18 @@
 //!                        assert the trajectory is bit-identical
 //! * `obs-smoke`        — emit a small sample trace journal (schema tooling)
 //! * `bench-baseline`   — write the deterministic cost-model baseline JSON
+//! * `analyze`          — static determinism/protocol analysis of this tree
+//!                        (rules R1–R5; exits nonzero on findings)
 //!
 //! Common options: `--preset NAME`, `--method fsdp|diloco|noloco`,
 //! `--dataset reddit|c4`, `--routing random|fixed`, `--steps N`, `--dp N`,
 //! `--pp N`, `--seed N`, `--config FILE`, `--set path=value`, `--csv OUT`,
 //! `--topo lan|wan|long-tail`, `--regions N`, `--churn "leave:S:R;join:S:R"`.
+
+// Panic discipline mirrors lib.rs: no bare unwrap/expect on the
+// non-test path without a local justified allow.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+#![cfg_attr(test, allow(clippy::unwrap_used, clippy::expect_used))]
 
 use noloco::cli::{self, Args};
 use noloco::config::presets;
@@ -42,6 +49,7 @@ fn main() {
         "drill" => cmd_drill(&args),
         "obs-smoke" => cmd_obs_smoke(&args),
         "bench-baseline" => cmd_bench_baseline(&args),
+        "analyze" => cmd_analyze(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -71,7 +79,8 @@ fn print_help() {
            check            validate config + artifacts without training\n\
            drill            kill-restart drill: ckpt, drop state, resume, compare\n\
            obs-smoke        emit a small sample trace journal (--out FILE)\n\
-           bench-baseline   write the cost-model baseline JSON (--out FILE)\n\n\
+           bench-baseline   write the cost-model baseline JSON (--out FILE)\n\
+           analyze          static determinism/protocol analysis (R1–R5)\n\n\
          OPTIONS:\n\
            --preset NAME        preset (default: tiny); see `noloco presets`\n\
            --method M           fsdp | diloco | noloco\n\
@@ -114,7 +123,9 @@ fn print_help() {
            --fault-corrupt P    threaded: bit-flip probability (CRC drops + counts)\n\
            --executor E         drill: grid | threads | both (default: both)\n\
            --halt-after B       drill: boundary to kill at (default: mid-run)\n\
-           --payload BYTES      topo: sync payload (default: model size)"
+           --payload BYTES      topo: sync payload (default: model size)\n\
+           --root DIR           analyze: source tree to scan (default: ./src or ./rust/src)\n\
+           --format F           analyze: text | json (flat JSONL findings)"
     );
 }
 
@@ -228,7 +239,9 @@ fn cmd_presets() -> anyhow::Result<()> {
         "preset", "hidden", "layers", "intermediate", "heads", "vocab", "params", "steps"
     );
     for name in presets::PRESET_NAMES {
-        let c = presets::preset(name).unwrap();
+        let Some(c) = presets::preset(name) else {
+            continue;
+        };
         println!(
             "{:<14} {:>7} {:>7} {:>12} {:>6} {:>9} {:>11} {:>8}",
             name,
@@ -323,7 +336,7 @@ fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
             found += 1;
             println!(
                 "{:<24} model={} pp={} mb={} seq={} vocab={} params={:?}",
-                path.file_name().unwrap().to_string_lossy(),
+                entry.file_name().to_string_lossy(),
                 man.model,
                 man.pp,
                 man.mb,
@@ -536,5 +549,31 @@ fn cmd_bench_baseline(args: &Args) -> anyhow::Result<()> {
     let out = args.opt("out").unwrap_or("BENCH_baseline.json");
     std::fs::write(out, noloco::obs::bench::baseline_json())?;
     println!("cost-model baseline written to {out}");
+    Ok(())
+}
+
+/// Static determinism/protocol analysis (rules R1–R5) over the crate's
+/// own source tree. Exits 0 when clean, 1 with `file:line: [rule] msg`
+/// diagnostics otherwise; `--format json` emits flat JSONL instead.
+fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
+    use noloco::analyze;
+
+    let root = match args.opt("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None => analyze::default_root()
+            .ok_or_else(|| anyhow::anyhow!("no source tree found; pass --root DIR"))?,
+    };
+    let report = analyze::run_path(&root)?;
+    match args.opt("format") {
+        Some("json") => print!("{}", analyze::render_json(&report)),
+        Some(other) if other != "text" => {
+            anyhow::bail!("unknown --format `{other}` (expected text | json)")
+        }
+        _ => print!("{}", analyze::render_text(&report)),
+    }
+    if !report.clean() {
+        // Diagnostics already printed; the nonzero exit is the verdict.
+        std::process::exit(1);
+    }
     Ok(())
 }

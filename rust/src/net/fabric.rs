@@ -58,8 +58,14 @@
 
 use crate::rngx::Pcg64;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
+
+/// Poison-proof lock: a peer that panicked mid-send must not poison
+/// the shared wire counters for everyone else.
+fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Message kind + coordinates. `Ord` so stashes can be searched cheaply.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -284,6 +290,7 @@ impl Fabric {
     }
 
     /// Move all endpoints out (each worker thread owns one).
+    #[allow(clippy::expect_used)] // double-take is a harness bug: crash loudly
     pub fn take_endpoints(&mut self) -> Vec<Endpoint> {
         self.endpoints
             .iter_mut()
@@ -294,18 +301,18 @@ impl Fabric {
     /// Total bytes put on the wire per rank so far (traffic accounting for
     /// the communication-volume comparisons).
     pub fn bytes_sent(&self) -> Vec<u64> {
-        self.shared.bytes_sent.lock().unwrap().clone()
+        locked(&self.shared.bytes_sent).clone()
     }
 
     /// Total messages sent per rank.
     pub fn msgs_sent(&self) -> Vec<u64> {
-        self.shared.msgs_sent.lock().unwrap().clone()
+        locked(&self.shared.msgs_sent).clone()
     }
 
     /// Frames each *receiving* rank discarded on CRC mismatch (corrupt
     /// fault injection caught by the framing layer).
     pub fn corrupt_dropped(&self) -> Vec<u64> {
-        self.shared.corrupt_dropped.lock().unwrap().clone()
+        locked(&self.shared.corrupt_dropped).clone()
     }
 }
 
@@ -354,8 +361,8 @@ impl Endpoint {
     /// expose fabric-wide, readable from the worker side — attempted
     /// sends are counted even when fault injection drops them.
     pub fn sent_totals(&self) -> (u64, u64) {
-        let bytes = self.shared.bytes_sent.lock().unwrap()[self.rank];
-        let msgs = self.shared.msgs_sent.lock().unwrap()[self.rank];
+        let bytes = locked(&self.shared.bytes_sent)[self.rank];
+        let msgs = locked(&self.shared.msgs_sent)[self.rank];
         (bytes, msgs)
     }
 
@@ -364,9 +371,9 @@ impl Endpoint {
     /// delay → reorder → corrupt, each gated on its knob being active.
     pub fn send(&mut self, to: usize, tag: Tag, payload: Payload) {
         {
-            let mut b = self.shared.bytes_sent.lock().unwrap();
+            let mut b = locked(&self.shared.bytes_sent);
             b[self.rank] += payload.wire_bytes() as u64;
-            let mut m = self.shared.msgs_sent.lock().unwrap();
+            let mut m = locked(&self.shared.msgs_sent);
             m[self.rank] += 1;
         }
         // The CRC frames the payload *as intended* — corruption below
@@ -454,8 +461,8 @@ impl Endpoint {
     /// a resumed run's cumulative metering continues where the
     /// interrupted run left off.
     pub fn restore_sent_totals(&self, bytes: u64, msgs: u64) {
-        self.shared.bytes_sent.lock().unwrap()[self.rank] = bytes;
-        self.shared.msgs_sent.lock().unwrap()[self.rank] = msgs;
+        locked(&self.shared.bytes_sent)[self.rank] = bytes;
+        locked(&self.shared.msgs_sent)[self.rank] = msgs;
     }
 
     /// Verify an incoming frame's CRC; a mismatch counts against this
@@ -464,7 +471,7 @@ impl Endpoint {
         if msg.crc == payload_crc(&msg.payload) {
             true
         } else {
-            self.shared.corrupt_dropped.lock().unwrap()[self.rank] += 1;
+            locked(&self.shared.corrupt_dropped)[self.rank] += 1;
             false
         }
     }
@@ -489,6 +496,7 @@ impl Endpoint {
 
     /// Blocking receive of the first message matching `tag` (out-of-order
     /// arrivals under other tags are stashed).
+    #[allow(clippy::expect_used)] // a hung-up fabric means a peer died: crash loudly
     pub fn recv(&mut self, tag: Tag) -> Message {
         if let Some(i) = self.stash.iter().position(|m| m.tag == tag) {
             let msg = self.stash.swap_remove(i);
@@ -598,6 +606,7 @@ impl Endpoint {
     }
 
     /// Receive any message (FIFO across stash + channel).
+    #[allow(clippy::expect_used)] // a hung-up fabric means a peer died: crash loudly
     pub fn recv_any(&mut self) -> Message {
         if !self.stash.is_empty() {
             let msg = self.stash.remove(0);

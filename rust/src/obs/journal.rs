@@ -63,6 +63,10 @@ pub enum Event {
     Ckpt { boundary: u64, step: u64, bytes: u64 },
     /// The run resumed from a snapshot cut at `boundary` / `step`.
     Resume { boundary: u64, step: u64 },
+    /// Static-analysis verdict for the running build (`noloco analyze`
+    /// rules R1–R5), journaled once at hub construction so every trace
+    /// self-describes whether its producer passed the determinism pass.
+    Analyze { version: u64, findings: u64, clean: bool },
 }
 
 impl Event {
@@ -80,6 +84,7 @@ impl Event {
             Event::Drain { .. } => "drain",
             Event::Ckpt { .. } => "ckpt",
             Event::Resume { .. } => "resume",
+            Event::Analyze { .. } => "analyze",
         }
     }
 
@@ -157,6 +162,11 @@ impl Event {
                 push_u64(&mut s, "boundary", *boundary);
                 push_u64(&mut s, "step", *step);
             }
+            Event::Analyze { version, findings, clean } => {
+                push_u64(&mut s, "version", *version);
+                push_u64(&mut s, "findings", *findings);
+                push_bool(&mut s, "clean", *clean);
+            }
         }
         s.push('}');
         s
@@ -179,6 +189,7 @@ pub fn required_keys(ev: &str) -> Option<&'static [&'static str]> {
         "drain" => &["outer_idx", "bytes", "msgs"],
         "ckpt" => &["boundary", "step", "bytes"],
         "resume" => &["boundary", "step"],
+        "analyze" => &["version", "findings", "clean"],
         _ => return None,
     })
 }
@@ -300,6 +311,7 @@ mod tests {
             Event::Drain { outer_idx: 6, bytes: 128, msgs: 1 },
             Event::Ckpt { boundary: 6, step: 300, bytes: 65536 },
             Event::Resume { boundary: 6, step: 300 },
+            Event::Analyze { version: 1, findings: 0, clean: true },
         ];
         for (i, ev) in events.iter().enumerate() {
             let line = ev.to_json(1.25, i as u64);

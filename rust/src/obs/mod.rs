@@ -139,6 +139,7 @@ impl ObsInner {
             Event::Drain { .. } => self.bump("drains", 1),
             Event::Ckpt { .. } => self.bump("ckpts", 1),
             Event::Resume { .. } => self.bump("resumes", 1),
+            Event::Analyze { .. } => self.bump("analyzes", 1),
         }
         // The journal (and its in-memory mirror) honors the trace level.
         let admit = match self.level {
@@ -155,6 +156,12 @@ impl ObsInner {
         }
         self.events.push(ev);
     }
+}
+
+/// Poison-proof lock: a worker thread that panicked while holding the
+/// hub must not take the whole run's observability down with it.
+fn locked(m: &Mutex<ObsInner>) -> std::sync::MutexGuard<'_, ObsInner> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// The shared observability sink. Cheap to clone (an `Option<Arc>`);
@@ -183,7 +190,22 @@ impl ObsHub {
             )),
             None => None,
         };
-        Ok(ObsHub::build(cfg.trace_level, writer, cfg.trace_out.clone(), cfg.metrics_out.clone()))
+        let hub =
+            ObsHub::build(cfg.trace_level, writer, cfg.trace_out.clone(), cfg.metrics_out.clone());
+        // A journaled run self-describes whether its producer passed the
+        // static determinism pass (`noloco analyze`, rules R1–R5). The
+        // hub is built once per run, so the verdict lands exactly once,
+        // as the first journal line. Skipped when the source tree is not
+        // reachable (installed binary outside the repo).
+        if cfg.trace_out.is_some() {
+            if let Some((findings, clean)) = crate::analyze::self_verdict() {
+                hub.record(
+                    0,
+                    Event::Analyze { version: u64::from(crate::analyze::VERSION), findings, clean },
+                );
+            }
+        }
+        Ok(hub)
     }
 
     /// An enabled hub with no file sinks — events and counters
@@ -223,20 +245,20 @@ impl ObsHub {
     /// stamp — the global inner-step index at emission.
     pub fn record(&self, sim: u64, ev: Event) {
         let Some(inner) = &self.inner else { return };
-        inner.lock().unwrap().absorb(sim, ev);
+        locked(inner).absorb(sim, ev);
     }
 
     /// Add `n` to a named counter (strategy/communicator totals that
     /// have no per-event form).
     pub fn count(&self, key: &str, n: u64) {
         let Some(inner) = &self.inner else { return };
-        inner.lock().unwrap().bump(key, n);
+        locked(inner).bump(key, n);
     }
 
     /// Current value of a counter (0 when absent or disabled).
     pub fn counter(&self, key: &str) -> u64 {
         match &self.inner {
-            Some(inner) => inner.lock().unwrap().counters.get(key).copied().unwrap_or(0),
+            Some(inner) => locked(inner).counters.get(key).copied().unwrap_or(0),
             None => 0,
         }
     }
@@ -244,7 +266,7 @@ impl ObsHub {
     /// Snapshot of the recorded (level-admitted) events.
     pub fn events(&self) -> Vec<Event> {
         match &self.inner {
-            Some(inner) => inner.lock().unwrap().events.clone(),
+            Some(inner) => locked(inner).events.clone(),
             None => Vec::new(),
         }
     }
@@ -252,7 +274,7 @@ impl ObsHub {
     /// Seconds since the hub was created (0 when disabled).
     pub fn wall(&self) -> f64 {
         match &self.inner {
-            Some(inner) => inner.lock().unwrap().start.elapsed().as_secs_f64(),
+            Some(inner) => locked(inner).start.elapsed().as_secs_f64(),
             None => 0.0,
         }
     }
@@ -270,7 +292,7 @@ impl ObsHub {
         msgs: u64,
     ) {
         let Some(inner) = &self.inner else { return };
-        let g = inner.lock().unwrap();
+        let g = locked(inner);
         let Some(path) = g.metrics_path.clone() else { return };
         let mut s = String::with_capacity(256);
         let _ = write!(
@@ -301,7 +323,7 @@ impl ObsHub {
     /// [`ObsReport`]. Safe to call more than once.
     pub fn report(&self) -> ObsReport {
         let Some(inner) = &self.inner else { return ObsReport::default() };
-        let mut g = inner.lock().unwrap();
+        let mut g = locked(inner);
         if let Some(w) = g.writer.as_mut() {
             let _ = w.flush();
         }
@@ -404,8 +426,14 @@ mod tests {
 
         let text = std::fs::read_to_string(&trace).unwrap();
         let lines: Vec<_> = text.lines().collect();
-        assert_eq!(lines.len(), 1);
-        let m = parse_line(lines[0]).unwrap();
+        // Hub construction journals the static-analysis verdict first;
+        // the recorded boundary event follows.
+        assert_eq!(lines.len(), 2, "{text}");
+        let a = parse_line(lines[0]).unwrap();
+        assert_eq!(a["ev"].str_val(), Some("analyze"));
+        assert_eq!(a["version"].uint(), Some(u64::from(crate::analyze::VERSION)));
+        assert_eq!(a["clean"].boolean(), Some(true), "committed tree must analyze clean");
+        let m = parse_line(lines[1]).unwrap();
         assert_eq!(m["ev"].str_val(), Some("boundary"));
         assert_eq!(m["bytes"].uint(), Some(256));
 

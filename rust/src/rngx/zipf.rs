@@ -41,8 +41,9 @@ impl Zipf {
     #[inline]
     pub fn sample(&self, rng: &mut Pcg64) -> usize {
         let u = rng.next_f64();
-        // First index whose cdf >= u.
-        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+        // First index whose cdf >= u. `total_cmp` keeps the search
+        // panic-free and totally ordered even if a weight is degenerate.
+        match self.cdf.binary_search_by(|c| c.total_cmp(&u)) {
             Ok(i) => i,
             Err(i) => i.min(self.cdf.len() - 1),
         }

@@ -113,6 +113,7 @@ impl RoutePlan {
 
     /// Inverse: DP index at stage `stage-1` that produced the input of
     /// stage `stage`, replica `j` — the backward-pass route.
+    #[allow(clippy::expect_used)] // perms are permutations by construction
     pub fn prev_of(&self, stage: usize, j: usize) -> usize {
         self.perms[stage - 1]
             .iter()

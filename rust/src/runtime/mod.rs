@@ -16,7 +16,7 @@ mod manifest;
 
 pub use manifest::{find_build, golden, Manifest};
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -40,7 +40,7 @@ pub mod funcs {
 pub struct Engine {
     client: xla::PjRtClient,
     dir: PathBuf,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    cache: BTreeMap<String, xla::PjRtLoadedExecutable>,
     /// Cumulative number of `execute` calls (hot-path telemetry).
     executions: u64,
 }
@@ -57,7 +57,7 @@ impl Engine {
             );
         }
         let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
-        Ok(Engine { client, dir, cache: HashMap::new(), executions: 0 })
+        Ok(Engine { client, dir, cache: BTreeMap::new(), executions: 0 })
     }
 
     /// The build directory this engine loads from.
@@ -155,11 +155,15 @@ fn wrap_xla(e: xla::Error) -> anyhow::Error {
 /// f32 literal with a logical shape. Single-copy: the data lands directly
 /// in a literal of the right shape (no intermediate rank-1 literal +
 /// reshape — that path copies twice and showed up in the §Perf profile).
+#[allow(unsafe_code)] // sole unsafe in the crate (with lit_i32 below); see SAFETY
 pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
     let n: usize = dims.iter().product();
     if n != data.len() {
         bail!("lit_f32: {} elements for shape {dims:?}", data.len());
     }
+    // SAFETY: reinterprets the f32 slice as its own backing bytes — same
+    // allocation, same lifetime, length in bytes = len * size_of::<f32>().
+    // f32 has no invalid bit patterns and the callee copies before return.
     let bytes =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
@@ -167,11 +171,14 @@ pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
 }
 
 /// i32 literal with a logical shape (token batches). Single-copy.
+#[allow(unsafe_code)] // see SAFETY; same zero-copy byte view as lit_f32
 pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
     let n: usize = dims.iter().product();
     if n != data.len() {
         bail!("lit_i32: {} elements for shape {dims:?}", data.len());
     }
+    // SAFETY: identical to lit_f32 — byte view of the i32 slice's own
+    // allocation, length in bytes = len * 4; copied by the callee.
     let bytes =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes)

@@ -67,7 +67,7 @@
 //! [`FailureDetector`](crate::net::FailureDetector): strategies decide
 //! what a boundary exchanges, the core decides who is still alive.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use anyhow::{bail, ensure, Result};
 
@@ -192,7 +192,7 @@ pub struct AsyncGossipSync {
     /// resume re-publishes them through the communicator's unmetered
     /// replay hook; the offer phase GCs entries the admission window can
     /// no longer reach.
-    sent: HashMap<(usize, usize), Vec<SentOffer>>,
+    sent: BTreeMap<(usize, usize), Vec<SentOffer>>,
 }
 
 /// One retained own offer (see [`AsyncGossipSync::sent`]): the exact
@@ -232,7 +232,7 @@ impl AsyncGossipSync {
             max_admitted_age: 0,
             admitted: 0,
             excluded_stale: 0,
-            sent: HashMap::new(),
+            sent: BTreeMap::new(),
         }
     }
 

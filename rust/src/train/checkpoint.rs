@@ -25,7 +25,7 @@
 //! temporary file and renames it into place, so a crash mid-write leaves
 //! the previous checkpoint intact.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::io::{BufReader, Read, Write};
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
@@ -300,23 +300,23 @@ impl Checkpoint {
     pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
         ensure!(bytes.len() >= 16, "truncated checkpoint header");
         ensure!(&bytes[..8] == MAGIC, "not a NoLoCo checkpoint");
-        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        let version = u32::from_le_bytes(arr(&bytes[8..12]));
         if version != VERSION {
             bail!("unsupported checkpoint version {version} (want {VERSION})");
         }
-        let nsec = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        let nsec = u32::from_le_bytes(arr(&bytes[12..16])) as usize;
         ensure!(nsec <= 64, "implausible section count {nsec}");
-        let mut sections: HashMap<u32, &[u8]> = HashMap::new();
+        let mut sections: BTreeMap<u32, &[u8]> = BTreeMap::new();
         let mut i = 16usize;
         for _ in 0..nsec {
             ensure!(bytes.len() >= i + 12, "truncated section header");
-            let id = u32::from_le_bytes(bytes[i..i + 4].try_into().unwrap());
-            let len = u64::from_le_bytes(bytes[i + 4..i + 12].try_into().unwrap()) as usize;
+            let id = u32::from_le_bytes(arr(&bytes[i..i + 4]));
+            let len = u64::from_le_bytes(arr(&bytes[i + 4..i + 12])) as usize;
             i += 12;
             ensure!(bytes.len() >= i + len + 4, "truncated section {id}");
             let body = &bytes[i..i + len];
             i += len;
-            let want = u32::from_le_bytes(bytes[i..i + 4].try_into().unwrap());
+            let want = u32::from_le_bytes(arr(&bytes[i..i + 4]));
             i += 4;
             ensure!(
                 crc32(body) == want,
@@ -649,14 +649,14 @@ pub struct RankSnapshot {
 pub struct CkptAssembler {
     path: PathBuf,
     world: usize,
-    pending: Mutex<HashMap<u64, Vec<RankSnapshot>>>,
+    pending: Mutex<BTreeMap<u64, Vec<RankSnapshot>>>,
 }
 
 impl CkptAssembler {
     /// Coordinator writing to `path` once all `dp · pp` ranks have
     /// submitted a snapshot for the same step.
     pub fn new(path: impl Into<PathBuf>, dp: usize, pp: usize) -> CkptAssembler {
-        CkptAssembler { path: path.into(), world: dp * pp, pending: Mutex::new(HashMap::new()) }
+        CkptAssembler { path: path.into(), world: dp * pp, pending: Mutex::new(BTreeMap::new()) }
     }
 
     /// Submit one rank's snapshot. Returns `Some(bytes_written)` for the
@@ -665,7 +665,7 @@ impl CkptAssembler {
     pub fn submit(&self, dp: u32, pp: u32, snap: RankSnapshot) -> Result<Option<u64>> {
         let step = snap.step;
         let ready = {
-            let mut p = self.pending.lock().unwrap();
+            let mut p = self.pending.lock().unwrap_or_else(|e| e.into_inner());
             let v = p.entry(step).or_default();
             v.push(snap);
             if v.len() == self.world {
@@ -709,6 +709,14 @@ pub fn crc32(bytes: &[u8]) -> u32 {
 }
 
 // ---- little-endian encoding helpers ----
+
+/// Exact-length slice→array for `from_le_bytes`. Callers pass slices
+/// whose length is checked (or produced by `chunks_exact`), so the
+/// conversion cannot fail.
+#[allow(clippy::unwrap_used)]
+fn arr<const N: usize>(b: &[u8]) -> [u8; N] {
+    b.try_into().unwrap()
+}
 
 fn put_u8(b: &mut Vec<u8>, x: u8) {
     b.push(x);
@@ -784,15 +792,15 @@ impl<'a> Cur<'a> {
     }
 
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(arr(self.take(4)?)))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(arr(self.take(8)?)))
     }
 
     fn f64(&mut self) -> Result<f64> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(f64::from_le_bytes(arr(self.take(8)?)))
     }
 
     fn f32s(&mut self) -> Result<Vec<f32>> {
@@ -812,7 +820,7 @@ impl<'a> Cur<'a> {
         Ok(self
             .take(n * 8)?
             .chunks_exact(8)
-            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| f64::from_le_bytes(arr(c)))
             .collect())
     }
 
@@ -822,7 +830,7 @@ impl<'a> Cur<'a> {
         Ok(self
             .take(n * 4)?
             .chunks_exact(4)
-            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| u32::from_le_bytes(arr(c)))
             .collect())
     }
 
@@ -832,7 +840,7 @@ impl<'a> Cur<'a> {
         Ok(self
             .take(n * 8)?
             .chunks_exact(8)
-            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| u64::from_le_bytes(arr(c)))
             .collect())
     }
 

@@ -73,7 +73,7 @@
 //! meters on the threaded side so [`CommStats::mib_sent`] agrees between
 //! executors.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
@@ -113,7 +113,7 @@ pub(crate) fn frag_seq(seq: u32, frag: u16) -> u32 {
 
 /// Tag of one stage-boundary payload: kind + wave (or eval slot) + origin
 /// replica. Unique per in-flight payload on both substrates.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct BoundaryTag {
     /// Payload kind (`K_ACT`, `K_TOK`, `K_GRD`, `K_VACT`, `K_VTOK`).
     pub kind: u16,
@@ -434,24 +434,26 @@ pub trait Communicator {
 pub struct AccountingComm {
     stats: CommStats,
     /// Boundary payloads in flight, keyed by destination + tag.
-    boundary: HashMap<(usize, usize, BoundaryTag), Wire>,
+    /// `BTreeMap` (not `HashMap`) everywhere in this struct: fold and
+    /// sweep order must never depend on hasher state (analyze R2).
+    boundary: BTreeMap<(usize, usize, BoundaryTag), Wire>,
     /// Published reduction contributions for the current round.
-    reduces: HashMap<(usize, usize), Vec<f32>>,
+    reduces: BTreeMap<(usize, usize), Vec<f32>>,
     reduce_seq: u32,
     /// Published gossip `(Δ, φ)` for the current round.
-    offers: HashMap<(usize, usize), (Vec<f32>, Vec<f32>)>,
+    offers: BTreeMap<(usize, usize), (Vec<f32>, Vec<f32>)>,
     offer_seq: u32,
     /// Streamed fragment offers in flight, keyed by
     /// `(stage, replica, round, fragment)`. Entries persist across
     /// boundaries (an overlapped fold reads the *previous* round's offers
     /// after the current round began) and are garbage-collected two
     /// rounds back.
-    frags: HashMap<(usize, usize, u32, u16), (Vec<f32>, Vec<f32>)>,
+    frags: BTreeMap<(usize, usize, u32, u16), (Vec<f32>, Vec<f32>)>,
     /// Bounded-staleness offers keyed `(stage, replica, round, fragment)`,
     /// each retained for its offerer's declared window of rounds.
-    rounds: HashMap<(usize, usize, u32, u16), (Vec<f32>, Vec<f32>)>,
+    rounds: BTreeMap<(usize, usize, u32, u16), (Vec<f32>, Vec<f32>)>,
     /// Latest boundary heartbeat per `(stage, replica)`.
-    hearts: HashMap<(usize, usize), u32>,
+    hearts: BTreeMap<(usize, usize), u32>,
     /// Observability sink (disabled unless the trainer attaches one).
     hub: ObsHub,
     /// Outer boundary currently being served (fold-age reference).
@@ -465,14 +467,14 @@ impl AccountingComm {
     pub fn new() -> AccountingComm {
         AccountingComm {
             stats: CommStats::default(),
-            boundary: HashMap::new(),
-            reduces: HashMap::new(),
+            boundary: BTreeMap::new(),
+            reduces: BTreeMap::new(),
             reduce_seq: 0,
-            offers: HashMap::new(),
+            offers: BTreeMap::new(),
             offer_seq: 0,
-            frags: HashMap::new(),
-            rounds: HashMap::new(),
-            hearts: HashMap::new(),
+            frags: BTreeMap::new(),
+            rounds: BTreeMap::new(),
+            hearts: BTreeMap::new(),
             hub: ObsHub::disabled(),
             cur_boundary: 0,
             cur_sim: 0,

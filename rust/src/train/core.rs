@@ -28,6 +28,12 @@
 //! order, so the grid executor reproduces the seed trajectories
 //! bit-for-bit and threaded workers agree without coordination traffic.
 
+// `expect` discipline: the remaining expects document executor
+// invariants established earlier in the same function (`checked
+// above`, `armed above`, grid ownership). A violation is a driver bug
+// and must crash loudly, not be papered over.
+#![allow(clippy::expect_used)]
+
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
@@ -522,6 +528,8 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
 
     /// Run the configured number of inner steps; returns the report.
     pub fn run(&mut self) -> Result<TrainReport> {
+        // analyze: wall-clock-ok — report-envelope timing only; never
+        // feeds the trajectory, losses, or CommStats.
         let start = Instant::now();
         let exec0 = self.eng.executions();
         // A resumed run starts from the checkpoint's restored trace: the
@@ -573,6 +581,8 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
                 }
                 continue;
             }
+            // analyze: wall-clock-ok — journaled inner-phase duration;
+            // observability only, never read back by training.
             let t_inner = Instant::now();
             let train_loss = self.inner_step(step)?;
             let dur_s = t_inner.elapsed().as_secs_f64();
@@ -935,6 +945,8 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
     /// `outer_idx` is the 1-based outer-step counter shared by both
     /// executors.
     pub fn outer_step(&mut self, outer_idx: u64) -> Result<()> {
+        // analyze: wall-clock-ok — journaled sync-phase duration;
+        // observability only, never read back by training.
         let t_sync = Instant::now();
         // The boundary closes at this global inner step — the sim stamp
         // for everything emitted here and by the communicator.

@@ -114,6 +114,7 @@ impl<'e> SimTrainer<'e> {
     /// runtime state and in-flight sync state (see
     /// [`super::Checkpoint`]). The `[ckpt]` cadence writes the same
     /// snapshot to disk automatically.
+    #[allow(clippy::expect_used)] // grid ownership is this executor's invariant
     pub fn checkpoint(&self, step: u64) -> super::Checkpoint {
         self.core
             .checkpoint(step)

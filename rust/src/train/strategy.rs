@@ -25,6 +25,12 @@
 //! periodic uniform rounds (selectable via
 //! [`PairingMode`](crate::config::PairingMode) / `--pairing`).
 
+// `expect` discipline: the remaining expects document cache/pairing
+// invariants established earlier in the same boundary pass (`cached
+// above`, policy coverage). A violation is a strategy bug and must
+// crash loudly, not be papered over.
+#![allow(clippy::expect_used)]
+
 use anyhow::Result;
 
 use crate::config::{Method, OuterConfig, PairingMode, SyncMode, TrainConfig};

@@ -72,7 +72,7 @@
 //! until its first post-rejoin exchange) — and fresh members exclude
 //! stale peers' contributions from their consensus sums.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::ops::Range;
 
 use anyhow::{bail, ensure, Result};
@@ -167,7 +167,7 @@ pub struct StreamingSync {
     /// In-flight offers by owned worker `(stage, replica)`. At most two
     /// per worker: the previous boundary's (unfolded under overlap) and
     /// the one just offered — offers run before folds at a boundary.
-    inflight: HashMap<(usize, usize), Vec<Inflight>>,
+    inflight: BTreeMap<(usize, usize), Vec<Inflight>>,
     /// Memoized pairing draws (see
     /// [`PairingCache`](super::strategy::PairingCache)): the grid
     /// executor calls the offer phase for every worker of a stage row
@@ -207,7 +207,7 @@ impl StreamingSync {
             churn: cfg.churn.clone(),
             pairing,
             delegate,
-            inflight: HashMap::new(),
+            inflight: BTreeMap::new(),
             cache: PairingCache::new(),
             dropped_stale: 0,
         }

@@ -178,6 +178,8 @@ impl ThreadedTrainer {
         let per_replica_seqs = (cfg.model.batch_tokens / cfg.model.seq_len / dp).max(man.mb);
         let num_mb = (per_replica_seqs / man.mb).max(1);
 
+        // analyze: wall-clock-ok — report-envelope timing only; never
+        // feeds the trajectory, losses, or CommStats.
         let start = Instant::now();
         // Fault injection rides the fabric: a fault-free plan is exactly
         // `Fabric::new`, so this is unconditional. The per-receiver fault

@@ -1,0 +1,186 @@
+//! Static-analysis gate + map-order bit-neutrality.
+//!
+//! Three layers:
+//!
+//! * **Self-check**: the committed source tree must analyze clean under
+//!   rules R1–R5 (`noloco analyze` exits 0). This is the same check CI
+//!   runs via `scripts/check_analyze.sh`; keeping it in `cargo test`
+//!   means a plain test run catches a regression before CI does.
+//! * **JSON contract**: `--format json` emits journal-style lines that
+//!   [`noloco::obs::parse_line`] accepts, with the documented keys —
+//!   the same parser tooling uses for `--trace-out` journals.
+//! * **Bit-neutrality of the BTreeMap swaps**: the R2 remediation
+//!   replaced every `HashMap`/`HashSet` on fold and sweep paths with
+//!   ordered maps. These tests pin the property the swap exists for:
+//!   insertion order must not change a single output bit — neither in
+//!   the accounting communicator's collect payloads and wire totals,
+//!   nor in the checkpoint assembler's merged file bytes.
+
+use noloco::analyze;
+use noloco::obs::parse_line;
+use noloco::train::{
+    AccountingComm, CkptAssembler, Communicator, CoreRecord, LoaderCursor, RankSnapshot,
+    WorkerRecord,
+};
+
+fn src_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+}
+
+/// The committed tree is the first fixture: every finding must have
+/// been fixed or annotated before commit, so `analyze` is clean here.
+#[test]
+fn committed_tree_analyzes_clean() {
+    let report = analyze::run_path(&src_root()).expect("walk rust/src");
+    assert!(report.files > 20, "suspiciously small tree: {} files", report.files);
+    assert!(
+        report.clean(),
+        "committed tree must analyze clean; findings:\n{}",
+        analyze::render_text(&report)
+    );
+}
+
+/// `--format json` output is line-delimited objects the journal parser
+/// accepts: one header (`kind: analyze`) plus one line per finding
+/// (`kind: finding`), with the documented keys present and typed.
+#[test]
+fn json_output_parses_as_journal_lines() {
+    let report = analyze::Report {
+        files: 3,
+        findings: vec![
+            analyze::Finding {
+                file: "train/core.rs".to_string(),
+                line: 42,
+                rule: "R1",
+                msg: "wall-clock \"read\" on a \\deterministic path".to_string(),
+            },
+            analyze::Finding {
+                file: "net/mod.rs".to_string(),
+                line: 7,
+                rule: "R2",
+                msg: "iteration over HashMap".to_string(),
+            },
+        ],
+    };
+    let out = analyze::render_json(&report);
+    let lines: Vec<&str> = out.lines().collect();
+    assert_eq!(lines.len(), 3, "header + one line per finding:\n{out}");
+
+    let hdr = parse_line(lines[0]).expect("header parses");
+    assert_eq!(hdr["kind"].str_val(), Some("analyze"));
+    assert_eq!(hdr["v"].uint(), Some(1));
+    assert_eq!(hdr["version"].uint(), Some(u64::from(analyze::VERSION)));
+    assert_eq!(hdr["files"].uint(), Some(3));
+    assert_eq!(hdr["findings"].uint(), Some(2));
+    assert_eq!(hdr["clean"].boolean(), Some(false));
+
+    for (line, (file, ln, rule)) in
+        lines[1..].iter().zip([("train/core.rs", 42, "R1"), ("net/mod.rs", 7, "R2")])
+    {
+        let f = parse_line(line).unwrap_or_else(|| panic!("finding line parses: {line}"));
+        assert_eq!(f["kind"].str_val(), Some("finding"));
+        assert_eq!(f["file"].str_val(), Some(file));
+        assert_eq!(f["line"].uint(), Some(ln));
+        assert_eq!(f["rule"].str_val(), Some(rule));
+        assert!(f["msg"].str_val().is_some(), "msg key present: {line}");
+    }
+
+    // A clean report is a single self-contained header line.
+    let clean = analyze::Report { files: 3, findings: vec![] };
+    let out = analyze::render_json(&clean);
+    assert_eq!(out.lines().count(), 1);
+    let hdr = parse_line(out.trim()).expect("clean header parses");
+    assert_eq!(hdr["clean"].boolean(), Some(true));
+}
+
+/// Drive one gossip round through an [`AccountingComm`], offering the
+/// stage row in the given replica order, and return every collect
+/// payload plus the wire totals.
+fn round_trip(order: &[usize]) -> (Vec<(Vec<f32>, Vec<f32>)>, (u64, u64)) {
+    let mut comm = AccountingComm::new();
+    let all = [0usize, 1, 2];
+    for &r in order {
+        let delta: Vec<f32> = (0..4).map(|i| (r * 10 + i) as f32 * 0.5).collect();
+        let phi: Vec<f32> = (0..4).map(|i| (r * 100 + i) as f32 * 0.25).collect();
+        let peers: Vec<usize> = all.iter().copied().filter(|&p| p != r).collect();
+        comm.offer_round(0, r, &peers, 1, 0, 2, &delta, &phi).expect("offer");
+    }
+    let mut got = Vec::new();
+    for me in all {
+        for peer in all {
+            if peer == me {
+                continue;
+            }
+            let dp = comm
+                .collect_round(0, me, peer, 1, 0, false)
+                .expect("collect")
+                .expect("offer retained");
+            got.push(dp);
+        }
+    }
+    (got, comm.wire_totals())
+}
+
+/// Offer insertion order must not change what any collector sees, nor
+/// a single accounting counter — the property the HashMap→BTreeMap
+/// swap in `train/comm.rs` exists to guarantee (analyze rule R2).
+#[test]
+fn map_swap_bit_neutrality_accounting_comm() {
+    let (a, wa) = round_trip(&[0, 1, 2]);
+    let (b, wb) = round_trip(&[2, 0, 1]);
+    assert_eq!(wa, wb, "wire totals must not depend on offer order");
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.0, y.0, "delta payload bits differ");
+        assert_eq!(x.1, y.1, "phi payload bits differ");
+    }
+}
+
+fn snap(stage: u32, replica: u32) -> RankSnapshot {
+    let n = 6usize;
+    let base = (stage * 10 + replica) as f32;
+    RankSnapshot {
+        step: 8,
+        outer_idx: 2,
+        worker: WorkerRecord {
+            stage,
+            replica,
+            adam_t: 8,
+            theta: (0..n).map(|i| base + i as f32 * 0.125).collect(),
+            m: vec![0.5; n],
+            v: vec![0.25; n],
+            phi: (0..n).map(|i| base - i as f32).collect(),
+            delta: vec![0.0; n],
+            strategy: None,
+        },
+        loader: (stage == 0).then_some(LoaderCursor { replica, cursor: 64 + u64::from(replica) }),
+        core: CoreRecord { stage, replica, live: vec![true, true], ..CoreRecord::default() },
+    }
+}
+
+/// The threaded executor's ranks submit snapshots in whatever order
+/// their threads reach the cadence. The merged checkpoint file must be
+/// byte-identical regardless — the assembler sorts, and its pending
+/// map is ordered (analyze rule R2 on `train/checkpoint.rs`).
+#[test]
+fn ckpt_assembler_submission_order_byte_identity() {
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let ranks = [(0u32, 0u32), (0, 1), (1, 0), (1, 1)];
+    let mut files = Vec::new();
+    for (tag, order) in [("fwd", [0usize, 1, 2, 3]), ("rev", [3, 2, 0, 1])] {
+        let path = dir.join(format!("noloco_analyze_ck_{pid}_{tag}.bin"));
+        let asm = CkptAssembler::new(&path, 2, 2);
+        let mut wrote = 0;
+        for &i in &order {
+            let (s, r) = ranks[i];
+            if asm.submit(2, 2, snap(s, r)).expect("submit").is_some() {
+                wrote += 1;
+            }
+        }
+        assert_eq!(wrote, 1, "exactly one rank completes the set");
+        files.push(std::fs::read(&path).expect("read merged checkpoint"));
+        let _ = std::fs::remove_file(&path);
+    }
+    assert_eq!(files[0], files[1], "merged checkpoint bytes depend on submission order");
+}

@@ -1,0 +1,157 @@
+//! Loom model of the fabric's stash discipline (opt-in).
+//!
+//! The threaded executor's correctness rests on a small concurrency
+//! contract in `net/fabric.rs`:
+//!
+//! * each [`Endpoint`] stash is single-owner — only the channel and the
+//!   `Shared` counters cross threads;
+//! * a receiver drains its channel into the stash and matches by tag,
+//!   so out-of-order arrival never loses or reorders a tagged message;
+//! * the shared send counters are updated under a mutex whose poisoning
+//!   is absorbed (`locked`), so a panicking peer cannot wedge metering.
+//!
+//! Loom cannot instrument `std::sync` / `std::sync::mpsc` directly, so
+//! this file models the same shapes with `loom` primitives — a mutexed
+//! queue as the wire, a local stash at the receiver, a mutexed counter
+//! vector as `Shared` — and exhaustively explores every interleaving.
+//!
+//! The whole file is behind `cfg(loom)`: a normal `cargo test` compiles
+//! it to an empty crate (no loom dependency needed). The nightly CI
+//! `sanitize` job appends the loom dependency to Cargo.toml and runs
+//! `RUSTFLAGS="--cfg loom" cargo test --test loom_stash` — see
+//! `.github/workflows/ci.yml` and docs/ARCHITECTURE.md.
+#![cfg(loom)]
+
+use loom::sync::{Arc, Mutex};
+use loom::thread;
+use std::collections::VecDeque;
+
+/// Tagged frame, standing in for `fabric::Message`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct Msg {
+    tag: u32,
+    payload: u32,
+}
+
+/// The wire: a mutexed queue (the loom stand-in for the mpsc channel)
+/// plus the shared per-rank send counter (the `Shared` stand-in).
+struct Wire {
+    queue: Mutex<VecDeque<Msg>>,
+    sent: Mutex<Vec<u64>>,
+}
+
+/// Poison-absorbing lock — the same idiom as `fabric::locked`.
+fn locked<T>(m: &Mutex<T>) -> loom::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Receiver half: drain the wire into a local stash, then match by tag
+/// — mirrors `Endpoint::drain_into_stash` + `try_recv_ready`.
+struct Rx {
+    wire: Arc<Wire>,
+    stash: Vec<Msg>,
+}
+
+impl Rx {
+    fn drain(&mut self) {
+        let mut q = locked(&self.wire.queue);
+        while let Some(m) = q.pop_front() {
+            self.stash.push(m);
+        }
+    }
+
+    /// Non-blocking: `None` means "not arrived yet", never "lost".
+    fn try_collect(&mut self, tag: u32) -> Option<Msg> {
+        self.drain();
+        let i = self.stash.iter().position(|m| m.tag == tag)?;
+        Some(self.stash.swap_remove(i))
+    }
+
+    /// Blocking collect, with loom-visible scheduling points.
+    fn collect(&mut self, tag: u32) -> Msg {
+        loop {
+            if let Some(m) = self.try_collect(tag) {
+                return m;
+            }
+            thread::yield_now();
+        }
+    }
+
+    /// Stash-expiry sweep — mirrors `Endpoint::sweep_stash`.
+    fn sweep<F: FnMut(u32) -> bool>(&mut self, mut keep: F) -> usize {
+        self.drain();
+        let before = self.stash.len();
+        self.stash.retain(|m| keep(m.tag));
+        before - self.stash.len()
+    }
+}
+
+fn send(wire: &Wire, rank: usize, msg: Msg) {
+    locked(&wire.queue).push_back(msg);
+    locked(&wire.sent)[rank] += 1;
+}
+
+/// Out-of-order arrival: the sender emits tags 2, 1, 3; the receiver
+/// collects 1 then 2 (stashing whatever arrived early), sweeps tag 3
+/// as expired. Under every interleaving: both collects return the
+/// right payloads, the sweep drops exactly the expired frame, and the
+/// counters account for all three sends.
+#[test]
+fn stash_matches_out_of_order_under_all_interleavings() {
+    loom::model(|| {
+        let wire = Arc::new(Wire {
+            queue: Mutex::new(VecDeque::new()),
+            sent: Mutex::new(vec![0, 0]),
+        });
+        let tx = wire.clone();
+        let sender = thread::spawn(move || {
+            send(&tx, 1, Msg { tag: 2, payload: 20 });
+            send(&tx, 1, Msg { tag: 1, payload: 10 });
+            send(&tx, 1, Msg { tag: 3, payload: 30 });
+        });
+
+        let mut rx = Rx { wire: wire.clone(), stash: Vec::new() };
+        assert_eq!(rx.collect(1).payload, 10);
+        assert_eq!(rx.collect(2).payload, 20);
+        sender.join().unwrap();
+
+        // Everything sent is now stash-visible; only tag 3 survives to
+        // the sweep and the sweep reclaims exactly it.
+        assert_eq!(rx.sweep(|t| t < 3), 1);
+        assert_eq!(rx.sweep(|t| t < 3), 0, "sweep is idempotent");
+        assert!(rx.stash.is_empty(), "no unexpired frame left behind");
+        assert_eq!(*locked(&wire.sent), vec![0, 3]);
+    });
+}
+
+/// Two senders interleave on the same wire; the receiver's per-tag
+/// matching must never cross payloads between them, and the shared
+/// counter must see every send exactly once.
+#[test]
+fn concurrent_senders_never_cross_tags() {
+    loom::model(|| {
+        let wire = Arc::new(Wire {
+            queue: Mutex::new(VecDeque::new()),
+            sent: Mutex::new(vec![0, 0, 0]),
+        });
+        let handles: Vec<_> = [1usize, 2]
+            .into_iter()
+            .map(|rank| {
+                let tx = wire.clone();
+                thread::spawn(move || {
+                    let tag = rank as u32;
+                    send(&tx, rank, Msg { tag, payload: 100 * tag });
+                })
+            })
+            .collect();
+
+        let mut rx = Rx { wire: wire.clone(), stash: Vec::new() };
+        assert_eq!(rx.collect(2).payload, 200);
+        assert_eq!(rx.collect(1).payload, 100);
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(rx.stash.is_empty());
+        assert_eq!(*locked(&wire.sent), vec![0, 1, 1]);
+    });
+}

@@ -1,0 +1,135 @@
+#!/usr/bin/env bash
+# Run the static determinism/protocol analyzer (`noloco analyze`,
+# rules R1-R5) and validate its JSON output against the analyze schema
+# (v1). This is the blocking CI gate for the determinism invariants
+# documented in docs/ARCHITECTURE.md.
+#
+# With a Rust toolchain available: runs `cargo run -- analyze --format
+# json` over rust/src and fails on any finding, so the committed tree
+# must stay clean. Without one (minimal containers): validates the
+# checked-in `docs/analyze.sample.jsonl` instead — a deliberately
+# non-clean example, so both the header and the finding line shapes
+# stay covered (internal consistency is checked, cleanliness is not).
+#
+# The schema below mirrors render_json() in rust/src/analyze/mod.rs —
+# change them together.
+#
+# Usage: scripts/check_analyze.sh [report.jsonl]
+
+set -u
+cd "$(dirname "$0")/.."
+
+report="${1:-}"
+require_clean="no"
+cleanup=""
+if [ -z "$report" ]; then
+    if command -v cargo >/dev/null 2>&1; then
+        require_clean="yes"
+        report="$(mktemp -t noloco_analyze_XXXXXX.jsonl)"
+        cleanup="$report"
+        # `analyze` exits 1 on findings; capture the report either way
+        # and let the validator (plus require_clean) produce the
+        # diagnostic. Exit 2 (walk/parse error) is fatal here.
+        (cd rust && cargo run --release --quiet -- analyze --format json >"$report")
+        status=$?
+        if [ "$status" -gt 1 ]; then
+            echo "analyze check FAILED (analyzer error, exit $status)"
+            cat "$report"
+            rm -f "$cleanup"
+            exit 1
+        fi
+    else
+        report="docs/analyze.sample.jsonl"
+        echo "no cargo toolchain; validating checked-in $report"
+    fi
+fi
+
+python3 - "$report" "$require_clean" <<'PY'
+import json
+import sys
+
+# Mirror of render_json() in rust/src/analyze/mod.rs.
+HEADER = ("v", "kind", "version", "files", "findings", "clean")
+FINDING = ("v", "kind", "file", "line", "rule", "msg")
+RULES = {"R1", "R2", "R3", "R4", "R5"}
+
+path, require_clean = sys.argv[1], sys.argv[2]
+fail = 0
+header = None
+nfindings = 0
+for i, line in enumerate(open(path), 1):
+    line = line.strip()
+    if not line:
+        continue
+    try:
+        m = json.loads(line)
+    except ValueError as e:
+        print(f"{path}:{i}: unparseable JSON: {e}")
+        fail = 1
+        continue
+    if m.get("v") != 1:
+        print(f"{path}:{i}: unknown schema version {m.get('v')!r}")
+        fail = 1
+        continue
+    kind = m.get("kind")
+    if i == 1:
+        if kind != "analyze":
+            print(f"{path}:{i}: first line must be the analyze header, got {kind!r}")
+            fail = 1
+            continue
+        header = m
+        for k in HEADER:
+            if k not in m:
+                print(f"{path}:{i}: header missing key {k!r}")
+                fail = 1
+        if not isinstance(m.get("clean"), bool):
+            print(f"{path}:{i}: 'clean' must be a bool")
+            fail = 1
+        continue
+    if kind != "finding":
+        print(f"{path}:{i}: expected a finding line, got kind {kind!r}")
+        fail = 1
+        continue
+    nfindings += 1
+    for k in FINDING:
+        if k not in m:
+            print(f"{path}:{i}: finding missing key {k!r}")
+            fail = 1
+    if m.get("rule") not in RULES:
+        print(f"{path}:{i}: unknown rule {m.get('rule')!r}")
+        fail = 1
+    if not (isinstance(m.get("line"), int) and m["line"] >= 1):
+        print(f"{path}:{i}: finding 'line' must be a positive integer")
+        fail = 1
+if header is None:
+    print(f"{path}: empty report (no analyze header)")
+    sys.exit(1)
+if header.get("findings") != nfindings:
+    print(f"{path}: header claims {header.get('findings')!r} findings, saw {nfindings}")
+    fail = 1
+if header.get("clean") != (nfindings == 0):
+    print(f"{path}: header 'clean' inconsistent with {nfindings} finding line(s)")
+    fail = 1
+if require_clean == "yes" and nfindings != 0:
+    print(f"{path}: tree is NOT clean ({nfindings} finding(s)) — fix or annotate:")
+    for line in open(path):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            m = json.loads(line)
+        except ValueError:
+            continue
+        if m.get("kind") == "finding":
+            print(f"  {m.get('file')}:{m.get('line')}: [{m.get('rule')}] {m.get('msg')}")
+    fail = 1
+sys.exit(fail)
+PY
+status=$?
+[ -n "$cleanup" ] && rm -f "$cleanup"
+
+if [ "$status" -ne 0 ]; then
+    echo "analyze check FAILED ($report)"
+    exit 1
+fi
+echo "analyze check OK ($report)"

@@ -42,6 +42,7 @@ import sys
 
 # Mirror of required_keys() in rust/src/obs/journal.rs.
 REQUIRED = {
+    "analyze": ["version", "findings", "clean"],
     "inner": ["stage", "replica", "step", "loss", "dur_s"],
     "offer": ["stage", "replica", "peer", "round", "frag", "bytes"],
     "fold": ["stage", "replica", "peer", "round", "frag", "age", "bytes"],
