@@ -93,10 +93,11 @@ const R1_PATTERNS: &[&str] = &["SystemTime::now", "Instant::now", "thread_rng", 
 
 /// Files where wall-clock / ambient randomness is legitimate by role:
 /// obs (wall stamps), bench (measurement), main.rs (CLI wall-clock
-/// envelope), net/fabric.rs (the real-time threaded transport — its
-/// latency model and timeouts are wall-clock by design and never feed
-/// the deterministic trajectory).
-const R1_ALLOW: &[&str] = &["obs/", "bench/", "main.rs", "net/fabric.rs"];
+/// envelope), net/fabric.rs and net/socket.rs (the real-time transports
+/// — their latency models, dial retries, handshake RTTs and timeouts
+/// are wall-clock by design and never feed the deterministic
+/// trajectory).
+const R1_ALLOW: &[&str] = &["obs/", "bench/", "main.rs", "net/fabric.rs", "net/socket.rs"];
 
 /// R1: no wall-clock reads or ambient randomness on deterministic paths.
 pub fn r1_wall_clock(rel: &str, lines: &[Line], out: &mut Vec<Finding>) {

@@ -31,7 +31,8 @@ const VALUE_KEYS: &[&str] = &[
     "fragments", "overlap", "staleness", "stash-age", "detect", "detect-misses",
     "trace-out", "metrics-out", "trace-level", "ckpt-out", "ckpt-every", "resume",
     "fault-drop", "fault-dup", "fault-delay", "fault-delay-secs", "fault-reorder",
-    "fault-corrupt", "executor", "halt-after", "format", "root",
+    "fault-corrupt", "executor", "halt-after", "format", "root", "transport",
+    "seed-addr", "rank", "bind", "report-out", "val-batches",
 ];
 
 impl Args {
@@ -247,6 +248,22 @@ pub fn train_config_from(args: &Args) -> Result<crate::config::TrainConfig, Stri
     if let Some(v) = args.opt_f64("fault-corrupt")? {
         cfg.faults.corrupt = v;
     }
+    if let Some(t) = args.opt("transport") {
+        cfg.transport.kind = crate::config::TransportKind::parse(t)
+            .ok_or_else(|| format!("unknown transport `{t}` (threads|socket)"))?;
+    }
+    if let Some(a) = args.opt("seed-addr") {
+        cfg.transport.seed_addr = a.to_string();
+    }
+    if let Some(v) = args.opt_usize("rank")? {
+        cfg.transport.rank = v;
+    }
+    if let Some(b) = args.opt("bind") {
+        cfg.transport.bind = b.to_string();
+    }
+    if let Some(p) = args.opt("report-out") {
+        cfg.transport.report_out = Some(p.to_string());
+    }
     // --set model.hidden=128 style overrides, applied last.
     if !args.sets.is_empty() {
         let mut text = String::new();
@@ -412,6 +429,25 @@ mod tests {
         // Probabilities must be probabilities.
         let a = parse(&["train", "--fault-drop", "1.5"]);
         assert!(train_config_from(&a).unwrap_err().contains("probability"));
+    }
+
+    #[test]
+    fn transport_flags_plumb_through() {
+        let a = parse(&[
+            "run", "--transport", "socket", "--seed-addr", "127.0.0.1:29500",
+            "--rank", "1", "--bind=0.0.0.0:0", "--report-out", "r1.report",
+        ]);
+        let cfg = train_config_from(&a).unwrap();
+        assert_eq!(cfg.transport.kind, crate::config::TransportKind::Socket);
+        assert_eq!(cfg.transport.seed_addr, "127.0.0.1:29500");
+        assert_eq!(cfg.transport.rank, 1);
+        assert_eq!(cfg.transport.bind, "0.0.0.0:0");
+        assert_eq!(cfg.transport.report_out.as_deref(), Some("r1.report"));
+        let a = parse(&["run", "--transport", "avian"]);
+        assert!(train_config_from(&a).unwrap_err().contains("transport"));
+        // A rank outside the dp·pp world fails validation up front.
+        let a = parse(&["run", "--transport", "socket", "--rank", "9"]);
+        assert!(train_config_from(&a).unwrap_err().contains("transport.rank"));
     }
 
     #[test]

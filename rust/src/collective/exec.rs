@@ -10,7 +10,7 @@
 // crash loudly rather than limp into a wrong reduction.
 #![allow(clippy::expect_used)]
 
-use crate::net::{Endpoint, Payload, Tag};
+use crate::net::{Channel, Payload, Tag};
 use crate::tensor::Tensor;
 
 use super::{tree_children, tree_parent};
@@ -27,7 +27,7 @@ const K_RING: u16 = 4;
 ///
 /// This is the DiLoCo outer-step collective (and the FSDP gradient
 /// collective) of the paper's baselines.
-pub fn all_reduce_mean(ep: &mut Endpoint, group: &[usize], step: u32, my: &mut Tensor) {
+pub fn all_reduce_mean<E: Channel>(ep: &mut E, group: &[usize], step: u32, my: &mut Tensor) {
     let n = group.len();
     if n <= 1 {
         return;
@@ -65,7 +65,7 @@ pub fn all_reduce_mean(ep: &mut Endpoint, group: &[usize], step: u32, my: &mut T
 }
 
 /// Broadcast `buf` from `group[0]` to the rest of the group (binary tree).
-pub fn broadcast(ep: &mut Endpoint, group: &[usize], step: u32, buf: &mut Tensor) {
+pub fn broadcast<E: Channel>(ep: &mut E, group: &[usize], step: u32, buf: &mut Tensor) {
     let n = group.len();
     if n <= 1 {
         return;
@@ -89,7 +89,7 @@ pub fn broadcast(ep: &mut Endpoint, group: &[usize], step: u32, buf: &mut Tensor
 
 /// Symmetric pair exchange: send `mine` to `peer`, receive theirs, return
 /// it. The NoLoCo gossip primitive — exactly two messages, no collective.
-pub fn pair_exchange(ep: &mut Endpoint, peer: usize, step: u32, mine: &Tensor) -> Tensor {
+pub fn pair_exchange<E: Channel>(ep: &mut E, peer: usize, step: u32, mine: &Tensor) -> Tensor {
     ep.send(
         peer,
         Tag::new(K_PAIR, step, ep.rank() as u32),
@@ -103,7 +103,7 @@ pub fn pair_exchange(ep: &mut Endpoint, peer: usize, step: u32, mine: &Tensor) -
 /// bandwidth-optimal collective large clusters actually deploy; included
 /// as a second baseline topology for the latency study and tested for
 /// numerical agreement with the tree.
-pub fn reduce_scatter_gather(ep: &mut Endpoint, group: &[usize], step: u32, my: &mut Tensor) {
+pub fn reduce_scatter_gather<E: Channel>(ep: &mut E, group: &[usize], step: u32, my: &mut Tensor) {
     let n = group.len();
     if n <= 1 {
         return;
@@ -161,7 +161,7 @@ pub fn reduce_scatter_gather(ep: &mut Endpoint, group: &[usize], step: u32, my: 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::net::Fabric;
+    use crate::net::{Endpoint, Fabric};
     use std::thread;
 
     /// Run `f(rank, endpoint)` on every rank in its own thread.

@@ -635,6 +635,72 @@ impl FaultsConfig {
     }
 }
 
+/// Which channel carries inter-rank traffic on the real executors.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process message fabric: one OS thread per rank, one shared
+    /// address space (`--executor threads`, the seed behaviour).
+    #[default]
+    Threads,
+    /// Real TCP sockets: one OS *process* per rank, joined through the
+    /// seed-node protocol (`noloco run --transport socket`).
+    Socket,
+}
+
+impl TransportKind {
+    /// Parse from a config / CLI string.
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "threads" | "threaded" | "fabric" => Some(TransportKind::Threads),
+            "socket" | "tcp" => Some(TransportKind::Socket),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportKind::Threads => write!(f, "threads"),
+            TransportKind::Socket => write!(f, "socket"),
+        }
+    }
+}
+
+/// Socket-transport knobs (the `[transport]` TOML section /
+/// `--transport`, `--seed-addr`, `--rank`, `--bind`, `--report-out` CLI
+/// flags). Only the `run` subcommand reads these: each OS process runs
+/// one rank, rank 0 listens at `seed_addr`, and every other rank dials
+/// it to join (receiving the live peer address book in the welcome).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TransportConfig {
+    /// Which transport carries inter-rank traffic (`transport.kind`).
+    pub kind: TransportKind,
+    /// Seed-node address every joiner dials (`transport.seed_addr`).
+    /// Rank 0 listens here; the port must be free on rank 0's host.
+    pub seed_addr: String,
+    /// This process's rank in `0..dp·pp` (`transport.rank` / `--rank`).
+    pub rank: usize,
+    /// Listener bind address for this rank (`transport.bind`; default an
+    /// ephemeral loopback port — set a routable address on a real WAN).
+    pub bind: String,
+    /// Where to write this rank's [`RankReport`](crate::train::RankReport)
+    /// text (`transport.report_out`); stdout when unset.
+    pub report_out: Option<String>,
+}
+
+impl Default for TransportConfig {
+    fn default() -> TransportConfig {
+        TransportConfig {
+            kind: TransportKind::Threads,
+            seed_addr: "127.0.0.1:29400".to_string(),
+            rank: 0,
+            bind: "127.0.0.1:0".to_string(),
+            report_out: None,
+        }
+    }
+}
+
 /// Synthetic corpus flavour (dataset substitution; see DESIGN.md §4).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dataset {
@@ -715,6 +781,9 @@ pub struct TrainConfig {
     /// Fault injection for the threaded executor's fabric (the
     /// `[faults]` section).
     pub faults: FaultsConfig,
+    /// Socket-transport knobs for the process-per-rank executor (the
+    /// `[transport]` section; only the `run` subcommand reads these).
+    pub transport: TransportConfig,
 }
 
 impl TrainConfig {
@@ -796,6 +865,17 @@ impl TrainConfig {
                 "faults.delay_secs" => set_f64(&mut self.faults.delay_secs, v),
                 "faults.reorder" => set_f64(&mut self.faults.reorder, v),
                 "faults.corrupt" => set_f64(&mut self.faults.corrupt, v),
+                "transport.kind" => match v.as_str().and_then(TransportKind::parse) {
+                    Some(t) => {
+                        self.transport.kind = t;
+                        true
+                    }
+                    None => false,
+                },
+                "transport.seed_addr" => set_string(&mut self.transport.seed_addr, v),
+                "transport.rank" => set_usize(&mut self.transport.rank, v),
+                "transport.bind" => set_string(&mut self.transport.bind, v),
+                "transport.report_out" => set_opt_string(&mut self.transport.report_out, v),
                 "obs.trace_level" => match v.as_str().and_then(TraceLevel::parse) {
                     Some(l) => {
                         self.obs.trace_level = l;
@@ -958,6 +1038,20 @@ impl TrainConfig {
                 "faults.delay_secs must be >= 0, got {}",
                 self.faults.delay_secs
             ));
+        }
+        if self.transport.kind == TransportKind::Socket {
+            if self.transport.seed_addr.is_empty() {
+                return Err("transport.seed_addr must name the seed node (host:port)".into());
+            }
+            if self.transport.rank >= self.topology.world() {
+                return Err(format!(
+                    "transport.rank ({}) outside the {}-rank world (dp·pp = {}·{})",
+                    self.transport.rank,
+                    self.topology.world(),
+                    self.topology.dp,
+                    self.topology.pp
+                ));
+            }
         }
         if self.ckpt.out.is_some() && self.ckpt.every == 0 {
             return Err(
@@ -1270,6 +1364,32 @@ mod tests {
         assert!(c.apply_doc(&doc).is_err());
         assert_eq!(TraceLevel::parse("step"), Some(TraceLevel::Step));
         assert_eq!(TraceLevel::Off.to_string(), "off");
+    }
+
+    #[test]
+    fn transport_knobs_parse_and_validate() {
+        let mut c = presets::preset("tiny").unwrap();
+        assert_eq!(c.transport, TransportConfig::default());
+        let doc = Doc::parse(
+            "[transport]\nkind = \"socket\"\nseed_addr = \"10.0.0.1:29500\"\n\
+             rank = 1\nbind = \"0.0.0.0:0\"\nreport_out = \"rank1.report\"\n",
+        )
+        .unwrap();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.transport.kind, TransportKind::Socket);
+        assert_eq!(c.transport.seed_addr, "10.0.0.1:29500");
+        assert_eq!(c.transport.rank, 1);
+        assert_eq!(c.transport.bind, "0.0.0.0:0");
+        assert_eq!(c.transport.report_out.as_deref(), Some("rank1.report"));
+        c.validate().unwrap();
+        // Rank outside the dp·pp world is rejected; threads ignores it.
+        c.transport.rank = 99;
+        assert!(c.validate().unwrap_err().contains("transport.rank"));
+        c.transport.kind = TransportKind::Threads;
+        c.validate().unwrap();
+        assert_eq!(TransportKind::parse("tcp"), Some(TransportKind::Socket));
+        assert_eq!(TransportKind::parse("carrier-pigeon"), None);
+        assert_eq!(TransportKind::Socket.to_string(), "socket");
     }
 
     #[test]

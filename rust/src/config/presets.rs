@@ -13,7 +13,7 @@
 use super::{
     CkptConfig, Dataset, DetectConfig, FaultsConfig, Method, ModelConfig, NetTopoConfig,
     ObsConfig, OuterConfig, PairingMode, Routing, StreamConfig, SyncMode, TopologyConfig,
-    TrainConfig,
+    TrainConfig, TransportConfig,
 };
 use crate::net::topo::ChurnSchedule;
 
@@ -59,6 +59,7 @@ fn base(model: ModelConfig, steps: usize, warmup: usize) -> TrainConfig {
         obs: ObsConfig::default(),
         ckpt: CkptConfig::default(),
         faults: FaultsConfig::default(),
+        transport: TransportConfig::default(),
     }
 }
 

@@ -4,6 +4,8 @@
 //!
 //! * `train`            — run the single-process trainer (default)
 //! * `train-threaded`   — run the threaded trainer over the message fabric
+//! * `run`              — run ONE rank as an OS process over TCP
+//!                        (`--transport socket --seed-addr H:P --rank R`)
 //! * `presets`          — list configuration presets (Table 1 + CPU-scale)
 //! * `topo`             — analyze the configured network topology (sync costs)
 //! * `artifacts`        — inventory the compiled artifact builds
@@ -42,6 +44,7 @@ fn main() {
     let result = match cmd.as_str() {
         "train" => cmd_train(&args),
         "train-threaded" => cmd_train_threaded(&args),
+        "run" => cmd_run(&args),
         "presets" => cmd_presets(),
         "topo" => cmd_topo(&args),
         "artifacts" => cmd_artifacts(&args),
@@ -73,6 +76,7 @@ fn print_help() {
          COMMANDS:\n\
            train            run the single-process trainer (default)\n\
            train-threaded   run the threaded trainer over the message fabric\n\
+           run              run ONE rank as an OS process over TCP sockets\n\
            presets          list configuration presets\n\
            topo             analyze the configured network topology\n\
            artifacts        inventory compiled artifact builds\n\
@@ -121,8 +125,14 @@ fn print_help() {
            --fault-delay-secs S threaded: hold-back duration for delayed messages\n\
            --fault-reorder P    threaded: adjacent-swap reorder probability\n\
            --fault-corrupt P    threaded: bit-flip probability (CRC drops + counts)\n\
-           --executor E         drill: grid | threads | both (default: both)\n\
-           --halt-after B       drill: boundary to kill at (default: mid-run)\n\
+           --transport T        run: threads | socket (default: socket)\n\
+           --seed-addr H:P      run: seed-node address (rank 0 listens, others dial)\n\
+           --rank R             run: this process's rank in 0..dp*pp\n\
+           --bind H:P           run: listener bind address (default 127.0.0.1:0)\n\
+           --report-out FILE    run: write this rank's report here (stdout otherwise)\n\
+           --val-batches N      run: validation batches per eval point\n\
+           --executor E         drill: grid | threads | socket | both (default: both)\n\
+           --halt-after B       drill/run: boundary to kill at (drill default: mid-run)\n\
            --payload BYTES      topo: sync payload (default: model size)\n\
            --root DIR           analyze: source tree to scan (default: ./src or ./rust/src)\n\
            --format F           analyze: text | json (flat JSONL findings)"
@@ -229,6 +239,50 @@ fn cmd_train_threaded(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(p) = &report.obs.journal_path {
         println!("trace journal written to {p}");
+    }
+    Ok(())
+}
+
+/// Run ONE rank of the DP × PP grid as this OS process, over real TCP.
+/// Rank 0 listens at `--seed-addr`; every other rank dials it to join
+/// and learns the live peer address book from the welcome. The rank's
+/// result is written as a deterministic text report (`--report-out`,
+/// stdout otherwise) for `merge_rank_reports`-style aggregation.
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    use noloco::config::TransportKind;
+    use noloco::train::SocketTrainer;
+
+    let cfg = cli::train_config_from(args).map_err(anyhow::Error::msg)?;
+    // `run` means sockets unless the flag says otherwise — the threaded
+    // spelling exists so like-for-like comparisons can share a command.
+    let kind = match args.opt("transport") {
+        Some(_) => cfg.transport.kind,
+        None => TransportKind::Socket,
+    };
+    if kind == TransportKind::Threads {
+        return cmd_train_threaded(args);
+    }
+    let rank = cfg.transport.rank;
+    let world = cfg.topology.world();
+    println!(
+        "socket run: {} | {} | rank {rank}/{world} | seed node {} | {} steps",
+        cfg.model.name, cfg.outer.method, cfg.transport.seed_addr, cfg.steps
+    );
+    let mut t = SocketTrainer::new(cfg.clone(), rank, &cfg.transport.seed_addr)
+        .with_bind(&cfg.transport.bind);
+    if let Some(v) = args.opt_usize("val-batches").map_err(anyhow::Error::msg)? {
+        t = t.with_val_batches(v);
+    }
+    if let Some(b) = args.opt_u64("halt-after").map_err(anyhow::Error::msg)? {
+        t = t.with_halt_after(b);
+    }
+    let report = t.run()?;
+    match &cfg.transport.report_out {
+        Some(path) => {
+            report.save(path)?;
+            println!("rank {rank} report written to {path}");
+        }
+        None => print!("{}", report.to_text()),
     }
     Ok(())
 }
@@ -410,11 +464,14 @@ fn cmd_drill(args: &Args) -> anyhow::Result<()> {
         None => std::env::temp_dir().join(format!("noloco_drill_{}.ckpt", std::process::id())),
     };
     let executor = args.opt("executor").unwrap_or("both");
-    let (run_grid, run_threads) = match executor {
-        "grid" => (true, false),
-        "threads" | "threaded" => (false, true),
-        "both" => (true, true),
-        other => anyhow::bail!("--executor expects grid | threads | both, got `{other}`"),
+    let (run_grid, run_threads, run_socket) = match executor {
+        "grid" => (true, false, false),
+        "threads" | "threaded" => (false, true, false),
+        "socket" => (false, false, true),
+        "both" => (true, true, false),
+        other => {
+            anyhow::bail!("--executor expects grid | threads | socket | both, got `{other}`")
+        }
     };
     println!(
         "drill: {} | {} | dp={} pp={} | {} steps ({} boundaries) | kill after boundary \
@@ -492,9 +549,172 @@ fn cmd_drill(args: &Args) -> anyhow::Result<()> {
         let resumed = ThreadedTrainer::new(cfg.clone()).with_resume(ck).run()?;
         compare("drill(threads)", &reference, &resumed)?;
     }
+    if run_socket {
+        drill_socket(args, &cfg, halt, &ckpt_path)?;
+        for rank in 0..cfg.topology.world() {
+            let _ = std::fs::remove_file(format!("{}.rank{rank}", ckpt_path.display()));
+        }
+    }
     let _ = std::fs::remove_file(&ckpt_path);
     println!("drill OK");
     Ok(())
+}
+
+/// The cross-process leg of the kill-restart drill: spawn one `noloco
+/// run` child per rank over localhost TCP, halt the whole world right
+/// after the checkpoint covering `halt` hits disk, restart every rank
+/// from its own `<ckpt>.rank<R>` file under a fresh seed node, and
+/// assert the merged rank reports match an unkilled *threaded* run
+/// bit-for-bit — per-step loss bits and `CommStats` both.
+fn drill_socket(
+    args: &Args,
+    cfg: &noloco::config::TrainConfig,
+    halt: u64,
+    ckpt_path: &std::path::Path,
+) -> anyhow::Result<()> {
+    use anyhow::Context as _;
+    use noloco::train::{merge_rank_reports, RankReport};
+
+    let world = cfg.topology.world();
+    let exe = std::env::current_exe()?;
+    let reference = ThreadedTrainer::new(cfg.clone()).run()?;
+
+    // Child argv tail: forward the drill's own config-shaping options
+    // (preset, steps, --set overrides, ...) minus the keys the drill
+    // owns per phase.
+    let mut tail: Vec<String> = Vec::new();
+    for (k, v) in &args.options {
+        let owned = matches!(
+            k.as_str(),
+            "executor"
+                | "halt-after"
+                | "ckpt-out"
+                | "ckpt-every"
+                | "resume"
+                | "transport"
+                | "seed-addr"
+                | "rank"
+                | "bind"
+                | "report-out"
+        );
+        if !owned {
+            tail.push(format!("--{k}"));
+            tail.push(v.clone());
+        }
+    }
+    for (p, v) in &args.sets {
+        tail.push("--set".to_string());
+        tail.push(format!("{p}={v}"));
+    }
+
+    let report_path = |phase: &str, rank: usize| {
+        std::env::temp_dir().join(format!(
+            "noloco_drill_{}_{phase}_rank{rank}.report",
+            std::process::id()
+        ))
+    };
+    let spawn_world = |extra: &dyn Fn(usize) -> Vec<String>| -> anyhow::Result<()> {
+        let seed_addr = format!("127.0.0.1:{}", free_loopback_port()?);
+        let mut children = Vec::new();
+        for rank in 0..world {
+            let mut argv: Vec<String> = vec![
+                "run".to_string(),
+                "--transport".to_string(),
+                "socket".to_string(),
+                "--seed-addr".to_string(),
+                seed_addr.clone(),
+                "--rank".to_string(),
+                rank.to_string(),
+            ];
+            argv.extend(tail.iter().cloned());
+            argv.extend(extra(rank));
+            let child = std::process::Command::new(&exe)
+                .args(&argv)
+                .stdout(std::process::Stdio::null())
+                .spawn()
+                .with_context(|| format!("spawning rank {rank}"))?;
+            children.push((rank, child));
+        }
+        for (rank, mut child) in children {
+            let status = child.wait()?;
+            anyhow::ensure!(status.success(), "rank {rank} exited with {status}");
+        }
+        Ok(())
+    };
+
+    // Phase B: the whole world checkpoints at `halt` and stops there.
+    let ckpt = ckpt_path.display().to_string();
+    spawn_world(&|rank| {
+        vec![
+            "--ckpt-out".to_string(),
+            ckpt.clone(),
+            "--ckpt-every".to_string(),
+            halt.to_string(),
+            "--halt-after".to_string(),
+            halt.to_string(),
+            "--report-out".to_string(),
+            report_path("b", rank).display().to_string(),
+        ]
+    })?;
+    println!(
+        "drill(socket): {world} processes stopped after boundary {halt}, \
+         per-rank checkpoints on disk"
+    );
+
+    // Phase C: a fresh world forms under a new seed node; every rank
+    // resumes from its own file and runs to completion.
+    spawn_world(&|rank| {
+        vec![
+            "--resume".to_string(),
+            format!("{ckpt}.rank{rank}"),
+            "--report-out".to_string(),
+            report_path("c", rank).display().to_string(),
+        ]
+    })?;
+    let mut reports = Vec::new();
+    for rank in 0..world {
+        let path = report_path("c", rank);
+        reports.push(RankReport::load(&path.display().to_string())?);
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(report_path("b", rank));
+    }
+    let merged = merge_rank_reports(&reports)?;
+
+    anyhow::ensure!(
+        reference.step_train_loss.len() == merged.step_train_loss.len(),
+        "drill(socket): loss trace lengths differ ({} vs {})",
+        reference.step_train_loss.len(),
+        merged.step_train_loss.len()
+    );
+    for (i, (x, y)) in reference.step_train_loss.iter().zip(&merged.step_train_loss).enumerate()
+    {
+        anyhow::ensure!(
+            x.to_bits() == y.to_bits(),
+            "drill(socket): step {i} train loss diverged: threaded {x} vs socket {y}"
+        );
+    }
+    anyhow::ensure!(
+        reference.comm == merged.comm,
+        "drill(socket): communication accounting diverged:\n  threaded {:?}\n  socket   {:?}",
+        reference.comm,
+        merged.comm
+    );
+    println!(
+        "drill(socket): merged socket trajectory bit-identical to the threaded run \
+         ({} step losses, comm {:.1} MiB / {} msgs)",
+        merged.step_train_loss.len(),
+        merged.comm.mib_sent(),
+        merged.comm.msgs_sent
+    );
+    Ok(())
+}
+
+/// Reserve-and-release an ephemeral loopback port for a drill's seed
+/// node. The tiny release-to-bind window is acceptable for a local
+/// drill; production runs pass an explicit `--seed-addr`.
+fn free_loopback_port() -> anyhow::Result<u16> {
+    let l = std::net::TcpListener::bind("127.0.0.1:0")?;
+    Ok(l.local_addr()?.port())
 }
 
 /// Emit a small synthetic journal covering every event type — no
@@ -536,6 +756,7 @@ fn cmd_obs_smoke(args: &Args) -> anyhow::Result<()> {
     hub.record(99, Event::Ckpt { boundary: 2, step: 100, bytes: 65536 });
     hub.record(100, Event::Resume { boundary: 2, step: 100 });
     hub.record(100, Event::Drain { outer_idx: 2, bytes: 0, msgs: 0 });
+    hub.record(100, Event::NetPeer { peer: 1, bytes: 4096, msgs: 3, rtt_us: 120 });
     let report = hub.report();
     let events: u64 = report.counters.iter().map(|(_, v)| v).sum();
     println!("obs-smoke journal written to {out} ({events} events)");

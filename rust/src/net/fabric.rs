@@ -146,8 +146,18 @@ pub struct Message {
     crc: u32,
 }
 
+impl Message {
+    /// An already-verified message with no pending latency — what a
+    /// transport that performed its own integrity check (the socket
+    /// framing layer) hands to the stash discipline.
+    pub(crate) fn delivered(from: usize, tag: Tag, payload: Payload) -> Message {
+        let crc = payload_crc(&payload);
+        Message { from, tag, payload, deliver_at: None, crc }
+    }
+}
+
 /// CRC-32 (IEEE 802.3 polynomial, reflected) over a byte stream.
-fn crc32_update(mut crc: u32, bytes: impl IntoIterator<Item = u8>) -> u32 {
+pub(crate) fn crc32_update(mut crc: u32, bytes: impl IntoIterator<Item = u8>) -> u32 {
     for b in bytes {
         crc ^= b as u32;
         for _ in 0..8 {
@@ -621,6 +631,107 @@ impl Endpoint {
             Self::honor_latency(&msg);
             return msg;
         }
+    }
+}
+
+/// The tag-matched stash discipline a communicator runs over, abstracted
+/// from the transport that delivers the messages. [`Endpoint`] (in-process
+/// mpsc channels) and [`SocketEndpoint`](crate::net::SocketEndpoint)
+/// (TCP framing) both implement it, so
+/// [`FabricComm`](crate::train::FabricComm)'s protocol logic — two-phase
+/// offers, windowed round retention, non-blocking heartbeat polls,
+/// expiry sweeps, unmetered checkpoint replay — is written once against
+/// this trait instead of forked per transport.
+pub trait Channel {
+    /// Executor name for reports ("threaded" / "socket").
+    fn executor_name(&self) -> &'static str;
+    /// This channel's rank in the world.
+    fn rank(&self) -> usize;
+    /// Send `payload` to rank `to` under `tag` (metered).
+    fn send(&mut self, to: usize, tag: Tag, payload: Payload);
+    /// Checkpoint-replay send: no metering, no fault draws.
+    fn send_unmetered(&mut self, to: usize, tag: Tag, payload: Payload);
+    /// Blocking receive of the first message matching `tag`.
+    fn recv(&mut self, tag: Tag) -> Message;
+    /// Receive matching `tag` with a timeout; `None` on expiry.
+    fn recv_timeout(&mut self, tag: Tag, timeout: Duration) -> Option<Message>;
+    /// Truly non-blocking receive (never sleeps, not even on latency).
+    fn try_recv_ready(&mut self, tag: Tag) -> Option<Message>;
+    /// Non-blocking payload peek that leaves the message stashed.
+    fn peek_ready(&mut self, tag: Tag) -> Option<Payload>;
+    /// Return a received message to the stash.
+    fn stash_back(&mut self, msg: Message);
+    /// Drop stashed messages whose tag fails `keep`; returns the count.
+    fn sweep_stash(&mut self, keep: &mut dyn FnMut(&Tag) -> bool) -> usize;
+    /// This rank's wire totals so far: `(bytes_sent, msgs_sent)`.
+    fn sent_totals(&self) -> (u64, u64);
+    /// Reset the wire counters to checkpointed totals.
+    fn restore_sent_totals(&mut self, bytes: u64, msgs: u64);
+    /// Fault-RNG stream `(state, inc)`, when the transport injects faults.
+    fn fault_rng_state(&self) -> Option<(u128, u128)> {
+        None
+    }
+    /// Restore a checkpointed fault-RNG stream (no-op by default).
+    fn restore_fault_rng(&mut self, state: u128, inc: u128) {
+        let _ = (state, inc);
+    }
+}
+
+impl Channel for Endpoint {
+    fn executor_name(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn rank(&self) -> usize {
+        Endpoint::rank(self)
+    }
+
+    fn send(&mut self, to: usize, tag: Tag, payload: Payload) {
+        Endpoint::send(self, to, tag, payload);
+    }
+
+    fn send_unmetered(&mut self, to: usize, tag: Tag, payload: Payload) {
+        Endpoint::send_unmetered(self, to, tag, payload);
+    }
+
+    fn recv(&mut self, tag: Tag) -> Message {
+        Endpoint::recv(self, tag)
+    }
+
+    fn recv_timeout(&mut self, tag: Tag, timeout: Duration) -> Option<Message> {
+        Endpoint::recv_timeout(self, tag, timeout)
+    }
+
+    fn try_recv_ready(&mut self, tag: Tag) -> Option<Message> {
+        Endpoint::try_recv_ready(self, tag)
+    }
+
+    fn peek_ready(&mut self, tag: Tag) -> Option<Payload> {
+        Endpoint::peek_ready(self, tag)
+    }
+
+    fn stash_back(&mut self, msg: Message) {
+        Endpoint::stash_back(self, msg);
+    }
+
+    fn sweep_stash(&mut self, keep: &mut dyn FnMut(&Tag) -> bool) -> usize {
+        Endpoint::sweep_stash(self, keep)
+    }
+
+    fn sent_totals(&self) -> (u64, u64) {
+        Endpoint::sent_totals(self)
+    }
+
+    fn restore_sent_totals(&mut self, bytes: u64, msgs: u64) {
+        Endpoint::restore_sent_totals(self, bytes, msgs);
+    }
+
+    fn fault_rng_state(&self) -> Option<(u128, u128)> {
+        Some(Endpoint::fault_rng_state(self))
+    }
+
+    fn restore_fault_rng(&mut self, state: u128, inc: u128) {
+        Endpoint::restore_fault_rng(self, state, inc);
     }
 }
 

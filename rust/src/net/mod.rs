@@ -20,11 +20,17 @@
 //!   ([`ChurnSchedule`] / [`Membership`]); [`SimClock::with_topology`]
 //!   makes the cost models link- and payload-aware, and the trainers use
 //!   the churn machinery for elastic NoLoCo runs.
+//! * [`socket`] — real TCP transport: the same tag-matched [`Channel`]
+//!   discipline as the fabric, over a length-prefixed, CRC32-framed,
+//!   version-negotiated wire schema with a seed-node join protocol, so
+//!   N OS processes train together instead of N threads.
 
 mod fabric;
 mod simclock;
+pub mod socket;
 pub mod topo;
 
-pub use fabric::{Endpoint, Fabric, FaultPlan, Message, Payload, Tag};
+pub use fabric::{payload_crc, Channel, Endpoint, Fabric, FaultPlan, Message, Payload, Tag};
 pub use simclock::{erf, LatencyModel, SimClock};
+pub use socket::{Frame, FrameReader, PeerNet, SocketEndpoint, WIRE_VERSION};
 pub use topo::{ChurnEvent, ChurnSchedule, FailureDetector, Link, Membership, Topology};

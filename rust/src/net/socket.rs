@@ -1,0 +1,1109 @@
+//! Real TCP transport: the socket executor's [`Channel`].
+//!
+//! [`SocketEndpoint`] speaks a length-prefixed, CRC32-framed,
+//! version-negotiated wire schema over [`std::net::TcpStream`] and
+//! implements the same tag-matched stash discipline as the in-process
+//! fabric [`Endpoint`](crate::net::Endpoint) — so
+//! [`SocketComm`](crate::train::SocketComm) is the unmodified
+//! [`FabricComm`](crate::train::FabricComm) protocol logic running over a
+//! different [`Channel`]: the framing layer is a codec under the existing
+//! endpoint discipline, not a fork of it.
+//!
+//! # Wire schema (version 1)
+//!
+//! Every frame is `len: u32 LE | crc: u32 LE | body`, where `len` is the
+//! body length and `crc` is the CRC-32 (IEEE 802.3, reflected — the same
+//! polynomial the fabric and the checkpoint format use) of the body. A
+//! frame whose CRC does not match is skipped whole and counted (the
+//! `net.corrupt_dropped` counter), exactly like the fabric's corrupt
+//! fault handling: a corrupt frame behaves as a dropped one and the
+//! straggler/staleness fallbacks absorb it.
+//!
+//! The body is `kind: u8` followed by kind-specific fields:
+//!
+//! | kind | frame         | fields                                    |
+//! |------|---------------|-------------------------------------------|
+//! | 1    | `Hello`       | version, rank, listen address             |
+//! | 2    | `Welcome`     | version, world, address book              |
+//! | 3    | `PeerHello`   | version, rank                             |
+//! | 4    | `PeerWelcome` | version, rank                             |
+//! | 5    | `Msg`         | from, tag (kind/a/b), payload             |
+//! | 6    | `Replay`      | from, tag (kind/a/b), payload (unmetered) |
+//!
+//! `Msg` carries everything the communicator ships — fragment offers
+//! `(round, fragment, Δ_k, φ_k)`, bounded-staleness round offers,
+//! heartbeats, boundary activations — distinguished by the *tag* kind,
+//! the same `(kind, a, b)` packing `FabricComm` already uses (fragment
+//! round/index packed into `a` by `frag_seq`). `Replay` is byte-identical
+//! to `Msg` apart from its frame kind: receivers treat both the same,
+//! but the distinct kind makes checkpoint-replay traffic visible on the
+//! wire (and keeps it out of the logical metering by construction on the
+//! sender).
+//!
+//! # Version negotiation
+//!
+//! `Hello`/`PeerHello` carry the dialer's `WIRE_VERSION`; the responder
+//! answers `Welcome`/`PeerWelcome` with its own. Each side checks the
+//! other's version and refuses the connection on mismatch — negotiation
+//! is an equality check today, but the field is what lets a future
+//! version speak both.
+//!
+//! # Seed-node join protocol
+//!
+//! Rank 0 listens on the seed address. Every joiner binds its own
+//! listener first, then dials the seed and sends `Hello` with its listen
+//! address. Once all `world − 1` joiners have said hello, the seed
+//! replies `Welcome` to each with the live-set-complete address book
+//! (rank → address, every rank). The seed connection stays open as the
+//! rank-0 data connection; all other pairs are dialed *lazily* — the
+//! first `send` to an unconnected peer performs a
+//! `PeerHello`/`PeerWelcome` handshake (also the RTT probe) and keeps
+//! the stream. Two peers dialing each other simultaneously is benign:
+//! both connections carry traffic, each side writes on the one it dialed
+//! and reads from both.
+//!
+//! # Metering
+//!
+//! [`Channel::sent_totals`] meters *logical* wire bytes
+//! ([`Payload::wire_bytes`], what the fabric meters) — not framed TCP
+//! bytes — so a socket run's `CommStats` are bit-identical to the
+//! same-seed threaded run. The actual per-peer frame bytes, frame
+//! counts and handshake RTTs are tracked separately and journaled as
+//! `net_peer` observability events by the socket executor.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::fabric::{crc32_update, Channel, Message, Payload, Tag};
+
+/// Wire-schema version spoken by this build (negotiated at handshake).
+pub const WIRE_VERSION: u16 = 1;
+
+/// Sanity cap on one frame's body (a corrupt length must error, not OOM).
+const MAX_FRAME: usize = 1 << 30;
+
+/// How long a joiner keeps retrying the seed dial before giving up.
+const JOIN_RETRY: Duration = Duration::from_secs(10);
+
+/// Poison-proof lock (same idiom as the fabric's shared counters).
+fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// CRC-32 of a byte slice (the frame check).
+fn crc32(bytes: &[u8]) -> u32 {
+    !crc32_update(0xffff_ffff, bytes.iter().copied())
+}
+
+// ---------------------------------------------------------------------
+// Frames and the codec
+// ---------------------------------------------------------------------
+
+const K_HELLO: u8 = 1;
+const K_WELCOME: u8 = 2;
+const K_PEER_HELLO: u8 = 3;
+const K_PEER_WELCOME: u8 = 4;
+const K_MSG: u8 = 5;
+const K_REPLAY: u8 = 6;
+
+/// One wire frame (see the module docs for the schema table).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Joiner → seed: version, rank, and the joiner's listen address.
+    Hello { version: u16, rank: u32, listen: String },
+    /// Seed → joiner: version, world size, and the full address book.
+    Welcome { version: u16, world: u32, peers: Vec<(u32, String)> },
+    /// Lazy-dial handshake: dialer announces itself to a gossip partner.
+    PeerHello { version: u16, rank: u32 },
+    /// Lazy-dial reply: the accepting side's identity.
+    PeerWelcome { version: u16, rank: u32 },
+    /// A tagged communicator message (offers, heartbeats, activations).
+    Msg { from: u32, tag: Tag, payload: Payload },
+    /// A checkpoint-replay message: same layout as `Msg`, distinct kind.
+    Replay { from: u32, tag: Tag, payload: Payload },
+}
+
+fn put_u16(b: &mut Vec<u8>, x: u16) {
+    b.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u32(b: &mut Vec<u8>, x: u32) {
+    b.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    put_u16(b, s.len() as u16);
+    b.extend_from_slice(s.as_bytes());
+}
+
+fn put_payload(b: &mut Vec<u8>, p: &Payload) {
+    match p {
+        Payload::F32(v) => {
+            b.push(0);
+            put_u32(b, v.len() as u32);
+            for x in v {
+                put_u32(b, x.to_bits());
+            }
+        }
+        Payload::U32(v) => {
+            b.push(1);
+            put_u32(b, v.len() as u32);
+            for &x in v {
+                put_u32(b, x);
+            }
+        }
+        Payload::Control => b.push(2),
+    }
+}
+
+fn put_msg(b: &mut Vec<u8>, from: u32, tag: &Tag, payload: &Payload) {
+    put_u32(b, from);
+    put_u16(b, tag.kind);
+    put_u32(b, tag.a);
+    put_u32(b, tag.b);
+    put_payload(b, payload);
+}
+
+impl Frame {
+    /// Serialize to a complete wire frame (`len | crc | body`).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        match self {
+            Frame::Hello { version, rank, listen } => {
+                body.push(K_HELLO);
+                put_u16(&mut body, *version);
+                put_u32(&mut body, *rank);
+                put_str(&mut body, listen);
+            }
+            Frame::Welcome { version, world, peers } => {
+                body.push(K_WELCOME);
+                put_u16(&mut body, *version);
+                put_u32(&mut body, *world);
+                put_u32(&mut body, peers.len() as u32);
+                for (rank, addr) in peers {
+                    put_u32(&mut body, *rank);
+                    put_str(&mut body, addr);
+                }
+            }
+            Frame::PeerHello { version, rank } => {
+                body.push(K_PEER_HELLO);
+                put_u16(&mut body, *version);
+                put_u32(&mut body, *rank);
+            }
+            Frame::PeerWelcome { version, rank } => {
+                body.push(K_PEER_WELCOME);
+                put_u16(&mut body, *version);
+                put_u32(&mut body, *rank);
+            }
+            Frame::Msg { from, tag, payload } => {
+                body.push(K_MSG);
+                put_msg(&mut body, *from, tag, payload);
+            }
+            Frame::Replay { from, tag, payload } => {
+                body.push(K_REPLAY);
+                put_msg(&mut body, *from, tag, payload);
+            }
+        }
+        let mut out = Vec::with_capacity(body.len() + 8);
+        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&crc32(&body).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Deserialize a CRC-verified frame body.
+    pub fn decode(body: &[u8]) -> Result<Frame> {
+        let mut c = Cur { b: body, i: 0 };
+        let frame = match c.u8()? {
+            K_HELLO => Frame::Hello {
+                version: c.u16()?,
+                rank: c.u32()?,
+                listen: c.str()?,
+            },
+            K_WELCOME => {
+                let version = c.u16()?;
+                let world = c.u32()?;
+                let n = c.u32()? as usize;
+                ensure!(n <= 1 << 20, "implausible address-book size {n}");
+                let mut peers = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let rank = c.u32()?;
+                    let addr = c.str()?;
+                    peers.push((rank, addr));
+                }
+                Frame::Welcome { version, world, peers }
+            }
+            K_PEER_HELLO => Frame::PeerHello { version: c.u16()?, rank: c.u32()? },
+            K_PEER_WELCOME => Frame::PeerWelcome { version: c.u16()?, rank: c.u32()? },
+            K_MSG => {
+                let (from, tag, payload) = c.msg()?;
+                Frame::Msg { from, tag, payload }
+            }
+            K_REPLAY => {
+                let (from, tag, payload) = c.msg()?;
+                Frame::Replay { from, tag, payload }
+            }
+            k => bail!("unknown frame kind {k}"),
+        };
+        ensure!(c.i == body.len(), "trailing bytes after frame body");
+        Ok(frame)
+    }
+}
+
+/// Bounds-checked little-endian cursor over one frame body.
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Cur<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        ensure!(self.i + n <= self.b.len(), "truncated frame body");
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u16()? as usize;
+        String::from_utf8(self.take(n)?.to_vec()).context("non-UTF-8 address string")
+    }
+
+    fn payload(&mut self) -> Result<Payload> {
+        match self.u8()? {
+            0 => {
+                let n = self.u32()? as usize;
+                ensure!(n < (1 << 28), "implausible payload length {n}");
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    v.push(f32::from_bits(self.u32()?));
+                }
+                Ok(Payload::F32(v))
+            }
+            1 => {
+                let n = self.u32()? as usize;
+                ensure!(n < (1 << 28), "implausible payload length {n}");
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    v.push(self.u32()?);
+                }
+                Ok(Payload::U32(v))
+            }
+            2 => Ok(Payload::Control),
+            t => bail!("unknown payload type {t}"),
+        }
+    }
+
+    fn msg(&mut self) -> Result<(u32, Tag, Payload)> {
+        let from = self.u32()?;
+        let kind = self.u16()?;
+        let a = self.u32()?;
+        let b = self.u32()?;
+        let payload = self.payload()?;
+        Ok((from, Tag::new(kind, a, b), payload))
+    }
+}
+
+/// Incremental frame decoder: feed it byte chunks split at *arbitrary*
+/// boundaries (TCP guarantees nothing else) and it yields complete,
+/// CRC-verified frames. A frame failing its CRC — or whose body refuses
+/// to decode — is skipped by its declared length and counted in
+/// `corrupt`; an implausible length tears the stream down (the buffer is
+/// cleared), since the length word itself can no longer be trusted.
+#[derive(Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+    /// Frames discarded on CRC mismatch or decode failure.
+    pub corrupt: u64,
+}
+
+impl FrameReader {
+    /// Fresh decoder with an empty buffer.
+    pub fn new() -> FrameReader {
+        FrameReader::default()
+    }
+
+    /// Append `bytes` and decode every complete frame now available.
+    pub fn push(&mut self, bytes: &[u8]) -> Vec<Frame> {
+        self.buf.extend_from_slice(bytes);
+        let mut out = Vec::new();
+        loop {
+            if self.buf.len() < 8 {
+                break;
+            }
+            let len =
+                u32::from_le_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]]) as usize;
+            if len > MAX_FRAME {
+                self.corrupt += 1;
+                self.buf.clear();
+                break;
+            }
+            if self.buf.len() < 8 + len {
+                break;
+            }
+            let want =
+                u32::from_le_bytes([self.buf[4], self.buf[5], self.buf[6], self.buf[7]]);
+            let body = &self.buf[8..8 + len];
+            if crc32(body) == want {
+                match Frame::decode(body) {
+                    Ok(f) => out.push(f),
+                    Err(_) => self.corrupt += 1,
+                }
+            } else {
+                self.corrupt += 1;
+            }
+            self.buf.drain(..8 + len);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// Connection plumbing
+// ---------------------------------------------------------------------
+
+/// Per-peer traffic actually framed onto TCP (not the logical metering):
+/// frame bytes written, frames written, and the last handshake RTT.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PeerNet {
+    /// Framed bytes written to this peer (headers included).
+    pub bytes: u64,
+    /// Frames written to this peer.
+    pub msgs: u64,
+    /// Last handshake round-trip to this peer, in microseconds.
+    pub rtt_us: u64,
+}
+
+/// State shared between the endpoint, its acceptor and reader threads.
+struct SocketShared {
+    rank: usize,
+    /// Open write streams by peer rank (a lazy dial or an accepted
+    /// handshake registers one; `BTreeMap` keeps sweep order seeded, not
+    /// hashed — analyze R2).
+    writers: Mutex<BTreeMap<usize, TcpStream>>,
+    /// Verified inbound messages from every reader thread.
+    tx: Sender<Message>,
+    /// Frames this rank discarded on CRC mismatch (→ `net.corrupt_dropped`).
+    corrupt_dropped: AtomicU64,
+    /// Per-peer framed-traffic counters (→ `net_peer` journal events).
+    peer_net: Mutex<BTreeMap<usize, PeerNet>>,
+}
+
+impl SocketShared {
+    /// Register `stream` as the write path to `peer` unless one exists
+    /// (simultaneous dials keep the first; the duplicate connection still
+    /// delivers whatever its dialer writes on it).
+    fn register(&self, peer: usize, stream: &TcpStream) {
+        let mut w = locked(&self.writers);
+        if let std::collections::btree_map::Entry::Vacant(e) = w.entry(peer) {
+            if let Ok(clone) = stream.try_clone() {
+                e.insert(clone);
+            }
+        }
+    }
+
+    /// Pump one connection: decode frames, verify, forward messages.
+    /// Returns when the peer hangs up.
+    fn read_loop(&self, mut stream: TcpStream) {
+        let mut reader = FrameReader::new();
+        let mut chunk = [0u8; 64 * 1024];
+        loop {
+            let n = match stream.read(&mut chunk) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => n,
+            };
+            for frame in reader.push(&chunk[..n]) {
+                match frame {
+                    Frame::Msg { from, tag, payload }
+                    | Frame::Replay { from, tag, payload } => {
+                        let msg = Message::delivered(from as usize, tag, payload);
+                        if self.tx.send(msg).is_err() {
+                            return; // endpoint retired
+                        }
+                    }
+                    // Handshake frames are consumed before the read loop
+                    // starts; one arriving here is a protocol error from
+                    // the peer — drop it like a corrupt frame.
+                    _ => {
+                        self.corrupt_dropped.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            let c = std::mem::take(&mut reader.corrupt);
+            if c > 0 {
+                self.corrupt_dropped.fetch_add(c, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Read exactly one frame from `stream` (blocking) — the handshake path,
+/// before a connection is handed to its reader thread. `read_exact`
+/// consumes precisely the frame's bytes, so data frames the peer pipelines
+/// right behind its handshake stay in the socket buffer for the reader.
+fn read_one_frame(stream: &mut TcpStream) -> Result<Frame> {
+    let mut hdr = [0u8; 8];
+    stream.read_exact(&mut hdr).context("reading handshake header")?;
+    let len = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]) as usize;
+    let want = u32::from_le_bytes([hdr[4], hdr[5], hdr[6], hdr[7]]);
+    ensure!(len <= MAX_FRAME, "implausible handshake frame length {len}");
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body).context("reading handshake body")?;
+    ensure!(crc32(&body) == want, "corrupt handshake frame");
+    Frame::decode(&body)
+}
+
+fn write_frame(stream: &mut TcpStream, frame: &Frame) -> Result<()> {
+    stream.write_all(&frame.encode()).context("writing frame")?;
+    Ok(())
+}
+
+/// Both sides of every handshake check the other's version; equality is
+/// the whole negotiation today, but the wire carries the field so a
+/// future version can speak both.
+fn negotiate(theirs: u16) -> Result<()> {
+    ensure!(
+        theirs == WIRE_VERSION,
+        "wire-version mismatch: peer speaks v{theirs}, this build speaks v{WIRE_VERSION}"
+    );
+    Ok(())
+}
+
+/// Accept-side handshake + reader spawn for one inbound connection.
+fn serve_conn(shared: &Arc<SocketShared>, mut stream: TcpStream) -> Result<()> {
+    match read_one_frame(&mut stream)? {
+        Frame::PeerHello { version, rank } => {
+            negotiate(version)?;
+            write_frame(
+                &mut stream,
+                &Frame::PeerWelcome { version: WIRE_VERSION, rank: shared.rank as u32 },
+            )?;
+            shared.register(rank as usize, &stream);
+            let sh = shared.clone();
+            std::thread::spawn(move || sh.read_loop(stream));
+            Ok(())
+        }
+        other => bail!("expected PeerHello, got {other:?}"),
+    }
+}
+
+/// Run the accept loop: every inbound connection is a lazy-dial
+/// `PeerHello` handshake. Exits when the listener errors (process end).
+fn accept_loop(shared: Arc<SocketShared>, listener: TcpListener) {
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { break };
+        let _ = stream.set_nodelay(true);
+        let _ = serve_conn(&shared, stream);
+    }
+}
+
+/// Dial `addr`, retrying until `deadline` (the peer's listener may not
+/// be up yet during the join window).
+fn dial_retry(addr: &str, deadline: Instant) -> Result<TcpStream> {
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                let _ = s.set_nodelay(true);
+                return Ok(s);
+            }
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e).with_context(|| format!("dialing {addr}"));
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The endpoint
+// ---------------------------------------------------------------------
+
+/// One process-rank's handle on the TCP world: the socket [`Channel`].
+///
+/// Construction *is* the join protocol — see [`SocketEndpoint::bootstrap`]
+/// and the module docs. After bootstrap the endpoint owns the inbound
+/// message channel (reader threads feed it), the stash, and the logical
+/// wire counters; peer connections beyond the seed are dialed lazily on
+/// first send.
+pub struct SocketEndpoint {
+    rank: usize,
+    world: usize,
+    /// Rank → dial address for every peer (the seed's address book).
+    peers: BTreeMap<usize, String>,
+    shared: Arc<SocketShared>,
+    rx: Receiver<Message>,
+    stash: Vec<Message>,
+    /// Logical wire totals (payload bytes, messages) — the fabric-equal
+    /// metering `CommStats` compare against.
+    bytes_sent: u64,
+    msgs_sent: u64,
+}
+
+impl SocketEndpoint {
+    /// Join the TCP world: rank 0 listens on `seed_addr` and collects
+    /// every joiner's `Hello`; other ranks bind `bind_addr` (use
+    /// `"127.0.0.1:0"` for an ephemeral port), dial the seed, and block
+    /// until the `Welcome` carries the complete address book. Returns
+    /// once this rank can reach every peer (directly or lazily).
+    pub fn bootstrap(
+        rank: usize,
+        world: usize,
+        seed_addr: &str,
+        bind_addr: &str,
+    ) -> Result<SocketEndpoint> {
+        ensure!(world >= 1, "socket world must have at least one rank");
+        ensure!(rank < world, "rank {rank} out of range for world {world}");
+        let (tx, rx) = channel();
+        let shared = Arc::new(SocketShared {
+            rank,
+            writers: Mutex::new(BTreeMap::new()),
+            tx,
+            corrupt_dropped: AtomicU64::new(0),
+            peer_net: Mutex::new(BTreeMap::new()),
+        });
+        let peers = if rank == 0 {
+            Self::bootstrap_seed(&shared, world, seed_addr)?
+        } else {
+            Self::bootstrap_joiner(&shared, rank, world, seed_addr, bind_addr)?
+        };
+        Ok(SocketEndpoint {
+            rank,
+            world,
+            peers,
+            shared,
+            rx,
+            stash: Vec::new(),
+            bytes_sent: 0,
+            msgs_sent: 0,
+        })
+    }
+
+    /// Seed side of the join: accept `world − 1` `Hello`s, then hand every
+    /// joiner the address book and keep each connection as the data path.
+    fn bootstrap_seed(
+        shared: &Arc<SocketShared>,
+        world: usize,
+        seed_addr: &str,
+    ) -> Result<BTreeMap<usize, String>> {
+        let listener = TcpListener::bind(seed_addr)
+            .with_context(|| format!("seed rank binding {seed_addr}"))?;
+        let seed_local = listener.local_addr()?.to_string();
+        let mut joiners: BTreeMap<usize, (String, TcpStream)> = BTreeMap::new();
+        while joiners.len() < world - 1 {
+            let (mut stream, _) = listener.accept().context("seed accept")?;
+            let _ = stream.set_nodelay(true);
+            match read_one_frame(&mut stream)? {
+                Frame::Hello { version, rank, listen } => {
+                    negotiate(version)?;
+                    let r = rank as usize;
+                    ensure!(r > 0 && r < world, "joiner announced invalid rank {r}");
+                    ensure!(!joiners.contains_key(&r), "rank {r} joined twice");
+                    joiners.insert(r, (listen, stream));
+                }
+                other => bail!("expected Hello at the seed, got {other:?}"),
+            }
+        }
+        let mut book: Vec<(u32, String)> = vec![(0, seed_local)];
+        for (&r, (addr, _)) in &joiners {
+            book.push((r as u32, addr.clone()));
+        }
+        for (&r, (_, stream)) in &mut joiners {
+            write_frame(
+                stream,
+                &Frame::Welcome {
+                    version: WIRE_VERSION,
+                    world: world as u32,
+                    peers: book.clone(),
+                },
+            )?;
+            shared.register(r, stream);
+        }
+        for (_, (_, stream)) in joiners {
+            let sh = shared.clone();
+            std::thread::spawn(move || sh.read_loop(stream));
+        }
+        let sh = shared.clone();
+        std::thread::spawn(move || accept_loop(sh, listener));
+        Ok(book
+            .into_iter()
+            .map(|(r, a)| (r as usize, a))
+            .collect())
+    }
+
+    /// Joiner side: bind own listener, dial the seed, `Hello` → `Welcome`
+    /// (the RTT probe for rank 0), keep the seed connection as data path.
+    fn bootstrap_joiner(
+        shared: &Arc<SocketShared>,
+        rank: usize,
+        world: usize,
+        seed_addr: &str,
+        bind_addr: &str,
+    ) -> Result<BTreeMap<usize, String>> {
+        let listener = TcpListener::bind(bind_addr)
+            .with_context(|| format!("rank {rank} binding {bind_addr}"))?;
+        let my_listen = listener.local_addr()?.to_string();
+        let sh = shared.clone();
+        std::thread::spawn(move || accept_loop(sh, listener));
+
+        let mut stream = dial_retry(seed_addr, Instant::now() + JOIN_RETRY)?;
+        let t0 = Instant::now();
+        write_frame(
+            &mut stream,
+            &Frame::Hello { version: WIRE_VERSION, rank: rank as u32, listen: my_listen },
+        )?;
+        let book = match read_one_frame(&mut stream)? {
+            Frame::Welcome { version, world: w, peers } => {
+                negotiate(version)?;
+                ensure!(
+                    w as usize == world,
+                    "seed runs a {w}-rank world, this rank was launched for {world}"
+                );
+                peers
+            }
+            other => bail!("expected Welcome from the seed, got {other:?}"),
+        };
+        let rtt = t0.elapsed().as_micros() as u64;
+        locked(&shared.peer_net).entry(0).or_default().rtt_us = rtt;
+        shared.register(0, &stream);
+        let sh = shared.clone();
+        std::thread::spawn(move || sh.read_loop(stream));
+        Ok(book.into_iter().map(|(r, a)| (r as usize, a)).collect())
+    }
+
+    /// This endpoint's rank.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// World size.
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    /// Frames this rank discarded on CRC mismatch (the socket analogue of
+    /// [`Fabric::corrupt_dropped`](crate::net::Fabric::corrupt_dropped)).
+    pub fn corrupt_dropped(&self) -> u64 {
+        self.shared.corrupt_dropped.load(Ordering::Relaxed)
+    }
+
+    /// Per-peer framed-traffic counters, ascending by peer rank — the
+    /// socket executor journals one `net_peer` event per entry.
+    pub fn peer_net(&self) -> Vec<(usize, PeerNet)> {
+        locked(&self.shared.peer_net)
+            .iter()
+            .map(|(&r, &n)| (r, n))
+            .collect()
+    }
+
+    /// Write `frame` to `to`, dialing lazily on the first send (the
+    /// `PeerHello`/`PeerWelcome` handshake doubles as the RTT probe).
+    fn ship(&mut self, to: usize, frame: &Frame) -> Result<()> {
+        let bytes = frame.encode();
+        // The writers lock is never held across the dial handshake: two
+        // ranks dialing each other simultaneously would each be waiting
+        // for the other's acceptor, which needs this lock to register.
+        if !locked(&self.shared.writers).contains_key(&to) {
+            self.dial(to)?;
+        }
+        {
+            let mut writers = locked(&self.shared.writers);
+            let Some(stream) = writers.get_mut(&to) else {
+                bail!("no write path to rank {to} after dialing");
+            };
+            stream.write_all(&bytes).with_context(|| format!("sending to rank {to}"))?;
+        }
+        let mut pn = locked(&self.shared.peer_net);
+        let e = pn.entry(to).or_default();
+        e.bytes += bytes.len() as u64;
+        e.msgs += 1;
+        Ok(())
+    }
+
+    /// Dial `to` from the address book, handshake, measure RTT, and
+    /// register the connection. If the peer's own simultaneous dial won
+    /// the writer slot, this connection still serves: the peer writes on
+    /// it and our reader thread (spawned on a clone) keeps it alive.
+    fn dial(&self, to: usize) -> Result<()> {
+        let addr = self
+            .peers
+            .get(&to)
+            .with_context(|| format!("rank {to} is not in the address book"))?
+            .clone();
+        let mut stream = dial_retry(&addr, Instant::now() + JOIN_RETRY)?;
+        let t0 = Instant::now();
+        write_frame(
+            &mut stream,
+            &Frame::PeerHello { version: WIRE_VERSION, rank: self.rank as u32 },
+        )?;
+        match read_one_frame(&mut stream)? {
+            Frame::PeerWelcome { version, rank } => {
+                negotiate(version)?;
+                ensure!(
+                    rank as usize == to,
+                    "dialed rank {to} at {addr} but rank {rank} answered"
+                );
+            }
+            other => bail!("expected PeerWelcome from rank {to}, got {other:?}"),
+        }
+        let rtt = t0.elapsed().as_micros() as u64;
+        locked(&self.shared.peer_net).entry(to).or_default().rtt_us = rtt;
+        let reader = stream.try_clone().context("cloning peer stream")?;
+        let sh = self.shared.clone();
+        std::thread::spawn(move || sh.read_loop(reader));
+        self.shared.register(to, &stream);
+        Ok(())
+    }
+
+    fn drain_into_stash(&mut self) {
+        while let Ok(msg) = self.rx.try_recv() {
+            self.stash.push(msg);
+        }
+    }
+}
+
+impl Channel for SocketEndpoint {
+    fn executor_name(&self) -> &'static str {
+        "socket"
+    }
+
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn send(&mut self, to: usize, tag: Tag, payload: Payload) {
+        // Logical metering first, like the fabric: the attempt counts
+        // even if the write then fails (a dead peer surfaces as a recv
+        // timeout on the other side of the protocol, not a lost counter).
+        self.bytes_sent += payload.wire_bytes() as u64;
+        self.msgs_sent += 1;
+        let frame = Frame::Msg { from: self.rank as u32, tag, payload };
+        let _ = self.ship(to, &frame);
+    }
+
+    fn send_unmetered(&mut self, to: usize, tag: Tag, payload: Payload) {
+        let frame = Frame::Replay { from: self.rank as u32, tag, payload };
+        let _ = self.ship(to, &frame);
+    }
+
+    #[allow(clippy::expect_used)] // a hung-up socket world means every peer died: crash loudly
+    fn recv(&mut self, tag: Tag) -> Message {
+        if let Some(i) = self.stash.iter().position(|m| m.tag == tag) {
+            return self.stash.swap_remove(i);
+        }
+        loop {
+            let msg = self
+                .rx
+                .recv()
+                .expect("socket world hung up while a recv was outstanding");
+            if msg.tag == tag {
+                return msg;
+            }
+            self.stash.push(msg);
+        }
+    }
+
+    fn recv_timeout(&mut self, tag: Tag, timeout: Duration) -> Option<Message> {
+        if let Some(i) = self.stash.iter().position(|m| m.tag == tag) {
+            return Some(self.stash.swap_remove(i));
+        }
+        let deadline = Instant::now() + timeout;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match self.rx.recv_timeout(left) {
+                Ok(msg) if msg.tag == tag => return Some(msg),
+                Ok(msg) => self.stash.push(msg),
+                Err(RecvTimeoutError::Timeout) => return None,
+                Err(RecvTimeoutError::Disconnected) => return None,
+            }
+        }
+    }
+
+    fn try_recv_ready(&mut self, tag: Tag) -> Option<Message> {
+        self.drain_into_stash();
+        let i = self.stash.iter().position(|m| m.tag == tag)?;
+        Some(self.stash.swap_remove(i))
+    }
+
+    fn peek_ready(&mut self, tag: Tag) -> Option<Payload> {
+        self.drain_into_stash();
+        self.stash.iter().find(|m| m.tag == tag).map(|m| m.payload.clone())
+    }
+
+    fn stash_back(&mut self, msg: Message) {
+        self.stash.push(msg);
+    }
+
+    fn sweep_stash(&mut self, keep: &mut dyn FnMut(&Tag) -> bool) -> usize {
+        self.drain_into_stash();
+        let before = self.stash.len();
+        self.stash.retain(|m| keep(&m.tag));
+        before - self.stash.len()
+    }
+
+    fn sent_totals(&self) -> (u64, u64) {
+        (self.bytes_sent, self.msgs_sent)
+    }
+
+    fn restore_sent_totals(&mut self, bytes: u64, msgs: u64) {
+        self.bytes_sent = bytes;
+        self.msgs_sent = msgs;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Pcg64;
+
+    fn sample_frames() -> Vec<Frame> {
+        vec![
+            Frame::Hello { version: 1, rank: 3, listen: "127.0.0.1:4242".into() },
+            Frame::Welcome {
+                version: 1,
+                world: 3,
+                peers: vec![
+                    (0, "127.0.0.1:9000".into()),
+                    (1, "127.0.0.1:9001".into()),
+                    (2, "127.0.0.1:9002".into()),
+                ],
+            },
+            Frame::PeerHello { version: 1, rank: 2 },
+            Frame::PeerWelcome { version: 1, rank: 1 },
+            Frame::Msg {
+                from: 1,
+                tag: Tag::new(112, 1029, 7),
+                payload: Payload::F32(vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE]),
+            },
+            Frame::Msg {
+                from: 0,
+                tag: Tag::new(101, 4, 0),
+                payload: Payload::U32(vec![9, 0, u32::MAX]),
+            },
+            Frame::Msg { from: 2, tag: Tag::new(114, 6, 2), payload: Payload::Control },
+            Frame::Replay {
+                from: 1,
+                tag: Tag::new(115, 2048, 3),
+                payload: Payload::F32(vec![0.25; 5]),
+            },
+        ]
+    }
+
+    #[test]
+    fn every_frame_kind_round_trips() {
+        for f in sample_frames() {
+            let wire = f.encode();
+            let body = &wire[8..];
+            assert_eq!(
+                u32::from_le_bytes([wire[0], wire[1], wire[2], wire[3]]) as usize,
+                body.len()
+            );
+            assert_eq!(
+                u32::from_le_bytes([wire[4], wire[5], wire[6], wire[7]]),
+                crc32(body)
+            );
+            assert_eq!(Frame::decode(body).unwrap(), f, "round-trip failed for {f:?}");
+        }
+    }
+
+    #[test]
+    fn truncated_frames_yield_nothing_until_completed() {
+        let wire = sample_frames()[4].encode();
+        let mut r = FrameReader::new();
+        // Every strict prefix yields no frame and counts nothing.
+        assert!(r.push(&wire[..wire.len() - 1]).is_empty());
+        assert_eq!(r.corrupt, 0);
+        // The last byte completes it.
+        let frames = r.push(&wire[wire.len() - 1..]);
+        assert_eq!(frames, vec![sample_frames()[4].clone()]);
+        assert_eq!(r.corrupt, 0);
+    }
+
+    #[test]
+    fn bit_flipped_bodies_are_dropped_and_counted() {
+        // Flip one bit in every body byte position in turn: each flip
+        // must be caught by the CRC, never decoded as a different frame.
+        let clean = sample_frames()[5].encode();
+        let follow = sample_frames()[6].encode();
+        for i in 8..clean.len() {
+            let mut wire = clean.clone();
+            wire[i] ^= 0x40;
+            let mut r = FrameReader::new();
+            let mut got = r.push(&wire);
+            got.extend(r.push(&follow)); // resync on the next frame
+            assert_eq!(r.corrupt, 1, "flip at byte {i} not counted");
+            assert_eq!(got, vec![sample_frames()[6].clone()], "flip at byte {i}");
+        }
+    }
+
+    #[test]
+    fn reassembles_frames_split_at_arbitrary_boundaries() {
+        let frames = sample_frames();
+        let mut wire = Vec::new();
+        for f in &frames {
+            wire.extend_from_slice(&f.encode());
+        }
+        // Deterministic split points (R3: named seed, fixed provenance).
+        let split_seed: u64 = 0x50c7_e75e;
+        let mut rng = Pcg64::seed_from_u64(split_seed);
+        for trial in 0..32 {
+            let mut r = FrameReader::new();
+            let mut got = Vec::new();
+            let mut i = 0usize;
+            while i < wire.len() {
+                let step = 1 + (rng.next_u64() as usize) % 97;
+                let j = (i + step).min(wire.len());
+                got.extend(r.push(&wire[i..j]));
+                i = j;
+            }
+            assert_eq!(got, frames, "trial {trial} reassembly mismatch");
+            assert_eq!(r.corrupt, 0);
+        }
+    }
+
+    #[test]
+    fn implausible_length_tears_the_stream_down() {
+        let mut r = FrameReader::new();
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(u32::MAX).to_le_bytes());
+        wire.extend_from_slice(&0u32.to_le_bytes());
+        wire.extend_from_slice(&[0; 16]);
+        assert!(r.push(&wire).is_empty());
+        assert_eq!(r.corrupt, 1);
+        // The buffer was cleared: a clean frame afterwards decodes fine.
+        assert_eq!(r.push(&sample_frames()[2].encode()), vec![sample_frames()[2].clone()]);
+    }
+
+    #[test]
+    fn version_negotiation_is_an_equality_check() {
+        assert!(negotiate(WIRE_VERSION).is_ok());
+        let err = negotiate(WIRE_VERSION + 1).unwrap_err().to_string();
+        assert!(err.contains("mismatch"), "got: {err}");
+    }
+
+    #[test]
+    fn loopback_world_bootstraps_and_exchanges_tagged_messages() {
+        // Two ranks over real localhost TCP: the seed handshake completes,
+        // both directions deliver tag-matched, the stash discipline holds
+        // (out-of-order tags, sweep, non-blocking polls), and metering is
+        // logical payload bytes — identical to the fabric's rules.
+        let seed = TcpListener::bind("127.0.0.1:0").unwrap();
+        let seed_addr = seed.local_addr().unwrap().to_string();
+        drop(seed); // free the port for the actual seed rank
+        let addr = seed_addr.clone();
+        let t = std::thread::spawn(move || {
+            let mut e1 = SocketEndpoint::bootstrap(1, 2, &addr, "127.0.0.1:0").unwrap();
+            e1.send(0, Tag::new(9, 0, 1), Payload::Control); // out-of-order noise
+            e1.send(0, Tag::new(5, 1, 1), Payload::F32(vec![3.0, -4.0]));
+            let m = Channel::recv(&mut e1, Tag::new(6, 0, 0));
+            assert_eq!(m.payload.u32(), &[7, 8]);
+            assert_eq!(m.from, 0);
+            // Replay frames deliver but never touch the logical meters.
+            let before = e1.sent_totals();
+            e1.send_unmetered(0, Tag::new(115, 512, 1), Payload::F32(vec![1.0]));
+            assert_eq!(e1.sent_totals(), before);
+        });
+        let mut e0 = SocketEndpoint::bootstrap(0, 2, &seed_addr, "127.0.0.1:0").unwrap();
+        let m = Channel::recv(&mut e0, Tag::new(5, 1, 1));
+        assert_eq!(m.payload.f32(), &[3.0, -4.0]);
+        assert_eq!(m.from, 1);
+        e0.send(1, Tag::new(6, 0, 0), Payload::U32(vec![7, 8]));
+        // The noise frame is still stashed and matchable.
+        assert!(Channel::recv_timeout(&mut e0, Tag::new(9, 0, 1), Duration::from_secs(2))
+            .is_some());
+        // The replay frame arrives like any tagged message.
+        assert!(Channel::recv_timeout(&mut e0, Tag::new(115, 512, 1), Duration::from_secs(2))
+            .is_some());
+        // Logical metering: one U32(2) payload = 8 bytes, 1 message.
+        assert_eq!(e0.sent_totals(), (8, 1));
+        // Nothing else pending: polls never block and return None.
+        assert!(Channel::try_recv_ready(&mut e0, Tag::new(99, 0, 0)).is_none());
+        assert_eq!(e0.corrupt_dropped(), 0);
+        // Per-peer framed traffic was tracked for the one peer.
+        let pn = e0.peer_net();
+        assert_eq!(pn.len(), 1);
+        assert_eq!(pn[0].0, 1);
+        assert!(pn[0].1.msgs >= 1);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn sweep_and_peek_follow_the_stash_discipline() {
+        let seed = TcpListener::bind("127.0.0.1:0").unwrap();
+        let seed_addr = seed.local_addr().unwrap().to_string();
+        drop(seed);
+        let addr = seed_addr.clone();
+        let t = std::thread::spawn(move || {
+            let mut e1 = SocketEndpoint::bootstrap(1, 2, &addr, "127.0.0.1:0").unwrap();
+            e1.send(0, Tag::new(7, 1, 1), Payload::Control); // old round
+            e1.send(0, Tag::new(7, 5, 1), Payload::Control); // fresh round
+            e1.send(0, Tag::new(116, 1280, 1), Payload::F32(vec![2.0])); // peekable
+            // Hold the rank open until rank 0 is done reading.
+            assert!(Channel::recv_timeout(&mut e1, Tag::new(1, 0, 0), Duration::from_secs(5))
+                .is_some());
+        });
+        let mut e0 = SocketEndpoint::bootstrap(0, 2, &seed_addr, "127.0.0.1:0").unwrap();
+        // peek leaves the message readable again.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let p = loop {
+            if let Some(p) = Channel::peek_ready(&mut e0, Tag::new(116, 1280, 1)) {
+                break p;
+            }
+            assert!(Instant::now() < deadline, "peek never saw the offer");
+            std::thread::sleep(Duration::from_millis(5));
+        };
+        assert_eq!(p.f32(), &[2.0]);
+        assert!(Channel::peek_ready(&mut e0, Tag::new(116, 1280, 1)).is_some());
+        // Make sure both kind-7 rounds arrived before sweeping.
+        assert!(Channel::recv_timeout(&mut e0, Tag::new(7, 1, 1), Duration::from_secs(2))
+            .map(|m| Channel::stash_back(&mut e0, m))
+            .is_some());
+        assert!(Channel::recv_timeout(&mut e0, Tag::new(7, 5, 1), Duration::from_secs(2))
+            .map(|m| Channel::stash_back(&mut e0, m))
+            .is_some());
+        let dropped = Channel::sweep_stash(&mut e0, &mut |t: &Tag| t.kind != 7 || t.a >= 4);
+        assert_eq!(dropped, 1);
+        assert!(Channel::try_recv_ready(&mut e0, Tag::new(7, 1, 1)).is_none());
+        assert!(Channel::try_recv_ready(&mut e0, Tag::new(7, 5, 1)).is_some());
+        e0.send(1, Tag::new(1, 0, 0), Payload::Control);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn restored_wire_totals_continue_cumulatively() {
+        let seed = TcpListener::bind("127.0.0.1:0").unwrap();
+        let seed_addr = seed.local_addr().unwrap().to_string();
+        drop(seed);
+        let addr = seed_addr.clone();
+        let t = std::thread::spawn(move || {
+            SocketEndpoint::bootstrap(1, 2, &addr, "127.0.0.1:0").unwrap()
+        });
+        let mut e0 = SocketEndpoint::bootstrap(0, 2, &seed_addr, "127.0.0.1:0").unwrap();
+        Channel::restore_sent_totals(&mut e0, 1000, 7);
+        e0.send(1, Tag::new(1, 0, 0), Payload::F32(vec![0.0; 25]));
+        assert_eq!(e0.sent_totals(), (1100, 8));
+        t.join().unwrap();
+    }
+}

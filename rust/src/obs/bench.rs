@@ -32,6 +32,12 @@ pub const OUTER_BYTES: u64 = 8_000_000;
 pub const BENCH_FRAGMENTS: u64 = 4;
 /// Inner-phase seconds available to hide one streamed fragment behind.
 pub const STREAM_COMPUTE_S: f64 = 0.5;
+/// Modeled kernel-loopback hop latency for the socket transport walk.
+pub const LOOPBACK_LATENCY_S: f64 = 50e-6;
+/// Modeled loopback throughput (bytes/s) for the socket transport walk.
+pub const LOOPBACK_BANDWIDTH: f64 = 12.5e9;
+/// Per-frame wire overhead of the socket codec: u32 length + u32 CRC.
+pub const FRAME_HEADER_BYTES: u64 = 8;
 
 fn preset_topo(preset: NetPreset) -> Topology {
     // Config defaults; seed is only consumed by the long-tail preset's
@@ -110,6 +116,15 @@ fn streamed_residual(topo: &Topology, bytes: u64) -> f64 {
     acc / pairs.len() as f64
 }
 
+/// Socket-loopback walk: one symmetric gossip pair exchange of
+/// [`OUTER_BYTES`] over 127.0.0.1, each direction one CRC-framed message
+/// ([`FRAME_HEADER_BYTES`] of header) across the modeled loopback hop.
+/// Pure arithmetic — the regression gate for the 2-process smoke shape.
+fn socket_loopback_pair() -> f64 {
+    let framed = (OUTER_BYTES + FRAME_HEADER_BYTES) as f64;
+    2.0 * (LOOPBACK_LATENCY_S + framed / LOOPBACK_BANDWIDTH)
+}
+
 /// The full baseline: `(metric name, seconds-or-ratio)` rows in emission
 /// order. Deterministic — two calls return identical values.
 pub fn cost_model_baseline() -> Vec<(String, f64)> {
@@ -139,6 +154,8 @@ pub fn cost_model_baseline() -> Vec<(String, f64)> {
     out.push(("outer.noloco_pair_s".to_string(), pair));
     out.push(("outer.diloco_tree_s".to_string(), tree));
     out.push(("outer.speedup".to_string(), tree / pair));
+    // Socket transport on localhost (the CI loopback smoke shape).
+    out.push(("socket.loopback_pair_s".to_string(), socket_loopback_pair()));
     out
 }
 
@@ -208,6 +225,15 @@ mod tests {
         // Single switch, constant 1 ms at 1.25 GB/s: E = 1e-3 + B/1.25e9.
         let expect = 1e-3 + BENCH_BYTES as f64 / 1.25e9;
         assert!((metric("lan.pair_mean_s") - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn socket_loopback_matches_closed_form() {
+        // 2 * (50 us + (8_000_000 + 8) / 12.5 GB/s), exactly.
+        let expect = 2.0 * (50e-6 + 8_000_008.0 / 12.5e9);
+        assert!((metric("socket.loopback_pair_s") - expect).abs() < 1e-15);
+        // Sanity: the loopback pair is far below even the LAN pair.
+        assert!(metric("socket.loopback_pair_s") < metric("lan.pair_mean_s"));
     }
 
     #[test]

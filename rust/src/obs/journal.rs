@@ -67,6 +67,11 @@ pub enum Event {
     /// rules R1–R5), journaled once at hub construction so every trace
     /// self-describes whether its producer passed the determinism pass.
     Analyze { version: u64, findings: u64, clean: bool },
+    /// Per-peer transport traffic on the socket executor, journaled once
+    /// per peer at end of run: framed TCP bytes and frames actually
+    /// written to `peer` (headers included — *not* the logical metering
+    /// `CommStats` compare against) and the last handshake RTT.
+    NetPeer { peer: usize, bytes: u64, msgs: u64, rtt_us: u64 },
 }
 
 impl Event {
@@ -85,6 +90,7 @@ impl Event {
             Event::Ckpt { .. } => "ckpt",
             Event::Resume { .. } => "resume",
             Event::Analyze { .. } => "analyze",
+            Event::NetPeer { .. } => "net_peer",
         }
     }
 
@@ -167,6 +173,12 @@ impl Event {
                 push_u64(&mut s, "findings", *findings);
                 push_bool(&mut s, "clean", *clean);
             }
+            Event::NetPeer { peer, bytes, msgs, rtt_us } => {
+                push_u64(&mut s, "peer", *peer as u64);
+                push_u64(&mut s, "bytes", *bytes);
+                push_u64(&mut s, "msgs", *msgs);
+                push_u64(&mut s, "rtt_us", *rtt_us);
+            }
         }
         s.push('}');
         s
@@ -190,6 +202,7 @@ pub fn required_keys(ev: &str) -> Option<&'static [&'static str]> {
         "ckpt" => &["boundary", "step", "bytes"],
         "resume" => &["boundary", "step"],
         "analyze" => &["version", "findings", "clean"],
+        "net_peer" => &["peer", "bytes", "msgs", "rtt_us"],
         _ => return None,
     })
 }
@@ -312,6 +325,7 @@ mod tests {
             Event::Ckpt { boundary: 6, step: 300, bytes: 65536 },
             Event::Resume { boundary: 6, step: 300 },
             Event::Analyze { version: 1, findings: 0, clean: true },
+            Event::NetPeer { peer: 1, bytes: 1 << 20, msgs: 512, rtt_us: 180 },
         ];
         for (i, ev) in events.iter().enumerate() {
             let line = ev.to_json(1.25, i as u64);

@@ -140,6 +140,7 @@ impl ObsInner {
             Event::Ckpt { .. } => self.bump("ckpts", 1),
             Event::Resume { .. } => self.bump("resumes", 1),
             Event::Analyze { .. } => self.bump("analyzes", 1),
+            Event::NetPeer { .. } => self.bump("net_peers", 1),
         }
         // The journal (and its in-memory mirror) honors the trace level.
         let admit = match self.level {

@@ -15,6 +15,14 @@
 //!   tagged message, collectives run the tree algorithm from
 //!   [`crate::collective`], and gossip reads honour the optional straggler
 //!   timeout.
+//! * [`SocketComm`] — one per OS *process*, wrapping a
+//!   [`SocketEndpoint`]: the same stash discipline over real TCP streams
+//!   (length-prefixed, CRC32-framed — see [`crate::net::socket`]).
+//!
+//! The latter two are one generic impl, [`EndpointComm`]`<E:`
+//! [`Channel`]`>`: every protocol decision (tag packing, stash retention,
+//! collect/stash-back asymmetry, expiry sweeps, unmetered replay) lives
+//! here once, and the transport only moves tagged payloads.
 //!
 //! The protocol is two-phase per synchronization round: every participant
 //! first *offers* its contribution (`offer_reduce` / `offer_state`), then
@@ -79,7 +87,7 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use crate::collective;
-use crate::net::{Endpoint, Payload, Tag};
+use crate::net::{Channel, Endpoint, Payload, SocketEndpoint, Tag};
 use crate::obs::{Event, ObsHub};
 use crate::tensor::Tensor;
 
@@ -869,15 +877,17 @@ impl Communicator for AccountingComm {
 // Fabric communicator (threaded executor, one per worker thread)
 // ---------------------------------------------------------------------
 
-/// Message-passing communicator over one fabric [`Endpoint`].
+/// Message-passing communicator over one tagged-message [`Channel`].
 ///
 /// Logical counters ([`CommStats`]) follow the same once-per-row /
 /// once-per-pair rules as [`AccountingComm`] so summing worker stats
 /// reproduces the grid executor's totals; `bytes_sent` / `msgs_sent` are
-/// left to the fabric's own wire metering (the trainer overwrites them
-/// from [`Fabric::bytes_sent`](crate::net::Fabric::bytes_sent)).
-pub struct FabricComm {
-    ep: Endpoint,
+/// left to the channel's own wire metering (the trainer overwrites them
+/// from [`Fabric::bytes_sent`](crate::net::Fabric::bytes_sent) on the
+/// threaded executor; the socket executor reads
+/// [`Communicator::wire_totals`] per rank).
+pub struct EndpointComm<E: Channel> {
+    ep: E,
     dp: usize,
     /// Straggler tolerance for gossip collects; `None` = wait forever.
     gossip_timeout: Option<Duration>,
@@ -890,10 +900,18 @@ pub struct FabricComm {
     cur_sim: u64,
 }
 
-impl FabricComm {
-    /// Wrap an endpoint. `dp` maps `(stage, replica)` to fabric ranks.
-    pub fn new(ep: Endpoint, dp: usize, gossip_timeout: Option<Duration>) -> FabricComm {
-        FabricComm {
+/// The threaded executor's communicator: one per worker thread, over an
+/// in-process fabric [`Endpoint`].
+pub type FabricComm = EndpointComm<Endpoint>;
+
+/// The socket executor's communicator: one per OS process, over a TCP
+/// [`SocketEndpoint`].
+pub type SocketComm = EndpointComm<SocketEndpoint>;
+
+impl<E: Channel> EndpointComm<E> {
+    /// Wrap a channel. `dp` maps `(stage, replica)` to transport ranks.
+    pub fn new(ep: E, dp: usize, gossip_timeout: Option<Duration>) -> EndpointComm<E> {
+        EndpointComm {
             ep,
             dp,
             gossip_timeout,
@@ -907,11 +925,17 @@ impl FabricComm {
     fn rank_of(&self, stage: usize, replica: usize) -> usize {
         stage * self.dp + replica
     }
+
+    /// Borrow the underlying channel (the socket executor reads per-peer
+    /// wire counters off it for the obs journal).
+    pub fn channel(&self) -> &E {
+        &self.ep
+    }
 }
 
-impl Communicator for FabricComm {
+impl<E: Channel> Communicator for EndpointComm<E> {
     fn executor(&self) -> &'static str {
-        "threaded"
+        self.ep.executor_name()
     }
 
     fn supports_join_bootstrap(&self) -> bool {
@@ -1246,7 +1270,7 @@ impl Communicator for FabricComm {
     }
 
     fn expire_stale(&mut self, before_round: u32) -> u64 {
-        self.ep.sweep_stash(|t| match t.kind {
+        self.ep.sweep_stash(&mut |t| match t.kind {
             K_GOSSIP_D | K_GOSSIP_P | K_HB => t.a >= before_round,
             K_FRAG_D | K_FRAG_P | K_ASYNC_D | K_ASYNC_P => t.a / 256 >= before_round,
             _ => true,
@@ -1267,9 +1291,9 @@ impl Communicator for FabricComm {
     }
 
     fn wire_totals(&self) -> (u64, u64) {
-        // The endpoint meters actual sends; the local stats' wire fields
-        // stay zero on this executor (the trainer back-fills them from
-        // the fabric-wide counters post-run).
+        // The channel meters actual sends; the local stats' wire fields
+        // stay zero on these executors (the trainer back-fills them from
+        // the transport-wide counters post-run).
         self.ep.sent_totals()
     }
 
@@ -1329,14 +1353,14 @@ impl Communicator for FabricComm {
     }
 
     fn restore_stats(&mut self, stats: &CommStats) {
-        // Wire fields live in the fabric's shared counters on this
-        // executor (restored via `restore_wire_totals`); the local copy
+        // Wire fields live in the transport's own counters on these
+        // executors (restored via `restore_wire_totals`); the local copy
         // keeps only the logical counters, as before the crash.
         self.stats = CommStats { bytes_sent: 0, msgs_sent: 0, ..stats.clone() };
     }
 
     fn fault_rng_state(&self) -> Option<(u128, u128)> {
-        Some(self.ep.fault_rng_state())
+        self.ep.fault_rng_state()
     }
 
     fn restore_fault_rng(&mut self, state: u128, inc: u128) {

@@ -434,6 +434,12 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
         self.comm.stats()
     }
 
+    /// The communicator itself — the socket executor reads its wire
+    /// totals and per-peer transport counters after the run.
+    pub fn communicator(&self) -> &C {
+        &self.comm
+    }
+
     /// Attach an observability hub after construction: the threaded
     /// trainer builds one shared hub per run and clones it into every
     /// worker core (and its communicator), so all workers journal into

@@ -31,7 +31,9 @@
 //!   buffers over in memory and *accounts* the traffic (the deterministic
 //!   harness behind every convergence experiment), [`FabricComm`] sends
 //!   real tagged messages over the in-process [`crate::net::Fabric`]
-//!   (latency injection, gossip timeouts, the blocking studies).
+//!   (latency injection, gossip timeouts, the blocking studies), and
+//!   [`SocketComm`] runs the identical protocol over real TCP streams so
+//!   N OS processes train together ([`SocketTrainer`], one per rank).
 //!
 //! [`SimTrainer`] and [`ThreadedTrainer`] are thin constructors over
 //! `TrainerCore<AccountingComm>` (one core owning the whole grid) and
@@ -57,6 +59,7 @@ mod comm;
 mod core;
 mod exec;
 mod sim;
+mod socket_exec;
 mod state;
 mod strategy;
 mod streaming;
@@ -67,13 +70,16 @@ pub use checkpoint::{
     Checkpoint, CkptAssembler, CoreRecord, InflightRecord, LoaderCursor, OfferRecord,
     RankSnapshot, StrategyState, WorkerRecord,
 };
-pub use comm::{AccountingComm, BoundaryTag, Communicator, FabricComm, Wire};
+pub use comm::{
+    AccountingComm, BoundaryTag, Communicator, EndpointComm, FabricComm, SocketComm, Wire,
+};
 pub use self::core::TrainerCore;
 pub use exec::{
     adam_step, bwd_first, bwd_full, bwd_last, bwd_mid, fwd_first, fwd_mid, init_stage,
     loss_full, loss_last, outer_diloco, outer_noloco, AdamScalars,
 };
 pub use sim::SimTrainer;
+pub use socket_exec::{merge_rank_reports, MergedRun, RankReport, SocketTrainer};
 pub use state::WorkerState;
 pub use strategy::{
     for_config as strategy_for_config, BandwidthAwarePairing, ChurnResponse, CommPattern,

@@ -1,0 +1,525 @@
+//! Socket executor — one OS *process* per rank over real TCP, the
+//! deployable counterpart of the threaded executor.
+//!
+//! [`SocketTrainer`] runs exactly one rank of the DP × PP grid: it joins
+//! the TCP world through the seed-node protocol
+//! ([`SocketEndpoint::bootstrap`]), wraps the endpoint in a
+//! [`SocketComm`](super::SocketComm) (the same `EndpointComm` protocol
+//! logic as the threaded executor, over a different
+//! [`Channel`](crate::net::Channel)), and drives the shared
+//! [`TrainerCore`] for its `(stage, replica)`. Route plans, gossip
+//! pairings and live sets derive from the shared seed — same as the
+//! threaded workers — so N processes coordinate without a master.
+//!
+//! What a single process cannot do is fold the whole run's report: each
+//! rank writes a [`RankReport`] (deterministic key=value text, loss bits
+//! and counters in hex) and the launching side merges them with
+//! [`merge_rank_reports`] — the same arithmetic, in the same rank order,
+//! as the threaded aggregation, so a merged socket run's per-step losses
+//! and `CommStats` are bit-identical to the same-seed threaded run.
+//!
+//! Checkpointing is per-rank: each process assembles a single-rank
+//! snapshot file (`<path>.rank<R>`) stamped with the real grid metadata,
+//! and a restarted process resumes from its own file while peers replay
+//! their retained offers over the wire — the cross-process form of the
+//! kill-restart drill.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::net::SocketEndpoint;
+use crate::obs::{Event, ObsHub};
+use crate::runtime::{find_build, Engine, Manifest};
+
+use super::checkpoint::{Checkpoint, CkptAssembler};
+use super::comm::SocketComm;
+use super::core::TrainerCore;
+use super::strategy::{self, ChurnResponse};
+use super::{CommStats, Communicator, TrainReport};
+
+/// Single-rank socket trainer; the process-per-rank executor.
+pub struct SocketTrainer {
+    cfg: TrainConfig,
+    rank: usize,
+    seed_addr: String,
+    bind_addr: String,
+    /// Validation batches per eval point.
+    val_batches: usize,
+    /// Straggler tolerance for gossip collects (see the threaded
+    /// executor's identical knob).
+    gossip_timeout: Option<Duration>,
+    /// Kill-restart drills: stop after the `[ckpt]` cadence covers this
+    /// boundary.
+    halt_after: Option<u64>,
+}
+
+impl SocketTrainer {
+    /// New trainer for `rank`, joining the world at `seed_addr`. Call
+    /// [`SocketTrainer::run`] to execute.
+    pub fn new(cfg: TrainConfig, rank: usize, seed_addr: &str) -> SocketTrainer {
+        SocketTrainer {
+            cfg,
+            rank,
+            seed_addr: seed_addr.to_string(),
+            bind_addr: "127.0.0.1:0".to_string(),
+            val_batches: 4,
+            gossip_timeout: None,
+            halt_after: None,
+        }
+    }
+
+    /// Listener bind address for this rank (default `127.0.0.1:0`, an
+    /// ephemeral loopback port; set a routable address on a real WAN).
+    pub fn with_bind(mut self, addr: &str) -> SocketTrainer {
+        self.bind_addr = addr.to_string();
+        self
+    }
+
+    /// Number of validation batches per eval point (0 disables eval).
+    pub fn with_val_batches(mut self, n: usize) -> SocketTrainer {
+        self.val_batches = n;
+        self
+    }
+
+    /// Straggler-tolerant gossip: skip a peer that does not deliver
+    /// within `t` (the outer step degrades to a smaller group).
+    pub fn with_gossip_timeout(mut self, t: Duration) -> SocketTrainer {
+        self.gossip_timeout = Some(t);
+        self
+    }
+
+    /// Kill-restart drills: stop right after the `[ckpt]` cadence
+    /// snapshots `boundary`.
+    pub fn with_halt_after(mut self, boundary: u64) -> SocketTrainer {
+        self.halt_after = Some(boundary);
+        self
+    }
+
+    /// Join the world, train this rank, and return its [`RankReport`].
+    pub fn run(&self) -> Result<RankReport> {
+        let cfg = &self.cfg;
+        cfg.validate().map_err(anyhow::Error::msg)?;
+        let (dp, pp) = (cfg.topology.dp, cfg.topology.pp);
+        let world = dp * pp;
+        ensure!(
+            self.rank < world,
+            "rank {} outside the {world}-rank world (dp·pp = {dp}·{pp})",
+            self.rank
+        );
+        let churn_response = strategy::for_config(cfg).churn_response();
+        if !cfg.churn.is_empty() && matches!(churn_response, ChurnResponse::Abort) {
+            bail!(
+                "{} cannot change membership mid-run: its global all-reduce has no \
+                 live-subset form; only NoLoCo's gossip re-pairs over survivors",
+                cfg.outer.method
+            );
+        }
+        {
+            let mut m = crate::net::Membership::full(dp);
+            for &(step, e) in cfg.churn.events() {
+                m.apply(e);
+                ensure!(
+                    m.live_count() > 0,
+                    "churn schedule leaves no live replicas after step {step}"
+                );
+            }
+        }
+        // Same defaulting rule as the threaded executor: detection needs
+        // a straggler timeout to degrade collects from a dead peer.
+        let gossip_timeout = match (self.gossip_timeout, cfg.detect.enabled) {
+            (Some(t), _) => Some(t),
+            (None, true) => Some(Duration::from_secs(2)),
+            (None, false) => None,
+        };
+        let dir = find_build(&cfg.artifacts_dir, &cfg.model.name, pp)?;
+        let man = Manifest::load(&dir)?;
+        man.check_against(&cfg.model, pp)?;
+        let per_replica_seqs = (cfg.model.batch_tokens / cfg.model.seq_len / dp).max(man.mb);
+        let num_mb = (per_replica_seqs / man.mb).max(1);
+
+        // analyze: wall-clock-ok — report-envelope timing only; never
+        // feeds the trajectory, losses, or CommStats.
+        let start = Instant::now();
+        let ep = SocketEndpoint::bootstrap(self.rank, world, &self.seed_addr, &self.bind_addr)?;
+        let hub = ObsHub::from_config(&cfg.obs)?;
+        // Per-rank checkpoint files: a process snapshots only its own
+        // rank, so the assembler world is 1·1 and the file is suffixed
+        // `.rank<R>` (the submit call stamps the *real* grid metadata,
+        // which is what a resume validates against).
+        let sink: Option<Arc<CkptAssembler>> = match (&cfg.ckpt.out, cfg.ckpt.every) {
+            (Some(path), every) if every > 0 => Some(Arc::new(CkptAssembler::new(
+                &format!("{path}.rank{}", self.rank),
+                1,
+                1,
+            ))),
+            _ => None,
+        };
+        // A restarted rank resumes from its own single-rank file; peer
+        // state it folded before the cut is replayed by the survivors'
+        // own resumes (or re-requested through the staleness window).
+        let resume: Option<Checkpoint> = match &cfg.ckpt.resume {
+            Some(path) => Some(
+                Checkpoint::load(path).with_context(|| format!("resuming from {path}"))?,
+            ),
+            None => None,
+        };
+
+        let (stage, replica) = (self.rank / dp, self.rank % dp);
+        let comm = SocketComm::new(ep, dp, gossip_timeout);
+        let mut eng = Engine::new(&dir)?;
+        let mut core = TrainerCore::new_single(
+            cfg.clone(),
+            &mut eng,
+            comm,
+            man,
+            stage,
+            replica,
+            num_mb,
+            self.val_batches,
+        )?;
+        core.set_obs(hub.clone());
+        if let Some(sink) = sink {
+            core.set_ckpt_sink(sink);
+        }
+        if let Some(b) = self.halt_after {
+            core.set_halt_after(b);
+        }
+        if let Some(ck) = &resume {
+            core.resume_from(ck)?;
+        }
+        let report = core.run()?;
+
+        // Transport accounting the report cannot see: the endpoint's
+        // logical wire totals (what `CommStats` compare against), CRC
+        // drops, and the per-peer framed-traffic counters.
+        let comm = core.communicator();
+        let (wire_bytes, wire_msgs) = comm.wire_totals();
+        let ep = comm.channel();
+        let corrupt = ep.corrupt_dropped();
+        if corrupt > 0 {
+            hub.count("net.corrupt_dropped", corrupt);
+        }
+        for (peer, pn) in ep.peer_net() {
+            hub.record(
+                cfg.steps as u64,
+                Event::NetPeer { peer, bytes: pn.bytes, msgs: pn.msgs, rtt_us: pn.rtt_us },
+            );
+        }
+
+        Ok(RankReport::from_run(
+            self.rank,
+            world,
+            &report,
+            (wire_bytes, wire_msgs),
+            start.elapsed().as_secs_f64(),
+        ))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rank reports: the cross-process merge protocol
+// ---------------------------------------------------------------------
+
+/// One rank's training result, serializable as deterministic key=value
+/// text (f64 fields as hex bit patterns) so the launching side can merge
+/// N process outputs — and a drill can compare them bit-for-bit against
+/// a threaded run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RankReport {
+    /// This rank.
+    pub rank: usize,
+    /// World size (dp·pp) the rank was launched for.
+    pub world: usize,
+    /// Final validation loss (mean NLL, nats; NaN when eval was off).
+    pub final_val_nll: f64,
+    /// Per-inner-step training loss (NaN for steps this rank's replica
+    /// sat out).
+    pub step_train_loss: Vec<f64>,
+    /// Logical counters plus this rank's wire totals in
+    /// `bytes_sent`/`msgs_sent` — absorbing all ranks' reports
+    /// reproduces the threaded run's aggregate exactly.
+    pub comm: CommStats,
+    /// PJRT executions issued by this rank's engine.
+    pub executions: u64,
+    /// Wall-clock seconds (informational; never compared).
+    pub wall_secs: f64,
+}
+
+impl RankReport {
+    /// Build from a core's per-rank [`TrainReport`] plus the endpoint's
+    /// wire totals.
+    fn from_run(
+        rank: usize,
+        world: usize,
+        report: &TrainReport,
+        wire: (u64, u64),
+        wall_secs: f64,
+    ) -> RankReport {
+        let mut comm = report.comm.clone();
+        comm.bytes_sent = wire.0;
+        comm.msgs_sent = wire.1;
+        RankReport {
+            rank,
+            world,
+            final_val_nll: report.final_val_nll,
+            step_train_loss: report.step_train_loss.clone(),
+            comm,
+            executions: report.executions,
+            wall_secs,
+        }
+    }
+
+    /// Serialize as deterministic key=value text.
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "noloco-rank-report v1");
+        let _ = writeln!(s, "rank={}", self.rank);
+        let _ = writeln!(s, "world={}", self.world);
+        let _ = writeln!(s, "final_val_nll=0x{:016x}", self.final_val_nll.to_bits());
+        let _ = writeln!(s, "executions={}", self.executions);
+        let _ = writeln!(s, "wall_secs=0x{:016x}", self.wall_secs.to_bits());
+        let loss: Vec<String> = self
+            .step_train_loss
+            .iter()
+            .map(|l| format!("0x{:016x}", l.to_bits()))
+            .collect();
+        let _ = writeln!(s, "loss={}", loss.join(","));
+        let c = &self.comm;
+        let _ = writeln!(s, "floats_sent={}", c.floats_sent);
+        let _ = writeln!(s, "activation_hops={}", c.activation_hops);
+        let _ = writeln!(s, "blocking_collectives={}", c.blocking_collectives);
+        let _ = writeln!(s, "pair_exchanges={}", c.pair_exchanges);
+        let _ = writeln!(s, "bytes_sent={}", c.bytes_sent);
+        let _ = writeln!(s, "msgs_sent={}", c.msgs_sent);
+        s
+    }
+
+    /// Parse the [`RankReport::to_text`] form back.
+    pub fn parse(text: &str) -> Result<RankReport> {
+        let mut lines = text.lines();
+        ensure!(
+            lines.next() == Some("noloco-rank-report v1"),
+            "not a v1 rank report"
+        );
+        let mut kv: BTreeMap<&str, &str> = BTreeMap::new();
+        for line in lines {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("malformed rank-report line: {line}"))?;
+            kv.insert(k, v);
+        }
+        let get = |k: &str| kv.get(k).copied().with_context(|| format!("missing key {k}"));
+        let uint = |k: &str| -> Result<u64> {
+            get(k)?.parse().with_context(|| format!("bad integer for {k}"))
+        };
+        let bits = |k: &str| -> Result<f64> {
+            let v = get(k)?;
+            let hex = v.strip_prefix("0x").with_context(|| format!("bad bits for {k}"))?;
+            Ok(f64::from_bits(
+                u64::from_str_radix(hex, 16).with_context(|| format!("bad bits for {k}"))?,
+            ))
+        };
+        let loss_field = get("loss")?;
+        let step_train_loss: Vec<f64> = if loss_field.is_empty() {
+            Vec::new()
+        } else {
+            loss_field
+                .split(',')
+                .map(|v| -> Result<f64> {
+                    let hex = v.strip_prefix("0x").context("bad loss bits")?;
+                    Ok(f64::from_bits(u64::from_str_radix(hex, 16).context("bad loss bits")?))
+                })
+                .collect::<Result<_>>()?
+        };
+        Ok(RankReport {
+            rank: uint("rank")? as usize,
+            world: uint("world")? as usize,
+            final_val_nll: bits("final_val_nll")?,
+            step_train_loss,
+            comm: CommStats {
+                floats_sent: uint("floats_sent")?,
+                activation_hops: uint("activation_hops")?,
+                blocking_collectives: uint("blocking_collectives")?,
+                pair_exchanges: uint("pair_exchanges")?,
+                bytes_sent: uint("bytes_sent")?,
+                msgs_sent: uint("msgs_sent")?,
+            },
+            executions: uint("executions")?,
+            wall_secs: bits("wall_secs")?,
+        })
+    }
+
+    /// Write the text form to `path`.
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_text()).with_context(|| format!("writing {path}"))
+    }
+
+    /// Load a report written by [`RankReport::save`].
+    pub fn load(path: &str) -> Result<RankReport> {
+        RankReport::parse(
+            &std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?,
+        )
+    }
+}
+
+/// A full socket run merged from every rank's report — the fields a
+/// drill compares against a threaded [`TrainReport`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct MergedRun {
+    /// Mean final validation NLL over ranks that evaluated.
+    pub final_val_nll: f64,
+    /// Per-step training loss, averaged over reporting replicas — the
+    /// same fold, in the same rank order, as the threaded aggregation.
+    pub step_train_loss: Vec<f64>,
+    /// Summed counters; `bytes_sent`/`msgs_sent` are wire totals.
+    pub comm: CommStats,
+    /// Summed PJRT executions.
+    pub executions: u64,
+}
+
+/// Merge every rank's report into one run view. Requires a complete,
+/// consistent set: one report per rank of one world, equal step counts.
+/// The fold replays the threaded aggregation exactly — rank order,
+/// finite-only means, `CommStats::absorb` — so the result is
+/// bit-comparable to a same-seed threaded run.
+pub fn merge_rank_reports(reports: &[RankReport]) -> Result<MergedRun> {
+    ensure!(!reports.is_empty(), "no rank reports to merge");
+    let world = reports[0].world;
+    ensure!(
+        reports.len() == world,
+        "expected {world} rank reports, got {}",
+        reports.len()
+    );
+    let mut sorted: Vec<&RankReport> = reports.iter().collect();
+    sorted.sort_by_key(|r| r.rank);
+    let steps = sorted[0].step_train_loss.len();
+    for (i, r) in sorted.iter().enumerate() {
+        ensure!(r.rank == i, "rank {i} report missing (found rank {})", r.rank);
+        ensure!(r.world == world, "rank {} reports world {}, expected {world}", r.rank, r.world);
+        ensure!(
+            r.step_train_loss.len() == steps,
+            "rank {} ran {} steps, rank 0 ran {steps}",
+            r.rank,
+            r.step_train_loss.len()
+        );
+    }
+    let mut comm = CommStats::default();
+    let mut executions = 0u64;
+    let mut step_train_loss = vec![0.0f64; steps];
+    let mut counts = vec![0usize; steps];
+    for r in &sorted {
+        comm.absorb(&r.comm);
+        executions += r.executions;
+        for (i, l) in r.step_train_loss.iter().enumerate() {
+            if l.is_finite() {
+                step_train_loss[i] += l;
+                counts[i] += 1;
+            }
+        }
+    }
+    for (acc, c) in step_train_loss.iter_mut().zip(&counts) {
+        if *c == 0 {
+            *acc = f64::NAN;
+        } else {
+            *acc /= *c as f64;
+        }
+    }
+    let mut val_sum = 0.0;
+    let mut val_n = 0usize;
+    for r in &sorted {
+        if r.final_val_nll.is_finite() {
+            val_sum += r.final_val_nll;
+            val_n += 1;
+        }
+    }
+    let final_val_nll = if val_n == 0 { f64::NAN } else { val_sum / val_n as f64 };
+    Ok(MergedRun { final_val_nll, step_train_loss, comm, executions })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(rank: usize) -> RankReport {
+        RankReport {
+            rank,
+            world: 2,
+            final_val_nll: 2.5 + rank as f64,
+            step_train_loss: vec![1.0 + rank as f64, f64::NAN, 3.0],
+            comm: CommStats {
+                floats_sent: 10 + rank as u64,
+                activation_hops: 1,
+                blocking_collectives: 0,
+                pair_exchanges: 2,
+                bytes_sent: 100 * (rank as u64 + 1),
+                msgs_sent: 5,
+            },
+            executions: 40,
+            wall_secs: 1.25,
+        }
+    }
+
+    #[test]
+    fn rank_report_roundtrips_through_text_bit_exactly() {
+        for rank in 0..2 {
+            let r = sample(rank);
+            let back = RankReport::parse(&r.to_text()).unwrap();
+            // NaN != NaN, so compare bitwise where it matters.
+            assert_eq!(back.rank, r.rank);
+            assert_eq!(back.world, r.world);
+            assert_eq!(back.final_val_nll.to_bits(), r.final_val_nll.to_bits());
+            assert_eq!(back.comm, r.comm);
+            assert_eq!(back.executions, r.executions);
+            assert_eq!(back.wall_secs.to_bits(), r.wall_secs.to_bits());
+            let bits: Vec<u64> = back.step_train_loss.iter().map(|l| l.to_bits()).collect();
+            let want: Vec<u64> = r.step_train_loss.iter().map(|l| l.to_bits()).collect();
+            assert_eq!(bits, want);
+        }
+    }
+
+    #[test]
+    fn empty_loss_vector_roundtrips() {
+        let mut r = sample(0);
+        r.step_train_loss.clear();
+        let back = RankReport::parse(&r.to_text()).unwrap();
+        assert!(back.step_train_loss.is_empty());
+    }
+
+    #[test]
+    fn merge_replays_the_threaded_fold() {
+        let merged = merge_rank_reports(&[sample(1), sample(0)]).unwrap();
+        // Step 0: both finite, mean of 1.0 and 2.0. Step 1: both NaN →
+        // NaN. Step 2: both 3.0.
+        assert_eq!(merged.step_train_loss[0], 1.5);
+        assert!(merged.step_train_loss[1].is_nan());
+        assert_eq!(merged.step_train_loss[2], 3.0);
+        assert_eq!(merged.final_val_nll, 3.0);
+        assert_eq!(merged.comm.floats_sent, 21);
+        assert_eq!(merged.comm.bytes_sent, 300);
+        assert_eq!(merged.executions, 80);
+    }
+
+    #[test]
+    fn merge_rejects_incomplete_or_inconsistent_sets() {
+        assert!(merge_rank_reports(&[]).is_err());
+        assert!(merge_rank_reports(&[sample(0)]).is_err(), "world 2 needs 2 reports");
+        assert!(merge_rank_reports(&[sample(0), sample(0)]).is_err(), "duplicate rank");
+        let mut short = sample(1);
+        short.step_train_loss.pop();
+        assert!(merge_rank_reports(&[sample(0), short]).is_err(), "unequal step counts");
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(RankReport::parse("not a report").is_err());
+        assert!(RankReport::parse("noloco-rank-report v1\nrank=0").is_err(), "missing keys");
+    }
+}

@@ -1,0 +1,330 @@
+//! Cross-transport conformance suite for the [`Communicator`] trait.
+//!
+//! One generic harness, three implementations:
+//!
+//! * [`AccountingComm`] — the grid executor's shared in-process maps;
+//! * [`FabricComm`] — per-thread endpoints over the in-process fabric;
+//! * [`SocketComm`] — per-process endpoints over real loopback TCP
+//!   (the full join handshake runs for every world).
+//!
+//! Every test drives the *shared* contract through `&mut dyn
+//! Communicator`: two-phase offer-before-fold ordering, round retention
+//! inside the staleness window, stash expiry at the `expire_stale`
+//! cutoff, never-blocking heartbeat polls, unmetered replay hooks, and
+//! the once-per-pair metering rules that make summed per-rank stats
+//! reproduce the grid totals.
+//!
+//! Documented divergences that are deliberately *not* asserted beyond
+//! "no longer collectable":
+//!
+//! * the accounting communicator errors on a missing state/fragment
+//!   collect where the endpoint communicators time out to `None`;
+//! * accounting heartbeats are level-triggered (a stored
+//!   high-water-mark) while endpoint polls consume one control message
+//!   per probe.
+//!
+//! Because socket delivery is asynchronous (reader threads feed a
+//! mailbox), ordering matters: retention/expiry assertions always
+//! collect with `wait = true` first — which both proves arrival and, on
+//! the endpoint transports, stashes the payload back — and heartbeat
+//! presence is probed with a bounded retry loop of individually
+//! non-blocking polls.
+
+use std::net::TcpListener;
+use std::time::Duration;
+
+use noloco::net::{Channel, Fabric, SocketEndpoint};
+use noloco::train::{
+    AccountingComm, CommStats, Communicator, EndpointComm, FabricComm, SocketComm,
+};
+
+/// Straggler tolerance for the endpoint worlds: generous enough that a
+/// loopback hop never falsely times out, short enough that the two
+/// deliberate absent-fragment waits stay cheap.
+const TIMEOUT: Duration = Duration::from_millis(1500);
+
+/// Cap on the heartbeat retry loop (each poll is non-blocking).
+const HB_RETRIES: usize = 2000;
+
+const WORLD: usize = 2;
+const STAGE: usize = 0;
+
+// ---------------------------------------------------------------------
+// Harness: one world per Communicator implementation
+// ---------------------------------------------------------------------
+
+trait CommWorld {
+    fn name(&self) -> &'static str;
+    /// What `Communicator::executor` must report for this transport.
+    fn expect_executor(&self) -> &'static str;
+    /// Whether this transport can hand a joiner a live donor's state.
+    fn expect_joinable(&self) -> bool;
+    /// Rank `rank`'s view of the world.
+    fn comm(&mut self, rank: usize) -> &mut dyn Communicator;
+    /// Fold a counter over every rank's stats exactly once (the shared
+    /// accounting world has a single stats block; endpoint worlds sum).
+    fn sum_stat(&self, f: &dyn Fn(&CommStats) -> u64) -> u64;
+}
+
+struct AccountingWorld {
+    comm: AccountingComm,
+}
+
+impl CommWorld for AccountingWorld {
+    fn name(&self) -> &'static str {
+        "accounting"
+    }
+    fn expect_executor(&self) -> &'static str {
+        "sim"
+    }
+    fn expect_joinable(&self) -> bool {
+        true
+    }
+    fn comm(&mut self, _rank: usize) -> &mut dyn Communicator {
+        &mut self.comm
+    }
+    fn sum_stat(&self, f: &dyn Fn(&CommStats) -> u64) -> u64 {
+        f(self.comm.stats())
+    }
+}
+
+struct EndpointWorld<E: Channel> {
+    name: &'static str,
+    executor: &'static str,
+    comms: Vec<EndpointComm<E>>,
+}
+
+impl<E: Channel> CommWorld for EndpointWorld<E> {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+    fn expect_executor(&self) -> &'static str {
+        self.executor
+    }
+    fn expect_joinable(&self) -> bool {
+        false
+    }
+    fn comm(&mut self, rank: usize) -> &mut dyn Communicator {
+        &mut self.comms[rank]
+    }
+    fn sum_stat(&self, f: &dyn Fn(&CommStats) -> u64) -> u64 {
+        self.comms.iter().map(|c| f(c.stats())).sum()
+    }
+}
+
+fn accounting_world() -> Box<dyn CommWorld> {
+    Box::new(AccountingWorld { comm: AccountingComm::new() })
+}
+
+fn fabric_world() -> Box<dyn CommWorld> {
+    let mut fabric = Fabric::new(WORLD);
+    let comms = fabric
+        .take_endpoints()
+        .into_iter()
+        .map(|ep| FabricComm::new(ep, WORLD, Some(TIMEOUT)))
+        .collect();
+    Box::new(EndpointWorld { name: "fabric", executor: "threaded", comms })
+}
+
+/// Bootstrap a 2-rank loopback TCP world: reserve an ephemeral seed
+/// port, run the joiner handshake on a helper thread, seed on ours.
+fn socket_world() -> Box<dyn CommWorld> {
+    let probe = TcpListener::bind("127.0.0.1:0").expect("probe bind");
+    let seed_addr = probe.local_addr().expect("probe addr").to_string();
+    drop(probe); // free the port for the actual seed rank
+    let addr = seed_addr.clone();
+    let joiner = std::thread::spawn(move || {
+        SocketEndpoint::bootstrap(1, WORLD, &addr, "127.0.0.1:0").expect("rank 1 bootstrap")
+    });
+    let e0 = SocketEndpoint::bootstrap(0, WORLD, &seed_addr, "127.0.0.1:0")
+        .expect("rank 0 bootstrap");
+    let e1 = joiner.join().expect("joiner thread");
+    let comms = vec![
+        SocketComm::new(e0, WORLD, Some(TIMEOUT)),
+        SocketComm::new(e1, WORLD, Some(TIMEOUT)),
+    ];
+    Box::new(EndpointWorld { name: "socket", executor: "socket", comms })
+}
+
+fn worlds() -> Vec<Box<dyn CommWorld>> {
+    vec![accounting_world(), fabric_world(), socket_world()]
+}
+
+/// Bounded retry over non-blocking heartbeat polls; `true` if the
+/// heartbeat became visible within the cap.
+fn poll_until(comm: &mut dyn Communicator, peer: usize, boundary: u32) -> bool {
+    for _ in 0..HB_RETRIES {
+        if comm.poll_heartbeat(STAGE, 0, peer, boundary).expect("poll") {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    false
+}
+
+// ---------------------------------------------------------------------
+// Conformance tests (each runs against all three worlds)
+// ---------------------------------------------------------------------
+
+#[test]
+fn executors_report_their_transport_names() {
+    for mut w in worlds() {
+        let name = w.name();
+        let (exec, join) = (w.expect_executor(), w.expect_joinable());
+        let c = w.comm(0);
+        assert_eq!(c.executor(), exec, "{name} executor name");
+        assert_eq!(c.supports_join_bootstrap(), join, "{name} join capability");
+    }
+}
+
+#[test]
+fn absent_round_poll_returns_none_without_blocking() {
+    // Fallback folds consult only what already arrived: a `wait = false`
+    // collect of a never-offered round is `Ok(None)` on every transport,
+    // instantly — no sleep, no timeout, no error.
+    for mut w in worlds() {
+        let name = w.name();
+        let got = w.comm(0).collect_round(STAGE, 0, 1, 7, 0, false).expect("collect");
+        assert!(got.is_none(), "{name}: phantom round offered");
+    }
+}
+
+#[test]
+fn offered_rounds_fold_and_stay_readable_in_window() {
+    // Two-phase ordering: the offer lands first, then the fold collects
+    // it — and a round stays *re-readable* for its whole retention
+    // window (a later boundary may re-admit the same offer at a higher
+    // age), on the maps and on the endpoint stash alike.
+    let (delta, phi) = (vec![1.5f32, -2.0], vec![0.25f32, 8.0]);
+    for mut w in worlds() {
+        let name = w.name();
+        w.comm(1).offer_round(STAGE, 1, &[0], 3, 0, 2, &delta, &phi).expect("offer");
+        let got = w.comm(0).collect_round(STAGE, 0, 1, 3, 0, true).expect("collect");
+        assert_eq!(got, Some((delta.clone(), phi.clone())), "{name}: first fold");
+        let again = w.comm(0).collect_round(STAGE, 0, 1, 3, 0, false).expect("re-collect");
+        assert_eq!(again, Some((delta.clone(), phi.clone())), "{name}: window re-read");
+    }
+}
+
+#[test]
+fn expire_stale_reclaims_rounds_before_cutoff() {
+    let (delta, phi) = (vec![4.0f32], vec![-1.0f32]);
+    for mut w in worlds() {
+        let name = w.name();
+        // Prove arrival first: the waiting collect both confirms delivery
+        // and (on endpoints) stashes the payload back for the sweep.
+        w.comm(1).offer_round(STAGE, 1, &[0], 3, 0, 2, &delta, &phi).expect("offer");
+        let got = w.comm(0).collect_round(STAGE, 0, 1, 3, 0, true).expect("collect");
+        assert!(got.is_some(), "{name}: round 3 never arrived");
+        let removed = w.comm(0).expire_stale(4);
+        assert!(removed >= 1, "{name}: expiry swept nothing");
+        let stale = w.comm(0).collect_round(STAGE, 0, 1, 3, 0, false).expect("stale poll");
+        assert!(stale.is_none(), "{name}: expired round still readable");
+        // The channel survives the sweep: a fresh round flows normally.
+        w.comm(1).offer_round(STAGE, 1, &[0], 5, 0, 2, &delta, &phi).expect("re-offer");
+        let fresh = w.comm(0).collect_round(STAGE, 0, 1, 5, 0, true).expect("fresh collect");
+        assert_eq!(fresh, Some((delta.clone(), phi.clone())), "{name}: post-sweep round");
+    }
+}
+
+#[test]
+fn heartbeat_polls_never_block_and_deliver() {
+    for mut w in worlds() {
+        let name = w.name();
+        // Nothing sent yet: the poll answers false immediately.
+        let silent = w.comm(0).poll_heartbeat(STAGE, 0, 1, 9).expect("silent poll");
+        assert!(!silent, "{name}: phantom heartbeat");
+        w.comm(1).send_heartbeat(STAGE, 1, &[0], 9).expect("send heartbeat");
+        assert!(poll_until(w.comm(0), 1, 9), "{name}: heartbeat never arrived");
+    }
+}
+
+#[test]
+fn replay_hooks_are_unmetered_and_refill_the_state() {
+    // Checkpoint replay re-injects in-flight offers without perturbing a
+    // single counter: neither the logical stats nor the wire totals may
+    // move, yet the replayed round must fold normally at the peer.
+    let (delta, phi) = (vec![7.0f32, 7.5], vec![0.0f32, -3.0]);
+    for mut w in worlds() {
+        let name = w.name();
+        let stats_before = w.comm(1).stats().clone();
+        let wire_before = w.comm(1).wire_totals();
+        w.comm(1).replay_round(STAGE, 1, &[0], 2, 0, &delta, &phi).expect("replay round");
+        w.comm(1).replay_heartbeat(STAGE, 1, &[0], 5).expect("replay heartbeat");
+        assert_eq!(w.comm(1).stats(), &stats_before, "{name}: replay metered stats");
+        assert_eq!(w.comm(1).wire_totals(), wire_before, "{name}: replay metered wire");
+        let got = w.comm(0).collect_round(STAGE, 0, 1, 2, 0, true).expect("collect");
+        assert_eq!(got, Some((delta.clone(), phi.clone())), "{name}: replayed round lost");
+        assert!(poll_until(w.comm(0), 1, 5), "{name}: replayed heartbeat lost");
+    }
+}
+
+#[test]
+fn fragment_gc_drops_offers_two_rounds_back() {
+    // A fragment from round r is collectable through round r + 1 and
+    // gone once the world reaches r + 2 (sender-side retention on the
+    // accounting maps, receiver-side consumption + expiry sweep on the
+    // endpoints). "Gone" is transport-flavoured — an error on the
+    // accounting maps, a timeout `None` on the endpoints — so the
+    // conformance claim is only: never `Some`.
+    let (d1, p1) = (vec![1.0f32], vec![2.0f32]);
+    let (d3, p3) = (vec![3.0f32], vec![4.0f32]);
+    for mut w in worlds() {
+        let name = w.name();
+        w.comm(1).offer_fragment(STAGE, 1, &[0], 1, 0, &d1, &p1).expect("offer seq 1");
+        let got = w.comm(0).collect_fragment(STAGE, 0, 1, 1, 0).expect("collect seq 1");
+        assert_eq!(got, Some((d1.clone(), p1.clone())), "{name}: live fragment");
+        // Two rounds later: the new offer triggers sender-side GC, the
+        // boundary sweep reclaims any stashed leftovers.
+        w.comm(1).offer_fragment(STAGE, 1, &[0], 3, 0, &d3, &p3).expect("offer seq 3");
+        w.comm(0).expire_stale(2);
+        let stale = w.comm(0).collect_fragment(STAGE, 0, 1, 1, 0);
+        assert!(
+            !matches!(stale, Ok(Some(_))),
+            "{name}: fragment survived two rounds past its offer"
+        );
+        let live = w.comm(0).collect_fragment(STAGE, 0, 1, 3, 0).expect("collect seq 3");
+        assert_eq!(live, Some((d3.clone(), p3.clone())), "{name}: current fragment");
+    }
+}
+
+#[test]
+fn gossip_state_exchanges_symmetrically() {
+    // One full outer gossip round: both sides offer, both sides fold the
+    // partner's (Δ, φ) — the §4 two-phase exchange, on every transport.
+    let (d0, p0) = (vec![10.0f32, 11.0], vec![12.0f32, 13.0]);
+    let (d1, p1) = (vec![20.0f32, 21.0], vec![22.0f32, 23.0]);
+    for mut w in worlds() {
+        let name = w.name();
+        w.comm(0).offer_state(STAGE, 0, &[1], 1, &d0, &p0).expect("rank 0 offer");
+        w.comm(1).offer_state(STAGE, 1, &[0], 1, &d1, &p1).expect("rank 1 offer");
+        let at0 = w.comm(0).collect_state(STAGE, 0, 1, 1).expect("rank 0 collect");
+        assert_eq!(at0, Some((d1.clone(), p1.clone())), "{name}: rank 0 fold");
+        let at1 = w.comm(1).collect_state(STAGE, 1, 0, 1).expect("rank 1 collect");
+        assert_eq!(at1, Some((d0.clone(), p0.clone())), "{name}: rank 1 fold");
+    }
+}
+
+#[test]
+fn offer_metering_counts_pairs_once_across_ranks() {
+    // The once-per-pair rule: only the lower-numbered side of a symmetric
+    // exchange counts the pair, so summing every rank's stats reproduces
+    // the grid executor's totals instead of doubling them.
+    let (delta, phi) = (vec![1.0f32, 2.0, 3.0], vec![4.0f32, 5.0, 6.0]);
+    let n = (delta.len() + phi.len()) as u64;
+    for mut w in worlds() {
+        let name = w.name();
+        w.comm(0).offer_round(STAGE, 0, &[1], 1, 0, 2, &delta, &phi).expect("rank 0 offer");
+        w.comm(1).offer_round(STAGE, 1, &[0], 1, 0, 2, &delta, &phi).expect("rank 1 offer");
+        assert_eq!(
+            w.sum_stat(&|s| s.pair_exchanges),
+            1,
+            "{name}: symmetric pair counted once"
+        );
+        assert_eq!(
+            w.sum_stat(&|s| s.floats_sent),
+            2 * n,
+            "{name}: both sides ship one (Δ, φ) row"
+        );
+    }
+}

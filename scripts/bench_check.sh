@@ -137,6 +137,15 @@ out["outer.noloco_pair_s"] = pair
 out["outer.diloco_tree_s"] = tree
 out["outer.speedup"] = tree / pair
 
+# Socket transport on localhost (the CI loopback smoke shape): one
+# symmetric framed gossip pair over the modeled kernel loopback hop.
+LOOPBACK_LATENCY_S = 50e-6
+LOOPBACK_BANDWIDTH = 12.5e9
+FRAME_HEADER_BYTES = 8
+out["socket.loopback_pair_s"] = 2.0 * (
+    LOOPBACK_LATENCY_S + (OUTER_BYTES + FRAME_HEADER_BYTES) / LOOPBACK_BANDWIDTH
+)
+
 print(json.dumps({"v": 1, "metrics": out}, separators=(",", ":")))
 PY
 }

@@ -54,6 +54,7 @@ REQUIRED = {
     "drain": ["outer_idx", "bytes", "msgs"],
     "ckpt": ["boundary", "step", "bytes"],
     "resume": ["boundary", "step"],
+    "net_peer": ["peer", "bytes", "msgs", "rtt_us"],
 }
 ENVELOPE = ("v", "wall", "sim", "ev")
 
