@@ -33,16 +33,16 @@ const ROUNDS: u64 = 200;
 const STRAGGLER: usize = WORLD - 1;
 
 /// One sweep point: mean per-worker idle per boundary under both
-/// disciplines, with node [`STRAGGLER`] slowed `mult`× in link and
-/// compute — the shared `bench::lockstep_vs_async_idle` walk, so the
-/// example and `bench_topo`'s boundary-idle section cannot drift.
-fn idle_at(mult: f64, payload: u64, seed: u64) -> (f64, f64) {
+/// disciplines at `world` workers, with the last node slowed `mult`× in
+/// link and compute — the shared `bench::lockstep_vs_async_idle` walk,
+/// so the example and `bench_topo`'s boundary-idle section cannot drift.
+fn idle_at(world: usize, rounds: u64, mult: f64, payload: u64, seed: u64) -> (f64, f64) {
     let cfg = NetTopoConfig {
         preset: NetPreset::MultiRegionWan,
         regions: 3,
         ..NetTopoConfig::default()
     };
-    lockstep_vs_async_idle(&cfg, WORLD, payload, ROUNDS, Some((STRAGGLER, mult)), seed)
+    lockstep_vs_async_idle(&cfg, world, payload, rounds, Some((world - 1, mult)), seed)
 }
 
 /// Quadratic consensus with one lagging replica: replica [`STRAGGLER`]'s
@@ -179,7 +179,7 @@ fn main() -> anyhow::Result<()> {
     let mut csv = String::from("mult,lockstep_idle,async_idle,reduction\n");
     let mut gaps = Vec::new();
     for mult in [1.0, 2.0, 4.0, 8.0, 16.0] {
-        let (lock, asy) = idle_at(mult, payload, 11);
+        let (lock, asy) = idle_at(WORLD, ROUNDS, mult, payload, 11);
         assert!(
             asy <= lock + 1e-12,
             "async idle must never exceed lockstep: {asy} vs {lock} at {mult}x"
@@ -207,6 +207,36 @@ fn main() -> anyhow::Result<()> {
          the async boundary bills only its pair (gap grows {:.2}s -> {:.2}s).\n",
         gaps.first().unwrap(),
         gaps.last().unwrap()
+    );
+
+    // ---- world-size scaling: one straggler at 24 vs 1000 replicas ----
+    //
+    // The lockstep barrier's bill for one 8× straggler is charged to
+    // *every* worker, so the per-worker idle barely moves with world
+    // size; the async discipline bills only the straggler's pair, so
+    // its per-worker idle *shrinks* as the fleet grows — the O(1000)
+    // regime is where wait-only-for-your-pair pays most.
+    let mut table = Table::new(&["world", "lockstep idle (s)", "async idle (s)", "reduction"]);
+    let mut by_world = Vec::new();
+    for world in [24usize, 256, 1000] {
+        let (lock, asy) = idle_at(world, 50, 8.0, payload, 11);
+        assert!(asy <= lock + 1e-12, "async idle exceeded lockstep at world {world}");
+        table.row(&[
+            world.to_string(),
+            format!("{lock:.3}"),
+            format!("{asy:.3}"),
+            format!("{:.3}", 1.0 - asy / lock),
+        ]);
+        by_world.push((lock, asy));
+    }
+    let md = table.to_markdown();
+    println!("## One 8x straggler across world sizes\n\n{md}");
+    std::fs::write(format!("{out}/scale.md"), &md)?;
+    let (_, asy_small) = by_world[0];
+    let (_, asy_large) = by_world[by_world.len() - 1];
+    assert!(
+        asy_large < asy_small,
+        "per-worker async idle should shrink with world size: {asy_large} vs {asy_small}"
     );
 
     // ---- bounded-staleness convergence on the quadratic harness ----

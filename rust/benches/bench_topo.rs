@@ -244,6 +244,44 @@ fn boundary_idle_comparison() {
     }
 }
 
+/// The O(1000)-replica scale regime (ROADMAP item 3): the shared-seed
+/// hot-path derivations and the gossip pair cost stay cheap as the
+/// world grows 24 → 1000, while the blocking tree's critical path keeps
+/// deepening — the same regime the `noloco perf` scale ladder pins
+/// analytically in `BENCH_steps.json`.
+fn thousand_replica_scale() {
+    section("O(1000)-replica scale regime (WAN, 8 MiB (Δ, φ))");
+    let dp = 1000usize;
+    let payload = 2u64 * (4 << 20);
+    let cfg = NetTopoConfig {
+        preset: NetPreset::MultiRegionWan,
+        regions: 3,
+        ..NetTopoConfig::default()
+    };
+    let live: Vec<usize> = (0..dp).collect();
+    bench_row("UniformPairing::draw, dp=1000", || {
+        std::hint::black_box(UniformPairing.draw(&live, 2, 0, 1234, 9));
+    });
+    bench_row("RoutePlan::for_step_over, dp=1000 pp=1", || {
+        let p = RoutePlan::for_step_over(Routing::Random, &live, 1000, 1, 9, 1234);
+        std::hint::black_box(p.boundaries());
+    });
+    // Per-round sync at n = 1000: the gossip pair's cost is O(1) in
+    // world size, the blocking tree keeps charging for its depth.
+    let mut clock = SimClock::with_topology(cfg.build(dp, 12), 3);
+    let tree = tree_all_reduce_time_bytes(&mut clock, payload);
+    let mut clock = SimClock::with_topology(cfg.build(dp, 13), 5);
+    let pair = pair_average_time_bytes(&mut clock, None, payload);
+    println!(
+        "  tree all-reduce n=1000: {tree:.4} s   gossip pair mean: {pair:.4} s   ratio {:.1}x",
+        tree / pair
+    );
+    assert!(
+        pair < tree,
+        "gossip must undercut the 1000-node blocking tree: {pair} vs {tree}"
+    );
+}
+
 fn main() {
     println!("bench_topo — WAN topology, payload-aware collectives, elastic membership");
     transfer_sampling();
@@ -252,4 +290,5 @@ fn main() {
     pairing_comparison();
     streaming_overlap_comparison();
     boundary_idle_comparison();
+    thousand_replica_scale();
 }

@@ -89,15 +89,20 @@ fn contains_token(code: &str, pat: &str) -> bool {
 
 // ---------------------------------------------------------------- R1
 
-const R1_PATTERNS: &[&str] = &["SystemTime::now", "Instant::now", "thread_rng", "rand::"];
+const R1_PATTERNS: &[&str] =
+    &["SystemTime::now", "Instant::now", "thread_rng", "rand::", "available_parallelism"];
 
 /// Files where wall-clock / ambient randomness is legitimate by role:
 /// obs (wall stamps), bench (measurement), main.rs (CLI wall-clock
 /// envelope), net/fabric.rs and net/socket.rs (the real-time transports
 /// — their latency models, dial retries, handshake RTTs and timeouts
 /// are wall-clock by design and never feed the deterministic
-/// trajectory).
-const R1_ALLOW: &[&str] = &["obs/", "bench/", "main.rs", "net/fabric.rs", "net/socket.rs"];
+/// trajectory), and train/par.rs (the exec pool's `--threads 0`
+/// auto-detect reads the machine width — a throughput knob only; the
+/// pool's submission-order contract keeps the trajectory identical at
+/// any thread count).
+const R1_ALLOW: &[&str] =
+    &["obs/", "bench/", "main.rs", "net/fabric.rs", "net/socket.rs", "train/par.rs"];
 
 /// R1: no wall-clock reads or ambient randomness on deterministic paths.
 pub fn r1_wall_clock(rel: &str, lines: &[Line], out: &mut Vec<Finding>) {
@@ -480,7 +485,11 @@ pub fn r4_protocol(rel: &str, lines: &[Line], fns: &[FnSpan], out: &mut Vec<Find
 const R5_FILES: &[&str] =
     &["train/strategy.rs", "train/streaming.rs", "train/boundary.rs", "train/comm.rs"];
 const R5_REDUCERS: &[&str] = &[".sum()", ".sum::<", ".product()", ".product::<"];
-const R5_APPROVED: &[&str] = &["fold_noloco_weighted"];
+/// `fold_noloco_fused` is the single fused Eq. 2–3 implementation (Δ
+/// apply, φ mix, θ treatment in one fixed-order elementwise pass);
+/// `fold_noloco_weighted` is its φ/δ-only wrapper. Every strategy fold
+/// routes through these two.
+const R5_APPROVED: &[&str] = &["fold_noloco_fused", "fold_noloco_weighted"];
 
 /// R5: param-space reductions on the fold path go through the approved
 /// fixed-association helpers — ad-hoc iterator sums re-associate and
@@ -558,6 +567,16 @@ mod tests {
         assert_eq!(rules("net/x.rs", bad), vec!["R1"]);
         let ok = "fn step() {\n    let r = operand::random();\n}\n";
         assert!(rules("net/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn r1_thread_autodetect_is_perf_knob_only_in_pool() {
+        // Machine-width detection is ambient state: denied on
+        // deterministic paths, legitimate inside the exec pool (whose
+        // ordering contract keeps thread count out of the trajectory).
+        let bad = "fn plan() {\n    let n = std::thread::available_parallelism().map_or(1, |n| n.get());\n}\n";
+        assert_eq!(rules("train/x.rs", bad), vec!["R1"]);
+        assert!(rules("train/par.rs", bad).is_empty(), "the pool is allowlisted");
     }
 
     // -------------------------------------------------------- R2
@@ -648,6 +667,8 @@ mod tests {
     fn r5_passes_approved_helper_and_annotation() {
         let approved = "fn fold_noloco_weighted(xs: &[f32]) -> f64 {\n    xs.iter().map(|x| *x as f64).sum::<f64>()\n}\n";
         assert!(rules("train/boundary.rs", approved).is_empty());
+        let fused = "fn fold_noloco_fused(xs: &[f32]) -> f64 {\n    xs.iter().map(|x| *x as f64).sum::<f64>()\n}\n";
+        assert!(rules("train/boundary.rs", fused).is_empty(), "the fused kernel is approved");
         let annotated = "fn count(&self) -> usize {\n    // analyze: float-ok — integer byte accounting, not param space\n    self.msgs.iter().map(|m| m.bytes).sum()\n}\n";
         assert!(rules("train/comm.rs", annotated).is_empty());
     }

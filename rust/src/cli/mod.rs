@@ -32,7 +32,7 @@ const VALUE_KEYS: &[&str] = &[
     "trace-out", "metrics-out", "trace-level", "ckpt-out", "ckpt-every", "resume",
     "fault-drop", "fault-dup", "fault-delay", "fault-delay-secs", "fault-reorder",
     "fault-corrupt", "executor", "halt-after", "format", "root", "transport",
-    "seed-addr", "rank", "bind", "report-out", "val-batches",
+    "seed-addr", "rank", "bind", "report-out", "val-batches", "threads",
 ];
 
 impl Args {
@@ -264,6 +264,9 @@ pub fn train_config_from(args: &Args) -> Result<crate::config::TrainConfig, Stri
     if let Some(p) = args.opt("report-out") {
         cfg.transport.report_out = Some(p.to_string());
     }
+    if let Some(v) = args.opt_usize("threads")? {
+        cfg.perf.threads = v;
+    }
     // --set model.hidden=128 style overrides, applied last.
     if !args.sets.is_empty() {
         let mut text = String::new();
@@ -448,6 +451,28 @@ mod tests {
         // A rank outside the dp·pp world fails validation up front.
         let a = parse(&["run", "--transport", "socket", "--rank", "9"]);
         assert!(train_config_from(&a).unwrap_err().contains("transport.rank"));
+    }
+
+    #[test]
+    fn perf_flags_plumb_through() {
+        // Default is the serial walk.
+        let cfg = train_config_from(&parse(&["train"])).unwrap();
+        assert_eq!(cfg.perf.threads, 1);
+        assert!(!cfg.perf.parallel_requested());
+        let a = parse(&["train", "--threads", "8"]);
+        let cfg = train_config_from(&a).unwrap();
+        assert_eq!(cfg.perf.threads, 8);
+        assert!(cfg.perf.parallel_requested());
+        // 0 = auto-detect; the pool resolves it to the machine width.
+        let a = parse(&["train", "--threads", "0"]);
+        let cfg = train_config_from(&a).unwrap();
+        assert!(cfg.perf.parallel_requested());
+        // The [perf] config-file path feeds the same knob.
+        let a = parse(&["train", "--set", "perf.threads=4"]);
+        assert_eq!(train_config_from(&a).unwrap().perf.threads, 4);
+        // Implausible counts are a config error, not a silent hang.
+        let a = parse(&["train", "--threads", "100000"]);
+        assert!(train_config_from(&a).unwrap_err().contains("perf.threads"));
     }
 
     #[test]

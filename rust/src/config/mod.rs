@@ -635,6 +635,38 @@ impl FaultsConfig {
     }
 }
 
+/// Host-side performance knobs (the `[perf]` TOML section / `--threads`
+/// CLI flag). Thread count is a *throughput* knob, never a determinism
+/// input: the grid executor's parallel inner walk dispatches replicas to
+/// a worker pool but applies every result in the exact serial order, so
+/// any thread count reproduces the single-thread trajectory bit-for-bit
+/// (pinned by the parallel-equivalence golden tests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PerfConfig {
+    /// Worker threads for the grid executor's inner phase
+    /// (`perf.threads` / `--threads`). `1` = serial walk (the default);
+    /// `0` = auto-detect from the machine's available parallelism
+    /// (resolved inside the pool, where the analyzer's R1 allowance for
+    /// ambient machine inputs is scoped). Only the `pp = 1` data-parallel
+    /// regime fans out — pipeline routing crosses DP columns mid-step, so
+    /// deeper grids always take the serial walk.
+    pub threads: usize,
+}
+
+impl Default for PerfConfig {
+    fn default() -> PerfConfig {
+        PerfConfig { threads: 1 }
+    }
+}
+
+impl PerfConfig {
+    /// Whether the parallel inner walk is requested (auto counts: `0`
+    /// resolves to the machine width, which may still be 1).
+    pub fn parallel_requested(&self) -> bool {
+        self.threads != 1
+    }
+}
+
 /// Which channel carries inter-rank traffic on the real executors.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum TransportKind {
@@ -784,6 +816,9 @@ pub struct TrainConfig {
     /// Socket-transport knobs for the process-per-rank executor (the
     /// `[transport]` section; only the `run` subcommand reads these).
     pub transport: TransportConfig,
+    /// Host-side performance knobs (the `[perf]` section): inner-phase
+    /// worker threads for the grid executor.
+    pub perf: PerfConfig,
 }
 
 impl TrainConfig {
@@ -876,6 +911,7 @@ impl TrainConfig {
                 "transport.rank" => set_usize(&mut self.transport.rank, v),
                 "transport.bind" => set_string(&mut self.transport.bind, v),
                 "transport.report_out" => set_opt_string(&mut self.transport.report_out, v),
+                "perf.threads" => set_usize(&mut self.perf.threads, v),
                 "obs.trace_level" => match v.as_str().and_then(TraceLevel::parse) {
                     Some(l) => {
                         self.obs.trace_level = l;
@@ -1052,6 +1088,13 @@ impl TrainConfig {
                     self.topology.pp
                 ));
             }
+        }
+        if self.perf.threads > 4096 {
+            return Err(format!(
+                "perf.threads ({}) is implausibly large; use 0 to auto-detect \
+                 the machine's parallelism",
+                self.perf.threads
+            ));
         }
         if self.ckpt.out.is_some() && self.ckpt.every == 0 {
             return Err(

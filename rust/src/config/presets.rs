@@ -12,8 +12,8 @@
 
 use super::{
     CkptConfig, Dataset, DetectConfig, FaultsConfig, Method, ModelConfig, NetTopoConfig,
-    ObsConfig, OuterConfig, PairingMode, Routing, StreamConfig, SyncMode, TopologyConfig,
-    TrainConfig, TransportConfig,
+    ObsConfig, OuterConfig, PairingMode, PerfConfig, Routing, StreamConfig, SyncMode,
+    TopologyConfig, TrainConfig, TransportConfig,
 };
 use crate::net::topo::ChurnSchedule;
 
@@ -60,6 +60,7 @@ fn base(model: ModelConfig, steps: usize, warmup: usize) -> TrainConfig {
         ckpt: CkptConfig::default(),
         faults: FaultsConfig::default(),
         transport: TransportConfig::default(),
+        perf: PerfConfig::default(),
     }
 }
 

@@ -14,6 +14,7 @@
 //!                        assert the trajectory is bit-identical
 //! * `obs-smoke`        — emit a small sample trace journal (schema tooling)
 //! * `bench-baseline`   — write the deterministic cost-model baseline JSON
+//! * `perf`             — write the 64/256/1000-replica scale ladder JSON
 //! * `analyze`          — static determinism/protocol analysis of this tree
 //!                        (rules R1–R5; exits nonzero on findings)
 //!
@@ -52,6 +53,7 @@ fn main() {
         "drill" => cmd_drill(&args),
         "obs-smoke" => cmd_obs_smoke(&args),
         "bench-baseline" => cmd_bench_baseline(&args),
+        "perf" => cmd_perf(&args),
         "analyze" => cmd_analyze(&args),
         "help" | "--help" | "-h" => {
             print_help();
@@ -84,6 +86,7 @@ fn print_help() {
            drill            kill-restart drill: ckpt, drop state, resume, compare\n\
            obs-smoke        emit a small sample trace journal (--out FILE)\n\
            bench-baseline   write the cost-model baseline JSON (--out FILE)\n\
+           perf             write the replica scale-ladder JSON (--out FILE)\n\
            analyze          static determinism/protocol analysis (R1–R5)\n\n\
          OPTIONS:\n\
            --preset NAME        preset (default: tiny); see `noloco presets`\n\
@@ -111,6 +114,8 @@ fn print_help() {
            --overlap on|off     streaming: fold fragments one boundary late\n\
            --staleness S        async boundary: admit peer state up to S-1 boundaries old\n\
            --stash-age N        sweep uncollected sync payloads after N boundaries (0 = never)\n\
+           --threads N          grid executor, pp=1: pooled inner-phase engine threads\n\
+                                (0 = auto-detect, 1 = serial; trajectory is bit-identical)\n\
            --detect on|off      heartbeat failure detection (NoLoCo)\n\
            --detect-misses K    consecutive missed heartbeats before a peer is declared dead\n\
            --trace-out FILE     write the structured run journal (JSONL)\n\
@@ -770,6 +775,20 @@ fn cmd_bench_baseline(args: &Args) -> anyhow::Result<()> {
     let out = args.opt("out").unwrap_or("BENCH_baseline.json");
     std::fs::write(out, noloco::obs::bench::baseline_json())?;
     println!("cost-model baseline written to {out}");
+    Ok(())
+}
+
+/// Write the deterministic 64/256/1000-replica scale ladder
+/// (`BENCH_steps.json`): steps/sec, bytes/boundary and modeled peak RSS
+/// per rung. Same gate as the cost-model baseline
+/// (`scripts/bench_check.sh`, >10% drift fails).
+fn cmd_perf(args: &Args) -> anyhow::Result<()> {
+    let out = args.opt("out").unwrap_or("BENCH_steps.json");
+    std::fs::write(out, noloco::obs::bench::steps_json())?;
+    for (k, v) in noloco::obs::bench::steps_ladder() {
+        println!("{k} = {v}");
+    }
+    println!("scale ladder written to {out}");
     Ok(())
 }
 

@@ -15,6 +15,19 @@
 //! lan / wan / hier presets at their config defaults, adjacent gossip
 //! pairs `(0,1) … (22,23)`, and a deterministic staggered compute vector
 //! `0.25 + 0.05·(w mod 7)` for the idle-time model.
+//!
+//! A second family (`BENCH_steps.json`, [`steps_json`]) is the **scale
+//! ladder**: the same analytic discipline applied to the O(1000)-replica
+//! throughput trajectory. For `dp ∈ {64, 256, 1000}` it emits
+//! `steps_per_sec` (fleet replica-steps per second under the modeled
+//! per-step compute plus the amortized NoLoCo gossip boundary — linear
+//! in `dp` because the pair exchange is O(1) in world size, the paper's
+//! headline), `bytes_per_boundary` (total wire bytes of one outer
+//! boundary, exactly what [`crate::train::AccountingComm`] meters for a
+//! full pairing round — pinned by test), and `peak_rss_mib` (modeled
+//! grid-executor residency: six per-replica state vectors plus the
+//! shared fold scratch). `noloco perf` writes the file;
+//! `scripts/bench_check.sh` gates both families.
 
 use std::fmt::Write as _;
 
@@ -159,12 +172,12 @@ pub fn cost_model_baseline() -> Vec<(String, f64)> {
     out
 }
 
-/// Serialize [`cost_model_baseline`] into the `BENCH_baseline.json`
-/// shape: `{"v":1,"metrics":{"<name>":<value>,…}}` (floats in Rust's
-/// shortest round-trip form, newline-terminated).
-pub fn baseline_json() -> String {
+/// Serialize metric rows into the baseline-file shape:
+/// `{"v":1,"metrics":{"<name>":<value>,…}}` (floats in Rust's shortest
+/// round-trip form, newline-terminated).
+fn metrics_json(rows: &[(String, f64)]) -> String {
     let mut s = String::from("{\"v\":1,\"metrics\":{");
-    for (i, (k, v)) in cost_model_baseline().iter().enumerate() {
+    for (i, (k, v)) in rows.iter().enumerate() {
         if i > 0 {
             s.push(',');
         }
@@ -172,6 +185,83 @@ pub fn baseline_json() -> String {
     }
     s.push_str("}}\n");
     s
+}
+
+/// Serialize [`cost_model_baseline`] into the `BENCH_baseline.json` shape.
+pub fn baseline_json() -> String {
+    metrics_json(&cost_model_baseline())
+}
+
+// ---------------------------------------------------------------------------
+// Scale ladder (`BENCH_steps.json`) — the O(1000)-replica throughput
+// trajectory. Pure closed forms so the Python mirror in
+// `scripts/bench_check.sh` can recompute them without a Rust toolchain;
+// the bytes row is additionally pinned against the real
+// `AccountingComm` meter by a unit test below.
+// ---------------------------------------------------------------------------
+
+/// Replica counts of the scale ladder.
+pub const STEPS_LADDER: [u64; 3] = [64, 256, 1000];
+/// Outer-state floats per replica (θ/φ/Δ scale): 2 Mi floats = 8 MiB,
+/// the same payload the preset family uses.
+pub const STEPS_PARAMS: u64 = 2 * 1024 * 1024;
+/// Inner steps between outer boundaries (H) for the amortization.
+pub const STEPS_INNER: u64 = 50;
+/// Modeled fwd+bwd+Adam seconds per inner step for the 2 Mi-float host
+/// model.
+pub const STEPS_COMPUTE_S: f64 = 0.02;
+/// Gossip link latency for the ladder (the LAN intra-switch figure).
+pub const STEPS_LINK_LATENCY_S: f64 = 1e-3;
+/// Gossip link bandwidth for the ladder (bytes/s).
+pub const STEPS_LINK_BANDWIDTH: f64 = 1.25e9;
+
+/// One symmetric NoLoCo pair exchange: each side ships (Δ, φ) =
+/// `2·STEPS_PARAMS` floats over the ladder link; directions overlap
+/// (full duplex), so the boundary stall is one send. Independent of
+/// `dp` — the property the ladder exists to demonstrate.
+fn steps_pair_s() -> f64 {
+    STEPS_LINK_LATENCY_S + (8 * STEPS_PARAMS) as f64 / STEPS_LINK_BANDWIDTH
+}
+
+/// Fleet replica-steps per second at world size `dp`: every replica
+/// advances at `1 / (compute + pair/H)`, and NoLoCo has no global
+/// collective, so the fleet rate is exactly `dp` times the replica
+/// rate.
+fn steps_per_sec(dp: u64) -> f64 {
+    dp as f64 / (STEPS_COMPUTE_S + steps_pair_s() / STEPS_INNER as f64)
+}
+
+/// Total wire bytes of one outer boundary at world size `dp`: every
+/// replica offers (Δ, φ) — `2·STEPS_PARAMS` floats, 4 bytes each — to
+/// its one partner, which is precisely what `AccountingComm`'s
+/// `offer_state` meters for a full pairing round (`dp · 2 · 4 · n`).
+fn bytes_per_boundary(dp: u64) -> f64 {
+    (dp * 2 * 4 * STEPS_PARAMS) as f64
+}
+
+/// Modeled grid-executor peak residency at world size `dp`, MiB: six
+/// per-replica f32 vectors (θ, m, v, φ, δ, grad accumulator) plus the
+/// two shared [`crate::train::FoldScratch`] buffers (dsum, psum).
+fn peak_rss_mib(dp: u64) -> f64 {
+    ((6 * dp + 2) * 4 * STEPS_PARAMS) as f64 / (1024.0 * 1024.0)
+}
+
+/// The scale ladder: `steps.dp<dp>.{steps_per_sec, bytes_per_boundary,
+/// peak_rss_mib}` rows for each rung, in emission order. Deterministic
+/// — two calls return identical values.
+pub fn steps_ladder() -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for dp in STEPS_LADDER {
+        out.push((format!("steps.dp{dp}.steps_per_sec"), steps_per_sec(dp)));
+        out.push((format!("steps.dp{dp}.bytes_per_boundary"), bytes_per_boundary(dp)));
+        out.push((format!("steps.dp{dp}.peak_rss_mib"), peak_rss_mib(dp)));
+    }
+    out
+}
+
+/// Serialize [`steps_ladder`] into the `BENCH_steps.json` shape.
+pub fn steps_json() -> String {
+    metrics_json(&steps_ladder())
 }
 
 #[cfg(test)]
@@ -243,5 +333,67 @@ mod tests {
         for (k, _) in cost_model_baseline() {
             assert!(s.contains(&format!("\"{k}\":")), "missing {k} in {s}");
         }
+    }
+
+    fn step_metric(name: &str) -> f64 {
+        steps_ladder()
+            .into_iter()
+            .find(|(k, _)| k == name)
+            .unwrap_or_else(|| panic!("missing ladder metric {name}"))
+            .1
+    }
+
+    #[test]
+    fn steps_ladder_is_deterministic_and_complete() {
+        assert_eq!(steps_ladder(), steps_ladder());
+        let s = steps_json();
+        assert!(s.starts_with("{\"v\":1,\"metrics\":{"));
+        for dp in STEPS_LADDER {
+            for m in ["steps_per_sec", "bytes_per_boundary", "peak_rss_mib"] {
+                assert!(s.contains(&format!("\"steps.dp{dp}.{m}\":")), "missing dp{dp}.{m} in {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn steps_per_sec_is_linear_in_world_size() {
+        // No collective ⇒ the fleet rate scales exactly with dp: the
+        // per-replica denominator is the same on every rung.
+        let per_replica_64 = step_metric("steps.dp64.steps_per_sec") / 64.0;
+        let per_replica_1000 = step_metric("steps.dp1000.steps_per_sec") / 1000.0;
+        assert!((per_replica_64 - per_replica_1000).abs() < 1e-9);
+        // Closed form: dp / (compute + (lat + 8n/bw) / H).
+        let pair = 1e-3 + (8.0 * 2_097_152.0) / 1.25e9;
+        let expect = 64.0 / (0.02 + pair / 50.0);
+        assert!((step_metric("steps.dp64.steps_per_sec") - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ladder_bytes_match_accounting_comm_meter() {
+        // Drive a real pairing round through the accounting communicator
+        // at a small fragment size and scale up: the analytic row must
+        // be exactly what the meter would charge at full payload.
+        use crate::train::{AccountingComm, Communicator};
+        let dp = 64usize;
+        let frag = 1024usize; // STEPS_PARAMS / frag is exact (both powers of two)
+        let delta = vec![0.0f32; frag];
+        let phi = vec![0.0f32; frag];
+        let mut comm = AccountingComm::new();
+        for r in 0..dp {
+            let partner = r ^ 1; // adjacent symmetric pairs
+            comm.offer_state(0, r, &[partner], 1, &delta, &phi).expect("offer");
+        }
+        let scale = STEPS_PARAMS / frag as u64;
+        let metered = comm.stats().bytes_sent * scale;
+        assert_eq!(metered as f64, step_metric("steps.dp64.bytes_per_boundary"));
+        // And the symmetric exchange is counted once per pair.
+        assert_eq!(comm.stats().pair_exchanges, dp as u64 / 2);
+    }
+
+    #[test]
+    fn peak_rss_matches_closed_form_and_grows_linearly() {
+        // (6·dp + 2) resident 8 MiB vectors.
+        assert!((step_metric("steps.dp64.peak_rss_mib") - 386.0 * 8.0).abs() < 1e-9);
+        assert!((step_metric("steps.dp1000.peak_rss_mib") - 6002.0 * 8.0).abs() < 1e-9);
     }
 }

@@ -1,0 +1,97 @@
+//! Reusable fold-scratch buffers — the allocation-free boundary path.
+//!
+//! Every outer boundary used to allocate (and drop) a fresh pair of
+//! accumulator vectors per fold — `dsum`/`psum` for the Eq. 2 weighted
+//! sums — plus a Δ staging vector per offer. At `O(1000)` replicas those
+//! transient allocations dominate the boundary cost. [`FoldScratch`] is
+//! a small per-strategy arena: the buffers are allocated once, resized
+//! lazily to the fragment length in play, and rewritten in place at
+//! every boundary.
+//!
+//! Numerics are untouched: the scratch is fully overwritten by
+//! [`FoldScratch::seed`] / [`FoldScratch::zeroed`] before any
+//! accumulation, so a reused buffer holds exactly the values a freshly
+//! allocated one would — the fold's f32 addition order (and therefore
+//! its bits) is decided by the caller, never by the arena.
+
+/// Per-strategy scratch arena for boundary folds. See the module docs.
+#[derive(Debug, Default)]
+pub struct FoldScratch {
+    /// Weighted Δ accumulator (`Σ wᵩ Δᵩ` staging).
+    dsum: Vec<f32>,
+    /// Weighted φ accumulator (`Σ wᵩ φᵩ` staging).
+    psum: Vec<f32>,
+    /// Δ staging for offers that serialize `θ − φ` without retaining it.
+    grad: Vec<f32>,
+}
+
+impl FoldScratch {
+    /// Seed the accumulators with this worker's own contribution:
+    /// `dsum = θ − φ`, `psum = φ` (elementwise, `θ.len()` entries).
+    /// Returns both buffers for in-place accumulation.
+    pub fn seed(&mut self, theta: &[f32], phi: &[f32]) -> (&mut Vec<f32>, &mut Vec<f32>) {
+        debug_assert_eq!(theta.len(), phi.len());
+        self.dsum.clear();
+        self.dsum.extend(theta.iter().zip(phi).map(|(t, p)| t - p));
+        self.psum.clear();
+        self.psum.extend_from_slice(phi);
+        (&mut self.dsum, &mut self.psum)
+    }
+
+    /// Zero both accumulators to length `n` and return them (the
+    /// group-ordered accumulation path, where the caller adds its own
+    /// entry at its group position).
+    pub fn zeroed(&mut self, n: usize) -> (&mut Vec<f32>, &mut Vec<f32>) {
+        self.dsum.clear();
+        self.dsum.resize(n, 0.0);
+        self.psum.clear();
+        self.psum.resize(n, 0.0);
+        (&mut self.dsum, &mut self.psum)
+    }
+
+    /// Stage `Δ = θ − φ` into the arena and return it as a borrowed
+    /// slice — for offer paths that ship Δ but do not retain it.
+    pub fn delta_of(&mut self, theta: &[f32], phi: &[f32]) -> &[f32] {
+        debug_assert_eq!(theta.len(), phi.len());
+        self.grad.clear();
+        self.grad.extend(theta.iter().zip(phi).map(|(t, p)| t - p));
+        &self.grad
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_writes_delta_and_phi() {
+        let mut s = FoldScratch::default();
+        let theta = [3.0f32, 5.0, 7.0];
+        let phi = [1.0f32, 1.0, 2.0];
+        let (d, p) = s.seed(&theta, &phi);
+        assert_eq!(d.as_slice(), &[2.0, 4.0, 5.0]);
+        assert_eq!(p.as_slice(), &[1.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn reuse_is_equivalent_to_fresh() {
+        // A dirtied arena reseeded over a *shorter* fragment must match a
+        // fresh allocation exactly — stale tail values may not leak.
+        let mut s = FoldScratch::default();
+        s.seed(&[9.0; 8], &[1.0; 8]);
+        let (d, p) = s.seed(&[2.0, 4.0], &[1.0, 1.0]);
+        assert_eq!(d.as_slice(), &[1.0, 3.0]);
+        assert_eq!(p.as_slice(), &[1.0, 1.0]);
+        let (d, p) = s.zeroed(3);
+        assert_eq!(d.as_slice(), &[0.0; 3]);
+        assert_eq!(p.as_slice(), &[0.0; 3]);
+    }
+
+    #[test]
+    fn delta_of_stages_in_place() {
+        let mut s = FoldScratch::default();
+        assert_eq!(s.delta_of(&[5.0, 6.0], &[1.0, 4.0]), &[4.0, 2.0]);
+        // Reuse overwrites rather than appends.
+        assert_eq!(s.delta_of(&[1.0], &[1.0]), &[0.0]);
+    }
+}

@@ -76,6 +76,7 @@ use crate::net::topo::ChurnEvent;
 use crate::net::ChurnSchedule;
 use crate::runtime::Engine;
 
+use super::arena::FoldScratch;
 use super::checkpoint::{OfferRecord, StrategyState};
 use super::comm::Communicator;
 use super::state::WorkerState;
@@ -141,12 +142,85 @@ impl BoundaryClock {
     }
 }
 
+/// How [`fold_noloco_fused`] updates θ alongside the Eq. 2–3 (φ, δ)
+/// update — the third line of the boundary fused into the same pass.
+pub enum ThetaUpdate<'a> {
+    /// Leave θ to the caller (the plain Eq. 2 fold).
+    None,
+    /// Lockstep reset `θ ← φ′`: gated / async boundaries fold with the
+    /// inner phase quiesced, so θ restarts from the folded slow weights.
+    Reset(&'a mut [f32]),
+    /// Streamed carry `θ ← φ′ + (θ − snap)`: the inner progress made
+    /// since the offer snapshot `snap` rides on top of the folded slow
+    /// weights (Streaming DiLoCo's overlap correction).
+    Carry {
+        /// Fast weights over the fragment range.
+        theta: &'a mut [f32],
+        /// θ as it was when the in-flight offer snapshotted it.
+        snap: &'a [f32],
+    },
+}
+
 /// Eq. 2–3 with an age-weighted admitted set, host-side (see the module
 /// docs): `dsum`/`psum` are the already-weighted sums over the admitted
-/// members (self included) and `wsum` their total weight. The gated
-/// fragment fold is the `wsum = n` special case and delegates here.
+/// members (self included) and `wsum` their total weight — with the
+/// boundary's θ treatment fused into the same elementwise pass instead
+/// of a separate sweep over the fragment. This is the single approved
+/// reduction kernel of the boundary path (analyzer rule R5); every
+/// strategy fold routes through it.
+///
+/// Per element the update is exactly the unfused sequence: `δᵢ ← αδᵢ +
+/// (β/W)dsumᵢ − γ(φᵢ − psumᵢ/W)`, `φᵢ += δᵢ`, then the [`ThetaUpdate`].
+/// Fusing changes neither the operation order within an element nor the
+/// order across elements, so the bits match the unfused fold.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn fold_noloco_weighted(
+pub fn fold_noloco_fused(
+    phi: &mut [f32],
+    delta: &mut [f32],
+    dsum: &[f32],
+    psum: &[f32],
+    wsum: f32,
+    alpha: f32,
+    beta: f32,
+    gamma: f32,
+    theta: ThetaUpdate<'_>,
+) {
+    let inv = 1.0 / wsum;
+    match theta {
+        ThetaUpdate::None => {
+            for i in 0..phi.len() {
+                let d =
+                    alpha * delta[i] + beta * inv * dsum[i] - gamma * (phi[i] - inv * psum[i]);
+                delta[i] = d;
+                phi[i] += d;
+            }
+        }
+        ThetaUpdate::Reset(theta) => {
+            for i in 0..phi.len() {
+                let d =
+                    alpha * delta[i] + beta * inv * dsum[i] - gamma * (phi[i] - inv * psum[i]);
+                delta[i] = d;
+                phi[i] += d;
+                theta[i] = phi[i];
+            }
+        }
+        ThetaUpdate::Carry { theta, snap } => {
+            for i in 0..phi.len() {
+                let d =
+                    alpha * delta[i] + beta * inv * dsum[i] - gamma * (phi[i] - inv * psum[i]);
+                delta[i] = d;
+                phi[i] += d;
+                theta[i] = phi[i] + (theta[i] - snap[i]);
+            }
+        }
+    }
+}
+
+/// The φ/δ half of [`fold_noloco_fused`] (θ left to the caller). The
+/// gated fragment fold is the `wsum = n` special case and delegates
+/// here.
+#[allow(clippy::too_many_arguments)]
+pub fn fold_noloco_weighted(
     phi: &mut [f32],
     delta: &mut [f32],
     dsum: &[f32],
@@ -156,12 +230,7 @@ pub(crate) fn fold_noloco_weighted(
     beta: f32,
     gamma: f32,
 ) {
-    let inv = 1.0 / wsum;
-    for i in 0..phi.len() {
-        let d = alpha * delta[i] + beta * inv * dsum[i] - gamma * (phi[i] - inv * psum[i]);
-        delta[i] = d;
-        phi[i] += d;
-    }
+    fold_noloco_fused(phi, delta, dsum, psum, wsum, alpha, beta, gamma, ThetaUpdate::None);
 }
 
 /// Bounded-staleness asynchronous gossip (`outer.staleness > 1`). See
@@ -193,6 +262,9 @@ pub struct AsyncGossipSync {
     /// replay hook; the offer phase GCs entries the admission window can
     /// no longer reach.
     sent: BTreeMap<(usize, usize), Vec<SentOffer>>,
+    /// Reusable fold accumulators (one pair per strategy instance — the
+    /// boundary path allocates nothing in steady state).
+    scratch: FoldScratch,
 }
 
 /// One retained own offer (see [`AsyncGossipSync::sent`]): the exact
@@ -233,6 +305,7 @@ impl AsyncGossipSync {
             admitted: 0,
             excluded_stale: 0,
             sent: BTreeMap::new(),
+            scratch: FoldScratch::default(),
         }
     }
 
@@ -361,10 +434,15 @@ impl AsyncGossipSync {
                     if q == me || self.is_stale(q, outer_idx) {
                         continue;
                     }
-                    if let Some((_, p)) =
-                        comm.collect_round(stage, me, q, outer_idx as u32, frag as u16, true)?
-                    {
-                        w.phi[range.clone()].copy_from_slice(&p);
+                    if let Some(view) = comm.collect_round_view(
+                        stage,
+                        me,
+                        q,
+                        outer_idx as u32,
+                        frag as u16,
+                        true,
+                    )? {
+                        w.phi[range.clone()].copy_from_slice(view.phi());
                         for d in w.delta[range.clone()].iter_mut() {
                             *d = 0.0;
                         }
@@ -378,76 +456,84 @@ impl AsyncGossipSync {
                 // fold (two stale members keep each other moving and the
                 // γ-consensus pulls them back over later boundaries).
             }
+            // Repair-staleness verdicts, precomputed so the scratch
+            // borrow below never competes with `&self` method calls.
+            let peer_stale: Vec<bool> = group
+                .iter()
+                .map(|&q| repair && self.is_stale(q, outer_idx))
+                .collect();
             // Weighted admission; sums start from this worker's own
             // contribution at weight 1 (θ and φ are untouched since the
-            // offer phase, so this equals the offered payload).
-            let mut dsum: Vec<f32> = w.theta[range.clone()]
-                .iter()
-                .zip(&w.phi[range.clone()])
-                .map(|(t, p)| t - p)
-                .collect();
-            let mut psum: Vec<f32> = w.phi[range.clone()].to_vec();
+            // offer phase, so this equals the offered payload). The
+            // arena buffers are rewritten in full — no per-boundary
+            // allocation.
+            let (dsum, psum) = self
+                .scratch
+                .seed(&w.theta[range.clone()], &w.phi[range.clone()]);
             let mut wsum = 1.0f32;
-            for &q in &group {
+            for (gi, &q) in group.iter().enumerate() {
                 if q == me {
                     continue;
                 }
-                if repair && self.is_stale(q, outer_idx) {
+                if peer_stale[gi] {
                     self.excluded_stale += 1;
                     continue;
                 }
                 // Probe the window, newest boundary first. The peer made
                 // an offer at a boundary only if it participated in it;
                 // only the current boundary's offer is worth waiting for
-                // (older ones either already arrived or never will).
-                let mut got: Option<(u64, Vec<f32>, Vec<f32>)> = None;
+                // (older ones either already arrived or never will). The
+                // admitted payload is accumulated straight off the
+                // communicator's borrowed view — no copy.
+                let mut hit = false;
                 for b in (win_lo..=outer_idx).rev() {
                     if !self.clock.live_at_boundary(q, b) {
                         continue;
                     }
                     let wait = b == outer_idx;
-                    if let Some((d, p)) =
-                        comm.collect_round(stage, me, q, b as u32, frag as u16, wait)?
+                    if let Some(view) =
+                        comm.collect_round_view(stage, me, q, b as u32, frag as u16, wait)?
                     {
-                        got = Some((outer_idx - b, d, p));
+                        let (d, p) = (view.delta(), view.phi());
+                        let age = outer_idx - b;
+                        ensure!(
+                            d.len() == dsum.len() && p.len() == psum.len(),
+                            "peer {q} offered fragment {frag} with mismatched length at age {age}"
+                        );
+                        debug_assert!(age < s, "admission must respect the staleness window");
+                        let wgt = 1.0 / (1.0 + age as f32);
+                        for (a, x) in dsum.iter_mut().zip(d) {
+                            *a += wgt * x;
+                        }
+                        for (a, x) in psum.iter_mut().zip(p) {
+                            *a += wgt * x;
+                        }
+                        wsum += wgt;
+                        self.admitted += 1;
+                        self.max_admitted_age = self.max_admitted_age.max(age);
+                        hit = true;
                         break;
                     }
                 }
-                let Some((age, d, p)) = got else {
+                if !hit {
                     // Nothing admissible delivered inside the window:
                     // the fold degrades to a smaller group.
                     self.excluded_stale += 1;
-                    continue;
-                };
-                ensure!(
-                    d.len() == dsum.len() && p.len() == psum.len(),
-                    "peer {q} offered fragment {frag} with mismatched length at age {age}"
-                );
-                debug_assert!(age < s, "admission must respect the staleness window");
-                let wgt = 1.0 / (1.0 + age as f32);
-                for (a, x) in dsum.iter_mut().zip(&d) {
-                    *a += wgt * x;
                 }
-                for (a, x) in psum.iter_mut().zip(&p) {
-                    *a += wgt * x;
-                }
-                wsum += wgt;
-                self.admitted += 1;
-                self.max_admitted_age = self.max_admitted_age.max(age);
             }
-            fold_noloco_weighted(
+            // Fused Eq. 2–3: Δ apply, φ mix and the lockstep θ ← φ reset
+            // in one elementwise pass over the fragment.
+            fold_noloco_fused(
                 &mut w.phi[range.clone()],
                 &mut w.delta[range.clone()],
-                &dsum,
-                &psum,
+                dsum,
+                psum,
                 wsum,
                 alpha,
                 beta,
                 gamma,
+                ThetaUpdate::Reset(&mut w.theta[range]),
             );
-            for i in range {
-                w.theta[i] = w.phi[i];
-            }
         }
         Ok(())
     }
@@ -649,6 +735,54 @@ mod tests {
         // No churn: the clock is the global boundary index.
         let c = BoundaryClock::new(ChurnSchedule::none(), 2, 50);
         assert_eq!(c.clock_of(1, 7), 7);
+    }
+
+    /// The fused kernel's θ arms are bit-equal to the unfused reference
+    /// — `fold_noloco_fragment` followed by the separate θ sweep each
+    /// arm replaces — and the `None` arm is the weighted wrapper. The
+    /// gated, streaming and async paths all lean on exactly this.
+    #[test]
+    fn fused_theta_arms_match_unfused_reference_bits() {
+        let (alpha, beta, gamma) = (0.5f32, 0.7f32, 0.61f32);
+        let n = 6usize;
+        let phi0: Vec<f32> = (0..n).map(|i| 0.25 * i as f32 - 0.5).collect();
+        let delta0: Vec<f32> = (0..n).map(|i| 0.125 * i as f32 - 0.3).collect();
+        let dsum: Vec<f32> = (0..n).map(|i| 1.0 - 0.3 * i as f32).collect();
+        let psum: Vec<f32> = (0..n).map(|i| 0.5 + 0.2 * i as f32).collect();
+        let theta0: Vec<f32> = (0..n).map(|i| 2.0 - 0.4 * i as f32).collect();
+        let snap: Vec<f32> = (0..n).map(|i| 1.5 - 0.35 * i as f32).collect();
+
+        // Unfused reference: fragment fold, then the θ sweeps.
+        let mut phi_ref = phi0.clone();
+        let mut delta_ref = delta0.clone();
+        fold_noloco_fragment(&mut phi_ref, &mut delta_ref, &dsum, &psum, 2, alpha, beta, gamma);
+        let theta_reset_ref = phi_ref.clone();
+        let theta_carry_ref: Vec<f32> = (0..n)
+            .map(|i| phi_ref[i] + (theta0[i] - snap[i]))
+            .collect();
+
+        let (mut phi, mut delta, mut theta) = (phi0.clone(), delta0.clone(), theta0.clone());
+        fold_noloco_fused(
+            &mut phi, &mut delta, &dsum, &psum, 2.0, alpha, beta, gamma,
+            ThetaUpdate::Reset(&mut theta),
+        );
+        assert_eq!(phi, phi_ref);
+        assert_eq!(delta, delta_ref);
+        assert_eq!(theta, theta_reset_ref);
+
+        let (mut phi, mut delta, mut theta) = (phi0.clone(), delta0.clone(), theta0.clone());
+        fold_noloco_fused(
+            &mut phi, &mut delta, &dsum, &psum, 2.0, alpha, beta, gamma,
+            ThetaUpdate::Carry { theta: &mut theta, snap: &snap },
+        );
+        assert_eq!(phi, phi_ref);
+        assert_eq!(delta, delta_ref);
+        assert_eq!(theta, theta_carry_ref);
+
+        let (mut phi, mut delta) = (phi0.clone(), delta0.clone());
+        fold_noloco_weighted(&mut phi, &mut delta, &dsum, &psum, 2.0, alpha, beta, gamma);
+        assert_eq!(phi, phi_ref);
+        assert_eq!(delta, delta_ref);
     }
 
     #[test]

@@ -172,6 +172,49 @@ impl Wire {
     }
 }
 
+/// A borrowed-or-owned view of an offered `(Δ, φ)` pair — the zero-copy
+/// collect path.
+///
+/// The in-memory mailbox ([`AccountingComm`]) retains every offer in a
+/// stash anyway, so a fold can accumulate straight off borrowed slices
+/// instead of cloning the payload per collect (at `O(1000)` replicas the
+/// clones dominate boundary cost). Transports that deserialize off a
+/// wire return the owned flavor; [`FragView::into_owned`] bridges to the
+/// owning collect API either way.
+pub enum FragView<'a> {
+    /// Slices lent out of the communicator's retention stash.
+    Borrowed(&'a [f32], &'a [f32]),
+    /// Owned buffers (deserialized off a wire, or via the default
+    /// wrappers over the owning collects).
+    Owned(Vec<f32>, Vec<f32>),
+}
+
+impl FragView<'_> {
+    /// The offered Δ payload.
+    pub fn delta(&self) -> &[f32] {
+        match self {
+            FragView::Borrowed(d, _) => d,
+            FragView::Owned(d, _) => d,
+        }
+    }
+
+    /// The offered φ payload.
+    pub fn phi(&self) -> &[f32] {
+        match self {
+            FragView::Borrowed(_, p) => p,
+            FragView::Owned(_, p) => p,
+        }
+    }
+
+    /// Materialize the pair (copies only the borrowed flavor).
+    pub fn into_owned(self) -> (Vec<f32>, Vec<f32>) {
+        match self {
+            FragView::Borrowed(d, p) => (d.to_vec(), p.to_vec()),
+            FragView::Owned(d, p) => (d, p),
+        }
+    }
+}
+
 /// How an executor moves payloads between workers of the grid.
 ///
 /// Implementations are SPMD from the worker's point of view: the grid
@@ -233,6 +276,23 @@ pub trait Communicator {
         seq: u32,
     ) -> Result<Option<(Vec<f32>, Vec<f32>)>>;
 
+    /// Zero-copy variant of [`Communicator::collect_state`]: same
+    /// semantics (including the error and straggler cases), but the
+    /// payload comes back as a [`FragView`] the fold can accumulate from
+    /// without owning it. The default wraps the owning collect;
+    /// stash-retaining communicators override it to lend slices.
+    fn collect_state_view(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peer: usize,
+        seq: u32,
+    ) -> Result<Option<FragView<'_>>> {
+        Ok(self
+            .collect_state(stage, me, peer, seq)?
+            .map(|(d, p)| FragView::Owned(d, p)))
+    }
+
     /// Streamed-fragment phase 1: publish fragment `frag` of this
     /// worker's `(Δ, φ)` to `peers` under round `seq`. Unlike
     /// [`Communicator::offer_state`], the offer survives the next round's
@@ -261,6 +321,21 @@ pub trait Communicator {
         seq: u32,
         frag: u16,
     ) -> Result<Option<(Vec<f32>, Vec<f32>)>>;
+
+    /// Zero-copy variant of [`Communicator::collect_fragment`] (see
+    /// [`Communicator::collect_state_view`]).
+    fn collect_fragment_view(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peer: usize,
+        seq: u32,
+        frag: u16,
+    ) -> Result<Option<FragView<'_>>> {
+        Ok(self
+            .collect_fragment(stage, me, peer, seq, frag)?
+            .map(|(d, p)| FragView::Owned(d, p)))
+    }
 
     /// Bounded-staleness phase 1: publish fragment `frag` of this
     /// worker's `(Δ, φ)` under the boundary `round` it is offered at,
@@ -297,6 +372,23 @@ pub trait Communicator {
         frag: u16,
         wait: bool,
     ) -> Result<Option<(Vec<f32>, Vec<f32>)>>;
+
+    /// Zero-copy variant of [`Communicator::collect_round`] (see
+    /// [`Communicator::collect_state_view`]).
+    #[allow(clippy::too_many_arguments)]
+    fn collect_round_view(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peer: usize,
+        round: u32,
+        frag: u16,
+        wait: bool,
+    ) -> Result<Option<FragView<'_>>> {
+        Ok(self
+            .collect_round(stage, me, peer, round, frag, wait)?
+            .map(|(d, p)| FragView::Owned(d, p)))
+    }
 
     /// Announce liveness at outer `boundary` to the stage-row `peers`
     /// (a tiny control message; consumed by the failure detector).
@@ -619,6 +711,18 @@ impl Communicator for AccountingComm {
         peer: usize,
         seq: u32,
     ) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+        Ok(self
+            .collect_state_view(stage, me, peer, seq)?
+            .map(FragView::into_owned))
+    }
+
+    fn collect_state_view(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peer: usize,
+        seq: u32,
+    ) -> Result<Option<FragView<'_>>> {
         if seq != self.offer_seq {
             bail!("gossip round {seq} collected before any offer (expected {})", self.offer_seq);
         }
@@ -636,7 +740,7 @@ impl Communicator for AccountingComm {
                         bytes: 4 * (dp.0.len() + dp.1.len()) as u64,
                     },
                 );
-                Ok(Some(dp.clone()))
+                Ok(Some(FragView::Borrowed(&dp.0, &dp.1)))
             }
             None => bail!("replica {peer} of stage {stage} never offered to gossip round {seq}"),
         }
@@ -691,6 +795,19 @@ impl Communicator for AccountingComm {
         seq: u32,
         frag: u16,
     ) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+        Ok(self
+            .collect_fragment_view(stage, me, peer, seq, frag)?
+            .map(FragView::into_owned))
+    }
+
+    fn collect_fragment_view(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peer: usize,
+        seq: u32,
+        frag: u16,
+    ) -> Result<Option<FragView<'_>>> {
         match self.frags.get(&(stage, peer, seq, frag)) {
             Some(dp) => {
                 self.hub.record(
@@ -705,7 +822,7 @@ impl Communicator for AccountingComm {
                         bytes: 4 * (dp.0.len() + dp.1.len()) as u64,
                     },
                 );
-                Ok(Some(dp.clone()))
+                Ok(Some(FragView::Borrowed(&dp.0, &dp.1)))
             }
             None => bail!(
                 "replica {peer} of stage {stage} never offered fragment {frag} of round {seq}"
@@ -761,10 +878,24 @@ impl Communicator for AccountingComm {
         peer: usize,
         round: u32,
         frag: u16,
-        _wait: bool,
+        wait: bool,
     ) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
-        let got = self.rounds.get(&(stage, peer, round, frag)).cloned();
-        if let Some(dp) = &got {
+        Ok(self
+            .collect_round_view(stage, me, peer, round, frag, wait)?
+            .map(FragView::into_owned))
+    }
+
+    fn collect_round_view(
+        &mut self,
+        stage: usize,
+        me: usize,
+        peer: usize,
+        round: u32,
+        frag: u16,
+        _wait: bool,
+    ) -> Result<Option<FragView<'_>>> {
+        let got = self.rounds.get(&(stage, peer, round, frag));
+        if let Some(dp) = got {
             self.hub.record(
                 self.cur_sim,
                 Event::Fold {
@@ -778,7 +909,7 @@ impl Communicator for AccountingComm {
                 },
             );
         }
-        Ok(got)
+        Ok(got.map(|dp| FragView::Borrowed(&dp.0, &dp.1)))
     }
 
     fn send_heartbeat(

@@ -54,6 +54,7 @@ use crate::tensor::Tensor;
 use super::checkpoint::{Checkpoint, CkptAssembler, CoreRecord, LoaderCursor, RankSnapshot, WorkerRecord};
 use super::comm::{BoundaryTag, Communicator, Wire, K_ACT, K_GRD, K_TOK, K_VACT, K_VTOK};
 use super::exec::{self, AdamScalars};
+use super::par::{ExecPool, PoolOut, PoolTask};
 use super::state::WorkerState;
 use super::strategy::{self, ChurnResponse, SyncStrategy};
 use super::TrainReport;
@@ -135,6 +136,14 @@ pub struct TrainerCore<'e, C: Communicator> {
     /// Whether the run stopped at `halt_after` (skip the drain, exactly
     /// like a crash).
     halted: bool,
+    /// Parallel inner-phase worker pool (`[perf] threads`): grid
+    /// executor with `pp = 1` only — deeper pipelines route waves across
+    /// DP columns mid-step, so their walk stays serial. Results are
+    /// applied in the exact serial order, keeping any thread count
+    /// bit-identical to `None` (the serial walk).
+    pool: Option<ExecPool>,
+    /// Pool engine executions already attributed to a finished report.
+    pool_exec0: u64,
 }
 
 fn draw_val_batches(cfg: &TrainConfig, man: &Manifest, n: usize) -> Vec<Vec<i32>> {
@@ -231,6 +240,12 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
             .then(|| FailureDetector::new(dp, cfg.detect.misses));
         let obs = ObsHub::from_config(&cfg.obs)?;
         comm.set_obs(obs.clone());
+        // The pool parallelizes the pp = 1 inner phase only: deeper
+        // pipelines route every wave across DP columns mid-step, so the
+        // serial grid walk stays authoritative there.
+        let pool = (cfg.perf.parallel_requested() && pp == 1).then(|| {
+            ExecPool::new(cfg.perf.threads, dp, eng.dir().to_path_buf(), man.clone())
+        });
         Ok(TrainerCore {
             live: vec![true; dp],
             ckpt_every: cfg.ckpt.every as u64,
@@ -261,6 +276,8 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
             halt_after: None,
             start_step: 0,
             halted: false,
+            pool,
+            pool_exec0: 0,
         })
     }
 
@@ -351,6 +368,10 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
             halt_after: None,
             start_step: 0,
             halted: false,
+            // A threaded worker is already one thread of a pool-of-ranks;
+            // its single-worker inner phase has nothing to fan out.
+            pool: None,
+            pool_exec0: 0,
         })
     }
 
@@ -538,6 +559,7 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
         // feeds the trajectory, losses, or CommStats.
         let start = Instant::now();
         let exec0 = self.eng.executions();
+        self.pool_exec0 = self.pool.as_ref().map_or(0, ExecPool::executions);
         // A resumed run starts from the checkpoint's restored trace: the
         // final report's val loss must survive a resume that never evals
         // again.
@@ -680,7 +702,9 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
             std::mem::take(&mut self.step_train_loss),
             self.comm.stats().clone(),
             start.elapsed().as_secs_f64(),
-            self.eng.executions() - exec0,
+            self.eng.executions() - exec0
+                + self.pool.as_ref().map_or(0, ExecPool::executions)
+                - self.pool_exec0,
             self.comm.executor(),
             self.detected.clone(),
             self.obs.report(),
@@ -736,8 +760,22 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
         // Backward stash: (local worker, wave, origin, x_in, toks).
         let mut stash: Vec<(usize, u32, usize, Vec<f32>, Vec<i32>)> = Vec::new();
 
+        // ---- parallel pp = 1 fan-out (`[perf] threads`) ----
+        // Between boundaries every pp = 1 replica's waves depend only on
+        // its own (θ, tokens), so they dispatch to the pool as a batch
+        // and the results fold in the exact serial order below — the
+        // trajectory is bit-identical to the serial walk at any thread
+        // count.
+        let pooled = pp == 1 && self.pool.is_some();
+        if pooled {
+            self.pooled_full_waves(&batches, &mut losses)?;
+        }
+
         // ---- forward sweep (the last stage also runs its backward) ----
         for mb in 0..num_mb {
+            if pooled {
+                break; // waves already computed and folded via the pool
+            }
             let wave = (step * num_mb + mb) as u64;
             let wave32 = wave as u32;
             let plan = RoutePlan::for_step_over(
@@ -894,25 +932,30 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
 
         // ---- inner optimizer ----
         let lr_now = self.lr.at(step);
-        for li in 0..self.workers.len() {
-            if !self.live[self.workers[li].replica] {
-                continue; // dead column: no gradients, no update
+        if pooled {
+            self.pooled_adam(lr_now)?;
+        } else {
+            for li in 0..self.workers.len() {
+                if !self.live[self.workers[li].replica] {
+                    continue; // dead column: no gradients, no update
+                }
+                let g = self.workers[li].take_mean_grad();
+                let w = &mut self.workers[li];
+                w.adam_t += 1;
+                let sc = AdamScalars::at(lr_now, w.adam_t, self.cfg.grad_clip);
+                let (kind, mut theta, mut m, mut v) = (
+                    w.kind,
+                    std::mem::take(&mut w.theta),
+                    std::mem::take(&mut w.m),
+                    std::mem::take(&mut w.v),
+                );
+                exec::adam_step(self.eng, kind, &mut theta, &mut m, &mut v, &g, sc)?;
+                let w = &mut self.workers[li];
+                w.theta = theta;
+                w.m = m;
+                w.v = v;
+                w.recycle_grad(g);
             }
-            let g = self.workers[li].take_mean_grad();
-            let w = &mut self.workers[li];
-            w.adam_t += 1;
-            let sc = AdamScalars::at(lr_now, w.adam_t, self.cfg.grad_clip);
-            let (kind, mut theta, mut m, mut v) = (
-                w.kind,
-                std::mem::take(&mut w.theta),
-                std::mem::take(&mut w.m),
-                std::mem::take(&mut w.v),
-            );
-            exec::adam_step(self.eng, kind, &mut theta, &mut m, &mut v, &g, sc)?;
-            let w = &mut self.workers[li];
-            w.theta = theta;
-            w.m = m;
-            w.v = v;
         }
 
         // Mean training loss in the seed's accumulation order.
@@ -927,6 +970,109 @@ impl<'e, C: Communicator> TrainerCore<'e, C> {
             }
         }
         Ok(loss_sum / loss_n.max(1) as f64)
+    }
+
+    /// Fan one step's `pp = 1` microbatch waves over the pool and fold
+    /// the results in the exact serial order (wave-major, ascending
+    /// worker index), so gradient accumulation sees the same f32
+    /// addition order — and therefore the same bits — as the serial
+    /// walk.
+    fn pooled_full_waves(
+        &mut self,
+        batches: &[Option<Vec<i32>>],
+        losses: &mut [Vec<Option<f64>>],
+    ) -> Result<()> {
+        let num_mb = self.num_mb;
+        let mb_toks = self.man.mb * self.man.seq_len;
+        // One shared θ snapshot per live worker: the waves of a step all
+        // read the same pre-update weights, so an `Arc` replaces a
+        // per-wave copy.
+        let mut thetas: Vec<Option<Arc<Vec<f32>>>> = {
+            let TrainerCore { workers, live, .. } = self;
+            workers
+                .iter_mut()
+                .map(|w| live[w.replica].then(|| Arc::new(std::mem::take(&mut w.theta))))
+                .collect()
+        };
+        let mut order: Vec<(usize, usize, usize)> = Vec::new();
+        let mut tasks: Vec<PoolTask> = Vec::new();
+        for mb in 0..num_mb {
+            for li in 0..self.workers.len() {
+                let q = self.workers[li].replica;
+                if !self.live[q] {
+                    continue;
+                }
+                let batch = batches[q].as_ref().expect("live stage-0 column has a batch");
+                let toks = batch[mb * mb_toks..(mb + 1) * mb_toks].to_vec();
+                let theta = thetas[li].as_ref().expect("live worker snapshot armed above");
+                tasks.push(PoolTask::BwdFull { theta: Arc::clone(theta), toks });
+                order.push((mb, li, q));
+            }
+        }
+        let outs = self
+            .pool
+            .as_mut()
+            .expect("pooled walk gated on pool presence")
+            .run(tasks)?;
+        for ((mb, li, q), out) in order.into_iter().zip(outs) {
+            let PoolOut::BwdFull { loss, grad } = out else {
+                unreachable!("BwdFull tasks return BwdFull results");
+            };
+            self.workers[li].accumulate(&grad);
+            losses[mb][q] = Some(loss as f64);
+        }
+        // Hand the θ snapshots back. Every task clone was dropped before
+        // its reply was sent, so the unwrap path is the only one taken;
+        // the clone fallback merely keeps this panic-free.
+        for (w, t) in self.workers.iter_mut().zip(thetas.iter_mut()) {
+            if let Some(arc) = t.take() {
+                w.theta = Arc::try_unwrap(arc).unwrap_or_else(|a| (*a).clone());
+            }
+        }
+        Ok(())
+    }
+
+    /// Fan the per-worker Adam steps over the pool. Each task owns its
+    /// worker's `(θ, m, v, g)` and the write-backs land by worker index,
+    /// so the update matches the serial loop exactly; the gradient
+    /// buffer rides back for recycling into the accumulator.
+    fn pooled_adam(&mut self, lr_now: f64) -> Result<()> {
+        let mut order: Vec<usize> = Vec::new();
+        let mut tasks: Vec<PoolTask> = Vec::new();
+        for li in 0..self.workers.len() {
+            if !self.live[self.workers[li].replica] {
+                continue; // dead column: no gradients, no update
+            }
+            let g = self.workers[li].take_mean_grad();
+            let w = &mut self.workers[li];
+            w.adam_t += 1;
+            let sc = AdamScalars::at(lr_now, w.adam_t, self.cfg.grad_clip);
+            tasks.push(PoolTask::Adam {
+                kind: w.kind,
+                theta: std::mem::take(&mut w.theta),
+                m: std::mem::take(&mut w.m),
+                v: std::mem::take(&mut w.v),
+                g,
+                sc,
+            });
+            order.push(li);
+        }
+        let outs = self
+            .pool
+            .as_mut()
+            .expect("pooled adam gated on pool presence")
+            .run(tasks)?;
+        for (li, out) in order.into_iter().zip(outs) {
+            let PoolOut::Adam { theta, m, v, g } = out else {
+                unreachable!("Adam tasks return Adam results");
+            };
+            let w = &mut self.workers[li];
+            w.theta = theta;
+            w.m = m;
+            w.v = v;
+            w.recycle_grad(g);
+        }
+        Ok(())
     }
 
     /// Outer optimizer step, fully delegated to the configured

@@ -53,11 +53,13 @@
 //! XLA artifacts; this module only moves buffers and decides who talks to
 //! whom — exactly the paper's separation of concerns.
 
+mod arena;
 mod boundary;
 mod checkpoint;
 mod comm;
 mod core;
 mod exec;
+mod par;
 mod sim;
 mod socket_exec;
 mod state;
@@ -65,19 +67,24 @@ mod strategy;
 mod streaming;
 mod threaded;
 
-pub use boundary::{AsyncGossipSync, BoundaryClock};
+pub use arena::FoldScratch;
+pub use boundary::{
+    fold_noloco_fused, fold_noloco_weighted, AsyncGossipSync, BoundaryClock, ThetaUpdate,
+};
 pub use checkpoint::{
     Checkpoint, CkptAssembler, CoreRecord, InflightRecord, LoaderCursor, OfferRecord,
     RankSnapshot, StrategyState, WorkerRecord,
 };
 pub use comm::{
-    AccountingComm, BoundaryTag, Communicator, EndpointComm, FabricComm, SocketComm, Wire,
+    AccountingComm, BoundaryTag, Communicator, EndpointComm, FabricComm, FragView, SocketComm,
+    Wire,
 };
 pub use self::core::TrainerCore;
 pub use exec::{
     adam_step, bwd_first, bwd_full, bwd_last, bwd_mid, fwd_first, fwd_mid, init_stage,
     loss_full, loss_last, outer_diloco, outer_noloco, AdamScalars,
 };
+pub use par::{resolve_threads, ExecPool, PoolOut, PoolTask};
 pub use sim::SimTrainer;
 pub use socket_exec::{merge_rank_reports, MergedRun, RankReport, SocketTrainer};
 pub use state::WorkerState;
@@ -86,7 +93,7 @@ pub use strategy::{
     DilocoSync, FsdpSync, NolocoSync, PairingPolicy, PerFragmentPairing, SyncStrategy,
     UniformPairing,
 };
-pub use streaming::{FragmentSchedule, StreamingSync};
+pub use streaming::{fold_noloco_fragment, FragmentSchedule, StreamingSync};
 pub use threaded::ThreadedTrainer;
 
 use anyhow::Result;

@@ -74,8 +74,12 @@ impl WorkerState {
         self.theta.is_empty()
     }
 
-    /// Add one microbatch's gradient into the accumulator.
+    /// Add one microbatch's gradient into the accumulator. An empty
+    /// accumulator (freshly drained, not yet recycled) re-arms lazily.
     pub fn accumulate(&mut self, g: &[f32]) {
+        if self.grad_acc.is_empty() {
+            self.grad_acc = vec![0.0; g.len()];
+        }
         assert_eq!(g.len(), self.grad_acc.len());
         for (a, x) in self.grad_acc.iter_mut().zip(g) {
             *a += x;
@@ -83,7 +87,11 @@ impl WorkerState {
         self.acc_count += 1;
     }
 
-    /// Drain the accumulator as the microbatch-mean gradient.
+    /// Drain the accumulator as the microbatch-mean gradient, leaving it
+    /// empty. Callers hand the buffer back via
+    /// [`recycle_grad`](WorkerState::recycle_grad) (or the next
+    /// [`accumulate`](WorkerState::accumulate) re-arms it) — the
+    /// inner-loop steady state allocates nothing.
     pub fn take_mean_grad(&mut self) -> Vec<f32> {
         assert!(self.acc_count > 0, "no gradients accumulated");
         let inv = 1.0 / self.acc_count as f32;
@@ -91,9 +99,20 @@ impl WorkerState {
         for x in &mut g {
             *x *= inv;
         }
-        self.grad_acc = vec![0.0; g.len()];
         self.acc_count = 0;
         g
+    }
+
+    /// Return a drained gradient buffer to the accumulator, zeroed in
+    /// place. No-op if the accumulator already re-armed.
+    pub fn recycle_grad(&mut self, mut g: Vec<f32>) {
+        if !self.grad_acc.is_empty() {
+            return;
+        }
+        for x in &mut g {
+            *x = 0.0;
+        }
+        self.grad_acc = g;
     }
 
     /// Outer gradient Δ = θ − φ (Eq. 1).
@@ -138,7 +157,17 @@ mod tests {
         let g = st.take_mean_grad();
         assert_eq!(g, vec![2.0, 2.0, 2.0]);
         assert_eq!(st.acc_count, 0);
+        // The buffer is handed out, not reallocated…
+        assert!(st.grad_acc.is_empty());
+        // …and recycling zeroes it in place.
+        st.recycle_grad(g);
         assert_eq!(st.grad_acc, vec![0.0; 3]);
+        // A drained-but-unrecycled accumulator re-arms on first use.
+        let mut st = w(Method::Fsdp);
+        st.accumulate(&[1.0, 1.0, 1.0]);
+        let _ = st.take_mean_grad();
+        st.accumulate(&[4.0, 5.0, 6.0]);
+        assert_eq!(st.grad_acc, vec![4.0, 5.0, 6.0]);
     }
 
     #[test]

@@ -38,6 +38,7 @@ use crate::net::{ChurnSchedule, Topology};
 use crate::rngx::Pcg64;
 use crate::runtime::Engine;
 
+use super::arena::FoldScratch;
 use super::checkpoint::StrategyState;
 use super::comm::Communicator;
 use super::exec;
@@ -378,6 +379,9 @@ pub struct NolocoSync {
     /// and fold phases (and, on the grid executor, every worker of a
     /// stage row) share one partition instead of re-drawing it.
     cache: Option<(usize, u64, Vec<usize>, Vec<Vec<usize>>)>,
+    /// Reusable fold accumulators — the boundary path allocates no fresh
+    /// `dsum`/`psum` per fold.
+    scratch: FoldScratch,
 }
 
 impl NolocoSync {
@@ -389,7 +393,7 @@ impl NolocoSync {
         churn: ChurnSchedule,
         pairing: Box<dyn PairingPolicy>,
     ) -> NolocoSync {
-        NolocoSync { outer, seed, dp, churn, pairing, cache: None }
+        NolocoSync { outer, seed, dp, churn, pairing, cache: None, scratch: FoldScratch::default() }
     }
 
     fn my_group(&mut self, live: &[usize], stage: usize, outer_idx: u64, me: usize) -> Vec<usize> {
@@ -510,8 +514,7 @@ impl SyncStrategy for NolocoSync {
         // singleton update — NoLoCo's graceful form of the situation where
         // a collective would simply hang.
         let n = w.len();
-        let mut dsum = vec![0.0f32; n];
-        let mut psum = vec![0.0f32; n];
+        let (dsum, psum) = self.scratch.zeroed(n);
         let mut gn = 0usize;
         for (d, p) in avail.iter().flatten() {
             for (a, x) in dsum.iter_mut().zip(d) {
@@ -530,7 +533,7 @@ impl SyncStrategy for NolocoSync {
         let (kind, mut phi, mut delta) =
             (w.kind, std::mem::take(&mut w.phi), std::mem::take(&mut w.delta));
         exec::outer_noloco(
-            eng, kind, &mut phi, &mut delta, &dsum, &psum, alpha, beta, gamma,
+            eng, kind, &mut phi, &mut delta, dsum, psum, alpha, beta, gamma,
             1.0 / gn as f32,
         )?;
         w.phi = phi;

@@ -82,6 +82,7 @@ use crate::net::topo::ChurnEvent;
 use crate::net::ChurnSchedule;
 use crate::runtime::Engine;
 
+use super::boundary::{fold_noloco_fused, ThetaUpdate};
 use super::checkpoint::{InflightRecord, StrategyState};
 use super::comm::Communicator;
 use super::state::WorkerState;
@@ -353,10 +354,10 @@ impl StreamingSync {
                 if q == me || self.is_stale_at(q, entry.outer_idx, k) {
                     continue;
                 }
-                if let Some((_, p)) =
-                    comm.collect_fragment(w.stage, me, q, seq, entry.frag as u16)?
+                if let Some(view) =
+                    comm.collect_fragment_view(w.stage, me, q, seq, entry.frag as u16)?
                 {
-                    w.phi[r.clone()].copy_from_slice(&p);
+                    w.phi[r.clone()].copy_from_slice(view.phi());
                     for d in w.delta[r.clone()].iter_mut() {
                         *d = 0.0;
                     }
@@ -366,9 +367,13 @@ impl StreamingSync {
             }
         }
         // Group sums start from this worker's *offer-time* state (not
-        // the current θ/φ — the inner phase has moved on).
-        let mut dsum = entry.delta.clone();
-        let mut psum = entry.phi.clone();
+        // the current θ/φ — the inner phase has moved on). The retained
+        // entry buffers become the accumulators outright (the entry is
+        // consumed by this fold); peer contributions accumulate straight
+        // off the communicator's borrowed views — the fold path copies
+        // nothing.
+        let mut dsum = entry.delta;
+        let mut psum = entry.phi;
         let mut gn = 1usize;
         for &q in &entry.group {
             if q == me {
@@ -377,33 +382,44 @@ impl StreamingSync {
             if repair && self.is_stale_at(q, entry.outer_idx, k) {
                 continue; // stale peer: excluded from the fold
             }
-            let Some((d, p)) = comm.collect_fragment(w.stage, me, q, seq, entry.frag as u16)?
+            let Some(view) =
+                comm.collect_fragment_view(w.stage, me, q, seq, entry.frag as u16)?
             else {
                 continue; // straggler timeout: smaller group
             };
+            let (d, p) = (view.delta(), view.phi());
             ensure!(
                 d.len() == dsum.len(),
                 "peer {q} offered fragment {} with mismatched length",
                 entry.frag
             );
-            for (a, x) in dsum.iter_mut().zip(&d) {
+            for (a, x) in dsum.iter_mut().zip(d) {
                 *a += x;
             }
-            for (a, x) in psum.iter_mut().zip(&p) {
+            for (a, x) in psum.iter_mut().zip(p) {
                 *a += x;
             }
             gn += 1;
         }
+        // The fragment's inner phase restarts from the updated slow
+        // weights, carrying the drift accumulated while the exchange was
+        // in flight: θ ← φ' + (θ_now − θ_offer). The offered component
+        // was consumed by the outer update; the drift since the offer
+        // stays, so no inner step is silently discarded. Gated folds
+        // have zero drift (fold follows the offer within one boundary)
+        // and reduce to the plain θ := φ reset. For NoLoCo the carry is
+        // fused into the same elementwise pass as the (φ, δ) update.
         match self.flavor {
-            Method::NoLoCo => fold_noloco_fragment(
+            Method::NoLoCo => fold_noloco_fused(
                 &mut w.phi[r.clone()],
                 &mut w.delta[r.clone()],
                 &dsum,
                 &psum,
-                gn,
+                gn as f32,
                 alpha,
                 beta,
                 gamma,
+                ThetaUpdate::Carry { theta: &mut w.theta[r], snap: &entry.theta },
             ),
             Method::DiLoCo => {
                 // Local mean over the all-to-all exchange — the same
@@ -420,18 +436,11 @@ impl StreamingSync {
                     alpha,
                     beta,
                 );
+                for (j, i) in r.enumerate() {
+                    w.theta[i] = w.phi[i] + (w.theta[i] - entry.theta[j]);
+                }
             }
             Method::Fsdp => unreachable!("streaming sync rejects FSDP at validation"),
-        }
-        // The fragment's inner phase restarts from the updated slow
-        // weights, carrying the drift accumulated while the exchange was
-        // in flight: θ ← φ' + (θ_now − θ_offer). The offered component
-        // was consumed by the outer update; the drift since the offer
-        // stays, so no inner step is silently discarded. Gated folds
-        // have zero drift (fold follows the offer within one boundary)
-        // and reduce to the plain θ := φ reset.
-        for (j, i) in r.clone().enumerate() {
-            w.theta[i] = w.phi[i] + (w.theta[i] - entry.theta[j]);
         }
         Ok(())
     }
@@ -675,9 +684,13 @@ impl SyncStrategy for StreamingSync {
 /// `δ ← α δ + (β/n) Σ Δ − γ (φ − (1/n) Σ φ)`, then `φ ← φ + δ` — the
 /// uniform (`W = n`) special case of the async engine's
 /// [`fold_noloco_weighted`](super::boundary::fold_noloco_weighted), to
-/// which it delegates so the Eq. 2–3 arithmetic exists once.
+/// which it delegates so the Eq. 2–3 arithmetic exists once. The
+/// streamed fold itself routes through
+/// [`fold_noloco_fused`](super::boundary::fold_noloco_fused) with the
+/// drift carry fused in; this wrapper is the reference form equivalence
+/// tests pin against.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn fold_noloco_fragment(
+pub fn fold_noloco_fragment(
     phi: &mut [f32],
     delta: &mut [f32],
     dsum: &[f32],

@@ -93,6 +93,28 @@ fn json_output_parses_as_journal_lines() {
     assert_eq!(hdr["clean"].boolean(), Some(true));
 }
 
+/// The execution pool's thread auto-detect (`--threads 0` →
+/// `available_parallelism`) is an R1 ambient-machine input whose
+/// allowance is scoped to `train/par.rs` — the pool's submission-order
+/// contract keeps the trajectory identical at any width. The committed
+/// pool file must (a) actually exercise the pattern and (b) analyze
+/// clean *only* under its own path: the same source moved anywhere else
+/// trips R1 again.
+#[test]
+fn pool_thread_autodetect_allowance_is_scoped() {
+    let src = std::fs::read_to_string(src_root().join("train/par.rs")).expect("read train/par.rs");
+    assert!(
+        src.contains("available_parallelism"),
+        "train/par.rs should resolve --threads 0 from the machine width"
+    );
+    assert!(analyze::analyze_source("train/par.rs", &src).is_empty());
+    let elsewhere = analyze::analyze_source("train/core.rs", &src);
+    assert!(
+        elsewhere.iter().any(|f| f.rule == "R1"),
+        "the R1 allowance must not leak beyond train/par.rs"
+    );
+}
+
 /// Drive one gossip round through an [`AccountingComm`], offering the
 /// stage row in the given replica order, and return every collect
 /// payload plus the wire totals.

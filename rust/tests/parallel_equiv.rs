@@ -1,0 +1,172 @@
+//! Parallel-vs-serial bit-equality goldens for the execution pool.
+//!
+//! The `[perf] threads` knob fans the pp = 1 inner phase out over a
+//! pool of worker threads, each with a private engine over the same
+//! AOT artifact — and the contract is that this is a pure throughput
+//! change: results are applied in exact submission order, so the
+//! trajectory is **bit-identical** to the serial walk. These tests pin
+//! that contract end-to-end on the grid executor (gated NoLoCo,
+//! streaming fragments, bounded staleness > 1, FSDP, churn) and pin the
+//! knob as inert on the threaded executor (each rank is already one
+//! thread of a pool-of-ranks).
+//!
+//! Skips politely when the tiny pp = 1 artifact build is absent, like
+//! every artifact-dependent suite (hardened by NOLOCO_REQUIRE_ARTIFACTS).
+
+use noloco::config::{presets, Method, SyncMode, TrainConfig};
+use noloco::net::ChurnSchedule;
+use noloco::runtime::{find_build, Engine};
+use noloco::train::{SimTrainer, ThreadedTrainer, TrainReport};
+
+const ART: &str = "artifacts";
+
+fn have_artifacts() -> bool {
+    match find_build(ART, "tiny", 1) {
+        Ok(_) => true,
+        Err(e) => {
+            if std::env::var_os("NOLOCO_REQUIRE_ARTIFACTS").is_some() {
+                panic!("NOLOCO_REQUIRE_ARTIFACTS is set but tiny-pp1 is missing: {e}");
+            }
+            eprintln!("skipping: no tiny-pp1 artifacts; run `make artifacts` to enable");
+            false
+        }
+    }
+}
+
+/// tiny preset at pp = 1, dp replicas × 2 microbatches, with the
+/// requested pool width.
+fn cfg(method: Method, dp: usize, steps: usize, threads: usize) -> TrainConfig {
+    let base = presets::preset("tiny").unwrap();
+    let mut cfg = match method {
+        Method::Fsdp => presets::as_fsdp(base),
+        Method::DiLoCo => presets::as_diloco(base),
+        Method::NoLoCo => base,
+    };
+    cfg.topology.dp = dp;
+    cfg.topology.pp = 1;
+    cfg.steps = steps;
+    cfg.warmup = 2;
+    cfg.eval_every = 0;
+    cfg.eval_tokens = 512;
+    cfg.outer.inner_steps = 2;
+    cfg.model.batch_tokens = dp * 2 * cfg.model.seq_len;
+    cfg.perf.threads = threads;
+    cfg
+}
+
+fn run_sim(cfg: TrainConfig, eng: &mut Engine) -> TrainReport {
+    SimTrainer::new(cfg, eng).unwrap().run().unwrap()
+}
+
+/// The whole point of the pool's ordering contract: not "close", equal
+/// to the bit — losses, comm accounting, trace and execution count.
+fn assert_bit_identical(serial: &TrainReport, pooled: &TrainReport, what: &str) {
+    assert_eq!(serial.step_train_loss, pooled.step_train_loss, "{what}: per-step loss bits");
+    assert_eq!(serial.comm, pooled.comm, "{what}: CommStats");
+    assert_eq!(serial.final_val_nll, pooled.final_val_nll, "{what}: final val NLL");
+    assert_eq!(serial.trace.train_loss, pooled.trace.train_loss, "{what}: trace loss");
+    assert_eq!(serial.trace.val_loss, pooled.trace.val_loss, "{what}: trace val");
+    assert_eq!(serial.trace.weight_std, pooled.trace.weight_std, "{what}: trace σ");
+    assert_eq!(serial.executions, pooled.executions, "{what}: PJRT execution count");
+}
+
+#[test]
+fn pooled_gated_noloco_matches_serial_bits() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut eng = Engine::new(find_build(ART, "tiny", 1).unwrap()).unwrap();
+    let serial = run_sim(cfg(Method::NoLoCo, 4, 4, 1), &mut eng);
+    for threads in [3, 0] {
+        let pooled = run_sim(cfg(Method::NoLoCo, 4, 4, threads), &mut eng);
+        assert_bit_identical(&serial, &pooled, &format!("gated noloco, threads={threads}"));
+    }
+    assert!(serial.step_train_loss.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn pooled_fsdp_matches_serial_bits() {
+    // FSDP reads the gradient accumulators for its per-step all-reduce
+    // before Adam drains them; the pooled Adam pass must not perturb
+    // that ordering.
+    if !have_artifacts() {
+        return;
+    }
+    let mut eng = Engine::new(find_build(ART, "tiny", 1).unwrap()).unwrap();
+    let serial = run_sim(cfg(Method::Fsdp, 4, 3, 1), &mut eng);
+    let pooled = run_sim(cfg(Method::Fsdp, 4, 3, 3), &mut eng);
+    assert_bit_identical(&serial, &pooled, "fsdp");
+    assert_eq!(serial.comm.blocking_collectives, 3);
+}
+
+#[test]
+fn pooled_streaming_fragments_match_serial_bits() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut eng = Engine::new(find_build(ART, "tiny", 1).unwrap()).unwrap();
+    let make = |threads| {
+        let mut c = cfg(Method::NoLoCo, 4, 6, threads);
+        c.sync = SyncMode::Streaming;
+        c.stream.fragments = 2;
+        c.stream.overlap = true;
+        c
+    };
+    let serial = run_sim(make(1), &mut eng);
+    let pooled = run_sim(make(3), &mut eng);
+    assert_bit_identical(&serial, &pooled, "streaming fragments");
+}
+
+#[test]
+fn pooled_async_staleness_matches_serial_bits() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut eng = Engine::new(find_build(ART, "tiny", 1).unwrap()).unwrap();
+    let make = |threads| {
+        let mut c = cfg(Method::NoLoCo, 4, 6, threads);
+        c.outer.staleness = 3;
+        c
+    };
+    let serial = run_sim(make(1), &mut eng);
+    let pooled = run_sim(make(3), &mut eng);
+    assert_bit_identical(&serial, &pooled, "staleness 3");
+}
+
+#[test]
+fn pooled_trains_through_churn_matches_serial() {
+    // Replica 2 leaves at step 2 and rejoins at step 4: the pool must
+    // reproduce the serial live-set walk (dead replicas submit no
+    // tasks) and the donor-φ reseed bit-for-bit.
+    if !have_artifacts() {
+        return;
+    }
+    let mut eng = Engine::new(find_build(ART, "tiny", 1).unwrap()).unwrap();
+    let make = |threads| {
+        let mut c = cfg(Method::NoLoCo, 4, 6, threads);
+        c.churn = ChurnSchedule::none().leave(2, 2).join(4, 2);
+        c
+    };
+    let serial = run_sim(make(1), &mut eng);
+    let pooled = run_sim(make(3), &mut eng);
+    assert_bit_identical(&serial, &pooled, "churn");
+}
+
+#[test]
+fn threads_knob_is_inert_on_threaded_executor() {
+    // A threaded-executor rank is already one thread of a pool-of-ranks;
+    // `[perf] threads` must not change its trajectory (or anything else).
+    if !have_artifacts() {
+        return;
+    }
+    let serial = ThreadedTrainer::new(cfg(Method::NoLoCo, 2, 4, 1))
+        .with_val_batches(0)
+        .run()
+        .unwrap();
+    let knobbed = ThreadedTrainer::new(cfg(Method::NoLoCo, 2, 4, 3))
+        .with_val_batches(0)
+        .run()
+        .unwrap();
+    assert_eq!(serial.step_train_loss, knobbed.step_train_loss);
+    assert_eq!(serial.comm, knobbed.comm);
+}

@@ -1,28 +1,34 @@
 #!/usr/bin/env bash
-# Cost-model regression gate against the checked-in BENCH_baseline.json.
+# Cost-model + scale-ladder regression gate against the checked-in
+# BENCH_baseline.json and BENCH_steps.json.
 #
-# Recomputes the deterministic expected-time baselines (see
-# rust/src/obs/bench.rs) and fails when any metric drifts more than 10%
-# from the committed values. With a Rust toolchain the live numbers come
-# from `cargo run -- bench-baseline`; without one, from the Python
-# mirror below, which re-implements the same closed-form arithmetic
-# (log-normal expected latencies, heap-tree / ring walks) — change it
-# together with rust/src/obs/bench.rs.
+# Recomputes the deterministic expected-time baselines and the
+# 64/256/1000-replica scale ladder (see rust/src/obs/bench.rs) and fails
+# when any metric drifts more than 10% from the committed values. With a
+# Rust toolchain the live numbers come from `cargo run -- bench-baseline`
+# and `cargo run -- perf`; without one, from the Python mirrors below,
+# which re-implement the same closed-form arithmetic (log-normal
+# expected latencies, heap-tree / ring walks, the ladder's throughput /
+# bytes / residency forms) — change them together with
+# rust/src/obs/bench.rs.
 #
 # Usage: scripts/bench_check.sh [--update]
-#   --update   rewrite BENCH_baseline.json with the live values
+#   --update   rewrite BENCH_baseline.json + BENCH_steps.json with the
+#              live values
 
 set -u
 cd "$(dirname "$0")/.."
 
 BASELINE="BENCH_baseline.json"
+STEPS="BENCH_steps.json"
 update=0
 if [ "${1:-}" = "--update" ]; then
     update=1
 fi
 
 live="$(mktemp -t noloco_bench_XXXXXX.json)"
-trap 'rm -f "$live"' EXIT
+live_steps="$(mktemp -t noloco_steps_XXXXXX.json)"
+trap 'rm -f "$live" "$live_steps"' EXIT
 
 mirror() {
     python3 - <<'PY'
@@ -150,15 +156,49 @@ print(json.dumps({"v": 1, "metrics": out}, separators=(",", ":")))
 PY
 }
 
+# Mirror of the scale-ladder closed forms in rust/src/obs/bench.rs
+# (steps_ladder): fleet steps/sec, wire bytes per boundary, modeled
+# peak RSS at dp = 64 / 256 / 1000 replicas.
+mirror_steps() {
+    python3 - <<'PY'
+import json
+
+LADDER = (64, 256, 1000)
+PARAMS = 2 * 1024 * 1024      # outer-state floats per replica (8 MiB)
+INNER = 50                    # inner steps per boundary (H)
+COMPUTE_S = 0.02              # modeled fwd+bwd+Adam seconds per inner step
+LINK_LATENCY_S = 1e-3         # gossip link latency (LAN intra-switch)
+LINK_BANDWIDTH = 1.25e9       # gossip link bandwidth (bytes/s)
+
+pair_s = LINK_LATENCY_S + (8 * PARAMS) / LINK_BANDWIDTH
+
+out = {}
+for dp in LADDER:
+    out[f"steps.dp{dp}.steps_per_sec"] = dp / (COMPUTE_S + pair_s / INNER)
+    out[f"steps.dp{dp}.bytes_per_boundary"] = float(dp * 2 * 4 * PARAMS)
+    out[f"steps.dp{dp}.peak_rss_mib"] = ((6 * dp + 2) * 4 * PARAMS) / (1024.0 * 1024.0)
+
+print(json.dumps({"v": 1, "metrics": out}, separators=(",", ":")))
+PY
+}
+
 if command -v cargo >/dev/null 2>&1; then
     if ! (cd rust && cargo run --release --quiet -- bench-baseline --out "$live" >/dev/null); then
         echo "bench check FAILED (bench-baseline did not run)"
         exit 1
     fi
-    src="cargo run -- bench-baseline"
+    if ! (cd rust && cargo run --release --quiet -- perf --out "$live_steps" >/dev/null); then
+        echo "bench check FAILED (perf ladder did not run)"
+        exit 1
+    fi
+    src="cargo run -- bench-baseline / perf"
 else
     if ! mirror >"$live"; then
         echo "bench check FAILED (python mirror did not run)"
+        exit 1
+    fi
+    if ! mirror_steps >"$live_steps"; then
+        echo "bench check FAILED (python steps mirror did not run)"
         exit 1
     fi
     src="python mirror of rust/src/obs/bench.rs"
@@ -166,16 +206,20 @@ fi
 
 if [ "$update" -eq 1 ]; then
     cp "$live" "$BASELINE"
-    echo "bench baseline updated ($BASELINE from $src)"
+    cp "$live_steps" "$STEPS"
+    echo "bench baselines updated ($BASELINE + $STEPS from $src)"
     exit 0
 fi
 
-if [ ! -f "$BASELINE" ]; then
-    echo "bench check FAILED ($BASELINE missing; run scripts/bench_check.sh --update)"
-    exit 1
-fi
+for f in "$BASELINE" "$STEPS"; do
+    if [ ! -f "$f" ]; then
+        echo "bench check FAILED ($f missing; run scripts/bench_check.sh --update)"
+        exit 1
+    fi
+done
 
-python3 - "$BASELINE" "$live" <<'PY'
+compare() {
+    python3 - "$1" "$2" <<'PY'
 import json
 import sys
 
@@ -201,8 +245,14 @@ for k in sorted(set(bm) | set(lm)):
         fail = 1
 sys.exit(fail)
 PY
-if [ $? -ne 0 ]; then
+}
+
+if ! compare "$BASELINE" "$live"; then
     echo "bench check FAILED ($src vs $BASELINE)"
     exit 1
 fi
-echo "bench check OK ($src vs $BASELINE, tolerance 10%)"
+if ! compare "$STEPS" "$live_steps"; then
+    echo "bench check FAILED ($src vs $STEPS)"
+    exit 1
+fi
+echo "bench check OK ($src vs $BASELINE + $STEPS, tolerance 10%)"
